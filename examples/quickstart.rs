@@ -1,0 +1,64 @@
+//! Quickstart: train a small ReLU MLP on the synthetic digit corpus, attach
+//! a low-rank activation-sign estimator, and compare the dense and
+//! conditional forward paths — accuracy, agreement, and FLOPs saved.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use condcomp::condcomp::CondMlp;
+use condcomp::config::{EstimatorConfig, ExperimentProfile};
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::trainer::evaluate_error;
+use condcomp::nn::{Mlp, Trainer};
+use condcomp::util::Pcg32;
+
+fn main() {
+    // 1. A profile: architecture + paper hyperparameters, at tiny scale.
+    let mut profile = ExperimentProfile::mnist_tiny();
+    profile.train.epochs = 5;
+    println!("profile: {} {:?}", profile.name, profile.net.layers);
+
+    // 2. Synthetic MNIST-like data (set MNIST_DIR to use real IDX files).
+    let mut data = build_dataset(&profile, 42);
+    println!(
+        "data: {} train / {} valid / {} test",
+        data.train.len(),
+        data.valid.len(),
+        data.test.len()
+    );
+
+    // 3. Train the control network.
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    let mut trainer = Trainer::new(profile.train.clone());
+    trainer.options.quiet = false;
+    trainer.train(&mut net, &mut data, &mut NoGater);
+    let control_err = evaluate_error(&net, &NoGater, &data.test);
+    println!("control test error: {:.2}%", control_err * 100.0);
+
+    // 4. Fit the paper's estimator (rank-k truncated SVD per hidden layer)
+    //    and compile the conditional engine.
+    let ranks = vec![8, 6, 4];
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
+    let cond = CondMlp::compile(&net, &est);
+
+    // 5. Compare paths on the test set.
+    let x = data.test.x.rows_slice(0, 64.min(data.test.len()));
+    let (logits, flops) = cond.forward(&x);
+    let dense_pred = net.predict(&x, &NoGater);
+    let cond_pred = condcomp::nn::activations::argmax_rows(&logits);
+    let agree = dense_pred.iter().zip(&cond_pred).filter(|(a, b)| a == b).count();
+    println!(
+        "conditional vs dense: {}/{} class agreement at ranks {ranks:?}",
+        agree,
+        x.rows()
+    );
+    println!(
+        "FLOPs: dense {} vs conditional {:.0} → speedup {:.2}× (α = {:.3})",
+        flops.total_dense(),
+        flops.total_augmented(),
+        flops.speedup(),
+        flops.layers[0].density(),
+    );
+}

@@ -1,0 +1,89 @@
+//! Serving demo + load generator: starts the coordinator on an ephemeral
+//! port with a freshly trained model, then drives it with concurrent clients
+//! issuing single-example predict requests in both modes, and prints
+//! latency/throughput and the server's own metrics snapshot.
+//!
+//! Run: `cargo run --release --example serve_loadgen`
+
+use condcomp::config::{EstimatorConfig, ExperimentProfile};
+use condcomp::coordinator::protocol::Mode;
+use condcomp::coordinator::server::Client;
+use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::{Mlp, Trainer};
+use condcomp::util::stats::Summary;
+use condcomp::util::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 50;
+
+fn main() {
+    // Train a quick model.
+    let mut profile = ExperimentProfile::mnist_tiny();
+    profile.train.epochs = 3;
+    let mut data = build_dataset(&profile, 42);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    Trainer::new(profile.train.clone()).train(&mut net, &mut data, &mut NoGater);
+
+    let ranks = vec![8, 6, 4];
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
+    let backend = Arc::new(NativeBackend::new(net, est, 64));
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: std::time::Duration::from_millis(2),
+            workers: 1,
+        },
+    )
+    .expect("server start");
+    let addr = server.local_addr;
+    println!("server on {addr}; {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests per mode");
+
+    for mode in [Mode::Control, Mode::ConditionalAe] {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut rng = Pcg32::new(c as u64, 9);
+                    let mut lat_us = Vec::new();
+                    for _ in 0..REQUESTS_PER_CLIENT {
+                        let x = condcomp::linalg::Mat::randn(1, 784, 0.5, &mut rng);
+                        let t = Instant::now();
+                        let resp = client.predict(x, mode).expect("predict");
+                        assert!(resp.ok, "{:?}", resp.error);
+                        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                    }
+                    lat_us
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&all);
+        println!(
+            "mode {:<8}  {:>6.0} req/s   p50 {:>7.0}us  p95 {:>7.0}us  max {:>7.0}us",
+            mode.as_str(),
+            (CLIENTS * REQUESTS_PER_CLIENT) as f64 / wall,
+            s.median,
+            s.p95,
+            s.max
+        );
+    }
+
+    // Server-side metrics.
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    println!("\nserver metrics: {}", stats.payload.unwrap().to_string());
+    let _ = client.shutdown();
+    server.shutdown();
+}

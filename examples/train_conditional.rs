@@ -1,0 +1,92 @@
+//! End-to-end training driver (EXPERIMENTS.md §End-to-end): trains the
+//! mnist-small network for the full schedule twice — once as the control,
+//! once with the activation estimator *in the training loop* (the paper's
+//! §3.5 setup with once-per-epoch SVD refresh) — logging the loss curve and
+//! validation error per epoch, then reports final test errors and the FLOP
+//! accounting of the deployed conditional engine.
+//!
+//! Run: `cargo run --release --example train_conditional [-- --epochs N]`
+
+use condcomp::condcomp::CondMlp;
+use condcomp::config::{EstimatorConfig, ExperimentProfile};
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::trainer::evaluate_error;
+use condcomp::nn::{Mlp, Trainer};
+use condcomp::util::Pcg32;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let epochs = args
+        .iter()
+        .position(|a| a == "--epochs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+
+    let mut profile = ExperimentProfile::mnist_small();
+    profile.train.epochs = epochs;
+    let paper = ExperimentProfile::mnist_paper();
+    let ranks = profile.scale_ranks(&[50, 35, 25], &paper);
+    println!(
+        "== end-to-end driver: {} {:?}, {} epochs, estimator ranks {ranks:?} ==",
+        profile.name, profile.net.layers, epochs
+    );
+
+    // --- control run -----------------------------------------------------
+    println!("\n-- control (dense) --");
+    let mut data = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut control = Mlp::init(&profile.net, &mut rng);
+    let mut trainer = Trainer::new(profile.train.clone());
+    trainer.options.quiet = false;
+    let control_hist = trainer.train(&mut control, &mut data, &mut NoGater);
+    let control_test = evaluate_error(&control, &NoGater, &data.test);
+
+    // --- estimator-in-the-loop run ----------------------------------------
+    println!("\n-- conditional (estimator in the training loop) --");
+    let mut data2 = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    let mut rng2 = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng2);
+    let est_cfg = EstimatorConfig::fixed(&ranks);
+    let mut gater = SignEstimatorSet::fit(&net, &est_cfg, 7);
+    let ae_hist = trainer.train(&mut net, &mut data2, &mut gater);
+    gater.refresh(&net);
+    let ae_test = evaluate_error(&net, &gater, &data2.test);
+
+    // --- loss curves -------------------------------------------------------
+    println!("\nepoch   control-loss  control-valid   ae-loss  ae-valid");
+    for e in 0..epochs {
+        let c = &control_hist[e];
+        let a = &ae_hist[e];
+        println!(
+            "{:>5}   {:>12.4}  {:>12.2}%  {:>8.4}  {:>7.2}%",
+            e,
+            c.train_loss,
+            c.valid_error * 100.0,
+            a.train_loss,
+            a.valid_error * 100.0
+        );
+    }
+
+    // --- deployment accounting ---------------------------------------------
+    let cond = CondMlp::compile(&net, &gater);
+    let x = data2.test.x.rows_slice(0, 128.min(data2.test.len()));
+    let (_, flops) = cond.forward(&x);
+    println!("\n== summary ==");
+    println!("control test error:      {:.2}%", control_test * 100.0);
+    println!("conditional test error:  {:.2}%  (ranks {ranks:?})", ae_test * 100.0);
+    println!(
+        "deployed FLOP speedup:   {:.2}×  (refresh count {}, SVD refreshes per epoch: 1)",
+        flops.speedup(),
+        gater.refresh_count
+    );
+    println!(
+        "hidden-layer densities:  {:?}",
+        flops.layers[..flops.layers.len() - 1]
+            .iter()
+            .map(|l| (l.density() * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+}

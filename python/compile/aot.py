@@ -1,0 +1,181 @@
+"""AOT export: lower the L2 computations to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--profile mnist-small]
+Python runs ONCE, at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Profiles mirrored from rust/src/config/schema.rs (kept small: these fix the
+# *artifact* shapes; the Rust coordinator pads requests to the batch size).
+PROFILES = {
+    "mnist-small": dict(layers=[784, 256, 128, 64, 10], ranks=[13, 7, 4], batch=64),
+    "mnist-tiny": dict(layers=[784, 64, 48, 32, 10], ranks=[8, 6, 4], batch=16),
+    "svhn-small": dict(layers=[1024, 300, 180, 100, 60, 10], ranks=[15, 9, 6, 5], batch=64),
+    "mnist-paper": dict(layers=[784, 1000, 600, 400, 10], ranks=[50, 35, 25], batch=100),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _arg_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def export_profile(profile_name, out_dir, train_cfg=None):
+    cfg = PROFILES[profile_name]
+    layers, ranks, batch = cfg["layers"], cfg["ranks"], cfg["batch"]
+    n_weight = len(layers) - 1
+    tag = profile_name.replace("-", "_")
+    manifest_entries = []
+
+    param_specs, param_args = [], []
+    for l in range(n_weight):
+        param_specs += [_spec(layers[l], layers[l + 1]), _spec(layers[l + 1])]
+        param_args += [
+            _arg_entry(f"w{l}", (layers[l], layers[l + 1])),
+            _arg_entry(f"b{l}", (layers[l + 1],)),
+        ]
+
+    x_spec = _spec(batch, layers[0])
+
+    # ---- forward_control ------------------------------------------------
+    def fwd_control(params, x):
+        return (model.forward_control(list(params), x, use_pallas=True),)
+
+    lowered = jax.jit(fwd_control).lower(tuple(param_specs), x_spec)
+    path = f"{tag}_fwd.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest_entries.append(
+        {
+            "name": f"{tag}_fwd",
+            "file": path,
+            "inputs": param_args + [_arg_entry("x", (batch, layers[0]))],
+            "outputs": [_arg_entry("logits", (batch, layers[-1]))],
+            "batch": batch,
+            "layers": layers,
+        }
+    )
+
+    # ---- forward_ae ------------------------------------------------------
+    factor_specs, factor_args = [], []
+    for l in range(n_weight - 1):
+        k = ranks[l]
+        factor_specs += [_spec(layers[l], k), _spec(k, layers[l + 1])]
+        factor_args += [
+            _arg_entry(f"u{l}", (layers[l], k)),
+            _arg_entry(f"v{l}", (k, layers[l + 1])),
+        ]
+
+    def fwd_ae(params, factors, x):
+        return (model.forward_ae(list(params), list(factors), x, use_pallas=True),)
+
+    lowered = jax.jit(fwd_ae).lower(tuple(param_specs), tuple(factor_specs), x_spec)
+    path = f"{tag}_fwd_ae.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest_entries.append(
+        {
+            "name": f"{tag}_fwd_ae",
+            "file": path,
+            "inputs": param_args + factor_args + [_arg_entry("x", (batch, layers[0]))],
+            "outputs": [_arg_entry("logits", (batch, layers[-1]))],
+            "batch": batch,
+            "layers": layers,
+            "ranks": ranks,
+        }
+    )
+
+    # ---- train_step ------------------------------------------------------
+    tc = train_cfg or dict(dropout_p=0.5, l1_activation=1e-5, l2_weight=5e-5, max_norm=25.0)
+
+    def step(params, velocity, x, y, key, lr, momentum):
+        new_p, new_v, loss = model.train_step(
+            list(params), list(velocity), x, y, key, lr, momentum,
+            dropout_p=tc["dropout_p"], l1_activation=tc["l1_activation"],
+            l2_weight=tc["l2_weight"], max_norm=tc["max_norm"],
+        )
+        return tuple(new_p) + tuple(new_v) + (loss,)
+
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(step).lower(
+        tuple(param_specs), tuple(param_specs), x_spec, y_spec, key_spec, scalar, scalar
+    )
+    path = f"{tag}_train_step.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    velo_args = [dict(a, name="v_" + a["name"]) for a in param_args]
+    manifest_entries.append(
+        {
+            "name": f"{tag}_train_step",
+            "file": path,
+            "inputs": param_args
+            + velo_args
+            + [
+                _arg_entry("x", (batch, layers[0])),
+                _arg_entry("y", (batch,), "i32"),
+                _arg_entry("key", (2,), "u32"),
+                _arg_entry("lr", (), "f32"),
+                _arg_entry("momentum", (), "f32"),
+            ],
+            "outputs": param_args + velo_args + [_arg_entry("loss", ())],
+            "batch": batch,
+            "layers": layers,
+            "train_cfg": tc,
+        }
+    )
+    return manifest_entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--profile",
+        action="append",
+        default=None,
+        help="profile(s) to export; default: mnist-small + mnist-tiny",
+    )
+    args = ap.parse_args()
+    profiles = args.profile or ["mnist-small", "mnist-tiny"]
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"profiles": {}, "format": "hlo-text", "version": 1}
+    for p in profiles:
+        entries = export_profile(p, args.out_dir)
+        manifest["profiles"][p] = entries
+        for e in entries:
+            print(f"wrote {e['file']}")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['profiles'])} profiles)")
+
+
+if __name__ == "__main__":
+    main()

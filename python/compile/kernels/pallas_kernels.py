@@ -1,0 +1,190 @@
+"""Layer-1 Pallas kernels for the conditional-computation hot path.
+
+Three kernels:
+
+- ``dense_relu``          — fused tiled matmul + bias + ReLU (control path).
+- ``lowrank_sign``        — the activation-sign estimator sgn(x.U.V + b - t):
+                            U and V are small enough to be VMEM-resident, so
+                            the whole estimator runs out of scratchpad.
+- ``masked_dense_relu``   — the conditional layer: a tile is *computed* only
+                            when the estimator marked any unit in it live
+                            (tile-granular conditionality — the TPU adaptation
+                            of the paper's per-dot-product skipping, see
+                            DESIGN.md §Hardware-Adaptation); within a live
+                            tile the element mask zeroes skipped units.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is *estimated* from the
+BlockSpec VMEM footprint + MXU utilization in DESIGN.md §Perf.
+
+Tiling: inputs are zero-padded up to (BM, BN) multiples inside the wrappers,
+so arbitrary layer shapes work; padding is sliced off on the way out.
+ReLU(0)=0 and sign masks on padded columns are discarded by the slice.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. On a real TPU these would be 128x128 (MXU-aligned); we keep the
+# same structure but smaller tiles so interpret-mode tests stay fast.
+BM = 32
+BN = 32
+
+_INTERPRET = True
+
+
+def _pad_to(x, m, axis):
+    """Zero-pad `axis` of x up to a multiple of m."""
+    n = x.shape[axis]
+    pad = (-n) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --------------------------------------------------------------------------
+# dense_relu
+# --------------------------------------------------------------------------
+
+def _dense_relu_kernel(x_ref, w_ref, b_ref, o_ref):
+    # One (BM, BN) output tile: full-K matmul + bias + ReLU.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(acc + b_ref[...], 0.0)
+
+
+def dense_relu(x, w, b):
+    """Fused sigma(x @ w + b); tiled over (M, N), K kept whole per tile.
+
+    VMEM per grid step: BM*K + K*BN + BM*BN floats. For the paper's largest
+    layer (K = 1500) that is 32*1500 + 1500*32 + 32*32 ~ 0.4 MB — comfortably
+    inside a 16 MB VMEM budget, so no K-loop is needed.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    xp = _pad_to(x, BM, 0)
+    wp = _pad_to(w, BN, 1)
+    bp = _pad_to(b.reshape(1, -1), BN, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _dense_relu_kernel,
+        grid=(mp // BM, np_ // BN),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# lowrank_sign
+# --------------------------------------------------------------------------
+
+def _lowrank_sign_kernel(t_ref, v_ref, b_ref, bias_ref, o_ref):
+    # t = x @ U was computed by the first stage; this tile finishes t @ V.
+    z = jnp.dot(t_ref[...], v_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...] - bias_ref[0]
+    o_ref[...] = (z > 0.0).astype(o_ref.dtype)
+
+
+def lowrank_sign(x, u, v, b, decision_bias=0.0):
+    """The estimator mask S = [x@U@V + b - t > 0] (paper Eq. 5).
+
+    Stage 1 (x @ U) reuses the dense pipeline without ReLU via jnp.dot — it
+    is a skinny matmul (k <= ~200) whose result is tiny; stage 2 runs as a
+    Pallas kernel with V held entirely in VMEM (k x BN per tile).
+    """
+    m, d = x.shape
+    k = u.shape[1]
+    n = v.shape[1]
+    assert u.shape == (d, k) and b.shape == (n,)
+    t = x @ u  # (m, k): skinny; XLA fuses this into the surrounding HLO.
+    tp = _pad_to(t, BM, 0)
+    vp = _pad_to(v, BN, 1)
+    bp = _pad_to(b.reshape(1, -1), BN, 1)
+    bias_arr = jnp.full((1,), decision_bias, dtype=x.dtype)
+    mp, np_ = tp.shape[0], vp.shape[1]
+    out = pl.pallas_call(
+        _lowrank_sign_kernel,
+        grid=(mp // BM, np_ // BN),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=_INTERPRET,
+    )(tp, vp, bp, bias_arr)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# masked_dense_relu (tile-granular conditional layer)
+# --------------------------------------------------------------------------
+
+def _masked_dense_relu_kernel(x_ref, w_ref, b_ref, m_ref, occ_ref, o_ref):
+    @pl.when(occ_ref[0, 0] > 0)
+    def _compute():
+        acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        o_ref[...] = jnp.maximum(acc + b_ref[...], 0.0) * m_ref[...]
+
+    @pl.when(occ_ref[0, 0] == 0)
+    def _skip():
+        # Dead tile: write zeros without reading the W tile from HBM.
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def masked_dense_relu(x, w, b, mask):
+    """sigma(x @ w + b) * S with whole (BM, BN) tiles skipped when S is all
+    zero there — the estimator's prediction turned into saved HBM traffic and
+    MXU issue slots (DESIGN.md §Hardware-Adaptation).
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    assert mask.shape == (m, n)
+    xp = _pad_to(x, BM, 0)
+    wp = _pad_to(w, BN, 1)
+    bp = _pad_to(b.reshape(1, -1), BN, 1)
+    maskp = _pad_to(_pad_to(mask, BM, 0), BN, 1)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    # Per-tile occupancy: 1 where any unit in the (BM, BN) tile is live.
+    occ = (
+        maskp.reshape(mp // BM, BM, np_ // BN, BN)
+        .transpose(0, 2, 1, 3)
+        .max(axis=(2, 3))
+        .astype(jnp.int32)
+    )
+    out = pl.pallas_call(
+        _masked_dense_relu_kernel,
+        grid=(mp // BM, np_ // BN),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, wp, bp, maskp, occ)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("decision_bias",))
+def cond_layer(x, w, b, u, v, decision_bias=0.0):
+    """Fused estimator + conditional layer (the per-layer hot path)."""
+    mask = lowrank_sign(x, u, v, b, decision_bias)
+    return masked_dense_relu(x, w, b, mask)

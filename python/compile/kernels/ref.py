@@ -1,0 +1,36 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every kernel in this package has its semantics pinned here; pytest sweeps
+shapes (via hypothesis) and asserts `assert_allclose(kernel(...), ref(...))`.
+The reference is also what `model.forward_*` would compute if the kernels
+were replaced by stock jnp ops, so kernel == ref implies model-level parity.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_relu(x, w, b):
+    """sigma(x @ w + b) with sigma = ReLU (paper Eq. 1 + Eq. 3)."""
+    return jnp.maximum(x @ w + b, 0.0)
+
+
+def lowrank_sign_mask(x, u, v, b, decision_bias=0.0):
+    """The paper's S matrix (Eq. 5) from the low-rank factors.
+
+    S[i, j] = 1 where (x @ U @ V + b)[i, j] - decision_bias > 0 else 0.
+    The cheap association order (x @ U) @ V is semantically irrelevant here
+    but is what the kernel implements.
+    """
+    z = (x @ u) @ v + b
+    return (z - decision_bias > 0.0).astype(x.dtype)
+
+
+def masked_dense_relu(x, w, b, mask):
+    """sigma(x @ w + b) * S — the conditional layer (paper §3.1)."""
+    return dense_relu(x, w, b) * mask
+
+
+def cond_layer(x, w, b, u, v, decision_bias=0.0):
+    """Estimator + conditional layer fused: the per-layer hot path."""
+    mask = lowrank_sign_mask(x, u, v, b, decision_bias)
+    return masked_dense_relu(x, w, b, mask)

@@ -1,0 +1,117 @@
+"""Layer-2: the paper's MLP in JAX, built on the Layer-1 Pallas kernels.
+
+Three exported computations (all AOT-lowered to HLO text by `aot.py`):
+
+- ``forward_control``  — the dense network sigma(a.W + b) per layer.
+- ``forward_ae``       — the estimator-augmented network: per hidden layer,
+  the Pallas ``lowrank_sign`` estimator produces S and the Pallas
+  ``masked_dense_relu`` computes only predicted-live units (paper Eq. 5).
+- ``train_step``       — one SGD+momentum minibatch step with dropout,
+  l1 activation penalty (Eq. 7), l2 weight penalty, and max-norm projection
+  (Table 1 / §3.5), matching the Rust reference trainer semantically.
+
+Parameters travel as a flat list [w0, b0, w1, b1, ...] so the Rust runtime
+can marshal them positionally (see artifacts/manifest.json).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as K
+from .kernels import ref
+
+
+def init_params(layers, weight_sigma, bias_init, key):
+    """w ~ N(0, sigma^2), b = bias_init (paper §3.5)."""
+    params = []
+    for i in range(len(layers) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (layers[i], layers[i + 1]), jnp.float32) * weight_sigma
+        b = jnp.full((layers[i + 1],), bias_init, jnp.float32)
+        params += [w, b]
+    return params
+
+
+def forward_control(params, x, use_pallas=True):
+    """Dense forward; returns logits."""
+    layer = K.dense_relu if use_pallas else ref.dense_relu
+    n_layers = len(params) // 2
+    a = x
+    for l in range(n_layers - 1):
+        a = layer(a, params[2 * l], params[2 * l + 1])
+    return a @ params[-2] + params[-1]
+
+
+def forward_ae(params, factors, x, use_pallas=True, decision_bias=0.0):
+    """Estimator-augmented forward (factors = flat [u0, v0, u1, v1, ...]).
+
+    The output layer is never estimated (§4.1).
+    """
+    n_layers = len(params) // 2
+    assert len(factors) == 2 * (n_layers - 1)
+    a = x
+    for l in range(n_layers - 1):
+        w, b = params[2 * l], params[2 * l + 1]
+        u, v = factors[2 * l], factors[2 * l + 1]
+        if use_pallas:
+            mask = K.lowrank_sign(a, u, v, b, decision_bias)
+            a = K.masked_dense_relu(a, w, b, mask)
+        else:
+            a = ref.cond_layer(a, w, b, u, v, decision_bias)
+    return a @ params[-2] + params[-1]
+
+
+def _split_params(params):
+    return params[0::2], params[1::2]
+
+
+def loss_fn(params, x, y, key, dropout_p, l1_activation):
+    """Mean NLL + l1 activation penalty, with inverted dropout on hidden
+    activations. `y` is int32 labels. Returns (loss, logits)."""
+    ws, bs = _split_params(params)
+    n_layers = len(ws)
+    a = x
+    penalty = 0.0
+    for l in range(n_layers - 1):
+        a = ref.dense_relu(a, ws[l], bs[l])
+        penalty = penalty + l1_activation * jnp.abs(a).sum()
+        if dropout_p > 0.0:
+            key, sub = jax.random.split(key)
+            keep = jax.random.bernoulli(sub, 1.0 - dropout_p, a.shape)
+            a = jnp.where(keep, a / (1.0 - dropout_p), 0.0)
+    logits = a @ ws[-1] + bs[-1]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll + penalty, logits
+
+
+def train_step(params, velocity, x, y, key, lr, momentum,
+               dropout_p=0.5, l1_activation=0.0, l2_weight=0.0, max_norm=25.0):
+    """One minibatch of SGD with momentum + the paper's regularizers.
+
+    v <- mu v - lr (grad + l2 w); w <- w + v; then max-norm column clamp.
+    Returns (new_params, new_velocity, loss).
+    """
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y, key, dropout_p, l1_activation
+    )
+    new_params, new_velocity = [], []
+    for i, (p, v, g) in enumerate(zip(params, velocity, grads)):
+        is_weight = i % 2 == 0
+        reg = l2_weight * p if is_weight else 0.0
+        nv = momentum * v - lr * (g + reg)
+        np_ = p + nv
+        if is_weight and max_norm > 0.0:
+            norms = jnp.linalg.norm(np_, axis=0, keepdims=True)
+            np_ = np_ * jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
+        new_params.append(np_)
+        new_velocity.append(nv)
+    return new_params, new_velocity, loss
+
+
+def truncated_svd_factors(w, rank):
+    """The paper's U = U_r, V = Sigma_r V_r^T factors (§3.2) — build-time
+    helper for exporting estimator-augmented artifacts with concrete ranks."""
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    r = int(rank)
+    return u[:, :r], s[:r, None] * vt[:r, :]

@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs. the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (tile-aligned and ragged) and dtypes' value ranges;
+assert_allclose against the reference pins kernel semantics exactly.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import pallas_kernels as K
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=70)
+RANKS = st.integers(min_value=1, max_value=12)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, d=DIMS, h=DIMS, seed=SEEDS)
+def test_dense_relu_matches_ref(m, d, h, seed):
+    kx, kw, kb = _keys(seed, 3)
+    x, w, b = _rand(kx, m, d), _rand(kw, d, h), _rand(kb, h)
+    np.testing.assert_allclose(
+        np.asarray(K.dense_relu(x, w, b)),
+        np.asarray(ref.dense_relu(x, w, b)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, d=DIMS, h=DIMS, k=RANKS, seed=SEEDS)
+def test_lowrank_sign_matches_ref(m, d, h, k, seed):
+    kx, ku, kv, kb = _keys(seed, 4)
+    x, u, v, b = _rand(kx, m, d), _rand(ku, d, k), _rand(kv, k, h), _rand(kb, h)
+    got = np.asarray(K.lowrank_sign(x, u, v, b))
+    want = np.asarray(ref.lowrank_sign_mask(x, u, v, b))
+    # Masks are exactly 0/1; equality is required except at |z| ~ 0 ties.
+    z = np.asarray((x @ u) @ v + b)
+    stable = np.abs(z) > 1e-5
+    np.testing.assert_array_equal(got[stable], want[stable])
+    assert set(np.unique(got)).issubset({0.0, 1.0})
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, d=DIMS, h=DIMS, seed=SEEDS, p=st.floats(0.0, 1.0))
+def test_masked_dense_relu_matches_ref(m, d, h, seed, p):
+    kx, kw, kb, km = _keys(seed, 4)
+    x, w, b = _rand(kx, m, d), _rand(kw, d, h), _rand(kb, h)
+    mask = (jax.random.uniform(km, (m, h)) < p).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.masked_dense_relu(x, w, b, mask)),
+        np.asarray(ref.masked_dense_relu(x, w, b, mask)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, d=DIMS, h=DIMS, k=RANKS, seed=SEEDS)
+def test_cond_layer_fused_matches_ref(m, d, h, k, seed):
+    kx, kw, kb, ku, kv = _keys(seed, 5)
+    x, w, b = _rand(kx, m, d), _rand(kw, d, h), _rand(kb, h)
+    u, v = _rand(ku, d, k), _rand(kv, k, h)
+    got = np.asarray(K.cond_layer(x, w, b, u, v))
+    want = np.asarray(ref.cond_layer(x, w, b, u, v))
+    # Boundary sign flips (|z| ~ 0) may differ; compare where stable.
+    z = np.asarray((x @ u) @ v + b)
+    stable = np.abs(z) > 1e-5
+    np.testing.assert_allclose(got[stable], want[stable], rtol=1e-5, atol=1e-5)
+
+
+def test_dense_relu_tile_boundary_shapes():
+    # Exactly one tile, tile-multiple, and off-by-one shapes.
+    for (m, d, h) in [(32, 32, 32), (64, 32, 64), (33, 17, 65), (1, 1, 1)]:
+        kx, kw, kb = _keys(m * 1000 + d * 10 + h, 3)
+        x, w, b = _rand(kx, m, d), _rand(kw, d, h), _rand(kb, h)
+        np.testing.assert_allclose(
+            np.asarray(K.dense_relu(x, w, b)),
+            np.asarray(ref.dense_relu(x, w, b)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_masked_kernel_zero_mask_returns_zeros():
+    kx, kw, kb = _keys(7, 3)
+    x, w, b = _rand(kx, 40, 20), _rand(kw, 20, 50), _rand(kb, 50)
+    out = K.masked_dense_relu(x, w, b, jnp.zeros((40, 50), jnp.float32))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_full_rank_estimator_is_output_preserving():
+    # With k = min(d, h) and exact SVD factors, the conditional layer must
+    # reproduce the dense layer exactly (true zeros stay zero under ReLU).
+    from compile.model import truncated_svd_factors
+
+    kx, kw, kb = _keys(13, 3)
+    x, w, b = _rand(kx, 24, 16), _rand(kw, 16, 20), _rand(kb, 20)
+    u, v = truncated_svd_factors(w, 16)
+    got = np.asarray(K.cond_layer(x, w, b, u, v))
+    want = np.asarray(ref.dense_relu(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decision_bias_monotone_sparsity():
+    kx, kw, kb, ku, kv = _keys(3, 5)
+    x, w, b = _rand(kx, 30, 12), _rand(kw, 12, 18), _rand(kb, 18)
+    u, v = _rand(ku, 12, 4), _rand(kv, 4, 18)
+    d0 = float(np.asarray(K.lowrank_sign(x, u, v, b, 0.0)).mean())
+    d1 = float(np.asarray(K.lowrank_sign(x, u, v, b, 0.8)).mean())
+    assert d1 <= d0

@@ -1,0 +1,112 @@
+"""L2 correctness: model forward shapes/parity and train_step behaviour."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+LAYERS = [20, 16, 12, 5]
+
+
+def _init(seed=0):
+    return model.init_params(LAYERS, 0.3, 0.1, jax.random.PRNGKey(seed))
+
+
+def _factors(params, ranks):
+    factors = []
+    n_layers = len(params) // 2
+    for l in range(n_layers - 1):
+        u, v = model.truncated_svd_factors(params[2 * l], ranks[l])
+        factors += [u, v]
+    return factors
+
+
+def test_init_shapes_and_stats():
+    params = _init()
+    assert len(params) == 2 * (len(LAYERS) - 1)
+    for l in range(len(LAYERS) - 1):
+        assert params[2 * l].shape == (LAYERS[l], LAYERS[l + 1])
+        assert params[2 * l + 1].shape == (LAYERS[l + 1],)
+        np.testing.assert_allclose(np.asarray(params[2 * l + 1]), 0.1)
+    w0 = np.asarray(params[0])
+    assert abs(w0.std() - 0.3) < 0.05
+
+
+def test_forward_control_pallas_matches_jnp():
+    params = _init(1)
+    x = jax.random.normal(jax.random.PRNGKey(9), (7, LAYERS[0]), jnp.float32)
+    a = model.forward_control(params, x, use_pallas=True)
+    b = model.forward_control(params, x, use_pallas=False)
+    assert a.shape == (7, LAYERS[-1])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_forward_ae_pallas_matches_jnp():
+    params = _init(2)
+    factors = _factors(params, [6, 5])
+    x = jax.random.normal(jax.random.PRNGKey(3), (9, LAYERS[0]), jnp.float32)
+    a = model.forward_ae(params, factors, x, use_pallas=True)
+    b = model.forward_ae(params, factors, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_forward_ae_full_rank_matches_control():
+    params = _init(4)
+    full_ranks = [min(LAYERS[l], LAYERS[l + 1]) for l in range(len(LAYERS) - 2)]
+    factors = _factors(params, full_ranks)
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, LAYERS[0]), jnp.float32)
+    a = model.forward_ae(params, factors, x, use_pallas=False)
+    b = model.forward_control(params, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_decreases_loss():
+    params = _init(6)
+    velocity = [jnp.zeros_like(p) for p in params]
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(7), (32, LAYERS[0]), jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(8), (32,), 0, LAYERS[-1])
+    losses = []
+    step = jax.jit(lambda p, v, k: model.train_step(
+        p, v, x, y, k, 0.05, 0.5, dropout_p=0.0, l1_activation=0.0,
+        l2_weight=0.0, max_norm=25.0))
+    for i in range(30):
+        key, sub = jax.random.split(key)
+        params, velocity, loss = step(params, velocity, sub)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, f"loss did not decrease: {losses[0]} -> {losses[-1]}"
+
+
+def test_train_step_max_norm_is_enforced():
+    params = _init(10)
+    velocity = [jnp.zeros_like(p) for p in params]
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, LAYERS[0]), jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, LAYERS[-1])
+    max_norm = 0.5
+    new_p, _, _ = model.train_step(
+        params, velocity, x, y, jax.random.PRNGKey(3), 0.5, 0.0,
+        dropout_p=0.0, l1_activation=0.0, l2_weight=0.0, max_norm=max_norm)
+    for l in range(len(LAYERS) - 1):
+        norms = np.linalg.norm(np.asarray(new_p[2 * l]), axis=0)
+        assert np.all(norms <= max_norm + 1e-4)
+
+
+def test_l1_penalty_increases_loss():
+    params = _init(11)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, LAYERS[0]), jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(5), (16,), 0, LAYERS[-1])
+    l0, _ = model.loss_fn(params, x, y, jax.random.PRNGKey(0), 0.0, 0.0)
+    l1, _ = model.loss_fn(params, x, y, jax.random.PRNGKey(0), 0.0, 1e-2)
+    assert float(l1) > float(l0)
+
+
+def test_svd_factors_reconstruct():
+    params = _init(12)
+    w = params[0]
+    u, v = model.truncated_svd_factors(w, min(w.shape))
+    np.testing.assert_allclose(np.asarray(u @ v), np.asarray(w), rtol=1e-4, atol=1e-4)
+    u2, v2 = model.truncated_svd_factors(w, 3)
+    assert u2.shape == (w.shape[0], 3) and v2.shape == (3, w.shape[1])

@@ -1,0 +1,88 @@
+//! L3 coordinator benches: dynamic-batcher throughput, end-to-end server
+//! round-trip latency over TCP, and estimator-refresh cost under serving.
+//!
+//! `cargo bench --bench bench_coordinator`
+
+use condcomp::bench::{bench, bench_with_units, header, BenchConfig};
+use condcomp::config::{EstimatorConfig, ExperimentProfile, NetConfig};
+use condcomp::coordinator::protocol::Mode;
+use condcomp::coordinator::server::Client;
+use condcomp::coordinator::{Backend, NativeBackend, Server, ServerConfig};
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::linalg::Mat;
+use condcomp::nn::Mlp;
+use condcomp::util::Pcg32;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = BenchConfig { warmup_s: 0.1, measure_s: 0.8, min_iters: 5, max_iters: 500 };
+    let mut rng = Pcg32::seeded(3);
+    let profile = ExperimentProfile::mnist_tiny();
+
+    // Backend under test.
+    let net = Mlp::init(
+        &NetConfig { layers: profile.net.layers.clone(), weight_sigma: 0.05, bias_init: 0.5 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6, 4]), 7);
+    let backend = Arc::new(NativeBackend::new(net.clone(), est, 64));
+
+    header("backend predict (no networking)");
+    for rows in [1usize, 16, 64] {
+        let x = Mat::randn(rows, 784, 0.5, &mut rng);
+        for mode in [Mode::Control, Mode::ConditionalAe] {
+            let b = backend.clone();
+            let xx = x.clone();
+            let r = bench_with_units(
+                &format!("predict {} rows={rows}", mode.as_str()),
+                &cfg,
+                rows as f64,
+                move || b.predict(&xx, mode).unwrap(),
+            );
+            println!("{}", r.line());
+        }
+    }
+
+    header("estimator refresh (SVD over all hidden layers)");
+    let b = backend.clone();
+    let r = bench("refresh", &cfg, move || b.refresh().unwrap());
+    println!("{}", r.line());
+
+    header("server round-trip over TCP (single client, batch-of-1)");
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: std::time::Duration::from_millis(1),
+            workers: 1,
+        },
+    )
+    .expect("server");
+    let addr = server.local_addr;
+    let x = Mat::randn(1, 784, 0.5, &mut rng);
+    for mode in [Mode::Control, Mode::ConditionalAe] {
+        let mut client = Client::connect(&addr).unwrap();
+        let xx = x.clone();
+        let r = bench_with_units(
+            &format!("tcp predict {}", mode.as_str()),
+            &cfg,
+            1.0,
+            move || {
+                // Note: includes JSON encode/decode + TCP + batching window.
+                client_predict(&mut client, xx.clone(), mode)
+            },
+        );
+        println!("{}", r.line());
+    }
+    println!(
+        "server processed {} predictions in {} batches",
+        server.metrics.counter("predictions"),
+        server.metrics.counter("batches"),
+    );
+    server.shutdown();
+}
+
+fn client_predict(client: &mut Client, x: Mat, mode: Mode) {
+    let resp = client.predict(x, mode).unwrap();
+    assert!(resp.ok);
+}

@@ -1,0 +1,32 @@
+//! Regenerate the paper's standalone figures (2, 4, 6) and the §3.4 speedup
+//! sweep at tiny scale, timing each driver. The same drivers run at full
+//! scale via `condcomp experiment <id> --profile mnist-small`.
+//!
+//! `cargo bench --bench bench_figures`
+
+use condcomp::bench::header;
+use condcomp::config::ExperimentProfile;
+use condcomp::util::timer::timed;
+
+fn tiny() -> ExperimentProfile {
+    let mut p = ExperimentProfile::mnist_tiny();
+    p.train.epochs = 3;
+    p.n_train = 600;
+    p.n_valid = 150;
+    p.n_test = 150;
+    p
+}
+
+fn main() {
+    let out = std::path::Path::new("results").join("bench-tiny");
+    std::fs::create_dir_all(&out).unwrap();
+    let profile = tiny();
+
+    header("figure drivers (tiny profile; see results/bench-tiny/*.csv)");
+    for id in ["fig2", "fig4", "fig6", "speedup"] {
+        let (res, secs) = timed(|| condcomp::experiments::run(id, &profile, &out));
+        res.unwrap_or_else(|e| panic!("{id}: {e}"));
+        println!("{id:<10} regenerated in {secs:.1}s");
+    }
+    println!("\nrows written under {}", out.display());
+}

@@ -1,0 +1,66 @@
+//! Hot-path microbenches: dense GEMM (naive vs blocked), the conditional
+//! masked GEMM across the sparsity sweep (the measured side of Eq. 10), and
+//! the low-rank estimator product.
+//!
+//! `cargo bench --bench bench_gemm`
+
+use condcomp::bench::{bench_with_units, header, BenchConfig};
+use condcomp::condcomp::MaskedLayer;
+use condcomp::linalg::gemm::{matmul, matmul_naive};
+use condcomp::linalg::{LowRank, Mat};
+use condcomp::util::Pcg32;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rng = Pcg32::seeded(7);
+
+    header("dense GEMM (batch 64, layer-1 of the paper MNIST net)");
+    let (m, d, h) = (64usize, 784usize, 1000usize);
+    let a = Mat::randn(m, d, 1.0, &mut rng);
+    let b = Mat::randn(d, h, 0.05, &mut rng);
+    let flops = (2 * m * d * h) as f64;
+    let naive = bench_with_units("matmul_naive 64x784x1000", &cfg, flops, || matmul_naive(&a, &b));
+    println!("{}", naive.line());
+    let blocked = bench_with_units("matmul_blocked 64x784x1000", &cfg, flops, || matmul(&a, &b));
+    println!("{}", blocked.line());
+    println!(
+        "blocked vs naive: {:.2}×",
+        naive.time.median / blocked.time.median
+    );
+
+    header("conditional masked GEMM vs density α (same layer)");
+    let bias = vec![0.0f32; h];
+    let layer = MaskedLayer::new(&b, &bias);
+    let dense = bench_with_units("forward_dense", &cfg, flops, || layer.forward_dense(&a));
+    println!("{}", dense.line());
+    for alpha in [0.05f32, 0.1, 0.25, 0.5, 1.0] {
+        let mask = Mat::from_fn(m, h, |_, _| if rng.bernoulli(alpha) { 1.0 } else { 0.0 });
+        let r = bench_with_units(
+            &format!("forward_masked α={alpha}"),
+            &cfg,
+            flops * alpha as f64,
+            || layer.forward_masked(&a, &mask),
+        );
+        println!(
+            "{}   speedup vs dense {:.2}×",
+            r.line(),
+            dense.time.median / r.time.median
+        );
+    }
+
+    header("estimator low-rank product a·U·V (rank sweep)");
+    for k in [10usize, 25, 50, 100] {
+        let lr = LowRank::truncate(&b, k);
+        let mut tmp = Mat::zeros(m, k);
+        let mut out = Mat::zeros(m, h);
+        let est_flops = (2 * m * d * k + 2 * m * k * h) as f64;
+        let r = bench_with_units(&format!("lowrank apply k={k}"), &cfg, est_flops, || {
+            lr.apply_into(&a, &mut tmp, &mut out)
+        });
+        println!(
+            "{}   overhead vs dense {:.1}%",
+            r.line(),
+            100.0 * r.time.median / dense.time.median
+        );
+    }
+}

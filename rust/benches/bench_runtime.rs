@@ -1,0 +1,58 @@
+//! PJRT runtime benches: per-call latency of the three AOT artifacts
+//! (control forward, estimator-augmented forward, train step) on the tiny
+//! profile. Requires `make artifacts`.
+//!
+//! `cargo bench --bench bench_runtime`
+
+use condcomp::bench::{bench_with_units, header, BenchConfig};
+use condcomp::config::NetConfig;
+use condcomp::linalg::Mat;
+use condcomp::nn::Mlp;
+use condcomp::runtime::{Engine, ModelRuntime};
+use condcomp::util::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let cfg = BenchConfig { warmup_s: 0.2, measure_s: 1.0, min_iters: 5, max_iters: 300 };
+    let engine = Arc::new(Engine::load(dir).expect("engine"));
+    let mut rng = Pcg32::seeded(5);
+    let net = Mlp::init(
+        &NetConfig { layers: vec![784, 64, 48, 32, 10], weight_sigma: 0.05, bias_init: 0.5 },
+        &mut rng,
+    );
+    let mut rt = ModelRuntime::from_mlp(engine, "mnist-tiny", &net).expect("bind");
+    rt.refresh_factors().expect("factors");
+    let batch = rt.batch;
+    let x = Mat::randn(batch, 784, 0.5, &mut rng);
+    let y: Vec<usize> = (0..batch).map(|_| rng.index(10)).collect();
+
+    header(&format!("PJRT artifact execution (batch {batch})"));
+    {
+        let r = bench_with_units("fwd (control)", &cfg, batch as f64, || rt.forward(&x).unwrap());
+        println!("{}", r.line());
+    }
+    {
+        let r = bench_with_units("fwd_ae (estimator+masked)", &cfg, batch as f64, || {
+            rt.forward_ae(&x).unwrap()
+        });
+        println!("{}", r.line());
+    }
+    {
+        let r = bench_with_units("train_step", &cfg, batch as f64, || {
+            rt.train_step(&x, &y, 0.05, 0.5).unwrap()
+        });
+        println!("{}", r.line());
+    }
+    {
+        let r = bench_with_units("svd factor refresh (rust)", &cfg, 1.0, || {
+            rt.refresh_factors().unwrap()
+        });
+        println!("{}", r.line());
+    }
+}

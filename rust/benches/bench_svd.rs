@@ -1,0 +1,33 @@
+//! SVD refresh cost: exact one-sided Jacobi vs the randomized range finder
+//! (§5 "online approach") across the paper's layer shapes. This is the
+//! once-per-epoch overhead amortized by β in Eq. 9.
+//!
+//! `cargo bench --bench bench_svd`
+
+use condcomp::bench::{bench, header, BenchConfig};
+use condcomp::linalg::{LowRank, Mat, Svd};
+use condcomp::util::Pcg32;
+
+fn main() {
+    let cfg = BenchConfig { warmup_s: 0.1, measure_s: 0.6, min_iters: 3, max_iters: 50 };
+    let mut rng = Pcg32::seeded(11);
+
+    header("estimator refresh: exact SVD vs randomized (rank = 5% of width)");
+    for &(d, h) in &[(256usize, 128usize), (784, 256), (300, 180)] {
+        let w = Mat::randn(d, h, 0.05, &mut rng);
+        let k = (d.min(h) / 20).max(1);
+        let exact = bench(&format!("jacobi svd {d}x{h}"), &cfg, || Svd::compute(&w));
+        println!("{}", exact.line());
+        let trunc = bench(&format!("truncate {d}x{h} k={k}"), &cfg, || LowRank::truncate(&w, k));
+        println!("{}", trunc.line());
+        let mut rng2 = Pcg32::seeded(5);
+        let rand = bench(&format!("randomized {d}x{h} k={k}"), &cfg, || {
+            LowRank::randomized(&w, k, 8, &mut rng2)
+        });
+        println!(
+            "{}   vs exact {:.1}×",
+            rand.line(),
+            trunc.time.median / rand.time.median
+        );
+    }
+}

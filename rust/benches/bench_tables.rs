@@ -1,0 +1,51 @@
+//! Regenerate the paper's Tables 2 & 3 (and their companion Figures 3 & 5)
+//! at tiny scale: the full sweep of estimator configurations trained end to
+//! end, control included — printing the same rows the paper reports.
+//!
+//! `cargo bench --bench bench_tables`
+
+use condcomp::bench::header;
+use condcomp::config::ExperimentProfile;
+use condcomp::util::timer::timed;
+
+fn main() {
+    let out = std::path::Path::new("results").join("bench-tiny");
+    std::fs::create_dir_all(&out).unwrap();
+
+    header("Table 3 / Figure 5 (MNIST-like, tiny profile)");
+    let mut mnist = ExperimentProfile::mnist_tiny();
+    mnist.train.epochs = 3;
+    mnist.n_train = 600;
+    mnist.n_valid = 150;
+    mnist.n_test = 150;
+    let (res, secs) = timed(|| condcomp::experiments::run("table3", &mnist, &out));
+    res.expect("table3");
+    println!("table3+fig5 regenerated in {secs:.1}s");
+    print_table(&out.join("table3.csv"));
+
+    header("Table 2 / Figure 3 (SVHN-like, tiny profile)");
+    let mut svhn = ExperimentProfile::svhn_tiny();
+    svhn.train.epochs = 2;
+    svhn.n_train = 400;
+    svhn.n_valid = 100;
+    svhn.n_test = 100;
+    let (res, secs) = timed(|| condcomp::experiments::run("table2", &svhn, &out));
+    res.expect("table2");
+    println!("table2+fig3 regenerated in {secs:.1}s");
+    print_table(&out.join("table2.csv"));
+}
+
+fn print_table(path: &std::path::Path) {
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for line in text.lines() {
+            let mut cells = line.split(',');
+            let name = cells.next().unwrap_or("");
+            let err = cells.next().unwrap_or("");
+            if let Ok(e) = err.parse::<f64>() {
+                println!("  {name:<16} {:.2}%", e * 100.0);
+            } else {
+                println!("  {name:<16} {err}");
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! A criterion-lite measurement harness (the real criterion is unavailable
+//! offline): warmup, adaptive iteration count targeting a fixed measurement
+//! budget, robust summary statistics, and throughput reporting.
+//!
+//! Used by every target in `benches/` (registered with `harness = false`).
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary (seconds).
+    pub time: Summary,
+    /// Optional work units per iteration (FLOPs, rows, requests).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Units per second, if units were declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.time.median)
+    }
+
+    /// Render one human-readable line.
+    pub fn line(&self) -> String {
+        let med = self.time.median;
+        let t = if med >= 1.0 {
+            format!("{med:.3} s")
+        } else if med >= 1e-3 {
+            format!("{:.3} ms", med * 1e3)
+        } else {
+            format!("{:.1} us", med * 1e6)
+        };
+        let spread = format!("±{:.1}%", 100.0 * self.time.rel_std());
+        match self.throughput() {
+            Some(tp) if tp >= 1e9 => format!("{:<44} {t:>12} {spread:>8}  {:.2} G/s", self.name, tp / 1e9),
+            Some(tp) if tp >= 1e6 => format!("{:<44} {t:>12} {spread:>8}  {:.2} M/s", self.name, tp / 1e6),
+            Some(tp) => format!("{:<44} {t:>12} {spread:>8}  {tp:.0} /s", self.name),
+            None => format!("{:<44} {t:>12} {spread:>8}", self.name),
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup budget in seconds.
+    pub warmup_s: f64,
+    /// Measurement budget in seconds.
+    pub measure_s: f64,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Maximum measured iterations (keeps tiny benches bounded).
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_s: 0.2, measure_s: 1.0, min_iters: 5, max_iters: 1000 }
+    }
+}
+
+/// Quick config for benches embedded in CI-ish runs.
+pub fn quick() -> BenchConfig {
+    BenchConfig { warmup_s: 0.05, measure_s: 0.25, min_iters: 3, max_iters: 200 }
+}
+
+/// Measure a closure. The closure's return value is black-boxed so the work
+/// is not optimized away.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration.
+    let mut calib_iters = 0usize;
+    let warm = Timer::start();
+    while warm.elapsed_s() < cfg.warmup_s || calib_iters == 0 {
+        std::hint::black_box(f());
+        calib_iters += 1;
+        if calib_iters > 10_000 {
+            break;
+        }
+    }
+    let per_iter = (warm.elapsed_s() / calib_iters as f64).max(1e-9);
+    let iters = ((cfg.measure_s / per_iter) as usize).clamp(cfg.min_iters, cfg.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), time: Summary::of(&samples), units_per_iter: None }
+}
+
+/// Measure with a throughput denominator (units of work per iteration).
+pub fn bench_with_units<T>(
+    name: &str,
+    cfg: &BenchConfig,
+    units_per_iter: f64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let mut r = bench(name, cfg, f);
+    r.units_per_iter = Some(units_per_iter);
+    r
+}
+
+/// Print a standard bench header.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!("{:<44} {:>12} {:>8}", "benchmark", "median", "spread");
+    println!("{}", "-".repeat(78));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig { warmup_s: 0.01, measure_s: 0.02, min_iters: 3, max_iters: 50 };
+        let r = bench("spin", &cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.time.median > 0.0);
+        assert!(r.time.n >= 3);
+        assert!(!r.line().is_empty());
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let cfg = BenchConfig { warmup_s: 0.01, measure_s: 0.02, min_iters: 3, max_iters: 50 };
+        let r = bench_with_units("units", &cfg, 1000.0, || std::hint::black_box(42));
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.line().contains("/s"));
+    }
+
+    #[test]
+    fn respects_iter_bounds() {
+        let cfg = BenchConfig { warmup_s: 0.005, measure_s: 0.01, min_iters: 4, max_iters: 6 };
+        let r = bench("bounded", &cfg, || std::thread::sleep(std::time::Duration::from_micros(10)));
+        assert!(r.time.n >= 4 && r.time.n <= 6);
+    }
+}

@@ -1,0 +1,253 @@
+//! A small declarative CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, repeated
+//! options, and positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declaration of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Takes a value (`--key v`) vs boolean flag (`--key`).
+    pub takes_value: bool,
+    /// May appear multiple times.
+    pub repeated: bool,
+    pub default: Option<&'static str>,
+}
+
+impl OptSpec {
+    pub fn value(name: &'static str, help: &'static str) -> OptSpec {
+        OptSpec { name, help, takes_value: true, repeated: false, default: None }
+    }
+
+    pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+        OptSpec { name, help, takes_value: false, repeated: false, default: None }
+    }
+
+    pub fn with_default(mut self, d: &'static str) -> OptSpec {
+        self.default = Some(d);
+        self
+    }
+
+    pub fn multi(mut self) -> OptSpec {
+        self.repeated = true;
+        self
+    }
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected a number, got '{s}'"))),
+        }
+    }
+
+    /// Parse a rank list like "75-50-40-30" or "control".
+    pub fn get_ranks(&self, name: &str) -> Result<Option<Vec<usize>>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some("control") => Ok(Some(Vec::new())),
+            Some(s) => s
+                .split('-')
+                .map(|p| {
+                    p.parse::<usize>()
+                        .map_err(|_| CliError(format!("--{name}: bad rank list '{s}'")))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+/// CLI error (message already formatted for the user).
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// A command with named options.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, spec: OptSpec) -> Command {
+        self.opts.push(spec);
+        self
+    }
+
+    /// Parse raw args (not including the command name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut out = Parsed::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help())))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                        }
+                    };
+                    let slot = out.values.entry(name.to_string()).or_default();
+                    if !spec.repeated {
+                        slot.clear();
+                    }
+                    slot.push(value);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    out.flags.insert(name.to_string(), true);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Generated help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{dflt}\n", o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a network")
+            .opt(OptSpec::value("profile", "experiment profile").with_default("mnist-small"))
+            .opt(OptSpec::value("ranks", "estimator ranks, e.g. 50-35-25"))
+            .opt(OptSpec::flag("quiet", "suppress progress"))
+            .opt(OptSpec::value("set", "config override key=value").multi())
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let p = cmd().parse(&[]).unwrap();
+        assert_eq!(p.get("profile"), Some("mnist-small"));
+        let p = cmd()
+            .parse(&["--profile".into(), "svhn-paper".into(), "--quiet".into()])
+            .unwrap();
+        assert_eq!(p.get("profile"), Some("svhn-paper"));
+        assert!(p.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let p = cmd().parse(&["--profile=x".into(), "fig2".into()]).unwrap();
+        assert_eq!(p.get("profile"), Some("x"));
+        assert_eq!(p.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let p = cmd()
+            .parse(&["--set".into(), "a=1".into(), "--set".into(), "b=2".into()])
+            .unwrap();
+        assert_eq!(p.get_all("set"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn rank_parsing() {
+        let p = cmd().parse(&["--ranks".into(), "75-50-40-30".into()]).unwrap();
+        assert_eq!(p.get_ranks("ranks").unwrap(), Some(vec![75, 50, 40, 30]));
+        let p = cmd().parse(&["--ranks".into(), "control".into()]).unwrap();
+        assert_eq!(p.get_ranks("ranks").unwrap(), Some(vec![]));
+        let p = cmd().parse(&["--ranks".into(), "75-x".into()]).unwrap();
+        assert!(p.get_ranks("ranks").is_err());
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(cmd().parse(&["--nope".into()]).is_err());
+        assert!(cmd().parse(&["--profile".into()]).is_err());
+        assert!(cmd().parse(&["--quiet=yes".into()]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let c = Command::new("t", "t").opt(OptSpec::value("n", "count").with_default("5"));
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.get_usize("n").unwrap(), Some(5));
+        let p = c.parse(&["--n".into(), "abc".into()]).unwrap();
+        assert!(p.get_usize("n").is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! The estimator-augmented network forward: estimator mask → masked GEMM per
+//! hidden layer, dense output layer — the deployable version of the paper's
+//! system, with exact FLOP accounting.
+
+use super::flops::{FlopBreakdown, LayerFlops};
+use super::masked_gemm::MaskedLayer;
+use crate::estimator::SignEstimatorSet;
+use crate::linalg::Mat;
+use crate::nn::activations::argmax_rows;
+use crate::nn::mlp::{add_bias, Mlp};
+
+/// An MLP compiled for conditional execution: transposed weight copies for
+/// the masked GEMM plus a reference to the estimator set.
+pub struct CondMlp<'a> {
+    pub layers: Vec<MaskedLayer>,
+    pub estimators: &'a SignEstimatorSet,
+    /// Scratch: rank per layer, for FLOP accounting.
+    ranks: Vec<usize>,
+}
+
+impl<'a> CondMlp<'a> {
+    /// Prepare from a trained network and a fitted estimator set.
+    pub fn compile(net: &Mlp, estimators: &'a SignEstimatorSet) -> CondMlp<'a> {
+        assert_eq!(
+            estimators.layers.len(),
+            net.depth() - 1,
+            "estimator set does not cover every hidden layer"
+        );
+        CondMlp {
+            layers: (0..net.depth())
+                .map(|l| MaskedLayer::new(&net.weights[l], &net.biases[l]))
+                .collect(),
+            estimators,
+            ranks: estimators.ranks(),
+        }
+    }
+
+    /// Conditional forward. Returns logits and the per-layer FLOP breakdown
+    /// (hidden layers conditional, output layer dense — §4.1).
+    pub fn forward(&self, x: &Mat) -> (Mat, FlopBreakdown) {
+        let mut flops = FlopBreakdown::default();
+        let depth = self.layers.len();
+        let mut a = x.clone();
+        for l in 0..depth - 1 {
+            let est = &self.estimators.layers[l];
+            let mask = est.mask(&a);
+            let layer = &self.layers[l];
+            let (out, computed) = layer.forward_masked(&a, &mask);
+            flops.push(LayerFlops::from_counts(
+                a.rows(),
+                layer.in_dim(),
+                layer.out_dim(),
+                self.ranks[l],
+                computed,
+            ));
+            a = out;
+        }
+        // Output layer: dense (never estimated).
+        let last = &self.layers[depth - 1];
+        let n = a.rows();
+        let mut logits = crate::linalg::matmul(&a, &self.layers[depth - 1].wt.transpose());
+        add_bias(&mut logits, &last.bias);
+        flops.push(LayerFlops::from_counts(
+            n,
+            last.in_dim(),
+            last.out_dim(),
+            0,
+            n * last.out_dim(),
+        ));
+        (logits, flops)
+    }
+
+    /// Predicted classes via the conditional path.
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        argmax_rows(&self.forward(x).0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EstimatorConfig, NetConfig};
+    use crate::util::Pcg32;
+
+    fn setup(rank: &[usize]) -> (Mlp, SignEstimatorSet, Mat) {
+        let mut rng = Pcg32::seeded(3);
+        let net = Mlp::init(
+            &NetConfig { layers: vec![12, 16, 14, 5], weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng,
+        );
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(rank), 7);
+        let x = Mat::randn(9, 12, 1.0, &mut rng);
+        (net, est, x)
+    }
+
+    /// The conditional engine must produce *identical* logits to the dense
+    /// forward gated by the same estimator (they are two implementations of
+    /// the same function: one skips the work, one masks it afterwards).
+    #[test]
+    fn conditional_equals_gated_dense() {
+        for ranks in [&[3usize, 3][..], &[8, 8][..], &[16, 14][..]] {
+            let (net, est, x) = setup(ranks);
+            let cond = CondMlp::compile(&net, &est);
+            let (logits, _) = cond.forward(&x);
+            let dense_gated = net.logits(&x, &est);
+            assert!(
+                logits.max_abs_diff(&dense_gated) < 1e-4,
+                "ranks {ranks:?}: conditional and gated-dense disagree by {}",
+                logits.max_abs_diff(&dense_gated)
+            );
+        }
+    }
+
+    #[test]
+    fn full_rank_conditional_matches_control_output() {
+        let (net, est, x) = setup(&[16, 14]);
+        let cond = CondMlp::compile(&net, &est);
+        let control = net.logits(&x, &crate::nn::mlp::NoGater);
+        let (logits, _) = cond.forward(&x);
+        assert!(logits.max_abs_diff(&control) < 1e-3);
+    }
+
+    #[test]
+    fn flops_reflect_sparsity() {
+        let (net, est, x) = setup(&[4, 4]);
+        let cond = CondMlp::compile(&net, &est);
+        let (_, flops) = cond.forward(&x);
+        assert_eq!(flops.layers.len(), 3);
+        // Hidden layers: conditional < dense (since some units are gated).
+        for l in &flops.layers[..2] {
+            assert!(l.conditional <= l.dense);
+            assert!(l.density() <= 1.0);
+        }
+        // Output layer is dense: computed == total.
+        let out = &flops.layers[2];
+        assert_eq!(out.computed_units, out.total_units);
+        assert_eq!(out.estimator, 0);
+    }
+
+    #[test]
+    fn predictions_agree_with_gated_dense_path() {
+        let (net, est, x) = setup(&[8, 8]);
+        let cond = CondMlp::compile(&net, &est);
+        assert_eq!(cond.predict(&x), crate::nn::activations::argmax_rows(&net.logits(&x, &est)));
+    }
+}

@@ -1,0 +1,149 @@
+//! FLOP accounting, matching the paper's §3.4 conventions exactly:
+//! a dot product of length `d` costs `2d − 1` (d multiplies, d−1 adds), the
+//! activation function costs 1 per element.
+
+/// Exact operation counts for one layer's forward, one batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayerFlops {
+    /// Dense path: `N·(2d−1)·h + N·h` (Eq. 8).
+    pub dense: u64,
+    /// Estimator overhead: `N·(2d−1)·k + N·(2k−1)·h + N·h` (low-rank product
+    /// + sgn), Eq. 9's first three terms.
+    pub estimator: u64,
+    /// Conditional path: `(2d−1)·(computed) + (computed)` where `computed` is
+    /// the number of dot products actually evaluated (α·N·h in expectation).
+    pub conditional: u64,
+    /// Dot products computed by the conditional path.
+    pub computed_units: u64,
+    /// Total output units (N·h).
+    pub total_units: u64,
+}
+
+impl LayerFlops {
+    /// Build from shapes and the measured live-unit count.
+    pub fn from_counts(n: usize, d: usize, h: usize, k: usize, computed: usize) -> LayerFlops {
+        let (n64, d64, h64, k64, c64) = (n as u64, d as u64, h as u64, k as u64, computed as u64);
+        let dense = n64 * (2 * d64 - 1) * h64 + n64 * h64;
+        let estimator = if k == 0 {
+            0
+        } else {
+            n64 * (2 * d64 - 1) * k64 + n64 * (2 * k64 - 1) * h64 + n64 * h64
+        };
+        let conditional = c64 * (2 * d64 - 1) + c64;
+        LayerFlops { dense, estimator, conditional, computed_units: c64, total_units: n64 * h64 }
+    }
+
+    /// Achieved density α̂ = computed / total.
+    pub fn density(&self) -> f64 {
+        if self.total_units == 0 {
+            0.0
+        } else {
+            self.computed_units as f64 / self.total_units as f64
+        }
+    }
+
+    /// Total FLOPs for the estimator-augmented path (excluding SVD refresh,
+    /// which is amortized — see [`FlopBreakdown::with_svd`]).
+    pub fn augmented(&self) -> u64 {
+        self.estimator + self.conditional
+    }
+}
+
+/// Whole-network accounting (Eq. 11): Σ F_nn / Σ F_ae.
+#[derive(Clone, Debug, Default)]
+pub struct FlopBreakdown {
+    pub layers: Vec<LayerFlops>,
+    /// Amortized SVD refresh cost per forward pass (β·O(d·h·min(d,h))).
+    pub svd_amortized: f64,
+}
+
+impl FlopBreakdown {
+    pub fn push(&mut self, layer: LayerFlops) {
+        self.layers.push(layer);
+    }
+
+    /// Account the once-per-`period` SVD refresh: `beta = batch/period_examples`.
+    pub fn with_svd(mut self, dims: &[(usize, usize)], beta: f64) -> FlopBreakdown {
+        self.svd_amortized = dims
+            .iter()
+            .map(|&(d, h)| beta * (d as f64) * (h as f64) * (d.min(h) as f64))
+            .sum();
+        self
+    }
+
+    pub fn total_dense(&self) -> u64 {
+        self.layers.iter().map(|l| l.dense).sum()
+    }
+
+    pub fn total_augmented(&self) -> f64 {
+        self.layers.iter().map(|l| l.augmented()).sum::<u64>() as f64 + self.svd_amortized
+    }
+
+    /// The paper's relative speedup `Σ F_nn / Σ F_ae` (Eq. 11).
+    pub fn speedup(&self) -> f64 {
+        let denom = self.total_augmented();
+        if denom == 0.0 {
+            1.0
+        } else {
+            self.total_dense() as f64 / denom
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_formulas() {
+        // N=1, d=784, h=1000, k=50, α=0.1 → computed = 100.
+        let lf = LayerFlops::from_counts(1, 784, 1000, 50, 100);
+        assert_eq!(lf.dense, (2 * 784 - 1) * 1000 + 1000);
+        assert_eq!(lf.estimator, (2 * 784 - 1) * 50 + (2 * 50 - 1) * 1000 + 1000);
+        assert_eq!(lf.conditional, 100 * (2 * 784 - 1) + 100);
+        assert!((lf.density() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_rank_means_no_estimator() {
+        let lf = LayerFlops::from_counts(4, 100, 50, 0, 4 * 50);
+        assert_eq!(lf.estimator, 0);
+    }
+
+    #[test]
+    fn speedup_gt_one_when_sparse_and_lowrank() {
+        // Strongly sparse (α = 0.05), small k: conditional must win big.
+        let mut bd = FlopBreakdown::default();
+        bd.push(LayerFlops::from_counts(1, 1000, 1000, 25, 50));
+        assert!(bd.speedup() > 5.0, "speedup {}", bd.speedup());
+    }
+
+    #[test]
+    fn speedup_lt_one_when_dense() {
+        // α = 1: every unit computed, estimator is pure overhead.
+        let mut bd = FlopBreakdown::default();
+        bd.push(LayerFlops::from_counts(1, 1000, 1000, 100, 1000));
+        assert!(bd.speedup() < 1.0, "speedup {}", bd.speedup());
+    }
+
+    #[test]
+    fn svd_amortization_reduces_speedup() {
+        let mut a = FlopBreakdown::default();
+        a.push(LayerFlops::from_counts(1, 500, 500, 20, 25));
+        let plain = a.speedup();
+        // Per-example β for once-per-epoch refresh over 50k examples.
+        let with = a.clone().with_svd(&[(500, 500)], 2e-5).speedup();
+        assert!(with < plain);
+        // The amortized SVD must be a small correction in this regime.
+        assert!(with > plain * 0.5, "with {with} plain {plain}");
+    }
+
+    #[test]
+    fn eq11_aggregates_layers() {
+        let mut bd = FlopBreakdown::default();
+        bd.push(LayerFlops::from_counts(1, 100, 100, 10, 10));
+        bd.push(LayerFlops::from_counts(1, 100, 100, 10, 10));
+        let one_dense = LayerFlops::from_counts(1, 100, 100, 10, 10).dense;
+        assert_eq!(bd.total_dense(), 2 * one_dense);
+    }
+}

@@ -1,0 +1,18 @@
+//! The conditional forward path — where the paper's predicted speed gain is
+//! actually realized.
+//!
+//! - [`masked_gemm`] — a GEMM that computes only the output entries the sign
+//!   estimator predicts live ("we skip those dot products based on the
+//!   prediction", §3.1). Works off a transposed weight copy so each computed
+//!   dot product reads two contiguous strips.
+//! - [`cond_mlp`] — an estimator-augmented network forward built on the
+//!   masked GEMM, with exact FLOP accounting per layer.
+//! - [`flops`] — operation counters shared by the engine and the benches.
+
+pub mod masked_gemm;
+pub mod cond_mlp;
+pub mod flops;
+
+pub use cond_mlp::CondMlp;
+pub use flops::{FlopBreakdown, LayerFlops};
+pub use masked_gemm::MaskedLayer;

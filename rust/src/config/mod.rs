@@ -1,0 +1,11 @@
+//! Configuration: a TOML-lite parser plus the typed experiment schema.
+//!
+//! Shipped configs under `configs/` encode the paper's Table 1
+//! hyperparameters; every experiment driver and the serving binary load one
+//! of these (or accept `--set key=value` overrides from the CLI).
+
+pub mod toml_lite;
+pub mod schema;
+
+pub use schema::{DatasetKind, EstimatorConfig, ExperimentProfile, NetConfig, TrainConfig};
+pub use toml_lite::TomlDoc;

@@ -1,0 +1,359 @@
+//! A TOML-subset parser sufficient for this crate's config files.
+//!
+//! Supported: `[section.subsection]` tables, `key = value` with string /
+//! integer / float / boolean / homogeneous-array values, `#` comments, and
+//! dotted lookup (`doc.get("train.lr")`). Unsupported (rejected, not silently
+//! mangled): inline tables, array-of-tables, multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+/// A scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Arr(items) => items.iter().map(|v| v.as_usize()).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Arr(items) => items.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flat map from dotted path to value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+/// Parse error with line context.
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    /// Parse a document from text.
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |m: &str| TomlError { line: lineno + 1, message: m.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(err("array-of-tables is not supported"));
+                }
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+            } else if let Some(eq) = find_top_level_eq(line) {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(line[eq + 1..].trim())
+                    .map_err(|m| err(&format!("bad value for '{key}': {m}")))?;
+                let path = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                if doc.entries.insert(path.clone(), value).is_some() {
+                    return Err(err(&format!("duplicate key '{path}'")));
+                }
+            } else {
+                return Err(err("expected 'key = value' or '[section]'"));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc, TomlError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| TomlError { line: 0, message: format!("cannot read {path:?}: {e}") })?;
+        TomlDoc::parse(&text)
+    }
+
+    /// Lookup by dotted path.
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    /// Insert/override a value (CLI `--set key=value`; value re-parsed with
+    /// TOML scalar rules, falling back to a string).
+    pub fn set(&mut self, path: &str, raw: &str) {
+        let v = parse_value(raw).unwrap_or_else(|_| TomlValue::Str(raw.to_string()));
+        self.entries.insert(path.to_string(), v);
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_f32(&self, path: &str) -> Option<f32> {
+        self.get_f64(path).map(|x| x as f32)
+    }
+
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
+    pub fn get_usize_vec(&self, path: &str) -> Option<Vec<usize>> {
+        self.get(path).and_then(|v| v.as_usize_vec())
+    }
+
+    /// All keys under a section prefix.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let want = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&want)).map(|k| k.as_str()).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(raw: &str) -> Result<TomlValue, String> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        // Basic escapes only.
+        let mut s = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    other => return Err(format!("bad escape '\\{other:?}'")),
+                }
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(s));
+    }
+    if raw == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = raw.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(x) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    Err(format!("cannot parse '{raw}'"))
+}
+
+/// Split an array body on commas not inside strings or nested brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Paper Table 1, MNIST column.
+profile = "paper"
+
+[net]
+layers = [784, 1000, 600, 400, 10]
+weight_sigma = 0.05
+bias_init = 1.0
+
+[train]
+lr = 0.25
+lr_decay = 0.99          # per-epoch scaling
+max_momentum = 0.8
+l1_activation = 1e-5
+use_dropout = true
+name = "mnist # not a comment"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("profile"), Some("paper"));
+        assert_eq!(doc.get_usize_vec("net.layers"), Some(vec![784, 1000, 600, 400, 10]));
+        assert_eq!(doc.get_f64("net.weight_sigma"), Some(0.05));
+        assert_eq!(doc.get_f64("train.lr"), Some(0.25));
+        assert_eq!(doc.get_f64("train.l1_activation"), Some(1e-5));
+        assert_eq!(doc.get_bool("train.use_dropout"), Some(true));
+        assert_eq!(doc.get_str("train.name"), Some("mnist # not a comment"));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = TomlDoc::parse("x = 3\ny = 2.5").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+        assert_eq!(doc.get_usize("x"), Some(3));
+        assert_eq!(doc.get_usize("y"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = 1\nx = 2").is_err());
+        assert!(TomlDoc::parse("just some words").is_err());
+        assert!(TomlDoc::parse("[[tables]]\n").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("m = [[1, 2], [3, 4]]").unwrap();
+        match doc.get("m").unwrap() {
+            TomlValue::Arr(rows) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[1].as_usize_vec(), Some(vec![3, 4]));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn set_override() {
+        let mut doc = TomlDoc::parse("x = 1").unwrap();
+        doc.set("x", "2.5");
+        assert_eq!(doc.get_f64("x"), Some(2.5));
+        doc.set("name", "hello");
+        assert_eq!(doc.get_str("name"), Some("hello"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("n = 600_000").unwrap();
+        assert_eq!(doc.get_usize("n"), Some(600000));
+    }
+}

@@ -1,0 +1,221 @@
+//! Inference backends behind the router: native (pure Rust engine) and PJRT
+//! (AOT artifacts). Both serve the same two modes — control and conditional.
+
+use super::protocol::Mode;
+use crate::condcomp::{FlopBreakdown, MaskedLayer};
+use crate::estimator::SignEstimatorSet;
+use crate::linalg::Mat;
+use crate::nn::mlp::{add_bias, NoGater};
+use crate::nn::Mlp;
+use crate::runtime::ModelRuntime;
+use anyhow::Result;
+use std::sync::{Mutex, RwLock};
+
+/// Which implementation serves the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust engine (masked GEMM).
+    Native,
+    /// PJRT-compiled artifacts (Pallas kernels inside the HLO).
+    Pjrt,
+}
+
+/// A serving backend: maps a batch of inputs to logits.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+    fn input_dim(&self) -> usize;
+    /// Largest batch accepted per call.
+    fn max_batch(&self) -> usize;
+    /// Forward `x` in the given mode; returns logits and, for the
+    /// conditional mode, the achieved FLOP speedup vs dense (Eq. 11).
+    fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)>;
+    /// Recompute estimator factors from the current weights.
+    fn refresh(&self) -> Result<()>;
+}
+
+/// Pure-Rust backend: the control path uses the dense layer kernels, the
+/// conditional path runs estimator + masked GEMM.
+pub struct NativeBackend {
+    net: Mlp,
+    masked: Vec<MaskedLayer>,
+    estimators: RwLock<SignEstimatorSet>,
+    max_batch: usize,
+}
+
+impl NativeBackend {
+    pub fn new(net: Mlp, estimators: SignEstimatorSet, max_batch: usize) -> NativeBackend {
+        let masked = (0..net.depth())
+            .map(|l| MaskedLayer::new(&net.weights[l], &net.biases[l]))
+            .collect();
+        NativeBackend { net, masked, estimators: RwLock::new(estimators), max_batch }
+    }
+
+    /// Conditional forward with flop accounting (shared with experiments).
+    fn forward_cond(&self, x: &Mat) -> (Mat, FlopBreakdown) {
+        let est = self.estimators.read().unwrap();
+        let mut flops = FlopBreakdown::default();
+        let depth = self.masked.len();
+        let mut a = x.clone();
+        for l in 0..depth - 1 {
+            let mask = est.layers[l].mask(&a);
+            let layer = &self.masked[l];
+            let (out, computed) = layer.forward_masked(&a, &mask);
+            flops.push(crate::condcomp::LayerFlops::from_counts(
+                a.rows(),
+                layer.in_dim(),
+                layer.out_dim(),
+                est.layers[l].rank(),
+                computed,
+            ));
+            a = out;
+        }
+        let last = &self.masked[depth - 1];
+        let mut logits = crate::linalg::matmul(&a, &last.wt.transpose());
+        add_bias(&mut logits, &last.bias);
+        flops.push(crate::condcomp::LayerFlops::from_counts(
+            a.rows(),
+            last.in_dim(),
+            last.out_dim(),
+            0,
+            a.rows() * last.out_dim(),
+        ));
+        (logits, flops)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn input_dim(&self) -> usize {
+        self.net.layer_sizes()[0]
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)> {
+        match mode {
+            Mode::Control => Ok((self.net.logits(x, &NoGater), None)),
+            Mode::ConditionalAe => {
+                let (logits, flops) = self.forward_cond(x);
+                Ok((logits, Some(flops.speedup())))
+            }
+        }
+    }
+
+    fn refresh(&self) -> Result<()> {
+        let net = &self.net;
+        self.estimators.write().unwrap().refresh(net);
+        Ok(())
+    }
+}
+
+/// PJRT backend over the AOT artifacts; the runtime is mutex-guarded because
+/// refresh mutates factor literals.
+pub struct PjrtBackend {
+    rt: Mutex<ModelRuntime>,
+    input_dim: usize,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Wrap a runtime for serving.
+    ///
+    /// The `ModelRuntime` (and the `Arc<Engine>` inside it) must be the only
+    /// live handle to its PJRT client — see the `Send`/`Sync` note below.
+    pub fn new(rt: ModelRuntime) -> PjrtBackend {
+        let input_dim = rt.layers[0];
+        let batch = rt.batch;
+        PjrtBackend { rt: Mutex::new(rt), input_dim, batch }
+    }
+}
+
+// SAFETY: the `xla` crate's handles (PjRtClient: Rc<...>, Literal /
+// PjRtLoadedExecutable: raw pointers) are not auto-Send/Sync, but the
+// underlying PJRT CPU client is thread-safe and *every* access to the
+// runtime goes through the `Mutex<ModelRuntime>` above — the Rc refcount and
+// the raw handles are never touched from two threads at once as long as the
+// constructor's single-handle requirement holds.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)> {
+        let rt = self.rt.lock().unwrap();
+        match mode {
+            Mode::Control => Ok((rt.forward(x)?, None)),
+            Mode::ConditionalAe => Ok((rt.forward_ae(x)?, None)),
+        }
+    }
+
+    fn refresh(&self) -> Result<()> {
+        self.rt.lock().unwrap().refresh_factors()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EstimatorConfig, NetConfig};
+    use crate::util::Pcg32;
+
+    fn native() -> NativeBackend {
+        let mut rng = Pcg32::seeded(5);
+        let net = Mlp::init(
+            &NetConfig { layers: vec![8, 12, 10, 4], weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng,
+        );
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[6, 5]), 3);
+        NativeBackend::new(net, est, 32)
+    }
+
+    #[test]
+    fn native_modes_agree_at_full_rank() {
+        let mut rng = Pcg32::seeded(9);
+        let net = Mlp::init(
+            &NetConfig { layers: vec![8, 12, 10, 4], weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng,
+        );
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[12, 10]), 3);
+        let be = NativeBackend::new(net, est, 32);
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        let (dense, _) = be.predict(&x, Mode::Control).unwrap();
+        let (cond, speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        assert!(dense.max_abs_diff(&cond) < 1e-3);
+        assert!(speedup.is_some());
+    }
+
+    #[test]
+    fn conditional_speedup_reported() {
+        let be = native();
+        let mut rng = Pcg32::seeded(2);
+        let x = Mat::randn(4, 8, 1.0, &mut rng);
+        let (_, speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        let s = speedup.unwrap();
+        assert!(s > 0.0 && s.is_finite());
+    }
+
+    #[test]
+    fn refresh_succeeds() {
+        let be = native();
+        be.refresh().unwrap();
+        assert_eq!(be.kind(), BackendKind::Native);
+        assert_eq!(be.input_dim(), 8);
+        assert_eq!(be.max_batch(), 32);
+    }
+}

@@ -1,0 +1,153 @@
+//! Serving metrics: counters, latency distributions, sparsity/FLOP gauges.
+
+use crate::io::json::Json;
+use crate::util::stats::Welford;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry shared by the server's workers.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Welford>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record a latency observation in seconds.
+    pub fn observe_latency(&self, name: &str, seconds: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies
+            .entry(name.to_string())
+            .or_insert_with(Welford::new)
+            .push(seconds);
+    }
+
+    /// Set a point-in-time gauge (achieved α, current speedup estimate, …).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Mean latency in seconds, if observed.
+    pub fn mean_latency(&self, name: &str) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        g.latencies.get(name).filter(|w| w.count() > 0).map(|w| w.mean())
+    }
+
+    /// Export everything as a JSON object.
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters =
+            Json::Obj(g.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect());
+        let gauges =
+            Json::Obj(g.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
+        let lat = Json::Obj(
+            g.latencies
+                .iter()
+                .map(|(k, w)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(w.count() as f64)),
+                            ("mean_us", Json::Num(w.mean() * 1e6)),
+                            ("std_us", Json::Num(w.std() * 1e6)),
+                            ("min_us", Json::Num(if w.count() > 0 { w.min() * 1e6 } else { 0.0 })),
+                            ("max_us", Json::Num(if w.count() > 0 { w.max() * 1e6 } else { 0.0 })),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("gauges", gauges), ("latency", lat)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.incr("req");
+        m.add("req", 4);
+        assert_eq!(m.counter("req"), 5);
+        assert_eq!(m.counter("other"), 0);
+    }
+
+    #[test]
+    fn latency_stats() {
+        let m = MetricsRegistry::new();
+        for x in [0.001, 0.002, 0.003] {
+            m.observe_latency("predict", x);
+        }
+        assert!((m.mean_latency("predict").unwrap() - 0.002).abs() < 1e-9);
+        assert!(m.mean_latency("none").is_none());
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = MetricsRegistry::new();
+        m.set_gauge("alpha", 0.2);
+        m.set_gauge("alpha", 0.1);
+        assert_eq!(m.gauge("alpha"), Some(0.1));
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let m = MetricsRegistry::new();
+        m.incr("a");
+        m.observe_latency("p", 0.5);
+        m.set_gauge("g", 1.5);
+        let s = m.snapshot().to_string();
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("counters").unwrap().get("a").unwrap().as_f64(), Some(1.0));
+        assert!(parsed.get("latency").unwrap().get("p").is_some());
+    }
+
+    #[test]
+    fn registry_is_shareable_across_threads() {
+        let m = std::sync::Arc::new(MetricsRegistry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.incr("n");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 400);
+    }
+}

@@ -1,0 +1,35 @@
+//! Layer-3 coordination: the serving/training orchestration around the
+//! conditional-computation engine.
+//!
+//! The paper's mechanism needs system-side bookkeeping that lives here, not
+//! in the kernels:
+//!
+//! - a **request router** that dispatches each inference request to the
+//!   control (dense) or conditional (estimator-augmented) backend,
+//! - a **dynamic batcher** that coalesces single-example requests into the
+//!   fixed-shape batches the AOT-compiled PJRT executables expect
+//!   (max-batch / max-wait, pad-to-shape),
+//! - the **estimator refresh scheduler** that recomputes the per-layer SVD
+//!   factors from the live weights (once per epoch during training, §3.5;
+//!   on demand while serving),
+//! - a **metrics registry** (request latency, achieved sparsity, FLOPs
+//!   saved, estimator quality) exported as JSON,
+//! - a line-oriented **TCP JSON protocol** so external clients (and the
+//!   bundled load generator) can drive the server.
+//!
+//! Threads + channels (no async runtime offline): one acceptor, N worker
+//! threads around the shared engine, one batcher clock.
+
+pub mod protocol;
+pub mod metrics;
+pub mod batcher;
+pub mod backend;
+pub mod server;
+pub mod scheduler;
+
+pub use backend::{Backend, BackendKind, NativeBackend};
+pub use batcher::{BatchItem, DynamicBatcher};
+pub use metrics::MetricsRegistry;
+pub use protocol::{Request, Response};
+pub use server::{Server, ServerConfig};
+pub use scheduler::TrainingScheduler;

@@ -1,0 +1,283 @@
+//! Line-oriented JSON protocol between clients and the serving coordinator.
+//!
+//! Request (one JSON object per line):
+//! `{"id": 7, "op": "predict", "mode": "ae", "x": [[...784 floats...], ...]}`
+//! `{"id": 8, "op": "stats"}` · `{"id": 9, "op": "refresh"}` ·
+//! `{"id": 0, "op": "ping"}`
+//!
+//! Response: `{"id": 7, "ok": true, "classes": [3], "logits": [[...]],
+//!             "latency_us": 812}` or `{"id": 7, "ok": false, "error": "..."}`.
+
+use crate::io::json::Json;
+use crate::linalg::Mat;
+
+/// Which forward path a predict request wants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Dense control network.
+    Control,
+    /// Estimator-augmented conditional network.
+    ConditionalAe,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "control" | "dense" => Some(Mode::Control),
+            "ae" | "conditional" | "condcomp" => Some(Mode::ConditionalAe),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Control => "control",
+            Mode::ConditionalAe => "ae",
+        }
+    }
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Ping { id: u64 },
+    Stats { id: u64 },
+    /// Force an estimator-factor refresh from the current weights.
+    Refresh { id: u64 },
+    Predict { id: u64, mode: Mode, x: Mat },
+    Shutdown { id: u64 },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Ping { id }
+            | Request::Stats { id }
+            | Request::Refresh { id }
+            | Request::Predict { id, .. }
+            | Request::Shutdown { id } => *id,
+        }
+    }
+
+    /// Parse one protocol line.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let op = v
+            .get("op")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| "missing 'op'".to_string())?;
+        match op {
+            "ping" => Ok(Request::Ping { id }),
+            "stats" => Ok(Request::Stats { id }),
+            "refresh" => Ok(Request::Refresh { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            "predict" => {
+                let mode = v
+                    .get("mode")
+                    .and_then(|m| m.as_str())
+                    .map(|m| Mode::parse(m).ok_or_else(|| format!("bad mode '{m}'")))
+                    .transpose()?
+                    .unwrap_or(Mode::ConditionalAe);
+                let rows = v
+                    .get("x")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| "missing 'x'".to_string())?;
+                if rows.is_empty() {
+                    return Err("empty 'x'".into());
+                }
+                let first = rows[0]
+                    .to_f32_vec()
+                    .ok_or_else(|| "x rows must be float arrays".to_string())?;
+                let d = first.len();
+                let mut data = Vec::with_capacity(rows.len() * d);
+                data.extend_from_slice(&first);
+                for row in &rows[1..] {
+                    let r = row
+                        .to_f32_vec()
+                        .ok_or_else(|| "x rows must be float arrays".to_string())?;
+                    if r.len() != d {
+                        return Err(format!("ragged x: {} vs {d}", r.len()));
+                    }
+                    data.extend_from_slice(&r);
+                }
+                Ok(Request::Predict { id, mode, x: Mat::from_vec(rows.len(), d, data) })
+            }
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    /// Serialize (used by the bundled client/load generator).
+    pub fn to_json_line(&self) -> String {
+        match self {
+            Request::Ping { id } => {
+                Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("ping".into()))])
+                    .to_string()
+            }
+            Request::Stats { id } => {
+                Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("stats".into()))])
+                    .to_string()
+            }
+            Request::Refresh { id } => {
+                Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("refresh".into()))])
+                    .to_string()
+            }
+            Request::Shutdown { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("shutdown".into())),
+            ])
+            .to_string(),
+            Request::Predict { id, mode, x } => {
+                let rows: Vec<Json> = (0..x.rows()).map(|i| Json::num_arr(x.row(i))).collect();
+                Json::obj(vec![
+                    ("id", Json::Num(*id as f64)),
+                    ("op", Json::Str("predict".into())),
+                    ("mode", Json::Str(mode.as_str().into())),
+                    ("x", Json::Arr(rows)),
+                ])
+                .to_string()
+            }
+        }
+    }
+}
+
+/// A server response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub classes: Vec<usize>,
+    pub logits: Option<Mat>,
+    pub latency_us: u64,
+    /// Arbitrary payload for stats responses.
+    pub payload: Option<Json>,
+}
+
+impl Response {
+    pub fn ok(id: u64) -> Response {
+        Response { id, ok: true, error: None, classes: Vec::new(), logits: None, latency_us: 0, payload: None }
+    }
+
+    pub fn err(id: u64, msg: impl Into<String>) -> Response {
+        Response { id, ok: false, error: Some(msg.into()), ..Response::ok(id) }
+    }
+
+    pub fn to_json_line(&self) -> String {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("ok", Json::Bool(self.ok)),
+            ("latency_us", Json::Num(self.latency_us as f64)),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        if !self.classes.is_empty() {
+            fields.push((
+                "classes",
+                Json::Arr(self.classes.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ));
+        }
+        if let Some(l) = &self.logits {
+            let rows: Vec<Json> = (0..l.rows()).map(|i| Json::num_arr(l.row(i))).collect();
+            fields.push(("logits", Json::Arr(rows)));
+        }
+        if let Some(p) = &self.payload {
+            fields.push(("stats", p.clone()));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    /// Parse a response line (client side).
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let ok = v.get("ok").and_then(|x| x.as_bool()).unwrap_or(false);
+        let classes = v
+            .get("classes")
+            .and_then(|c| c.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        Ok(Response {
+            id,
+            ok,
+            error: v.get("error").and_then(|e| e.as_str()).map(String::from),
+            classes,
+            logits: None,
+            latency_us: v.get("latency_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            payload: v.get("stats").cloned(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_roundtrip() {
+        let x = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let req = Request::Predict { id: 42, mode: Mode::ConditionalAe, x };
+        let line = req.to_json_line();
+        match Request::parse(&line).unwrap() {
+            Request::Predict { id, mode, x } => {
+                assert_eq!(id, 42);
+                assert_eq!(mode, Mode::ConditionalAe);
+                assert_eq!(x.shape(), (2, 3));
+                assert_eq!(x[(1, 2)], 6.0);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_ops_roundtrip() {
+        for (req, want) in [
+            (Request::Ping { id: 1 }, "ping"),
+            (Request::Stats { id: 2 }, "stats"),
+            (Request::Refresh { id: 3 }, "refresh"),
+            (Request::Shutdown { id: 4 }, "shutdown"),
+        ] {
+            let line = req.to_json_line();
+            assert!(line.contains(want));
+            let back = Request::parse(&line).unwrap();
+            assert_eq!(back.id(), req.id());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse(r#"{"op":"predict","id":1}"#).is_err());
+        assert!(Request::parse(r#"{"op":"predict","id":1,"x":[[1],[1,2]]}"#).is_err());
+        assert!(Request::parse(r#"{"op":"predict","id":1,"x":[],"mode":"ae"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"nope","id":1}"#).is_err());
+        assert!(Request::parse(r#"{"op":"predict","id":1,"x":[[1]],"mode":"zzz"}"#).is_err());
+    }
+
+    #[test]
+    fn default_mode_is_ae() {
+        let req = Request::parse(r#"{"op":"predict","id":1,"x":[[1,2]]}"#).unwrap();
+        match req {
+            Request::Predict { mode, .. } => assert_eq!(mode, Mode::ConditionalAe),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut r = Response::ok(9);
+        r.classes = vec![3, 1];
+        r.latency_us = 812;
+        let line = r.to_json_line();
+        let back = Response::parse(&line).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.id, 9);
+        assert_eq!(back.classes, vec![3, 1]);
+        assert_eq!(back.latency_us, 812);
+        let e = Response::err(4, "boom");
+        let back = Response::parse(&e.to_json_line()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.error.as_deref(), Some("boom"));
+    }
+}

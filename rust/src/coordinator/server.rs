@@ -1,0 +1,441 @@
+//! The serving coordinator: TCP acceptor, per-connection readers/writers,
+//! worker pool around the shared backend, dynamic batching, metrics.
+
+use super::backend::Backend;
+use super::batcher::{BatchItem, DynamicBatcher};
+use super::metrics::MetricsRegistry;
+use super::protocol::{Mode, Request, Response};
+use crate::linalg::Mat;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:0" (0 = ephemeral port).
+    pub addr: String,
+    /// Dynamic-batching window.
+    pub max_wait: Duration,
+    /// Worker threads pulling batches.
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:0".into(), max_wait: Duration::from_millis(2), workers: 1 }
+    }
+}
+
+/// A running server; dropping it (or calling [`Server::shutdown`]) stops the
+/// threads.
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    pub metrics: Arc<MetricsRegistry>,
+    batcher: Arc<DynamicBatcher>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start accepting connections; returns once the listener is bound.
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let metrics = Arc::new(MetricsRegistry::new());
+        let batcher = Arc::new(DynamicBatcher::new(backend.max_batch(), cfg.max_wait));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // Workers: drain the batcher, run the backend, fan results back out.
+        for w in 0..cfg.workers.max(1) {
+            let batcher = batcher.clone();
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("condcomp-worker-{w}"))
+                    .spawn(move || worker_loop(&batcher, backend.as_ref(), &metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        // Acceptor: non-blocking poll so shutdown is prompt.
+        {
+            let batcher = batcher.clone();
+            let metrics = metrics.clone();
+            let stop2 = stop.clone();
+            let backend = backend.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("condcomp-acceptor".into())
+                    .spawn(move || {
+                        while !stop2.load(Ordering::Relaxed) {
+                            match listener.accept() {
+                                Ok((stream, _peer)) => {
+                                    metrics.incr("connections");
+                                    let batcher = batcher.clone();
+                                    let metrics = metrics.clone();
+                                    let stop3 = stop2.clone();
+                                    let backend = backend.clone();
+                                    std::thread::spawn(move || {
+                                        let _ = handle_connection(
+                                            stream, &batcher, backend.as_ref(), &metrics, &stop3,
+                                        );
+                                    });
+                                }
+                                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                    std::thread::sleep(Duration::from_millis(5));
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn acceptor"),
+            );
+        }
+
+        Ok(Server { local_addr, metrics, batcher, stop, threads })
+    }
+
+    /// Stop all threads and wait for them.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+    }
+}
+
+fn worker_loop(batcher: &DynamicBatcher, backend: &dyn Backend, metrics: &MetricsRegistry) {
+    while let Some(batch) = batcher.next_batch() {
+        let mode = batch[0].mode;
+        let total_rows: usize = batch.iter().map(|i| i.x.rows()).sum();
+        metrics.incr("batches");
+        metrics.add("batched_rows", total_rows as u64);
+        metrics.set_gauge("last_batch_rows", total_rows as f64);
+
+        // Concatenate the batch.
+        let d = batch[0].x.cols();
+        let mut x = Mat::zeros(total_rows, d);
+        let mut at = 0usize;
+        let mut ok_shapes = true;
+        for item in &batch {
+            if item.x.cols() != d {
+                ok_shapes = false;
+                break;
+            }
+            for r in 0..item.x.rows() {
+                x.row_mut(at).copy_from_slice(item.x.row(r));
+                at += 1;
+            }
+        }
+        if !ok_shapes {
+            for item in batch {
+                let _ = item
+                    .reply
+                    .send(Response::err(item.id, "inconsistent input dims in batch"));
+            }
+            continue;
+        }
+
+        let t0 = Instant::now();
+        let result = backend.predict(&x, mode);
+        let dt = t0.elapsed().as_secs_f64();
+        metrics.observe_latency(&format!("predict_{}", mode.as_str()), dt);
+
+        match result {
+            Ok((logits, speedup)) => {
+                if let Some(s) = speedup {
+                    metrics.set_gauge("flop_speedup", s);
+                }
+                let mut row = 0usize;
+                for item in batch {
+                    let n = item.x.rows();
+                    let slice = logits.rows_slice(row, n);
+                    row += n;
+                    let mut resp = Response::ok(item.id);
+                    resp.classes = crate::nn::activations::argmax_rows(&slice);
+                    resp.logits = Some(slice);
+                    resp.latency_us = item.enqueued.elapsed().as_micros() as u64;
+                    metrics.incr("predictions");
+                    let _ = item.reply.send(resp);
+                }
+            }
+            Err(e) => {
+                metrics.incr("errors");
+                for item in batch {
+                    let _ = item.reply.send(Response::err(item.id, format!("backend: {e}")));
+                }
+            }
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    batcher: &DynamicBatcher,
+    backend: &dyn Backend,
+    metrics: &MetricsRegistry,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let reader = BufReader::new(stream.try_clone()?);
+    let write_stream = stream;
+    // Writer thread: serializes responses (batching workers reply through the
+    // channel, so ordering across pipelined requests is by completion).
+    let (tx, rx) = channel::<Response>();
+    let writer = std::thread::spawn(move || {
+        let mut out = write_stream;
+        while let Ok(resp) = rx.recv() {
+            let line = resp.to_json_line();
+            if out.write_all(line.as_bytes()).is_err() || out.write_all(b"\n").is_err() {
+                break;
+            }
+            let _ = out.flush();
+        }
+    });
+
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        metrics.incr("requests");
+        match Request::parse(&line) {
+            Err(e) => {
+                let _ = tx.send(Response::err(0, format!("parse: {e}")));
+            }
+            Ok(Request::Ping { id }) => {
+                let mut r = Response::ok(id);
+                r.payload = Some(crate::io::json::Json::obj(vec![(
+                    "version",
+                    crate::io::json::Json::Str(crate::VERSION.into()),
+                )]));
+                let _ = tx.send(r);
+            }
+            Ok(Request::Stats { id }) => {
+                let mut r = Response::ok(id);
+                r.payload = Some(metrics.snapshot());
+                let _ = tx.send(r);
+            }
+            Ok(Request::Refresh { id }) => {
+                metrics.incr("refreshes");
+                let resp = match backend.refresh() {
+                    Ok(()) => Response::ok(id),
+                    Err(e) => Response::err(id, format!("refresh: {e}")),
+                };
+                let _ = tx.send(resp);
+            }
+            Ok(Request::Shutdown { id }) => {
+                let _ = tx.send(Response::ok(id));
+                stop.store(true, Ordering::Relaxed);
+                batcher.close();
+                break;
+            }
+            Ok(Request::Predict { id, mode, x }) => {
+                if x.cols() != backend.input_dim() {
+                    let _ = tx.send(Response::err(
+                        id,
+                        format!("input dim {} != model {}", x.cols(), backend.input_dim()),
+                    ));
+                    continue;
+                }
+                if x.rows() > backend.max_batch() {
+                    let _ = tx.send(Response::err(
+                        id,
+                        format!("request rows {} > max batch {}", x.rows(), backend.max_batch()),
+                    ));
+                    continue;
+                }
+                batcher.push(BatchItem { id, mode, x, enqueued: Instant::now(), reply: tx.clone() });
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// A minimal blocking client for the line protocol (tests, examples,
+/// load generator).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream, next_id: 1 })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let line = req.to_json_line();
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp_line = String::new();
+        self.reader.read_line(&mut resp_line)?;
+        Response::parse(&resp_line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Ping { id })
+    }
+
+    pub fn stats(&mut self) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Stats { id })
+    }
+
+    pub fn refresh(&mut self) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Refresh { id })
+    }
+
+    pub fn shutdown(&mut self) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Shutdown { id })
+    }
+
+    pub fn predict(&mut self, x: Mat, mode: Mode) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Predict { id, mode, x })
+    }
+
+    fn bump(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EstimatorConfig, NetConfig};
+    use crate::coordinator::backend::NativeBackend;
+    use crate::estimator::SignEstimatorSet;
+    use crate::nn::Mlp;
+    use crate::util::Pcg32;
+
+    fn start_server() -> (Server, std::net::SocketAddr) {
+        let mut rng = Pcg32::seeded(7);
+        let net = Mlp::init(
+            &NetConfig { layers: vec![6, 10, 8, 3], weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng,
+        );
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[5, 4]), 3);
+        let backend = Arc::new(NativeBackend::new(net, est, 16));
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let addr = server.local_addr;
+        (server, addr)
+    }
+
+    #[test]
+    fn ping_stats_predict_roundtrip() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr).unwrap();
+
+        let pong = client.ping().unwrap();
+        assert!(pong.ok);
+
+        let mut rng = Pcg32::seeded(1);
+        let x = Mat::randn(2, 6, 1.0, &mut rng);
+        let resp = client.predict(x.clone(), Mode::ConditionalAe).unwrap();
+        assert!(resp.ok, "predict failed: {:?}", resp.error);
+        assert_eq!(resp.classes.len(), 2);
+        assert!(resp.classes.iter().all(|&c| c < 3));
+
+        let dense = client.predict(x, Mode::Control).unwrap();
+        assert!(dense.ok);
+
+        let stats = client.stats().unwrap();
+        assert!(stats.ok);
+        let counters = stats.payload.unwrap();
+        let preds = counters
+            .get("counters")
+            .and_then(|c| c.get("predictions"))
+            .and_then(|p| p.as_f64())
+            .unwrap();
+        // One increment per request item: two predict calls so far.
+        assert!(preds >= 2.0, "predictions counter {preds}");
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_not_fatal() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr).unwrap();
+        // Wrong input dim.
+        let x = Mat::zeros(1, 5);
+        let resp = client.predict(x, Mode::Control).unwrap();
+        assert!(!resp.ok);
+        // Oversized batch.
+        let x = Mat::zeros(17, 6);
+        let resp = client.predict(x, Mode::Control).unwrap();
+        assert!(!resp.ok);
+        // Server still alive.
+        assert!(client.ping().unwrap().ok);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_are_batched() {
+        let (server, addr) = start_server();
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let addr = addr;
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let mut rng = Pcg32::seeded(3);
+                    for _ in 0..5 {
+                        let x = Mat::randn(1, 6, 1.0, &mut rng);
+                        let resp = client.predict(x, Mode::ConditionalAe).unwrap();
+                        assert!(resp.ok);
+                        assert_eq!(resp.classes.len(), 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.metrics.counter("predictions"), 30);
+        // With 6 concurrent clients and a 2ms window, at least some batches
+        // must have coalesced multiple requests.
+        let batches = server.metrics.counter("batches");
+        assert!(batches <= 30, "batches {batches}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn refresh_over_protocol() {
+        let (server, addr) = start_server();
+        let mut client = Client::connect(&addr).unwrap();
+        assert!(client.refresh().unwrap().ok);
+        assert_eq!(server.metrics.counter("refreshes"), 1);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,209 @@
+//! The paper's analytical cost model (§3.4, Eqs. 8–11), in closed form.
+//!
+//! All counts follow the paper's conventions: a length-`d` dot product costs
+//! `2d − 1` FLOPs, activation functions cost 1 FLOP per element, and the SVD
+//! refresh is amortized with the feed-forwards-per-refresh ratio β.
+
+/// Parameters of one layer's cost comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCost {
+    /// N in the paper: 1 for fully-connected, #patches for convolutional.
+    pub n: f64,
+    /// Input dimension d.
+    pub d: f64,
+    /// Output dimension h.
+    pub h: f64,
+    /// Estimator rank k.
+    pub k: f64,
+    /// Activation density α ∈ [0, 1].
+    pub alpha: f64,
+    /// Amortized SVD share per unit of feed-forward work. The paper quotes
+    /// β = 250/50000 = 0.005 *per minibatch* (batch 250, SVD once per 50k
+    /// examples); per example that is β = 0.005/250 = 2·10⁻⁵. Use the
+    /// per-example value here, matching `n = 1` feed-forward costs.
+    pub beta: f64,
+}
+
+impl LayerCost {
+    pub fn new(d: usize, h: usize, k: usize, alpha: f64) -> LayerCost {
+        LayerCost { n: 1.0, d: d as f64, h: h as f64, k: k as f64, alpha, beta: 0.0 }
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> LayerCost {
+        self.beta = beta;
+        self
+    }
+
+    pub fn with_n(mut self, n: f64) -> LayerCost {
+        self.n = n;
+        self
+    }
+
+    /// Eq. 8: `F_nn = N(2d−1)h + Nh`.
+    pub fn f_nn(&self) -> f64 {
+        self.n * (2.0 * self.d - 1.0) * self.h + self.n * self.h
+    }
+
+    /// The SVD refresh term `β·O(d·h·min(d,h))` (unit constant).
+    pub fn svd_term(&self) -> f64 {
+        self.beta * self.d * self.h * self.d.min(self.h)
+    }
+
+    /// Eq. 9: estimator + conditional + amortized SVD.
+    pub fn f_ae(&self) -> f64 {
+        let est = self.n * (2.0 * self.d - 1.0) * self.k
+            + self.n * (2.0 * self.k - 1.0) * self.h
+            + self.n * self.h;
+        let cond = self.alpha * (self.n * (2.0 * self.d - 1.0) * self.h + self.n * self.h);
+        est + cond + self.svd_term()
+    }
+
+    /// Eq. 10: relative FLOP reduction `F_nn / F_ae`.
+    pub fn speedup(&self) -> f64 {
+        self.f_nn() / self.f_ae()
+    }
+
+    /// Largest rank k for which the estimator still pays off (speedup > 1) at
+    /// this α; `None` if no rank ≥ 1 does.
+    pub fn max_profitable_rank(&self) -> Option<usize> {
+        // F_ae is increasing in k; binary search the crossover.
+        let probe = |k: f64| LayerCost { k, ..*self }.speedup();
+        if probe(1.0) <= 1.0 {
+            return None;
+        }
+        let (mut lo, mut hi) = (1.0f64, self.d.min(self.h));
+        if probe(hi) > 1.0 {
+            return Some(hi as usize);
+        }
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if probe(mid) > 1.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo.floor().max(1.0) as usize)
+    }
+
+    /// Largest density α at which the estimator pays off for this rank.
+    pub fn max_profitable_alpha(&self) -> Option<f64> {
+        let probe = |alpha: f64| LayerCost { alpha, ..*self }.speedup();
+        if probe(0.0) <= 1.0 {
+            return None;
+        }
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        if probe(1.0) > 1.0 {
+            return Some(1.0);
+        }
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if probe(mid) > 1.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+}
+
+/// Eq. 11: whole-network relative speedup `Σ F_nn / Σ F_ae`.
+pub fn network_speedup(layers: &[LayerCost]) -> f64 {
+    let nn: f64 = layers.iter().map(|l| l.f_nn()).sum();
+    let ae: f64 = layers.iter().map(|l| l.f_ae()).sum();
+    nn / ae
+}
+
+/// The rank bound below which the low-rank product is cheaper than the dense
+/// one: `k < d·h / (d + h)` (§3.1).
+pub fn break_even_rank(d: usize, h: usize) -> f64 {
+    (d as f64 * h as f64) / (d as f64 + h as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq8_eq9_hand_computed() {
+        let c = LayerCost::new(784, 1000, 50, 0.1);
+        assert_eq!(c.f_nn(), (2.0 * 784.0 - 1.0) * 1000.0 + 1000.0);
+        let est = (2.0 * 784.0 - 1.0) * 50.0 + (2.0 * 50.0 - 1.0) * 1000.0 + 1000.0;
+        let cond = 0.1 * ((2.0 * 784.0 - 1.0) * 1000.0 + 1000.0);
+        assert!((c.f_ae() - (est + cond)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_beta_example() {
+        // §3.4: minibatch 250, train set 50,000 → β = 0.005 per minibatch,
+        // i.e. 0.005/250 = 2e-5 per example (our F counts are per example).
+        let beta_minibatch: f64 = 250.0 / 50_000.0;
+        assert!((beta_minibatch - 0.005).abs() < 1e-12);
+        let beta = beta_minibatch / 250.0;
+        let c = LayerCost::new(784, 1000, 50, 0.1).with_beta(beta);
+        assert!(c.svd_term() > 0.0);
+        assert!(c.speedup() > 1.0, "paper's canonical regime must profit: {}", c.speedup());
+    }
+
+    #[test]
+    fn speedup_decreases_with_alpha_and_k() {
+        let base = LayerCost::new(1000, 1000, 50, 0.1);
+        let denser = LayerCost { alpha: 0.5, ..base };
+        let bigger_k = LayerCost { k: 200.0, ..base };
+        assert!(base.speedup() > denser.speedup());
+        assert!(base.speedup() > bigger_k.speedup());
+    }
+
+    #[test]
+    fn fully_dense_never_profits() {
+        let c = LayerCost::new(1000, 1000, 50, 1.0);
+        assert!(c.speedup() < 1.0);
+        assert!(c.max_profitable_rank().is_none() || c.speedup() < 1.0);
+    }
+
+    #[test]
+    fn crossover_rank_is_consistent() {
+        let c = LayerCost::new(784, 1000, 1, 0.1);
+        let kmax = c.max_profitable_rank().expect("sparse regime must profit at k=1");
+        let at = LayerCost { k: kmax as f64, ..c };
+        let above = LayerCost { k: (kmax + 2) as f64, ..c };
+        assert!(at.speedup() > 1.0, "speedup at kmax {}", at.speedup());
+        assert!(above.speedup() <= 1.0 + 1e-6, "speedup above kmax {}", above.speedup());
+    }
+
+    #[test]
+    fn crossover_alpha_is_consistent() {
+        let c = LayerCost::new(784, 1000, 50, 0.0);
+        let amax = c.max_profitable_alpha().expect("k=50 must profit at α=0");
+        assert!(amax > 0.0 && amax < 1.0);
+        let at = LayerCost { alpha: amax - 0.01, ..c };
+        let above = LayerCost { alpha: amax + 0.01, ..c };
+        assert!(at.speedup() > 1.0);
+        assert!(above.speedup() < 1.0);
+    }
+
+    #[test]
+    fn break_even_rank_matches_flops() {
+        // At k slightly below d·h/(d+h), low-rank multiply is cheaper.
+        let (d, h) = (300, 500);
+        let kb = break_even_rank(d, h);
+        let lowrank_flops = |k: f64| (2.0 * d as f64 - 1.0) * k + (2.0 * k - 1.0) * h as f64;
+        let dense = (2.0 * d as f64 - 1.0) * h as f64;
+        assert!(lowrank_flops(kb * 0.95) < dense);
+        assert!(lowrank_flops(kb * 1.10) > dense);
+    }
+
+    #[test]
+    fn network_speedup_aggregates() {
+        let layers = vec![
+            LayerCost::new(784, 1000, 50, 0.1),
+            LayerCost::new(1000, 600, 35, 0.1),
+            LayerCost::new(600, 400, 25, 0.1),
+        ];
+        let s = network_speedup(&layers);
+        let lo = layers.iter().map(|l| l.speedup()).fold(f64::INFINITY, f64::min);
+        let hi = layers.iter().map(|l| l.speedup()).fold(0.0, f64::max);
+        assert!(s >= lo && s <= hi, "aggregate {s} outside [{lo}, {hi}]");
+    }
+}

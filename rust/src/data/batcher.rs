@@ -1,0 +1,106 @@
+//! Minibatch iteration over a split, with per-epoch shuffling.
+
+use super::dataset::Split;
+use crate::linalg::Mat;
+use crate::util::Pcg32;
+
+/// One minibatch: `x` is `b × d`, `y` the matching labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Mat,
+    pub y: Vec<usize>,
+    /// Index of this batch within the epoch (drives Fig. 6's drift plot).
+    pub index: usize,
+}
+
+/// Shuffled minibatch source. Produces every example exactly once per epoch;
+/// the final batch may be smaller than `batch_size` (never padded here — the
+/// serving-side batcher pads, the training-side one does not, matching the
+/// reference toolbox).
+pub struct Batcher {
+    order: Vec<usize>,
+    batch_size: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch_size: usize) -> Batcher {
+        assert!(batch_size > 0, "batch_size must be positive");
+        Batcher { order: (0..n).collect(), batch_size }
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch_size)
+    }
+
+    /// Reshuffle for a new epoch.
+    pub fn shuffle(&mut self, rng: &mut Pcg32) {
+        rng.shuffle(&mut self.order);
+    }
+
+    /// Iterate batches of the given split for one epoch.
+    pub fn epoch<'a>(&'a self, split: &'a Split) -> impl Iterator<Item = Batch> + 'a {
+        assert_eq!(split.len(), self.order.len(), "batcher built for a different split size");
+        (0..self.batches_per_epoch()).map(move |bi| {
+            let lo = bi * self.batch_size;
+            let hi = (lo + self.batch_size).min(self.order.len());
+            let idx = &self.order[lo..hi];
+            let sub = split.gather(idx);
+            Batch { x: sub.x, y: sub.y, index: bi }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn split(n: usize) -> Split {
+        Split {
+            x: Mat::from_fn(n, 2, |r, _| r as f32),
+            y: (0..n).map(|i| i % 10).collect(),
+        }
+    }
+
+    #[test]
+    fn covers_every_example_once() {
+        let s = split(23);
+        let mut b = Batcher::new(23, 5);
+        let mut rng = Pcg32::seeded(1);
+        b.shuffle(&mut rng);
+        let mut seen = vec![0usize; 23];
+        let mut batches = 0;
+        for batch in b.epoch(&s) {
+            batches += 1;
+            for i in 0..batch.y.len() {
+                let orig = batch.x[(i, 0)] as usize;
+                seen[orig] += 1;
+                assert_eq!(batch.y[i], orig % 10, "labels track rows");
+            }
+        }
+        assert_eq!(batches, 5);
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn last_batch_is_remainder() {
+        let s = split(10);
+        let b = Batcher::new(10, 4);
+        let sizes: Vec<usize> = b.epoch(&s).map(|bt| bt.y.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn batch_indices_sequential() {
+        let s = split(9);
+        let b = Batcher::new(9, 3);
+        let idx: Vec<usize> = b.epoch(&s).map(|bt| bt.index).collect();
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn exact_division() {
+        let b = Batcher::new(12, 4);
+        assert_eq!(b.batches_per_epoch(), 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! In-memory labeled dataset with train/valid/test splits.
+
+use crate::linalg::Mat;
+use crate::util::Pcg32;
+
+/// A labeled split: `x` is `n × d` (one example per row), `y[i] ∈ [0, 10)`.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub x: Mat,
+    pub y: Vec<usize>,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Gather a sub-split by example indices.
+    pub fn gather(&self, idx: &[usize]) -> Split {
+        let d = self.dim();
+        let mut x = Mat::zeros(idx.len(), d);
+        let mut y = Vec::with_capacity(idx.len());
+        for (row, &i) in idx.iter().enumerate() {
+            x.row_mut(row).copy_from_slice(self.x.row(i));
+            y.push(self.y[i]);
+        }
+        Split { x, y }
+    }
+
+    /// First `n` examples (used to cap experiment cost).
+    pub fn head(&self, n: usize) -> Split {
+        let n = n.min(self.len());
+        Split { x: self.x.rows_slice(0, n), y: self.y[..n].to_vec() }
+    }
+
+    /// Class histogram over the labels.
+    pub fn class_counts(&self, num_classes: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; num_classes];
+        for &y in &self.y {
+            counts[y] += 1;
+        }
+        counts
+    }
+}
+
+/// A full dataset: named splits plus provenance metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Split,
+    pub valid: Split,
+    pub test: Split,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn input_dim(&self) -> usize {
+        self.train.dim()
+    }
+
+    /// Shuffle the training split in place (epoch boundary).
+    pub fn shuffle_train(&mut self, rng: &mut Pcg32) {
+        let n = self.train.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        self.train = self.train.gather(&idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_split() -> Split {
+        Split {
+            x: Mat::from_fn(4, 3, |r, c| (r * 3 + c) as f32),
+            y: vec![0, 1, 0, 2],
+        }
+    }
+
+    #[test]
+    fn gather_reorders() {
+        let s = toy_split();
+        let g = s.gather(&[2, 0]);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.y, vec![0, 0]);
+        assert_eq!(g.x.row(0), s.x.row(2));
+        assert_eq!(g.x.row(1), s.x.row(0));
+    }
+
+    #[test]
+    fn head_truncates() {
+        let s = toy_split();
+        let h = s.head(2);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.y, vec![0, 1]);
+        assert_eq!(s.head(100).len(), 4);
+    }
+
+    #[test]
+    fn class_counts() {
+        let s = toy_split();
+        assert_eq!(s.class_counts(3), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn shuffle_preserves_pairing() {
+        let mut ds = Dataset {
+            name: "toy".into(),
+            train: Split {
+                // Row i is constant vector of value i; label = i % 3.
+                x: Mat::from_fn(30, 2, |r, _| r as f32),
+                y: (0..30).map(|i| i % 3).collect(),
+            },
+            valid: toy_split(),
+            test: toy_split(),
+            num_classes: 3,
+        };
+        let mut rng = Pcg32::seeded(2);
+        ds.shuffle_train(&mut rng);
+        for i in 0..30 {
+            let v = ds.train.x[(i, 0)] as usize;
+            assert_eq!(ds.train.y[i], v % 3, "label must follow its row");
+        }
+    }
+}

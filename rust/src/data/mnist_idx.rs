@@ -1,0 +1,182 @@
+//! Loader for the original MNIST IDX files (`train-images-idx3-ubyte` etc.).
+//!
+//! Used automatically when the `MNIST_DIR` environment variable points at a
+//! directory containing the four standard files; otherwise the synthetic
+//! corpus ([`super::synth`]) is used. Gzipped variants (`.gz`) are also
+//! accepted via `flate2`.
+
+use super::dataset::{Dataset, Split};
+use super::preprocess;
+use crate::config::ExperimentProfile;
+use crate::linalg::Mat;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// Errors from IDX parsing.
+#[derive(Debug)]
+pub enum IdxError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IdxError::Io(e) => write!(f, "idx io error: {e}"),
+            IdxError::Format(m) => write!(f, "idx format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IdxError {}
+
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        IdxError::Io(e)
+    }
+}
+
+fn open_maybe_gz(base: &Path) -> Result<Vec<u8>, IdxError> {
+    let gz = PathBuf::from(format!("{}.gz", base.display()));
+    let mut raw = Vec::new();
+    if base.exists() {
+        std::fs::File::open(base)?.read_to_end(&mut raw)?;
+    } else if gz.exists() {
+        let f = std::fs::File::open(&gz)?;
+        flate2::read::GzDecoder::new(f).read_to_end(&mut raw)?;
+    } else {
+        return Err(IdxError::Format(format!("{} (or .gz) not found", base.display())));
+    }
+    Ok(raw)
+}
+
+fn be_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_be_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// Parse an IDX3 (images) buffer into `n × (rows·cols)` rows scaled to [0,1].
+pub fn parse_images(raw: &[u8]) -> Result<Mat, IdxError> {
+    if raw.len() < 16 {
+        return Err(IdxError::Format("truncated header".into()));
+    }
+    if be_u32(raw, 0) != 0x0000_0803 {
+        return Err(IdxError::Format(format!("bad images magic {:#x}", be_u32(raw, 0))));
+    }
+    let n = be_u32(raw, 4) as usize;
+    let rows = be_u32(raw, 8) as usize;
+    let cols = be_u32(raw, 12) as usize;
+    let need = 16 + n * rows * cols;
+    if raw.len() < need {
+        return Err(IdxError::Format(format!("expected {need} bytes, got {}", raw.len())));
+    }
+    let data: Vec<f32> = raw[16..need].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(Mat::from_vec(n, rows * cols, data))
+}
+
+/// Parse an IDX1 (labels) buffer.
+pub fn parse_labels(raw: &[u8]) -> Result<Vec<usize>, IdxError> {
+    if raw.len() < 8 {
+        return Err(IdxError::Format("truncated header".into()));
+    }
+    if be_u32(raw, 0) != 0x0000_0801 {
+        return Err(IdxError::Format(format!("bad labels magic {:#x}", be_u32(raw, 0))));
+    }
+    let n = be_u32(raw, 4) as usize;
+    if raw.len() < 8 + n {
+        return Err(IdxError::Format("truncated label payload".into()));
+    }
+    Ok(raw[8..8 + n].iter().map(|&b| b as usize).collect())
+}
+
+/// Load real MNIST from `dir`, splitting train into train/valid per the
+/// profile's counts (paper §4.2: 50k/10k) and applying the §4.2 scaling.
+pub fn load_mnist(dir: &Path, profile: &ExperimentProfile) -> Result<Dataset, IdxError> {
+    let tr_x = parse_images(&open_maybe_gz(&dir.join("train-images-idx3-ubyte"))?)?;
+    let tr_y = parse_labels(&open_maybe_gz(&dir.join("train-labels-idx1-ubyte"))?)?;
+    let te_x = parse_images(&open_maybe_gz(&dir.join("t10k-images-idx3-ubyte"))?)?;
+    let te_y = parse_labels(&open_maybe_gz(&dir.join("t10k-labels-idx1-ubyte"))?)?;
+    if tr_x.rows() != tr_y.len() || te_x.rows() != te_y.len() {
+        return Err(IdxError::Format("image/label count mismatch".into()));
+    }
+    let n_train = profile.n_train.min(tr_x.rows());
+    let n_valid = profile.n_valid.min(tr_x.rows() - n_train);
+    let n_test = profile.n_test.min(te_x.rows());
+
+    let mut train = Split { x: tr_x.rows_slice(0, n_train), y: tr_y[..n_train].to_vec() };
+    let mut valid = Split {
+        x: tr_x.rows_slice(n_train, n_valid),
+        y: tr_y[n_train..n_train + n_valid].to_vec(),
+    };
+    let mut test = Split { x: te_x.rows_slice(0, n_test), y: te_y[..n_test].to_vec() };
+
+    let scale = preprocess::mnist_scale(&train.x);
+    preprocess::apply_mnist_scale(&mut train.x, scale);
+    preprocess::apply_mnist_scale(&mut valid.x, scale);
+    preprocess::apply_mnist_scale(&mut test.x, scale);
+    Ok(Dataset { name: "mnist".into(), train, valid, test, num_classes: 10 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_images(n: usize, rows: usize, cols: usize) -> Vec<u8> {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        raw.extend_from_slice(&(n as u32).to_be_bytes());
+        raw.extend_from_slice(&(rows as u32).to_be_bytes());
+        raw.extend_from_slice(&(cols as u32).to_be_bytes());
+        raw.extend((0..n * rows * cols).map(|i| (i % 256) as u8));
+        raw
+    }
+
+    fn fake_labels(n: usize) -> Vec<u8> {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        raw.extend_from_slice(&(n as u32).to_be_bytes());
+        raw.extend((0..n).map(|i| (i % 10) as u8));
+        raw
+    }
+
+    #[test]
+    fn parses_images() {
+        let m = parse_images(&fake_images(3, 4, 5)).unwrap();
+        assert_eq!(m.shape(), (3, 20));
+        assert!((m[(0, 1)] - 1.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parses_labels() {
+        let y = parse_labels(&fake_labels(12)).unwrap();
+        assert_eq!(y.len(), 12);
+        assert_eq!(y[11], 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_images(&fake_labels(4)).is_err());
+        assert!(parse_labels(&fake_images(1, 2, 2)).is_err());
+        let mut img = fake_images(2, 3, 3);
+        img.truncate(20);
+        assert!(parse_images(&img).is_err());
+    }
+
+    #[test]
+    fn load_mnist_end_to_end_from_fixture_dir() {
+        let dir = std::env::temp_dir().join("condcomp-idx-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train-images-idx3-ubyte"), fake_images(30, 28, 28)).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), fake_labels(30)).unwrap();
+        std::fs::write(dir.join("t10k-images-idx3-ubyte"), fake_images(10, 28, 28)).unwrap();
+        std::fs::write(dir.join("t10k-labels-idx1-ubyte"), fake_labels(10)).unwrap();
+        let mut profile = ExperimentProfile::mnist_tiny();
+        profile.n_train = 20;
+        profile.n_valid = 10;
+        profile.n_test = 10;
+        let ds = load_mnist(&dir, &profile).unwrap();
+        assert_eq!(ds.train.len(), 20);
+        assert_eq!(ds.valid.len(), 10);
+        assert_eq!(ds.test.len(), 10);
+        assert_eq!(ds.input_dim(), 784);
+    }
+}

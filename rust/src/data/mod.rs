@@ -1,0 +1,21 @@
+//! Data substrate: corpora, preprocessing, batching.
+//!
+//! The evaluation datasets (MNIST, SVHN) are unavailable in this offline
+//! container, so [`synth`] provides procedurally generated stand-ins that
+//! preserve the properties the paper's experiments exercise: a 10-class image
+//! manifold learnable by an MLP, with enough intra-class variation that
+//! trained weight matrices are redundant (decaying singular spectrum). Real
+//! MNIST IDX files are used instead when `MNIST_DIR` is set ([`mnist_idx`]).
+//!
+//! [`preprocess`] implements the paper's §4.1/§4.2 pipelines: RGB→YUV, local
+//! contrast normalization, histogram equalization, and per-feature
+//! standardization.
+
+pub mod dataset;
+pub mod synth;
+pub mod mnist_idx;
+pub mod preprocess;
+pub mod batcher;
+
+pub use batcher::Batcher;
+pub use dataset::{Dataset, Split};

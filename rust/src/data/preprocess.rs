@@ -1,0 +1,295 @@
+//! The paper's preprocessing pipelines (§4.1 SVHN, §4.2 MNIST).
+//!
+//! SVHN: RGB → YUV (keep Y) → local contrast normalization (Jarrett et al.
+//! 2009) → histogram equalization → per-feature standardization.
+//! MNIST: `x / sqrt(max feature variance) − 0.5`.
+
+use crate::linalg::Mat;
+
+/// BT.601 luma from an interleaved RGB buffer (`len = w*h*3`), output `w*h`.
+pub fn rgb_to_y(rgb: &[f32], w: usize, h: usize) -> Vec<f32> {
+    assert_eq!(rgb.len(), w * h * 3, "rgb buffer size mismatch");
+    let mut y = Vec::with_capacity(w * h);
+    for px in 0..w * h {
+        let r = rgb[px * 3];
+        let g = rgb[px * 3 + 1];
+        let b = rgb[px * 3 + 2];
+        y.push(0.299 * r + 0.587 * g + 0.114 * b);
+    }
+    y
+}
+
+/// Separable Gaussian blur with reflective borders.
+fn gaussian_blur(img: &[f32], w: usize, h: usize, sigma: f32, radius: usize) -> Vec<f32> {
+    assert_eq!(img.len(), w * h);
+    let mut kernel = Vec::with_capacity(2 * radius + 1);
+    let denom = 2.0 * sigma * sigma;
+    for i in -(radius as i32)..=(radius as i32) {
+        kernel.push((-((i * i) as f32) / denom).exp());
+    }
+    let sum: f32 = kernel.iter().sum();
+    for k in kernel.iter_mut() {
+        *k /= sum;
+    }
+
+    let reflect = |i: i32, n: usize| -> usize {
+        let n = n as i32;
+        let mut i = i;
+        if i < 0 {
+            i = -i - 1;
+        }
+        if i >= n {
+            i = 2 * n - 1 - i;
+        }
+        i.clamp(0, n - 1) as usize
+    };
+
+    // Horizontal pass.
+    let mut tmp = vec![0.0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0;
+            for (ki, &kv) in kernel.iter().enumerate() {
+                let sx = reflect(x as i32 + ki as i32 - radius as i32, w);
+                acc += kv * img[y * w + sx];
+            }
+            tmp[y * w + x] = acc;
+        }
+    }
+    // Vertical pass.
+    let mut out = vec![0.0f32; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0;
+            for (ki, &kv) in kernel.iter().enumerate() {
+                let sy = reflect(y as i32 + ki as i32 - radius as i32, h);
+                acc += kv * tmp[sy * w + x];
+            }
+            out[y * w + x] = acc;
+        }
+    }
+    out
+}
+
+/// Local contrast normalization: subtract a Gaussian-weighted local mean,
+/// then divide by the local standard deviation floored at its image mean
+/// (the Jarrett et al. divisive-normalization variant the paper cites).
+pub fn local_contrast_normalize(img: &[f32], w: usize, h: usize, sigma: f32, radius: usize) -> Vec<f32> {
+    let mean = gaussian_blur(img, w, h, sigma, radius);
+    let centered: Vec<f32> = img.iter().zip(&mean).map(|(&x, &m)| x - m).collect();
+    let sq: Vec<f32> = centered.iter().map(|&x| x * x).collect();
+    let var = gaussian_blur(&sq, w, h, sigma, radius);
+    let std: Vec<f32> = var.iter().map(|&v| v.max(0.0).sqrt()).collect();
+    let mean_std = std.iter().sum::<f32>() / std.len() as f32;
+    let floor = mean_std.max(1e-4);
+    centered
+        .iter()
+        .zip(&std)
+        .map(|(&c, &s)| c / s.max(floor))
+        .collect()
+}
+
+/// Histogram equalization over `bins` levels; output in `[0, 1]`.
+pub fn histogram_equalize(img: &[f32], bins: usize) -> Vec<f32> {
+    assert!(bins >= 2);
+    let lo = img.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = img.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !(hi > lo) {
+        return vec![0.5; img.len()];
+    }
+    let scale = (bins - 1) as f32 / (hi - lo);
+    let mut hist = vec![0usize; bins];
+    for &v in img {
+        hist[((v - lo) * scale) as usize] += 1;
+    }
+    // CDF normalized to [0, 1].
+    let mut cdf = vec![0.0f32; bins];
+    let mut acc = 0usize;
+    for (i, &c) in hist.iter().enumerate() {
+        acc += c;
+        cdf[i] = acc as f32 / img.len() as f32;
+    }
+    img.iter().map(|&v| cdf[((v - lo) * scale) as usize]).collect()
+}
+
+/// Per-feature standardizer (fit on train, apply anywhere) — §4.1's
+/// "subtracting out the mean and dividing by the square root of the variance
+/// for each variable".
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+impl Standardizer {
+    pub fn fit(x: &Mat) -> Standardizer {
+        let (n, d) = x.shape();
+        assert!(n > 0);
+        let mut mean = vec![0.0f64; d];
+        for i in 0..n {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                mean[j] += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0f64; d];
+        for i in 0..n {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                let dlt = v as f64 - mean[j];
+                var[j] += dlt * dlt;
+            }
+        }
+        let inv_std = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n as f64).sqrt();
+                if s < 1e-8 { 0.0 } else { (1.0 / s) as f32 }
+            })
+            .collect();
+        Standardizer { mean: mean.into_iter().map(|m| m as f32).collect(), inv_std }
+    }
+
+    pub fn apply(&self, x: &mut Mat) {
+        let d = x.cols();
+        assert_eq!(d, self.mean.len());
+        for i in 0..x.rows() {
+            let row = x.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] - self.mean[j]) * self.inv_std[j];
+            }
+        }
+    }
+}
+
+/// §4.2 MNIST scaling: the single scale factor `1/sqrt(max feature variance)`.
+pub fn mnist_scale(x: &Mat) -> f32 {
+    let (n, d) = x.shape();
+    let mut max_var = 0.0f64;
+    for j in 0..d {
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for i in 0..n {
+            let v = x[(i, j)] as f64;
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = (sq / n as f64 - mean * mean).max(0.0);
+        max_var = max_var.max(var);
+    }
+    if max_var <= 0.0 { 1.0 } else { (1.0 / max_var.sqrt()) as f32 }
+}
+
+/// Apply `x ← x·scale − 0.5` in place.
+pub fn apply_mnist_scale(x: &mut Mat, scale: f32) {
+    x.map_inplace(|v| v * scale - 0.5);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn luma_weights() {
+        // Pure white → 1; pure red → 0.299.
+        let y = rgb_to_y(&[1.0, 1.0, 1.0, 1.0, 0.0, 0.0], 2, 1);
+        assert!((y[0] - 1.0).abs() < 1e-6);
+        assert!((y[1] - 0.299).abs() < 1e-6);
+    }
+
+    #[test]
+    fn blur_preserves_constant_images() {
+        let img = vec![0.7f32; 16 * 16];
+        let out = gaussian_blur(&img, 16, 16, 2.0, 4);
+        for v in out {
+            assert!((v - 0.7).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn blur_reduces_variance() {
+        let mut rng = Pcg32::seeded(4);
+        let img: Vec<f32> = (0..24 * 24).map(|_| rng.uniform()).collect();
+        let out = gaussian_blur(&img, 24, 24, 2.0, 4);
+        let var = |xs: &[f32]| {
+            let m = xs.iter().sum::<f32>() / xs.len() as f32;
+            xs.iter().map(|&x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32
+        };
+        assert!(var(&out) < var(&img) * 0.5);
+    }
+
+    #[test]
+    fn lcn_centers_locally() {
+        let mut rng = Pcg32::seeded(8);
+        // Image with strong global gradient + texture.
+        let img: Vec<f32> = (0..32 * 32)
+            .map(|i| (i % 32) as f32 / 32.0 + rng.uniform() * 0.1)
+            .collect();
+        let out = local_contrast_normalize(&img, 32, 32, 2.0, 4);
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        assert!(mean.abs() < 0.05, "LCN output should be near zero-mean, got {mean}");
+    }
+
+    #[test]
+    fn histeq_flattens_distribution() {
+        let mut rng = Pcg32::seeded(2);
+        // Heavily skewed values.
+        let img: Vec<f32> = (0..4096).map(|_| rng.uniform().powi(4)).collect();
+        let out = histogram_equalize(&img, 256);
+        // Quartiles of the output should be near 0.25/0.5/0.75.
+        let mut sorted = out.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |f: f64| sorted[(f * (sorted.len() - 1) as f64) as usize];
+        assert!((q(0.5) - 0.5).abs() < 0.05, "median {}", q(0.5));
+        assert!((q(0.25) - 0.25).abs() < 0.05);
+    }
+
+    #[test]
+    fn histeq_constant_image() {
+        let out = histogram_equalize(&[0.3; 100], 64);
+        assert!(out.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_var() {
+        property("standardize normalizes train", 8, |rng| {
+            let n = rng.index(40) + 10;
+            let d = rng.index(8) + 2;
+            let mut x = Mat::from_fn(n, d, |_, j| rng.normal() * (j as f32 + 1.0) + j as f32);
+            let s = Standardizer::fit(&x);
+            s.apply(&mut x);
+            for j in 0..d {
+                let col = x.col(j);
+                let m = col.iter().sum::<f32>() / n as f32;
+                let v = col.iter().map(|&c| (c - m) * (c - m)).sum::<f32>() / n as f32;
+                assert!(m.abs() < 1e-3, "col {j} mean {m}");
+                assert!((v - 1.0).abs() < 1e-2, "col {j} var {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn standardizer_handles_constant_features() {
+        let mut x = Mat::from_fn(10, 2, |i, j| if j == 0 { 5.0 } else { i as f32 });
+        let s = Standardizer::fit(&x);
+        s.apply(&mut x);
+        for i in 0..10 {
+            assert_eq!(x[(i, 0)], 0.0, "constant feature maps to 0");
+        }
+    }
+
+    #[test]
+    fn mnist_scale_shifts_range() {
+        let mut rng = Pcg32::seeded(6);
+        let mut x = Mat::from_fn(50, 3, |_, _| rng.uniform());
+        let s = mnist_scale(&x);
+        assert!(s > 0.0);
+        apply_mnist_scale(&mut x, s);
+        let lo = x.as_slice().iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(lo >= -0.5 - 1e-6);
+    }
+}

@@ -1,0 +1,367 @@
+//! Procedural digit corpora — the offline stand-ins for MNIST and SVHN.
+//!
+//! Each digit class is a fixed set of strokes (polylines in the unit square).
+//! An example is rendered by applying a random affine perturbation (rotation,
+//! anisotropic scale, shear, translation), drawing the strokes with a random
+//! thickness via a signed-distance falloff, and adding pixel noise. The
+//! resulting manifold is (a) learnable by an MLP to a few % error, and
+//! (b) varied enough that trained weight matrices exhibit the decaying
+//! singular spectrum the paper's low-rank argument depends on (§2.1).
+//!
+//! The SVHN-like generator composites the digit over a colored background
+//! with distractor strokes and returns 32×32 RGB, which then flows through
+//! the paper's preprocessing pipeline ([`super::preprocess`]).
+
+use super::dataset::{Dataset, Split};
+use super::preprocess;
+use crate::config::{DatasetKind, ExperimentProfile};
+use crate::linalg::Mat;
+use crate::util::Pcg32;
+
+/// A stroke: sequence of points in the unit square (y grows downward).
+type Stroke = &'static [(f32, f32)];
+
+/// Stroke geometry for digits 0–9.
+const DIGIT_STROKES: [&[Stroke]; 10] = [
+    // 0: closed loop
+    &[&[(0.35, 0.20), (0.62, 0.18), (0.70, 0.45), (0.64, 0.80), (0.38, 0.82), (0.30, 0.50), (0.35, 0.20)]],
+    // 1: vertical bar with a flag
+    &[&[(0.40, 0.25), (0.52, 0.12), (0.52, 0.88)]],
+    // 2: top curve, diagonal, base
+    &[&[(0.32, 0.28), (0.45, 0.13), (0.63, 0.17), (0.68, 0.35), (0.50, 0.55), (0.32, 0.84), (0.70, 0.84)]],
+    // 3: two right-facing bumps
+    &[&[(0.33, 0.16), (0.62, 0.14), (0.66, 0.32), (0.46, 0.48)], &[(0.46, 0.48), (0.68, 0.56), (0.66, 0.80), (0.34, 0.86)]],
+    // 4: diagonal + crossbar + vertical
+    &[&[(0.60, 0.12), (0.30, 0.58), (0.78, 0.58)], &[(0.62, 0.34), (0.62, 0.88)]],
+    // 5: top bar, left drop, bowl
+    &[&[(0.68, 0.14), (0.36, 0.14), (0.34, 0.46), (0.58, 0.44), (0.68, 0.60), (0.64, 0.80), (0.34, 0.86)]],
+    // 6: sweep down into a lower loop
+    &[&[(0.64, 0.14), (0.42, 0.32), (0.34, 0.58), (0.38, 0.80), (0.58, 0.86), (0.66, 0.68), (0.56, 0.54), (0.36, 0.58)]],
+    // 7: top bar + steep diagonal
+    &[&[(0.30, 0.15), (0.70, 0.15), (0.46, 0.86)]],
+    // 8: stacked loops
+    &[
+        &[(0.50, 0.13), (0.65, 0.26), (0.50, 0.46), (0.35, 0.26), (0.50, 0.13)],
+        &[(0.50, 0.50), (0.68, 0.66), (0.50, 0.87), (0.32, 0.66), (0.50, 0.50)],
+    ],
+    // 9: upper loop + tail
+    &[&[(0.64, 0.30), (0.50, 0.12), (0.35, 0.28), (0.48, 0.46), (0.64, 0.30)], &[(0.64, 0.30), (0.58, 0.86)]],
+];
+
+/// Random affine perturbation parameters for one example.
+#[derive(Clone, Copy, Debug)]
+struct Jitter {
+    cos: f32,
+    sin: f32,
+    sx: f32,
+    sy: f32,
+    shear: f32,
+    dx: f32,
+    dy: f32,
+    thickness: f32,
+}
+
+impl Jitter {
+    fn sample(rng: &mut Pcg32, strength: f32) -> Jitter {
+        let angle = rng.uniform_in(-0.26, 0.26) * strength; // ±15° at strength 1
+        Jitter {
+            cos: angle.cos(),
+            sin: angle.sin(),
+            sx: 1.0 + rng.uniform_in(-0.18, 0.18) * strength,
+            sy: 1.0 + rng.uniform_in(-0.18, 0.18) * strength,
+            shear: rng.uniform_in(-0.18, 0.18) * strength,
+            dx: rng.uniform_in(-0.07, 0.07) * strength,
+            dy: rng.uniform_in(-0.07, 0.07) * strength,
+            thickness: 0.050 + rng.uniform_in(-0.012, 0.022) * strength,
+        }
+    }
+
+    /// Apply to a unit-square point, around the center (0.5, 0.5).
+    fn apply(&self, (x, y): (f32, f32)) -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (cx, cy) = (cx + self.shear * cy, cy);
+        let (cx, cy) = (cx * self.sx, cy * self.sy);
+        let (rx, ry) = (self.cos * cx - self.sin * cy, self.sin * cx + self.cos * cy);
+        (rx + 0.5 + self.dx, ry + 0.5 + self.dy)
+    }
+}
+
+/// Squared distance from point `p` to segment `ab`.
+fn dist2_to_segment(p: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (apx, apy) = (p.0 - a.0, p.1 - a.1);
+    let (abx, aby) = (b.0 - a.0, b.1 - a.1);
+    let ab2 = abx * abx + aby * aby;
+    let t = if ab2 <= 1e-12 { 0.0 } else { ((apx * abx + apy * aby) / ab2).clamp(0.0, 1.0) };
+    let (dx, dy) = (p.0 - (a.0 + t * abx), p.1 - (a.1 + t * aby));
+    dx * dx + dy * dy
+}
+
+/// Render digit `class` into a `side × side` grayscale buffer in `[0, 1]`.
+pub fn render_digit(class: usize, side: usize, rng: &mut Pcg32, strength: f32) -> Vec<f32> {
+    let jit = Jitter::sample(rng, strength);
+    // Pre-transform stroke points.
+    let strokes: Vec<Vec<(f32, f32)>> = DIGIT_STROKES[class]
+        .iter()
+        .map(|s| s.iter().map(|&p| jit.apply(p)).collect())
+        .collect();
+    let mut img = vec![0.0f32; side * side];
+    let inv = 1.0 / side as f32;
+    let th = jit.thickness;
+    let feather = 0.025f32;
+    for py in 0..side {
+        for px in 0..side {
+            let p = ((px as f32 + 0.5) * inv, (py as f32 + 0.5) * inv);
+            let mut d2min = f32::INFINITY;
+            for stroke in &strokes {
+                for w in stroke.windows(2) {
+                    d2min = d2min.min(dist2_to_segment(p, w[0], w[1]));
+                }
+            }
+            let d = d2min.sqrt();
+            // Smooth falloff from the stroke spine.
+            let v = if d <= th {
+                1.0
+            } else if d < th + feather {
+                1.0 - (d - th) / feather
+            } else {
+                0.0
+            };
+            img[py * side + px] = v;
+        }
+    }
+    img
+}
+
+/// Generate an MNIST-like split: 28×28 grayscale, mild noise, values [0,1].
+pub fn mnist_like_split(n: usize, rng: &mut Pcg32) -> Split {
+    let side = 28;
+    let d = side * side;
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = rng.index(10);
+        let mut img = render_digit(class, side, rng, 1.0);
+        for v in img.iter_mut() {
+            *v = (*v + rng.normal() * 0.05).clamp(0.0, 1.0);
+        }
+        x.row_mut(i).copy_from_slice(&img);
+        y.push(class);
+    }
+    Split { x, y }
+}
+
+/// Generate an SVHN-like split: 32×32 RGB composites reduced to the 1024-d
+/// preprocessed Y channel per the paper's §4.1 pipeline.
+pub fn svhn_like_split(n: usize, rng: &mut Pcg32) -> Split {
+    let side = 32;
+    let d = side * side;
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = rng.index(10);
+        let rgb = render_svhn_rgb(class, side, rng);
+        let yuv_y = preprocess::rgb_to_y(&rgb, side, side);
+        let lcn = preprocess::local_contrast_normalize(&yuv_y, side, side, 2.0, 4);
+        let eq = preprocess::histogram_equalize(&lcn, 256);
+        x.row_mut(i).copy_from_slice(&eq);
+        y.push(class);
+    }
+    Split { x, y }
+}
+
+/// Render one SVHN-like RGB image (flat `[r g b]` per pixel, values [0,1]).
+pub fn render_svhn_rgb(class: usize, side: usize, rng: &mut Pcg32) -> Vec<f32> {
+    // Background: linear gradient between two random colors.
+    let c0 = [rng.uniform(), rng.uniform(), rng.uniform()];
+    let c1 = [rng.uniform(), rng.uniform(), rng.uniform()];
+    let gx = rng.uniform_in(-1.0, 1.0);
+    let gy = rng.uniform_in(-1.0, 1.0);
+    let digit = render_digit(class, side, rng, 1.2);
+    // Digit color must contrast with the mean background.
+    let bg_mean: f32 = (c0.iter().sum::<f32>() + c1.iter().sum::<f32>()) / 6.0;
+    let fg = if bg_mean > 0.5 {
+        [rng.uniform_in(0.0, 0.3), rng.uniform_in(0.0, 0.3), rng.uniform_in(0.0, 0.3)]
+    } else {
+        [rng.uniform_in(0.7, 1.0), rng.uniform_in(0.7, 1.0), rng.uniform_in(0.7, 1.0)]
+    };
+    // Distractor: a partial neighboring digit at the border (SVHN crops often
+    // contain digit fragments).
+    let distractor = render_digit(rng.index(10), side, rng, 1.5);
+    let dshift = if rng.bernoulli(0.5) { side as i32 * 2 / 3 } else { -(side as i32 * 2 / 3) };
+
+    let mut out = vec![0.0f32; side * side * 3];
+    for py in 0..side {
+        for px in 0..side {
+            let t = ((px as f32 / side as f32 - 0.5) * gx + (py as f32 / side as f32 - 0.5) * gy + 0.5)
+                .clamp(0.0, 1.0);
+            let mut pix = [
+                c0[0] * (1.0 - t) + c1[0] * t,
+                c0[1] * (1.0 - t) + c1[1] * t,
+                c0[2] * (1.0 - t) + c1[2] * t,
+            ];
+            // Distractor fragment, faded.
+            let dx = px as i32 + dshift;
+            if (0..side as i32).contains(&dx) {
+                let a = distractor[py * side + dx as usize] * 0.5;
+                for (ch, p) in pix.iter_mut().enumerate() {
+                    *p = *p * (1.0 - a) + fg[ch] * a;
+                }
+            }
+            let a = digit[py * side + px];
+            for (ch, p) in pix.iter_mut().enumerate() {
+                *p = *p * (1.0 - a) + fg[ch] * a;
+                // Sensor noise.
+                *p = (*p + rng.normal() * 0.03).clamp(0.0, 1.0);
+            }
+            let base = (py * side + px) * 3;
+            out[base] = pix[0];
+            out[base + 1] = pix[1];
+            out[base + 2] = pix[2];
+        }
+    }
+    out
+}
+
+/// Build the full dataset for a profile: generates splits, then applies the
+/// paper's normalization (fit on train, applied everywhere).
+pub fn build_dataset(profile: &ExperimentProfile, seed: u64) -> Dataset {
+    match profile.dataset {
+        DatasetKind::Mnist => {
+            // Real MNIST when available, synthetic otherwise.
+            if let Ok(dir) = std::env::var("MNIST_DIR") {
+                if let Ok(ds) = super::mnist_idx::load_mnist(std::path::Path::new(&dir), profile) {
+                    return ds;
+                }
+            }
+            let mut rng = Pcg32::new(seed, 100);
+            let mut train = mnist_like_split(profile.n_train, &mut rng);
+            let mut valid = mnist_like_split(profile.n_valid, &mut rng);
+            let mut test = mnist_like_split(profile.n_test, &mut rng);
+            // Paper §4.2: x / sqrt(max feature variance) − 0.5.
+            let scale = preprocess::mnist_scale(&train.x);
+            preprocess::apply_mnist_scale(&mut train.x, scale);
+            preprocess::apply_mnist_scale(&mut valid.x, scale);
+            preprocess::apply_mnist_scale(&mut test.x, scale);
+            Dataset { name: "mnist-like".into(), train, valid, test, num_classes: 10 }
+        }
+        DatasetKind::Svhn => {
+            let mut rng = Pcg32::new(seed, 200);
+            let mut train = svhn_like_split(profile.n_train, &mut rng);
+            let mut valid = svhn_like_split(profile.n_valid, &mut rng);
+            let mut test = svhn_like_split(profile.n_test, &mut rng);
+            // Paper §4.1: per-feature standardization fit on train.
+            let stats = preprocess::Standardizer::fit(&train.x);
+            stats.apply(&mut train.x);
+            stats.apply(&mut valid.x);
+            stats.apply(&mut test.x);
+            Dataset { name: "svhn-like".into(), train, valid, test, num_classes: 10 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn digits_render_nonempty_and_distinct() {
+        let mut rng = Pcg32::seeded(1);
+        let mut means = Vec::new();
+        for class in 0..10 {
+            let img = render_digit(class, 28, &mut rng, 0.0);
+            let on = img.iter().filter(|&&v| v > 0.5).count();
+            assert!(on > 20, "class {class} renders only {on} lit pixels");
+            assert!(on < 28 * 28 / 2, "class {class} renders too many pixels");
+            means.push(img);
+        }
+        // Unjittered classes must be pairwise distinguishable.
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let diff: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(diff > 10.0, "classes {a} and {b} overlap (diff {diff})");
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_varies_but_class_is_stable() {
+        let mut rng = Pcg32::seeded(3);
+        let base = render_digit(7, 28, &mut rng, 0.0);
+        let jit = render_digit(7, 28, &mut rng, 1.0);
+        let diff: f32 = base.iter().zip(&jit).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0, "jitter should move pixels");
+        // The jittered 7 must still be closer to the clean 7 than to a clean 0
+        // on average across draws (weak but meaningful invariant).
+        let clean0 = render_digit(0, 28, &mut rng, 0.0);
+        let mut closer = 0;
+        for _ in 0..20 {
+            let j = render_digit(7, 28, &mut rng, 1.0);
+            let d7: f32 = base.iter().zip(&j).map(|(x, y)| (x - y).abs()).sum();
+            let d0: f32 = clean0.iter().zip(&j).map(|(x, y)| (x - y).abs()).sum();
+            if d7 < d0 {
+                closer += 1;
+            }
+        }
+        assert!(closer >= 15, "jittered 7 close to clean 7 only {closer}/20 times");
+    }
+
+    #[test]
+    fn mnist_split_shapes_and_ranges() {
+        let mut rng = Pcg32::seeded(5);
+        let s = mnist_like_split(32, &mut rng);
+        assert_eq!(s.x.shape(), (32, 784));
+        assert_eq!(s.y.len(), 32);
+        assert!(s.y.iter().all(|&y| y < 10));
+        for v in s.x.as_slice() {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn svhn_split_shapes() {
+        let mut rng = Pcg32::seeded(6);
+        let s = svhn_like_split(8, &mut rng);
+        assert_eq!(s.x.shape(), (8, 1024));
+        assert!(s.y.iter().all(|&y| y < 10));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        property("same seed same corpus", 4, |rng| {
+            let seed = rng.next_u64();
+            let a = mnist_like_split(4, &mut Pcg32::new(seed, 9));
+            let b = mnist_like_split(4, &mut Pcg32::new(seed, 9));
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.x, b.x);
+        });
+    }
+
+    #[test]
+    fn build_dataset_standardizes() {
+        let mut profile = ExperimentProfile::mnist_tiny();
+        profile.n_train = 64;
+        profile.n_valid = 16;
+        profile.n_test = 16;
+        let ds = build_dataset(&profile, 42);
+        assert_eq!(ds.train.len(), 64);
+        assert_eq!(ds.input_dim(), 784);
+        // After MNIST scaling, values live in roughly [-0.5, 0.5+].
+        let lo = ds.train.x.as_slice().iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(lo >= -0.51, "min {lo}");
+    }
+
+    #[test]
+    fn svhn_rgb_in_range() {
+        let mut rng = Pcg32::seeded(11);
+        let img = render_svhn_rgb(3, 32, &mut rng);
+        assert_eq!(img.len(), 32 * 32 * 3);
+        for v in &img {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+}

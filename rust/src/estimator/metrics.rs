@@ -1,0 +1,147 @@
+//! Quality metrics for sign estimation — the quantities behind Figures 2, 4
+//! and 6 of the paper.
+
+use super::signest::SignEstimator;
+use crate::linalg::{matmul, Mat};
+use crate::nn::mlp::add_bias;
+
+/// Confusion-style breakdown of one estimator against the exact layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SignQuality {
+    /// P(predicted off | actually on): lost activations — these change the
+    /// network output and drive the accuracy cost.
+    pub false_negative_rate: f64,
+    /// P(predicted on | actually off): wasted dot products — these only cost
+    /// compute, not accuracy.
+    pub false_positive_rate: f64,
+    /// Overall sign disagreement.
+    pub sign_error: f64,
+    /// True activation density α (fraction of positive pre-activations).
+    pub true_density: f64,
+    /// Predicted density α̂ (fraction of units the estimator computes).
+    pub predicted_density: f64,
+    /// ‖σ(z) − σ(z)·S‖_F / ‖σ(z)‖_F — the *estimator path* error of Fig. 2.
+    pub masked_rel_error: f64,
+    /// ‖σ(z) − σ(ẑ)‖_F / ‖σ(z)‖_F where ẑ = a·U·V + b — the *low-rank value*
+    /// error of Fig. 2 (the strawman the paper compares against).
+    pub lowrank_rel_error: f64,
+}
+
+/// Evaluate an estimator against the exact layer `(w, b)` on inputs `a`.
+pub fn evaluate(est: &SignEstimator, a: &Mat, w: &Mat, b: &[f32]) -> SignQuality {
+    let mut z = matmul(a, w);
+    add_bias(&mut z, b);
+    let zhat = est.estimate_preact(a);
+    let mask = est.mask(a);
+
+    let n = z.as_slice().len();
+    let (mut tp, mut fp, mut fn_, mut tn) = (0usize, 0usize, 0usize, 0usize);
+    let mut lost_sq = 0.0f64;
+    let mut lowrank_sq = 0.0f64;
+    let mut act_sq = 0.0f64;
+    for i in 0..n {
+        let zv = z.as_slice()[i];
+        let on = zv > 0.0;
+        let pred_on = mask.as_slice()[i] > 0.0;
+        match (on, pred_on) {
+            (true, true) => tp += 1,
+            (true, false) => fn_ += 1,
+            (false, true) => fp += 1,
+            (false, false) => tn += 1,
+        }
+        let act = zv.max(0.0) as f64;
+        act_sq += act * act;
+        // σ(z)·S keeps act where predicted on, zero otherwise.
+        let kept = if pred_on { act } else { 0.0 };
+        lost_sq += (act - kept) * (act - kept);
+        let lr_act = zhat.as_slice()[i].max(0.0) as f64;
+        lowrank_sq += (act - lr_act) * (act - lr_act);
+    }
+    let denom = act_sq.sqrt().max(1e-12);
+    SignQuality {
+        false_negative_rate: if tp + fn_ > 0 { fn_ as f64 / (tp + fn_) as f64 } else { 0.0 },
+        false_positive_rate: if fp + tn > 0 { fp as f64 / (fp + tn) as f64 } else { 0.0 },
+        sign_error: (fn_ + fp) as f64 / n as f64,
+        true_density: (tp + fn_) as f64 / n as f64,
+        predicted_density: (tp + fp) as f64 / n as f64,
+        masked_rel_error: lost_sq.sqrt() / denom,
+        lowrank_rel_error: lowrank_sq.sqrt() / denom,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn setup() -> (Mat, Mat, Vec<f32>) {
+        let mut rng = Pcg32::seeded(1);
+        let a = Mat::randn(50, 12, 1.0, &mut rng);
+        let w = Mat::randn(12, 16, 0.5, &mut rng);
+        let b = vec![0.1; 16];
+        (a, w, b)
+    }
+
+    #[test]
+    fn full_rank_estimator_is_perfect() {
+        let (a, w, b) = setup();
+        let est = SignEstimator::fit(&w, &b, 12, 0.0);
+        let q = evaluate(&est, &a, &w, &b);
+        assert!(q.sign_error < 1e-3, "sign error {}", q.sign_error);
+        assert!(q.masked_rel_error < 1e-3);
+        assert!(q.lowrank_rel_error < 1e-3);
+        assert!((q.true_density - q.predicted_density).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fig2_shape_masked_error_beats_lowrank_error() {
+        // The paper's Figure 2 claim: at moderate rank, the sign-masked path
+        // has much lower error than using the low-rank *value*.
+        let (a, w, b) = setup();
+        let mut held = 0;
+        for rank in [3, 4, 6, 8] {
+            let est = SignEstimator::fit(&w, &b, rank, 0.0);
+            let q = evaluate(&est, &a, &w, &b);
+            if q.masked_rel_error < q.lowrank_rel_error {
+                held += 1;
+            }
+        }
+        assert!(held >= 3, "masked error should beat low-rank value error at most ranks");
+    }
+
+    #[test]
+    fn error_monotone_in_rank() {
+        let (a, w, b) = setup();
+        let e_lo = evaluate(&SignEstimator::fit(&w, &b, 2, 0.0), &a, &w, &b);
+        let e_hi = evaluate(&SignEstimator::fit(&w, &b, 10, 0.0), &a, &w, &b);
+        assert!(e_hi.sign_error <= e_lo.sign_error + 1e-9);
+        assert!(e_hi.masked_rel_error <= e_lo.masked_rel_error + 1e-9);
+    }
+
+    #[test]
+    fn decision_bias_trades_fn_for_fp() {
+        let (a, w, b) = setup();
+        let neutral = evaluate(&SignEstimator::fit(&w, &b, 6, 0.0), &a, &w, &b);
+        let aggressive = evaluate(&SignEstimator::fit(&w, &b, 6, 0.3), &a, &w, &b);
+        let lenient = evaluate(&SignEstimator::fit(&w, &b, 6, -0.3), &a, &w, &b);
+        assert!(aggressive.false_negative_rate >= neutral.false_negative_rate);
+        assert!(aggressive.predicted_density <= neutral.predicted_density);
+        assert!(lenient.false_negative_rate <= neutral.false_negative_rate);
+        assert!(lenient.predicted_density >= neutral.predicted_density);
+    }
+
+    #[test]
+    fn densities_are_probabilities() {
+        let (a, w, b) = setup();
+        let q = evaluate(&SignEstimator::fit(&w, &b, 4, 0.0), &a, &w, &b);
+        for v in [
+            q.false_negative_rate,
+            q.false_positive_rate,
+            q.sign_error,
+            q.true_density,
+            q.predicted_density,
+        ] {
+            assert!((0.0..=1.0).contains(&v), "{v} out of [0,1]");
+        }
+    }
+}

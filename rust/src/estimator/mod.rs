@@ -1,0 +1,20 @@
+//! The paper's contribution: low-rank activation-sign estimators (§3).
+//!
+//! For each hidden layer `l` with weights `W_l` and bias `b_l`, maintain a
+//! rank-`k` factorization `Ŵ_l = U_l·V_l` (from truncated SVD, §3.2). Before
+//! computing the layer, estimate the pre-nonlinearity sign from the cheap
+//! product `a_l·U_l·V_l + b_l`; units predicted negative are skipped — their
+//! ReLU output would be zero anyway (Eq. 4–5).
+//!
+//! - [`signest`] — per-layer estimator + the set covering a whole network,
+//!   implementing the trainer's gating hooks.
+//! - [`refresh`] — refresh policies: once per epoch (the paper), every N
+//!   minibatches, and randomized/adaptive variants (§5 future work).
+//! - [`metrics`] — sign-estimation quality measures (drives Figs. 2, 4, 6).
+
+pub mod signest;
+pub mod refresh;
+pub mod metrics;
+
+pub use refresh::RefreshPolicy;
+pub use signest::{SignEstimator, SignEstimatorSet};

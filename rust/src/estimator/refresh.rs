@@ -1,0 +1,61 @@
+//! When to recompute the estimator factorization from the live weights.
+//!
+//! The paper recomputes the SVD "once per epoch" (§3.5) and notes the
+//! within-epoch drift this causes (Fig. 6). `EveryNBatches` and the
+//! randomized factorization path implement the §5 future-work direction of
+//! cheaper, more frequent refreshes.
+
+/// Refresh cadence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshPolicy {
+    /// Recompute at the first minibatch of every epoch (the paper's choice).
+    OncePerEpoch,
+    /// Recompute every `n` minibatches (counted across epochs).
+    EveryNBatches(usize),
+    /// Never refresh after the initial factorization (ablation baseline).
+    Never,
+}
+
+impl RefreshPolicy {
+    /// Should a refresh fire on this (epoch, batch) step? `steps_since` is
+    /// the number of minibatches since the last refresh (including this one
+    /// being the first → 0 means "just refreshed").
+    pub fn due(&self, batch_index: usize, steps_since_refresh: usize, ever_refreshed: bool) -> bool {
+        match self {
+            RefreshPolicy::OncePerEpoch => batch_index == 0,
+            RefreshPolicy::EveryNBatches(n) => {
+                !ever_refreshed || steps_since_refresh >= *n
+            }
+            RefreshPolicy::Never => !ever_refreshed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn once_per_epoch_fires_on_batch_zero() {
+        let p = RefreshPolicy::OncePerEpoch;
+        assert!(p.due(0, 100, true));
+        assert!(!p.due(1, 100, true));
+        assert!(!p.due(57, 3, true));
+    }
+
+    #[test]
+    fn every_n_counts_steps() {
+        let p = RefreshPolicy::EveryNBatches(5);
+        assert!(p.due(3, 0, false), "first ever refresh fires immediately");
+        assert!(!p.due(4, 3, true));
+        assert!(p.due(9, 5, true));
+        assert!(p.due(2, 8, true));
+    }
+
+    #[test]
+    fn never_fires_once() {
+        let p = RefreshPolicy::Never;
+        assert!(p.due(0, 0, false));
+        assert!(!p.due(0, 1000, true));
+    }
+}

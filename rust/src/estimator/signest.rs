@@ -1,0 +1,363 @@
+//! Per-layer sign estimators and the network-wide estimator set.
+
+use super::refresh::RefreshPolicy;
+use crate::config::EstimatorConfig;
+use crate::linalg::{LowRank, Mat, Svd};
+use crate::nn::mlp::{ActivationGater, Mlp};
+use crate::nn::trainer::TrainGater;
+use crate::util::Pcg32;
+
+/// A single layer's activation-sign estimator: `S = [a·U·V + b_layer − bias > 0]`.
+///
+/// The layer bias is carried alongside the factors (it costs nothing to add
+/// and the layer's real pre-activation is `a·W + b`). `bias` is the paper's
+/// §5 sparsity-tuning offset: raising it makes the estimator more aggressive
+/// (more units predicted off).
+#[derive(Clone, Debug)]
+pub struct SignEstimator {
+    pub factors: LowRank,
+    pub layer_bias: Vec<f32>,
+    pub bias: f32,
+}
+
+impl SignEstimator {
+    /// Fit from a weight matrix by exact truncated SVD (paper §3.2).
+    pub fn fit(w: &Mat, layer_bias: &[f32], rank: usize, bias: f32) -> SignEstimator {
+        SignEstimator {
+            factors: LowRank::truncate(w, rank),
+            layer_bias: layer_bias.to_vec(),
+            bias,
+        }
+    }
+
+    /// Fit with the randomized range-finder (§5 online-refresh extension).
+    pub fn fit_randomized(
+        w: &Mat,
+        layer_bias: &[f32],
+        rank: usize,
+        bias: f32,
+        rng: &mut Pcg32,
+    ) -> SignEstimator {
+        SignEstimator {
+            factors: LowRank::randomized(w, rank, 8, rng),
+            layer_bias: layer_bias.to_vec(),
+            bias,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.factors.rank()
+    }
+
+    /// The estimated pre-activation `a·U·V + b_layer`.
+    pub fn estimate_preact(&self, input: &Mat) -> Mat {
+        let mut z = self.factors.apply(input);
+        crate::nn::mlp::add_bias(&mut z, &self.layer_bias);
+        z
+    }
+
+    /// The paper's `S` matrix (Eq. 5): 1 where the estimated pre-activation
+    /// exceeds the decision bias, else 0.
+    pub fn mask(&self, input: &Mat) -> Mat {
+        let mut z = self.estimate_preact(input);
+        let b = self.bias;
+        z.map_inplace(|v| if v - b > 0.0 { 1.0 } else { 0.0 });
+        z
+    }
+
+    /// Fraction of units predicted live for this input (the achieved α̂).
+    pub fn predicted_density(&self, input: &Mat) -> f32 {
+        self.mask(input).density()
+    }
+}
+
+/// Estimators for every hidden layer of a network, plus refresh policy state.
+///
+/// Implements [`ActivationGater`] (mask per layer during forward) and
+/// [`TrainGater`] (policy-driven refresh from the live weights).
+pub struct SignEstimatorSet {
+    /// One estimator per hidden layer (layer index = weight-matrix index;
+    /// the output layer is never estimated, §4.1).
+    pub layers: Vec<SignEstimator>,
+    pub cfg: EstimatorConfig,
+    policy: RefreshPolicy,
+    rng: Pcg32,
+    steps_since_refresh: usize,
+    ever_refreshed: bool,
+    /// Total number of refreshes performed (exposed for tests/metrics).
+    pub refresh_count: usize,
+}
+
+impl SignEstimatorSet {
+    /// Build from a network and a config; performs the initial fit.
+    pub fn fit(net: &Mlp, cfg: &EstimatorConfig, seed: u64) -> SignEstimatorSet {
+        let policy = match cfg.refresh_every {
+            Some(n) => RefreshPolicy::EveryNBatches(n),
+            None => RefreshPolicy::OncePerEpoch,
+        };
+        let mut set = SignEstimatorSet {
+            layers: Vec::new(),
+            cfg: cfg.clone(),
+            policy,
+            rng: Pcg32::new(seed, 0xE57),
+            steps_since_refresh: 0,
+            ever_refreshed: false,
+            refresh_count: 0,
+        };
+        set.refresh(net);
+        set
+    }
+
+    /// Resolve the rank for hidden layer `l` (fixed list or adaptive).
+    fn rank_for(&mut self, net: &Mlp, l: usize) -> usize {
+        if let Some(energy) = self.cfg.adaptive_energy {
+            let svd = Svd::compute(&net.weights[l]);
+            return svd.rank_for_energy(energy).max(1);
+        }
+        self.cfg.ranks.get(l).copied().unwrap_or(1)
+    }
+
+    /// Recompute every layer's factorization from the live weights.
+    pub fn refresh(&mut self, net: &Mlp) {
+        let hidden_layers = net.depth() - 1;
+        if !self.cfg.is_control() && self.cfg.adaptive_energy.is_none() {
+            assert_eq!(
+                self.cfg.ranks.len(),
+                hidden_layers,
+                "estimator config has {} ranks but the network has {} hidden layers",
+                self.cfg.ranks.len(),
+                hidden_layers
+            );
+        }
+        let mut layers = Vec::with_capacity(hidden_layers);
+        for l in 0..hidden_layers {
+            let rank = self.rank_for(net, l);
+            let est = if self.cfg.randomized {
+                SignEstimator::fit_randomized(
+                    &net.weights[l],
+                    &net.biases[l],
+                    rank,
+                    self.cfg.bias,
+                    &mut self.rng,
+                )
+            } else {
+                SignEstimator::fit(&net.weights[l], &net.biases[l], rank, self.cfg.bias)
+            };
+            layers.push(est);
+        }
+        self.layers = layers;
+        self.steps_since_refresh = 0;
+        self.ever_refreshed = true;
+        self.refresh_count += 1;
+    }
+
+    /// Effective ranks per layer (after clamping/adaptive selection).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.layers.iter().map(|e| e.rank()).collect()
+    }
+}
+
+impl ActivationGater for SignEstimatorSet {
+    fn gate(&self, layer: usize, input: &Mat) -> Option<Mat> {
+        self.layers.get(layer).map(|est| est.mask(input))
+    }
+}
+
+impl TrainGater for SignEstimatorSet {
+    fn maybe_refresh(&mut self, net: &Mlp, _epoch: usize, batch_index: usize) {
+        if self
+            .policy
+            .due(batch_index, self.steps_since_refresh, self.ever_refreshed)
+        {
+            self.refresh(net);
+        }
+        self.steps_since_refresh += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+    use crate::nn::mlp::NoGater;
+
+    fn net(rng: &mut Pcg32) -> Mlp {
+        Mlp::init(
+            &NetConfig { layers: vec![10, 14, 12, 4], weight_sigma: 0.4, bias_init: 0.1 },
+            rng,
+        )
+    }
+
+    #[test]
+    fn full_rank_mask_matches_exact_sign() {
+        let mut rng = Pcg32::seeded(1);
+        let n = net(&mut rng);
+        let x = Mat::randn(6, 10, 1.0, &mut rng);
+        // Full-rank estimator for layer 0: UV == W exactly.
+        let est = SignEstimator::fit(&n.weights[0], &n.biases[0], 10, 0.0);
+        let mask = est.mask(&x);
+        // Exact pre-activation sign:
+        let mut z = crate::linalg::matmul(&x, &n.weights[0]);
+        crate::nn::mlp::add_bias(&mut z, &n.biases[0]);
+        for i in 0..6 {
+            for j in 0..14 {
+                let want = if z[(i, j)] > 0.0 { 1.0 } else { 0.0 };
+                // Tolerate boundary flips where |z| is tiny (f32 SVD noise).
+                if z[(i, j)].abs() > 1e-4 {
+                    assert_eq!(mask[(i, j)], want, "mask mismatch at ({i},{j}) z={}", z[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sign_error_decreases_with_rank() {
+        let mut rng = Pcg32::seeded(2);
+        let n = net(&mut rng);
+        let x = Mat::randn(40, 10, 1.0, &mut rng);
+        let mut z = crate::linalg::matmul(&x, &n.weights[0]);
+        crate::nn::mlp::add_bias(&mut z, &n.biases[0]);
+        let exact: Vec<f32> = z.as_slice().iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect();
+        let mut errs = Vec::new();
+        for rank in [1, 2, 4, 8, 10] {
+            let est = SignEstimator::fit(&n.weights[0], &n.biases[0], rank, 0.0);
+            let mask = est.mask(&x);
+            let err = mask
+                .as_slice()
+                .iter()
+                .zip(&exact)
+                .filter(|(a, b)| *a != *b)
+                .count() as f32
+                / exact.len() as f32;
+            errs.push(err);
+        }
+        assert!(errs[4] <= 0.02, "full-rank sign error {}", errs[4]);
+        assert!(errs[0] >= errs[4], "rank-1 should be no better than full rank");
+    }
+
+    #[test]
+    fn bias_increases_sparsity() {
+        let mut rng = Pcg32::seeded(3);
+        let n = net(&mut rng);
+        let x = Mat::randn(20, 10, 1.0, &mut rng);
+        let d0 = SignEstimator::fit(&n.weights[0], &n.biases[0], 6, 0.0).predicted_density(&x);
+        let d1 = SignEstimator::fit(&n.weights[0], &n.biases[0], 6, 0.5).predicted_density(&x);
+        assert!(d1 <= d0, "higher decision bias must not increase density ({d0} -> {d1})");
+    }
+
+    #[test]
+    fn set_covers_hidden_layers_only() {
+        let mut rng = Pcg32::seeded(4);
+        let n = net(&mut rng);
+        let set = SignEstimatorSet::fit(&n, &EstimatorConfig::fixed(&[5, 4]), 9);
+        assert_eq!(set.layers.len(), 2);
+        assert_eq!(set.ranks(), vec![5, 4]);
+        let x = Mat::randn(3, 10, 1.0, &mut rng);
+        assert!(set.gate(0, &x).is_some());
+        assert!(set.gate(2, &x).is_none(), "output layer is never gated");
+    }
+
+    #[test]
+    #[should_panic(expected = "ranks")]
+    fn wrong_rank_count_panics() {
+        let mut rng = Pcg32::seeded(5);
+        let n = net(&mut rng);
+        let _ = SignEstimatorSet::fit(&n, &EstimatorConfig::fixed(&[5]), 9);
+    }
+
+    #[test]
+    fn refresh_policy_once_per_epoch() {
+        let mut rng = Pcg32::seeded(6);
+        let n = net(&mut rng);
+        let mut set = SignEstimatorSet::fit(&n, &EstimatorConfig::fixed(&[5, 4]), 9);
+        assert_eq!(set.refresh_count, 1);
+        set.maybe_refresh(&n, 0, 0); // epoch 0 batch 0 → fires
+        assert_eq!(set.refresh_count, 2);
+        set.maybe_refresh(&n, 0, 1);
+        set.maybe_refresh(&n, 0, 2);
+        assert_eq!(set.refresh_count, 2);
+        set.maybe_refresh(&n, 1, 0); // next epoch → fires
+        assert_eq!(set.refresh_count, 3);
+    }
+
+    #[test]
+    fn refresh_tracks_weight_changes() {
+        let mut rng = Pcg32::seeded(7);
+        let mut n = net(&mut rng);
+        let mut set = SignEstimatorSet::fit(&n, &EstimatorConfig::fixed(&[14, 12]), 9);
+        let x = Mat::randn(5, 10, 1.0, &mut rng);
+        let before = set.gate(0, &x).unwrap();
+        // Mutate weights drastically; stale estimator must differ from fresh.
+        for w in n.weights[0].as_mut_slice() {
+            *w = -*w;
+        }
+        let stale = set.gate(0, &x).unwrap();
+        assert_eq!(before, stale, "no refresh yet → same mask");
+        set.refresh(&n);
+        let fresh = set.gate(0, &x).unwrap();
+        // Sign flip of W flips nearly every decision (modulo the bias term).
+        let changed = fresh
+            .as_slice()
+            .iter()
+            .zip(stale.as_slice())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(changed > 0, "refresh must change the mask after weights flip");
+    }
+
+    #[test]
+    fn adaptive_rank_selects_small_rank_for_lowrank_weights() {
+        let mut rng = Pcg32::seeded(8);
+        // Build a rank-2 weight matrix.
+        let u = Mat::randn(10, 2, 1.0, &mut rng);
+        let v = Mat::randn(2, 14, 1.0, &mut rng);
+        let mut n = net(&mut rng);
+        n.weights[0] = crate::linalg::matmul(&u, &v);
+        let cfg = EstimatorConfig {
+            adaptive_energy: Some(0.999),
+            ..EstimatorConfig::control()
+        };
+        let set = SignEstimatorSet::fit(&n, &cfg, 3);
+        assert!(set.ranks()[0] <= 3, "adaptive rank {} should be ≈2", set.ranks()[0]);
+    }
+
+    #[test]
+    fn randomized_fit_produces_usable_masks() {
+        let mut rng = Pcg32::seeded(9);
+        let n = net(&mut rng);
+        let x = Mat::randn(30, 10, 1.0, &mut rng);
+        let exact = SignEstimator::fit(&n.weights[0], &n.biases[0], 8, 0.0);
+        let cfgd = EstimatorConfig {
+            randomized: true,
+            ..EstimatorConfig::fixed(&[8, 8])
+        };
+        let set = SignEstimatorSet::fit(&n, &cfgd, 10);
+        let m_exact = exact.mask(&x);
+        let m_rand = set.gate(0, &x).unwrap();
+        let agree = m_exact
+            .as_slice()
+            .iter()
+            .zip(m_rand.as_slice())
+            .filter(|(a, b)| a == b)
+            .count() as f32
+            / m_exact.as_slice().len() as f32;
+        assert!(agree > 0.9, "randomized mask agrees only {agree}");
+    }
+
+    #[test]
+    fn gating_composes_with_forward() {
+        let mut rng = Pcg32::seeded(10);
+        let n = net(&mut rng);
+        let x = Mat::randn(4, 10, 1.0, &mut rng);
+        let set = SignEstimatorSet::fit(&n, &EstimatorConfig::fixed(&[14, 12]), 9);
+        // Full-rank estimator gating changes nothing except true negatives →
+        // logits must match the ungated forward (masked units were zero).
+        let gated = n.logits(&x, &set);
+        let dense = n.logits(&x, &NoGater);
+        assert!(
+            gated.max_abs_diff(&dense) < 1e-3,
+            "full-rank gating must be output-preserving, diff {}",
+            gated.max_abs_diff(&dense)
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! Shared machinery for the experiment drivers.
+
+use crate::config::{EstimatorConfig, ExperimentProfile};
+use crate::data::synth::build_dataset;
+use crate::data::Dataset;
+use crate::estimator::SignEstimatorSet;
+use crate::nn::mlp::NoGater;
+use crate::nn::trainer::{evaluate_error, EpochStats, TrainGater, Trainer};
+use crate::nn::Mlp;
+use crate::util::Pcg32;
+
+/// Outcome of one training run.
+pub struct RunOutcome {
+    pub label: String,
+    pub history: Vec<EpochStats>,
+    pub test_error: f32,
+    pub net: Mlp,
+}
+
+/// Build the profile's dataset (deterministic in the profile seed).
+pub fn dataset_for(profile: &ExperimentProfile) -> Dataset {
+    build_dataset(profile, profile.train.seed ^ 0xDA7A)
+}
+
+/// Train one network under an estimator config (or control when the config
+/// is `control()`), evaluating on the profile's validation split per epoch
+/// and on the test split at the end.
+pub fn train_one(profile: &ExperimentProfile, est_cfg: &EstimatorConfig, quiet: bool) -> RunOutcome {
+    let mut data = dataset_for(profile);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    let mut trainer = Trainer::new(profile.train.clone());
+    trainer.options.quiet = quiet;
+
+    let (history, test_error) = if est_cfg.is_control() {
+        let mut gater = NoGater;
+        let h = trainer.train(&mut net, &mut data, &mut gater);
+        let e = evaluate_error(&net, &NoGater, &data.test);
+        (h, e)
+    } else {
+        let mut gater = SignEstimatorSet::fit(&net, est_cfg, profile.train.seed ^ 0x5E7);
+        let h = trainer.train(&mut net, &mut data, &mut gater);
+        // Final refresh so the test-time estimator matches final weights.
+        gater.refresh(&net);
+        let e = evaluate_error(&net, &gater, &data.test);
+        (h, e)
+    };
+    RunOutcome { label: est_cfg.label(), history, test_error, net }
+}
+
+/// The paper's estimator configurations, scaled to the active profile.
+///
+/// Paper rank lists are defined against the paper architectures; on scaled
+/// profiles each rank is shrunk proportionally to the layer widths
+/// ([`ExperimentProfile::scale_ranks`]), preserving the sweep's *shape*.
+pub fn scaled_configs(
+    profile: &ExperimentProfile,
+    paper_profile: &ExperimentProfile,
+    paper_rank_lists: &[&[usize]],
+) -> Vec<EstimatorConfig> {
+    let mut out = vec![EstimatorConfig::control()];
+    for ranks in paper_rank_lists {
+        let scaled = if profile.net.layers == paper_profile.net.layers {
+            ranks.to_vec()
+        } else {
+            profile.scale_ranks(ranks, paper_profile)
+        };
+        out.push(EstimatorConfig::fixed(&scaled));
+    }
+    out
+}
+
+/// A gater that wraps a `SignEstimatorSet` so drivers can access refresh
+/// internals while the trainer drives the policy.
+pub struct ObservedGater<'a> {
+    pub inner: &'a mut SignEstimatorSet,
+}
+
+impl crate::nn::mlp::ActivationGater for ObservedGater<'_> {
+    fn gate(&self, layer: usize, input: &crate::linalg::Mat) -> Option<crate::linalg::Mat> {
+        self.inner.gate(layer, input)
+    }
+}
+
+impl TrainGater for ObservedGater<'_> {
+    fn maybe_refresh(&mut self, net: &Mlp, epoch: usize, batch_index: usize) {
+        self.inner.maybe_refresh(net, epoch, batch_index);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExperimentProfile {
+        let mut p = ExperimentProfile::mnist_tiny();
+        p.net.layers = vec![784, 32, 24, 10];
+        p.train.epochs = 2;
+        p.n_train = 300;
+        p.n_valid = 80;
+        p.n_test = 80;
+        p
+    }
+
+    #[test]
+    fn control_run_trains() {
+        let out = train_one(&tiny(), &EstimatorConfig::control(), true);
+        assert_eq!(out.label, "control");
+        assert_eq!(out.history.len(), 2);
+        assert!(out.test_error < 0.9);
+    }
+
+    #[test]
+    fn estimator_run_trains_and_refreshes() {
+        let cfg = EstimatorConfig::fixed(&[16, 12]);
+        let out = train_one(&tiny(), &cfg, true);
+        assert_eq!(out.label, "16-12");
+        assert!(out.test_error <= 1.0);
+    }
+
+    #[test]
+    fn scaled_configs_include_control() {
+        let paper = ExperimentProfile::mnist_paper();
+        let cfgs = scaled_configs(&tiny(), &paper, &[&[50, 35], &[25, 25]]);
+        assert_eq!(cfgs.len(), 3);
+        assert!(cfgs[0].is_control());
+        assert!(cfgs[1].ranks.iter().all(|&r| r >= 1));
+    }
+}

@@ -1,0 +1,122 @@
+//! Figures 3/5 + Tables 2/3: validation-error-vs-epoch curves and final test
+//! error for the paper's estimator configurations on the SVHN-like and
+//! MNIST-like corpora.
+
+use super::common::{scaled_configs, train_one};
+use super::report::{markdown_table, pct, write_markdown, Csv};
+use crate::config::{DatasetKind, ExperimentProfile};
+use anyhow::Result;
+use std::path::Path;
+
+/// Paper Table 2 / Figure 3 rank lists (SVHN, 4 hidden layers).
+pub const SVHN_RANKS: &[&[usize]] = &[
+    &[200, 100, 75, 15],
+    &[100, 75, 50, 25],
+    &[100, 75, 50, 15],
+    &[75, 50, 40, 30],
+    &[50, 40, 40, 35],
+    &[25, 25, 15, 15],
+];
+
+/// Paper Table 3 / Figure 5 rank lists (MNIST, 3 hidden layers).
+pub const MNIST_RANKS: &[&[usize]] = &[&[50, 35, 25], &[25, 25, 25], &[15, 10, 5], &[10, 10, 5]];
+
+pub fn run_mnist(profile: &ExperimentProfile, out_dir: &Path) -> Result<()> {
+    assert_eq!(profile.dataset, DatasetKind::Mnist, "fig5/table3 are MNIST experiments");
+    run_curves(
+        profile,
+        &ExperimentProfile::mnist_paper(),
+        MNIST_RANKS,
+        out_dir,
+        "fig5",
+        "table3",
+        "Figure 5 / Table 3 — MNIST",
+    )
+}
+
+pub fn run_svhn(profile: &ExperimentProfile, out_dir: &Path) -> Result<()> {
+    assert_eq!(profile.dataset, DatasetKind::Svhn, "fig3/table2 are SVHN experiments");
+    run_curves(
+        profile,
+        &ExperimentProfile::svhn_paper(),
+        SVHN_RANKS,
+        out_dir,
+        "fig3",
+        "table2",
+        "Figure 3 / Table 2 — SVHN",
+    )
+}
+
+fn run_curves(
+    profile: &ExperimentProfile,
+    paper_profile: &ExperimentProfile,
+    rank_lists: &[&[usize]],
+    out_dir: &Path,
+    fig_name: &str,
+    table_name: &str,
+    title: &str,
+) -> Result<()> {
+    let configs = scaled_configs(profile, paper_profile, rank_lists);
+    let mut outcomes = Vec::new();
+    for cfg in &configs {
+        eprintln!("[{fig_name}] training '{}' on {}…", cfg.label(), profile.name);
+        let out = train_one(profile, cfg, true);
+        eprintln!(
+            "[{fig_name}]   final valid {:.2}%  test {:.2}%",
+            out.history.last().map(|h| h.valid_error * 100.0).unwrap_or(f32::NAN),
+            out.test_error * 100.0
+        );
+        outcomes.push(out);
+    }
+
+    // Figure: per-epoch validation error per config.
+    let mut header = vec!["epoch".to_string()];
+    header.extend(outcomes.iter().map(|o| o.label.clone()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut csv = Csv::create(&out_dir.join(format!("{fig_name}.csv")), &header_refs)?;
+    let epochs = outcomes.iter().map(|o| o.history.len()).max().unwrap_or(0);
+    for e in 0..epochs {
+        let mut row = vec![e.to_string()];
+        for o in &outcomes {
+            row.push(
+                o.history
+                    .get(e)
+                    .map(|h| format!("{:.6}", h.valid_error))
+                    .unwrap_or_default(),
+            );
+        }
+        csv.row(&row)?;
+    }
+
+    // Table: final test error per config (the paper's Tables 2/3).
+    let rows: Vec<Vec<String>> = outcomes
+        .iter()
+        .map(|o| vec![o.label.clone(), pct(o.test_error)])
+        .collect();
+    write_markdown(
+        out_dir,
+        table_name,
+        &format!("{title} — test error"),
+        &markdown_table(&["Network", "Error"], &rows),
+    )?;
+    let mut tcsv = Csv::create(&out_dir.join(format!("{table_name}.csv")), &["network", "test_error"])?;
+    for o in &outcomes {
+        tcsv.row(&[o.label.clone(), format!("{:.6}", o.test_error)])?;
+    }
+
+    // Acceptance-shape telemetry (DESIGN.md §6): control ≤ any estimator run
+    // is the paper's qualitative ordering; surface it for EXPERIMENTS.md.
+    let control_err = outcomes[0].test_error;
+    let worst = outcomes
+        .iter()
+        .skip(1)
+        .map(|o| o.test_error)
+        .fold(0.0f32, f32::max);
+    eprintln!(
+        "[{table_name}] control {:.2}% vs worst estimator {:.2}% (paper shape: control best, \
+         degradation grows as rank shrinks)",
+        control_err * 100.0,
+        worst * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (see DESIGN.md §6 for the index).
+//!
+//! Every driver takes an [`crate::config::ExperimentProfile`] (so the same
+//! code runs at `paper`, `small`, or `tiny` scale) and writes CSV + markdown
+//! into an output directory. `condcomp experiment <id>` is the CLI entry.
+
+pub mod report;
+pub mod common;
+pub mod fig2;
+pub mod curves;
+pub mod fig4;
+pub mod fig6;
+pub mod speedup;
+
+use crate::config::ExperimentProfile;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Run an experiment by paper id. `fig3`/`table2` and `fig5`/`table3` share
+/// one training sweep each (the table is the last row of the curves).
+pub fn run(id: &str, profile: &ExperimentProfile, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    match id {
+        "fig2" => fig2::run(profile, out_dir),
+        "fig3" | "table2" => curves::run_svhn(profile, out_dir),
+        "fig4" => fig4::run(profile, out_dir),
+        "fig5" | "table3" => curves::run_mnist(profile, out_dir),
+        "fig6" => fig6::run(profile, out_dir),
+        "speedup" | "eq10" => speedup::run(profile, out_dir),
+        "all" => {
+            fig2::run(profile, out_dir)?;
+            fig4::run(profile, out_dir)?;
+            fig6::run(profile, out_dir)?;
+            speedup::run(profile, out_dir)?;
+            curves::run_mnist(profile, out_dir)?;
+            curves::run_svhn(profile, out_dir)
+        }
+        other => Err(anyhow!(
+            "unknown experiment '{other}' (try fig2|fig3|fig4|fig5|fig6|table2|table3|speedup|all)"
+        )),
+    }
+}
+
+/// All experiment ids, for `--help` and the bench drivers.
+pub const ALL_IDS: &[&str] =
+    &["fig2", "fig3", "fig4", "fig5", "fig6", "table2", "table3", "speedup"];

@@ -1,0 +1,91 @@
+//! Report emitters: CSV series and aligned markdown tables.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A simple CSV writer with a fixed header.
+pub struct Csv {
+    file: std::io::BufWriter<std::fs::File>,
+    pub columns: usize,
+}
+
+impl Csv {
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<Csv> {
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Csv { file, columns: header.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.columns, "csv row width mismatch");
+        writeln!(self.file, "{}", cells.join(","))
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>())
+    }
+}
+
+/// Render a markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", header.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for row in rows {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+/// Write a named markdown section to `<out>/<name>.md`.
+pub fn write_markdown(out_dir: &Path, name: &str, title: &str, body: &str) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(out_dir.join(format!("{name}.md")))?;
+    writeln!(f, "# {title}\n\n{body}")
+}
+
+/// Format an error rate as a percentage string.
+pub fn pct(x: f32) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("condcomp-report-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+            c.row(&["1".into(), "x".into()]).unwrap();
+            c.row_f64(&[2.5, 3.0]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,x\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn csv_checks_width() {
+        let dir = std::env::temp_dir().join("condcomp-report-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut c = Csv::create(&dir.join("w.csv"), &["a", "b"]).unwrap();
+        let _ = c.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = markdown_table(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| x | y |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.0931), "9.31%");
+    }
+}

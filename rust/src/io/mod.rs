@@ -1,0 +1,7 @@
+//! Serialization: minimal JSON (protocol + manifests) and NumPy `.npy`
+//! (weight interchange with the build-time Python path).
+
+pub mod json;
+pub mod npy;
+
+pub use json::Json;

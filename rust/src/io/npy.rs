@@ -1,0 +1,283 @@
+//! NumPy `.npy` (format version 1.0) reader/writer for `f32` arrays.
+//!
+//! This is the weight-interchange format between the build-time Python path
+//! (`numpy.save`) and the Rust coordinator: checkpoints, estimator factors,
+//! and golden test fixtures all travel as little-endian C-order `<f4` arrays
+//! of rank 1 or 2.
+
+use crate::linalg::Mat;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Errors from `.npy` parsing.
+#[derive(Debug)]
+pub enum NpyError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for NpyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NpyError::Io(e) => write!(f, "npy io error: {e}"),
+            NpyError::Format(m) => write!(f, "npy format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for NpyError {}
+
+impl From<std::io::Error> for NpyError {
+    fn from(e: std::io::Error) -> Self {
+        NpyError::Io(e)
+    }
+}
+
+/// An array loaded from `.npy`: shape plus flat C-order data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NpyArray {
+    /// Interpret as a 2-D matrix; 1-D arrays become a single row.
+    pub fn to_mat(&self) -> Result<Mat, NpyError> {
+        match self.shape.len() {
+            1 => Ok(Mat::from_vec(1, self.shape[0], self.data.clone())),
+            2 => Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())),
+            d => Err(NpyError::Format(format!("expected rank 1 or 2, got rank {d}"))),
+        }
+    }
+}
+
+/// Write a matrix as a 2-D `<f4` `.npy` file.
+pub fn write_mat(path: &Path, m: &Mat) -> Result<(), NpyError> {
+    write_f32(path, &[m.rows(), m.cols()], m.as_slice())
+}
+
+/// Write a 1-D `<f4` `.npy` file.
+pub fn write_vec(path: &Path, data: &[f32]) -> Result<(), NpyError> {
+    write_f32(path, &[data.len()], data)
+}
+
+/// Write an arbitrary-shape little-endian f32 array.
+pub fn write_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<(), NpyError> {
+    let count: usize = shape.iter().product();
+    if count != data.len() {
+        return Err(NpyError::Format(format!(
+            "shape {shape:?} implies {count} elements, got {}",
+            data.len()
+        )));
+    }
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!("({})", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")),
+    };
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // Pad with spaces so that magic+version+len+header is a multiple of 64,
+    // terminated by \n (npy spec).
+    let unpadded = MAGIC.len() + 2 + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.extend(std::iter::repeat(' ').take(pad));
+    header.push('\n');
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?; // version 1.0
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a `.npy` file containing a little-endian f32 (or f64, converted)
+/// C-order array.
+pub fn read(path: &Path) -> Result<NpyArray, NpyError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(NpyError::Format("bad magic".into()));
+    }
+    let mut ver = [0u8; 2];
+    f.read_exact(&mut ver)?;
+    let header_len = match ver[0] {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => return Err(NpyError::Format(format!("unsupported npy version {v}"))),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header).to_string();
+
+    let descr = dict_value(&header, "descr")
+        .ok_or_else(|| NpyError::Format("missing descr".into()))?;
+    let fortran = dict_value(&header, "fortran_order")
+        .ok_or_else(|| NpyError::Format("missing fortran_order".into()))?;
+    if fortran.trim() != "False" {
+        return Err(NpyError::Format("fortran_order arrays not supported".into()));
+    }
+    let shape = parse_shape(&header)?;
+    let count: usize = shape.iter().product();
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let descr = descr.trim().trim_matches(|c| c == '\'' || c == '"');
+    let data = match descr {
+        "<f4" => {
+            if raw.len() < count * 4 {
+                return Err(NpyError::Format("truncated f32 payload".into()));
+            }
+            raw.chunks_exact(4)
+                .take(count)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            if raw.len() < count * 8 {
+                return Err(NpyError::Format("truncated f64 payload".into()));
+            }
+            raw.chunks_exact(8)
+                .take(count)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect()
+        }
+        other => return Err(NpyError::Format(format!("unsupported dtype '{other}'"))),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+/// Read directly into a `Mat`.
+pub fn read_mat(path: &Path) -> Result<Mat, NpyError> {
+    read(path)?.to_mat()
+}
+
+/// Extract the raw text of a python-dict value for `key` from the header.
+fn dict_value<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let kq = format!("'{key}'");
+    let at = header.find(&kq)?;
+    let rest = &header[at + kq.len()..];
+    let colon = rest.find(':')?;
+    let rest = &rest[colon + 1..];
+    // Value ends at the next top-level comma or closing brace.
+    let mut depth = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth = depth.saturating_sub(1),
+            ',' | '}' if depth == 0 => return Some(rest[..i].trim()),
+            _ => {}
+        }
+    }
+    Some(rest.trim())
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>, NpyError> {
+    let raw = dict_value(header, "shape")
+        .ok_or_else(|| NpyError::Format("missing shape".into()))?;
+    let inner = raw
+        .trim()
+        .strip_prefix('(')
+        .and_then(|s| s.strip_suffix(')'))
+        .ok_or_else(|| NpyError::Format(format!("bad shape '{raw}'")))?;
+    inner
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().map_err(|_| NpyError::Format(format!("bad dim '{s}'"))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::Pcg32;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("condcomp-npy-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        property("npy mat roundtrip", 16, |rng| {
+            let r = rng.index(8) + 1;
+            let c = rng.index(8) + 1;
+            let m = Mat::randn(r, c, 1.0, rng);
+            let path = tmpfile(&format!("m_{r}_{c}.npy"));
+            write_mat(&path, &m).unwrap();
+            let back = read_mat(&path).unwrap();
+            assert_eq!(back, m);
+        });
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let path = tmpfile("v.npy");
+        let v = vec![1.0f32, -2.5, 3.25];
+        write_vec(&path, &v).unwrap();
+        let arr = read(&path).unwrap();
+        assert_eq!(arr.shape, vec![3]);
+        assert_eq!(arr.data, v);
+        assert_eq!(arr.to_mat().unwrap().shape(), (1, 3));
+    }
+
+    #[test]
+    fn header_is_64_byte_aligned() {
+        let path = tmpfile("aligned.npy");
+        write_vec(&path, &[0.0; 7]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Total prefix before data must be divisible by 64.
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.npy");
+        std::fs::write(&path, b"not-an-npy-file-at-all").unwrap();
+        assert!(matches!(read(&path), Err(NpyError::Format(_))));
+    }
+
+    #[test]
+    fn shape_data_mismatch_rejected() {
+        let path = tmpfile("mismatch.npy");
+        let err = write_f32(&path, &[2, 3], &[0.0; 5]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn numpy_compat_header_parses() {
+        // A header exactly as numpy 2.x emits it (with trailing spaces + \n).
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(3, 2, 1.0, &mut rng);
+        let path = tmpfile("npcompat.npy");
+        write_mat(&path, &m).unwrap();
+        let text = std::fs::read(&path).unwrap();
+        let hlen = u16::from_le_bytes([text[8], text[9]]) as usize;
+        let header = String::from_utf8_lossy(&text[10..10 + hlen]).to_string();
+        assert!(header.contains("'descr': '<f4'"));
+        assert!(header.contains("'shape': (3, 2)"));
+    }
+}

@@ -1,0 +1,47 @@
+//! # condcomp — conditional feedforward computation via low-rank sign estimation
+//!
+//! A three-layer (Rust coordinator / JAX model / Pallas kernel) reproduction of
+//! *Davis & Arel, “Low-Rank Approximations for Conditional Feedforward
+//! Computation in Deep Neural Networks”, ICLR 2014*.
+//!
+//! The crate is organized bottom-up:
+//!
+//! - [`util`] — PRNG, statistics, timing, property-test helpers (offline
+//!   substitutes for `rand`/`proptest`).
+//! - [`linalg`] — dense matrices, cache-blocked GEMM, one-sided Jacobi SVD,
+//!   truncated low-rank factorization (paper §3.2).
+//! - [`io`] — `.npy`/`.npz` and JSON, for weight interchange with the
+//!   build-time Python path and for the serving protocol.
+//! - [`config`] — TOML-lite parser + typed experiment configuration.
+//! - [`cli`] — declarative argument parser for the `condcomp` binary.
+//! - [`data`] — synthetic MNIST/SVHN-like corpora, the paper's preprocessing
+//!   pipeline (YUV → LCN → histogram equalization → standardize), batching.
+//! - [`nn`] — the reference trainer (DeepLearnToolbox-equivalent, paper §3.5).
+//! - [`estimator`] — the paper's contribution: SVD-derived activation-sign
+//!   estimators with refresh policies and quality metrics (§3.1–§3.3).
+//! - [`condcomp`] — conditional forward path: column-skipping masked GEMM and
+//!   the estimator-augmented MLP, with FLOP accounting.
+//! - [`cost`] — the analytical FLOP model of §3.4 (Eqs. 8–11).
+//! - [`runtime`] — PJRT client + HLO-text artifact store (the AOT bridge).
+//! - [`coordinator`] — L3 serving/training orchestration: TCP server, dynamic
+//!   batcher, router, SVD-refresh scheduler, metrics registry.
+//! - [`bench`] — criterion-lite measurement harness used by `benches/`.
+//! - [`experiments`] — one driver per paper table/figure.
+
+pub mod util;
+pub mod linalg;
+pub mod io;
+pub mod config;
+pub mod cli;
+pub mod data;
+pub mod nn;
+pub mod estimator;
+pub mod condcomp;
+pub mod cost;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod experiments;
+
+/// Crate version string reported by the CLI and the serving protocol.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

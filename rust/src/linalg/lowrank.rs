@@ -1,0 +1,251 @@
+//! Truncated low-rank factorization `W ≈ U·V` (paper §3.2).
+//!
+//! Convention follows the paper exactly: from the thin SVD
+//! `W = U_full · diag(s) · Vᵀ_full`, the rank-`r` factors are
+//! `U = U_r` (first r left vectors) and `V = Σ_r · V_rᵀ`, so the estimator
+//! computes `a·U` first (`h1×r`), then `(a·U)·V` (`r×h2`), which is cheaper
+//! than `a·W` whenever `r < h1·h2 / (h1 + h2)`.
+//!
+//! Two construction paths:
+//! - [`LowRank::from_svd`] / [`LowRank::truncate`] — exact truncated SVD
+//!   (Eckart–Young optimal), the paper's per-epoch refresh.
+//! - [`LowRank::randomized`] — Halko-style randomized range finder, `O(m·n·r)`;
+//!   implements the paper's future-work "online approach to the low-rank
+//!   approximation" at a fraction of the refresh cost.
+
+use super::gemm::{matmul, matmul_into};
+use super::matrix::Mat;
+use super::svd::Svd;
+use crate::util::Pcg32;
+
+/// A rank-`k` factorization `W ≈ U·V`, `U: d×k`, `V: k×h`.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub u: Mat,
+    pub v: Mat,
+}
+
+impl LowRank {
+    /// Truncate an existing SVD to rank `r` (clamped to the available rank).
+    pub fn from_svd(svd: &Svd, r: usize) -> LowRank {
+        let r = r.clamp(1, svd.rank());
+        let (m, n) = (svd.u.rows(), svd.vt.cols());
+        let mut u = Mat::zeros(m, r);
+        for i in 0..m {
+            let src = svd.u.row(i);
+            u.row_mut(i).copy_from_slice(&src[..r]);
+        }
+        let mut v = Mat::zeros(r, n);
+        for p in 0..r {
+            let sp = svd.s[p];
+            let src = svd.vt.row(p);
+            let dst = v.row_mut(p);
+            for j in 0..n {
+                dst[j] = sp * src[j];
+            }
+        }
+        LowRank { u, v }
+    }
+
+    /// Exact rank-`r` truncated SVD of `w`.
+    pub fn truncate(w: &Mat, r: usize) -> LowRank {
+        LowRank::from_svd(&Svd::compute(w), r)
+    }
+
+    /// Randomized rank-`r` approximation with `oversample` extra probe
+    /// directions (Halko, Martinsson & Tropp 2011): `Y = W·Ω`, orthonormalize
+    /// `Q = orth(Y)`, project `B = Qᵀ·W`, take the exact SVD of the small `B`,
+    /// and lift: `W ≈ (Q·U_B)·(Σ_B·V_Bᵀ)`.
+    pub fn randomized(w: &Mat, r: usize, oversample: usize, rng: &mut Pcg32) -> LowRank {
+        let (m, n) = w.shape();
+        let r = r.clamp(1, m.min(n));
+        let l = (r + oversample).min(m.min(n));
+        let omega = Mat::randn(n, l, 1.0, rng);
+        let y = matmul(w, &omega); // m×l
+        let q = orthonormalize_cols(&y); // m×l
+        let b = matmul(&q.transpose(), w); // l×n
+        let svd_b = Svd::compute(&b);
+        let small = LowRank::from_svd(&svd_b, r);
+        LowRank { u: matmul(&q, &small.u), v: small.v }
+    }
+
+    /// Rank of the factorization.
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    /// Materialize the product `U·V` (testing / diagnostics).
+    pub fn to_dense(&self) -> Mat {
+        matmul(&self.u, &self.v)
+    }
+
+    /// `a · U · V` computed in the cheap order (`a·U` first).
+    pub fn apply(&self, a: &Mat) -> Mat {
+        matmul(&matmul(a, &self.u), &self.v)
+    }
+
+    /// `apply` into preallocated intermediate and output buffers (serving hot
+    /// path; `tmp` must be `a.rows × rank`, `out` must be `a.rows × h`).
+    pub fn apply_into(&self, a: &Mat, tmp: &mut Mat, out: &mut Mat) {
+        matmul_into(a, &self.u, tmp);
+        matmul_into(tmp, &self.v, out);
+    }
+
+    /// Approximation error `‖W − U·V‖_F / ‖W‖_F`.
+    pub fn rel_error(&self, w: &Mat) -> f32 {
+        let diff = w.zip(&self.to_dense(), |a, b| a - b);
+        let denom = w.fro_norm();
+        if denom == 0.0 { 0.0 } else { diff.fro_norm() / denom }
+    }
+}
+
+/// Modified Gram–Schmidt with one re-orthogonalization pass; returns a matrix
+/// with orthonormal columns spanning the input's column space. Zero columns
+/// (to numerical tolerance) are replaced by zeros and do not contribute.
+pub fn orthonormalize_cols(a: &Mat) -> Mat {
+    let (m, l) = a.shape();
+    let mut q = a.transpose(); // work row-major over columns: q.row(j) = col j
+    for j in 0..l {
+        // Re-orthogonalize twice against previous columns ("twice is enough").
+        for _pass in 0..2 {
+            for p in 0..j {
+                let dot: f64 = {
+                    let (qp, qj) = (q.row(p), q.row(j));
+                    qp.iter().zip(qj).map(|(&x, &y)| x as f64 * y as f64).sum()
+                };
+                let proj = dot as f32;
+                let qp = q.row(p).to_vec();
+                let qj = q.row_mut(j);
+                for i in 0..m {
+                    qj[i] -= proj * qp[i];
+                }
+            }
+        }
+        let norm: f64 = q.row(j).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        let norm = norm.sqrt() as f32;
+        if norm > 1e-7 {
+            let inv = 1.0 / norm;
+            for x in q.row_mut(j) {
+                *x *= inv;
+            }
+        } else {
+            q.row_mut(j).fill(0.0);
+        }
+    }
+    q.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_naive;
+    use crate::util::proptest::property;
+
+    /// Build a matrix with an exponentially decaying spectrum — the shape the
+    /// paper assumes for trained nets ("highly redundant" weights, §2.1).
+    fn decaying_matrix(m: usize, n: usize, decay: f32, rng: &mut Pcg32) -> Mat {
+        let r = m.min(n);
+        let u = orthonormalize_cols(&Mat::randn(m, r, 1.0, rng));
+        let v = orthonormalize_cols(&Mat::randn(n, r, 1.0, rng));
+        let mut scaled = Mat::zeros(m, r);
+        for i in 0..m {
+            for p in 0..r {
+                scaled[(i, p)] = u[(i, p)] * decay.powi(p as i32);
+            }
+        }
+        matmul_naive(&scaled, &v.transpose())
+    }
+
+    #[test]
+    fn full_rank_truncation_is_exact() {
+        property("rank=min(m,n) reconstructs", 10, |rng| {
+            let m = rng.index(12) + 2;
+            let n = rng.index(12) + 2;
+            let w = Mat::randn(m, n, 1.0, rng);
+            let lr = LowRank::truncate(&w, m.min(n));
+            assert!(lr.to_dense().max_abs_diff(&w) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let mut rng = Pcg32::seeded(31);
+        let w = decaying_matrix(20, 16, 0.7, &mut rng);
+        let mut last = f32::INFINITY;
+        for r in [1, 2, 4, 8, 16] {
+            let e = LowRank::truncate(&w, r).rel_error(&w);
+            assert!(e <= last + 1e-5, "rank {r}: error {e} > previous {last}");
+            last = e;
+        }
+        assert!(last < 1e-3, "full-rank error should vanish, got {last}");
+    }
+
+    #[test]
+    fn eckart_young_beats_random_projection() {
+        // The SVD truncation must be no worse than any same-rank baseline.
+        let mut rng = Pcg32::seeded(7);
+        let w = decaying_matrix(24, 18, 0.8, &mut rng);
+        let r = 4;
+        let svd_err = LowRank::truncate(&w, r).rel_error(&w);
+        let rand_err = LowRank::randomized(&w, r, 0, &mut rng).rel_error(&w);
+        assert!(svd_err <= rand_err + 1e-4, "svd {svd_err} vs randomized {rand_err}");
+    }
+
+    #[test]
+    fn randomized_with_oversampling_is_close_to_optimal() {
+        let mut rng = Pcg32::seeded(13);
+        let w = decaying_matrix(30, 24, 0.6, &mut rng);
+        let r = 5;
+        let opt = LowRank::truncate(&w, r).rel_error(&w);
+        let rnd = LowRank::randomized(&w, r, 8, &mut rng).rel_error(&w);
+        assert!(rnd <= opt * 2.0 + 1e-3, "randomized {rnd} vs optimal {opt}");
+    }
+
+    #[test]
+    fn apply_matches_dense_product_order() {
+        property("a·(UV) == (a·U)·V", 16, |rng| {
+            let d = rng.index(10) + 2;
+            let h = rng.index(10) + 2;
+            let w = Mat::randn(d, h, 1.0, rng);
+            let a = Mat::randn(3, d, 1.0, rng);
+            let lr = LowRank::truncate(&w, d.min(h));
+            let got = lr.apply(&a);
+            let want = matmul_naive(&a, &lr.to_dense());
+            assert!(got.max_abs_diff(&want) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn apply_into_matches_apply() {
+        let mut rng = Pcg32::seeded(5);
+        let w = Mat::randn(8, 6, 1.0, &mut rng);
+        let a = Mat::randn(4, 8, 1.0, &mut rng);
+        let lr = LowRank::truncate(&w, 3);
+        let mut tmp = Mat::zeros(4, 3);
+        let mut out = Mat::zeros(4, 6);
+        lr.apply_into(&a, &mut tmp, &mut out);
+        assert!(out.max_abs_diff(&lr.apply(&a)) < 1e-5);
+    }
+
+    #[test]
+    fn orthonormalize_produces_orthonormal_columns() {
+        property("QtQ == I on full-rank input", 12, |rng| {
+            let m = rng.index(10) + 5;
+            let l = rng.index(4) + 1; // l <= 4 < 5 <= m keeps full column rank likely
+            let a = Mat::randn(m, l, 1.0, rng);
+            let q = orthonormalize_cols(&a);
+            let g = matmul_naive(&q.transpose(), &q);
+            assert!(g.max_abs_diff(&Mat::eye(l)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn rank_clamps() {
+        let mut rng = Pcg32::seeded(3);
+        let w = Mat::randn(6, 4, 1.0, &mut rng);
+        let lr = LowRank::truncate(&w, 100);
+        assert_eq!(lr.rank(), 4);
+        let lr1 = LowRank::truncate(&w, 0);
+        assert_eq!(lr1.rank(), 1);
+    }
+}

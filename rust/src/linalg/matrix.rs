@@ -1,0 +1,302 @@
+//! Row-major dense matrix of `f32`.
+//!
+//! Deliberately minimal: the crate needs exactly the operations a multilayer
+//! perceptron and an SVD need, with explicit shapes everywhere. All indexing
+//! is `(row, col)`; storage is `row * cols + col`.
+
+use crate::util::Pcg32;
+
+/// A dense row-major `rows × cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f32) -> Mat {
+        Mat { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Identity-like matrix (ones on the main diagonal).
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from an existing row-major buffer. Panics on length mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer length != rows*cols");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. `N(0, sigma²)` entries — the paper's weight init (§3.5).
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Pcg32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying row-major buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        debug_assert!(c < self.cols);
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Transpose (materialized).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place element-wise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+    }
+
+    /// Element-wise binary op into a new matrix. Panics on shape mismatch.
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "zip shape mismatch");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// `self += alpha * other`, in place.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for x in self.data.iter_mut() {
+            *x *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Sum of absolute values (ℓ1; used by the activation penalty, Eq. 7).
+    pub fn l1_norm(&self) -> f32 {
+        self.data.iter().map(|&x| x.abs() as f64).sum::<f64>() as f32
+    }
+
+    /// Fraction of entries strictly greater than zero — the paper's
+    /// activation sparsity coefficient α (§3.4).
+    pub fn density(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x > 0.0).count() as f32 / self.data.len() as f32
+    }
+
+    /// Extract a contiguous block of rows `[start, start+len)`.
+    pub fn rows_slice(&self, start: usize, len: usize) -> Mat {
+        assert!(start + len <= self.rows, "row slice out of bounds");
+        Mat {
+            rows: len,
+            cols: self.cols,
+            data: self.data[start * self.cols..(start + len) * self.cols].to_vec(),
+        }
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vstack column mismatch");
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Maximum absolute element-wise difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols, "index ({r},{c}) out of {:?}", self.shape());
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{arb_shape, property};
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        property("transpose twice is identity", 32, |rng| {
+            let (r, c) = arb_shape(rng, 8);
+            let m = Mat::randn(r, c, 1.0, rng);
+            assert_eq!(m.transpose().transpose(), m);
+        });
+    }
+
+    #[test]
+    fn eye_diagonal() {
+        let i = Mat::eye(4);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(i[(r, c)], if r == c { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Mat::full(2, 2, 1.0);
+        let b = Mat::full(2, 2, 3.0);
+        a.axpy(2.0, &b);
+        assert_eq!(a, Mat::full(2, 2, 7.0));
+        a.scale(0.5);
+        assert_eq!(a, Mat::full(2, 2, 3.5));
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_vec(1, 3, vec![3.0, -4.0, 0.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+        assert!((m.l1_norm() - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn density_counts_strictly_positive() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 0.0, -2.0, 3.0]);
+        assert!((m.density() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rows_slice_and_vstack_roundtrip() {
+        property("vstack of split halves is identity", 32, |rng| {
+            let (r, c) = arb_shape(rng, 8);
+            let m = Mat::randn(r + 1, c, 1.0, rng);
+            let top = m.rows_slice(0, 1);
+            let bot = m.rows_slice(1, r);
+            assert_eq!(top.vstack(&bot), m);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length")]
+    fn from_vec_checks_length() {
+        let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear algebra, built from scratch for the offline environment.
+//!
+//! - [`matrix`] — row-major `Mat` with shape-checked ops.
+//! - [`gemm`] — the dense hot path: naive reference kernel plus a
+//!   cache-blocked, panel-packed implementation (the "control" network's
+//!   forward pass runs through this).
+//! - [`svd`] — one-sided Jacobi SVD (full and truncated); powers the paper's
+//!   per-epoch estimator refresh (§3.2).
+//! - [`lowrank`] — truncated factorization `W ≈ U·V` with the paper's
+//!   convention `U = U_r`, `V = Σ_r V_rᵀ`.
+
+pub mod matrix;
+pub mod gemm;
+pub mod svd;
+pub mod lowrank;
+
+pub use gemm::{matmul, matmul_into};
+pub use lowrank::LowRank;
+pub use matrix::Mat;
+pub use svd::Svd;

@@ -1,0 +1,301 @@
+//! Singular value decomposition, from scratch.
+//!
+//! [`Svd::compute`] is a one-sided Jacobi SVD (Hestenes rotations): numerically
+//! robust, simple to verify, and accurate enough that sign-estimation error is
+//! dominated by truncation, not by the factorization. Cost is
+//! `O(m·n²·sweeps)`, which is acceptable for the paper's per-epoch refresh
+//! (§3.2: "calculating the SVD is an expensive operation … we can opt to
+//! calculate the SVD less frequently").
+//!
+//! The paper's future-work section asks for a cheaper online refresh; the
+//! randomized range-finder variant lives in [`super::lowrank`] and reuses the
+//! Jacobi core on a small projected matrix.
+
+use super::matrix::Mat;
+
+/// Thin SVD `A = U · diag(s) · Vᵀ` with `U: m×r`, `s: r`, `Vᵀ: r×n`,
+/// `r = min(m, n)`, singular values sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+/// Convergence threshold on the normalized off-diagonal inner product.
+const JACOBI_TOL: f64 = 1e-9;
+/// Hard cap on Jacobi sweeps (each sweep is a full pass over column pairs).
+const MAX_SWEEPS: usize = 30;
+
+impl Svd {
+    /// Compute the thin SVD of `a` by one-sided Jacobi.
+    pub fn compute(a: &Mat) -> Svd {
+        let (m, n) = a.shape();
+        if m >= n {
+            jacobi_tall(a)
+        } else {
+            // SVD(Aᵀ) = (V, s, Uᵀ); swap the factors back.
+            let t = jacobi_tall(&a.transpose());
+            Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() }
+        }
+    }
+
+    /// Rank of the decomposition (number of retained singular values).
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Reconstruct `U · diag(s) · Vᵀ` (testing / diagnostics).
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.rank();
+        let (m, n) = (self.u.rows(), self.vt.cols());
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let urow = self.u.row(i);
+            let orow = out.row_mut(i);
+            for p in 0..r {
+                let c = urow[p] * self.s[p];
+                if c == 0.0 {
+                    continue;
+                }
+                let vrow = self.vt.row(p);
+                for j in 0..n {
+                    orow[j] += c * vrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Energy captured by the top-`r` singular values:
+    /// `Σ_{i<r} s_i² / Σ_i s_i²`. Drives the adaptive rank selector (§5).
+    pub fn energy_at(&self, r: usize) -> f64 {
+        let total: f64 = self.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if total == 0.0 {
+            return 1.0;
+        }
+        let head: f64 = self.s.iter().take(r).map(|&x| (x as f64) * (x as f64)).sum();
+        head / total
+    }
+
+    /// Smallest rank whose captured energy reaches `fraction` of the total.
+    pub fn rank_for_energy(&self, fraction: f64) -> usize {
+        let total: f64 = self.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if total == 0.0 {
+            return 1;
+        }
+        let mut acc = 0.0;
+        for (i, &s) in self.s.iter().enumerate() {
+            acc += (s as f64) * (s as f64);
+            if acc >= fraction * total {
+                return i + 1;
+            }
+        }
+        self.s.len()
+    }
+}
+
+/// One-sided Jacobi on a tall (m ≥ n) matrix.
+fn jacobi_tall(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    debug_assert!(m >= n);
+    // Work columns of G in column-major order so each rotation touches two
+    // contiguous strips.
+    let mut g = vec![0.0f64; m * n]; // g[j*m + i]
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            g[j * m + i] = arow[j] as f64;
+        }
+    }
+    let mut v = vec![0.0f64; n * n]; // v[j*n + i] column-major
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (alpha, beta, gamma) = {
+                    let gp = &g[p * m..p * m + m];
+                    let gq = &g[q * m..q * m + m];
+                    let mut alpha = 0.0;
+                    let mut beta = 0.0;
+                    let mut gamma = 0.0;
+                    for i in 0..m {
+                        alpha += gp[i] * gp[i];
+                        beta += gq[i] * gq[i];
+                        gamma += gp[i] * gq[i];
+                    }
+                    (alpha, beta, gamma)
+                };
+                if alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                let norm_gamma = gamma.abs() / (alpha.sqrt() * beta.sqrt());
+                off = off.max(norm_gamma);
+                if norm_gamma <= JACOBI_TOL {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) off-diagonal of GᵀG.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_cols(&mut g, m, p, q, c, s);
+                rotate_cols(&mut v, n, p, q, c, s);
+            }
+        }
+        if off <= JACOBI_TOL {
+            break;
+        }
+    }
+
+    // Extract singular values and left vectors; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| g[j * m..j * m + m].iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Mat::zeros(n, n);
+    for (slot, &j) in order.iter().enumerate() {
+        let sigma = norms[j];
+        s.push(sigma as f32);
+        if sigma > 0.0 {
+            for i in 0..m {
+                u[(i, slot)] = (g[j * m + i] / sigma) as f32;
+            }
+        }
+        for i in 0..n {
+            vt[(slot, i)] = v[j * n + i] as f32;
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Apply the rotation `[c -s; s c]` to columns `p`, `q` of a column-major
+/// buffer with leading dimension `ld`.
+#[inline]
+fn rotate_cols(buf: &mut [f64], ld: usize, p: usize, q: usize, c: f64, s: f64) {
+    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+    let (head, tail) = buf.split_at_mut(hi * ld);
+    let colp = &mut head[lo * ld..lo * ld + ld];
+    let colq = &mut tail[..ld];
+    if p < q {
+        for i in 0..ld {
+            let gp = colp[i];
+            let gq = colq[i];
+            colp[i] = c * gp - s * gq;
+            colq[i] = s * gp + c * gq;
+        }
+    } else {
+        for i in 0..ld {
+            let gq = colp[i];
+            let gp = colq[i];
+            colq[i] = c * gp - s * gq;
+            colp[i] = s * gp + c * gq;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_naive;
+    use crate::util::proptest::property;
+    use crate::util::Pcg32;
+
+    fn check_orthonormal_cols(m: &Mat, tol: f32) {
+        let g = matmul_naive(&m.transpose(), m);
+        let d = g.max_abs_diff(&Mat::eye(m.cols()));
+        assert!(d < tol, "columns not orthonormal: max dev {d}");
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        property("U S Vt == A", 12, |rng| {
+            let m = rng.index(20) + 2;
+            let n = rng.index(20) + 2;
+            let a = Mat::randn(m, n, 1.0, rng);
+            let svd = Svd::compute(&a);
+            let err = svd.reconstruct().max_abs_diff(&a);
+            assert!(err < 1e-3, "reconstruction error {err} for {m}x{n}");
+        });
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let mut rng = Pcg32::seeded(4);
+        for &(m, n) in &[(12, 8), (8, 12), (10, 10)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let svd = Svd::compute(&a);
+            check_orthonormal_cols(&svd.u, 1e-4);
+            check_orthonormal_cols(&svd.vt.transpose(), 1e-4);
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        property("sorted s", 16, |rng| {
+            let a = Mat::randn(rng.index(15) + 2, rng.index(15) + 2, 1.0, rng);
+            let svd = Svd::compute(&a);
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+            assert!(svd.s.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, &v) in [3.0f32, 1.0, 4.0, 2.0].iter().enumerate() {
+            a[(i, i)] = v;
+        }
+        let svd = Svd::compute(&a);
+        let want = [4.0, 3.0, 2.0, 1.0];
+        for (got, want) in svd.s.iter().zip(want.iter()) {
+            assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_matrix() {
+        // Outer product => rank 1; second singular value ~ 0.
+        let mut rng = Pcg32::seeded(8);
+        let u: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let a = Mat::from_fn(10, 6, |i, j| u[i] * v[j]);
+        let svd = Svd::compute(&a);
+        assert!(svd.s[0] > 0.1);
+        assert!(svd.s[1] < 1e-4, "s1 = {}", svd.s[1]);
+        assert!(svd.reconstruct().max_abs_diff(&a) < 1e-4);
+    }
+
+    #[test]
+    fn energy_and_rank_selection() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0; // energy 9
+        a[(1, 1)] = 4.0; // energy 16
+        let svd = Svd::compute(&a);
+        assert!((svd.energy_at(1) - 16.0 / 25.0).abs() < 1e-6);
+        assert_eq!(svd.rank_for_energy(0.6), 1);
+        assert_eq!(svd.rank_for_energy(0.99), 2);
+    }
+
+    #[test]
+    fn wide_matrix_matches_tall_transpose() {
+        let mut rng = Pcg32::seeded(21);
+        let a = Mat::randn(5, 9, 1.0, &mut rng);
+        let svd = Svd::compute(&a);
+        let svd_t = Svd::compute(&a.transpose());
+        for (x, y) in svd.s.iter().zip(svd_t.s.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        assert!(svd.reconstruct().max_abs_diff(&a) < 1e-3);
+    }
+}

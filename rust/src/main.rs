@@ -1,0 +1,324 @@
+//! `condcomp` — the launcher.
+//!
+//! Subcommands:
+//!   train       train a network (native engine), optionally with an
+//!               activation estimator in the loop
+//!   train-pjrt  train through the AOT train_step artifact (three-layer path)
+//!   serve       start the serving coordinator (native or PJRT backend)
+//!   experiment  regenerate a paper table/figure (fig2…fig6, table2, table3,
+//!               speedup, all)
+//!   bench-flops print the §3.4 analytic cost model for an architecture
+//!   datagen     dump a synthetic corpus to .npy (debugging/external use)
+
+use condcomp::cli::{Command, OptSpec, Parsed};
+use condcomp::config::{EstimatorConfig, ExperimentProfile};
+use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
+use condcomp::cost::LayerCost;
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::trainer::evaluate_error;
+use condcomp::nn::{Mlp, Trainer};
+use condcomp::runtime::{Engine, ModelRuntime};
+use condcomp::util::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    format!(
+        "condcomp {} — conditional feedforward computation via low-rank sign estimation\n\
+         \n\
+         usage: condcomp <train|train-pjrt|serve|experiment|bench-flops|datagen> [options]\n\
+         \n\
+         run `condcomp <subcommand> --help` for options.\n",
+        condcomp::VERSION
+    )
+}
+
+fn profile_from(parsed: &Parsed) -> Result<ExperimentProfile, anyhow::Error> {
+    let name = parsed.get("profile").unwrap_or("mnist-small");
+    let mut profile = ExperimentProfile::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile '{name}'"))?;
+    let mut doc = condcomp::config::TomlDoc::default();
+    if let Some(cfg_path) = parsed.get("config") {
+        doc = condcomp::config::TomlDoc::load(Path::new(cfg_path))
+            .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+    }
+    for kv in parsed.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+        doc.set(k.trim(), v.trim());
+    }
+    profile.apply_overrides(&doc);
+    Ok(profile)
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(sub) = args.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "train-pjrt" => cmd_train_pjrt(rest),
+        "serve" => cmd_serve(rest),
+        "experiment" => cmd_experiment(rest),
+        "bench-flops" => cmd_bench_flops(rest),
+        "datagen" => cmd_datagen(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand '{other}'\n\n{}", usage())),
+    }
+}
+
+fn common_opts(cmd: Command) -> Command {
+    cmd.opt(OptSpec::value("profile", "experiment profile (mnist-{tiny,small,paper}, svhn-{tiny,small,paper})").with_default("mnist-small"))
+        .opt(OptSpec::value("config", "TOML config file with overrides"))
+        .opt(OptSpec::value("set", "override key=value (repeatable)").multi())
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("train", "train with the native engine"))
+        .opt(OptSpec::value("ranks", "estimator ranks per hidden layer, e.g. 50-35-25, or 'control'").with_default("control"))
+        .opt(OptSpec::value("bias", "estimator decision bias (§5 extension)").with_default("0"))
+        .opt(OptSpec::flag("randomized", "use randomized SVD refresh (§5 extension)"))
+        .opt(OptSpec::value("adaptive-energy", "adaptive rank: spectral energy fraction (overrides --ranks)"))
+        .opt(OptSpec::flag("quiet", "suppress per-epoch logs"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let profile = profile_from(&parsed)?;
+    let ranks = parsed.get_ranks("ranks")?.unwrap_or_default();
+    let mut est_cfg = if ranks.is_empty() {
+        EstimatorConfig::control()
+    } else {
+        EstimatorConfig::fixed(&ranks)
+    };
+    est_cfg.bias = parsed.get_f64("bias")?.unwrap_or(0.0) as f32;
+    est_cfg.randomized = parsed.flag("randomized");
+    est_cfg.adaptive_energy = parsed.get_f64("adaptive-energy")?;
+
+    eprintln!(
+        "training {} ({:?}) estimator={}",
+        profile.name,
+        profile.net.layers,
+        est_cfg.label()
+    );
+    let mut data = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    let mut trainer = Trainer::new(profile.train.clone());
+    trainer.options.quiet = parsed.flag("quiet");
+
+    let test_err = if est_cfg.is_control() {
+        trainer.train(&mut net, &mut data, &mut NoGater);
+        evaluate_error(&net, &NoGater, &data.test)
+    } else {
+        let mut gater = SignEstimatorSet::fit(&net, &est_cfg, profile.train.seed ^ 0x5E7);
+        trainer.train(&mut net, &mut data, &mut gater);
+        gater.refresh(&net);
+        evaluate_error(&net, &gater, &data.test)
+    };
+    println!("final test error: {:.2}%", test_err * 100.0);
+    Ok(())
+}
+
+fn cmd_train_pjrt(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new(
+        "train-pjrt",
+        "train through the AOT train_step artifact (L3→L2→L1)",
+    ))
+    .opt(OptSpec::value("artifacts", "artifacts directory").with_default("artifacts"))
+    .opt(OptSpec::flag("quiet", "suppress per-epoch logs"))
+    .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let profile = profile_from(&parsed)?;
+    let engine = Arc::new(Engine::load(Path::new(parsed.get("artifacts").unwrap()))?);
+    eprintln!("pjrt platform: {}", engine.platform());
+
+    let mut data = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let net = Mlp::init(&profile.net, &mut rng);
+    let mut rt = ModelRuntime::from_mlp(engine, &profile.name, &net)?;
+    let mut sched = condcomp::coordinator::TrainingScheduler::new(profile.train.clone());
+    sched.quiet = parsed.flag("quiet");
+    let history = sched.train(&mut rt, &mut data)?;
+    if let Some(last) = history.last() {
+        println!(
+            "final valid error: control {:.2}%  estimator-augmented {:.2}%",
+            last.valid_error * 100.0,
+            last.valid_error_ae * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("serve", "start the serving coordinator"))
+        .opt(OptSpec::value("addr", "bind address").with_default("127.0.0.1:7878"))
+        .opt(OptSpec::value("ranks", "estimator ranks (default: scaled 50-35-25…)"))
+        .opt(OptSpec::value("train-epochs", "epochs to train before serving").with_default("2"))
+        .opt(OptSpec::value("max-wait-ms", "dynamic batching window").with_default("2"))
+        .opt(OptSpec::value("workers", "worker threads").with_default("1"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let mut profile = profile_from(&parsed)?;
+    profile.train.epochs = parsed.get_usize("train-epochs")?.unwrap_or(2);
+
+    eprintln!("preparing model ({})…", profile.name);
+    let mut data = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    let trainer = Trainer::new(profile.train.clone());
+    trainer.train(&mut net, &mut data, &mut NoGater);
+
+    let ranks = match parsed.get_ranks("ranks")? {
+        Some(r) if !r.is_empty() => r,
+        _ => {
+            let paper = ExperimentProfile::mnist_paper();
+            let base: Vec<usize> =
+                vec![50, 35, 25, 20, 15][..profile.net.num_estimated_layers()].to_vec();
+            profile.scale_ranks(&base, &paper)
+        }
+    };
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
+    let backend = Arc::new(NativeBackend::new(net, est, 64));
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            addr: parsed.get("addr").unwrap().to_string(),
+            max_wait: std::time::Duration::from_millis(
+                parsed.get_usize("max-wait-ms")?.unwrap_or(2) as u64,
+            ),
+            workers: parsed.get_usize("workers")?.unwrap_or(1),
+        },
+    )?;
+    println!("serving on {} (estimator ranks {ranks:?}); Ctrl-C to stop", server.local_addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("experiment", "regenerate a paper table/figure"))
+        .opt(OptSpec::value("out", "output directory").with_default("results"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") || parsed.positional.is_empty() {
+        print!("{}", cmd.help());
+        println!("\nexperiments: {}  (or 'all')", condcomp::experiments::ALL_IDS.join(", "));
+        return Ok(());
+    }
+    let id = parsed.positional[0].as_str();
+    // Pick a dataset-appropriate default profile for svhn experiments.
+    let mut parsed2 = parsed.clone();
+    if (id == "fig3" || id == "table2") && parsed.get("profile") == Some("mnist-small") {
+        parsed2 = cmd.parse(&{
+            let mut v = args.to_vec();
+            v.push("--profile".into());
+            v.push("svhn-small".into());
+            v
+        })?;
+    }
+    let profile = profile_from(&parsed2)?;
+    let out = Path::new(parsed.get("out").unwrap()).join(&profile.name);
+    condcomp::experiments::run(id, &profile, &out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_bench_flops(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("bench-flops", "print the §3.4 analytic cost model"))
+        .opt(OptSpec::value("alpha", "activation density").with_default("0.1"))
+        .opt(OptSpec::value("rank-frac", "rank as a fraction of min(d,h)").with_default("0.05"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let profile = profile_from(&parsed)?;
+    let alpha = parsed.get_f64("alpha")?.unwrap_or(0.1);
+    let rf = parsed.get_f64("rank-frac")?.unwrap_or(0.05);
+    println!("architecture {:?}, α={alpha}, k={rf}·min(d,h)", profile.net.layers);
+    println!("{:<8} {:>10} {:>6} {:>14} {:>14} {:>10}", "layer", "shape", "k", "F_nn", "F_ae", "speedup");
+    let mut costs = Vec::new();
+    for l in 0..profile.net.layers.len() - 2 {
+        let (d, h) = (profile.net.layers[l], profile.net.layers[l + 1]);
+        let k = ((d.min(h) as f64 * rf) as usize).max(1);
+        let c = LayerCost::new(d, h, k, alpha);
+        println!(
+            "{:<8} {:>10} {:>6} {:>14.0} {:>14.0} {:>9.2}×",
+            l,
+            format!("{d}×{h}"),
+            k,
+            c.f_nn(),
+            c.f_ae(),
+            c.speedup()
+        );
+        costs.push(c);
+    }
+    println!("whole network (Eq. 11): {:.2}×", condcomp::cost::network_speedup(&costs));
+    for c in &costs {
+        if let Some(kmax) = c.max_profitable_rank() {
+            println!(
+                "  {}×{}: max profitable rank {} @ α={alpha}; max profitable α {:.2} @ k={}",
+                c.d, c.h, kmax,
+                c.max_profitable_alpha().unwrap_or(0.0),
+                c.k
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("datagen", "dump a synthetic corpus to .npy"))
+        .opt(OptSpec::value("out", "output directory").with_default("data-out"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let profile = profile_from(&parsed)?;
+    let out = Path::new(parsed.get("out").unwrap());
+    std::fs::create_dir_all(out)?;
+    let ds = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    for (name, split) in [("train", &ds.train), ("valid", &ds.valid), ("test", &ds.test)] {
+        condcomp::io::npy::write_mat(&out.join(format!("{name}_x.npy")), &split.x)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let y: Vec<f32> = split.y.iter().map(|&v| v as f32).collect();
+        condcomp::io::npy::write_vec(&out.join(format!("{name}_y.npy")), &y)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("{name}: {} examples → {}", split.len(), out.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Activation functions and the softmax/NLL output head.
+
+use crate::linalg::Mat;
+
+/// Rectified linear: `max(0, x)` (paper Eq. 3).
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    if x > 0.0 { x } else { 0.0 }
+}
+
+/// Apply ReLU in place.
+pub fn relu_inplace(m: &mut Mat) {
+    m.map_inplace(relu);
+}
+
+/// Derivative mask of ReLU w.r.t. its *output* (1 where output > 0).
+#[inline]
+pub fn relu_grad_from_output(y: f32) -> f32 {
+    if y > 0.0 { 1.0 } else { 0.0 }
+}
+
+/// Row-wise softmax, numerically stabilized by max subtraction.
+pub fn softmax_rows(logits: &Mat) -> Mat {
+    let (n, k) = logits.shape();
+    let mut out = Mat::zeros(n, k);
+    for i in 0..n {
+        let row = logits.row(i);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        let orow = out.row_mut(i);
+        for j in 0..k {
+            let e = (row[j] - m).exp();
+            orow[j] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for v in orow {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Mean negative log-likelihood of the true classes under row-softmax
+/// probabilities. `probs` must already be softmaxed.
+pub fn nll_loss(probs: &Mat, labels: &[usize]) -> f32 {
+    assert_eq!(probs.rows(), labels.len());
+    let mut total = 0.0f64;
+    for (i, &y) in labels.iter().enumerate() {
+        total -= (probs[(i, y)].max(1e-12) as f64).ln();
+    }
+    (total / labels.len() as f64) as f32
+}
+
+/// Gradient of mean NLL w.r.t. the logits: `(softmax − one_hot) / n`.
+pub fn nll_grad(probs: &Mat, labels: &[usize]) -> Mat {
+    let (n, k) = probs.shape();
+    assert_eq!(n, labels.len());
+    let invn = 1.0 / n as f32;
+    let mut g = Mat::zeros(n, k);
+    for i in 0..n {
+        let prow = probs.row(i);
+        let grow = g.row_mut(i);
+        for j in 0..k {
+            grow[j] = prow[j] * invn;
+        }
+        grow[labels[i]] -= invn;
+    }
+    g
+}
+
+/// Row-wise argmax (predicted class).
+pub fn argmax_rows(m: &Mat) -> Vec<usize> {
+    (0..m.rows())
+        .map(|i| {
+            let row = m.row(i);
+            let mut best = 0;
+            for j in 1..row.len() {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Classification error rate in `[0, 1]`.
+pub fn error_rate(predicted: &[usize], labels: &[usize]) -> f32 {
+    assert_eq!(predicted.len(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let wrong = predicted.iter().zip(labels).filter(|(p, y)| p != y).count();
+    wrong as f32 / labels.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn relu_behaviour() {
+        assert_eq!(relu(-2.0), 0.0);
+        assert_eq!(relu(3.0), 3.0);
+        assert_eq!(relu_grad_from_output(0.0), 0.0);
+        assert_eq!(relu_grad_from_output(0.1), 1.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        property("softmax normalizes", 16, |rng| {
+            let n = rng.index(6) + 1;
+            let k = rng.index(6) + 2;
+            let logits = Mat::randn(n, k, 3.0, rng);
+            let p = softmax_rows(&logits);
+            for i in 0..n {
+                let s: f32 = p.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+                assert!(p.row(i).iter().all(|&v| v >= 0.0));
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![101.0, 102.0, 103.0]);
+        assert!(softmax_rows(&a).max_abs_diff(&softmax_rows(&b)) < 1e-6);
+    }
+
+    #[test]
+    fn nll_of_perfect_prediction_is_zero() {
+        let probs = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert!(nll_loss(&probs, &[0, 1]) < 1e-6);
+    }
+
+    #[test]
+    fn nll_grad_matches_finite_difference() {
+        let mut rng = Pcg32::seeded(3);
+        let logits = Mat::randn(3, 4, 1.0, &mut rng);
+        let labels = vec![1, 3, 0];
+        let g = nll_grad(&softmax_rows(&logits), &labels);
+        let eps = 1e-3f32;
+        for r in 0..3 {
+            for c in 0..4 {
+                let mut plus = logits.clone();
+                plus[(r, c)] += eps;
+                let mut minus = logits.clone();
+                minus[(r, c)] -= eps;
+                let num = (nll_loss(&softmax_rows(&plus), &labels)
+                    - nll_loss(&softmax_rows(&minus), &labels))
+                    / (2.0 * eps);
+                assert!(
+                    (num - g[(r, c)]).abs() < 1e-3,
+                    "grad mismatch at ({r},{c}): numeric {num} vs analytic {}",
+                    g[(r, c)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_and_error_rate() {
+        let m = Mat::from_vec(2, 3, vec![0.1, 0.7, 0.2, 0.9, 0.05, 0.05]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+        assert_eq!(error_rate(&[1, 0], &[1, 1]), 0.5);
+        assert_eq!(error_rate(&[], &[]), 0.0);
+    }
+}

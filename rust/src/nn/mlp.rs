@@ -1,0 +1,377 @@
+//! The multilayer perceptron: parameters, forward (with optional activation
+//! gating and dropout), and backpropagation.
+
+use super::activations::{argmax_rows, relu_inplace, softmax_rows};
+use crate::config::NetConfig;
+use crate::linalg::{matmul, Mat};
+use crate::util::Pcg32;
+
+/// Supplies the paper's `S_l` mask (Eq. 5) for a hidden layer, given that
+/// layer's *input* activations `a_l`. Returning `None` means "no gating"
+/// (compute the layer densely).
+pub trait ActivationGater {
+    fn gate(&self, layer: usize, input: &Mat) -> Option<Mat>;
+}
+
+/// The trivial gater: never gates (control network).
+pub struct NoGater;
+
+impl ActivationGater for NoGater {
+    fn gate(&self, _layer: usize, _input: &Mat) -> Option<Mat> {
+        None
+    }
+}
+
+/// Everything the backward pass needs from a forward pass.
+pub struct ForwardTrace {
+    /// Per-layer inputs: `inputs[0]` is the batch, `inputs[l]` the (gated,
+    /// dropped-out) activation entering weight layer `l`.
+    pub inputs: Vec<Mat>,
+    /// Post-ReLU, post-gate, pre-dropout activations of the hidden layers
+    /// (used for the ℓ1 penalty term and sparsity metrics).
+    pub hidden: Vec<Mat>,
+    /// Dropout masks actually applied (empty when not training).
+    pub dropout_masks: Vec<Mat>,
+    /// Final logits.
+    pub logits: Mat,
+}
+
+/// A fully-connected ReLU network with softmax output.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// `weights[l]` is `layers[l] × layers[l+1]`.
+    pub weights: Vec<Mat>,
+    /// `biases[l]` has `layers[l+1]` entries.
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    /// Initialize per the paper (§3.5): `w ~ N(0, σ²)`, biases = `bias_init`
+    /// ("set to 1 in order to encourage the neurons to operate in their
+    /// non-saturated region").
+    pub fn init(cfg: &NetConfig, rng: &mut Pcg32) -> Mlp {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..cfg.num_weight_layers() {
+            weights.push(Mat::randn(cfg.layers[l], cfg.layers[l + 1], cfg.weight_sigma, rng));
+            biases.push(vec![cfg.bias_init; cfg.layers[l + 1]]);
+        }
+        Mlp { weights, biases }
+    }
+
+    /// Number of weight layers.
+    pub fn depth(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Layer widths, input first.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        let mut v = vec![self.weights[0].rows()];
+        v.extend(self.weights.iter().map(|w| w.cols()));
+        v
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.weights.iter().map(|w| w.rows() * w.cols()).sum::<usize>()
+            + self.biases.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    /// Forward pass.
+    ///
+    /// * `gater` — supplies the estimator mask per hidden layer (Eq. 5);
+    ///   `NoGater` for the control path.
+    /// * `dropout` — `Some((p, rng))` enables inverted dropout on hidden
+    ///   activations (train time); `None` disables it (inference — inverted
+    ///   dropout needs no weight rescaling at test time, numerically
+    ///   equivalent to the paper's halve-at-test convention in expectation).
+    pub fn forward(
+        &self,
+        x: &Mat,
+        gater: &dyn ActivationGater,
+        mut dropout: Option<(f32, &mut Pcg32)>,
+    ) -> ForwardTrace {
+        let depth = self.depth();
+        let mut inputs = Vec::with_capacity(depth + 1);
+        let mut hidden = Vec::with_capacity(depth.saturating_sub(1));
+        let mut dropout_masks = Vec::new();
+        inputs.push(x.clone());
+
+        let mut current = x.clone();
+        for l in 0..depth - 1 {
+            // Ask for the gate BEFORE computing the layer — that is the
+            // paper's contract (the estimator sees a_l only).
+            let gate = gater.gate(l, &current);
+            let mut z = matmul(&current, &self.weights[l]);
+            add_bias(&mut z, &self.biases[l]);
+            relu_inplace(&mut z);
+            if let Some(mask) = gate {
+                debug_assert_eq!(mask.shape(), z.shape());
+                z = z.zip(&mask, |a, m| a * m);
+            }
+            hidden.push(z.clone());
+            if let Some((p, ref mut rng)) = dropout {
+                let keep = 1.0 - p;
+                let inv = 1.0 / keep;
+                let mask = Mat::from_fn(z.rows(), z.cols(), |_, _| {
+                    if rng.bernoulli(keep) { inv } else { 0.0 }
+                });
+                z = z.zip(&mask, |a, m| a * m);
+                dropout_masks.push(mask);
+            }
+            inputs.push(z.clone());
+            current = z;
+        }
+        let mut logits = matmul(&current, &self.weights[depth - 1]);
+        add_bias(&mut logits, &self.biases[depth - 1]);
+        ForwardTrace { inputs, hidden, dropout_masks, logits }
+    }
+
+    /// Inference logits (no dropout).
+    pub fn logits(&self, x: &Mat, gater: &dyn ActivationGater) -> Mat {
+        self.forward(x, gater, None).logits
+    }
+
+    /// Predicted classes.
+    pub fn predict(&self, x: &Mat, gater: &dyn ActivationGater) -> Vec<usize> {
+        argmax_rows(&self.logits(x, gater))
+    }
+
+    /// Class probabilities.
+    pub fn predict_proba(&self, x: &Mat, gater: &dyn ActivationGater) -> Mat {
+        softmax_rows(&self.logits(x, gater))
+    }
+
+    /// Backpropagation from a logits-gradient. Returns `(dW, db)` per layer.
+    ///
+    /// `l1_activation` adds the subgradient of `λ·Σ‖a_l‖₁` (Eq. 7) at each
+    /// *live* hidden unit (a_l ≥ 0 after ReLU, so the subgradient is +λ on
+    /// active units, 0 on inactive ones).
+    pub fn backward(
+        &self,
+        trace: &ForwardTrace,
+        dlogits: &Mat,
+        l1_activation: f32,
+    ) -> (Vec<Mat>, Vec<Vec<f32>>) {
+        let depth = self.depth();
+        let mut dws = vec![Mat::zeros(0, 0); depth];
+        let mut dbs = vec![Vec::new(); depth];
+        let mut delta = dlogits.clone(); // grad wrt pre-activation of layer l
+
+        for l in (0..depth).rev() {
+            // Parameter grads for this layer.
+            dws[l] = matmul(&trace.inputs[l].transpose(), &delta);
+            dbs[l] = col_sums(&delta);
+            if l == 0 {
+                break;
+            }
+            // Grad wrt this layer's input = delta · Wᵀ …
+            let mut dinput = matmul(&delta, &self.weights[l].transpose());
+            // … through dropout …
+            if !trace.dropout_masks.is_empty() {
+                dinput = dinput.zip(&trace.dropout_masks[l - 1], |g, m| g * m);
+            }
+            // … plus the ℓ1 activation penalty on the (pre-dropout) hidden
+            // activation, then through the ReLU/gate zero pattern.
+            let h = &trace.hidden[l - 1];
+            delta = Mat::from_fn(dinput.rows(), dinput.cols(), |i, j| {
+                let live = h[(i, j)] > 0.0;
+                if live { dinput[(i, j)] + l1_activation } else { 0.0 }
+            });
+        }
+        (dws, dbs)
+    }
+
+    /// Mean activation density over the hidden layers of a forward trace
+    /// (the paper's sparsity coefficient α, §3.4).
+    pub fn mean_density(trace: &ForwardTrace) -> f32 {
+        if trace.hidden.is_empty() {
+            return 0.0;
+        }
+        trace.hidden.iter().map(|h| h.density()).sum::<f32>() / trace.hidden.len() as f32
+    }
+}
+
+/// Add a bias row-vector to every row.
+pub fn add_bias(m: &mut Mat, bias: &[f32]) {
+    assert_eq!(m.cols(), bias.len());
+    for i in 0..m.rows() {
+        let row = m.row_mut(i);
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Column sums (bias gradient).
+fn col_sums(m: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols()];
+    for i in 0..m.rows() {
+        for (o, &v) in out.iter_mut().zip(m.row(i)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activations::{nll_grad, nll_loss, softmax_rows};
+    use crate::util::Pcg32;
+
+    fn tiny_cfg() -> NetConfig {
+        NetConfig { layers: vec![5, 7, 6, 3], weight_sigma: 0.5, bias_init: 0.1 }
+    }
+
+    #[test]
+    fn shapes_and_param_count() {
+        let mut rng = Pcg32::seeded(1);
+        let net = Mlp::init(&tiny_cfg(), &mut rng);
+        assert_eq!(net.depth(), 3);
+        assert_eq!(net.layer_sizes(), vec![5, 7, 6, 3]);
+        assert_eq!(net.num_params(), 5 * 7 + 7 * 6 + 6 * 3 + 7 + 6 + 3);
+        let x = Mat::randn(4, 5, 1.0, &mut rng);
+        let t = net.forward(&x, &NoGater, None);
+        assert_eq!(t.logits.shape(), (4, 3));
+        assert_eq!(t.hidden.len(), 2);
+        assert_eq!(t.inputs.len(), 3);
+    }
+
+    #[test]
+    fn forward_is_deterministic_without_dropout() {
+        let mut rng = Pcg32::seeded(2);
+        let net = Mlp::init(&tiny_cfg(), &mut rng);
+        let x = Mat::randn(3, 5, 1.0, &mut rng);
+        let a = net.logits(&x, &NoGater);
+        let b = net.logits(&x, &NoGater);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dropout_zeroes_and_scales() {
+        let mut rng = Pcg32::seeded(3);
+        let net = Mlp::init(&tiny_cfg(), &mut rng);
+        let x = Mat::randn(64, 5, 1.0, &mut rng);
+        let mut drop_rng = Pcg32::seeded(99);
+        let t = net.forward(&x, &NoGater, Some((0.5, &mut drop_rng)));
+        assert_eq!(t.dropout_masks.len(), 2);
+        let zeros = t.dropout_masks[0]
+            .as_slice()
+            .iter()
+            .filter(|&&m| m == 0.0)
+            .count() as f32;
+        let total = t.dropout_masks[0].as_slice().len() as f32;
+        let rate = zeros / total;
+        assert!((rate - 0.5).abs() < 0.08, "dropout rate {rate}");
+        // Non-zero mask entries are 1/keep = 2.0 (inverted dropout).
+        assert!(t.dropout_masks[0].as_slice().iter().all(|&m| m == 0.0 || m == 2.0));
+    }
+
+    /// Full-network finite-difference gradient check, including the ℓ1
+    /// activation penalty — the core correctness test for the trainer.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg32::seeded(7);
+        let cfg = NetConfig { layers: vec![4, 6, 5, 3], weight_sigma: 0.6, bias_init: 0.05 };
+        let mut net = Mlp::init(&cfg, &mut rng);
+        let x = Mat::randn(5, 4, 1.0, &mut rng);
+        let labels = vec![0, 2, 1, 2, 0];
+        let l1 = 1e-3f32;
+
+        let loss_of = |net: &Mlp| {
+            let t = net.forward(&x, &NoGater, None);
+            let base = nll_loss(&softmax_rows(&t.logits), &labels);
+            let penalty: f32 = t.hidden.iter().map(|h| h.l1_norm()).sum::<f32>() * l1;
+            base + penalty
+        };
+
+        let t = net.forward(&x, &NoGater, None);
+        let dlogits = nll_grad(&softmax_rows(&t.logits), &labels);
+        let (dws, dbs) = net.backward(&t, &dlogits, l1);
+
+        let eps = 1e-2f32;
+        // Sample a few coordinates of each parameter tensor.
+        let mut checked = 0;
+        for l in 0..net.depth() {
+            let (rows, cols) = net.weights[l].shape();
+            for _ in 0..6 {
+                let (r, c) = (rng.index(rows), rng.index(cols));
+                let orig = net.weights[l][(r, c)];
+                net.weights[l][(r, c)] = orig + eps;
+                let lp = loss_of(&net);
+                net.weights[l][(r, c)] = orig - eps;
+                let lm = loss_of(&net);
+                net.weights[l][(r, c)] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                let ana = dws[l][(r, c)];
+                assert!(
+                    (num - ana).abs() < 2e-2 + 0.05 * num.abs().max(ana.abs()),
+                    "dW[{l}][{r},{c}] numeric {num} vs analytic {ana}"
+                );
+                checked += 1;
+            }
+            let b = rng.index(net.biases[l].len());
+            let orig = net.biases[l][b];
+            net.biases[l][b] = orig + eps;
+            let lp = loss_of(&net);
+            net.biases[l][b] = orig - eps;
+            let lm = loss_of(&net);
+            net.biases[l][b] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = dbs[l][b];
+            assert!(
+                (num - ana).abs() < 2e-2 + 0.05 * num.abs().max(ana.abs()),
+                "db[{l}][{b}] numeric {num} vs analytic {ana}"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 21);
+    }
+
+    #[test]
+    fn gater_zeroes_selected_units() {
+        struct KillFirst;
+        impl ActivationGater for KillFirst {
+            fn gate(&self, _layer: usize, input: &Mat) -> Option<Mat> {
+                // Zero the first hidden unit of every row. Width of the gated
+                // layer differs per layer, so infer from input: we return
+                // None for mismatch safety in this test via fixed width.
+                let _ = input;
+                None
+            }
+        }
+        // Direct mask check through forward: gate layer 0 fully off.
+        struct AllOff;
+        impl ActivationGater for AllOff {
+            fn gate(&self, layer: usize, input: &Mat) -> Option<Mat> {
+                if layer == 0 {
+                    Some(Mat::zeros(input.rows(), 7))
+                } else {
+                    None
+                }
+            }
+        }
+        let mut rng = Pcg32::seeded(11);
+        let net = Mlp::init(&tiny_cfg(), &mut rng);
+        let x = Mat::randn(3, 5, 1.0, &mut rng);
+        let t = net.forward(&x, &AllOff, None);
+        assert!(t.hidden[0].as_slice().iter().all(|&v| v == 0.0));
+        // With the first layer dead, logits are input-independent.
+        let x2 = Mat::randn(3, 5, 1.0, &mut rng);
+        let t2 = net.forward(&x2, &AllOff, None);
+        assert!(t.logits.max_abs_diff(&t2.logits) < 1e-6);
+        let _ = KillFirst; // silence unused struct warning path
+    }
+
+    #[test]
+    fn density_reflects_relu_sparsity() {
+        let mut rng = Pcg32::seeded(13);
+        // Strongly negative biases → all-dead hidden units.
+        let cfg = NetConfig { layers: vec![4, 8, 3], weight_sigma: 0.01, bias_init: -5.0 };
+        let net = Mlp::init(&cfg, &mut rng);
+        let x = Mat::randn(6, 4, 1.0, &mut rng);
+        let t = net.forward(&x, &NoGater, None);
+        assert_eq!(Mlp::mean_density(&t), 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The reference neural-network trainer — a feature-for-feature rebuild of
+//! the substrate the paper used (Palm's Deep Learning Toolbox, §3.5):
+//! rectified-linear hidden units, softmax + negative log-likelihood output,
+//! dropout (p = 0.5 on hidden layers), ℓ1 activation penalty (Eq. 7),
+//! ℓ2 weight penalty, max-norm constraint, and SGD with the paper's
+//! learning-rate decay and momentum growth schedules.
+//!
+//! Conditional computation hooks in through [`ActivationGater`]: the forward
+//! pass asks the gater for a 0/1 mask per hidden layer (the paper's `S_l`,
+//! Eq. 5) and multiplies it into the post-ReLU activations — "the activation
+//! estimator is immediately applied before the next layer activations are
+//! used" (§3.5). Training backpropagates through the mask exactly like a
+//! ReLU zero: gated units receive no gradient.
+
+pub mod activations;
+pub mod mlp;
+pub mod optimizer;
+pub mod trainer;
+
+pub use mlp::{ActivationGater, ForwardTrace, Mlp, NoGater};
+pub use optimizer::SgdMomentum;
+pub use trainer::{EpochStats, TrainOptions, Trainer};

@@ -1,0 +1,200 @@
+//! SGD with momentum, the paper's schedules (§3.5), ℓ2 weight decay, and the
+//! max-norm constraint (Table 1 "Maximum Norm").
+
+use super::mlp::Mlp;
+use crate::config::TrainConfig;
+use crate::linalg::Mat;
+
+/// Momentum SGD state.
+pub struct SgdMomentum {
+    vel_w: Vec<Mat>,
+    vel_b: Vec<Vec<f32>>,
+    /// Current epoch (drives both schedules).
+    epoch: usize,
+    cfg: TrainConfig,
+}
+
+impl SgdMomentum {
+    pub fn new(net: &Mlp, cfg: TrainConfig) -> SgdMomentum {
+        SgdMomentum {
+            vel_w: net.weights.iter().map(|w| Mat::zeros(w.rows(), w.cols())).collect(),
+            vel_b: net.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
+            epoch: 0,
+            cfg,
+        }
+    }
+
+    /// γₙ = γ₀ · λⁿ (§3.5).
+    pub fn learning_rate(&self) -> f32 {
+        self.cfg.lr * self.cfg.lr_decay.powi(self.epoch as i32)
+    }
+
+    /// νₙ = min(ν_max, ν₀ · βⁿ) (§3.5; the paper's `max(...)` is a typo —
+    /// momentum grows toward its ceiling).
+    pub fn momentum(&self) -> f32 {
+        (self.cfg.momentum * self.cfg.momentum_growth.powi(self.epoch as i32))
+            .min(self.cfg.max_momentum)
+    }
+
+    /// Advance the schedules at an epoch boundary.
+    pub fn next_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Apply one minibatch update:
+    /// `v ← ν·v − γ·(∇W + ℓ2·W)`, `W ← W + v`, then max-norm projection of
+    /// each unit's incoming weight column.
+    pub fn step(&mut self, net: &mut Mlp, dws: &[Mat], dbs: &[Vec<f32>]) {
+        let lr = self.learning_rate();
+        let mu = self.momentum();
+        let l2 = self.cfg.l2_weight;
+        for l in 0..net.depth() {
+            {
+                let vw = &mut self.vel_w[l];
+                let w = &mut net.weights[l];
+                let dw = &dws[l];
+                debug_assert_eq!(vw.shape(), dw.shape());
+                let (vs, ws, ds) =
+                    (vw.as_mut_slice(), w.as_mut_slice(), dw.as_slice());
+                for i in 0..vs.len() {
+                    vs[i] = mu * vs[i] - lr * (ds[i] + l2 * ws[i]);
+                    ws[i] += vs[i];
+                }
+            }
+            {
+                let vb = &mut self.vel_b[l];
+                let b = &mut net.biases[l];
+                let db = &dbs[l];
+                for i in 0..vb.len() {
+                    vb[i] = mu * vb[i] - lr * db[i];
+                    b[i] += vb[i];
+                }
+            }
+            if self.cfg.max_norm > 0.0 {
+                clamp_column_norms(&mut net.weights[l], self.cfg.max_norm);
+            }
+        }
+    }
+}
+
+/// Project each column (a hidden unit's incoming weights) onto the ℓ2 ball of
+/// radius `max_norm`.
+pub fn clamp_column_norms(w: &mut Mat, max_norm: f32) {
+    let (rows, cols) = w.shape();
+    for j in 0..cols {
+        let mut sq = 0.0f64;
+        for i in 0..rows {
+            let v = w[(i, j)] as f64;
+            sq += v * v;
+        }
+        let norm = sq.sqrt() as f32;
+        if norm > max_norm {
+            let scale = max_norm / norm;
+            for i in 0..rows {
+                w[(i, j)] *= scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentProfile, NetConfig};
+    use crate::util::Pcg32;
+
+    fn cfg() -> TrainConfig {
+        let mut c = ExperimentProfile::mnist_tiny().train;
+        c.lr = 0.1;
+        c.lr_decay = 0.9;
+        c.momentum = 0.5;
+        c.momentum_growth = 1.2;
+        c.max_momentum = 0.8;
+        c.l2_weight = 0.0;
+        c.max_norm = 0.0;
+        c
+    }
+
+    fn tiny_net(rng: &mut Pcg32) -> Mlp {
+        Mlp::init(&NetConfig { layers: vec![3, 4, 2], weight_sigma: 0.3, bias_init: 0.0 }, rng)
+    }
+
+    #[test]
+    fn schedules_follow_paper() {
+        let mut rng = Pcg32::seeded(1);
+        let net = tiny_net(&mut rng);
+        let mut opt = SgdMomentum::new(&net, cfg());
+        assert!((opt.learning_rate() - 0.1).abs() < 1e-7);
+        assert!((opt.momentum() - 0.5).abs() < 1e-7);
+        opt.next_epoch();
+        assert!((opt.learning_rate() - 0.09).abs() < 1e-7);
+        assert!((opt.momentum() - 0.6).abs() < 1e-7);
+        for _ in 0..10 {
+            opt.next_epoch();
+        }
+        assert!((opt.momentum() - 0.8).abs() < 1e-7, "momentum capped at max");
+    }
+
+    #[test]
+    fn step_descends_simple_quadratic() {
+        // Minimize ||W||² via grads dW = 2W: weights must shrink.
+        let mut rng = Pcg32::seeded(2);
+        let mut net = tiny_net(&mut rng);
+        let mut opt = SgdMomentum::new(&net, cfg());
+        let norm0: f32 = net.weights.iter().map(|w| w.fro_norm()).sum();
+        for _ in 0..50 {
+            let dws: Vec<Mat> = net.weights.iter().map(|w| w.map(|x| 2.0 * x)).collect();
+            let dbs: Vec<Vec<f32>> =
+                net.biases.iter().map(|b| b.iter().map(|&x| 2.0 * x).collect()).collect();
+            opt.step(&mut net, &dws, &dbs);
+        }
+        let norm1: f32 = net.weights.iter().map(|w| w.fro_norm()).sum();
+        assert!(norm1 < norm0 * 0.2, "weights should shrink: {norm0} -> {norm1}");
+    }
+
+    #[test]
+    fn l2_decay_shrinks_weights_with_zero_grads() {
+        let mut rng = Pcg32::seeded(3);
+        let mut net = tiny_net(&mut rng);
+        let mut c = cfg();
+        c.l2_weight = 0.5;
+        let mut opt = SgdMomentum::new(&net, c);
+        let w0 = net.weights[0].fro_norm();
+        let dws: Vec<Mat> = net.weights.iter().map(|w| Mat::zeros(w.rows(), w.cols())).collect();
+        let dbs: Vec<Vec<f32>> = net.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        for _ in 0..10 {
+            opt.step(&mut net, &dws, &dbs);
+        }
+        assert!(net.weights[0].fro_norm() < w0);
+    }
+
+    #[test]
+    fn max_norm_clamps_columns() {
+        let mut w = Mat::from_vec(2, 2, vec![3.0, 0.1, 4.0, 0.1]);
+        clamp_column_norms(&mut w, 1.0);
+        // Column 0 had norm 5 → scaled to 1; column 1 untouched.
+        let n0 = (w[(0, 0)] * w[(0, 0)] + w[(1, 0)] * w[(1, 0)]).sqrt();
+        assert!((n0 - 1.0).abs() < 1e-5);
+        assert!((w[(0, 1)] - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accelerates_along_constant_gradient() {
+        let mut rng = Pcg32::seeded(5);
+        let mut net = tiny_net(&mut rng);
+        net.weights[0].as_mut_slice().fill(0.0);
+        let mut opt = SgdMomentum::new(&net, cfg());
+        let ones: Vec<Mat> =
+            net.weights.iter().map(|w| Mat::full(w.rows(), w.cols(), 1.0)).collect();
+        let dbs: Vec<Vec<f32>> = net.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        opt.step(&mut net, &ones, &dbs);
+        let after1 = -net.weights[0][(0, 0)];
+        opt.step(&mut net, &ones, &dbs);
+        let after2 = -net.weights[0][(0, 0)] - after1;
+        assert!(after2 > after1, "second step larger under momentum: {after1} vs {after2}");
+    }
+}

@@ -1,0 +1,217 @@
+//! PJRT client wrapper with a compile-once executable cache.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::linalg::Mat;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A loaded PJRT CPU engine over one artifacts directory.
+///
+/// Executables are compiled lazily on first use and cached by artifact name;
+/// compilation happens once per process, execution is the hot path. The
+/// cache is mutex-guarded so the engine can be shared across server threads.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over `dir` (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling if needed) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with positional literal inputs (borrowed — no
+    /// copies on the hot path); returns the decomposed output tuple.
+    pub fn execute(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        out.to_tuple().map_err(|e| anyhow!("untuple result of {name}: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling helpers
+// ---------------------------------------------------------------------------
+
+/// Row-major `Mat` → rank-2 f32 literal.
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    xla::Literal::vec1(m.as_slice())
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Rank-1 f32 literal from a slice.
+pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Rank-1 i32 literal (labels).
+pub fn i32_to_literal(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Rank-1 u32 literal (PRNG keys).
+pub fn u32_to_literal(v: &[u32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 scalar literal.
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Rank-2 f32 literal → `Mat` (shape taken from the literal).
+pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims = shape.dims();
+    let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal data: {e:?}"))?;
+    match dims.len() {
+        2 => Ok(Mat::from_vec(dims[0] as usize, dims[1] as usize, data)),
+        1 => Ok(Mat::from_vec(1, dims[0] as usize, data)),
+        0 => Ok(Mat::from_vec(1, 1, data)),
+        d => Err(anyhow!("expected rank <= 2 literal, got rank {d}")),
+    }
+}
+
+/// Scalar f32 from a rank-0 literal.
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar literal: {e:?}"))
+}
+
+/// Check a `Mat` against an [`super::manifest::ArgSpec`] shape.
+pub fn check_shape(m: &Mat, spec: &super::manifest::ArgSpec) -> Result<()> {
+    let want: Vec<usize> = spec.shape.clone();
+    let got = vec![m.rows(), m.cols()];
+    let ok = match want.len() {
+        2 => got == want,
+        1 => m.rows() == 1 && m.cols() == want[0],
+        _ => false,
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(anyhow!("argument '{}' expects shape {want:?}, got {got:?}", spec.name))
+    }
+}
+
+/// Convenience: find the specs of a profile, split by role.
+pub struct ProfileArtifacts<'a> {
+    pub fwd: &'a ArtifactSpec,
+    pub fwd_ae: &'a ArtifactSpec,
+    pub train_step: &'a ArtifactSpec,
+}
+
+impl<'a> ProfileArtifacts<'a> {
+    pub fn of(manifest: &'a Manifest, profile: &str) -> Result<ProfileArtifacts<'a>> {
+        let specs = manifest
+            .profile(profile)
+            .ok_or_else(|| anyhow!("profile '{profile}' not in manifest"))?;
+        let find = |suffix: &str| {
+            specs
+                .iter()
+                .find(|s| s.name.ends_with(suffix))
+                .ok_or_else(|| anyhow!("profile '{profile}' missing *{suffix}"))
+        };
+        Ok(ProfileArtifacts {
+            fwd: specs
+                .iter()
+                .find(|s| s.name.ends_with("_fwd"))
+                .ok_or_else(|| anyhow!("profile '{profile}' missing *_fwd"))?,
+            fwd_ae: find("_fwd_ae")?,
+            train_step: find("_train_step")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn mat_literal_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(5, 3, 1.0, &mut rng);
+        let lit = mat_to_literal(&m).unwrap();
+        let back = literal_to_mat(&lit).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_literal(3.25);
+        assert_eq!(literal_to_scalar(&lit).unwrap(), 3.25);
+    }
+
+    #[test]
+    fn shape_check() {
+        use crate::runtime::manifest::ArgSpec;
+        let m = Mat::zeros(4, 8);
+        let ok = ArgSpec { name: "x".into(), shape: vec![4, 8], dtype: "f32".into() };
+        let bad = ArgSpec { name: "x".into(), shape: vec![8, 4], dtype: "f32".into() };
+        assert!(check_shape(&m, &ok).is_ok());
+        assert!(check_shape(&m, &bad).is_err());
+        let v = Mat::zeros(1, 8);
+        let vec_spec = ArgSpec { name: "b".into(), shape: vec![8], dtype: "f32".into() };
+        assert!(check_shape(&v, &vec_spec).is_ok());
+    }
+}

@@ -1,0 +1,187 @@
+//! Typed view of `artifacts/manifest.json` (written by `python/compile/aot.py`).
+
+use crate::io::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One input/output argument of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    pub batch: usize,
+    pub layers: Vec<usize>,
+    pub ranks: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|a| a.name == name)
+    }
+}
+
+/// The whole manifest: artifact specs grouped by profile.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profiles: Vec<(String, Vec<ArtifactSpec>)>,
+}
+
+fn parse_arg(v: &Json) -> Option<ArgSpec> {
+    Some(ArgSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape: v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Option<Vec<_>>>()?,
+        dtype: v
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string(),
+    })
+}
+
+fn parse_usize_arr(v: Option<&Json>) -> Vec<usize> {
+    v.and_then(|a| a.as_arr())
+        .map(|items| items.iter().filter_map(|d| d.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read manifest in {dir:?}: {e} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let profiles_obj = root
+            .get("profiles")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'profiles'"))?;
+        let mut profiles = Vec::new();
+        for (pname, entries) in profiles_obj {
+            let mut specs = Vec::new();
+            for e in entries.as_arr().unwrap_or(&[]) {
+                let spec = (|| -> Option<ArtifactSpec> {
+                    Some(ArtifactSpec {
+                        name: e.get("name")?.as_str()?.to_string(),
+                        file: e.get("file")?.as_str()?.to_string(),
+                        inputs: e
+                            .get("inputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(parse_arg)
+                            .collect::<Option<Vec<_>>>()?,
+                        outputs: e
+                            .get("outputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(parse_arg)
+                            .collect::<Option<Vec<_>>>()?,
+                        batch: e.get("batch")?.as_usize()?,
+                        layers: parse_usize_arr(e.get("layers")),
+                        ranks: parse_usize_arr(e.get("ranks")),
+                    })
+                })()
+                .ok_or_else(|| anyhow::anyhow!("malformed artifact entry in profile {pname}"))?;
+                specs.push(spec);
+            }
+            profiles.push((pname.clone(), specs));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), profiles })
+    }
+
+    /// All artifacts of one profile.
+    pub fn profile(&self, name: &str) -> Option<&[ArtifactSpec]> {
+        self.profiles
+            .iter()
+            .find(|(p, _)| p == name)
+            .map(|(_, specs)| specs.as_slice())
+    }
+
+    /// Find one artifact by full name (e.g. `mnist_tiny_fwd`).
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.profiles
+            .iter()
+            .flat_map(|(_, specs)| specs.iter())
+            .find(|s| s.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join("condcomp-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","version":1,"profiles":{"tiny":[
+                {"name":"tiny_fwd","file":"tiny_fwd.hlo.txt","batch":4,
+                 "layers":[8,6,3],
+                 "inputs":[{"name":"w0","shape":[8,6],"dtype":"f32"},
+                            {"name":"b0","shape":[6],"dtype":"f32"},
+                            {"name":"x","shape":[4,8],"dtype":"f32"}],
+                 "outputs":[{"name":"logits","shape":[4,3],"dtype":"f32"}]}
+            ]}}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let m = Manifest::load(&fixture_dir()).unwrap();
+        assert_eq!(m.profiles.len(), 1);
+        let spec = m.artifact("tiny_fwd").unwrap();
+        assert_eq!(spec.batch, 4);
+        assert_eq!(spec.layers, vec![8, 6, 3]);
+        assert_eq!(spec.input_index("x"), Some(2));
+        assert_eq!(spec.inputs[0].element_count(), 48);
+        assert!(m.path_of(spec).ends_with("tiny_fwd.hlo.txt"));
+        assert!(m.profile("tiny").is_some());
+        assert!(m.profile("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // When the repo's artifacts have been built, validate the real thing.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let fwd = m.artifact("mnist_tiny_fwd").expect("mnist_tiny_fwd in manifest");
+            assert_eq!(fwd.inputs.last().unwrap().name, "x");
+            assert!(m.artifact("mnist_tiny_train_step").is_some());
+            assert!(m.artifact("mnist_tiny_fwd_ae").is_some());
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The AOT bridge: load HLO-text artifacts produced by `python/compile/aot.py`
+//! and execute them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python never runs at request time — `make artifacts` is the only Python
+//! invocation; afterwards the Rust binary is self-contained.
+//!
+//! - [`manifest`] — typed view of `artifacts/manifest.json`.
+//! - [`engine`] — PJRT client + compile-once executable cache.
+//! - [`model_runtime`] — a profile's networks bound to concrete parameters:
+//!   forward (control), forward (estimator-augmented), and train-step.
+
+pub mod manifest;
+pub mod engine;
+pub mod model_runtime;
+
+pub use engine::Engine;
+pub use manifest::{ArgSpec, ArtifactSpec, Manifest};
+pub use model_runtime::ModelRuntime;

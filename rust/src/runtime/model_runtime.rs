@@ -1,0 +1,228 @@
+//! A profile's model bound to concrete parameters, executing through PJRT.
+//!
+//! Owns the parameter state (weights/biases as host matrices + cached device
+//! literals), the momentum state for training, and the estimator factors for
+//! the `_fwd_ae` artifact. The coordinator drives everything through this
+//! type; the SVD refresh itself runs in Rust (`linalg::svd`) — Python stays
+//! build-time only.
+
+use super::engine::{
+    check_shape, i32_to_literal, literal_to_mat, literal_to_scalar, mat_to_literal,
+    scalar_literal, u32_to_literal, vec_to_literal, Engine, ProfileArtifacts,
+};
+use crate::linalg::{LowRank, Mat};
+use crate::nn::Mlp;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Runtime state for one profile.
+pub struct ModelRuntime {
+    pub engine: Arc<Engine>,
+    pub profile: String,
+    fwd_name: String,
+    fwd_ae_name: String,
+    train_name: String,
+    pub batch: usize,
+    pub layers: Vec<usize>,
+    pub ranks: Vec<usize>,
+    /// Host copy of parameters: `(w_l, b_l)` per layer.
+    pub weights: Vec<Mat>,
+    pub biases: Vec<Vec<f32>>,
+    /// Cached parameter literals, invalidated on update.
+    param_literals: Vec<xla::Literal>,
+    /// Momentum buffers (same shapes as params), as literals.
+    velocity_literals: Vec<xla::Literal>,
+    /// Estimator factors `(U_l, V_l)` per hidden layer, as literals.
+    factor_literals: Option<Vec<xla::Literal>>,
+    /// Steps taken (feeds the PRNG key for dropout).
+    pub step_count: u64,
+}
+
+impl ModelRuntime {
+    /// Bind a trained/initialized network to a manifest profile.
+    pub fn from_mlp(engine: Arc<Engine>, profile: &str, net: &Mlp) -> Result<ModelRuntime> {
+        let (layers, batch, ranks, fwd_name, fwd_ae_name, train_name) = {
+            let arts = ProfileArtifacts::of(&engine.manifest, profile)?;
+            (
+                arts.fwd.layers.clone(),
+                arts.fwd.batch,
+                arts.fwd_ae.ranks.clone(),
+                arts.fwd.name.clone(),
+                arts.fwd_ae.name.clone(),
+                arts.train_step.name.clone(),
+            )
+        };
+        let expect: Vec<usize> = net.layer_sizes();
+        if expect != layers {
+            return Err(anyhow!(
+                "network layers {expect:?} do not match artifact layers {layers:?}"
+            ));
+        }
+        let mut rt = ModelRuntime {
+            engine,
+            profile: profile.to_string(),
+            fwd_name,
+            fwd_ae_name,
+            train_name,
+            batch,
+            layers,
+            ranks,
+            weights: net.weights.clone(),
+            biases: net.biases.clone(),
+            param_literals: Vec::new(),
+            velocity_literals: Vec::new(),
+            factor_literals: None,
+            step_count: 0,
+        };
+        rt.rebuild_param_literals()?;
+        rt.reset_velocity()?;
+        Ok(rt)
+    }
+
+    /// Extract the current parameters as a host-side [`Mlp`].
+    pub fn to_mlp(&self) -> Mlp {
+        Mlp { weights: self.weights.clone(), biases: self.biases.clone() }
+    }
+
+    fn rebuild_param_literals(&mut self) -> Result<()> {
+        let mut lits = Vec::with_capacity(self.weights.len() * 2);
+        for (w, b) in self.weights.iter().zip(&self.biases) {
+            lits.push(mat_to_literal(w)?);
+            lits.push(vec_to_literal(b));
+        }
+        self.param_literals = lits;
+        Ok(())
+    }
+
+    /// Zero the momentum buffers.
+    pub fn reset_velocity(&mut self) -> Result<()> {
+        let mut lits = Vec::with_capacity(self.weights.len() * 2);
+        for (w, b) in self.weights.iter().zip(&self.biases) {
+            lits.push(mat_to_literal(&Mat::zeros(w.rows(), w.cols()))?);
+            lits.push(vec_to_literal(&vec![0.0; b.len()]));
+        }
+        self.velocity_literals = lits;
+        Ok(())
+    }
+
+    /// Recompute estimator factors from the current weights by truncated SVD
+    /// at the manifest's ranks — the paper's refresh, owned by Rust.
+    pub fn refresh_factors(&mut self) -> Result<()> {
+        let mut lits = Vec::new();
+        for (l, &rank) in self.ranks.iter().enumerate() {
+            let lr = LowRank::truncate(&self.weights[l], rank);
+            lits.push(mat_to_literal(&lr.u)?);
+            lits.push(mat_to_literal(&lr.v)?);
+        }
+        self.factor_literals = Some(lits);
+        Ok(())
+    }
+
+    /// Pad a sub-batch up to the artifact's fixed batch size.
+    fn pad_batch(&self, x: &Mat) -> Result<Mat> {
+        if x.cols() != self.layers[0] {
+            return Err(anyhow!(
+                "input dim {} != model input {}",
+                x.cols(),
+                self.layers[0]
+            ));
+        }
+        if x.rows() > self.batch {
+            return Err(anyhow!("batch {} exceeds artifact batch {}", x.rows(), self.batch));
+        }
+        if x.rows() == self.batch {
+            return Ok(x.clone());
+        }
+        Ok(x.vstack(&Mat::zeros(self.batch - x.rows(), x.cols())))
+    }
+
+    /// Control forward through the `_fwd` artifact. Accepts up to `batch`
+    /// rows; returns exactly `x.rows()` rows of logits.
+    pub fn forward(&self, x: &Mat) -> Result<Mat> {
+        let n = x.rows();
+        let x_lit = mat_to_literal(&self.pad_batch(x)?)?;
+        let mut inputs: Vec<&xla::Literal> = self.param_literals.iter().collect();
+        inputs.push(&x_lit);
+        let out = self.engine.execute(&self.fwd_name, &inputs)?;
+        let logits = literal_to_mat(&out[0])?;
+        Ok(logits.rows_slice(0, n))
+    }
+
+    /// Estimator-augmented forward through the `_fwd_ae` artifact
+    /// (Pallas sign-estimator + tile-masked matmul inside the HLO).
+    pub fn forward_ae(&self, x: &Mat) -> Result<Mat> {
+        let factors = self
+            .factor_literals
+            .as_ref()
+            .ok_or_else(|| anyhow!("call refresh_factors() before forward_ae()"))?;
+        let n = x.rows();
+        let x_lit = mat_to_literal(&self.pad_batch(x)?)?;
+        let mut inputs: Vec<&xla::Literal> = self.param_literals.iter().collect();
+        inputs.extend(factors.iter());
+        inputs.push(&x_lit);
+        let out = self.engine.execute(&self.fwd_ae_name, &inputs)?;
+        let logits = literal_to_mat(&out[0])?;
+        Ok(logits.rows_slice(0, n))
+    }
+
+    /// One SGD-momentum minibatch through the `_train_step` artifact.
+    /// `x` must be exactly the artifact batch; labels in `[0, classes)`.
+    /// Updates the parameter and velocity literals in place; returns loss.
+    pub fn train_step(&mut self, x: &Mat, y: &[usize], lr: f32, momentum: f32) -> Result<f32> {
+        if x.rows() != self.batch {
+            return Err(anyhow!(
+                "train_step requires a full batch of {} (got {})",
+                self.batch,
+                x.rows()
+            ));
+        }
+        let spec = self
+            .engine
+            .manifest
+            .artifact(&self.train_name)
+            .ok_or_else(|| anyhow!("missing train artifact"))?;
+        check_shape(x, spec.inputs.iter().find(|a| a.name == "x").unwrap())?;
+
+        let labels: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+        let key = [0xC0DEu32, self.step_count as u32];
+        let x_lit = mat_to_literal(x)?;
+        let y_lit = i32_to_literal(&labels);
+        let key_lit = u32_to_literal(&key);
+        let lr_lit = scalar_literal(lr);
+        let mom_lit = scalar_literal(momentum);
+        let mut inputs: Vec<&xla::Literal> = self.param_literals.iter().collect();
+        inputs.extend(self.velocity_literals.iter());
+        inputs.extend([&x_lit, &y_lit, &key_lit, &lr_lit, &mom_lit]);
+
+        let out = self.engine.execute(&self.train_name, &inputs)?;
+        let n_params = self.param_literals.len();
+        if out.len() != 2 * n_params + 1 {
+            return Err(anyhow!(
+                "train_step returned {} outputs, expected {}",
+                out.len(),
+                2 * n_params + 1
+            ));
+        }
+        // Refresh host + literal copies of params and velocities.
+        let mut out = out;
+        let loss = literal_to_scalar(&out[2 * n_params])?;
+        for (i, lit) in out.drain(..).take(2 * n_params).enumerate() {
+            if i < n_params {
+                let m = literal_to_mat(&lit)?;
+                if i % 2 == 0 {
+                    self.weights[i / 2] = m;
+                } else {
+                    self.biases[i / 2] = m.into_vec();
+                }
+                self.param_literals[i] = lit;
+            } else {
+                self.velocity_literals[i - n_params] = lit;
+            }
+        }
+        self.step_count += 1;
+        Ok(loss)
+    }
+}
+
+// PJRT-dependent tests live in rust/tests/runtime_roundtrip.rs so the unit
+// suite stays device-free.

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: PRNG, statistics, timing, property testing.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `proptest`, `criterion`) are unavailable; these modules provide
+//! the small slices of their functionality the rest of the crate needs.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod proptest;
+
+pub use rng::Pcg32;
+pub use stats::Summary;
+pub use timer::Timer;

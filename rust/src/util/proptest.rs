@@ -1,0 +1,86 @@
+//! A tiny property-testing harness (offline substitute for `proptest`).
+//!
+//! Runs a property over `cases` randomized inputs drawn from a seeded
+//! [`Pcg32`]; on failure it reports the case index and the seed so the run
+//! reproduces exactly. No shrinking — cases are kept small instead.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libstdc++ rpath the xla crate needs)
+//! use condcomp::util::proptest::property;
+//! property("addition commutes", 64, |rng| {
+//!     let (a, b) = (rng.uniform(), rng.uniform());
+//!     assert!((a + b - (b + a)).abs() < 1e-6);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Seed used for property tests; override with `CONDCOMP_PROPTEST_SEED`.
+pub fn base_seed() -> u64 {
+    std::env::var("CONDCOMP_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0DE_CA5E)
+}
+
+/// Run `prop` over `cases` independent RNG streams. Panics (with the case
+/// index and seed embedded in the message) if any case panics.
+pub fn property(name: &str, cases: u32, mut prop: impl FnMut(&mut Pcg32)) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed, case as u64 + 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (CONDCOMP_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a random shape `(rows, cols)` with each dim in `[1, max_dim]`.
+pub fn arb_shape(rng: &mut Pcg32, max_dim: usize) -> (usize, usize) {
+    (rng.index(max_dim) + 1, rng.index(max_dim) + 1)
+}
+
+/// Fill-and-return a random matrix buffer with entries in `[-1, 1)`.
+pub fn arb_buf(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("tautology", 16, |rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports() {
+        property("must fail", 8, |rng| {
+            assert!(rng.uniform() < -1.0, "impossible");
+        });
+    }
+
+    #[test]
+    fn arb_shape_in_bounds() {
+        property("shape bounds", 32, |rng| {
+            let (r, c) = arb_shape(rng, 10);
+            assert!((1..=10).contains(&r) && (1..=10).contains(&c));
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration: the AOT bridge end to end.
+//!
+//! Loads the real artifacts (built by `make artifacts`), executes them via
+//! PJRT, and checks the numerics against the pure-Rust engine on identical
+//! weights: same logits for the control path, same logits for the
+//! estimator-augmented path (Rust masked-GEMM vs Pallas-in-HLO), and a
+//! decreasing loss for the train-step artifact.
+
+use condcomp::config::NetConfig;
+use condcomp::coordinator::scheduler::TrainingScheduler;
+use condcomp::config::ExperimentProfile;
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::linalg::Mat;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::Mlp;
+use condcomp::runtime::{Engine, ModelRuntime};
+use condcomp::util::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+const PROFILE: &str = "mnist-tiny";
+const LAYERS: &[usize] = &[784, 64, 48, 32, 10];
+const RANKS: &[usize] = &[8, 6, 4];
+const BATCH: usize = 16;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Arc<Engine> {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    Arc::new(Engine::load(&dir).expect("engine load"))
+}
+
+fn tiny_net(seed: u64) -> Mlp {
+    let mut rng = Pcg32::seeded(seed);
+    Mlp::init(
+        &NetConfig { layers: LAYERS.to_vec(), weight_sigma: 0.05, bias_init: 0.5 },
+        &mut rng,
+    )
+}
+
+#[test]
+fn control_forward_matches_native_engine() {
+    let engine = engine();
+    let net = tiny_net(11);
+    let rt = ModelRuntime::from_mlp(engine, PROFILE, &net).expect("bind runtime");
+    let mut rng = Pcg32::seeded(3);
+    // Full batch and partial batch (exercises padding).
+    for rows in [BATCH, 5] {
+        let x = Mat::randn(rows, LAYERS[0], 0.5, &mut rng);
+        let pjrt = rt.forward(&x).expect("pjrt forward");
+        let native = net.logits(&x, &NoGater);
+        let diff = pjrt.max_abs_diff(&native);
+        assert!(diff < 2e-3, "rows={rows}: PJRT vs native logits diff {diff}");
+    }
+}
+
+#[test]
+fn ae_forward_matches_native_masked_gemm() {
+    let engine = engine();
+    let net = tiny_net(13);
+    let mut rt = ModelRuntime::from_mlp(engine, PROFILE, &net).expect("bind runtime");
+    rt.refresh_factors().expect("refresh");
+
+    // Native path with the *same* factorization ranks.
+    let cfg = condcomp::config::EstimatorConfig::fixed(RANKS);
+    let est = SignEstimatorSet::fit(&net, &cfg, 5);
+    let cond = condcomp::condcomp::CondMlp::compile(&net, &est);
+
+    let mut rng = Pcg32::seeded(5);
+    let x = Mat::randn(BATCH, LAYERS[0], 0.5, &mut rng);
+    let pjrt = rt.forward_ae(&x).expect("pjrt ae forward");
+    let (native, _flops) = cond.forward(&x);
+    // Two SVD implementations (Jacobi vs LAPACK) can disagree on near-zero
+    // pre-activations; compare with a modest tolerance plus a sign check on
+    // the big entries.
+    let diff = pjrt.max_abs_diff(&native);
+    assert!(
+        diff < 5e-2,
+        "PJRT(ae) vs native masked-GEMM logits diff {diff}"
+    );
+    // Class decisions must agree on a strong-margin batch.
+    let pa = condcomp::nn::activations::argmax_rows(&pjrt);
+    let pb = condcomp::nn::activations::argmax_rows(&native);
+    let agree = pa.iter().zip(&pb).filter(|(a, b)| a == b).count();
+    assert!(agree >= BATCH - 1, "class agreement {agree}/{BATCH}");
+}
+
+#[test]
+fn train_step_reduces_loss_via_pjrt() {
+    let engine = engine();
+    let net = tiny_net(17);
+    let mut rt = ModelRuntime::from_mlp(engine, PROFILE, &net).expect("bind runtime");
+
+    let mut rng = Pcg32::seeded(23);
+    let x = Mat::randn(BATCH, LAYERS[0], 0.5, &mut rng);
+    let y: Vec<usize> = (0..BATCH).map(|_| rng.index(10)).collect();
+    let mut losses = Vec::new();
+    for _ in 0..20 {
+        let loss = rt.train_step(&x, &y, 0.05, 0.5).expect("train step");
+        assert!(loss.is_finite());
+        losses.push(loss);
+    }
+    assert!(
+        losses[19] < losses[0],
+        "loss should fall when overfitting one batch: {losses:?}"
+    );
+    // Weights must actually move on the host copy too.
+    let moved = rt.weights[0].max_abs_diff(&net.weights[0]);
+    assert!(moved > 0.0, "host weights not updated");
+}
+
+#[test]
+fn scheduler_trains_end_to_end_via_pjrt() {
+    let engine = engine();
+    let mut profile = ExperimentProfile::mnist_tiny();
+    profile.net.layers = LAYERS.to_vec();
+    profile.train.epochs = 2;
+    profile.train.batch_size = BATCH;
+    profile.n_train = 320;
+    profile.n_valid = 80;
+    profile.n_test = 80;
+    let mut data = build_dataset(&profile, 31);
+
+    let mut rng = Pcg32::seeded(profile.train.seed);
+    let net = Mlp::init(&profile.net, &mut rng);
+    let mut rt = ModelRuntime::from_mlp(engine, PROFILE, &net).expect("bind runtime");
+    let sched = TrainingScheduler::new(profile.train.clone());
+    let history = sched.train(&mut rt, &mut data).expect("train");
+    assert_eq!(history.len(), 2);
+    let last = history.last().unwrap();
+    assert!(last.train_loss.is_finite());
+    // Both artifact eval paths produce sane error rates.
+    assert!(last.valid_error <= 0.95 && last.valid_error >= 0.0);
+    assert!(last.valid_error_ae <= 0.95 && last.valid_error_ae >= 0.0);
+}
+
+#[test]
+fn engine_caches_executables() {
+    let engine = engine();
+    let net = tiny_net(29);
+    let rt = ModelRuntime::from_mlp(engine.clone(), PROFILE, &net).expect("bind");
+    let mut rng = Pcg32::seeded(1);
+    let x = Mat::randn(2, LAYERS[0], 0.5, &mut rng);
+    let _ = rt.forward(&x).unwrap();
+    let before = engine.cached_count();
+    let _ = rt.forward(&x).unwrap();
+    assert_eq!(engine.cached_count(), before, "no recompilation on 2nd call");
+}
