@@ -39,6 +39,7 @@ fn main() {
             addr: "127.0.0.1:0".into(),
             max_wait: std::time::Duration::from_millis(2),
             workers: 1,
+            threads: 0,
         },
     )
     .expect("server start");

@@ -1,13 +1,16 @@
-//! Hot-path microbenches: dense GEMM (naive vs blocked), the conditional
-//! masked GEMM across the sparsity sweep (the measured side of Eq. 10), and
-//! the low-rank estimator product.
+//! Hot-path microbenches: dense GEMM (naive vs blocked vs pool-parallel),
+//! the conditional masked GEMM across the sparsity sweep (the measured side
+//! of Eq. 10), the low-rank estimator product, and the full
+//! dense-vs-masked-vs-parallel sweep (α × thread grid) with the measured
+//! dispatch threshold.
 //!
 //! `cargo bench --bench bench_gemm`
 
-use condcomp::bench::{bench_with_units, header, BenchConfig};
+use condcomp::bench::{bench_with_units, header, sweep, BenchConfig};
 use condcomp::condcomp::MaskedLayer;
-use condcomp::linalg::gemm::{matmul, matmul_naive};
+use condcomp::linalg::gemm::{matmul, matmul_naive, matmul_par};
 use condcomp::linalg::{LowRank, Mat};
+use condcomp::parallel::{default_threads, ThreadPool};
 use condcomp::util::Pcg32;
 
 fn main() {
@@ -26,6 +29,19 @@ fn main() {
     println!(
         "blocked vs naive: {:.2}×",
         naive.time.median / blocked.time.median
+    );
+    let threads = default_threads();
+    let pool = ThreadPool::new(threads);
+    let par = bench_with_units(
+        &format!("matmul_par 64x784x1000 threads={threads}"),
+        &cfg,
+        flops,
+        || matmul_par(&a, &b, &pool),
+    );
+    println!(
+        "{}   parallel vs blocked {:.2}×",
+        par.line(),
+        blocked.time.median / par.time.median
     );
 
     header("conditional masked GEMM vs density α (same layer)");
@@ -62,5 +78,12 @@ fn main() {
             r.line(),
             100.0 * r.time.median / dense.time.median
         );
+    }
+
+    header("dense-vs-masked-vs-parallel sweep (α × threads grid, 512³ dense)");
+    let quick = condcomp::bench::quick();
+    let result = sweep::run_parallel_sweep(&quick, 512, 64, threads);
+    for line in result.report_lines() {
+        println!("{line}");
     }
 }

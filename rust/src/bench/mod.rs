@@ -3,6 +3,11 @@
 //! budget, robust summary statistics, and throughput reporting.
 //!
 //! Used by every target in `benches/` (registered with `harness = false`).
+//! The [`sweep`] submodule packages the dense-vs-masked-vs-parallel sweep
+//! shared by `benches/bench_gemm.rs` and the `condcomp bench` subcommand
+//! (which writes it as `BENCH_parallel.json`).
+
+pub mod sweep;
 
 use crate::util::stats::Summary;
 use crate::util::Timer;

@@ -1,0 +1,279 @@
+//! The dense-vs-masked-vs-parallel wall-clock sweep behind `condcomp bench`
+//! and `benches/bench_gemm.rs`.
+//!
+//! Measures, on this machine:
+//!
+//! - the dense square GEMM (`dim × dim × dim`) serial vs pool-parallel —
+//!   the acceptance target is ≥ 2× at `dim = 512` on a multi-core box;
+//! - the masked layer at α ∈ {0.05, 0.25, 0.5, 1.0} × threads ∈ {1, N};
+//! - the resulting masked-vs-dense per-FLOP cost ratio and the α threshold
+//!   where [`crate::condcomp::DispatchPolicy`] flips from masked to dense.
+//!
+//! [`ParallelSweep::to_json`] renders everything machine-readable
+//! (`BENCH_parallel.json`); ROADMAP.md records the last measured threshold.
+
+use super::{bench_with_units, BenchConfig, BenchResult};
+use crate::condcomp::{DispatchPolicy, MaskedLayer};
+use crate::io::json::Json;
+use crate::linalg::{matmul_into, matmul_into_par, Mat};
+use crate::parallel::ThreadPool;
+use crate::util::Pcg32;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    /// Kernel label: "dense_gemm", "masked_forward", "dense_forward".
+    pub kernel: String,
+    pub threads: usize,
+    /// Mask density for masked rows; `None` for dense kernels.
+    pub alpha: Option<f64>,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Work per iteration (FLOPs), for throughput.
+    pub flops: f64,
+}
+
+impl SweepRow {
+    fn from_result(kernel: &str, threads: usize, alpha: Option<f64>, r: &BenchResult) -> SweepRow {
+        SweepRow {
+            kernel: kernel.to_string(),
+            threads,
+            alpha,
+            median_s: r.time.median,
+            flops: r.units_per_iter.unwrap_or(0.0),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("median_s", Json::Num(self.median_s)),
+            ("flops", Json::Num(self.flops)),
+            ("gflops_per_s", Json::Num(self.flops / self.median_s.max(1e-12) / 1e9)),
+        ];
+        if let Some(a) = self.alpha {
+            pairs.push(("alpha", Json::Num(a)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The complete sweep result.
+#[derive(Clone, Debug)]
+pub struct ParallelSweep {
+    pub dim: usize,
+    pub batch: usize,
+    pub threads_max: usize,
+    pub rows: Vec<SweepRow>,
+    /// Parallel dense GEMM speedup over serial at `dim³`.
+    pub dense_parallel_speedup: f64,
+    /// Measured masked-vs-dense per-FLOP cost ratio (threads = N arm).
+    pub measured_cost_ratio: f64,
+    /// α where the dispatch policy flips from masked to dense
+    /// (`1 / measured_cost_ratio`).
+    pub density_threshold: f64,
+}
+
+/// Densities the sweep measures (the issue's α grid).
+pub const ALPHA_GRID: [f64; 4] = [0.05, 0.25, 0.5, 1.0];
+
+/// Run the full sweep. `dim` is the square GEMM dimension (512 for the
+/// acceptance target), `batch` the masked layer's batch rows, `threads_max`
+/// the parallel arm's pool size.
+pub fn run_parallel_sweep(cfg: &BenchConfig, dim: usize, batch: usize, threads_max: usize) -> ParallelSweep {
+    let threads_max = threads_max.max(1);
+    let mut rng = Pcg32::seeded(0xBE9C);
+    let mut rows = Vec::new();
+
+    // --- dense square GEMM, serial vs parallel -------------------------
+    let a = Mat::randn(dim, dim, 1.0, &mut rng);
+    let b = Mat::randn(dim, dim, 0.05, &mut rng);
+    let mut c = Mat::zeros(dim, dim);
+    let gemm_flops = 2.0 * (dim as f64).powi(3);
+    let mut dense_times = [0.0f64; 2];
+    for (slot, &threads) in [1usize, threads_max].iter().enumerate() {
+        let pool = ThreadPool::new(threads);
+        let r = bench_with_units(
+            &format!("dense_gemm {dim}x{dim}x{dim} threads={threads}"),
+            cfg,
+            gemm_flops,
+            || {
+                if threads == 1 {
+                    matmul_into(&a, &b, &mut c);
+                } else {
+                    matmul_into_par(&a, &b, &mut c, &pool);
+                }
+            },
+        );
+        dense_times[slot] = r.time.median;
+        rows.push(SweepRow::from_result("dense_gemm", threads, None, &r));
+    }
+    let dense_parallel_speedup = dense_times[0] / dense_times[1].max(1e-12);
+
+    // --- masked layer across the α grid × {1, N} threads ---------------
+    let x = Mat::randn(batch, dim, 0.5, &mut rng);
+    let bias = vec![0.0f32; dim];
+    let layer = MaskedLayer::new(&b, &bias);
+    let layer_flops = 2.0 * (batch * dim * dim) as f64;
+    let mut out = Mat::zeros(batch, dim);
+    // One mask per α, drawn up front so every thread arm benches the exact
+    // same work (otherwise mask-sampling variance pollutes the 1-vs-N rows).
+    let masks: Vec<(f64, Mat)> = ALPHA_GRID
+        .iter()
+        .map(|&alpha| {
+            let mask = Mat::from_fn(batch, dim, |_, _| {
+                if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 }
+            });
+            (alpha, mask)
+        })
+        .collect();
+    let mut masked_full_par = 0.0f64;
+    let mut dense_gemm_batch_par = 0.0f64;
+    for &threads in &[1usize, threads_max] {
+        let pool = ThreadPool::new(threads);
+        // The dense GEMM at the *layer's* shape (batch × dim × dim) — this
+        // is the kernel the backend's dense dispatch arm actually runs, so
+        // the threshold must come from it, not from scaling the dim³ time.
+        let r = bench_with_units(
+            &format!("dense_gemm_batch {batch}x{dim}x{dim} threads={threads}"),
+            cfg,
+            layer_flops,
+            || matmul_into_par(&x, &b, &mut out, &pool),
+        );
+        if threads == threads_max {
+            dense_gemm_batch_par = r.time.median;
+        }
+        rows.push(SweepRow::from_result("dense_gemm_batch", threads, None, &r));
+        let r = bench_with_units(
+            &format!("dense_forward batch={batch} threads={threads}"),
+            cfg,
+            layer_flops,
+            || layer.forward_dense_par(&x, &mut out, &pool),
+        );
+        rows.push(SweepRow::from_result("dense_forward", threads, None, &r));
+        for &(alpha, ref mask) in &masks {
+            let r = bench_with_units(
+                &format!("masked_forward α={alpha} threads={threads}"),
+                cfg,
+                layer_flops * alpha,
+                || layer.forward_masked_par(&x, mask, &mut out, &pool),
+            );
+            if threads == threads_max && alpha == 1.0 {
+                masked_full_par = r.time.median;
+            }
+            rows.push(SweepRow::from_result("masked_forward", threads, Some(alpha), &r));
+        }
+    }
+
+    // The dispatch threshold, measured: masked time scales ~linearly in α,
+    // so the flip point is t_dense / t_masked(α=1). t_dense is the parallel
+    // axpy GEMM at the layer's own shape — exactly the kernel the backend's
+    // DenseParallel arm runs (forward_dense_par is measured for the report
+    // but deliberately excluded from the threshold).
+    let dense_ref = dense_gemm_batch_par;
+    let measured_cost_ratio = (masked_full_par / dense_ref.max(1e-12)).max(1e-6);
+    let policy = DispatchPolicy::with_cost_ratio(measured_cost_ratio);
+
+    ParallelSweep {
+        dim,
+        batch,
+        threads_max,
+        rows,
+        dense_parallel_speedup,
+        measured_cost_ratio,
+        density_threshold: policy.density_threshold(),
+    }
+}
+
+impl ParallelSweep {
+    /// Human-readable report lines (the CLI prints these).
+    pub fn report_lines(&self) -> Vec<String> {
+        let mut lines = vec![
+            format!(
+                "parallel sweep: dim={} batch={} threads={{1,{}}}",
+                self.dim, self.batch, self.threads_max
+            ),
+            format!(
+                "{:<36} {:>8} {:>8} {:>12} {:>10}",
+                "kernel", "threads", "alpha", "median", "GF/s"
+            ),
+        ];
+        for row in &self.rows {
+            let alpha = row
+                .alpha
+                .map(|a| format!("{a:.2}"))
+                .unwrap_or_else(|| "-".to_string());
+            lines.push(format!(
+                "{:<36} {:>8} {:>8} {:>10.3}ms {:>10.2}",
+                row.kernel,
+                row.threads,
+                alpha,
+                row.median_s * 1e3,
+                row.flops / row.median_s.max(1e-12) / 1e9
+            ));
+        }
+        lines.push(format!(
+            "dense {0}×{0}×{0} parallel speedup: {1:.2}× on {2} threads",
+            self.dim, self.dense_parallel_speedup, self.threads_max
+        ));
+        lines.push(format!(
+            "measured cost ratio {:.2} → dispatch flips masked→dense at α = {:.3}",
+            self.measured_cost_ratio, self.density_threshold
+        ));
+        lines
+    }
+
+    /// Machine-readable rendering (written to `BENCH_parallel.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::Num(self.dim as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("threads_max", Json::Num(self.threads_max as f64)),
+            (
+                "dense_parallel_speedup",
+                Json::Num(self.dense_parallel_speedup),
+            ),
+            ("measured_cost_ratio", Json::Num(self.measured_cost_ratio)),
+            ("density_threshold", Json::Num(self.density_threshold)),
+            (
+                "alpha_grid",
+                Json::Arr(ALPHA_GRID.iter().map(|&a| Json::Num(a)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny dims keep this test in the tens of milliseconds; it checks the
+    /// sweep's *structure* (rows, JSON schema, threshold sanity), not perf.
+    #[test]
+    fn sweep_produces_complete_machine_readable_output() {
+        let cfg = BenchConfig { warmup_s: 0.0, measure_s: 0.0, min_iters: 1, max_iters: 1 };
+        let sweep = run_parallel_sweep(&cfg, 32, 8, 2);
+        // 2 dense_gemm + 2×(dense_gemm_batch + dense_forward + 4 masked) rows.
+        assert_eq!(sweep.rows.len(), 2 + 2 * (2 + ALPHA_GRID.len()));
+        assert!(sweep.measured_cost_ratio > 0.0 && sweep.measured_cost_ratio.is_finite());
+        assert!((0.0..=1.0).contains(&sweep.density_threshold));
+        assert!(!sweep.report_lines().is_empty());
+
+        let json = sweep.to_json();
+        let parsed = Json::parse(&json.to_string()).expect("self-parse");
+        assert!(parsed.get("density_threshold").and_then(|v| v.as_f64()).is_some());
+        let rows = parsed.get("rows").and_then(|v| v.as_arr()).expect("rows");
+        assert_eq!(rows.len(), sweep.rows.len());
+        assert!(rows.iter().all(|r| r.get("median_s").is_some()));
+        // Masked rows carry their α.
+        assert!(rows
+            .iter()
+            .filter(|r| r.get("kernel").and_then(|k| k.as_str()) == Some("masked_forward"))
+            .all(|r| r.get("alpha").is_some()));
+    }
+}

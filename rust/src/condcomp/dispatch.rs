@@ -1,0 +1,157 @@
+//! Density-adaptive kernel dispatch: dense-parallel vs masked-parallel, per
+//! layer per batch.
+//!
+//! The masked kernel does `α·N·h` contiguous dot products; the dense axpy
+//! GEMM does `N·h` output cells' worth of packed FMAs at a much higher
+//! per-FLOP rate (dot accumulation chains defeat the vectorizer in a way
+//! row-axpy does not — see the `linalg::gemm` module docs). So the masked
+//! path wins only below a density threshold
+//!
+//! ```text
+//! α* = (dense seconds) / (masked seconds at α = 1)
+//!    = (dense per-FLOP cost) / (masked per-FLOP cost) = 1 / cost_ratio
+//! ```
+//!
+//! The §3.4 cost model ([`LayerFlops`]) supplies the FLOP counts; the
+//! per-FLOP cost ratio is **measured** — either at startup with
+//! [`DispatchPolicy::calibrate`] (the `serve` command does this) or offline
+//! by the bench sweep, which records the threshold in
+//! `BENCH_parallel.json`. [`DispatchPolicy::DEFAULT_COST_RATIO`] is only the
+//! fallback for callers that skip calibration.
+
+use super::flops::LayerFlops;
+use super::masked_gemm::MaskedLayer;
+use crate::linalg::{matmul_into_par, Mat};
+use crate::parallel::ThreadPool;
+use crate::util::{Pcg32, Timer};
+
+/// Which kernel executes a layer's forward for one batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Masked dot-product kernel, sharded over batch rows.
+    MaskedParallel,
+    /// Dense axpy GEMM, sharded over row panels (mask applied afterwards).
+    DenseParallel,
+}
+
+/// Chooses the kernel from the batch's predicted mask density α and the
+/// measured per-FLOP cost ratio of the two kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DispatchPolicy {
+    /// Masked-kernel seconds-per-FLOP divided by dense-kernel
+    /// seconds-per-FLOP (> 1: a masked FLOP is slower than a dense FLOP).
+    pub cost_ratio: f64,
+}
+
+impl DispatchPolicy {
+    /// Fallback cost ratio for uncalibrated policies, from the rejected
+    /// packed-dot experiment in the `linalg::gemm` docs (dot kernels ran a
+    /// few× slower per FLOP than the axpy GEMM on the 1-core testbed). Run
+    /// [`DispatchPolicy::calibrate`] or the bench sweep for a measured
+    /// value on the serving hardware.
+    pub const DEFAULT_COST_RATIO: f64 = 3.0;
+
+    /// Policy with an explicit (e.g. previously recorded) cost ratio.
+    pub fn with_cost_ratio(cost_ratio: f64) -> DispatchPolicy {
+        DispatchPolicy { cost_ratio: cost_ratio.max(1e-6) }
+    }
+
+    /// The α above which the dense kernel wins.
+    pub fn density_threshold(&self) -> f64 {
+        (1.0 / self.cost_ratio).clamp(0.0, 1.0)
+    }
+
+    /// Pick the kernel for one `n × d → h` layer at predicted density
+    /// `alpha`, by comparing the §3.4 FLOP counts weighted by the measured
+    /// per-FLOP costs.
+    pub fn decide(&self, n: usize, d: usize, h: usize, alpha: f64) -> Kernel {
+        let computed = (alpha.clamp(0.0, 1.0) * (n * h) as f64).round() as usize;
+        let lf = LayerFlops::from_counts(n, d, h, 0, computed);
+        if (lf.conditional as f64) * self.cost_ratio < lf.dense as f64 {
+            Kernel::MaskedParallel
+        } else {
+            Kernel::DenseParallel
+        }
+    }
+
+    /// Measure the cost ratio on this machine/pool: times the dense-parallel
+    /// GEMM against the masked-parallel kernel under a full (α = 1) mask on
+    /// an `n × d → h` layer, taking the best of `reps` runs each. Costs a
+    /// few milliseconds at the default sizes; `serve` runs it once at
+    /// startup.
+    pub fn calibrate(pool: &ThreadPool, n: usize, d: usize, h: usize, reps: usize) -> DispatchPolicy {
+        let reps = reps.max(1);
+        let mut rng = Pcg32::seeded(0xD15_7A7C);
+        let a = Mat::randn(n, d, 0.5, &mut rng);
+        let w = Mat::randn(d, h, 0.05, &mut rng);
+        let bias = vec![0.0f32; h];
+        let layer = MaskedLayer::new(&w, &bias);
+        let full_mask = Mat::full(n, h, 1.0);
+        let mut out = Mat::zeros(n, h);
+
+        let mut t_dense = f64::INFINITY;
+        let mut t_masked = f64::INFINITY;
+        for _ in 0..reps {
+            let t = Timer::start();
+            matmul_into_par(&a, &w, &mut out, pool);
+            t_dense = t_dense.min(t.elapsed_s());
+
+            let t = Timer::start();
+            let _ = layer.forward_masked_par(&a, &full_mask, &mut out, pool);
+            t_masked = t_masked.min(t.elapsed_s());
+        }
+        if !(t_dense > 0.0) || !t_masked.is_finite() {
+            return DispatchPolicy::default();
+        }
+        DispatchPolicy::with_cost_ratio(t_masked / t_dense)
+    }
+}
+
+impl Default for DispatchPolicy {
+    fn default() -> DispatchPolicy {
+        DispatchPolicy { cost_ratio: DispatchPolicy::DEFAULT_COST_RATIO }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_is_inverse_cost_ratio() {
+        let p = DispatchPolicy::with_cost_ratio(4.0);
+        assert!((p.density_threshold() - 0.25).abs() < 1e-12);
+        // A faster-than-dense masked kernel would always win.
+        let p = DispatchPolicy::with_cost_ratio(0.5);
+        assert_eq!(p.density_threshold(), 1.0);
+    }
+
+    #[test]
+    fn decide_flips_at_the_threshold() {
+        let p = DispatchPolicy::with_cost_ratio(4.0); // α* = 0.25
+        let (n, d, h) = (64, 512, 512);
+        assert_eq!(p.decide(n, d, h, 0.05), Kernel::MaskedParallel);
+        assert_eq!(p.decide(n, d, h, 0.20), Kernel::MaskedParallel);
+        assert_eq!(p.decide(n, d, h, 0.30), Kernel::DenseParallel);
+        assert_eq!(p.decide(n, d, h, 1.00), Kernel::DenseParallel);
+    }
+
+    #[test]
+    fn extreme_densities_are_stable() {
+        let p = DispatchPolicy::default();
+        assert_eq!(p.decide(8, 100, 100, 0.0), Kernel::MaskedParallel);
+        assert_eq!(p.decide(8, 100, 100, 1.0), Kernel::DenseParallel);
+        // Out-of-range α is clamped, not UB.
+        assert_eq!(p.decide(8, 100, 100, -3.0), Kernel::MaskedParallel);
+        assert_eq!(p.decide(8, 100, 100, 7.0), Kernel::DenseParallel);
+    }
+
+    #[test]
+    fn calibrate_produces_a_finite_positive_ratio() {
+        let pool = ThreadPool::new(2);
+        let p = DispatchPolicy::calibrate(&pool, 16, 64, 64, 2);
+        assert!(p.cost_ratio.is_finite() && p.cost_ratio > 0.0);
+        let t = p.density_threshold();
+        assert!((0.0..=1.0).contains(&t));
+    }
+}

@@ -1,16 +1,32 @@
 //! Conditional (mask-driven) matrix multiplication.
 //!
-//! `masked_matmul_bias_relu(a, S)` computes `σ(a·W + b) ⊙ S` touching only
-//! the `(i, j)` dot products with `S[i,j] = 1`. With activation density α
-//! this performs `α·N·(2d−1)·h` FLOPs versus the dense `N·(2d−1)·h`
-//! (paper §3.4) — the source of the measured speedup in `benches/`.
+//! `forward_masked*` computes `σ(a·W + b) ⊙ S` touching only the `(i, j)`
+//! dot products with `S[i,j] = 1`. With activation density α this performs
+//! `α·N·(2d−1)·h` FLOPs versus the dense `N·(2d−1)·h` (paper §3.4) — the
+//! source of the measured speedup in `benches/`.
 //!
 //! The weights are stored transposed (`Wᵀ`, row per output unit) so each
 //! computed entry is a contiguous·contiguous dot product; the mask is
 //! consumed row-major, matching its production order by the estimator.
+//!
+//! Entry points, hot path first:
+//!
+//! - [`MaskedLayer::forward_masked_par`] — batch rows sharded across the
+//!   worker pool, writing into a caller-owned output buffer (the serving
+//!   path allocates nothing per batch). Per-row work is exactly the serial
+//!   code, and the per-shard `computed` counts are reduced in shard order,
+//!   so the result — output *and* count — is bit-identical to the serial
+//!   kernel for any thread count.
+//! - [`MaskedLayer::forward_masked_into`] — serial, buffer-reusing.
+//! - [`MaskedLayer::forward_masked`] — serial, allocating (tests, one-off
+//!   callers); the correctness oracle.
+//! - [`MaskedLayer::forward_dense_par`] / [`MaskedLayer::forward_dense`] —
+//!   the dense control path through the same data layout, used for timing
+//!   comparisons and by [`super::DispatchPolicy`] calibration.
 
 use crate::linalg::gemm::dot;
 use crate::linalg::Mat;
+use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
 
 /// A layer prepared for conditional execution: transposed weights + bias.
 #[derive(Clone, Debug)]
@@ -35,46 +51,134 @@ impl MaskedLayer {
         self.wt.rows()
     }
 
-    /// `σ(a·W + b) ⊙ S`, computing only where `S = 1`. Returns the output and
-    /// the number of dot products actually computed.
-    pub fn forward_masked(&self, a: &Mat, mask: &Mat) -> (Mat, usize) {
+    /// One output row of `σ(a·W + b) ⊙ S`: computes the masked entries,
+    /// zeroes the rest (so a dirty/reused output buffer is fine). Returns
+    /// the number of dot products computed.
+    #[inline]
+    fn masked_row(&self, arow: &[f32], mrow: &[f32], orow: &mut [f32]) -> usize {
+        let mut computed = 0usize;
+        for (j, out) in orow.iter_mut().enumerate() {
+            if mrow[j] != 0.0 {
+                let z = dot(arow, self.wt.row(j)) + self.bias[j];
+                *out = if z > 0.0 { z } else { 0.0 };
+                computed += 1;
+            } else {
+                *out = 0.0;
+            }
+        }
+        computed
+    }
+
+    /// One output row of the dense path `σ(a·W + b)` (shared by the serial
+    /// and parallel dense variants, mirroring [`Self::masked_row`]).
+    #[inline]
+    fn dense_row(&self, arow: &[f32], orow: &mut [f32]) {
+        for (j, out) in orow.iter_mut().enumerate() {
+            let z = dot(arow, self.wt.row(j)) + self.bias[j];
+            *out = if z > 0.0 { z } else { 0.0 };
+        }
+    }
+
+    fn check_shapes(&self, a: &Mat, mask: &Mat, out: &Mat) {
         let (n, d) = a.shape();
         let h = self.out_dim();
         assert_eq!(d, self.in_dim(), "input dim mismatch");
         assert_eq!(mask.shape(), (n, h), "mask shape mismatch");
-        let mut out = Mat::zeros(n, h);
+        assert_eq!(out.shape(), (n, h), "output shape mismatch");
+    }
+
+    /// `σ(a·W + b) ⊙ S` into a caller-owned buffer (overwritten, not
+    /// accumulated — reused buffers need no clearing). Returns the number of
+    /// dot products actually computed.
+    pub fn forward_masked_into(&self, a: &Mat, mask: &Mat, out: &mut Mat) -> usize {
+        self.check_shapes(a, mask, out);
+        let n = a.rows();
         let mut computed = 0usize;
         for i in 0..n {
-            let arow = a.row(i);
-            let mrow = mask.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..h {
-                if mrow[j] != 0.0 {
-                    let z = dot(arow, self.wt.row(j)) + self.bias[j];
-                    orow[j] = if z > 0.0 { z } else { 0.0 };
-                    computed += 1;
-                }
-            }
+            computed += self.masked_row(a.row(i), mask.row(i), out.row_mut(i));
         }
+        computed
+    }
+
+    /// Pool-parallel [`Self::forward_masked_into`]: batch rows are sharded
+    /// across workers; the per-shard counts are summed in shard order.
+    /// Output and count are bit-identical to the serial kernel for any
+    /// thread count.
+    pub fn forward_masked_par(
+        &self,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        pool: &ThreadPool,
+    ) -> usize {
+        self.check_shapes(a, mask, out);
+        let n = a.rows();
+        let h = self.out_dim();
+        if pool.threads() == 1 || n < 2 || h == 0 {
+            return self.forward_masked_into(a, mask, out);
+        }
+        let rows_per = chunk_rows(n, pool.threads(), 1);
+        let counts = par_row_chunks(pool, out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            let mut computed = 0usize;
+            for i in 0..rows {
+                computed += self.masked_row(
+                    a.row(row0 + i),
+                    mask.row(row0 + i),
+                    &mut band[i * h..(i + 1) * h],
+                );
+            }
+            computed
+        });
+        counts.iter().sum()
+    }
+
+    /// `σ(a·W + b) ⊙ S`, computing only where `S = 1`. Allocating wrapper
+    /// over [`Self::forward_masked_into`] (tests and one-off callers; the
+    /// serving path reuses buffers via the `_into`/`_par` variants).
+    pub fn forward_masked(&self, a: &Mat, mask: &Mat) -> (Mat, usize) {
+        let mut out = Mat::zeros(a.rows(), self.out_dim());
+        let computed = self.forward_masked_into(a, mask, &mut out);
         (out, computed)
     }
 
     /// Dense reference: `σ(a·W + b)` with no mask (control path through the
     /// same data layout, used for timing comparisons).
     pub fn forward_dense(&self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), self.out_dim());
+        self.forward_dense_into(a, &mut out);
+        out
+    }
+
+    /// Dense path into a caller-owned buffer.
+    pub fn forward_dense_into(&self, a: &Mat, out: &mut Mat) {
         let (n, d) = a.shape();
         assert_eq!(d, self.in_dim());
         let h = self.out_dim();
-        let mut out = Mat::zeros(n, h);
+        assert_eq!(out.shape(), (n, h), "output shape mismatch");
         for i in 0..n {
-            let arow = a.row(i);
-            let orow = out.row_mut(i);
-            for j in 0..h {
-                let z = dot(arow, self.wt.row(j)) + self.bias[j];
-                orow[j] = if z > 0.0 { z } else { 0.0 };
-            }
+            self.dense_row(a.row(i), out.row_mut(i));
         }
-        out
+    }
+
+    /// Pool-parallel dense path (row-sharded; bit-identical to
+    /// [`Self::forward_dense_into`] for any thread count).
+    pub fn forward_dense_par(&self, a: &Mat, out: &mut Mat, pool: &ThreadPool) {
+        let (n, d) = a.shape();
+        assert_eq!(d, self.in_dim());
+        let h = self.out_dim();
+        assert_eq!(out.shape(), (n, h), "output shape mismatch");
+        if pool.threads() == 1 || n < 2 || h == 0 {
+            self.forward_dense_into(a, out);
+            return;
+        }
+        let rows_per = chunk_rows(n, pool.threads(), 1);
+        par_row_chunks(pool, out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            for i in 0..rows {
+                self.dense_row(a.row(row0 + i), &mut band[i * h..(i + 1) * h]);
+            }
+        });
     }
 }
 
@@ -146,6 +250,64 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn into_variant_overwrites_dirty_buffers() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        let w = Mat::randn(6, 5, 1.0, &mut rng);
+        let b: Vec<f32> = (0..5).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let mask = Mat::from_fn(4, 5, |_, _| if rng.bernoulli(0.5) { 1.0 } else { 0.0 });
+        let layer = MaskedLayer::new(&w, &b);
+        let (want, want_count) = layer.forward_masked(&a, &mask);
+        let mut out = Mat::full(4, 5, f32::NAN); // simulate a reused buffer
+        let count = layer.forward_masked_into(&a, &mask, &mut out);
+        assert_eq!(count, want_count);
+        assert_eq!(out.as_slice(), want.as_slice());
+    }
+
+    /// The determinism contract for the parallel kernel: output *and*
+    /// computed count bit-identical to the serial oracle at thread counts
+    /// 1, 2 and 7, over random shapes and masks.
+    #[test]
+    fn parallel_is_bit_identical_to_serial_for_any_thread_count() {
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            property("parallel masked == serial masked", 12, |rng| {
+                let n = rng.index(40) + 1;
+                let d = rng.index(24) + 1;
+                let h = rng.index(24) + 1;
+                let a = Mat::randn(n, d, 1.0, rng);
+                let w = Mat::randn(d, h, 1.0, rng);
+                let b: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+                let alpha = rng.uniform();
+                let mask =
+                    Mat::from_fn(n, h, |_, _| if rng.bernoulli(alpha) { 1.0 } else { 0.0 });
+                let layer = MaskedLayer::new(&w, &b);
+                let (want, want_count) = layer.forward_masked(&a, &mask);
+                let mut got = Mat::full(n, h, f32::NAN);
+                let count = layer.forward_masked_par(&a, &mask, &mut got, &pool);
+                assert_eq!(count, want_count, "threads={threads}");
+                assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
+            });
+        }
+    }
+
+    #[test]
+    fn parallel_dense_is_bit_identical_to_serial() {
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            let mut rng = Pcg32::seeded(41);
+            let a = Mat::randn(33, 20, 1.0, &mut rng);
+            let w = Mat::randn(20, 15, 1.0, &mut rng);
+            let b: Vec<f32> = (0..15).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+            let layer = MaskedLayer::new(&w, &b);
+            let want = layer.forward_dense(&a);
+            let mut got = Mat::full(33, 15, f32::NAN);
+            layer.forward_dense_par(&a, &mut got, &pool);
+            assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
+        }
     }
 
     #[test]

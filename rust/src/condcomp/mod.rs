@@ -4,15 +4,22 @@
 //! - [`masked_gemm`] — a GEMM that computes only the output entries the sign
 //!   estimator predicts live ("we skip those dot products based on the
 //!   prediction", §3.1). Works off a transposed weight copy so each computed
-//!   dot product reads two contiguous strips.
+//!   dot product reads two contiguous strips; hot-path variants run batch
+//!   rows on the shared worker pool and write into caller-owned buffers.
+//! - [`dispatch`] — the density-adaptive kernel choice: masked dot products
+//!   beat the dense axpy GEMM only below a *measured* density threshold;
+//!   [`DispatchPolicy`] combines that measurement with the §3.4 cost model
+//!   to pick dense-parallel vs masked-parallel per layer per batch.
 //! - [`cond_mlp`] — an estimator-augmented network forward built on the
 //!   masked GEMM, with exact FLOP accounting per layer.
 //! - [`flops`] — operation counters shared by the engine and the benches.
 
 pub mod masked_gemm;
 pub mod cond_mlp;
+pub mod dispatch;
 pub mod flops;
 
 pub use cond_mlp::CondMlp;
+pub use dispatch::{DispatchPolicy, Kernel};
 pub use flops::{FlopBreakdown, LayerFlops};
 pub use masked_gemm::MaskedLayer;

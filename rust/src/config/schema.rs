@@ -85,6 +85,11 @@ pub struct TrainConfig {
     pub max_norm: f32,
     /// RNG seed for init, shuffling and dropout.
     pub seed: u64,
+    /// Worker threads for the shared compute pool (0 = auto: the machine's
+    /// available parallelism). Every parallel kernel is bit-identical to
+    /// its serial oracle, so training trajectories and eval results do not
+    /// depend on this knob — it changes wall-clock only.
+    pub threads: usize,
 }
 
 /// Per-layer activation-estimator configuration (§3.1–§3.2).
@@ -177,6 +182,7 @@ impl ExperimentProfile {
                 l2_weight: 5e-5,
                 max_norm: 25.0,
                 seed: 1,
+                threads: 0,
             },
             n_train: 50_000,
             n_valid: 10_000,
@@ -207,6 +213,7 @@ impl ExperimentProfile {
                 l2_weight: 0.0,
                 max_norm: 25.0,
                 seed: 1,
+                threads: 0,
             },
             n_train: 590_000,
             n_valid: 14_388,
@@ -353,6 +360,9 @@ impl ExperimentProfile {
         if let Some(x) = doc.get_usize("train.seed") {
             self.train.seed = x as u64;
         }
+        if let Some(x) = doc.get_usize("train.threads") {
+            self.train.threads = x;
+        }
         if let Some(x) = doc.get_usize("data.n_train") {
             self.n_train = x;
         }
@@ -412,11 +422,19 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let mut p = ExperimentProfile::mnist_tiny();
-        let doc = TomlDoc::parse("[train]\nepochs = 9\nlr = 0.5\n[data]\nn_train = 123").unwrap();
+        let doc = TomlDoc::parse("[train]\nepochs = 9\nlr = 0.5\nthreads = 4\n[data]\nn_train = 123")
+            .unwrap();
         p.apply_overrides(&doc);
         assert_eq!(p.train.epochs, 9);
         assert_eq!(p.train.lr, 0.5);
+        assert_eq!(p.train.threads, 4);
         assert_eq!(p.n_train, 123);
+    }
+
+    #[test]
+    fn threads_defaults_to_auto() {
+        assert_eq!(ExperimentProfile::mnist_paper().train.threads, 0);
+        assert_eq!(ExperimentProfile::svhn_tiny().train.threads, 0);
     }
 
     #[test]

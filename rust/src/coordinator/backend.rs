@@ -2,11 +2,12 @@
 //! (AOT artifacts). Both serve the same two modes — control and conditional.
 
 use super::protocol::Mode;
-use crate::condcomp::{FlopBreakdown, MaskedLayer};
+use crate::condcomp::{DispatchPolicy, FlopBreakdown, Kernel, MaskedLayer};
 use crate::estimator::SignEstimatorSet;
-use crate::linalg::Mat;
+use crate::linalg::{matmul_into_par, Mat};
 use crate::nn::mlp::{add_bias, NoGater};
 use crate::nn::Mlp;
+use crate::parallel::ThreadPool;
 use crate::runtime::ModelRuntime;
 use anyhow::Result;
 use std::sync::{Mutex, RwLock};
@@ -34,43 +35,140 @@ pub trait Backend: Send + Sync {
 }
 
 /// Pure-Rust backend: the control path uses the dense layer kernels, the
-/// conditional path runs estimator + masked GEMM.
+/// conditional path runs estimator + masked GEMM — all on the process-wide
+/// worker pool, so server workers queue compute on shared threads instead of
+/// contending on serial kernels.
 pub struct NativeBackend {
     net: Mlp,
     masked: Vec<MaskedLayer>,
     estimators: RwLock<SignEstimatorSet>,
     max_batch: usize,
+    /// Per-layer-per-batch dense-vs-masked choice (calibrate at startup via
+    /// [`NativeBackend::calibrate_dispatch`]; defaults are conservative).
+    dispatch: RwLock<DispatchPolicy>,
+    /// Recycled activation buffers: the conditional hot path allocates
+    /// nothing per batch after warmup.
+    scratch: Mutex<Vec<Vec<f32>>>,
 }
+
+/// Cap on recycled scratch buffers (bounds idle memory; beyond this they
+/// are simply dropped).
+const SCRATCH_CAP: usize = 8;
 
 impl NativeBackend {
     pub fn new(net: Mlp, estimators: SignEstimatorSet, max_batch: usize) -> NativeBackend {
         let masked = (0..net.depth())
             .map(|l| MaskedLayer::new(&net.weights[l], &net.biases[l]))
             .collect();
-        NativeBackend { net, masked, estimators: RwLock::new(estimators), max_batch }
+        NativeBackend {
+            net,
+            masked,
+            estimators: RwLock::new(estimators),
+            max_batch,
+            dispatch: RwLock::new(DispatchPolicy::default()),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The shared compute pool every batch executes on.
+    fn pool(&self) -> &'static ThreadPool {
+        crate::parallel::global()
+    }
+
+    /// Replace the dispatch policy (e.g. with a recorded cost ratio).
+    pub fn set_dispatch(&self, policy: DispatchPolicy) {
+        *self.dispatch.write().unwrap() = policy;
+    }
+
+    /// Measure the masked-vs-dense cost ratio on this machine's pool and
+    /// install the resulting policy; returns it (the `serve` command logs
+    /// the threshold at startup). Costs a few milliseconds.
+    pub fn calibrate_dispatch(&self) -> DispatchPolicy {
+        let d = self.net.layer_sizes()[0].min(512).max(32);
+        let h = self.net.layer_sizes()[1].min(512).max(32);
+        let n = self.max_batch.clamp(8, 64);
+        let policy = DispatchPolicy::calibrate(self.pool(), n, d, h, 3);
+        self.set_dispatch(policy);
+        policy
+    }
+
+    /// Current dispatch policy.
+    pub fn dispatch_policy(&self) -> DispatchPolicy {
+        *self.dispatch.read().unwrap()
+    }
+
+    fn take_buf(&self, len: usize) -> Vec<f32> {
+        let recycled = self.scratch.lock().unwrap().pop();
+        let mut buf = recycled.unwrap_or_default();
+        // Resize only (no clear): every consumer overwrites the whole
+        // buffer, so re-zeroing a recycled prefix would be pure memset tax.
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    fn put_buf(&self, buf: Vec<f32>) {
+        let mut scratch = self.scratch.lock().unwrap();
+        if scratch.len() < SCRATCH_CAP {
+            scratch.push(buf);
+        }
     }
 
     /// Conditional forward with flop accounting (shared with experiments).
+    ///
+    /// Per hidden layer: predict the mask (row shards in parallel), read its
+    /// density α, and let the dispatch policy pick the kernel — masked
+    /// dot-products below the measured threshold, dense axpy GEMM (with the
+    /// mask applied afterwards) above it. The two kernels compute the same
+    /// function (same sums, different float accumulation order); the policy
+    /// only changes which one is faster.
     fn forward_cond(&self, x: &Mat) -> (Mat, FlopBreakdown) {
         let est = self.estimators.read().unwrap();
+        let policy = self.dispatch_policy();
+        let pool = self.pool();
         let mut flops = FlopBreakdown::default();
         let depth = self.masked.len();
         let mut a = x.clone();
         for l in 0..depth - 1 {
-            let mask = est.layers[l].mask(&a);
+            let mask = est.layers[l].mask_par(&a, pool);
             let layer = &self.masked[l];
-            let (out, computed) = layer.forward_masked(&a, &mask);
+            let (n, h) = (a.rows(), layer.out_dim());
+            let alpha = mask.density() as f64;
+            let mut out = Mat::from_vec(n, h, self.take_buf(n * h));
+            let computed = match policy.decide(n, layer.in_dim(), h, alpha) {
+                Kernel::MaskedParallel => layer.forward_masked_par(&a, &mask, &mut out, pool),
+                Kernel::DenseParallel => {
+                    // Dense axpy GEMM on the untransposed weights, then
+                    // bias + ReLU + the estimator's gate — numerically
+                    // equivalent to the masked kernel (same sums, different
+                    // float accumulation order), every dot product computed.
+                    matmul_into_par(&a, &self.net.weights[l], &mut out, pool);
+                    add_bias(&mut out, &self.net.biases[l]);
+                    for (o, &m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
+                        *o = if *o > 0.0 && m != 0.0 { *o } else { 0.0 };
+                    }
+                    n * h
+                }
+            };
             flops.push(crate::condcomp::LayerFlops::from_counts(
-                a.rows(),
+                n,
                 layer.in_dim(),
-                layer.out_dim(),
+                h,
                 est.layers[l].rank(),
                 computed,
             ));
-            a = out;
+            let prev = std::mem::replace(&mut a, out);
+            if l > 0 {
+                // `prev` owns a scratch buffer (layer-0 input is the request).
+                self.put_buf(prev.into_vec());
+            }
         }
         let last = &self.masked[depth - 1];
-        let mut logits = crate::linalg::matmul(&a, &last.wt.transpose());
+        let mut logits = Mat::from_vec(
+            a.rows(),
+            last.out_dim(),
+            self.take_buf(a.rows() * last.out_dim()),
+        );
+        matmul_into_par(&a, &self.net.weights[depth - 1], &mut logits, pool);
         add_bias(&mut logits, &last.bias);
         flops.push(crate::condcomp::LayerFlops::from_counts(
             a.rows(),
@@ -79,6 +177,9 @@ impl NativeBackend {
             0,
             a.rows() * last.out_dim(),
         ));
+        if depth > 1 {
+            self.put_buf(a.into_vec());
+        }
         (logits, flops)
     }
 }
@@ -217,5 +318,50 @@ mod tests {
         assert_eq!(be.kind(), BackendKind::Native);
         assert_eq!(be.input_dim(), 8);
         assert_eq!(be.max_batch(), 32);
+    }
+
+    /// Forcing the policy to either extreme must not change what the
+    /// conditional path computes — dispatch picks a kernel, not a function.
+    #[test]
+    fn dispatch_choice_does_not_change_results() {
+        let be = native();
+        let mut rng = Pcg32::seeded(17);
+        let x = Mat::randn(6, 8, 1.0, &mut rng);
+
+        be.set_dispatch(DispatchPolicy::with_cost_ratio(1e9)); // α* ≈ 0 → always dense
+        let (dense_logits, dense_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        be.set_dispatch(DispatchPolicy::with_cost_ratio(1e-9)); // α* = 1 → always masked
+        let (masked_logits, masked_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+
+        assert!(
+            dense_logits.max_abs_diff(&masked_logits) < 1e-4,
+            "kernels disagree by {}",
+            dense_logits.max_abs_diff(&masked_logits)
+        );
+        // The dense fallback reports every dot product computed, so its
+        // accounted speedup can only be lower.
+        assert!(dense_speedup.unwrap() <= masked_speedup.unwrap() + 1e-9);
+    }
+
+    #[test]
+    fn repeated_predicts_reuse_scratch_and_stay_deterministic() {
+        let be = native();
+        let mut rng = Pcg32::seeded(23);
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        let (first, _) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        for _ in 0..4 {
+            let (again, _) = be.predict(&x, Mode::ConditionalAe).unwrap();
+            assert_eq!(again.as_slice(), first.as_slice(), "reused buffers leaked state");
+        }
+    }
+
+    #[test]
+    fn calibration_installs_a_sane_policy() {
+        let be = native();
+        let policy = be.calibrate_dispatch();
+        assert!(policy.cost_ratio.is_finite() && policy.cost_ratio > 0.0);
+        assert_eq!(be.dispatch_policy(), policy);
+        let t = policy.density_threshold();
+        assert!((0.0..=1.0).contains(&t), "threshold {t}");
     }
 }

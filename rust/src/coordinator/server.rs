@@ -21,13 +21,27 @@ pub struct ServerConfig {
     pub addr: String,
     /// Dynamic-batching window.
     pub max_wait: Duration,
-    /// Worker threads pulling batches.
+    /// Worker threads pulling batches. Workers only orchestrate: the
+    /// compute itself runs on the shared pool, so extra workers overlap
+    /// batching/IO with compute rather than oversubscribing cores.
     pub workers: usize,
+    /// Size of the shared compute pool (0 = auto: available parallelism).
+    /// Applied at startup via `parallel::configure_global`; a no-op if the
+    /// process pool already exists (the `condcomp serve` CLI sizes the pool
+    /// earlier — before dispatch calibration — so there this field is
+    /// informational; it is the knob for embedders who call
+    /// [`Server::start`] before any kernel has touched the pool).
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:0".into(), max_wait: Duration::from_millis(2), workers: 1 }
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+            threads: 0,
+        }
     }
 }
 
@@ -44,10 +58,14 @@ pub struct Server {
 impl Server {
     /// Start accepting connections; returns once the listener is bound.
     pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Result<Server> {
+        if cfg.threads > 0 {
+            crate::parallel::configure_global(cfg.threads);
+        }
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(MetricsRegistry::new());
+        metrics.set_gauge("pool_threads", crate::parallel::global().threads() as f64);
         let batcher = Arc::new(DynamicBatcher::new(backend.max_batch(), cfg.max_wait));
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();

@@ -5,6 +5,7 @@ use crate::config::EstimatorConfig;
 use crate::linalg::{LowRank, Mat, Svd};
 use crate::nn::mlp::{ActivationGater, Mlp};
 use crate::nn::trainer::TrainGater;
+use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
 use crate::util::Pcg32;
 
 /// A single layer's activation-sign estimator: `S = [a·U·V + b_layer − bias > 0]`.
@@ -63,6 +64,33 @@ impl SignEstimator {
         let b = self.bias;
         z.map_inplace(|v| if v - b > 0.0 { 1.0 } else { 0.0 });
         z
+    }
+
+    /// [`Self::mask`] with the low-rank prediction computed for row shards
+    /// in parallel on `pool`. Each shard runs the exact serial pipeline
+    /// (`a·U·V + b_layer`, then the sign test) on its own rows, and the
+    /// blocked GEMM computes every output row independently of its
+    /// neighbours — so the mask is bit-identical to the serial one for any
+    /// thread count.
+    pub fn mask_par(&self, input: &Mat, pool: &ThreadPool) -> Mat {
+        let n = input.rows();
+        let h = self.layer_bias.len();
+        // Below a few thousand estimated cells, shard setup dominates.
+        if pool.threads() == 1 || n < 2 || n * h < 4096 {
+            return self.mask(input);
+        }
+        let mut out = Mat::zeros(n, h);
+        let rows_per = chunk_rows(n, pool.threads(), 1);
+        let b = self.bias;
+        par_row_chunks(pool, &mut out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            let shard = input.rows_slice(row0, rows);
+            let z = self.estimate_preact(&shard);
+            for (slot, &v) in band.iter_mut().zip(z.as_slice()) {
+                *slot = if v - b > 0.0 { 1.0 } else { 0.0 };
+            }
+        });
+        out
     }
 
     /// Fraction of units predicted live for this input (the achieved α̂).
@@ -159,7 +187,12 @@ impl SignEstimatorSet {
 
 impl ActivationGater for SignEstimatorSet {
     fn gate(&self, layer: usize, input: &Mat) -> Option<Mat> {
-        self.layers.get(layer).map(|est| est.mask(input))
+        // Mask production rides the shared pool for large batches; the
+        // parallel path is bit-identical to the serial one, so gated
+        // training/eval stay reproducible for any thread count.
+        self.layers
+            .get(layer)
+            .map(|est| est.mask_par(input, crate::parallel::global()))
     }
 }
 
@@ -233,6 +266,22 @@ mod tests {
         }
         assert!(errs[4] <= 0.02, "full-rank sign error {}", errs[4]);
         assert!(errs[0] >= errs[4], "rank-1 should be no better than full rank");
+    }
+
+    #[test]
+    fn mask_par_is_bit_identical_to_serial() {
+        let mut rng = Pcg32::seeded(77);
+        // Wide enough that n*h clears the mask_par serial cutoff (90*80=7200).
+        let w = Mat::randn(30, 80, 0.3, &mut rng);
+        let bias: Vec<f32> = (0..80).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let est = SignEstimator::fit(&w, &bias, 6, 0.05);
+        let x = Mat::randn(90, 30, 1.0, &mut rng);
+        let want = est.mask(&x);
+        for threads in [1usize, 2, 7] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            let got = est.mask_par(&x, &pool);
+            assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -8,8 +8,12 @@
 //!
 //! - [`util`] — PRNG, statistics, timing, property-test helpers (offline
 //!   substitutes for `rand`/`proptest`).
-//! - [`linalg`] — dense matrices, cache-blocked GEMM, one-sided Jacobi SVD,
-//!   truncated low-rank factorization (paper §3.2).
+//! - [`parallel`] — the shared worker pool and deterministic partitioning
+//!   primitives every compute kernel runs on (dense GEMM, masked GEMM,
+//!   estimator, serving backend).
+//! - [`linalg`] — dense matrices, cache-blocked GEMM (serial oracle +
+//!   row-panel-parallel variant), one-sided Jacobi SVD, truncated low-rank
+//!   factorization (paper §3.2).
 //! - [`io`] — `.npy`/`.npz` and JSON, for weight interchange with the
 //!   build-time Python path and for the serving protocol.
 //! - [`config`] — TOML-lite parser + typed experiment configuration.
@@ -19,8 +23,10 @@
 //! - [`nn`] — the reference trainer (DeepLearnToolbox-equivalent, paper §3.5).
 //! - [`estimator`] — the paper's contribution: SVD-derived activation-sign
 //!   estimators with refresh policies and quality metrics (§3.1–§3.3).
-//! - [`condcomp`] — conditional forward path: column-skipping masked GEMM and
-//!   the estimator-augmented MLP, with FLOP accounting.
+//! - [`condcomp`] — conditional forward path: column-skipping masked GEMM
+//!   (serial oracle + pool-parallel hot path), the density-adaptive
+//!   dense-vs-masked dispatch policy, and the estimator-augmented MLP, with
+//!   FLOP accounting.
 //! - [`cost`] — the analytical FLOP model of §3.4 (Eqs. 8–11).
 //! - [`runtime`] — PJRT client + HLO-text artifact store (the AOT bridge).
 //! - [`coordinator`] — L3 serving/training orchestration: TCP server, dynamic
@@ -29,6 +35,7 @@
 //! - [`experiments`] — one driver per paper table/figure.
 
 pub mod util;
+pub mod parallel;
 pub mod linalg;
 pub mod io;
 pub mod config;

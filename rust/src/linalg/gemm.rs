@@ -1,23 +1,38 @@
 //! Dense matrix multiplication — the control network's hot path.
 //!
-//! Two implementations:
+//! Three implementations:
 //!
 //! - [`matmul_naive`] — unblocked i–k–j loop, kept as the correctness oracle.
 //! - [`matmul`] / [`matmul_into`] — the same axpy loop order with K-panel
 //!   blocking so a `KC × n` slab of B stays in L2 across A's rows (16 GF/s
 //!   vs 11.9 GF/s unblocked, vs 1.75 GF/s for the rejected packed-dot
 //!   variant on this 1-core testbed — see EXPERIMENTS.md §Perf).
+//! - [`matmul_into_par`] — the blocked kernel with C's row panels (MC-row
+//!   granularity, NC-column sub-blocks) sharded across the worker pool.
+//!   Each output row accumulates its K-contributions in exactly the serial
+//!   order, so the result is bit-identical to [`matmul_into`] for any
+//!   thread count.
 //!
-//! Correctness is pinned by property tests against the naive kernel.
+//! [`matmul_auto`] / [`matmul_into_auto`] pick serial vs pool-parallel from
+//! the problem size; the `nn` forward/backward paths route through them.
+//!
+//! Correctness is pinned by property tests against the naive kernel, at
+//! pool sizes 1, 2 and 7 for the parallel variant.
 
 use super::matrix::Mat;
+use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
 
-/// Rows of A processed per block (fits a panel of A in L1/L2 alongside Bᵀ).
+/// Rows of A (and C) per parallel row panel: the unit of work sharding.
 const MC: usize = 64;
-/// Columns of B processed per block.
+/// Columns of B processed per sub-block inside a row panel (keeps a
+/// `KC × NC` slab of B and an `MC × NC` slab of C resident together).
 const NC: usize = 128;
 /// Depth (shared dimension) processed per block.
 const KC: usize = 256;
+
+/// Below this many fused multiply-adds (`m·k·n`), pool dispatch overhead
+/// beats the parallel win and the auto paths stay serial.
+const PAR_MIN_MULADDS: usize = 1 << 20;
 
 /// Reference triple-loop kernel. O(m·n·k); used by tests and tiny shapes.
 pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
@@ -63,7 +78,6 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
     let (m, k) = a.shape();
     c.as_mut_slice().fill(0.0);
-    let _ = (MC, NC); // block constants retained for the masked/packed paths
 
     let mut p0 = 0;
     while p0 < k {
@@ -81,6 +95,94 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
         }
         p0 += kc;
     }
+}
+
+/// `C = A · B` on the worker pool: C's rows are split into MC-quantized
+/// panels, one pool job per panel. Bit-identical to [`matmul_into`] — each
+/// `C[i, j]` accumulates its `K` contributions in exactly the serial order
+/// (KC panels ascending, rows within a panel independent), so the thread
+/// count and panel boundaries cannot change a single bit of the result.
+pub fn matmul_into_par(a: &Mat, b: &Mat, c: &mut Mat, pool: &ThreadPool) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.cols();
+    if pool.threads() == 1 || m < 2 || n == 0 || k == 0 {
+        matmul_into(a, b, c);
+        return;
+    }
+    // MC is the preferred row-panel quantum; when the batch is too short to
+    // give every worker an MC panel (serving batches of 64–250 rows), degrade
+    // to finer panels — row sharding is bit-identity-safe at any granularity,
+    // and a mostly-idle pool is worse than thinner panels.
+    let quantum = if m >= pool.threads() * MC { MC } else { (MC / 8).max(1) };
+    let rows_per = chunk_rows(m, pool.threads(), quantum);
+    par_row_chunks(pool, c, rows_per, |row0, band| {
+        gemm_row_panel(a, b, row0, band);
+    });
+}
+
+/// Compute one row panel of `C = A · B` into `band` (row-major rows of C
+/// starting at `row0`). Shared by the pool jobs and the serial fallback.
+fn gemm_row_panel(a: &Mat, b: &Mat, row0: usize, band: &mut [f32]) {
+    let k = a.cols();
+    let n = b.cols();
+    let rows = band.len() / n;
+    band.fill(0.0);
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        // NC-column sub-blocks keep the active B slab L2-resident while the
+        // panel's rows stream over it. Per-element accumulation order over
+        // the K dimension is unchanged (p0 outer, pp inner), so blocking is
+        // invisible in the result bits.
+        let mut j0 = 0;
+        while j0 < n {
+            let nc = NC.min(n - j0);
+            for i in 0..rows {
+                let arow = &a.row(row0 + i)[p0..p0 + kc];
+                let crow = &mut band[i * n + j0..i * n + j0 + nc];
+                for (pp, &aip) in arow.iter().enumerate() {
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(p0 + pp)[j0..j0 + nc];
+                    axpy_row(crow, aip, brow);
+                }
+            }
+            j0 += nc;
+        }
+        p0 += kc;
+    }
+}
+
+/// `C = A · B` on the pool, allocating the output.
+pub fn matmul_par(a: &Mat, b: &Mat, pool: &ThreadPool) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into_par(a, b, &mut c, pool);
+    c
+}
+
+/// `C = A · B`, choosing serial vs global-pool parallel from the problem
+/// size. This is the entry point the `nn` forward/backward paths use; small
+/// products (where dispatch overhead dominates) stay serial.
+pub fn matmul_into_auto(a: &Mat, b: &Mat, c: &mut Mat) {
+    let work = a
+        .rows()
+        .saturating_mul(a.cols())
+        .saturating_mul(b.cols());
+    if work < PAR_MIN_MULADDS {
+        matmul_into(a, b, c);
+    } else {
+        matmul_into_par(a, b, c, crate::parallel::global());
+    }
+}
+
+/// Allocating wrapper over [`matmul_into_auto`].
+pub fn matmul_auto(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into_auto(a, b, &mut c);
+    c
 }
 
 /// `c += alpha * b` over contiguous slices (the vectorized inner kernel).
@@ -218,5 +320,66 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(4, 2);
         let _ = matmul(&a, &b);
+    }
+
+    #[test]
+    fn parallel_matches_naive_random_shapes() {
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            property("parallel == naive", 16, |rng| {
+                let m = rng.index(50) + 1;
+                let k = rng.index(40) + 1;
+                let n = rng.index(40) + 1;
+                let a = Mat::randn(m, k, 1.0, rng);
+                let b = Mat::randn(k, n, 1.0, rng);
+                assert_close(&matmul_par(&a, &b, &pool), &matmul_naive(&a, &b), 1e-4);
+            });
+        }
+    }
+
+    /// The determinism contract: the parallel kernel is *bit-identical* to
+    /// the serial blocked kernel for any thread count and any shape,
+    /// including ones straddling the MC/NC/KC panel boundaries.
+    #[test]
+    fn parallel_is_bit_identical_to_serial_for_any_thread_count() {
+        let mut rng = Pcg32::seeded(23);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (64, 256, 128),
+            (65, 257, 129),
+            (63, 100, 127),
+            (130, 30, 260),
+            (200, 17, 3),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let mut serial = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut serial);
+            for threads in [1usize, 2, 7] {
+                let pool = ThreadPool::new(threads);
+                let mut par = Mat::full(m, n, f32::NAN); // dirty output buffer
+                matmul_into_par(&a, &b, &mut par, &pool);
+                assert_eq!(
+                    par.as_slice(),
+                    serial.as_slice(),
+                    "threads={threads} shape=({m},{k},{n}) not bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_path_matches_serial_across_the_size_threshold() {
+        let mut rng = Pcg32::seeded(29);
+        // Small (serial branch) and large (parallel branch) products.
+        for &(m, k, n) in &[(8usize, 8usize, 8usize), (160, 160, 160)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let auto = matmul_auto(&a, &b);
+            let mut serial = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut serial);
+            assert_eq!(auto.as_slice(), serial.as_slice());
+        }
     }
 }

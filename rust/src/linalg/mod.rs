@@ -1,9 +1,10 @@
 //! Dense linear algebra, built from scratch for the offline environment.
 //!
 //! - [`matrix`] — row-major `Mat` with shape-checked ops.
-//! - [`gemm`] — the dense hot path: naive reference kernel plus a
-//!   cache-blocked, panel-packed implementation (the "control" network's
-//!   forward pass runs through this).
+//! - [`gemm`] — the dense hot path: naive reference kernel, a cache-blocked
+//!   serial implementation (the correctness oracle), and a row-panel
+//!   pool-parallel variant that is bit-identical to it (the "control"
+//!   network's forward pass runs through the auto-dispatching entry point).
 //! - [`svd`] — one-sided Jacobi SVD (full and truncated); powers the paper's
 //!   per-epoch estimator refresh (§3.2).
 //! - [`lowrank`] — truncated factorization `W ≈ U·V` with the paper's
@@ -14,7 +15,7 @@ pub mod gemm;
 pub mod svd;
 pub mod lowrank;
 
-pub use gemm::{matmul, matmul_into};
+pub use gemm::{matmul, matmul_auto, matmul_into, matmul_into_auto, matmul_into_par, matmul_par};
 pub use lowrank::LowRank;
 pub use matrix::Mat;
 pub use svd::Svd;

@@ -7,8 +7,18 @@
 //!   serve       start the serving coordinator (native or PJRT backend)
 //!   experiment  regenerate a paper table/figure (fig2…fig6, table2, table3,
 //!               speedup, all)
+//!   bench       measured dense-vs-masked-vs-parallel sweep; writes
+//!               machine-readable BENCH_parallel.json
 //!   bench-flops print the §3.4 analytic cost model for an architecture
 //!   datagen     dump a synthetic corpus to .npy (debugging/external use)
+//!
+//! Every subcommand accepts `--threads N` to size the shared compute pool
+//! (0 = auto). Each parallel kernel is bit-identical to its serial oracle,
+//! so for a fixed dispatch policy the knob changes wall-clock only, never
+//! results. The one caveat is `serve`: its startup *calibration* is a
+//! timing measurement, so across runs the dispatch policy may pick the
+//! other (numerically equivalent, last-bit-different) kernel near the
+//! threshold density.
 
 use condcomp::cli::{Command, OptSpec, Parsed};
 use condcomp::config::{EstimatorConfig, ExperimentProfile};
@@ -40,11 +50,26 @@ fn usage() -> String {
     format!(
         "condcomp {} — conditional feedforward computation via low-rank sign estimation\n\
          \n\
-         usage: condcomp <train|train-pjrt|serve|experiment|bench-flops|datagen> [options]\n\
+         usage: condcomp <train|train-pjrt|serve|experiment|bench|bench-flops|datagen> [options]\n\
          \n\
          run `condcomp <subcommand> --help` for options.\n",
         condcomp::VERSION
     )
+}
+
+/// Apply the `--threads` knob (shared by every subcommand), falling back to
+/// the profile's `train.threads` config key when the flag is 0/absent. Only
+/// *requests* the size — the pool itself is created lazily on first use, so
+/// a later knob in the same process is not silently shadowed.
+fn apply_threads(parsed: &Parsed, config_threads: usize) -> anyhow::Result<usize> {
+    let cli = parsed.get_usize("threads")?.unwrap_or(0);
+    let requested = if cli != 0 { cli } else { config_threads };
+    condcomp::parallel::configure_global(requested);
+    Ok(if requested == 0 {
+        condcomp::parallel::default_threads()
+    } else {
+        requested
+    })
 }
 
 fn profile_from(parsed: &Parsed) -> Result<ExperimentProfile, anyhow::Error> {
@@ -77,6 +102,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "train-pjrt" => cmd_train_pjrt(rest),
         "serve" => cmd_serve(rest),
         "experiment" => cmd_experiment(rest),
+        "bench" => cmd_bench(rest),
         "bench-flops" => cmd_bench_flops(rest),
         "datagen" => cmd_datagen(rest),
         "--help" | "-h" | "help" => {
@@ -91,6 +117,7 @@ fn common_opts(cmd: Command) -> Command {
     cmd.opt(OptSpec::value("profile", "experiment profile (mnist-{tiny,small,paper}, svhn-{tiny,small,paper})").with_default("mnist-small"))
         .opt(OptSpec::value("config", "TOML config file with overrides"))
         .opt(OptSpec::value("set", "override key=value (repeatable)").multi())
+        .opt(OptSpec::value("threads", "compute-pool threads (0 = auto)").with_default("0"))
 }
 
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
@@ -107,6 +134,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     let profile = profile_from(&parsed)?;
+    let threads = apply_threads(&parsed, profile.train.threads)?;
     let ranks = parsed.get_ranks("ranks")?.unwrap_or_default();
     let mut est_cfg = if ranks.is_empty() {
         EstimatorConfig::control()
@@ -118,7 +146,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     est_cfg.adaptive_energy = parsed.get_f64("adaptive-energy")?;
 
     eprintln!(
-        "training {} ({:?}) estimator={}",
+        "training {} ({:?}) estimator={} pool-threads={threads}",
         profile.name,
         profile.net.layers,
         est_cfg.label()
@@ -156,6 +184,7 @@ fn cmd_train_pjrt(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     let profile = profile_from(&parsed)?;
+    let _ = apply_threads(&parsed, profile.train.threads)?;
     let engine = Arc::new(Engine::load(Path::new(parsed.get("artifacts").unwrap()))?);
     eprintln!("pjrt platform: {}", engine.platform());
 
@@ -191,8 +220,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     }
     let mut profile = profile_from(&parsed)?;
     profile.train.epochs = parsed.get_usize("train-epochs")?.unwrap_or(2);
+    let threads = apply_threads(&parsed, profile.train.threads)?;
 
-    eprintln!("preparing model ({})…", profile.name);
+    eprintln!("preparing model ({})… pool-threads={threads}", profile.name);
     let mut data = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
     let mut rng = Pcg32::new(profile.train.seed, 1);
     let mut net = Mlp::init(&profile.net, &mut rng);
@@ -210,6 +240,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     };
     let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
     let backend = Arc::new(NativeBackend::new(net, est, 64));
+    // Measure the dense-vs-masked dispatch threshold on this machine's pool.
+    let policy = backend.calibrate_dispatch();
+    eprintln!(
+        "dispatch calibrated: cost ratio {:.2}, masked wins below α = {:.3}",
+        policy.cost_ratio,
+        policy.density_threshold()
+    );
     let server = Server::start(
         backend,
         ServerConfig {
@@ -218,6 +255,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 parsed.get_usize("max-wait-ms")?.unwrap_or(2) as u64,
             ),
             workers: parsed.get_usize("workers")?.unwrap_or(1),
+            threads: parsed.get_usize("threads")?.unwrap_or(0),
         },
     )?;
     println!("serving on {} (estimator ranks {ranks:?}); Ctrl-C to stop", server.local_addr);
@@ -248,8 +286,46 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
         })?;
     }
     let profile = profile_from(&parsed2)?;
+    let _ = apply_threads(&parsed, profile.train.threads)?;
     let out = Path::new(parsed.get("out").unwrap()).join(&profile.name);
     condcomp::experiments::run(id, &profile, &out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// `condcomp bench` — the measured dense-vs-masked-vs-parallel sweep
+/// (α ∈ {0.05, 0.25, 0.5, 1.0} × threads ∈ {1, N}), written as
+/// machine-readable JSON including the measured dispatch threshold.
+fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("bench", "dense-vs-masked-vs-parallel wall-clock sweep")
+        .opt(OptSpec::value("out", "output JSON path").with_default("BENCH_parallel.json"))
+        .opt(OptSpec::value("dim", "square GEMM dimension").with_default("512"))
+        .opt(OptSpec::value("batch", "masked-layer batch rows").with_default("64"))
+        .opt(OptSpec::value("threads", "compute-pool threads for the parallel arm (0 = auto)").with_default("0"))
+        .opt(OptSpec::flag("quick", "shorter measurement budget"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let dim = parsed.get_usize("dim")?.unwrap_or(512);
+    let batch = parsed.get_usize("batch")?.unwrap_or(64);
+    let threads = match parsed.get_usize("threads")?.unwrap_or(0) {
+        0 => condcomp::parallel::default_threads(),
+        n => n,
+    };
+    let cfg = if parsed.flag("quick") {
+        condcomp::bench::quick()
+    } else {
+        condcomp::bench::BenchConfig::default()
+    };
+    let sweep = condcomp::bench::sweep::run_parallel_sweep(&cfg, dim, batch, threads);
+    for line in sweep.report_lines() {
+        println!("{line}");
+    }
+    let out = Path::new(parsed.get("out").unwrap());
+    std::fs::write(out, sweep.to_json().to_string())?;
     println!("wrote {}", out.display());
     Ok(())
 }

@@ -3,7 +3,7 @@
 
 use super::activations::{argmax_rows, relu_inplace, softmax_rows};
 use crate::config::NetConfig;
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{matmul_auto, Mat};
 use crate::util::Pcg32;
 
 /// Supplies the paper's `S_l` mask (Eq. 5) for a hidden layer, given that
@@ -102,7 +102,10 @@ impl Mlp {
             // Ask for the gate BEFORE computing the layer — that is the
             // paper's contract (the estimator sees a_l only).
             let gate = gater.gate(l, &current);
-            let mut z = matmul(&current, &self.weights[l]);
+            // Dense layer products ride the shared worker pool above the
+            // size threshold; matmul_auto is bit-identical to the serial
+            // kernel, so traces stay reproducible for any thread count.
+            let mut z = matmul_auto(&current, &self.weights[l]);
             add_bias(&mut z, &self.biases[l]);
             relu_inplace(&mut z);
             if let Some(mask) = gate {
@@ -122,7 +125,7 @@ impl Mlp {
             inputs.push(z.clone());
             current = z;
         }
-        let mut logits = matmul(&current, &self.weights[depth - 1]);
+        let mut logits = matmul_auto(&current, &self.weights[depth - 1]);
         add_bias(&mut logits, &self.biases[depth - 1]);
         ForwardTrace { inputs, hidden, dropout_masks, logits }
     }
@@ -159,14 +162,14 @@ impl Mlp {
         let mut delta = dlogits.clone(); // grad wrt pre-activation of layer l
 
         for l in (0..depth).rev() {
-            // Parameter grads for this layer.
-            dws[l] = matmul(&trace.inputs[l].transpose(), &delta);
+            // Parameter grads for this layer (pool-parallel above threshold).
+            dws[l] = matmul_auto(&trace.inputs[l].transpose(), &delta);
             dbs[l] = col_sums(&delta);
             if l == 0 {
                 break;
             }
             // Grad wrt this layer's input = delta · Wᵀ …
-            let mut dinput = matmul(&delta, &self.weights[l].transpose());
+            let mut dinput = matmul_auto(&delta, &self.weights[l].transpose());
             // … through dropout …
             if !trace.dropout_masks.is_empty() {
                 dinput = dinput.zip(&trace.dropout_masks[l - 1], |g, m| g * m);

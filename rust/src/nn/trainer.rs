@@ -67,6 +67,13 @@ impl Trainer {
         data: &mut Dataset,
         gater: &mut dyn TrainGater,
     ) -> Vec<EpochStats> {
+        // Size the shared compute pool from the config knob. Lower
+        // precedence than an explicit CLI/env request (if_unset), and a
+        // no-op once the pool exists; the kernels are thread-count-invariant
+        // so this only affects wall-clock, never the training trajectory.
+        if self.cfg.threads > 0 {
+            crate::parallel::configure_global_if_unset(self.cfg.threads);
+        }
         let mut rng = Pcg32::new(self.cfg.seed, 7);
         let mut opt = SgdMomentum::new(net, self.cfg.clone());
         let mut batcher = Batcher::new(data.train.len(), self.cfg.batch_size);

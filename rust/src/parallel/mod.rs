@@ -1,0 +1,44 @@
+//! The parallel execution subsystem: a shared worker pool + deterministic
+//! data-parallel primitives, threaded through the entire forward path.
+//!
+//! The paper's speedup claim (§3.4) is a FLOP-count argument; turning saved
+//! FLOPs into saved *seconds* additionally requires that the kernels use the
+//! machine. This module supplies that layer:
+//!
+//! - [`ThreadPool`] — a std-only pool of persistent workers with a
+//!   `std::thread::scope`-style borrowing-jobs API ([`ThreadPool::scope`]).
+//! - [`global`] — the process-wide shared pool (sized by
+//!   [`configure_global`] / the `--threads` CLI knob / `CONDCOMP_THREADS`,
+//!   defaulting to the machine's available parallelism). The GEMM kernels,
+//!   the masked forward, the estimator and the serving backend all execute
+//!   on this one pool, so concurrent server workers queue compute instead of
+//!   oversubscribing cores.
+//! - [`par_chunks_mut`] / [`par_row_chunks`] / [`chunk_rows`] — contiguous
+//!   disjoint-chunk partitioning. Work inside a chunk runs exactly the code
+//!   the serial kernel runs, so every parallel kernel in the crate is
+//!   **bit-identical to its serial oracle and invariant to the thread
+//!   count** (pinned by property tests at thread counts 1, 2 and 7).
+//!
+//! Rules of the road:
+//!
+//! - Pool jobs must not spawn nested scopes. The primitives enforce this
+//!   automatically: calls made from a pool thread ([`on_pool_thread`])
+//!   execute inline instead of enqueueing, so nesting degrades to serial
+//!   execution rather than deadlocking.
+//! - Serial kernels stay available and are the correctness oracles; the
+//!   parallel entry points fall back to them for small inputs where
+//!   dispatch overhead would dominate.
+//!
+//! Which kernel (dense-parallel vs masked-parallel) to run per layer per
+//! batch is decided one level up, by
+//! [`crate::condcomp::DispatchPolicy`], from the predicted mask density α
+//! and the §3.4 cost model.
+
+pub mod pool;
+pub mod partition;
+
+pub use partition::{chunk_rows, par_chunks_mut, par_row_chunks};
+pub use pool::{
+    configure_global, configure_global_if_unset, default_threads, global, on_pool_thread, Scope,
+    ThreadPool,
+};

@@ -1,0 +1,194 @@
+//! Data-parallel partitioning primitives on top of [`ThreadPool`].
+//!
+//! All primitives split work into **contiguous, disjoint chunks** and hand
+//! each chunk to one pool job. Because every chunk is computed by exactly the
+//! same code a serial loop would run — and floating-point accumulation order
+//! inside a chunk never depends on the chunk boundaries — results are
+//! **bit-identical to the serial path and invariant to the thread count**.
+//! Per-chunk return values come back in chunk order, so reductions over them
+//! (e.g. the masked GEMM's `computed` counts) are deterministic too.
+//!
+//! Serial fallbacks: a single chunk, a one-thread pool, or being called from
+//! inside a pool job ([`on_pool_thread`], the no-nesting guard) all run the
+//! chunks inline on the caller's thread.
+
+use super::pool::{on_pool_thread, ThreadPool};
+use crate::linalg::Mat;
+
+#[inline]
+fn div_up(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Rows per chunk so that `total` rows split into at most `threads` chunks,
+/// with the chunk size rounded up to a multiple of `quantum` (the GEMM row
+/// panel MC; 1 for row-granular work). Always returns at least `quantum`.
+pub fn chunk_rows(total: usize, threads: usize, quantum: usize) -> usize {
+    let quantum = quantum.max(1);
+    let threads = threads.max(1);
+    let per = div_up(total.max(1), threads);
+    (div_up(per, quantum) * quantum).max(quantum)
+}
+
+/// Split `data` into chunks of `chunk_len` elements (last chunk may be
+/// short) and run `f(chunk_index, element_offset, chunk)` for each, on the
+/// pool when it pays and inline otherwise. Returns the per-chunk results in
+/// chunk order.
+pub fn par_chunks_mut<T, R, F>(
+    pool: &ThreadPool,
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &mut [T]) -> R + Sync,
+{
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = div_up(data.len(), chunk_len);
+    if n_chunks <= 1 || pool.threads() == 1 || on_pool_thread() {
+        return data
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(i, chunk)| f(i, i * chunk_len, chunk))
+            .collect();
+    }
+    let mut results: Vec<Option<R>> = Vec::with_capacity(n_chunks);
+    results.resize_with(n_chunks, || None);
+    let f = &f;
+    pool.scope(|s| {
+        for (i, (slot, chunk)) in results.iter_mut().zip(data.chunks_mut(chunk_len)).enumerate() {
+            s.spawn(move || {
+                *slot = Some(f(i, i * chunk_len, chunk));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("pool chunk did not run"))
+        .collect()
+}
+
+/// Row-oriented variant over a matrix: splits `m` into bands of
+/// `rows_per_chunk` whole rows and runs `f(first_row, band)` for each, where
+/// `band` is the row-major storage of those rows. Results in band order.
+pub fn par_row_chunks<R, F>(
+    pool: &ThreadPool,
+    m: &mut Mat,
+    rows_per_chunk: usize,
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut [f32]) -> R + Sync,
+{
+    let cols = m.cols();
+    if cols == 0 {
+        return Vec::new();
+    }
+    let rows_per_chunk = rows_per_chunk.max(1);
+    par_chunks_mut(pool, m.as_mut_slice(), rows_per_chunk * cols, move |_, offset, band| {
+        f(offset / cols, band)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn chunk_rows_covers_and_quantizes() {
+        // 512 rows on 4 threads with MC=64 → 128-row chunks.
+        assert_eq!(chunk_rows(512, 4, 64), 128);
+        // Quantum rounding: 100 rows / 3 threads, quantum 16 → ceil(34/16)*16 = 48.
+        assert_eq!(chunk_rows(100, 3, 16), 48);
+        // Degenerate inputs stay sane.
+        assert_eq!(chunk_rows(0, 4, 8), 8);
+        assert_eq!(chunk_rows(5, 0, 0), 5);
+        // Chunks never exceed the thread count.
+        for total in [1usize, 7, 64, 129, 1000] {
+            for threads in [1usize, 2, 7, 16] {
+                for quantum in [1usize, 8, 64] {
+                    let per = chunk_rows(total, threads, quantum);
+                    assert!(per >= 1);
+                    assert!((total + per - 1) / per <= threads.max(1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_matches_serial_for_any_thread_count() {
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            property("par_chunks_mut == serial map", 16, |rng| {
+                let n = rng.index(200) + 1;
+                let chunk = rng.index(32) + 1;
+                let mut data: Vec<i64> = (0..n as i64).collect();
+                let mut want = data.clone();
+                for v in want.iter_mut() {
+                    *v = *v * 3 + 1;
+                }
+                let sums = par_chunks_mut(&pool, &mut data, chunk, |_, offset, c| {
+                    let mut s = 0i64;
+                    for (j, v) in c.iter_mut().enumerate() {
+                        assert_eq!(*v, (offset + j) as i64, "offset bookkeeping");
+                        *v = *v * 3 + 1;
+                        s += *v;
+                    }
+                    s
+                });
+                assert_eq!(data, want);
+                assert_eq!(sums.iter().sum::<i64>(), want.iter().sum::<i64>());
+                assert_eq!(sums.len(), (n + chunk - 1) / chunk);
+            });
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_sees_whole_rows() {
+        let pool = ThreadPool::new(2);
+        let mut m = Mat::from_fn(9, 4, |r, c| (r * 4 + c) as f32);
+        let firsts = par_row_chunks(&pool, &mut m, 2, |row0, band| {
+            assert_eq!(band.len() % 4, 0, "whole rows only");
+            for v in band.iter_mut() {
+                *v += 1.0;
+            }
+            row0
+        });
+        assert_eq!(firsts, vec![0, 2, 4, 6, 8]);
+        assert_eq!(m[(3, 2)], (3 * 4 + 2) as f32 + 1.0);
+    }
+
+    #[test]
+    fn empty_input_yields_no_chunks() {
+        let pool = ThreadPool::new(2);
+        let mut data: Vec<u8> = Vec::new();
+        let out: Vec<usize> = par_chunks_mut(&pool, &mut data, 8, |i, _, _| i);
+        assert!(out.is_empty());
+        let mut m = Mat::zeros(0, 5);
+        let out: Vec<usize> = par_row_chunks(&pool, &mut m, 2, |r, _| r);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn nested_calls_fall_back_to_serial() {
+        // A job that itself calls par_chunks_mut must not deadlock: the
+        // on_pool_thread guard degrades the inner call to inline execution.
+        let pool = ThreadPool::new(2);
+        let mut outer = vec![0u32; 4];
+        par_chunks_mut(&pool, &mut outer, 1, |i, _, chunk| {
+            let inner_pool = super::super::pool::global();
+            let mut inner = vec![i as u32; 8];
+            let _ = par_chunks_mut(inner_pool, &mut inner, 2, |_, _, c| {
+                for v in c.iter_mut() {
+                    *v += 1;
+                }
+            });
+            chunk[0] = inner.iter().sum();
+        });
+        assert_eq!(outer, vec![8, 16, 24, 32]);
+    }
+}

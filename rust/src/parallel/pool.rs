@@ -1,0 +1,379 @@
+//! A std-only scoped worker pool.
+//!
+//! Design constraints (see the module docs in `parallel/mod.rs`):
+//!
+//! - **Persistent workers.** Threads are spawned once per pool and reused;
+//!   dispatching a scope costs two mutex/condvar handshakes per job, not a
+//!   thread spawn. One process-wide pool ([`global`]) is shared by the GEMM
+//!   kernels, the masked forward, the estimator, and the serving backend, so
+//!   concurrent server workers queue compute on the same threads instead of
+//!   oversubscribing the machine.
+//! - **Scoped, borrowing jobs.** [`ThreadPool::scope`] mirrors
+//!   `std::thread::scope`: jobs may borrow from the caller's stack because
+//!   `scope` does not return (or unwind) until every spawned job has
+//!   finished. This is the same soundness argument as `std::thread::scope`:
+//!   the borrowed data cannot be observed by the caller while jobs still run,
+//!   because control does not come back until they are done.
+//! - **No nesting.** Pool jobs must never block on a nested scope — with all
+//!   workers blocked waiting for sub-jobs behind them in the queue, the pool
+//!   would deadlock. Workers mark themselves with a thread-local flag;
+//!   [`on_pool_thread`] lets the partition primitives fall back to serial
+//!   execution automatically, making accidental nesting safe (it degrades to
+//!   inline execution instead of deadlocking).
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on threads owned by a [`ThreadPool`]. The partition primitives use
+/// this to run serially instead of enqueueing nested jobs (deadlock guard).
+pub fn on_pool_thread() -> bool {
+    IN_POOL_WORKER.with(|c| c.get())
+}
+
+struct Queue {
+    /// Pending jobs + the shutdown flag, under one lock.
+    state: Mutex<(VecDeque<Job>, bool)>,
+    available: Condvar,
+}
+
+/// A fixed-size pool of persistent worker threads with a scoped-spawn API.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue {
+            state: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let queue = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("condcomp-pool-{i}"))
+                    .spawn(move || {
+                        IN_POOL_WORKER.with(|c| c.set(true));
+                        worker_loop(&queue);
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { queue, workers, threads }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn push(&self, job: Job) {
+        let mut state = self.queue.state.lock().unwrap();
+        state.0.push_back(job);
+        drop(state);
+        self.queue.available.notify_one();
+    }
+
+    /// Run `f` with a [`Scope`] on which borrowing jobs can be spawned.
+    /// Returns only after every spawned job has completed; if any job
+    /// panicked, the panic is re-raised here (after all jobs finished).
+    pub fn scope<'env, F, T>(&'env self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panic: Mutex::new(None),
+            }),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        // Even if `f` itself panics we must wait for already-spawned jobs
+        // before unwinding past the borrowed stack frame.
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        scope.wait_all();
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(value) => {
+                // Re-raise the first job panic with its original payload so
+                // assertion messages survive the pool boundary.
+                if let Some(payload) = scope.state.panic.lock().unwrap().take() {
+                    resume_unwind(payload);
+                }
+                value
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut state = self.queue.state.lock().unwrap();
+            state.1 = true;
+        }
+        self.queue.available.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(queue: &Queue) {
+    loop {
+        let job = {
+            let mut state = queue.state.lock().unwrap();
+            loop {
+                if let Some(job) = state.0.pop_front() {
+                    break Some(job);
+                }
+                if state.1 {
+                    break None;
+                }
+                state = queue.available.wait(state).unwrap();
+            }
+        };
+        match job {
+            // Job bodies are panic-caught in `Scope::spawn`, so the queue
+            // lock can never be poisoned by user code.
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from a job, re-raised when the scope closes.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+/// Handle for spawning borrowing jobs inside [`ThreadPool::scope`].
+///
+/// The two invariant lifetimes mirror `std::thread::Scope`: `'scope` is the
+/// duration of the scope itself, `'env` the environment it may borrow from.
+pub struct Scope<'scope, 'env: 'scope> {
+    pool: &'env ThreadPool,
+    state: Arc<ScopeState>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Queue a job on the pool. The job may borrow anything that outlives
+    /// the enclosing [`ThreadPool::scope`] call.
+    pub fn spawn<F>(&'scope self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        });
+        // SAFETY: the only thing transmuted away is the `'scope` lifetime
+        // bound of the boxed closure (the fat-pointer layout is identical).
+        // `ThreadPool::scope` blocks in `wait_all` until `pending` reaches
+        // zero — on both the normal and the unwinding path — so the job can
+        // never run after the borrows it captured have expired.
+        let job: Job = unsafe { std::mem::transmute(job) };
+        self.pool.push(job);
+    }
+
+    fn wait_all(&self) {
+        let mut pending = self.state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.state.done.wait(pending).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The process-wide shared pool
+// ---------------------------------------------------------------------------
+
+static GLOBAL_POOL: OnceLock<ThreadPool> = OnceLock::new();
+static REQUESTED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a size for the global pool (`0` = auto). Takes effect only if the
+/// pool has not been created yet; returns whether the request will be
+/// honored. Call early (the CLI does, from `--threads`).
+pub fn configure_global(threads: usize) -> bool {
+    REQUESTED_THREADS.store(threads, Ordering::SeqCst);
+    GLOBAL_POOL.get().is_none()
+}
+
+/// Like [`configure_global`], but only applies when no explicit size has
+/// been requested yet — lower-precedence knobs (config-file `train.threads`
+/// applied from library code) use this so they never override a CLI
+/// `--threads` that was set first.
+pub fn configure_global_if_unset(threads: usize) -> bool {
+    if GLOBAL_POOL.get().is_some() {
+        return false;
+    }
+    REQUESTED_THREADS
+        .compare_exchange(0, threads, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+}
+
+/// Default worker count: `CONDCOMP_THREADS` env override, else the machine's
+/// available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("CONDCOMP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// The process-wide shared pool, created on first use with the configured
+/// (or default) thread count.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL_POOL.get_or_init(|| {
+        let requested = REQUESTED_THREADS.load(Ordering::SeqCst);
+        let threads = if requested == 0 { default_threads() } else { requested };
+        ThreadPool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64};
+
+    #[test]
+    fn scope_runs_all_jobs_and_joins() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        pool.scope(|s| {
+            for i in 0..100u64 {
+                let counter = &counter;
+                s.spawn(move || {
+                    counter.fetch_add(i, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn jobs_can_borrow_mutably_and_disjointly() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0usize; 10];
+        pool.scope(|s| {
+            for (i, slot) in data.iter_mut().enumerate() {
+                s.spawn(move || *slot = i * i);
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn sequential_scopes_reuse_workers() {
+        let pool = ThreadPool::new(2);
+        let hits = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.scope(|s| {
+                let hits = &hits;
+                s.spawn(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn empty_scope_returns() {
+        let pool = ThreadPool::new(2);
+        let v = pool.scope(|_s| 42);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn job_panic_propagates_with_its_payload_after_all_jobs_finish() {
+        let pool = ThreadPool::new(2);
+        let completed = AtomicU64::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom at shard 3"));
+                for _ in 0..8 {
+                    let completed = &completed;
+                    s.spawn(move || {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }));
+        // The original payload (and thus the assertion message) survives.
+        let payload = result.expect_err("scope must re-raise the job panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("");
+        assert!(msg.contains("boom at shard 3"), "payload lost: {msg:?}");
+        assert_eq!(completed.load(Ordering::Relaxed), 8, "other jobs still ran");
+        // The pool survives a panicked job.
+        let ok = pool.scope(|_| true);
+        assert!(ok);
+    }
+
+    #[test]
+    fn worker_flag_is_set_inside_jobs() {
+        let pool = ThreadPool::new(1);
+        assert!(!on_pool_thread());
+        let seen = AtomicBool::new(false);
+        pool.scope(|s| {
+            let seen = &seen;
+            s.spawn(move || seen.store(on_pool_thread(), Ordering::Release));
+        });
+        assert!(seen.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn threads_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+    }
+}

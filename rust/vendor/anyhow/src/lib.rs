@@ -1,0 +1,101 @@
+//! A minimal, offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the slice of the API this workspace uses:
+//!
+//! - [`Error`] — an opaque, `Send + Sync` error value rendered from whatever
+//!   produced it (message string preserved; the source chain is flattened at
+//!   conversion time).
+//! - [`Result<T>`] — alias with `Error` as the default error type.
+//! - [`anyhow!`] — `format!`-style error constructor.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion powering `?`.
+
+use std::fmt;
+
+/// An opaque error: a rendered message (plus any flattened source chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything displayable (the `anyhow!` macro calls this).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Create from a std error, flattening its source chain into the message.
+    pub fn new<E: std::error::Error>(err: E) -> Error {
+        let mut msg = err.to_string();
+        let mut src = err.source();
+        while let Some(cause) = src {
+            msg.push_str(": ");
+            msg.push_str(&cause.to_string());
+            src = cause.source();
+        }
+        Error { msg }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `format!`-style [`Error`] constructor, mirroring `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {} in {}", 7, "layer");
+        assert_eq!(e.to_string(), "bad value 7 in layer");
+        let e2 = anyhow!("plain");
+        assert_eq!(format!("{e2:?}"), "plain");
+    }
+}

@@ -1,0 +1,286 @@
+//! API stub for the `xla` (PJRT) bindings used by `condcomp::runtime`.
+//!
+//! The offline build environment has neither crates.io nor a PJRT plugin, so
+//! this crate provides the exact API surface the runtime layer compiles
+//! against, split in two tiers:
+//!
+//! - **Literal marshalling is real.** [`Literal`] stores typed host buffers
+//!   with shapes, and `vec1` / `scalar` / `reshape` / `to_vec` /
+//!   `array_shape` / `to_tuple` / `get_first_element` behave like the real
+//!   crate — the engine's marshalling helpers and their unit tests run
+//!   unchanged.
+//! - **Device execution is unavailable.** [`PjRtClient::cpu`] returns
+//!   [`XlaError::Unavailable`], so `Engine::load` fails with a clear message
+//!   and everything downstream (the PJRT backend, `train-pjrt`, the artifact
+//!   round-trip tests) reports "PJRT unavailable" instead of linking against
+//!   a library that is not there. Swapping this path dependency for the real
+//!   bindings re-enables the whole three-layer pipeline without touching
+//!   `condcomp` source.
+
+use std::path::Path;
+
+/// Error type mirroring the real crate's; only the variants the workspace
+/// can actually hit are modelled.
+#[derive(Debug, Clone, PartialEq)]
+pub enum XlaError {
+    /// The stub cannot perform device work.
+    Unavailable(&'static str),
+    /// Shape/type mismatch in literal marshalling.
+    Shape(String),
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            XlaError::Unavailable(what) => {
+                write!(f, "PJRT unavailable in this build (stub xla crate): {what}")
+            }
+            XlaError::Shape(msg) => write!(f, "literal shape error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+// ---------------------------------------------------------------------------
+// Literals (functional)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn into_data(v: Vec<Self>) -> Data;
+    fn as_slice(data: &Data) -> Option<&[Self]>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn into_data(v: Vec<Self>) -> Data {
+                Data::$variant(v)
+            }
+            fn as_slice(data: &Data) -> Option<&[Self]> {
+                match data {
+                    Data::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+
+/// A host-side typed array with a shape (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::into_data(v.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::into_data(vec![v]) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() || dims.iter().any(|&d| d < 0) {
+            return Err(XlaError::Shape(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the host buffer as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::as_slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| XlaError::Shape("literal element type mismatch".into()))
+    }
+
+    /// Shape of a (non-tuple) array literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            Data::Tuple(_) => Err(XlaError::Shape("tuple literal has no array shape".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(v) => Ok(v),
+            _ => Err(XlaError::Shape("literal is not a tuple".into())),
+        }
+    }
+
+    /// Build a tuple literal (round-trip convenience for tests).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elements.len() as i64], data: Data::Tuple(elements) }
+    }
+
+    /// First element of the buffer (scalars and debugging).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::as_slice(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| XlaError::Shape("empty or mistyped literal".into()))
+    }
+}
+
+/// Array shape (dims only; dtype is implied by the literal).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client / compilation / execution (unavailable in the stub)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module; the stub never parses, it reports unavailability.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(XlaError::Unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::Unavailable(
+            "no PJRT plugin in this build; link the real xla crate to enable",
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::Unavailable("compilation"))
+    }
+}
+
+/// A compiled executable handle (unreachable through the stub client).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::Unavailable("execution"))
+    }
+}
+
+/// A device buffer handle (unreachable through the stub client).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::Unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn typed_access_is_checked() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 1);
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::scalar(1.5f32), Literal::vec1(&[2u32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].get_first_element::<f32>().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(matches!(err, XlaError::Unavailable(_)));
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+}
