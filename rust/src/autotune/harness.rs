@@ -1,0 +1,392 @@
+//! The calibration microbenchmark harness.
+//!
+//! For each hidden-layer shape `d × h` of a model, the harness times the
+//! dense-parallel GEMM against the masked-parallel kernel across a density
+//! grid and up to two thread counts (the serving pool's size, plus a
+//! single-threaded diagnostic arm when `fit_serial` is on), fits the
+//! masked kernel's per-FLOP cost by least squares through the origin
+//! (masked time is linear in α: `t(α) ≈ c · α · 2ndh`), and derives the
+//! per-layer flip threshold `α* = 1/cost_ratio`. The whole run is bounded
+//! by a wall-clock budget (`autotune.budget_ms`), split evenly across
+//! measurement points; each point takes the best of as many repetitions as
+//! fit its slice (at least one).
+//!
+//! Timing lives behind the [`CostModel`] trait so tests (and the
+//! acceptance criterion's "two shapes → two thresholds" assertion) can
+//! inject a synthetic cost surface and exercise the fitting math
+//! deterministically; [`MeasuredCost`] is the real-kernel implementation.
+
+use super::profile::{
+    hardware_descriptor, model_fingerprint, LayerThreshold, MachineProfile,
+    PROFILE_SCHEMA_VERSION,
+};
+use crate::condcomp::{DispatchPolicy, MaskedLayer};
+use crate::linalg::{matmul_into_par, Mat};
+use crate::parallel::ThreadPool;
+use crate::util::{Pcg32, Timer};
+
+/// Where a layer's timing numbers come from: the real kernels
+/// ([`MeasuredCost`]) or a synthetic model injected by tests.
+pub trait CostModel {
+    /// Seconds for one dense-parallel forward of an `n × d → h` layer.
+    fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64;
+    /// Seconds for one masked-parallel forward at mask density `alpha`.
+    fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64;
+}
+
+/// Runs the real kernels on a pool, best-of-reps within a per-point budget.
+pub struct MeasuredCost<'a> {
+    pool: &'a ThreadPool,
+    /// Wall-clock allowance per measurement point (seconds).
+    point_budget_s: f64,
+    /// Repetitions guaranteed even when the budget is tiny.
+    min_reps: usize,
+    seed: u64,
+}
+
+/// Hard per-point repetition cap: the budget is the intended bound; this is
+/// the backstop against sub-microsecond kernels spinning thousands of reps.
+const MAX_REPS: usize = 64;
+
+impl<'a> MeasuredCost<'a> {
+    pub fn new(pool: &'a ThreadPool, point_budget_s: f64, min_reps: usize, seed: u64) -> Self {
+        MeasuredCost { pool, point_budget_s, min_reps: min_reps.max(1), seed }
+    }
+
+    /// Best-of timing: repeat `f` until the point budget is spent (but at
+    /// least `min_reps` and at most [`MAX_REPS`] times), return the minimum.
+    fn best_of(&self, mut f: impl FnMut()) -> f64 {
+        let window = Timer::start();
+        let mut best = f64::INFINITY;
+        let mut reps = 0usize;
+        loop {
+            let t = Timer::start();
+            f();
+            best = best.min(t.elapsed_s());
+            reps += 1;
+            if reps >= MAX_REPS
+                || (reps >= self.min_reps && window.elapsed_s() >= self.point_budget_s)
+            {
+                return best;
+            }
+        }
+    }
+
+    fn rng_for(&self, n: usize, d: usize, h: usize) -> Pcg32 {
+        // Deterministic per shape, so dense and masked arms of one layer
+        // time the same operand values.
+        Pcg32::new(self.seed, (n as u64) << 42 ^ (d as u64) << 21 ^ h as u64)
+    }
+}
+
+impl CostModel for MeasuredCost<'_> {
+    fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64 {
+        let mut rng = self.rng_for(n, d, h);
+        let a = Mat::randn(n, d, 0.5, &mut rng);
+        let w = Mat::randn(d, h, 0.05, &mut rng);
+        let mut out = Mat::zeros(n, h);
+        let pool = self.pool;
+        self.best_of(|| matmul_into_par(&a, &w, &mut out, pool))
+    }
+
+    fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+        let mut rng = self.rng_for(n, d, h);
+        let a = Mat::randn(n, d, 0.5, &mut rng);
+        let w = Mat::randn(d, h, 0.05, &mut rng);
+        let bias = vec![0.0f32; h];
+        let layer = MaskedLayer::new(&w, &bias);
+        let mask = Mat::from_fn(n, h, |_, _| {
+            if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 }
+        });
+        let mut out = Mat::zeros(n, h);
+        let pool = self.pool;
+        self.best_of(|| {
+            let _ = layer.forward_masked_par(&a, &mask, &mut out, pool);
+        })
+    }
+}
+
+/// The harness configuration + entry points.
+#[derive(Clone, Debug)]
+pub struct Autotuner {
+    /// Total wall-clock budget for one whole-model calibration (ms).
+    pub budget_ms: u64,
+    /// Densities measured per layer (the fit's sample points).
+    pub alpha_grid: Vec<f64>,
+    /// Batch rows used by the microbenchmarks (a typical serving batch).
+    pub batch: usize,
+    /// Repetitions guaranteed per point even when the budget is tiny.
+    pub min_reps: usize,
+    /// Also fit the single-threaded arm (`cost_ratio_serial`, a persisted
+    /// diagnostic). Dispatch only consumes the pooled ratio, so callers that
+    /// discard the profile — serve's online calibration — turn this off and
+    /// spend the whole budget on the numbers that matter.
+    pub fit_serial: bool,
+}
+
+impl Default for Autotuner {
+    fn default() -> Autotuner {
+        Autotuner {
+            budget_ms: 2000,
+            alpha_grid: vec![0.05, 0.25, 0.5, 1.0],
+            batch: 64,
+            min_reps: 2,
+            fit_serial: true,
+        }
+    }
+}
+
+impl Autotuner {
+    /// Default grid/batch under an explicit budget.
+    pub fn with_budget_ms(budget_ms: u64) -> Autotuner {
+        Autotuner { budget_ms, ..Autotuner::default() }
+    }
+
+    /// Fit one shape's masked-vs-dense per-FLOP cost ratio from a cost
+    /// model. Pure arithmetic over the model's numbers: the dense per-FLOP
+    /// cost comes from one α-independent timing; the masked per-FLOP cost is
+    /// the least-squares slope of `t(α) ≈ c · α · F` over the grid
+    /// (`c = Σ tᵢαᵢ / (F · Σ αᵢ²)`).
+    pub fn fit_cost_ratio(
+        &self,
+        model: &mut dyn CostModel,
+        n: usize,
+        d: usize,
+        h: usize,
+    ) -> f64 {
+        let flops = 2.0 * (n as f64) * (d as f64) * (h as f64);
+        let t_dense = model.dense_seconds(n, d, h);
+        if !(t_dense > 0.0) || !t_dense.is_finite() || flops <= 0.0 {
+            return DispatchPolicy::DEFAULT_COST_RATIO;
+        }
+        let dense_per_flop = t_dense / flops;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for &alpha in &self.alpha_grid {
+            let t = model.masked_seconds(n, d, h, alpha);
+            if t.is_finite() && alpha > 0.0 {
+                num += t * alpha;
+                den += alpha * alpha;
+            }
+        }
+        if !(num > 0.0) || !(den > 0.0) {
+            return DispatchPolicy::DEFAULT_COST_RATIO;
+        }
+        let masked_per_flop = num / (den * flops);
+        (masked_per_flop / dense_per_flop).max(1e-6)
+    }
+
+    /// Fit one hidden layer from injected cost models (`par` at the serving
+    /// thread count, `serial` single-threaded; `None` skips the serial arm
+    /// and records the pooled ratio in its place).
+    pub fn fit_layer(
+        &self,
+        layer: usize,
+        d: usize,
+        h: usize,
+        par: &mut dyn CostModel,
+        serial: Option<&mut dyn CostModel>,
+    ) -> LayerThreshold {
+        let n = self.batch.max(1);
+        let cost_ratio = self.fit_cost_ratio(par, n, d, h);
+        let cost_ratio_serial = match serial {
+            Some(model) => self.fit_cost_ratio(model, n, d, h),
+            None => cost_ratio,
+        };
+        LayerThreshold {
+            layer,
+            d,
+            h,
+            cost_ratio,
+            cost_ratio_serial,
+            alpha_star: DispatchPolicy::with_cost_ratio(cost_ratio).density_threshold(),
+        }
+    }
+
+    /// Fit every shape with injected cost models (tests, synthetic sweeps).
+    pub fn fit_shapes(
+        &self,
+        shapes: &[(usize, usize)],
+        par: &mut dyn CostModel,
+        mut serial: Option<&mut dyn CostModel>,
+    ) -> Vec<LayerThreshold> {
+        let mut fitted = Vec::with_capacity(shapes.len());
+        for (l, &(d, h)) in shapes.iter().enumerate() {
+            fitted.push(self.fit_layer(l, d, h, &mut *par, serial.as_deref_mut()));
+        }
+        fitted
+    }
+
+    /// The hidden-layer shapes of a model given its layer widths: weight
+    /// layers `0..len-2` run the conditional path (the output layer never
+    /// does).
+    pub fn hidden_shapes(layer_sizes: &[usize]) -> Vec<(usize, usize)> {
+        (0..layer_sizes.len().saturating_sub(2))
+            .map(|l| (layer_sizes[l], layer_sizes[l + 1]))
+            .collect()
+    }
+
+    /// Measure and fit every hidden layer of a model on this machine,
+    /// producing a persistable [`MachineProfile`]. The budget is split
+    /// evenly over all measurement points (per layer: one dense + one
+    /// masked-per-α timing, per thread arm — the serial arm only when
+    /// `fit_serial` is on).
+    pub fn calibrate_model(&self, layer_sizes: &[usize], pool: &ThreadPool) -> MachineProfile {
+        let shapes = Autotuner::hidden_shapes(layer_sizes);
+        let arms = if self.fit_serial { 2 } else { 1 };
+        let points_per_layer = arms * (1 + self.alpha_grid.len());
+        let total_points = (shapes.len() * points_per_layer).max(1);
+        let point_budget_s = (self.budget_ms as f64 / 1e3) / total_points as f64;
+
+        let mut par = MeasuredCost::new(pool, point_budget_s, self.min_reps, 0xA7_70_7E);
+        let serial_pool = if self.fit_serial { Some(ThreadPool::new(1)) } else { None };
+        let mut serial = serial_pool
+            .as_ref()
+            .map(|p| MeasuredCost::new(p, point_budget_s, self.min_reps, 0xA7_70_7E));
+        let layers = self.fit_shapes(
+            &shapes,
+            &mut par,
+            serial.as_mut().map(|m| m as &mut dyn CostModel),
+        );
+
+        MachineProfile {
+            version: PROFILE_SCHEMA_VERSION,
+            fingerprint: model_fingerprint(layer_sizes),
+            hardware: hardware_descriptor(),
+            threads: pool.threads(),
+            budget_ms: self.budget_ms,
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::condcomp::Kernel;
+
+    /// A synthetic cost surface where the masked kernel's per-FLOP penalty
+    /// depends on the layer shape: wide-input layers pay 8×, square ones 2×.
+    /// Exactly linear in α, so the fit must recover the ratios precisely.
+    struct SyntheticCost;
+
+    fn ratio_for(d: usize, h: usize) -> f64 {
+        if d > h { 8.0 } else { 2.0 }
+    }
+
+    impl CostModel for SyntheticCost {
+        fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64 {
+            2.0 * (n * d * h) as f64 * 1e-10
+        }
+
+        fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+            alpha * ratio_for(d, h) * 2.0 * (n * d * h) as f64 * 1e-10
+        }
+    }
+
+    #[test]
+    fn fit_recovers_a_linear_cost_surface_exactly() {
+        let tuner = Autotuner::default();
+        let r = tuner.fit_cost_ratio(&mut SyntheticCost, 64, 512, 512);
+        assert!((r - 2.0).abs() < 1e-9, "square-shape ratio {r}");
+        let r = tuner.fit_cost_ratio(&mut SyntheticCost, 64, 1024, 256);
+        assert!((r - 8.0).abs() < 1e-9, "wide-input ratio {r}");
+    }
+
+    /// The acceptance criterion: with an injected synthetic cost model, two
+    /// layers with different shapes get different α* values, and dispatch
+    /// decisions at the same density differ between them.
+    #[test]
+    fn two_shapes_yield_two_thresholds_and_different_decisions() {
+        let tuner = Autotuner::default();
+        let shapes = [(256usize, 256usize), (1024, 128)]; // square vs wide
+        let fitted = tuner.fit_shapes(&shapes, &mut SyntheticCost, Some(&mut SyntheticCost));
+        assert_eq!(fitted.len(), 2);
+        assert!((fitted[0].alpha_star - 0.5).abs() < 1e-9, "{:?}", fitted[0]);
+        assert!((fitted[1].alpha_star - 0.125).abs() < 1e-9, "{:?}", fitted[1]);
+
+        let profile = MachineProfile {
+            version: PROFILE_SCHEMA_VERSION,
+            fingerprint: model_fingerprint(&[256, 256, 1024, 128]),
+            hardware: hardware_descriptor(),
+            threads: 1,
+            budget_ms: 0,
+            layers: fitted,
+        };
+        let table = profile.policy_table(2, "synthetic");
+        // α between the two thresholds: layer 0 stays masked, layer 1 goes
+        // dense — per-layer dispatch in action.
+        let alpha = 0.3;
+        assert_eq!(
+            table.policy_for(0).decide(64, 256, 256, alpha),
+            Kernel::MaskedParallel
+        );
+        assert_eq!(
+            table.policy_for(1).decide(64, 1024, 128, alpha),
+            Kernel::DenseParallel
+        );
+        assert_ne!(table.thresholds()[0], table.thresholds()[1]);
+    }
+
+    #[test]
+    fn skipping_the_serial_arm_records_the_pooled_ratio() {
+        let tuner = Autotuner::default();
+        let lt = tuner.fit_layer(0, 256, 256, &mut SyntheticCost, None);
+        assert_eq!(lt.cost_ratio_serial, lt.cost_ratio);
+        assert!((lt.cost_ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_models_fall_back_to_the_default_ratio() {
+        struct ZeroCost;
+        impl CostModel for ZeroCost {
+            fn dense_seconds(&mut self, _: usize, _: usize, _: usize) -> f64 {
+                0.0
+            }
+            fn masked_seconds(&mut self, _: usize, _: usize, _: usize, _: f64) -> f64 {
+                0.0
+            }
+        }
+        let tuner = Autotuner::default();
+        let r = tuner.fit_cost_ratio(&mut ZeroCost, 8, 8, 8);
+        assert_eq!(r, DispatchPolicy::DEFAULT_COST_RATIO);
+    }
+
+    #[test]
+    fn hidden_shapes_exclude_the_output_layer() {
+        assert_eq!(
+            Autotuner::hidden_shapes(&[784, 256, 128, 10]),
+            vec![(784, 256), (256, 128)]
+        );
+        assert!(Autotuner::hidden_shapes(&[784, 10]).is_empty());
+        assert!(Autotuner::hidden_shapes(&[]).is_empty());
+    }
+
+    /// Real-kernel smoke: tiny shapes, tiny budget; checks structure and
+    /// sanity, not performance.
+    #[test]
+    fn measured_calibration_produces_a_complete_profile() {
+        let tuner = Autotuner {
+            budget_ms: 40,
+            alpha_grid: vec![0.25, 1.0],
+            batch: 8,
+            min_reps: 1,
+            fit_serial: true,
+        };
+        let pool = ThreadPool::new(2);
+        let layer_sizes = [24usize, 20, 16, 6];
+        let profile = tuner.calibrate_model(&layer_sizes, &pool);
+        assert_eq!(profile.fingerprint, model_fingerprint(&layer_sizes));
+        assert_eq!(profile.threads, 2);
+        assert_eq!(profile.layers.len(), 2);
+        for (l, lt) in profile.layers.iter().enumerate() {
+            assert_eq!(lt.layer, l);
+            assert_eq!((lt.d, lt.h), (layer_sizes[l], layer_sizes[l + 1]));
+            assert!(lt.cost_ratio.is_finite() && lt.cost_ratio > 0.0);
+            assert!(lt.cost_ratio_serial.is_finite() && lt.cost_ratio_serial > 0.0);
+            assert!((0.0..=1.0).contains(&lt.alpha_star));
+        }
+        // And it round-trips through the persistence layer.
+        let back = MachineProfile::parse(&profile.to_json().to_string()).unwrap();
+        assert_eq!(back, profile);
+    }
+}

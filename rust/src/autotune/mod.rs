@@ -1,0 +1,35 @@
+//! Autotune: per-layer dispatch calibration with persistent machine
+//! profiles.
+//!
+//! The paper's speedup claim holds only below a masked-vs-dense flip
+//! density `α*`, and that flip point is a property of the *machine* and the
+//! *layer shape* — the original single global cost ratio ignored that
+//! different `d × h` shapes have different cache behaviour. This subsystem
+//! measures the flip point per layer and persists it:
+//!
+//! - [`harness`] — the microbenchmark harness ([`Autotuner`]): times
+//!   dense-parallel vs masked-parallel per layer shape across a density
+//!   grid and thread counts under a wall-clock budget, and fits a per-layer
+//!   cost ratio (timing is abstracted behind [`CostModel`] so tests inject
+//!   synthetic cost surfaces).
+//! - [`profile`] — [`MachineProfile`]: model fingerprint + hardware
+//!   descriptor + per-layer [`LayerThreshold`]s, serialized via `io::json`.
+//!   `condcomp calibrate` writes it; `condcomp serve` loads it at startup
+//!   (falling back to online calibration, then to the global default) and
+//!   installs it as the backend's
+//!   [`crate::condcomp::PolicyTable`].
+//!
+//! Config keys: `autotune.profile_path` (where the profile lives) and
+//! `autotune.budget_ms` (calibration wall-clock budget). The profile format
+//! tolerates unknown fields, so future backends (the multi-backend router)
+//! can contribute additional cost columns to the same file without breaking
+//! older readers.
+
+pub mod harness;
+pub mod profile;
+
+pub use harness::{Autotuner, CostModel, MeasuredCost};
+pub use profile::{
+    hardware_descriptor, model_fingerprint, LayerThreshold, MachineProfile,
+    PROFILE_SCHEMA_VERSION,
+};

@@ -1,0 +1,364 @@
+//! Persistent machine profiles: the per-layer dispatch thresholds fitted by
+//! the autotune harness, serialized as JSON so a machine measures once and
+//! every later `condcomp serve` start just loads the file.
+//!
+//! A profile is bound to a *model shape* (the fingerprint — calibration
+//! depends only on the per-layer `d × h` shapes, not the weight values) and
+//! annotated with a *hardware descriptor* (arch/OS/thread count) so a file
+//! copied between machines is at least visibly foreign. Loading rejects a
+//! fingerprint mismatch outright; unknown JSON fields are tolerated, so
+//! newer writers (e.g. a future multi-backend router adding another cost
+//! column) stay readable by older binaries.
+
+use crate::condcomp::{DispatchPolicy, PolicyTable};
+use crate::io::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Schema version written into every profile; readers accept this version
+/// only (the format is young — no compatibility shims yet).
+pub const PROFILE_SCHEMA_VERSION: u64 = 1;
+
+/// One hidden layer's fitted calibration result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerThreshold {
+    /// Hidden-layer index (weight-matrix index; the output layer is never
+    /// dispatched conditionally).
+    pub layer: usize,
+    /// Layer input width `d`.
+    pub d: usize,
+    /// Layer output width `h`.
+    pub h: usize,
+    /// Fitted masked-vs-dense per-FLOP cost ratio on the serving pool.
+    pub cost_ratio: f64,
+    /// The same ratio fitted single-threaded (recorded for diagnosis — the
+    /// dispatch threshold uses `cost_ratio`).
+    pub cost_ratio_serial: f64,
+    /// The flip point `α* = clamp(1/cost_ratio, 0, 1)`: masked wins below.
+    pub alpha_star: f64,
+}
+
+impl LayerThreshold {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layer", Json::Num(self.layer as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("h", Json::Num(self.h as f64)),
+            ("cost_ratio", Json::Num(self.cost_ratio)),
+            ("cost_ratio_serial", Json::Num(self.cost_ratio_serial)),
+            ("alpha_star", Json::Num(self.alpha_star)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<LayerThreshold, String> {
+        let need_usize = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("layer entry missing integer '{key}'"))
+        };
+        let need_f64 = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("layer entry missing number '{key}'"))
+        };
+        let cost_ratio = need_f64("cost_ratio")?;
+        if !cost_ratio.is_finite() || cost_ratio <= 0.0 {
+            return Err(format!("layer entry has invalid cost_ratio {cost_ratio}"));
+        }
+        // Writers that skip the serial arm record only the pooled ratio;
+        // default to it (keeps summaries and equality NaN-free).
+        let cost_ratio_serial = match v.get("cost_ratio_serial").and_then(Json::as_f64) {
+            Some(r) if r.is_finite() && r > 0.0 => r,
+            Some(r) => return Err(format!("layer entry has invalid cost_ratio_serial {r}")),
+            None => cost_ratio,
+        };
+        Ok(LayerThreshold {
+            layer: need_usize("layer")?,
+            d: need_usize("d")?,
+            h: need_usize("h")?,
+            cost_ratio,
+            cost_ratio_serial,
+            // α* is derivable state: recompute from the ratio so a
+            // hand-edited file cannot make the displayed threshold disagree
+            // with the one dispatch actually uses.
+            alpha_star: DispatchPolicy::with_cost_ratio(cost_ratio).density_threshold(),
+        })
+    }
+
+    /// The dispatch policy this fit implies.
+    pub fn policy(&self) -> DispatchPolicy {
+        DispatchPolicy::with_cost_ratio(self.cost_ratio)
+    }
+}
+
+/// A persisted machine profile: which model (fingerprint), which machine
+/// (hardware descriptor + pool size), and the per-layer thresholds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineProfile {
+    pub version: u64,
+    /// Model-shape fingerprint, e.g. `mlp:784-256-128-64-10`.
+    pub fingerprint: String,
+    /// Hardware descriptor, e.g. `x86_64-linux`.
+    pub hardware: String,
+    /// Pool threads the pooled ratios were measured on.
+    pub threads: usize,
+    /// Wall-clock budget the calibration ran under (ms).
+    pub budget_ms: u64,
+    pub layers: Vec<LayerThreshold>,
+}
+
+/// Fingerprint a model by its layer widths — the only thing calibration
+/// depends on.
+pub fn model_fingerprint(layer_sizes: &[usize]) -> String {
+    let widths: Vec<String> = layer_sizes.iter().map(|w| w.to_string()).collect();
+    format!("mlp:{}", widths.join("-"))
+}
+
+/// Describe the machine the measurement ran on.
+pub fn hardware_descriptor() -> String {
+    format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS)
+}
+
+impl MachineProfile {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("hardware", Json::Str(self.hardware.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("budget_ms", Json::Num(self.budget_ms as f64)),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(LayerThreshold::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Parse from JSON text. Unknown fields are ignored; missing required
+    /// fields and a wrong schema version are errors.
+    pub fn parse(text: &str) -> Result<MachineProfile, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("profile missing 'version'")? as u64;
+        if version != PROFILE_SCHEMA_VERSION {
+            return Err(format!(
+                "profile schema version {version} != supported {PROFILE_SCHEMA_VERSION}"
+            ));
+        }
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or("profile missing 'fingerprint'")?
+            .to_string();
+        let hardware = v
+            .get("hardware")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
+        let budget_ms = v.get("budget_ms").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let layers = v
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or("profile missing 'layers'")?
+            .iter()
+            .map(LayerThreshold::from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(MachineProfile { version, fingerprint, hardware, threads, budget_ms, layers })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<MachineProfile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        MachineProfile::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))
+    }
+
+    /// Load and verify the profile describes this model's shapes; a
+    /// fingerprint mismatch is rejected (the thresholds would be for the
+    /// wrong `d × h` grid).
+    pub fn load_for_model(path: &Path, layer_sizes: &[usize]) -> Result<MachineProfile> {
+        let profile = MachineProfile::load(path)?;
+        profile.ensure_matches_model(layer_sizes)?;
+        Ok(profile)
+    }
+
+    /// The fingerprint check as an error (shared by [`Self::load_for_model`]
+    /// and the backend's `apply_profile`, so the rule and its message live
+    /// in one place).
+    pub fn ensure_matches_model(&self, layer_sizes: &[usize]) -> Result<()> {
+        if !self.matches_model(layer_sizes) {
+            return Err(anyhow::anyhow!(
+                "machine profile fingerprint '{}' does not match model '{}'",
+                self.fingerprint,
+                model_fingerprint(layer_sizes)
+            ));
+        }
+        Ok(())
+    }
+
+    /// Write to a file (pretty enough: one JSON document, trailing newline).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Whether this profile describes a model with these layer widths.
+    pub fn matches_model(&self, layer_sizes: &[usize]) -> bool {
+        self.fingerprint == model_fingerprint(layer_sizes)
+    }
+
+    /// Build the runtime [`PolicyTable`] for a model with `num_layers`
+    /// hidden layers; `source` is remembered for the fallback warning.
+    pub fn policy_table(&self, num_layers: usize, source: &str) -> PolicyTable {
+        let mut table = PolicyTable::uncalibrated(num_layers).with_profile_path(source);
+        for lt in &self.layers {
+            table.set_layer(lt.layer, lt.policy());
+        }
+        table
+    }
+
+    /// Human-readable per-layer report (the `calibrate` CLI prints this).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut lines = vec![
+            format!(
+                "machine profile: {} on {} ({} threads, budget {} ms)",
+                self.fingerprint, self.hardware, self.threads, self.budget_ms
+            ),
+            format!(
+                "{:<7} {:>11} {:>12} {:>14} {:>10}",
+                "layer", "shape", "cost-ratio", "ratio-serial", "α*"
+            ),
+        ];
+        for lt in &self.layers {
+            lines.push(format!(
+                "{:<7} {:>11} {:>12.3} {:>14.3} {:>10.4}",
+                lt.layer,
+                format!("{}×{}", lt.d, lt.h),
+                lt.cost_ratio,
+                lt.cost_ratio_serial,
+                lt.alpha_star
+            ));
+        }
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::condcomp::Kernel;
+
+    fn sample() -> MachineProfile {
+        MachineProfile {
+            version: PROFILE_SCHEMA_VERSION,
+            fingerprint: model_fingerprint(&[784, 256, 128, 10]),
+            hardware: hardware_descriptor(),
+            threads: 4,
+            budget_ms: 500,
+            layers: vec![
+                LayerThreshold {
+                    layer: 0,
+                    d: 784,
+                    h: 256,
+                    cost_ratio: 2.5,
+                    cost_ratio_serial: 3.25,
+                    alpha_star: 0.4,
+                },
+                LayerThreshold {
+                    layer: 1,
+                    d: 256,
+                    h: 128,
+                    cost_ratio: 5.0,
+                    cost_ratio_serial: 4.0,
+                    alpha_star: 0.2,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let p = sample();
+        let text = p.to_json().to_string();
+        let back = MachineProfile::parse(&text).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn unknown_fields_are_tolerated() {
+        // A future writer adds fields at both the profile and layer level;
+        // this reader must still load the parts it understands.
+        let text = r#"{
+            "version": 1,
+            "fingerprint": "mlp:8-4-2",
+            "hardware": "x86_64-linux",
+            "threads": 2,
+            "budget_ms": 100,
+            "future_backend_costs": {"pjrt": [1.0, 2.0]},
+            "layers": [
+                {"layer": 0, "d": 8, "h": 4,
+                 "cost_ratio": 3.0, "cost_ratio_serial": 3.5,
+                 "alpha_star": 0.3333, "pjrt_cost_ratio": 1.5}
+            ]
+        }"#;
+        let p = MachineProfile::parse(text).unwrap();
+        assert_eq!(p.fingerprint, "mlp:8-4-2");
+        assert_eq!(p.layers.len(), 1);
+        assert_eq!(p.layers[0].cost_ratio, 3.0);
+    }
+
+    #[test]
+    fn missing_required_fields_and_bad_version_are_rejected() {
+        assert!(MachineProfile::parse(r#"{"fingerprint": "mlp:1", "layers": []}"#).is_err());
+        assert!(MachineProfile::parse(r#"{"version": 1, "layers": []}"#).is_err());
+        assert!(MachineProfile::parse(r#"{"version": 99, "fingerprint": "m", "layers": []}"#)
+            .is_err());
+        assert!(MachineProfile::parse(
+            r#"{"version": 1, "fingerprint": "m", "layers": [{"layer": 0}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_fingerprint_check() {
+        let p = sample();
+        let path = std::env::temp_dir().join(format!(
+            "condcomp-profile-test-{}.json",
+            std::process::id()
+        ));
+        p.save(&path).unwrap();
+        // Matching model loads…
+        let loaded = MachineProfile::load_for_model(&path, &[784, 256, 128, 10]).unwrap();
+        assert_eq!(loaded, p);
+        // …a different architecture is rejected outright.
+        let err = MachineProfile::load_for_model(&path, &[784, 300, 128, 10]).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn policy_table_carries_per_layer_thresholds() {
+        let p = sample();
+        let table = p.policy_table(2, "profile.json");
+        assert_eq!(table.calibrated_layers(), 2);
+        let t = table.thresholds();
+        assert!((t[0] - 0.4).abs() < 1e-12, "α*₀ {t:?}");
+        assert!((t[1] - 0.2).abs() < 1e-12, "α*₁ {t:?}");
+        // At α = 0.3 the two layers disagree — the whole point of the table.
+        assert_eq!(table.policy_for(0).decide(64, 784, 256, 0.3), Kernel::MaskedParallel);
+        assert_eq!(table.policy_for(1).decide(64, 256, 128, 0.3), Kernel::DenseParallel);
+    }
+
+    #[test]
+    fn fingerprints_are_shape_sensitive() {
+        assert_eq!(model_fingerprint(&[784, 256, 10]), "mlp:784-256-10");
+        assert_ne!(model_fingerprint(&[784, 256, 10]), model_fingerprint(&[784, 255, 10]));
+    }
+}

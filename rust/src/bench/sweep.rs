@@ -13,6 +13,7 @@
 //! (`BENCH_parallel.json`); ROADMAP.md records the last measured threshold.
 
 use super::{bench_with_units, BenchConfig, BenchResult};
+use crate::autotune::{Autotuner, LayerThreshold};
 use crate::condcomp::{DispatchPolicy, MaskedLayer};
 use crate::io::json::Json;
 use crate::linalg::{matmul_into, matmul_into_par, Mat};
@@ -73,6 +74,10 @@ pub struct ParallelSweep {
     /// α where the dispatch policy flips from masked to dense
     /// (`1 / measured_cost_ratio`).
     pub density_threshold: f64,
+    /// Per-layer fitted thresholds for the requested model's hidden-layer
+    /// shapes (the autotune harness's quick fit — `condcomp calibrate`
+    /// runs the same fit under a configurable budget and persists it).
+    pub per_layer: Vec<LayerThreshold>,
 }
 
 /// Densities the sweep measures (the issue's α grid).
@@ -80,8 +85,15 @@ pub const ALPHA_GRID: [f64; 4] = [0.05, 0.25, 0.5, 1.0];
 
 /// Run the full sweep. `dim` is the square GEMM dimension (512 for the
 /// acceptance target), `batch` the masked layer's batch rows, `threads_max`
-/// the parallel arm's pool size.
-pub fn run_parallel_sweep(cfg: &BenchConfig, dim: usize, batch: usize, threads_max: usize) -> ParallelSweep {
+/// the parallel arm's pool size, `layer_sizes` the model layer widths whose
+/// hidden shapes get individually fitted thresholds.
+pub fn run_parallel_sweep(
+    cfg: &BenchConfig,
+    dim: usize,
+    batch: usize,
+    threads_max: usize,
+    layer_sizes: &[usize],
+) -> ParallelSweep {
     let threads_max = threads_max.max(1);
     let mut rng = Pcg32::seeded(0xBE9C);
     let mut rows = Vec::new();
@@ -175,6 +187,23 @@ pub fn run_parallel_sweep(cfg: &BenchConfig, dim: usize, batch: usize, threads_m
     let measured_cost_ratio = (masked_full_par / dense_ref.max(1e-12)).max(1e-6);
     let policy = DispatchPolicy::with_cost_ratio(measured_cost_ratio);
 
+    // Per-layer thresholds: the global ratio above is for *one* shape; each
+    // hidden layer's d×h gets its own fit through the autotune harness
+    // (quick budget — `condcomp calibrate` is the configurable-budget run).
+    let tuner = Autotuner {
+        budget_ms: ((cfg.measure_s * 1000.0) as u64).clamp(40, 1000),
+        alpha_grid: ALPHA_GRID.to_vec(),
+        batch,
+        min_reps: 1,
+        fit_serial: true,
+    };
+    let per_layer = if layer_sizes.len() >= 3 {
+        let pool = ThreadPool::new(threads_max);
+        tuner.calibrate_model(layer_sizes, &pool).layers
+    } else {
+        Vec::new()
+    };
+
     ParallelSweep {
         dim,
         batch,
@@ -183,6 +212,7 @@ pub fn run_parallel_sweep(cfg: &BenchConfig, dim: usize, batch: usize, threads_m
         dense_parallel_speedup,
         measured_cost_ratio,
         density_threshold: policy.density_threshold(),
+        per_layer,
     }
 }
 
@@ -221,6 +251,12 @@ impl ParallelSweep {
             "measured cost ratio {:.2} → dispatch flips masked→dense at α = {:.3}",
             self.measured_cost_ratio, self.density_threshold
         ));
+        for lt in &self.per_layer {
+            lines.push(format!(
+                "layer {} ({}×{}): cost ratio {:.2} → α* = {:.3}",
+                lt.layer, lt.d, lt.h, lt.cost_ratio, lt.alpha_star
+            ));
+        }
         lines
     }
 
@@ -241,6 +277,10 @@ impl ParallelSweep {
                 Json::Arr(ALPHA_GRID.iter().map(|&a| Json::Num(a)).collect()),
             ),
             (
+                "per_layer_thresholds",
+                Json::Arr(self.per_layer.iter().map(LayerThreshold::to_json).collect()),
+            ),
+            (
                 "rows",
                 Json::Arr(self.rows.iter().map(|r| r.to_json()).collect()),
             ),
@@ -257,16 +297,29 @@ mod tests {
     #[test]
     fn sweep_produces_complete_machine_readable_output() {
         let cfg = BenchConfig { warmup_s: 0.0, measure_s: 0.0, min_iters: 1, max_iters: 1 };
-        let sweep = run_parallel_sweep(&cfg, 32, 8, 2);
+        let layer_sizes = [24usize, 20, 16, 6];
+        let sweep = run_parallel_sweep(&cfg, 32, 8, 2, &layer_sizes);
         // 2 dense_gemm + 2×(dense_gemm_batch + dense_forward + 4 masked) rows.
         assert_eq!(sweep.rows.len(), 2 + 2 * (2 + ALPHA_GRID.len()));
         assert!(sweep.measured_cost_ratio > 0.0 && sweep.measured_cost_ratio.is_finite());
         assert!((0.0..=1.0).contains(&sweep.density_threshold));
         assert!(!sweep.report_lines().is_empty());
+        // Per-layer fits: one per hidden layer, each with a sane α*.
+        assert_eq!(sweep.per_layer.len(), 2);
+        for (l, lt) in sweep.per_layer.iter().enumerate() {
+            assert_eq!((lt.layer, lt.d, lt.h), (l, layer_sizes[l], layer_sizes[l + 1]));
+            assert!((0.0..=1.0).contains(&lt.alpha_star));
+        }
 
         let json = sweep.to_json();
         let parsed = Json::parse(&json.to_string()).expect("self-parse");
         assert!(parsed.get("density_threshold").and_then(|v| v.as_f64()).is_some());
+        let per_layer = parsed
+            .get("per_layer_thresholds")
+            .and_then(|v| v.as_arr())
+            .expect("per_layer_thresholds");
+        assert_eq!(per_layer.len(), 2);
+        assert!(per_layer.iter().all(|r| r.get("alpha_star").is_some()));
         let rows = parsed.get("rows").and_then(|v| v.as_arr()).expect("rows");
         assert_eq!(rows.len(), sweep.rows.len());
         assert!(rows.iter().all(|r| r.get("median_s").is_some()));

@@ -2,6 +2,28 @@
 //!
 //! Supports subcommands, `--flag`, `--key value`, `--key=value`, repeated
 //! options, and positional arguments, with generated `--help` text.
+//!
+//! # `condcomp calibrate` usage
+//!
+//! The autotune subcommand fits per-layer dispatch thresholds and persists
+//! them, so serving hosts measure once instead of at every startup:
+//!
+//! ```text
+//! # Fit thresholds for a profile's architecture on this machine
+//! # (~2 s default budget; writes condcomp-profile.json):
+//! condcomp calibrate --profile mnist-small
+//!
+//! # CI smoke / constrained budget, explicit output path:
+//! condcomp calibrate --budget-ms 500 --out profiles/ci.json
+//!
+//! # Serve with the persisted profile (also settable via the
+//! # autotune.profile_path config key):
+//! condcomp serve --autotune-profile profiles/ci.json
+//! ```
+//!
+//! `serve` verifies the profile's model fingerprint, logs the per-layer
+//! α* table it loaded, and falls back to online calibration
+//! (`autotune.budget_ms`) when the file is missing or rejected.
 
 use std::collections::BTreeMap;
 

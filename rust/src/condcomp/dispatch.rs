@@ -13,17 +13,19 @@
 //! ```
 //!
 //! The §3.4 cost model ([`LayerFlops`]) supplies the FLOP counts; the
-//! per-FLOP cost ratio is **measured** — either at startup with
-//! [`DispatchPolicy::calibrate`] (the `serve` command does this) or offline
-//! by the bench sweep, which records the threshold in
-//! `BENCH_parallel.json`. [`DispatchPolicy::DEFAULT_COST_RATIO`] is only the
-//! fallback for callers that skip calibration.
+//! per-FLOP cost ratio is **measured**, and it is *shape-dependent* — per-
+//! layer `d × h` shapes have different cache behaviour, so each hidden
+//! layer gets its own ratio. [`PolicyTable`] holds the per-layer policies;
+//! they come from a persisted machine profile (`condcomp calibrate`, loaded
+//! at `serve` startup), from online calibration via
+//! [`crate::autotune::Autotuner`], or — per layer, as a last resort — from
+//! [`DispatchPolicy::DEFAULT_COST_RATIO`], with a one-time warning naming
+//! the profile path that was searched. The bench sweep records the fitted
+//! per-layer thresholds in `BENCH_parallel.json`.
 
 use super::flops::LayerFlops;
-use super::masked_gemm::MaskedLayer;
-use crate::linalg::{matmul_into_par, Mat};
-use crate::parallel::ThreadPool;
-use crate::util::{Pcg32, Timer};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 /// Which kernel executes a layer's forward for one batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,8 +49,9 @@ impl DispatchPolicy {
     /// Fallback cost ratio for uncalibrated policies, from the rejected
     /// packed-dot experiment in the `linalg::gemm` docs (dot kernels ran a
     /// few× slower per FLOP than the axpy GEMM on the 1-core testbed). Run
-    /// [`DispatchPolicy::calibrate`] or the bench sweep for a measured
-    /// value on the serving hardware.
+    /// `condcomp calibrate` (the [`crate::autotune::Autotuner`] harness) or
+    /// the bench sweep for per-layer measured values on the serving
+    /// hardware.
     pub const DEFAULT_COST_RATIO: f64 = 3.0;
 
     /// Policy with an explicit (e.g. previously recorded) cost ratio.
@@ -73,43 +76,153 @@ impl DispatchPolicy {
             Kernel::DenseParallel
         }
     }
-
-    /// Measure the cost ratio on this machine/pool: times the dense-parallel
-    /// GEMM against the masked-parallel kernel under a full (α = 1) mask on
-    /// an `n × d → h` layer, taking the best of `reps` runs each. Costs a
-    /// few milliseconds at the default sizes; `serve` runs it once at
-    /// startup.
-    pub fn calibrate(pool: &ThreadPool, n: usize, d: usize, h: usize, reps: usize) -> DispatchPolicy {
-        let reps = reps.max(1);
-        let mut rng = Pcg32::seeded(0xD15_7A7C);
-        let a = Mat::randn(n, d, 0.5, &mut rng);
-        let w = Mat::randn(d, h, 0.05, &mut rng);
-        let bias = vec![0.0f32; h];
-        let layer = MaskedLayer::new(&w, &bias);
-        let full_mask = Mat::full(n, h, 1.0);
-        let mut out = Mat::zeros(n, h);
-
-        let mut t_dense = f64::INFINITY;
-        let mut t_masked = f64::INFINITY;
-        for _ in 0..reps {
-            let t = Timer::start();
-            matmul_into_par(&a, &w, &mut out, pool);
-            t_dense = t_dense.min(t.elapsed_s());
-
-            let t = Timer::start();
-            let _ = layer.forward_masked_par(&a, &full_mask, &mut out, pool);
-            t_masked = t_masked.min(t.elapsed_s());
-        }
-        if !(t_dense > 0.0) || !t_masked.is_finite() {
-            return DispatchPolicy::default();
-        }
-        DispatchPolicy::with_cost_ratio(t_masked / t_dense)
-    }
 }
 
 impl Default for DispatchPolicy {
     fn default() -> DispatchPolicy {
         DispatchPolicy { cost_ratio: DispatchPolicy::DEFAULT_COST_RATIO }
+    }
+}
+
+/// Per-layer dispatch policies with a shared uncalibrated fallback.
+///
+/// A single global cost ratio ignores that different `d × h` layer shapes
+/// have different cache behaviour, so their masked-vs-dense flip points
+/// differ. The autotune subsystem ([`crate::autotune`]) measures each layer
+/// shape separately and persists the result in a machine profile;
+/// `PolicyTable` is the runtime form — one optional calibrated policy per
+/// hidden layer, plus the fallback ([`DispatchPolicy::DEFAULT_COST_RATIO`])
+/// for layers nothing has calibrated. The first fallback hit logs a
+/// one-time warning naming the profile path that was searched, so a
+/// silently-defaulting deployment is visible in the serve log.
+#[derive(Clone, Debug)]
+pub struct PolicyTable {
+    /// `layers[l]` is hidden layer `l`'s calibrated policy; `None` falls
+    /// back (and warns once).
+    layers: Vec<Option<DispatchPolicy>>,
+    fallback: DispatchPolicy,
+    /// Where a machine profile was looked for — named by the warning.
+    profile_path: Option<String>,
+    /// One-time warning latch, shared across clones of this table.
+    warned: Arc<AtomicBool>,
+}
+
+impl PolicyTable {
+    /// A table with no calibrated layers: every lookup uses the fallback.
+    pub fn uncalibrated(num_layers: usize) -> PolicyTable {
+        PolicyTable {
+            layers: vec![None; num_layers],
+            fallback: DispatchPolicy::default(),
+            profile_path: None,
+            warned: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Every layer pinned to one explicit policy (tests; embedders with a
+    /// single recorded global ratio). Counts as calibrated — no warning.
+    pub fn uniform(policy: DispatchPolicy, num_layers: usize) -> PolicyTable {
+        PolicyTable {
+            layers: vec![Some(policy); num_layers],
+            fallback: policy,
+            profile_path: None,
+            warned: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Record where a machine profile was (or would have been) looked for,
+    /// so the fallback warning can name it.
+    pub fn with_profile_path(mut self, path: impl Into<String>) -> PolicyTable {
+        self.profile_path = Some(path.into());
+        self
+    }
+
+    /// Number of hidden layers this table covers.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Install a calibrated policy for hidden layer `layer` (ignored if the
+    /// index is out of range — profiles may describe a deeper model).
+    pub fn set_layer(&mut self, layer: usize, policy: DispatchPolicy) {
+        if let Some(slot) = self.layers.get_mut(layer) {
+            *slot = Some(policy);
+        }
+    }
+
+    /// Whether hidden layer `layer` has a calibrated (non-fallback) policy.
+    pub fn is_calibrated(&self, layer: usize) -> bool {
+        matches!(self.layers.get(layer), Some(Some(_)))
+    }
+
+    /// How many layers are calibrated.
+    pub fn calibrated_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// The policy for hidden layer `layer`. Uncalibrated layers use the
+    /// fallback and trigger the one-time warning.
+    pub fn policy_for(&self, layer: usize) -> DispatchPolicy {
+        match self.layers.get(layer).copied().flatten() {
+            Some(p) => p,
+            None => {
+                self.warn_once(layer);
+                self.fallback
+            }
+        }
+    }
+
+    fn warn_once(&self, layer: usize) {
+        if !self.warned.swap(true, Ordering::Relaxed) {
+            let looked = self
+                .profile_path
+                .as_deref()
+                .unwrap_or("<autotune.profile_path not configured>");
+            eprintln!(
+                "warning: dispatch for layer {layer} is uncalibrated — no machine profile \
+                 loaded (looked for {looked}); using DEFAULT_COST_RATIO = {}. \
+                 Run `condcomp calibrate` to fit per-layer thresholds for this machine.",
+                DispatchPolicy::DEFAULT_COST_RATIO
+            );
+        }
+    }
+
+    /// Per-layer α* values (fallback threshold where uncalibrated). Does not
+    /// trigger the warning — this is the reporting path, not a decision.
+    pub fn thresholds(&self) -> Vec<f64> {
+        self.layers
+            .iter()
+            .map(|l| l.unwrap_or(self.fallback).density_threshold())
+            .collect()
+    }
+
+    /// Human-readable per-layer table — the `serve` startup log.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut lines = vec![format!(
+            "{:<7} {:>12} {:>10} {:>12}",
+            "layer", "cost-ratio", "α*", "source"
+        )];
+        for (l, slot) in self.layers.iter().enumerate() {
+            let (p, source) = match slot {
+                Some(p) => (*p, "calibrated"),
+                None => (self.fallback, "fallback"),
+            };
+            lines.push(format!(
+                "{:<7} {:>12.3} {:>10.4} {:>12}",
+                l,
+                p.cost_ratio,
+                p.density_threshold(),
+                source
+            ));
+        }
+        lines
+    }
+}
+
+/// Equality over the dispatch-relevant state (the warning latch and the
+/// remembered profile path are diagnostics, not policy).
+impl PartialEq for PolicyTable {
+    fn eq(&self, other: &PolicyTable) -> bool {
+        self.layers == other.layers && self.fallback == other.fallback
     }
 }
 
@@ -146,12 +259,53 @@ mod tests {
         assert_eq!(p.decide(8, 100, 100, 7.0), Kernel::DenseParallel);
     }
 
+    /// The point of the per-layer table: at the same batch density, two
+    /// layers with different fitted ratios pick different kernels, each
+    /// flipping just below/above its own α*.
     #[test]
-    fn calibrate_produces_a_finite_positive_ratio() {
-        let pool = ThreadPool::new(2);
-        let p = DispatchPolicy::calibrate(&pool, 16, 64, 64, 2);
-        assert!(p.cost_ratio.is_finite() && p.cost_ratio > 0.0);
-        let t = p.density_threshold();
-        assert!((0.0..=1.0).contains(&t));
+    fn per_layer_policies_flip_at_their_own_thresholds() {
+        let mut table = PolicyTable::uncalibrated(2);
+        table.set_layer(0, DispatchPolicy::with_cost_ratio(2.0)); // α* = 0.5
+        table.set_layer(1, DispatchPolicy::with_cost_ratio(10.0)); // α* = 0.1
+        let (n, d, h) = (64, 512, 512);
+        // Just below / above each layer's own threshold.
+        assert_eq!(table.policy_for(0).decide(n, d, h, 0.45), Kernel::MaskedParallel);
+        assert_eq!(table.policy_for(0).decide(n, d, h, 0.55), Kernel::DenseParallel);
+        assert_eq!(table.policy_for(1).decide(n, d, h, 0.05), Kernel::MaskedParallel);
+        assert_eq!(table.policy_for(1).decide(n, d, h, 0.15), Kernel::DenseParallel);
+        // Same α, different layers → different kernels.
+        assert_eq!(table.policy_for(0).decide(n, d, h, 0.3), Kernel::MaskedParallel);
+        assert_eq!(table.policy_for(1).decide(n, d, h, 0.3), Kernel::DenseParallel);
+        let t = table.thresholds();
+        assert!((t[0] - 0.5).abs() < 1e-12 && (t[1] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncalibrated_layers_fall_back_and_report() {
+        let table = PolicyTable::uncalibrated(3).with_profile_path("/tmp/nope.json");
+        assert_eq!(table.num_layers(), 3);
+        assert_eq!(table.calibrated_layers(), 0);
+        assert!(!table.is_calibrated(1));
+        // Fallback policy is the global default; repeated lookups warn once
+        // (the latch is per-table — asserted via the shared AtomicBool).
+        assert_eq!(table.policy_for(0), DispatchPolicy::default());
+        assert_eq!(table.policy_for(2), DispatchPolicy::default());
+        // Out-of-range layers also fall back instead of panicking.
+        assert_eq!(table.policy_for(99), DispatchPolicy::default());
+        assert_eq!(table.summary_lines().len(), 4); // header + 3 layers
+    }
+
+    #[test]
+    fn uniform_table_is_fully_calibrated() {
+        let p = DispatchPolicy::with_cost_ratio(4.0);
+        let table = PolicyTable::uniform(p, 2);
+        assert_eq!(table.calibrated_layers(), 2);
+        assert_eq!(table.policy_for(0), p);
+        assert_eq!(table.policy_for(1), p);
+        let mut expect = PolicyTable::uncalibrated(2);
+        expect.set_layer(0, p);
+        expect.set_layer(1, p);
+        // PartialEq compares layers + fallback only; fallbacks differ here.
+        assert_eq!(expect.thresholds(), table.thresholds());
     }
 }

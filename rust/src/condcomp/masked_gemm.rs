@@ -22,7 +22,8 @@
 //!   callers); the correctness oracle.
 //! - [`MaskedLayer::forward_dense_par`] / [`MaskedLayer::forward_dense`] —
 //!   the dense control path through the same data layout, used for timing
-//!   comparisons and by [`super::DispatchPolicy`] calibration.
+//!   comparisons (the bench sweep; [`super::DispatchPolicy`] ratios are
+//!   fitted by the `crate::autotune` harness).
 
 use crate::linalg::gemm::dot;
 use crate::linalg::Mat;

@@ -7,9 +7,10 @@
 //!   dot product reads two contiguous strips; hot-path variants run batch
 //!   rows on the shared worker pool and write into caller-owned buffers.
 //! - [`dispatch`] — the density-adaptive kernel choice: masked dot products
-//!   beat the dense axpy GEMM only below a *measured* density threshold;
-//!   [`DispatchPolicy`] combines that measurement with the §3.4 cost model
-//!   to pick dense-parallel vs masked-parallel per layer per batch.
+//!   beat the dense axpy GEMM only below a *measured*, *shape-dependent*
+//!   density threshold; [`DispatchPolicy`] combines one measurement with
+//!   the §3.4 cost model, and [`PolicyTable`] holds one per hidden layer
+//!   (fitted by [`crate::autotune`], persisted in a machine profile).
 //! - [`cond_mlp`] — an estimator-augmented network forward built on the
 //!   masked GEMM, with exact FLOP accounting per layer.
 //! - [`flops`] — operation counters shared by the engine and the benches.
@@ -20,6 +21,6 @@ pub mod dispatch;
 pub mod flops;
 
 pub use cond_mlp::CondMlp;
-pub use dispatch::{DispatchPolicy, Kernel};
+pub use dispatch::{DispatchPolicy, Kernel, PolicyTable};
 pub use flops::{FlopBreakdown, LayerFlops};
 pub use masked_gemm::MaskedLayer;

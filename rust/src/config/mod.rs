@@ -7,5 +7,7 @@
 pub mod toml_lite;
 pub mod schema;
 
-pub use schema::{DatasetKind, EstimatorConfig, ExperimentProfile, NetConfig, TrainConfig};
+pub use schema::{
+    AutotuneConfig, DatasetKind, EstimatorConfig, ExperimentProfile, NetConfig, TrainConfig,
+};
 pub use toml_lite::TomlDoc;

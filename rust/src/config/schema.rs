@@ -92,6 +92,26 @@ pub struct TrainConfig {
     pub threads: usize,
 }
 
+/// Autotune-subsystem knobs: where the persisted machine profile lives and
+/// how long calibration may take.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutotuneConfig {
+    /// Path to the persisted `MachineProfile` JSON (`condcomp calibrate`
+    /// writes it; `condcomp serve` loads it at startup). `None` = not
+    /// configured — serve falls back to online calibration, then to the
+    /// global default ratio.
+    pub profile_path: Option<String>,
+    /// Wall-clock budget for a whole-model calibration, in milliseconds
+    /// (split evenly over all per-layer measurement points).
+    pub budget_ms: u64,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> AutotuneConfig {
+        AutotuneConfig { profile_path: None, budget_ms: 2000 }
+    }
+}
+
 /// Per-layer activation-estimator configuration (§3.1–§3.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct EstimatorConfig {
@@ -152,6 +172,8 @@ pub struct ExperimentProfile {
     pub dataset: DatasetKind,
     pub net: NetConfig,
     pub train: TrainConfig,
+    /// Autotune subsystem knobs (profile path, calibration budget).
+    pub autotune: AutotuneConfig,
     /// Training/validation/test example counts for the synthetic corpus.
     pub n_train: usize,
     pub n_valid: usize,
@@ -184,6 +206,7 @@ impl ExperimentProfile {
                 seed: 1,
                 threads: 0,
             },
+            autotune: AutotuneConfig::default(),
             n_train: 50_000,
             n_valid: 10_000,
             n_test: 10_000,
@@ -215,6 +238,7 @@ impl ExperimentProfile {
                 seed: 1,
                 threads: 0,
             },
+            autotune: AutotuneConfig::default(),
             n_train: 590_000,
             n_valid: 14_388,
             n_test: 26_032,
@@ -363,6 +387,12 @@ impl ExperimentProfile {
         if let Some(x) = doc.get_usize("train.threads") {
             self.train.threads = x;
         }
+        if let Some(s) = doc.get_str("autotune.profile_path") {
+            self.autotune.profile_path = Some(s.to_string());
+        }
+        if let Some(x) = doc.get_usize("autotune.budget_ms") {
+            self.autotune.budget_ms = x as u64;
+        }
         if let Some(x) = doc.get_usize("data.n_train") {
             self.n_train = x;
         }
@@ -435,6 +465,21 @@ mod tests {
     fn threads_defaults_to_auto() {
         assert_eq!(ExperimentProfile::mnist_paper().train.threads, 0);
         assert_eq!(ExperimentProfile::svhn_tiny().train.threads, 0);
+    }
+
+    #[test]
+    fn autotune_defaults_and_overrides() {
+        let mut p = ExperimentProfile::mnist_tiny();
+        assert_eq!(p.autotune, AutotuneConfig::default());
+        assert!(p.autotune.profile_path.is_none());
+        assert_eq!(p.autotune.budget_ms, 2000);
+        let doc = TomlDoc::parse(
+            "[autotune]\nprofile_path = \"profiles/ci.json\"\nbudget_ms = 500",
+        )
+        .unwrap();
+        p.apply_overrides(&doc);
+        assert_eq!(p.autotune.profile_path.as_deref(), Some("profiles/ci.json"));
+        assert_eq!(p.autotune.budget_ms, 500);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! (AOT artifacts). Both serve the same two modes — control and conditional.
 
 use super::protocol::Mode;
-use crate::condcomp::{DispatchPolicy, FlopBreakdown, Kernel, MaskedLayer};
+use crate::autotune::{Autotuner, MachineProfile};
+use crate::condcomp::{DispatchPolicy, FlopBreakdown, Kernel, MaskedLayer, PolicyTable};
 use crate::estimator::SignEstimatorSet;
 use crate::linalg::{matmul_into_par, Mat};
 use crate::nn::mlp::{add_bias, NoGater};
@@ -32,6 +33,11 @@ pub trait Backend: Send + Sync {
     fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)>;
     /// Recompute estimator factors from the current weights.
     fn refresh(&self) -> Result<()>;
+    /// Per-layer dispatch thresholds (α*), if this backend dispatches
+    /// conditionally. The server exports them as startup gauges.
+    fn dispatch_thresholds(&self) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// Pure-Rust backend: the control path uses the dense layer kernels, the
@@ -43,9 +49,11 @@ pub struct NativeBackend {
     masked: Vec<MaskedLayer>,
     estimators: RwLock<SignEstimatorSet>,
     max_batch: usize,
-    /// Per-layer-per-batch dense-vs-masked choice (calibrate at startup via
-    /// [`NativeBackend::calibrate_dispatch`]; defaults are conservative).
-    dispatch: RwLock<DispatchPolicy>,
+    /// Per-layer dense-vs-masked flip thresholds — loaded from a machine
+    /// profile ([`NativeBackend::apply_profile`]) or measured at startup
+    /// ([`NativeBackend::calibrate_dispatch`]); uncalibrated layers fall
+    /// back to the conservative default with a one-time warning.
+    dispatch: RwLock<PolicyTable>,
     /// Recycled activation buffers: the conditional hot path allocates
     /// nothing per batch after warmup.
     scratch: Mutex<Vec<Vec<f32>>>,
@@ -57,15 +65,16 @@ const SCRATCH_CAP: usize = 8;
 
 impl NativeBackend {
     pub fn new(net: Mlp, estimators: SignEstimatorSet, max_batch: usize) -> NativeBackend {
-        let masked = (0..net.depth())
+        let masked: Vec<MaskedLayer> = (0..net.depth())
             .map(|l| MaskedLayer::new(&net.weights[l], &net.biases[l]))
             .collect();
+        let hidden = net.depth().saturating_sub(1);
         NativeBackend {
             net,
             masked,
             estimators: RwLock::new(estimators),
             max_batch,
-            dispatch: RwLock::new(DispatchPolicy::default()),
+            dispatch: RwLock::new(PolicyTable::uncalibrated(hidden)),
             scratch: Mutex::new(Vec::new()),
         }
     }
@@ -75,26 +84,73 @@ impl NativeBackend {
         crate::parallel::global()
     }
 
-    /// Replace the dispatch policy (e.g. with a recorded cost ratio).
+    /// Number of conditionally-dispatched (hidden) layers.
+    fn num_hidden(&self) -> usize {
+        self.net.depth().saturating_sub(1)
+    }
+
+    /// Pin every layer to one explicit policy (tests; embedders with a
+    /// single recorded global ratio).
     pub fn set_dispatch(&self, policy: DispatchPolicy) {
-        *self.dispatch.write().unwrap() = policy;
+        *self.dispatch.write().unwrap() = PolicyTable::uniform(policy, self.num_hidden());
     }
 
-    /// Measure the masked-vs-dense cost ratio on this machine's pool and
-    /// install the resulting policy; returns it (the `serve` command logs
-    /// the threshold at startup). Costs a few milliseconds.
-    pub fn calibrate_dispatch(&self) -> DispatchPolicy {
-        let d = self.net.layer_sizes()[0].min(512).max(32);
-        let h = self.net.layer_sizes()[1].min(512).max(32);
-        let n = self.max_batch.clamp(8, 64);
-        let policy = DispatchPolicy::calibrate(self.pool(), n, d, h, 3);
-        self.set_dispatch(policy);
-        policy
+    /// Install a full per-layer policy table.
+    pub fn set_policy_table(&self, table: PolicyTable) {
+        *self.dispatch.write().unwrap() = table;
     }
 
-    /// Current dispatch policy.
-    pub fn dispatch_policy(&self) -> DispatchPolicy {
-        *self.dispatch.read().unwrap()
+    /// Install the per-layer thresholds from a persisted machine profile.
+    /// Rejects a profile whose fingerprint does not match this model's
+    /// shapes (its thresholds would be for the wrong `d × h` grid).
+    pub fn apply_profile(&self, profile: &MachineProfile, source: &str) -> Result<PolicyTable> {
+        profile.ensure_matches_model(&self.net.layer_sizes())?;
+        // A shape match is required; a pool/hardware mismatch is only
+        // suspicious (thresholds were fitted under different contention /
+        // cache behaviour), so it installs with a warning.
+        let live_threads = self.pool().threads();
+        if profile.threads != 0 && profile.threads != live_threads {
+            eprintln!(
+                "warning: machine profile {source} was calibrated on {} pool threads; \
+                 this pool has {live_threads} — thresholds may be off \
+                 (re-run `condcomp calibrate` on this configuration)",
+                profile.threads
+            );
+        }
+        let live_hw = crate::autotune::hardware_descriptor();
+        if profile.hardware != "unknown" && profile.hardware != live_hw {
+            eprintln!(
+                "warning: machine profile {source} describes hardware '{}'; \
+                 this machine is '{live_hw}'",
+                profile.hardware
+            );
+        }
+        let table = profile.policy_table(self.num_hidden(), source);
+        self.set_policy_table(table.clone());
+        Ok(table)
+    }
+
+    /// Measure per-layer masked-vs-dense cost ratios on this machine's pool
+    /// (online calibration — the fallback when no machine profile is on
+    /// disk) and install the resulting table; returns it so `serve` can log
+    /// the per-layer thresholds at startup. Wall-clock bounded by
+    /// `budget_ms`.
+    pub fn calibrate_dispatch(&self, budget_ms: u64) -> PolicyTable {
+        let mut tuner = Autotuner::with_budget_ms(budget_ms.max(1));
+        tuner.batch = self.max_batch.clamp(8, 64);
+        // Online calibration discards the profile, so skip the serial
+        // diagnostic arm and spend the whole budget on the pooled numbers
+        // dispatch actually consumes.
+        tuner.fit_serial = false;
+        let profile = tuner.calibrate_model(&self.net.layer_sizes(), self.pool());
+        let table = profile.policy_table(self.num_hidden(), "<online calibration>");
+        self.set_policy_table(table.clone());
+        table
+    }
+
+    /// Current dispatch policy table (cloned snapshot).
+    pub fn policy_table(&self) -> PolicyTable {
+        self.dispatch.read().unwrap().clone()
     }
 
     fn take_buf(&self, len: usize) -> Vec<f32> {
@@ -123,7 +179,10 @@ impl NativeBackend {
     /// only changes which one is faster.
     fn forward_cond(&self, x: &Mat) -> (Mat, FlopBreakdown) {
         let est = self.estimators.read().unwrap();
-        let policy = self.dispatch_policy();
+        // Snapshot the (small) table instead of holding the read guard
+        // across the whole forward — a concurrent recalibration writer
+        // would otherwise stall every in-flight batch behind it.
+        let table = self.policy_table();
         let pool = self.pool();
         let mut flops = FlopBreakdown::default();
         let depth = self.masked.len();
@@ -134,7 +193,8 @@ impl NativeBackend {
             let (n, h) = (a.rows(), layer.out_dim());
             let alpha = mask.density() as f64;
             let mut out = Mat::from_vec(n, h, self.take_buf(n * h));
-            let computed = match policy.decide(n, layer.in_dim(), h, alpha) {
+            // Per-layer threshold: each layer's shape has its own fitted α*.
+            let computed = match table.policy_for(l).decide(n, layer.in_dim(), h, alpha) {
                 Kernel::MaskedParallel => layer.forward_masked_par(&a, &mask, &mut out, pool),
                 Kernel::DenseParallel => {
                     // Dense axpy GEMM on the untransposed weights, then
@@ -211,6 +271,10 @@ impl Backend for NativeBackend {
         let net = &self.net;
         self.estimators.write().unwrap().refresh(net);
         Ok(())
+    }
+
+    fn dispatch_thresholds(&self) -> Option<Vec<f64>> {
+        Some(self.dispatch.read().unwrap().thresholds())
     }
 }
 
@@ -356,12 +420,73 @@ mod tests {
     }
 
     #[test]
-    fn calibration_installs_a_sane_policy() {
+    fn calibration_installs_a_sane_per_layer_table() {
         let be = native();
-        let policy = be.calibrate_dispatch();
-        assert!(policy.cost_ratio.is_finite() && policy.cost_ratio > 0.0);
-        assert_eq!(be.dispatch_policy(), policy);
-        let t = policy.density_threshold();
-        assert!((0.0..=1.0).contains(&t), "threshold {t}");
+        let table = be.calibrate_dispatch(60);
+        // Three weight layers → two conditionally-dispatched hidden layers.
+        assert_eq!(table.num_layers(), 2);
+        assert_eq!(table.calibrated_layers(), 2);
+        assert_eq!(be.policy_table(), table);
+        for t in table.thresholds() {
+            assert!((0.0..=1.0).contains(&t), "threshold {t}");
+        }
+        assert_eq!(be.dispatch_thresholds().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn profile_with_matching_fingerprint_installs_per_layer_thresholds() {
+        use crate::autotune::{model_fingerprint, LayerThreshold, MachineProfile};
+        let be = native();
+        let profile = MachineProfile {
+            version: crate::autotune::PROFILE_SCHEMA_VERSION,
+            fingerprint: model_fingerprint(&[8, 12, 10, 4]),
+            hardware: "test".into(),
+            threads: 1,
+            budget_ms: 0,
+            layers: vec![
+                LayerThreshold {
+                    layer: 0,
+                    d: 8,
+                    h: 12,
+                    cost_ratio: 2.0,
+                    cost_ratio_serial: 2.0,
+                    alpha_star: 0.5,
+                },
+                LayerThreshold {
+                    layer: 1,
+                    d: 12,
+                    h: 10,
+                    cost_ratio: 8.0,
+                    cost_ratio_serial: 8.0,
+                    alpha_star: 0.125,
+                },
+            ],
+        };
+        let table = be.apply_profile(&profile, "test-profile.json").unwrap();
+        let t = table.thresholds();
+        assert!((t[0] - 0.5).abs() < 1e-12 && (t[1] - 0.125).abs() < 1e-12, "{t:?}");
+        assert_eq!(be.dispatch_thresholds().unwrap(), t);
+        // The two layers now dispatch differently at the same density.
+        use crate::condcomp::Kernel;
+        assert_eq!(table.policy_for(0).decide(4, 8, 12, 0.3), Kernel::MaskedParallel);
+        assert_eq!(table.policy_for(1).decide(4, 12, 10, 0.3), Kernel::DenseParallel);
+    }
+
+    #[test]
+    fn profile_with_wrong_fingerprint_is_rejected() {
+        use crate::autotune::MachineProfile;
+        let be = native();
+        let profile = MachineProfile {
+            version: crate::autotune::PROFILE_SCHEMA_VERSION,
+            fingerprint: "mlp:999-999-999".into(),
+            hardware: "test".into(),
+            threads: 1,
+            budget_ms: 0,
+            layers: vec![],
+        };
+        let err = be.apply_profile(&profile, "wrong.json").unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        // The uncalibrated table is untouched.
+        assert_eq!(be.policy_table().calibrated_layers(), 0);
     }
 }

@@ -66,6 +66,14 @@ impl Server {
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(MetricsRegistry::new());
         metrics.set_gauge("pool_threads", crate::parallel::global().threads() as f64);
+        // Export the backend's per-layer dispatch thresholds so operators
+        // can see which α* table a deployment is actually running.
+        if let Some(thresholds) = backend.dispatch_thresholds() {
+            metrics.set_gauge("dispatch_layers", thresholds.len() as f64);
+            for (l, t) in thresholds.iter().enumerate() {
+                metrics.set_gauge(&format!("dispatch_alpha_star_l{l}"), *t);
+            }
+        }
         let batcher = Arc::new(DynamicBatcher::new(backend.max_batch(), cfg.max_wait));
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
@@ -445,6 +453,16 @@ mod tests {
         // must have coalesced multiple requests.
         let batches = server.metrics.counter("batches");
         assert!(batches <= 30, "batches {batches}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn dispatch_threshold_gauges_exported_at_startup() {
+        let (server, _addr) = start_server();
+        // Native backend: two hidden layers → two α* gauges + the count.
+        assert_eq!(server.metrics.gauge("dispatch_layers"), Some(2.0));
+        assert!(server.metrics.gauge("dispatch_alpha_star_l0").is_some());
+        assert!(server.metrics.gauge("dispatch_alpha_star_l1").is_some());
         server.shutdown();
     }
 

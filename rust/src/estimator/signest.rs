@@ -67,10 +67,14 @@ impl SignEstimator {
     }
 
     /// [`Self::mask`] with the low-rank prediction computed for row shards
-    /// in parallel on `pool`. Each shard runs the exact serial pipeline
-    /// (`a·U·V + b_layer`, then the sign test) on its own rows, and the
-    /// blocked GEMM computes every output row independently of its
-    /// neighbours — so the mask is bit-identical to the serial one for any
+    /// in parallel on `pool`. Each shard *borrows* its row range from the
+    /// input ([`Mat::view_rows`] — no copy on the serving hot path) and runs
+    /// the low-rank product through `LowRank::apply_view_into`, writing the
+    /// `a·U·V` result straight into the shard's output band, which is then
+    /// thresholded in place; the only per-shard allocation is the small
+    /// `rows × rank` intermediate. The view GEMM keeps the serial kernel's
+    /// accumulation order and every output row is independent of its
+    /// neighbours, so the mask is bit-identical to the serial one for any
     /// thread count.
     pub fn mask_par(&self, input: &Mat, pool: &ThreadPool) -> Mat {
         let n = input.rows();
@@ -82,12 +86,19 @@ impl SignEstimator {
         let mut out = Mat::zeros(n, h);
         let rows_per = chunk_rows(n, pool.threads(), 1);
         let b = self.bias;
+        let rank = self.factors.rank();
         par_row_chunks(pool, &mut out, rows_per, |row0, band| {
             let rows = band.len() / h;
-            let shard = input.rows_slice(row0, rows);
-            let z = self.estimate_preact(&shard);
-            for (slot, &v) in band.iter_mut().zip(z.as_slice()) {
-                *slot = if v - b > 0.0 { 1.0 } else { 0.0 };
+            let mut tmp = vec![0.0f32; rows * rank];
+            self.factors
+                .apply_view_into(input.view_rows(row0, rows), &mut tmp, band);
+            for i in 0..rows {
+                let zrow = &mut band[i * h..(i + 1) * h];
+                for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
+                    // Same expression as the serial path: add_bias then
+                    // `v - b > 0` — i.e. `(z + lb) - b`.
+                    *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
+                }
             }
         });
         out

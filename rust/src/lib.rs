@@ -27,6 +27,10 @@
 //!   (serial oracle + pool-parallel hot path), the density-adaptive
 //!   dense-vs-masked dispatch policy, and the estimator-augmented MLP, with
 //!   FLOP accounting.
+//! - [`autotune`] — per-layer dispatch calibration: a budgeted
+//!   microbenchmark harness fitting each layer shape's masked-vs-dense cost
+//!   ratio, persisted as a machine profile (`condcomp calibrate` /
+//!   `autotune.profile_path`).
 //! - [`cost`] — the analytical FLOP model of §3.4 (Eqs. 8–11).
 //! - [`runtime`] — PJRT client + HLO-text artifact store (the AOT bridge).
 //! - [`coordinator`] — L3 serving/training orchestration: TCP server, dynamic
@@ -44,6 +48,7 @@ pub mod data;
 pub mod nn;
 pub mod estimator;
 pub mod condcomp;
+pub mod autotune;
 pub mod cost;
 pub mod runtime;
 pub mod coordinator;

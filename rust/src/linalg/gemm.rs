@@ -19,7 +19,7 @@
 //! Correctness is pinned by property tests against the naive kernel, at
 //! pool sizes 1, 2 and 7 for the parallel variant.
 
-use super::matrix::Mat;
+use super::matrix::{Mat, MatView};
 use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
 
 /// Rows of A (and C) per parallel row panel: the unit of work sharding.
@@ -91,6 +91,39 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
                 }
                 let brow = b.row(p0 + pp);
                 axpy_row(crow, aip, brow);
+            }
+        }
+        p0 += kc;
+    }
+}
+
+/// `out = A · B` where `A` is a borrowed row-range [`MatView`] and `out` is
+/// a row-major `a.rows × b.cols` slice (overwritten, not accumulated).
+///
+/// Same KC-blocked axpy loop — and therefore the same per-element
+/// accumulation order — as [`matmul_into`], so computing a row range through
+/// a view is bit-identical to computing the full product and reading the
+/// corresponding rows. This is what lets the parallel estimator shard a
+/// batch across pool workers without copying each shard
+/// (`SignEstimator::mask_par`).
+pub fn matmul_view_into(a: MatView<'_>, b: &Mat, out: &mut [f32]) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(out.len(), m * n, "output slice length mismatch");
+    out.fill(0.0);
+
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        for i in 0..m {
+            let arow = &a.row(i)[p0..p0 + kc];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (pp, &aip) in arow.iter().enumerate() {
+                if aip == 0.0 {
+                    continue;
+                }
+                axpy_row(crow, aip, b.row(p0 + pp));
             }
         }
         p0 += kc;
@@ -367,6 +400,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// A row-range view must produce exactly the rows the full product
+    /// would — bitwise, since rows are independent and the view kernel
+    /// mirrors the serial accumulation order.
+    #[test]
+    fn view_kernel_is_bit_identical_to_full_product_rows() {
+        property("view rows == full product rows", 24, |rng| {
+            let m = rng.index(30) + 2;
+            let k = rng.index(40) + 1;
+            let n = rng.index(40) + 1;
+            let a = Mat::randn(m, k, 1.0, rng);
+            let b = Mat::randn(k, n, 1.0, rng);
+            let mut full = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut full);
+            let start = rng.index(m - 1);
+            let rows = rng.index(m - start) + 1;
+            let mut out = vec![f32::NAN; rows * n]; // dirty buffer
+            matmul_view_into(a.view_rows(start, rows), &b, &mut out);
+            assert_eq!(&out[..], &full.as_slice()[start * n..(start + rows) * n]);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "output slice length")]
+    fn view_kernel_checks_output_length() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(3, 4);
+        let mut out = vec![0.0; 7];
+        matmul_view_into(a.view(), &b, &mut out);
     }
 
     #[test]

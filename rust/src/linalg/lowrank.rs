@@ -13,8 +13,8 @@
 //!   implements the paper's future-work "online approach to the low-rank
 //!   approximation" at a fraction of the refresh cost.
 
-use super::gemm::{matmul, matmul_into};
-use super::matrix::Mat;
+use super::gemm::{matmul, matmul_into, matmul_view_into};
+use super::matrix::{Mat, MatView};
 use super::svd::Svd;
 use crate::util::Pcg32;
 
@@ -89,6 +89,17 @@ impl LowRank {
     pub fn apply_into(&self, a: &Mat, tmp: &mut Mat, out: &mut Mat) {
         matmul_into(a, &self.u, tmp);
         matmul_into(tmp, &self.v, out);
+    }
+
+    /// [`Self::apply_into`] over a borrowed row-range view: reads the shard
+    /// in place (no copy) and writes into caller scratch — `tmp` row-major
+    /// `a.rows × rank`, `out` row-major `a.rows × h`. Row-sharded callers
+    /// (the parallel estimator) get results bit-identical to [`Self::apply`]
+    /// on the full input, because the view GEMM keeps the serial kernel's
+    /// accumulation order and rows are independent.
+    pub fn apply_view_into(&self, a: MatView<'_>, tmp: &mut [f32], out: &mut [f32]) {
+        matmul_view_into(a, &self.u, tmp);
+        matmul_view_into(MatView::new(a.rows(), self.rank(), tmp), &self.v, out);
     }
 
     /// Approximation error `‖W − U·V‖_F / ‖W‖_F`.
@@ -225,6 +236,21 @@ mod tests {
         let mut out = Mat::zeros(4, 6);
         lr.apply_into(&a, &mut tmp, &mut out);
         assert!(out.max_abs_diff(&lr.apply(&a)) < 1e-5);
+    }
+
+    #[test]
+    fn apply_view_into_is_bit_identical_to_apply_rows() {
+        let mut rng = Pcg32::seeded(19);
+        let w = Mat::randn(12, 9, 1.0, &mut rng);
+        let a = Mat::randn(10, 12, 1.0, &mut rng);
+        let lr = LowRank::truncate(&w, 4);
+        let full = lr.apply(&a);
+        for (start, rows) in [(0usize, 10usize), (3, 4), (9, 1)] {
+            let mut tmp = vec![f32::NAN; rows * lr.rank()];
+            let mut out = vec![f32::NAN; rows * 9];
+            lr.apply_view_into(a.view_rows(start, rows), &mut tmp, &mut out);
+            assert_eq!(&out[..], &full.as_slice()[start * 9..(start + rows) * 9]);
+        }
     }
 
     #[test]

@@ -179,13 +179,33 @@ impl Mat {
         self.data.iter().filter(|&&x| x > 0.0).count() as f32 / self.data.len() as f32
     }
 
-    /// Extract a contiguous block of rows `[start, start+len)`.
+    /// Extract a contiguous block of rows `[start, start+len)` as an owned
+    /// copy. Hot paths that only need to *read* a row range should use
+    /// [`Mat::view_rows`] instead, which borrows without copying.
     pub fn rows_slice(&self, start: usize, len: usize) -> Mat {
         assert!(start + len <= self.rows, "row slice out of bounds");
         Mat {
             rows: len,
             cols: self.cols,
             data: self.data[start * self.cols..(start + len) * self.cols].to_vec(),
+        }
+    }
+
+    /// Borrow the whole matrix as a [`MatView`].
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// Borrow rows `[start, start+len)` as a [`MatView`] — no copy. This is
+    /// what the parallel estimator shards through on the serving hot path.
+    #[inline]
+    pub fn view_rows(&self, start: usize, len: usize) -> MatView<'_> {
+        assert!(start + len <= self.rows, "row view out of bounds");
+        MatView {
+            rows: len,
+            cols: self.cols,
+            data: &self.data[start * self.cols..(start + len) * self.cols],
         }
     }
 
@@ -206,6 +226,60 @@ impl Mat {
             .zip(&other.data)
             .map(|(&a, &b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+/// A borrowed row-range view into a [`Mat`]: same row-major layout, no
+/// ownership, no copy. Produced by [`Mat::view`] / [`Mat::view_rows`];
+/// consumed by the view-aware GEMM entry point
+/// ([`crate::linalg::matmul_view_into`]) and [`crate::linalg::LowRank`]'s
+/// `apply_view_into`, so parallel kernels can shard a batch without
+/// materializing each shard.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    /// Wrap a row-major buffer. Panics on length mismatch.
+    #[inline]
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> MatView<'a> {
+        assert_eq!(data.len(), rows * cols, "view length != rows*cols");
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Borrow row `r` of the viewed range.
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Materialize an owned copy (tests, cold paths).
+    pub fn to_mat(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
     }
 }
 
@@ -298,5 +372,30 @@ mod tests {
     #[should_panic(expected = "buffer length")]
     fn from_vec_checks_length() {
         let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn view_rows_matches_owned_slice_without_copying() {
+        property("view_rows == rows_slice", 32, |rng| {
+            let (r, c) = arb_shape(rng, 8);
+            let m = Mat::randn(r + 2, c, 1.0, rng);
+            let start = rng.index(r + 1);
+            let len = rng.index(r + 2 - start) + 1;
+            let view = m.view_rows(start, len);
+            assert_eq!(view.shape(), (len, c));
+            assert_eq!(view.to_mat(), m.rows_slice(start, len));
+            for i in 0..len {
+                assert_eq!(view.row(i), m.row(start + i));
+            }
+            // The view borrows the parent's storage — same address, no copy.
+            assert_eq!(view.as_slice().as_ptr(), m.row(start).as_ptr());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "row view out of bounds")]
+    fn view_rows_bounds_checked() {
+        let m = Mat::zeros(3, 2);
+        let _ = m.view_rows(2, 2);
     }
 }

@@ -15,7 +15,10 @@ pub mod gemm;
 pub mod svd;
 pub mod lowrank;
 
-pub use gemm::{matmul, matmul_auto, matmul_into, matmul_into_auto, matmul_into_par, matmul_par};
+pub use gemm::{
+    matmul, matmul_auto, matmul_into, matmul_into_auto, matmul_into_par, matmul_par,
+    matmul_view_into,
+};
 pub use lowrank::LowRank;
-pub use matrix::Mat;
+pub use matrix::{Mat, MatView};
 pub use svd::Svd;

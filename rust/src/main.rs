@@ -4,11 +4,21 @@
 //!   train       train a network (native engine), optionally with an
 //!               activation estimator in the loop
 //!   train-pjrt  train through the AOT train_step artifact (three-layer path)
-//!   serve       start the serving coordinator (native or PJRT backend)
+//!   serve       start the serving coordinator (native or PJRT backend);
+//!               loads the machine profile named by `autotune.profile_path`
+//!               (or `--autotune-profile`) and logs the per-layer dispatch
+//!               threshold table, falling back to online calibration
+//!   calibrate   measure per-layer dense-vs-masked dispatch thresholds for a
+//!               profile's architecture on this machine and persist them as
+//!               a machine-profile JSON (`autotune.profile_path`); `serve`
+//!               loads the file at startup so the measurement happens once
+//!               per machine, not once per process. Budget via
+//!               `--budget-ms` / `autotune.budget_ms`.
 //!   experiment  regenerate a paper table/figure (fig2…fig6, table2, table3,
 //!               speedup, all)
 //!   bench       measured dense-vs-masked-vs-parallel sweep; writes
-//!               machine-readable BENCH_parallel.json
+//!               machine-readable BENCH_parallel.json including fitted
+//!               per-layer thresholds for the chosen profile's shapes
 //!   bench-flops print the §3.4 analytic cost model for an architecture
 //!   datagen     dump a synthetic corpus to .npy (debugging/external use)
 //!
@@ -20,6 +30,7 @@
 //! other (numerically equivalent, last-bit-different) kernel near the
 //! threshold density.
 
+use condcomp::autotune::{Autotuner, MachineProfile};
 use condcomp::cli::{Command, OptSpec, Parsed};
 use condcomp::config::{EstimatorConfig, ExperimentProfile};
 use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
@@ -50,7 +61,7 @@ fn usage() -> String {
     format!(
         "condcomp {} — conditional feedforward computation via low-rank sign estimation\n\
          \n\
-         usage: condcomp <train|train-pjrt|serve|experiment|bench|bench-flops|datagen> [options]\n\
+         usage: condcomp <train|train-pjrt|serve|calibrate|experiment|bench|bench-flops|datagen> [options]\n\
          \n\
          run `condcomp <subcommand> --help` for options.\n",
         condcomp::VERSION
@@ -101,6 +112,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "train" => cmd_train(rest),
         "train-pjrt" => cmd_train_pjrt(rest),
         "serve" => cmd_serve(rest),
+        "calibrate" => cmd_calibrate(rest),
         "experiment" => cmd_experiment(rest),
         "bench" => cmd_bench(rest),
         "bench-flops" => cmd_bench_flops(rest),
@@ -212,6 +224,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt(OptSpec::value("train-epochs", "epochs to train before serving").with_default("2"))
         .opt(OptSpec::value("max-wait-ms", "dynamic batching window").with_default("2"))
         .opt(OptSpec::value("workers", "worker threads").with_default("1"))
+        .opt(OptSpec::value(
+            "autotune-profile",
+            "machine profile from `condcomp calibrate` (default: autotune.profile_path)",
+        ))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
     if parsed.flag("help") {
@@ -240,13 +256,47 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     };
     let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
     let backend = Arc::new(NativeBackend::new(net, est, 64));
-    // Measure the dense-vs-masked dispatch threshold on this machine's pool.
-    let policy = backend.calibrate_dispatch();
-    eprintln!(
-        "dispatch calibrated: cost ratio {:.2}, masked wins below α = {:.3}",
-        policy.cost_ratio,
-        policy.density_threshold()
-    );
+    // Per-layer dispatch thresholds: persisted machine profile first, then
+    // online calibration, then (per layer, inside the table) the global
+    // default with a one-time warning.
+    let profile_path = parsed
+        .get("autotune-profile")
+        .map(str::to_string)
+        .or_else(|| profile.autotune.profile_path.clone());
+    let budget_ms = profile.autotune.budget_ms;
+    let table = match &profile_path {
+        Some(p) if Path::new(p).exists() => match MachineProfile::load(Path::new(p))
+            .and_then(|mp| backend.apply_profile(&mp, p))
+        {
+            Ok(table) => {
+                eprintln!("dispatch: per-layer thresholds loaded from {p}");
+                table
+            }
+            Err(e) => {
+                eprintln!(
+                    "dispatch: machine profile {p} rejected ({e}); \
+                     falling back to online calibration ({budget_ms} ms)"
+                );
+                backend.calibrate_dispatch(budget_ms)
+            }
+        },
+        Some(p) => {
+            eprintln!(
+                "dispatch: no machine profile at {p} (run `condcomp calibrate` to create \
+                 one); online calibration ({budget_ms} ms)…"
+            );
+            backend.calibrate_dispatch(budget_ms)
+        }
+        None => {
+            eprintln!(
+                "dispatch: autotune.profile_path not set; online calibration ({budget_ms} ms)…"
+            );
+            backend.calibrate_dispatch(budget_ms)
+        }
+    };
+    for line in table.summary_lines() {
+        eprintln!("dispatch: {line}");
+    }
     let server = Server::start(
         backend,
         ServerConfig {
@@ -262,6 +312,60 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `condcomp calibrate` — measure per-layer dense-vs-masked dispatch
+/// thresholds for a profile's architecture on this machine and persist them
+/// as a machine-profile JSON. Calibration depends only on the layer shapes
+/// (not the weight values), so no training happens here; `serve` loads the
+/// file at startup and the measurement is paid once per machine.
+fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new(
+        "calibrate",
+        "fit per-layer dispatch thresholds; write a machine profile",
+    ))
+    .opt(OptSpec::value(
+        "out",
+        "profile output path (default: autotune.profile_path, else condcomp-profile.json)",
+    ))
+    .opt(OptSpec::value(
+        "budget-ms",
+        "total calibration wall-clock budget (default: autotune.budget_ms)",
+    ))
+    .opt(OptSpec::value("batch", "microbenchmark batch rows").with_default("64"))
+    .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let profile = profile_from(&parsed)?;
+    let threads = apply_threads(&parsed, profile.train.threads)?;
+    let budget_ms = parsed
+        .get_usize("budget-ms")?
+        .map(|v| v as u64)
+        .unwrap_or(profile.autotune.budget_ms);
+    let out_path = parsed
+        .get("out")
+        .map(str::to_string)
+        .or_else(|| profile.autotune.profile_path.clone())
+        .unwrap_or_else(|| "condcomp-profile.json".to_string());
+
+    let mut tuner = Autotuner::with_budget_ms(budget_ms.max(1));
+    tuner.batch = parsed.get_usize("batch")?.unwrap_or(64).max(1);
+    eprintln!(
+        "calibrating {} ({:?}): {} hidden layers on {threads} threads, budget {budget_ms} ms",
+        profile.name,
+        profile.net.layers,
+        Autotuner::hidden_shapes(&profile.net.layers).len()
+    );
+    let machine = tuner.calibrate_model(&profile.net.layers, condcomp::parallel::global());
+    for line in machine.summary_lines() {
+        println!("{line}");
+    }
+    machine.save(Path::new(&out_path))?;
+    println!("wrote {out_path}");
+    Ok(())
 }
 
 fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
@@ -295,13 +399,15 @@ fn cmd_experiment(args: &[String]) -> anyhow::Result<()> {
 
 /// `condcomp bench` — the measured dense-vs-masked-vs-parallel sweep
 /// (α ∈ {0.05, 0.25, 0.5, 1.0} × threads ∈ {1, N}), written as
-/// machine-readable JSON including the measured dispatch threshold.
+/// machine-readable JSON including the fitted per-layer dispatch thresholds
+/// for the chosen profile's layer shapes.
 fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("bench", "dense-vs-masked-vs-parallel wall-clock sweep")
         .opt(OptSpec::value("out", "output JSON path").with_default("BENCH_parallel.json"))
         .opt(OptSpec::value("dim", "square GEMM dimension").with_default("512"))
         .opt(OptSpec::value("batch", "masked-layer batch rows").with_default("64"))
         .opt(OptSpec::value("threads", "compute-pool threads for the parallel arm (0 = auto)").with_default("0"))
+        .opt(OptSpec::value("profile", "profile whose layer shapes get per-layer thresholds").with_default("mnist-small"))
         .opt(OptSpec::flag("quick", "shorter measurement budget"))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
@@ -320,7 +426,13 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
     } else {
         condcomp::bench::BenchConfig::default()
     };
-    let sweep = condcomp::bench::sweep::run_parallel_sweep(&cfg, dim, batch, threads);
+    let prof_name = parsed.get("profile").unwrap_or("mnist-small");
+    let layer_sizes = ExperimentProfile::by_name(prof_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile '{prof_name}'"))?
+        .net
+        .layers;
+    let sweep =
+        condcomp::bench::sweep::run_parallel_sweep(&cfg, dim, batch, threads, &layer_sizes);
     for line in sweep.report_lines() {
         println!("{line}");
     }
