@@ -38,13 +38,15 @@ fn main() {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_wait: std::time::Duration::from_millis(2),
-            workers: 1,
-            threads: 0,
+            ..ServerConfig::default() // shards: 0 → derived from the thread budget
         },
     )
     .expect("server start");
     let addr = server.local_addr;
-    println!("server on {addr}; {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests per mode");
+    println!(
+        "server on {addr} ({} batcher shard(s)); {CLIENTS} clients × {REQUESTS_PER_CLIENT} requests per mode",
+        server.num_shards()
+    );
 
     for mode in [Mode::Control, Mode::ConditionalAe] {
         let t0 = Instant::now();

@@ -54,8 +54,8 @@ fn main() {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_wait: std::time::Duration::from_millis(1),
-            workers: 1,
-            threads: 0,
+            shards: 1,
+            ..ServerConfig::default()
         },
     )
     .expect("server");

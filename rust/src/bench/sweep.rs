@@ -15,10 +15,16 @@
 use super::{bench_with_units, BenchConfig, BenchResult};
 use crate::autotune::{Autotuner, LayerThreshold};
 use crate::condcomp::{DispatchPolicy, MaskedLayer};
+use crate::config::{EstimatorConfig, NetConfig};
+use crate::coordinator::server::Client;
+use crate::coordinator::{NativeBackend, Server, ServerConfig};
+use crate::estimator::SignEstimatorSet;
 use crate::io::json::Json;
 use crate::linalg::{matmul_into, matmul_into_par, Mat};
+use crate::nn::Mlp;
 use crate::parallel::ThreadPool;
 use crate::util::Pcg32;
+use std::sync::Arc;
 
 /// One measured configuration.
 #[derive(Clone, Debug)]
@@ -60,6 +66,35 @@ impl SweepRow {
     }
 }
 
+/// One serving-throughput measurement at a fixed batcher shard count: the
+/// loopback arm of the sweep (real `Server` + TCP `Client`s), so
+/// `BENCH_parallel.json` records how throughput scales with `--shards`.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    /// Batcher shards the server ran with.
+    pub shards: usize,
+    /// Concurrent loopback clients.
+    pub clients: usize,
+    /// Total predict requests completed (all clients).
+    pub requests: usize,
+    /// Wall-clock for the whole run.
+    pub elapsed_s: f64,
+    /// Requests per second.
+    pub rps: f64,
+}
+
+impl ShardRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("rps", Json::Num(self.rps)),
+        ])
+    }
+}
+
 /// The complete sweep result.
 #[derive(Clone, Debug)]
 pub struct ParallelSweep {
@@ -78,6 +113,8 @@ pub struct ParallelSweep {
     /// shapes (the autotune harness's quick fit — `condcomp calibrate`
     /// runs the same fit under a configurable budget and persists it).
     pub per_layer: Vec<LayerThreshold>,
+    /// Serving throughput at each measured batcher shard count.
+    pub shard_sweep: Vec<ShardRow>,
 }
 
 /// Densities the sweep measures (the issue's α grid).
@@ -204,6 +241,20 @@ pub fn run_parallel_sweep(
         Vec::new()
     };
 
+    // --- serving throughput vs batcher shard count ----------------------
+    // Loopback arm: a real Server + concurrent TCP clients per shard count,
+    // so the JSON records whether sharding the batcher moves end-to-end
+    // request throughput (it should, on a multi-core runner; on one core
+    // the column documents the overhead instead).
+    let mut shard_counts = vec![1usize, 2, threads_max];
+    shard_counts.sort_unstable();
+    shard_counts.dedup();
+    let requests_per_client = if cfg.measure_s < 0.2 { 5 } else { 25 };
+    let shard_sweep = shard_counts
+        .into_iter()
+        .map(|shards| measure_shard_throughput(shards, 4, requests_per_client))
+        .collect();
+
     ParallelSweep {
         dim,
         batch,
@@ -213,6 +264,62 @@ pub fn run_parallel_sweep(
         measured_cost_ratio,
         density_threshold: policy.density_threshold(),
         per_layer,
+        shard_sweep,
+    }
+}
+
+/// Start a loopback server with `shards` batcher shards and drive it with
+/// `clients` concurrent connections issuing single-row conditional predicts.
+/// The model is a fixed small MLP — the point is coordinator scaling, not
+/// kernel time, so layer work is kept light relative to queueing.
+fn measure_shard_throughput(shards: usize, clients: usize, per_client: usize) -> ShardRow {
+    let mut rng = Pcg32::seeded(0x5AD5);
+    let net = Mlp::init(
+        &NetConfig { layers: vec![24, 32, 24, 8], weight_sigma: 0.3, bias_init: 0.1 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 3);
+    let backend = Arc::new(NativeBackend::new(net, est, 32));
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: std::time::Duration::from_millis(1),
+            shards,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("shard-sweep server");
+    let addr = server.local_addr;
+
+    let t0 = crate::util::Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("loopback connect");
+                let mut rng = Pcg32::new(c as u64, 0xBE);
+                let mut done = 0usize;
+                for _ in 0..per_client {
+                    let x = Mat::randn(1, 24, 0.5, &mut rng);
+                    let resp = client
+                        .predict(x, crate::coordinator::protocol::Mode::ConditionalAe)
+                        .expect("loopback predict");
+                    assert!(resp.ok, "{:?}", resp.error);
+                    done += 1;
+                }
+                done
+            })
+        })
+        .collect();
+    let requests: usize = handles.into_iter().map(|h| h.join().expect("client thread")).sum();
+    let elapsed_s = t0.elapsed_s();
+    server.shutdown();
+    ShardRow {
+        shards,
+        clients,
+        requests,
+        elapsed_s,
+        rps: requests as f64 / elapsed_s.max(1e-9),
     }
 }
 
@@ -257,6 +364,12 @@ impl ParallelSweep {
                 lt.layer, lt.d, lt.h, lt.cost_ratio, lt.alpha_star
             ));
         }
+        for row in &self.shard_sweep {
+            lines.push(format!(
+                "serve loopback: shards={} clients={} → {:.0} req/s ({} requests in {:.3}s)",
+                row.shards, row.clients, row.rps, row.requests, row.elapsed_s
+            ));
+        }
         lines
     }
 
@@ -279,6 +392,10 @@ impl ParallelSweep {
             (
                 "per_layer_thresholds",
                 Json::Arr(self.per_layer.iter().map(LayerThreshold::to_json).collect()),
+            ),
+            (
+                "serve_shard_sweep",
+                Json::Arr(self.shard_sweep.iter().map(|r| r.to_json()).collect()),
             ),
             (
                 "rows",
@@ -311,9 +428,26 @@ mod tests {
             assert!((0.0..=1.0).contains(&lt.alpha_star));
         }
 
+        // Shard column: {1, 2, threads_max=2} dedups to {1, 2}; every row
+        // completed all of its requests.
+        assert_eq!(
+            sweep.shard_sweep.iter().map(|r| r.shards).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        for row in &sweep.shard_sweep {
+            assert_eq!(row.requests, row.clients * 5, "quick run: 5 requests per client");
+            assert!(row.rps > 0.0 && row.rps.is_finite());
+        }
+
         let json = sweep.to_json();
         let parsed = Json::parse(&json.to_string()).expect("self-parse");
         assert!(parsed.get("density_threshold").and_then(|v| v.as_f64()).is_some());
+        let shard_rows = parsed
+            .get("serve_shard_sweep")
+            .and_then(|v| v.as_arr())
+            .expect("serve_shard_sweep");
+        assert_eq!(shard_rows.len(), 2);
+        assert!(shard_rows.iter().all(|r| r.get("shards").is_some() && r.get("rps").is_some()));
         let per_layer = parsed
             .get("per_layer_thresholds")
             .and_then(|v| v.as_arr())

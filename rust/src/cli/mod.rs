@@ -24,6 +24,31 @@
 //! `serve` verifies the profile's model fingerprint, logs the per-layer
 //! α* table it loaded, and falls back to online calibration
 //! (`autotune.budget_ms`) when the file is missing or rejected.
+//!
+//! # `condcomp serve` usage
+//!
+//! The serving coordinator batches requests through a **sharded** front-end:
+//! `--shards N` runs N independent queues, each drained by a dedicated
+//! executor worker on its own slice of the compute-thread budget, so heavy
+//! concurrent traffic does not serialize through one queue lock:
+//!
+//! ```text
+//! # Two batcher shards, round-robin routing (the default policy):
+//! condcomp serve --shards 2
+//!
+//! # Derive the shard count from the thread budget (one shard per two pool
+//! # threads, capped at 8) and route to the shallowest queue:
+//! condcomp serve --shards 0 --router least-depth
+//!
+//! # Config-file equivalents ([server] section / --set overrides):
+//! condcomp serve --set server.shards=4 --set server.router=round-robin
+//! ```
+//!
+//! Per-request outputs are bit-identical for any `--shards` value (batches
+//! run the same kernels in the same accumulation order wherever they land);
+//! the knob trades queueing contention against per-shard batching
+//! opportunity. Per-shard queue depth, batch counts and predict latency are
+//! exported through the `stats` op as `shard<i>_*` metrics.
 
 use std::collections::BTreeMap;
 

@@ -8,6 +8,7 @@ pub mod toml_lite;
 pub mod schema;
 
 pub use schema::{
-    AutotuneConfig, DatasetKind, EstimatorConfig, ExperimentProfile, NetConfig, TrainConfig,
+    AutotuneConfig, DatasetKind, EstimatorConfig, ExperimentProfile, NetConfig, ServerSettings,
+    TrainConfig,
 };
 pub use toml_lite::TomlDoc;

@@ -112,6 +112,27 @@ impl Default for AutotuneConfig {
     }
 }
 
+/// Serving-coordinator knobs (the `[server]` config section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerSettings {
+    /// Batcher shards (`server.shards` / CLI `--shards`): independent
+    /// request queues, each drained by a dedicated executor worker on its
+    /// own slice of the compute-thread budget. 0 = derive from the budget
+    /// (one shard per two pool threads, capped at 8).
+    pub shards: usize,
+    /// Shard routing policy (`server.router` / CLI `--router`):
+    /// "round-robin" (default) or "least-depth". Kept as a string here so
+    /// the config layer stays independent of the coordinator; `serve`
+    /// validates it via `RouterKind::parse`.
+    pub router: String,
+}
+
+impl Default for ServerSettings {
+    fn default() -> ServerSettings {
+        ServerSettings { shards: 0, router: "round-robin".into() }
+    }
+}
+
 /// Per-layer activation-estimator configuration (§3.1–§3.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct EstimatorConfig {
@@ -174,6 +195,8 @@ pub struct ExperimentProfile {
     pub train: TrainConfig,
     /// Autotune subsystem knobs (profile path, calibration budget).
     pub autotune: AutotuneConfig,
+    /// Serving-coordinator knobs (batcher shards, shard router).
+    pub server: ServerSettings,
     /// Training/validation/test example counts for the synthetic corpus.
     pub n_train: usize,
     pub n_valid: usize,
@@ -207,6 +230,7 @@ impl ExperimentProfile {
                 threads: 0,
             },
             autotune: AutotuneConfig::default(),
+            server: ServerSettings::default(),
             n_train: 50_000,
             n_valid: 10_000,
             n_test: 10_000,
@@ -239,6 +263,7 @@ impl ExperimentProfile {
                 threads: 0,
             },
             autotune: AutotuneConfig::default(),
+            server: ServerSettings::default(),
             n_train: 590_000,
             n_valid: 14_388,
             n_test: 26_032,
@@ -393,6 +418,12 @@ impl ExperimentProfile {
         if let Some(x) = doc.get_usize("autotune.budget_ms") {
             self.autotune.budget_ms = x as u64;
         }
+        if let Some(x) = doc.get_usize("server.shards") {
+            self.server.shards = x;
+        }
+        if let Some(s) = doc.get_str("server.router") {
+            self.server.router = s.to_string();
+        }
         if let Some(x) = doc.get_usize("data.n_train") {
             self.n_train = x;
         }
@@ -480,6 +511,18 @@ mod tests {
         p.apply_overrides(&doc);
         assert_eq!(p.autotune.profile_path.as_deref(), Some("profiles/ci.json"));
         assert_eq!(p.autotune.budget_ms, 500);
+    }
+
+    #[test]
+    fn server_defaults_and_overrides() {
+        let mut p = ExperimentProfile::mnist_tiny();
+        assert_eq!(p.server, ServerSettings::default());
+        assert_eq!(p.server.shards, 0, "0 = derive from the thread budget");
+        assert_eq!(p.server.router, "round-robin");
+        let doc = TomlDoc::parse("[server]\nshards = 4\nrouter = \"least-depth\"").unwrap();
+        p.apply_overrides(&doc);
+        assert_eq!(p.server.shards, 4);
+        assert_eq!(p.server.router, "least-depth");
     }
 
     #[test]

@@ -6,12 +6,78 @@ use crate::autotune::{Autotuner, MachineProfile};
 use crate::condcomp::{DispatchPolicy, FlopBreakdown, Kernel, MaskedLayer, PolicyTable};
 use crate::estimator::SignEstimatorSet;
 use crate::linalg::{matmul_into_par, Mat};
-use crate::nn::mlp::{add_bias, NoGater};
+use crate::nn::activations::relu_inplace;
+use crate::nn::mlp::add_bias;
 use crate::nn::Mlp;
 use crate::parallel::ThreadPool;
 use crate::runtime::ModelRuntime;
 use anyhow::Result;
 use std::sync::{Mutex, RwLock};
+
+/// A pool of recycled activation buffers: the serving hot path allocates
+/// nothing per batch after warmup. Each shard executor owns one arena
+/// outright (no lock on the per-batch path); the backend keeps a shared,
+/// mutex-guarded arena for callers that predict without an executor context.
+pub struct ScratchArena {
+    bufs: Vec<Vec<f32>>,
+    cap: usize,
+}
+
+impl ScratchArena {
+    /// Cap on recycled buffers (bounds idle memory; beyond this they are
+    /// simply dropped).
+    pub const DEFAULT_CAP: usize = 8;
+
+    pub fn new() -> ScratchArena {
+        ScratchArena::with_capacity(ScratchArena::DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> ScratchArena {
+        ScratchArena { bufs: Vec::new(), cap: cap.max(1) }
+    }
+
+    /// A buffer of exactly `len` elements. Resize only (no clear): every
+    /// consumer overwrites the whole buffer, so re-zeroing a recycled prefix
+    /// would be pure memset tax.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.bufs.pop().unwrap_or_default();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Hand a buffer back for reuse (dropped once the arena is full).
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if self.bufs.len() < self.cap {
+            self.bufs.push(buf);
+        }
+    }
+
+    /// Number of buffers currently parked.
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Merge another arena's buffers into this one, respecting the cap
+    /// (shared-arena callers return their borrowed buffers this way).
+    pub fn absorb(&mut self, mut other: ScratchArena) {
+        while self.bufs.len() < self.cap {
+            match other.bufs.pop() {
+                Some(buf) => self.bufs.push(buf),
+                None => break,
+            }
+        }
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> ScratchArena {
+        ScratchArena::new()
+    }
+}
 
 /// Which implementation serves the request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,6 +97,23 @@ pub trait Backend: Send + Sync {
     /// Forward `x` in the given mode; returns logits and, for the
     /// conditional mode, the achieved FLOP speedup vs dense (Eq. 11).
     fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)>;
+    /// Forward `x` on a caller-owned compute pool with a caller-owned
+    /// scratch arena — the shard-executor entry point: each shard worker
+    /// brings its partitioned slice of the thread budget and its private
+    /// buffer arena, so concurrent shards share neither locks nor buffers.
+    /// Results must be identical to [`Backend::predict`] (the kernels are
+    /// thread-count-invariant); the default ignores the context for
+    /// backends without pool-aware kernels.
+    fn predict_on(
+        &self,
+        x: &Mat,
+        mode: Mode,
+        pool: &ThreadPool,
+        arena: &mut ScratchArena,
+    ) -> Result<(Mat, Option<f64>)> {
+        let (_, _) = (pool, arena);
+        self.predict(x, mode)
+    }
     /// Recompute estimator factors from the current weights.
     fn refresh(&self) -> Result<()>;
     /// Per-layer dispatch thresholds (α*), if this backend dispatches
@@ -54,14 +137,11 @@ pub struct NativeBackend {
     /// ([`NativeBackend::calibrate_dispatch`]); uncalibrated layers fall
     /// back to the conservative default with a one-time warning.
     dispatch: RwLock<PolicyTable>,
-    /// Recycled activation buffers: the conditional hot path allocates
-    /// nothing per batch after warmup.
-    scratch: Mutex<Vec<Vec<f32>>>,
+    /// Recycled activation buffers for pool-less callers
+    /// ([`Backend::predict`]); shard executors bypass this entirely by
+    /// bringing their own arena to [`Backend::predict_on`].
+    scratch: Mutex<ScratchArena>,
 }
-
-/// Cap on recycled scratch buffers (bounds idle memory; beyond this they
-/// are simply dropped).
-const SCRATCH_CAP: usize = 8;
 
 impl NativeBackend {
     pub fn new(net: Mlp, estimators: SignEstimatorSet, max_batch: usize) -> NativeBackend {
@@ -75,7 +155,7 @@ impl NativeBackend {
             estimators: RwLock::new(estimators),
             max_batch,
             dispatch: RwLock::new(PolicyTable::uncalibrated(hidden)),
-            scratch: Mutex::new(Vec::new()),
+            scratch: Mutex::new(ScratchArena::new()),
         }
     }
 
@@ -153,23 +233,8 @@ impl NativeBackend {
         self.dispatch.read().unwrap().clone()
     }
 
-    fn take_buf(&self, len: usize) -> Vec<f32> {
-        let recycled = self.scratch.lock().unwrap().pop();
-        let mut buf = recycled.unwrap_or_default();
-        // Resize only (no clear): every consumer overwrites the whole
-        // buffer, so re-zeroing a recycled prefix would be pure memset tax.
-        buf.resize(len, 0.0);
-        buf
-    }
-
-    fn put_buf(&self, buf: Vec<f32>) {
-        let mut scratch = self.scratch.lock().unwrap();
-        if scratch.len() < SCRATCH_CAP {
-            scratch.push(buf);
-        }
-    }
-
-    /// Conditional forward with flop accounting (shared with experiments).
+    /// Conditional forward with flop accounting (shared with experiments),
+    /// on a caller-chosen pool with caller-owned scratch.
     ///
     /// Per hidden layer: predict the mask (row shards in parallel), read its
     /// density α, and let the dispatch policy pick the kernel — masked
@@ -177,13 +242,17 @@ impl NativeBackend {
     /// mask applied afterwards) above it. The two kernels compute the same
     /// function (same sums, different float accumulation order); the policy
     /// only changes which one is faster.
-    fn forward_cond(&self, x: &Mat) -> (Mat, FlopBreakdown) {
+    fn forward_cond(
+        &self,
+        x: &Mat,
+        pool: &ThreadPool,
+        arena: &mut ScratchArena,
+    ) -> (Mat, FlopBreakdown) {
         let est = self.estimators.read().unwrap();
         // Snapshot the (small) table instead of holding the read guard
         // across the whole forward — a concurrent recalibration writer
         // would otherwise stall every in-flight batch behind it.
         let table = self.policy_table();
-        let pool = self.pool();
         let mut flops = FlopBreakdown::default();
         let depth = self.masked.len();
         let mut a = x.clone();
@@ -192,7 +261,7 @@ impl NativeBackend {
             let layer = &self.masked[l];
             let (n, h) = (a.rows(), layer.out_dim());
             let alpha = mask.density() as f64;
-            let mut out = Mat::from_vec(n, h, self.take_buf(n * h));
+            let mut out = Mat::from_vec(n, h, arena.take(n * h));
             // Per-layer threshold: each layer's shape has its own fitted α*.
             let computed = match table.policy_for(l).decide(n, layer.in_dim(), h, alpha) {
                 Kernel::MaskedParallel => layer.forward_masked_par(&a, &mask, &mut out, pool),
@@ -219,14 +288,14 @@ impl NativeBackend {
             let prev = std::mem::replace(&mut a, out);
             if l > 0 {
                 // `prev` owns a scratch buffer (layer-0 input is the request).
-                self.put_buf(prev.into_vec());
+                arena.put(prev.into_vec());
             }
         }
         let last = &self.masked[depth - 1];
         let mut logits = Mat::from_vec(
             a.rows(),
             last.out_dim(),
-            self.take_buf(a.rows() * last.out_dim()),
+            arena.take(a.rows() * last.out_dim()),
         );
         matmul_into_par(&a, &self.net.weights[depth - 1], &mut logits, pool);
         add_bias(&mut logits, &last.bias);
@@ -238,9 +307,32 @@ impl NativeBackend {
             a.rows() * last.out_dim(),
         ));
         if depth > 1 {
-            self.put_buf(a.into_vec());
+            arena.put(a.into_vec());
         }
         (logits, flops)
+    }
+
+    /// Dense control forward on a caller-chosen pool with caller-owned
+    /// scratch. Bit-identical to `Mlp::logits(x, &NoGater)`: same GEMM
+    /// accumulation order (`matmul_into_par` ≡ the serial oracle for any
+    /// thread count), same bias-then-ReLU per hidden layer.
+    fn forward_dense(&self, x: &Mat, pool: &ThreadPool, arena: &mut ScratchArena) -> Mat {
+        let depth = self.net.depth();
+        let mut a = x.clone();
+        for l in 0..depth {
+            let (n, h) = (a.rows(), self.net.weights[l].cols());
+            let mut out = Mat::from_vec(n, h, arena.take(n * h));
+            matmul_into_par(&a, &self.net.weights[l], &mut out, pool);
+            add_bias(&mut out, &self.net.biases[l]);
+            if l < depth - 1 {
+                relu_inplace(&mut out);
+            }
+            let prev = std::mem::replace(&mut a, out);
+            if l > 0 {
+                arena.put(prev.into_vec());
+            }
+        }
+        a
     }
 }
 
@@ -258,10 +350,26 @@ impl Backend for NativeBackend {
     }
 
     fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)> {
+        // Borrow the shared arena by value (brief lock), run on the global
+        // pool, then hand the buffers back — concurrent pool-less callers
+        // simply start from an empty arena and allocate.
+        let mut arena = std::mem::take(&mut *self.scratch.lock().unwrap());
+        let out = self.predict_on(x, mode, crate::parallel::global(), &mut arena);
+        self.scratch.lock().unwrap().absorb(arena);
+        out
+    }
+
+    fn predict_on(
+        &self,
+        x: &Mat,
+        mode: Mode,
+        pool: &ThreadPool,
+        arena: &mut ScratchArena,
+    ) -> Result<(Mat, Option<f64>)> {
         match mode {
-            Mode::Control => Ok((self.net.logits(x, &NoGater), None)),
+            Mode::Control => Ok((self.forward_dense(x, pool, arena), None)),
             Mode::ConditionalAe => {
-                let (logits, flops) = self.forward_cond(x);
+                let (logits, flops) = self.forward_cond(x, pool, arena);
                 Ok((logits, Some(flops.speedup())))
             }
         }
@@ -417,6 +525,52 @@ mod tests {
             let (again, _) = be.predict(&x, Mode::ConditionalAe).unwrap();
             assert_eq!(again.as_slice(), first.as_slice(), "reused buffers leaked state");
         }
+    }
+
+    /// The shard-executor entry point must compute exactly what the
+    /// pool-less path computes, for any pool size and a fresh arena — this
+    /// is the kernel-level half of the "outputs are bit-identical across
+    /// shard counts" serving invariant.
+    #[test]
+    fn predict_on_is_bit_identical_for_any_pool_and_arena() {
+        let be = native();
+        let mut rng = Pcg32::seeded(31);
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        for mode in [Mode::Control, Mode::ConditionalAe] {
+            let (want, _) = be.predict(&x, mode).unwrap();
+            for threads in [1usize, 2, 7] {
+                let pool = crate::parallel::ThreadPool::new(threads);
+                let mut arena = ScratchArena::new();
+                // Twice per pool: a cold arena and a warm (recycled) one.
+                for _ in 0..2 {
+                    let (got, _) = be.predict_on(&x, mode, &pool, &mut arena).unwrap();
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "mode {:?} threads {threads} diverged",
+                        mode
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_arena_recycles_and_caps() {
+        let mut arena = ScratchArena::with_capacity(2);
+        let a = arena.take(8);
+        assert_eq!(a.len(), 8);
+        arena.put(a);
+        arena.put(vec![0.0; 4]);
+        arena.put(vec![0.0; 16]); // over cap → dropped
+        assert_eq!(arena.len(), 2);
+        // Recycled buffer is resized to the requested length.
+        let b = arena.take(3);
+        assert_eq!(b.len(), 3);
+        let mut other = ScratchArena::new();
+        other.put(vec![0.0; 1]);
+        arena.absorb(other);
+        assert_eq!(arena.len(), 2, "absorb respects the cap");
     }
 
     #[test]

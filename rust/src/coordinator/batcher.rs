@@ -4,16 +4,24 @@
 //! Policy: a worker blocks until at least one item is queued, then waits up
 //! to `max_wait` for more, closing the batch early once `max_batch` items of
 //! the same mode are available. Items are never reordered within a mode and
-//! never dropped.
+//! never dropped: accepted items always drain (including through shutdown),
+//! and a closed batcher hands new items back to the caller instead of
+//! accepting them into a queue nothing will drain.
+//!
+//! The serving coordinator runs N of these behind a router
+//! ([`super::sharded::ShardedBatcher`]); this type stays the single-queue
+//! primitive.
 
 use super::protocol::Mode;
 use crate::linalg::Mat;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One queued predict item (a single request, possibly multi-row).
+#[derive(Debug)]
 pub struct BatchItem {
     pub id: u64,
     pub mode: Mode,
@@ -29,7 +37,10 @@ pub struct DynamicBatcher {
     available: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
-    closed: Mutex<bool>,
+    /// Monotonic (false → true once). Checked under the queue lock where
+    /// the push/drain invariant needs it, so a plain atomic suffices — no
+    /// second mutex on the per-request hot path.
+    closed: AtomicBool,
 }
 
 impl DynamicBatcher {
@@ -40,14 +51,31 @@ impl DynamicBatcher {
             available: Condvar::new(),
             max_batch,
             max_wait,
-            closed: Mutex::new(false),
+            closed: AtomicBool::new(false),
         }
     }
 
-    /// Enqueue a request.
-    pub fn push(&self, item: BatchItem) {
-        self.queue.lock().unwrap().push_back(item);
+    /// Enqueue a request. After [`DynamicBatcher::close`] the item is handed
+    /// back instead of being queued — a closed batcher's queue is only ever
+    /// drained (shutdown ships what is already in flight), so silently
+    /// accepting the item would strand it with no worker to answer it. The
+    /// caller owns the rejected item and must reply to it.
+    pub fn push(&self, item: BatchItem) -> Result<(), BatchItem> {
+        // The closed check happens under the queue lock so it serializes
+        // against the drain's final empty-and-closed check (also under the
+        // queue lock): either this item is enqueued before the drain's last
+        // look at the queue (and ships), or the drain already saw
+        // closed=true — in which case queue-lock ordering plus the flag's
+        // monotonicity guarantees this load sees true too and the item is
+        // rejected. Never queued-after-drain and lost.
+        let mut q = self.queue.lock().unwrap();
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(item);
+        }
+        q.push_back(item);
+        drop(q);
         self.available.notify_one();
+        Ok(())
     }
 
     /// Number of queued items (diagnostics).
@@ -57,12 +85,12 @@ impl DynamicBatcher {
 
     /// Mark the batcher closed and wake all waiters (server shutdown).
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        self.closed.store(true, Ordering::Relaxed);
         self.available.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        *self.closed.lock().unwrap()
+        self.closed.load(Ordering::Relaxed)
     }
 
     /// Blocking: wait for the next batch. Returns `None` on shutdown.
@@ -147,7 +175,7 @@ mod tests {
         let mut rxs = Vec::new();
         for i in 0..4 {
             let (it, rx) = item(i, Mode::Control, 1);
-            b.push(it);
+            b.push(it).unwrap();
             rxs.push(rx);
         }
         let t0 = Instant::now();
@@ -161,7 +189,7 @@ mod tests {
     fn partial_batch_ships_after_max_wait() {
         let b = DynamicBatcher::new(8, Duration::from_millis(50));
         let (it, _rx) = item(1, Mode::Control, 1);
-        b.push(it);
+        b.push(it).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
@@ -174,9 +202,9 @@ mod tests {
         let (a, _r1) = item(1, Mode::Control, 1);
         let (c, _r2) = item(2, Mode::ConditionalAe, 1);
         let (d, _r3) = item(3, Mode::Control, 1);
-        b.push(a);
-        b.push(c);
-        b.push(d);
+        b.push(a).unwrap();
+        b.push(c).unwrap();
+        b.push(d).unwrap();
         let first = b.next_batch().unwrap();
         assert_eq!(first.len(), 1, "head is control; next item is ae → batch breaks");
         assert_eq!(first[0].mode, Mode::Control);
@@ -189,11 +217,28 @@ mod tests {
         let b = DynamicBatcher::new(16, Duration::from_millis(10));
         for i in 0..5 {
             let (it, _rx) = item(i, Mode::ConditionalAe, 1);
-            b.push(it);
+            b.push(it).unwrap();
         }
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.iter().map(|i| i.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn push_after_close_is_rejected_and_queued_items_still_drain() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(10));
+        let (before, _r1) = item(1, Mode::Control, 1);
+        b.push(before).unwrap();
+        b.close();
+        // Queued-before-close item still ships (shutdown drains)…
+        let (after, _r2) = item(2, Mode::Control, 1);
+        let rejected = b.push(after).expect_err("push after close must reject");
+        assert_eq!(rejected.id, 2, "rejected item handed back to the caller");
+        let batch = b.next_batch().expect("pre-close item drains");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1);
+        // …and once drained, the closed batcher yields None.
+        assert!(b.next_batch().is_none());
     }
 
     #[test]
@@ -211,8 +256,8 @@ mod tests {
         let b = DynamicBatcher::new(4, Duration::from_millis(300));
         let (a, _r1) = item(1, Mode::Control, 3);
         let (c, _r2) = item(2, Mode::Control, 3);
-        b.push(a);
-        b.push(c);
+        b.push(a).unwrap();
+        b.push(c).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         // Only the first item fits within max_batch=4 rows... but since 3 < 4

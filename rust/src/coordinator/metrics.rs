@@ -47,6 +47,37 @@ impl MetricsRegistry {
         g.gauges.insert(name.to_string(), value);
     }
 
+    /// Canonical key for a per-shard metric (`shard3_depth`, …). One naming
+    /// scheme shared by writers (shard executors) and readers (tests,
+    /// dashboards scraping the stats snapshot).
+    pub fn shard_key(shard: usize, name: &str) -> String {
+        format!("shard{shard}_{name}")
+    }
+
+    /// Per-shard gauge (queue depth after each drained batch, last batch
+    /// rows, …).
+    pub fn set_shard_gauge(&self, shard: usize, name: &str, value: f64) {
+        self.set_gauge(&MetricsRegistry::shard_key(shard, name), value);
+    }
+
+    pub fn shard_gauge(&self, shard: usize, name: &str) -> Option<f64> {
+        self.gauge(&MetricsRegistry::shard_key(shard, name))
+    }
+
+    /// Per-shard latency distribution (batch execution seconds).
+    pub fn observe_shard_latency(&self, shard: usize, name: &str, seconds: f64) {
+        self.observe_latency(&MetricsRegistry::shard_key(shard, name), seconds);
+    }
+
+    /// Per-shard counter (batches drained, rows executed, …).
+    pub fn incr_shard(&self, shard: usize, name: &str) {
+        self.add(&MetricsRegistry::shard_key(shard, name), 1);
+    }
+
+    pub fn shard_counter(&self, shard: usize, name: &str) -> u64 {
+        self.counter(&MetricsRegistry::shard_key(shard, name))
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
@@ -130,6 +161,25 @@ mod tests {
         let parsed = Json::parse(&s).unwrap();
         assert_eq!(parsed.get("counters").unwrap().get("a").unwrap().as_f64(), Some(1.0));
         assert!(parsed.get("latency").unwrap().get("p").is_some());
+    }
+
+    #[test]
+    fn per_shard_metrics_share_one_key_scheme() {
+        let m = MetricsRegistry::new();
+        m.set_shard_gauge(0, "depth", 3.0);
+        m.set_shard_gauge(2, "depth", 7.0);
+        m.incr_shard(2, "batches");
+        m.incr_shard(2, "batches");
+        m.observe_shard_latency(1, "predict", 0.004);
+        assert_eq!(m.shard_gauge(0, "depth"), Some(3.0));
+        assert_eq!(m.shard_gauge(2, "depth"), Some(7.0));
+        assert_eq!(m.shard_gauge(1, "depth"), None);
+        assert_eq!(m.shard_counter(2, "batches"), 2);
+        assert_eq!(m.gauge("shard2_depth"), Some(7.0), "writers and readers agree on keys");
+        assert!((m.mean_latency("shard1_predict").unwrap() - 0.004).abs() < 1e-12);
+        // Snapshot carries the per-shard keys.
+        let s = m.snapshot().to_string();
+        assert!(s.contains("shard2_depth") && s.contains("shard1_predict"), "{s}");
     }
 
     #[test]

@@ -17,19 +17,29 @@
 //! - a line-oriented **TCP JSON protocol** so external clients (and the
 //!   bundled load generator) can drive the server.
 //!
-//! Threads + channels (no async runtime offline): one acceptor, N worker
-//! threads around the shared engine, one batcher clock.
+//! Threads + channels (no async runtime offline): one acceptor, one
+//! executor worker per batcher shard around the shared engine.
+//!
+//! The batching front-end is **sharded** ([`ShardedBatcher`]): requests are
+//! routed (round-robin or least-depth) to one of `server.shards`
+//! independent queues, each drained by a dedicated executor that owns a
+//! recycled scratch arena and a partitioned slice of the compute-thread
+//! budget — so heavy concurrent traffic stops serializing through a single
+//! queue lock while per-request results stay bit-identical to the
+//! single-queue path.
 
 pub mod protocol;
 pub mod metrics;
 pub mod batcher;
+pub mod sharded;
 pub mod backend;
 pub mod server;
 pub mod scheduler;
 
-pub use backend::{Backend, BackendKind, NativeBackend};
+pub use backend::{Backend, BackendKind, NativeBackend, ScratchArena};
 pub use batcher::{BatchItem, DynamicBatcher};
 pub use metrics::MetricsRegistry;
 pub use protocol::{Request, Response};
 pub use server::{Server, ServerConfig};
+pub use sharded::{RouterKind, ShardRouter, ShardedBatcher};
 pub use scheduler::TrainingScheduler;

@@ -188,7 +188,11 @@ impl Response {
         Json::obj(fields).to_string()
     }
 
-    /// Parse a response line (client side).
+    /// Parse a response line (client side). Logits round-trip losslessly:
+    /// the serializer prints each f32 (widened exactly to f64) with Rust's
+    /// shortest-roundtrip formatting, so parse-back recovers the bits — the
+    /// e2e suite leans on this to assert cross-shard bit-identity through
+    /// the wire.
     pub fn parse(line: &str) -> Result<Response, String> {
         let v = Json::parse(line).map_err(|e| e.to_string())?;
         let id = v.get("id").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
@@ -198,16 +202,34 @@ impl Response {
             .and_then(|c| c.as_arr())
             .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
             .unwrap_or_default();
+        let logits = v.get("logits").and_then(|l| l.as_arr()).and_then(parse_logits);
         Ok(Response {
             id,
             ok,
             error: v.get("error").and_then(|e| e.as_str()).map(String::from),
             classes,
-            logits: None,
+            logits,
             latency_us: v.get("latency_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             payload: v.get("stats").cloned(),
         })
     }
+}
+
+/// Rectangular rows-of-floats → `Mat`; `None` on ragged or non-numeric rows
+/// (tolerated: logits are an optional response field).
+fn parse_logits(rows: &[Json]) -> Option<Mat> {
+    let first = rows.first()?.to_f32_vec()?;
+    let d = first.len();
+    let mut data = Vec::with_capacity(rows.len() * d);
+    data.extend_from_slice(&first);
+    for row in &rows[1..] {
+        let r = row.to_f32_vec()?;
+        if r.len() != d {
+            return None;
+        }
+        data.extend_from_slice(&r);
+    }
+    Some(Mat::from_vec(rows.len(), d, data))
 }
 
 #[cfg(test)]
@@ -279,5 +301,32 @@ mod tests {
         let back = Response::parse(&e.to_json_line()).unwrap();
         assert!(!back.ok);
         assert_eq!(back.error.as_deref(), Some("boom"));
+    }
+
+    /// Logits must survive the wire bit-exactly — awkward f32s included —
+    /// so loopback tests can assert cross-shard bit-identity on parsed
+    /// responses.
+    #[test]
+    fn logits_roundtrip_bit_exactly() {
+        let mut r = Response::ok(5);
+        let vals = vec![
+            0.1f32,
+            -1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            1.000_000_1,
+            -2.5e-7,
+            123_456.79,
+        ];
+        r.logits = Some(Mat::from_vec(2, 3, vals.clone()));
+        let back = Response::parse(&r.to_json_line()).unwrap();
+        let logits = back.logits.expect("logits parsed");
+        assert_eq!(logits.shape(), (2, 3));
+        for (got, want) in logits.as_slice().iter().zip(&vals) {
+            assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+        }
+        // Absent logits stay absent; ragged logits are dropped, not fatal.
+        assert!(Response::parse(&Response::ok(6).to_json_line()).unwrap().logits.is_none());
+        let ragged = r#"{"id":1,"ok":true,"latency_us":0,"logits":[[1,2],[3]]}"#;
+        assert!(Response::parse(ragged).unwrap().logits.is_none());
     }
 }

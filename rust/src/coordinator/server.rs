@@ -1,11 +1,22 @@
 //! The serving coordinator: TCP acceptor, per-connection readers/writers,
-//! worker pool around the shared backend, dynamic batching, metrics.
+//! a sharded dynamic batcher with one executor worker per shard, metrics.
+//!
+//! Execution model: the acceptor hands each connection to a reader thread;
+//! predict requests are routed by the [`ShardedBatcher`] onto one of N
+//! independent queues; each queue is drained by a dedicated executor that
+//! owns a recycled [`ScratchArena`] and a [`ThreadPool`] sized from its
+//! partition of the compute-thread budget
+//! ([`crate::parallel::partition_threads`]). Per-request outputs are
+//! bit-identical for any shard count: batches run the same kernels in the
+//! same serial accumulation order wherever they land.
 
-use super::backend::Backend;
-use super::batcher::{BatchItem, DynamicBatcher};
+use super::backend::{Backend, ScratchArena};
+use super::batcher::BatchItem;
 use super::metrics::MetricsRegistry;
 use super::protocol::{Mode, Request, Response};
+use super::sharded::{RouterKind, ShardedBatcher};
 use crate::linalg::Mat;
+use crate::parallel::ThreadPool;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -19,18 +30,21 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     /// Bind address, e.g. "127.0.0.1:0" (0 = ephemeral port).
     pub addr: String,
-    /// Dynamic-batching window.
+    /// Dynamic-batching window (per shard).
     pub max_wait: Duration,
-    /// Worker threads pulling batches. Workers only orchestrate: the
-    /// compute itself runs on the shared pool, so extra workers overlap
-    /// batching/IO with compute rather than oversubscribing cores.
-    pub workers: usize,
-    /// Size of the shared compute pool (0 = auto: available parallelism).
-    /// Applied at startup via `parallel::configure_global`; a no-op if the
-    /// process pool already exists (the `condcomp serve` CLI sizes the pool
-    /// earlier — before dispatch calibration — so there this field is
-    /// informational; it is the knob for embedders who call
-    /// [`Server::start`] before any kernel has touched the pool).
+    /// Batcher shards, each with its own queue + executor worker
+    /// (`server.shards` / `--shards`). 0 = derive from the compute-thread
+    /// budget: one shard per two pool threads, capped at 8 — enough queues
+    /// that the front door stops serializing, while each executor still
+    /// gets a multi-thread pool slice.
+    pub shards: usize,
+    /// How requests are placed onto shards (`server.router` / `--router`).
+    pub router: RouterKind,
+    /// Compute-thread budget (0 = auto: available parallelism). Sizes the
+    /// process-wide pool via `parallel::configure_global` (a no-op if the
+    /// pool already exists — the `condcomp serve` CLI sizes it earlier,
+    /// before dispatch calibration) and is then partitioned across the
+    /// shard executors' private pools.
     pub threads: usize,
 }
 
@@ -39,10 +53,16 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_wait: Duration::from_millis(2),
-            workers: 1,
+            shards: 0,
+            router: RouterKind::RoundRobin,
             threads: 0,
         }
     }
+}
+
+/// Shard count for a compute budget of `threads` when the operator passes 0.
+pub fn derive_shards(threads: usize) -> usize {
+    (threads / 2).clamp(1, 8)
 }
 
 /// A running server; dropping it (or calling [`Server::shutdown`]) stops the
@@ -50,7 +70,7 @@ impl Default for ServerConfig {
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     pub metrics: Arc<MetricsRegistry>,
-    batcher: Arc<DynamicBatcher>,
+    batcher: Arc<ShardedBatcher>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -65,7 +85,8 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(MetricsRegistry::new());
-        metrics.set_gauge("pool_threads", crate::parallel::global().threads() as f64);
+        let budget = crate::parallel::global().threads();
+        metrics.set_gauge("pool_threads", budget as f64);
         // Export the backend's per-layer dispatch thresholds so operators
         // can see which α* table a deployment is actually running.
         if let Some(thresholds) = backend.dispatch_thresholds() {
@@ -74,20 +95,56 @@ impl Server {
                 metrics.set_gauge(&format!("dispatch_alpha_star_l{l}"), *t);
             }
         }
-        let batcher = Arc::new(DynamicBatcher::new(backend.max_batch(), cfg.max_wait));
+        let num_shards = if cfg.shards == 0 { derive_shards(budget) } else { cfg.shards };
+        let slices = crate::parallel::partition_threads(budget, num_shards);
+        let batcher = Arc::new(ShardedBatcher::new(
+            num_shards,
+            backend.max_batch(),
+            cfg.max_wait,
+            cfg.router,
+        ));
+        metrics.set_gauge("shards", num_shards as f64);
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // Workers: drain the batcher, run the backend, fan results back out.
-        for w in 0..cfg.workers.max(1) {
+        // One executor per shard: drain the shard's queue, run batches on
+        // this shard's slice of the thread budget with this shard's private
+        // scratch arena, fan results back out.
+        for (shard, &slice) in slices.iter().enumerate() {
             let batcher = batcher.clone();
             let backend = backend.clone();
             let metrics = metrics.clone();
+            metrics.set_shard_gauge(shard, "pool_threads", slice as f64);
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("condcomp-worker-{w}"))
-                    .spawn(move || worker_loop(&batcher, backend.as_ref(), &metrics))
-                    .expect("spawn worker"),
+                    .name(format!("condcomp-shard-{shard}"))
+                    .spawn(move || {
+                        // A single shard owns the whole budget: reuse the
+                        // process pool instead of doubling the thread count.
+                        // With N > 1 shards each executor gets a private
+                        // pool for its slice; the global pool's threads sit
+                        // parked (condvar) while serving — see ROADMAP for
+                        // the pool-slicing direction that removes this.
+                        let private =
+                            if num_shards == 1 { None } else { Some(ThreadPool::new(slice)) };
+                        let pool: &ThreadPool = private
+                            .as_ref()
+                            .unwrap_or_else(|| crate::parallel::global());
+                        let mut arena = ScratchArena::new();
+                        while let Some(batch) = batcher.next_batch(shard) {
+                            execute_batch(
+                                shard,
+                                batch,
+                                backend.as_ref(),
+                                pool,
+                                &mut arena,
+                                &metrics,
+                            );
+                            metrics
+                                .set_shard_gauge(shard, "depth", batcher.shard(shard).depth() as f64);
+                        }
+                    })
+                    .expect("spawn shard executor"),
             );
         }
 
@@ -129,7 +186,24 @@ impl Server {
         Ok(Server { local_addr, metrics, batcher, stop, threads })
     }
 
-    /// Stop all threads and wait for them.
+    /// Number of batcher shards actually running (after 0 = auto
+    /// derivation).
+    pub fn num_shards(&self) -> usize {
+        self.batcher.num_shards()
+    }
+
+    /// True once a shutdown has been requested (protocol `shutdown` op or
+    /// [`Server::shutdown`]). The `condcomp serve` main loop polls this so
+    /// a client-driven shutdown lets the process exit instead of sleeping
+    /// forever.
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, close every shard, and wait for the executors —
+    /// which drain their queues first ([`ShardedBatcher::close`] ships
+    /// already-accepted items before `next_batch` reports done), so no
+    /// in-flight request loses its response.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         self.batcher.close();
@@ -146,66 +220,82 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(batcher: &DynamicBatcher, backend: &dyn Backend, metrics: &MetricsRegistry) {
-    while let Some(batch) = batcher.next_batch() {
-        let mode = batch[0].mode;
-        let total_rows: usize = batch.iter().map(|i| i.x.rows()).sum();
-        metrics.incr("batches");
-        metrics.add("batched_rows", total_rows as u64);
-        metrics.set_gauge("last_batch_rows", total_rows as f64);
+/// Run one drained batch on a shard's pool slice + arena and fan the
+/// responses back out. One request increments `predictions` exactly once,
+/// whichever shard executed it.
+fn execute_batch(
+    shard: usize,
+    batch: Vec<BatchItem>,
+    backend: &dyn Backend,
+    pool: &ThreadPool,
+    arena: &mut ScratchArena,
+    metrics: &MetricsRegistry,
+) {
+    let mode = batch[0].mode;
+    let total_rows: usize = batch.iter().map(|i| i.x.rows()).sum();
+    metrics.incr("batches");
+    metrics.incr_shard(shard, "batches");
+    metrics.add("batched_rows", total_rows as u64);
+    metrics.set_gauge("last_batch_rows", total_rows as f64);
 
-        // Concatenate the batch.
-        let d = batch[0].x.cols();
-        let mut x = Mat::zeros(total_rows, d);
-        let mut at = 0usize;
-        let mut ok_shapes = true;
-        for item in &batch {
-            if item.x.cols() != d {
-                ok_shapes = false;
-                break;
-            }
-            for r in 0..item.x.rows() {
-                x.row_mut(at).copy_from_slice(item.x.row(r));
-                at += 1;
-            }
+    // Concatenate the batch.
+    let d = batch[0].x.cols();
+    let mut x = Mat::zeros(total_rows, d);
+    let mut at = 0usize;
+    let mut ok_shapes = true;
+    for item in &batch {
+        if item.x.cols() != d {
+            ok_shapes = false;
+            break;
         }
-        if !ok_shapes {
+        for r in 0..item.x.rows() {
+            x.row_mut(at).copy_from_slice(item.x.row(r));
+            at += 1;
+        }
+    }
+    if !ok_shapes {
+        for item in batch {
+            let _ = item
+                .reply
+                .send(Response::err(item.id, "inconsistent input dims in batch"));
+        }
+        return;
+    }
+
+    let t0 = Instant::now();
+    let result = backend.predict_on(&x, mode, pool, arena);
+    let dt = t0.elapsed().as_secs_f64();
+    metrics.observe_latency(&format!("predict_{}", mode.as_str()), dt);
+    metrics.observe_shard_latency(shard, "predict", dt);
+
+    match result {
+        Ok((logits, speedup)) => {
+            if let Some(s) = speedup {
+                metrics.set_gauge("flop_speedup", s);
+            }
+            let n_items = batch.len() as u64;
+            let mut row = 0usize;
             for item in batch {
-                let _ = item
-                    .reply
-                    .send(Response::err(item.id, "inconsistent input dims in batch"));
+                let n = item.x.rows();
+                let slice = logits.rows_slice(row, n);
+                row += n;
+                let mut resp = Response::ok(item.id);
+                resp.classes = crate::nn::activations::argmax_rows(&slice);
+                resp.logits = Some(slice);
+                resp.latency_us = item.enqueued.elapsed().as_micros() as u64;
+                let _ = item.reply.send(resp);
             }
-            continue;
+            // One counter update per batch, not per item: the metrics mutex
+            // is shared across shard executors.
+            metrics.add("predictions", n_items);
+            // The logits buffer came from the arena; park it for the next
+            // batch on this shard.
+            arena.put(logits.into_vec());
         }
-
-        let t0 = Instant::now();
-        let result = backend.predict(&x, mode);
-        let dt = t0.elapsed().as_secs_f64();
-        metrics.observe_latency(&format!("predict_{}", mode.as_str()), dt);
-
-        match result {
-            Ok((logits, speedup)) => {
-                if let Some(s) = speedup {
-                    metrics.set_gauge("flop_speedup", s);
-                }
-                let mut row = 0usize;
-                for item in batch {
-                    let n = item.x.rows();
-                    let slice = logits.rows_slice(row, n);
-                    row += n;
-                    let mut resp = Response::ok(item.id);
-                    resp.classes = crate::nn::activations::argmax_rows(&slice);
-                    resp.logits = Some(slice);
-                    resp.latency_us = item.enqueued.elapsed().as_micros() as u64;
-                    metrics.incr("predictions");
-                    let _ = item.reply.send(resp);
-                }
-            }
-            Err(e) => {
-                metrics.incr("errors");
-                for item in batch {
-                    let _ = item.reply.send(Response::err(item.id, format!("backend: {e}")));
-                }
+        Err(e) => {
+            metrics.incr("errors");
+            for item in batch {
+                let _ = item.reply.send(Response::err(item.id, format!("backend: {e}")));
             }
         }
     }
@@ -213,7 +303,7 @@ fn worker_loop(batcher: &DynamicBatcher, backend: &dyn Backend, metrics: &Metric
 
 fn handle_connection(
     stream: TcpStream,
-    batcher: &DynamicBatcher,
+    batcher: &ShardedBatcher,
     backend: &dyn Backend,
     metrics: &MetricsRegistry,
     stop: &AtomicBool,
@@ -290,7 +380,22 @@ fn handle_connection(
                     ));
                     continue;
                 }
-                batcher.push(BatchItem { id, mode, x, enqueued: Instant::now(), reply: tx.clone() });
+                let item = BatchItem { id, mode, x, enqueued: Instant::now(), reply: tx.clone() };
+                // No metrics write on the accept path: the shard executor
+                // already publishes its depth gauge after every drained
+                // batch, and touching the (global) metrics mutex per request
+                // would re-serialize the connection threads this split
+                // exists to decouple.
+                if let Err(rejected) = batcher.push(item) {
+                    // Batcher closed (shutdown in progress): the item is
+                    // handed back, so the client still gets an answer
+                    // instead of a silently dropped request.
+                    metrics.incr("rejected");
+                    let _ = tx.send(Response::err(
+                        rejected.id,
+                        "server shutting down: request rejected",
+                    ));
+                }
             }
         }
     }
@@ -464,6 +569,49 @@ mod tests {
         assert!(server.metrics.gauge("dispatch_alpha_star_l0").is_some());
         assert!(server.metrics.gauge("dispatch_alpha_star_l1").is_some());
         server.shutdown();
+    }
+
+    #[test]
+    fn sharded_server_exports_per_shard_gauges() {
+        let mut rng = Pcg32::seeded(7);
+        let net = Mlp::init(
+            &NetConfig { layers: vec![6, 10, 8, 3], weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng,
+        );
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[5, 4]), 3);
+        let backend = Arc::new(NativeBackend::new(net, est, 16));
+        let server = Server::start(
+            backend,
+            ServerConfig { shards: 3, ..ServerConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(server.num_shards(), 3);
+        assert_eq!(server.metrics.gauge("shards"), Some(3.0));
+        // Every shard advertises its pool-slice size; the slices cover the
+        // whole budget.
+        let budget = server.metrics.gauge("pool_threads").unwrap() as usize;
+        let total: f64 = (0..3)
+            .map(|s| server.metrics.shard_gauge(s, "pool_threads").expect("slice gauge"))
+            .sum();
+        assert_eq!(total as usize, budget.max(3));
+
+        // Requests flow and are answered with shards > 1.
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        for _ in 0..6 {
+            let x = Mat::randn(1, 6, 1.0, &mut rng);
+            assert!(client.predict(x, Mode::ConditionalAe).unwrap().ok);
+        }
+        assert_eq!(server.metrics.counter("predictions"), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn derive_shards_tracks_the_thread_budget() {
+        assert_eq!(derive_shards(1), 1);
+        assert_eq!(derive_shards(2), 1);
+        assert_eq!(derive_shards(4), 2);
+        assert_eq!(derive_shards(8), 4);
+        assert_eq!(derive_shards(64), 8, "capped");
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Sharded dynamic batching: N independent [`DynamicBatcher`] queues, each
+//! drained by its own executor worker, with a pluggable router in front.
+//!
+//! The single-queue batcher serializes every request through one
+//! mutex+condvar before it ever reaches a parallel kernel; under heavy
+//! concurrent traffic the queue lock — not the GEMM — gates tail latency.
+//! Sharding splits the front door: requests are routed to one of
+//! `server.shards` independent queues (round-robin by default, least-depth
+//! as an option), so producers contend on 1/N of the locking and each shard
+//! worker drains without waking the others.
+//!
+//! Invariants (property-tested in `tests/batcher_props.rs`):
+//!
+//! - **No request is lost or duplicated.** Every accepted item is drained by
+//!   exactly one shard; after [`ShardedBatcher::close`] a push hands the
+//!   item back ([`DynamicBatcher::push`]'s rejection contract) instead of
+//!   stranding it on a queue nobody drains.
+//! - **Per-shard batching semantics are unchanged.** Each shard is a plain
+//!   `DynamicBatcher`: `max_batch`/`max_wait` hold per shard, items are
+//!   never reordered within a shard and modes are never mixed in a batch.
+//! - **Results do not depend on the shard count.** Batches execute the same
+//!   kernels with the same serial accumulation order wherever they land, so
+//!   per-request outputs are bit-identical between 1 and N shards (asserted
+//!   end-to-end in `tests/serve_e2e.rs`).
+
+use super::batcher::{BatchItem, DynamicBatcher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Which routing discipline places requests onto shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Rotate through shards in order: uniform load, zero coordination.
+    RoundRobin,
+    /// Send each request to the currently shallowest queue: better tail
+    /// latency when request costs are skewed, at the price of reading every
+    /// shard's depth on the push path.
+    LeastDepth,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(RouterKind::RoundRobin),
+            "least-depth" | "leastdepth" | "ld" => Some(RouterKind::LeastDepth),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastDepth => "least-depth",
+        }
+    }
+}
+
+impl std::fmt::Display for RouterKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Pluggable shard-selection policy. Implementations must be cheap: `route`
+/// runs on the connection-handler thread for every predict request.
+pub trait ShardRouter: Send + Sync {
+    /// Pick a shard in `0..num_shards` for one incoming item.
+    /// `depths[i]` is shard `i`'s current queue depth — populated only when
+    /// [`ShardRouter::needs_depths`] returns true (reading depths touches
+    /// every shard's queue lock, which depth-blind policies must not pay).
+    /// Out-of-range returns are clamped by the caller.
+    fn route(&self, item: &BatchItem, num_shards: usize, depths: &[usize]) -> usize;
+    /// Whether `route` wants the depth snapshot (default: yes).
+    fn needs_depths(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str;
+}
+
+/// Rotating counter; depth-blind, so a push touches exactly one shard lock.
+pub struct RoundRobinRouter {
+    next: AtomicUsize,
+}
+
+impl RoundRobinRouter {
+    pub fn new() -> RoundRobinRouter {
+        RoundRobinRouter { next: AtomicUsize::new(0) }
+    }
+}
+
+impl Default for RoundRobinRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardRouter for RoundRobinRouter {
+    fn route(&self, _item: &BatchItem, num_shards: usize, _depths: &[usize]) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % num_shards
+    }
+
+    fn needs_depths(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        RouterKind::RoundRobin.as_str()
+    }
+}
+
+/// Shallowest queue wins; ties go to the lowest shard index so the choice is
+/// deterministic under equal load.
+pub struct LeastDepthRouter;
+
+impl ShardRouter for LeastDepthRouter {
+    fn route(&self, _item: &BatchItem, _num_shards: usize, depths: &[usize]) -> usize {
+        depths
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &d)| d)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        RouterKind::LeastDepth.as_str()
+    }
+}
+
+fn router_for(kind: RouterKind) -> Box<dyn ShardRouter> {
+    match kind {
+        RouterKind::RoundRobin => Box::new(RoundRobinRouter::new()),
+        RouterKind::LeastDepth => Box::new(LeastDepthRouter),
+    }
+}
+
+/// N independent batching queues behind one router.
+pub struct ShardedBatcher {
+    shards: Vec<DynamicBatcher>,
+    router: Box<dyn ShardRouter>,
+}
+
+impl ShardedBatcher {
+    /// `num_shards` queues (clamped to ≥ 1), each with the given
+    /// `max_batch`/`max_wait`, routed by `kind`.
+    pub fn new(
+        num_shards: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        kind: RouterKind,
+    ) -> ShardedBatcher {
+        ShardedBatcher::with_router(num_shards, max_batch, max_wait, router_for(kind))
+    }
+
+    /// As [`ShardedBatcher::new`] with a caller-supplied routing policy.
+    pub fn with_router(
+        num_shards: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        router: Box<dyn ShardRouter>,
+    ) -> ShardedBatcher {
+        let num_shards = num_shards.max(1);
+        ShardedBatcher {
+            shards: (0..num_shards)
+                .map(|_| DynamicBatcher::new(max_batch, max_wait))
+                .collect(),
+            router,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// One shard's queue (executor workers drain their own shard directly).
+    pub fn shard(&self, i: usize) -> &DynamicBatcher {
+        &self.shards[i]
+    }
+
+    /// Route and enqueue one item. On success returns the shard index the
+    /// item landed on; after [`ShardedBatcher::close`] the item is handed
+    /// back (same contract as [`DynamicBatcher::push`]).
+    ///
+    /// The routing decision uses a snapshot of queue depths; depths may move
+    /// between the snapshot and the enqueue, which can cost least-depth
+    /// optimality but never correctness — the target shard accepts the item
+    /// or (if the batcher closed in between) rejects it back to the caller.
+    pub fn push(&self, item: BatchItem) -> Result<usize, BatchItem> {
+        let depths = if self.router.needs_depths() { self.depths() } else { Vec::new() };
+        let shard = self
+            .router
+            .route(&item, self.shards.len(), &depths)
+            .min(self.shards.len() - 1);
+        self.shards[shard].push(item).map(|()| shard)
+    }
+
+    /// Queue depth per shard (router input; exported as gauges).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth()).collect()
+    }
+
+    /// Total queued items across shards.
+    pub fn depth(&self) -> usize {
+        self.shards.iter().map(|s| s.depth()).sum()
+    }
+
+    /// Blocking: next batch from shard `i`. `None` once the batcher is
+    /// closed *and* shard `i` has drained.
+    pub fn next_batch(&self, i: usize) -> Option<Vec<BatchItem>> {
+        self.shards[i].next_batch()
+    }
+
+    /// Close every shard. Already-queued items still drain (each shard's
+    /// `next_batch` ships its remainder before returning `None`); new pushes
+    /// are rejected back to the caller.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.close();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.shards.iter().all(|s| s.is_closed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{Mode, Response};
+    use crate::linalg::Mat;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn item(id: u64) -> (BatchItem, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            BatchItem {
+                id,
+                mode: Mode::Control,
+                x: Mat::zeros(1, 4),
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn round_robin_spreads_items_evenly() {
+        let b = ShardedBatcher::new(3, 8, Duration::from_millis(5), RouterKind::RoundRobin);
+        let mut placed = vec![0usize; 3];
+        for i in 0..9 {
+            let (it, _rx) = item(i);
+            placed[b.push(it).unwrap()] += 1;
+        }
+        assert_eq!(placed, vec![3, 3, 3]);
+        assert_eq!(b.depth(), 9);
+        assert_eq!(b.depths(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn least_depth_targets_the_shallowest_shard() {
+        let b = ShardedBatcher::new(3, 8, Duration::from_millis(5), RouterKind::LeastDepth);
+        // Preload shards 0 and 1 by draining nothing: depths [1, 1, 0] after
+        // two pushes (both go to the then-shallowest shard in index order).
+        let (a, _r1) = item(1);
+        assert_eq!(b.push(a).unwrap(), 0, "all-empty tie breaks to shard 0");
+        let (c, _r2) = item(2);
+        assert_eq!(b.push(c).unwrap(), 1);
+        let (d, _r3) = item(3);
+        assert_eq!(b.push(d).unwrap(), 2);
+        let (e, _r4) = item(4);
+        assert_eq!(b.push(e).unwrap(), 0, "equal depths tie back to shard 0");
+    }
+
+    #[test]
+    fn shard_count_clamps_to_one() {
+        let b = ShardedBatcher::new(0, 4, Duration::from_millis(1), RouterKind::RoundRobin);
+        assert_eq!(b.num_shards(), 1);
+        let (it, _rx) = item(7);
+        assert_eq!(b.push(it).unwrap(), 0);
+        assert_eq!(b.next_batch(0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn close_rejects_new_and_drains_old_on_every_shard() {
+        let b = ShardedBatcher::new(2, 4, Duration::from_millis(1), RouterKind::RoundRobin);
+        let (a, _r1) = item(1);
+        let (c, _r2) = item(2);
+        b.push(a).unwrap();
+        b.push(c).unwrap();
+        b.close();
+        assert!(b.is_closed());
+        let (d, _r3) = item(3);
+        let back = b.push(d).expect_err("closed batcher must hand the item back");
+        assert_eq!(back.id, 3);
+        // Both shards drain their pre-close item, then report done.
+        let drained: usize = (0..2)
+            .map(|i| {
+                let n = b.next_batch(i).map(|batch| batch.len()).unwrap_or(0);
+                assert!(b.next_batch(i).is_none());
+                n
+            })
+            .sum();
+        assert_eq!(drained, 2);
+    }
+
+    #[test]
+    fn router_kind_parses_aliases() {
+        assert_eq!(RouterKind::parse("round-robin"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("RR"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("least-depth"), Some(RouterKind::LeastDepth));
+        assert_eq!(RouterKind::parse("LeastDepth"), Some(RouterKind::LeastDepth));
+        assert_eq!(RouterKind::parse("nope"), None);
+        assert_eq!(RouterKind::RoundRobin.to_string(), "round-robin");
+    }
+}

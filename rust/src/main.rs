@@ -7,7 +7,10 @@
 //!   serve       start the serving coordinator (native or PJRT backend);
 //!               loads the machine profile named by `autotune.profile_path`
 //!               (or `--autotune-profile`) and logs the per-layer dispatch
-//!               threshold table, falling back to online calibration
+//!               threshold table, falling back to online calibration.
+//!               The batching front-end is sharded (`--shards`, 0 = derived
+//!               from the thread budget; `--router` round-robin|least-depth);
+//!               per-request outputs are bit-identical for any shard count
 //!   calibrate   measure per-layer dense-vs-masked dispatch thresholds for a
 //!               profile's architecture on this machine and persist them as
 //!               a machine-profile JSON (`autotune.profile_path`); `serve`
@@ -222,8 +225,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         .opt(OptSpec::value("addr", "bind address").with_default("127.0.0.1:7878"))
         .opt(OptSpec::value("ranks", "estimator ranks (default: scaled 50-35-25…)"))
         .opt(OptSpec::value("train-epochs", "epochs to train before serving").with_default("2"))
-        .opt(OptSpec::value("max-wait-ms", "dynamic batching window").with_default("2"))
-        .opt(OptSpec::value("workers", "worker threads").with_default("1"))
+        .opt(OptSpec::value("max-wait-ms", "dynamic batching window, per shard").with_default("2"))
+        .opt(OptSpec::value(
+            "shards",
+            "batcher shards, each with its own queue + executor (0 = derive from threads)",
+        ))
+        .opt(OptSpec::value("router", "shard router: round-robin (default) or least-depth"))
         .opt(OptSpec::value(
             "autotune-profile",
             "machine profile from `condcomp calibrate` (default: autotune.profile_path)",
@@ -297,6 +304,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     for line in table.summary_lines() {
         eprintln!("dispatch: {line}");
     }
+    // Sharding knobs: CLI wins, then the profile's `server.*` keys
+    // (`--shards 0` / `server.shards = 0` both mean "derive from threads").
+    let shards = match parsed.get_usize("shards")? {
+        Some(n) => n,
+        None => profile.server.shards,
+    };
+    let router_name =
+        parsed.get("router").map(str::to_string).unwrap_or_else(|| profile.server.router.clone());
+    let router = condcomp::coordinator::RouterKind::parse(&router_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown router '{router_name}' (expected round-robin or least-depth)")
+    })?;
     let server = Server::start(
         backend,
         ServerConfig {
@@ -304,14 +322,24 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             max_wait: std::time::Duration::from_millis(
                 parsed.get_usize("max-wait-ms")?.unwrap_or(2) as u64,
             ),
-            workers: parsed.get_usize("workers")?.unwrap_or(1),
+            shards,
+            router,
             threads: parsed.get_usize("threads")?.unwrap_or(0),
         },
     )?;
-    println!("serving on {} (estimator ranks {ranks:?}); Ctrl-C to stop", server.local_addr);
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    println!(
+        "serving on {} (estimator ranks {ranks:?}; {} shard(s), {router} router); Ctrl-C to stop",
+        server.local_addr,
+        server.num_shards()
+    );
+    // Park until a client sends the protocol `shutdown` op, then drain the
+    // shards and exit cleanly (CI drives the loopback smoke this way).
+    while !server.is_stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    eprintln!("shutdown requested; draining shards…");
+    server.shutdown();
+    Ok(())
 }
 
 /// `condcomp calibrate` — measure per-layer dense-vs-masked dispatch

@@ -37,7 +37,7 @@
 pub mod pool;
 pub mod partition;
 
-pub use partition::{chunk_rows, par_chunks_mut, par_row_chunks};
+pub use partition::{chunk_rows, par_chunks_mut, par_row_chunks, partition_threads};
 pub use pool::{
     configure_global, configure_global_if_unset, default_threads, global, on_pool_thread, Scope,
     ThreadPool,

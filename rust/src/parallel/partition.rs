@@ -30,6 +30,25 @@ pub fn chunk_rows(total: usize, threads: usize, quantum: usize) -> usize {
     (div_up(per, quantum) * quantum).max(quantum)
 }
 
+/// Split a compute-thread budget of `total` threads into `shards` per-shard
+/// pool sizes — the serving coordinator's "partitioned slice of the shared
+/// pool": each shard executor gets its own [`ThreadPool`] sized from this
+/// split, so the shards together use the configured budget instead of each
+/// oversubscribing the whole machine.
+///
+/// Every shard gets at least 1 thread; when `total` does not divide evenly
+/// the remainder goes to the lowest-indexed shards, so
+/// `sum(partition_threads(t, s)) == max(t, s)`.
+pub fn partition_threads(total: usize, shards: usize) -> Vec<usize> {
+    let shards = shards.max(1);
+    let total = total.max(1);
+    let base = total / shards;
+    let extra = total % shards;
+    (0..shards)
+        .map(|i| (base + usize::from(i < extra)).max(1))
+        .collect()
+}
+
 /// Split `data` into chunks of `chunk_len` elements (last chunk may be
 /// short) and run `f(chunk_index, element_offset, chunk)` for each, on the
 /// pool when it pays and inline otherwise. Returns the per-chunk results in
@@ -115,6 +134,24 @@ mod tests {
                     assert!(per >= 1);
                     assert!((total + per - 1) / per <= threads.max(1));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_threads_covers_the_budget() {
+        assert_eq!(partition_threads(8, 2), vec![4, 4]);
+        assert_eq!(partition_threads(7, 2), vec![4, 3]);
+        assert_eq!(partition_threads(2, 5), vec![1, 1, 1, 1, 1]);
+        assert_eq!(partition_threads(0, 0), vec![1]);
+        for total in [1usize, 2, 7, 16] {
+            for shards in [1usize, 2, 3, 7] {
+                let parts = partition_threads(total, shards);
+                assert_eq!(parts.len(), shards);
+                assert!(parts.iter().all(|&p| p >= 1));
+                assert_eq!(parts.iter().sum::<usize>(), total.max(shards));
+                // Lowest-indexed shards soak up the remainder.
+                assert!(parts.windows(2).all(|w| w[0] >= w[1]));
             }
         }
     }

@@ -1,0 +1,292 @@
+//! Property tests for the sharded dynamic batcher.
+//!
+//! The serving invariants the coordinator leans on, pinned under randomized
+//! concurrent schedules at shard counts {1, 2, 7}:
+//!
+//! - no request is lost or duplicated across shards, even when pushes race
+//!   with `close` (rejected pushes hand the item back — the
+//!   close-then-push fix);
+//! - `max_batch` / `max_wait` hold per shard;
+//! - depth accounting stays consistent with what was pushed and drained.
+
+use condcomp::coordinator::protocol::{Mode, Response};
+use condcomp::coordinator::sharded::{RouterKind, ShardedBatcher};
+use condcomp::coordinator::BatchItem;
+use condcomp::linalg::Mat;
+use condcomp::util::proptest::property;
+use std::collections::BTreeSet;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shard counts every property runs at (mirrors the thread-count grid the
+/// parallel kernels are pinned at).
+const SHARD_GRID: [usize; 3] = [1, 2, 7];
+
+fn item(id: u64, rows: usize) -> BatchItem {
+    // Reply receivers are dropped: these properties exercise queueing, not
+    // response fan-out, and `send` on a closed channel is already ignored
+    // by the server.
+    let (tx, _rx) = channel::<Response>();
+    BatchItem {
+        id,
+        mode: Mode::Control,
+        x: Mat::zeros(rows, 2),
+        enqueued: Instant::now(),
+        reply: tx,
+    }
+}
+
+/// Drain every shard until it reports done, collecting item ids. Must be
+/// called with the batcher closed or about to close.
+fn spawn_drainers(
+    b: &Arc<ShardedBatcher>,
+    drained: &Arc<Mutex<Vec<u64>>>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..b.num_shards())
+        .map(|shard| {
+            let b = b.clone();
+            let drained = drained.clone();
+            std::thread::spawn(move || {
+                while let Some(batch) = b.next_batch(shard) {
+                    let mut sink = drained.lock().unwrap();
+                    for it in batch {
+                        sink.push(it.id);
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn no_request_lost_or_duplicated_under_concurrent_push_and_close() {
+    for &shards in &SHARD_GRID {
+        property(
+            &format!("push/close race loses nothing at {shards} shards"),
+            8,
+            |rng| {
+                let kind = if rng.bernoulli(0.5) {
+                    RouterKind::RoundRobin
+                } else {
+                    RouterKind::LeastDepth
+                };
+                let b = Arc::new(ShardedBatcher::new(
+                    shards,
+                    4,
+                    Duration::from_millis(1),
+                    kind,
+                ));
+                let drained = Arc::new(Mutex::new(Vec::new()));
+                let rejected = Arc::new(Mutex::new(Vec::new()));
+                let drainers = spawn_drainers(&b, &drained);
+
+                let pushers: Vec<_> = (0..4u64)
+                    .map(|p| {
+                        let b = b.clone();
+                        let rejected = rejected.clone();
+                        std::thread::spawn(move || {
+                            for i in 0..25u64 {
+                                let id = p * 1000 + i;
+                                if let Err(back) = b.push(item(id, 1)) {
+                                    assert_eq!(back.id, id, "rejection returns the same item");
+                                    rejected.lock().unwrap().push(id);
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+
+                // Close at a random point while pushers are racing.
+                std::thread::sleep(Duration::from_millis(rng.index(4) as u64));
+                b.close();
+                for h in pushers {
+                    h.join().unwrap();
+                }
+                for h in drainers {
+                    h.join().unwrap();
+                }
+
+                let drained = drained.lock().unwrap();
+                let rejected = rejected.lock().unwrap();
+                let drained_set: BTreeSet<u64> = drained.iter().copied().collect();
+                let rejected_set: BTreeSet<u64> = rejected.iter().copied().collect();
+                assert_eq!(drained_set.len(), drained.len(), "no id drained twice");
+                assert_eq!(rejected_set.len(), rejected.len(), "no id rejected twice");
+                assert!(
+                    drained_set.is_disjoint(&rejected_set),
+                    "an item was both accepted and rejected"
+                );
+                let mut all: BTreeSet<u64> = drained_set;
+                all.extend(&rejected_set);
+                assert_eq!(all.len(), 100, "every pushed id accounted for exactly once");
+            },
+        );
+    }
+}
+
+#[test]
+fn max_batch_is_respected_per_shard_for_any_row_mix() {
+    for &shards in &SHARD_GRID {
+        property(
+            &format!("batch rows ≤ max_batch at {shards} shards"),
+            10,
+            |rng| {
+                let max_batch = 4 + rng.index(5); // 4..=8 rows
+                let b = ShardedBatcher::new(
+                    shards,
+                    max_batch,
+                    Duration::from_millis(1),
+                    RouterKind::RoundRobin,
+                );
+                let n_items = 10 + rng.index(20);
+                for id in 0..n_items as u64 {
+                    // Mostly small items; occasionally one wider than the
+                    // whole batch budget (an oversized head must ship alone).
+                    let rows = if rng.bernoulli(0.1) { max_batch + 2 } else { 1 + rng.index(3) };
+                    b.push(item(id, rows)).unwrap();
+                }
+                b.close();
+                let mut seen = 0usize;
+                for shard in 0..b.num_shards() {
+                    while let Some(batch) = b.next_batch(shard) {
+                        let rows: usize = batch.iter().map(|i| i.x.rows()).sum();
+                        if batch.len() == 1 {
+                            // A single item may exceed max_batch (oversized
+                            // requests still ship) — no bound to check.
+                        } else {
+                            assert!(
+                                rows <= max_batch,
+                                "shard {shard}: {rows} rows in a {}-item batch > max {max_batch}",
+                                batch.len()
+                            );
+                        }
+                        seen += batch.len();
+                    }
+                }
+                assert_eq!(seen, n_items, "drain sees every item exactly once");
+            },
+        );
+    }
+}
+
+#[test]
+fn max_wait_ships_partial_batches_per_shard() {
+    // One under-filled item per shard: each shard's executor-facing
+    // `next_batch` must return it within the batching window (plus
+    // scheduling slack), not hold it for a full batch.
+    let max_wait = Duration::from_millis(40);
+    let b = Arc::new(ShardedBatcher::new(2, 64, max_wait, RouterKind::RoundRobin));
+    // Anchor the clock at push time: the batching deadline is
+    // `enqueued + max_wait`, so measuring from each drain thread's own
+    // start would flake whenever thread spawn is slow on a loaded runner.
+    let t0 = Instant::now();
+    b.push(item(0, 1)).unwrap();
+    b.push(item(1, 1)).unwrap();
+    assert_eq!(b.depths(), vec![1, 1], "round-robin placed one item per shard");
+    let handles: Vec<_> = (0..2)
+        .map(|shard| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let batch = b.next_batch(shard).expect("partial batch ships");
+                (batch.len(), t0.elapsed())
+            })
+        })
+        .collect();
+    for h in handles {
+        let (len, waited) = h.join().unwrap();
+        assert_eq!(len, 1);
+        assert!(
+            waited >= Duration::from_millis(25),
+            "batch shipped before the window: {waited:?}"
+        );
+        assert!(
+            waited < Duration::from_millis(2000),
+            "batch held far past max_wait: {waited:?}"
+        );
+    }
+}
+
+#[test]
+fn depth_accounting_is_consistent_across_shard_counts() {
+    for &shards in &SHARD_GRID {
+        property(
+            &format!("depths sum to pushed−drained at {shards} shards"),
+            10,
+            |rng| {
+                let b = ShardedBatcher::new(
+                    shards,
+                    8,
+                    Duration::from_millis(1),
+                    RouterKind::RoundRobin,
+                );
+                let n = 1 + rng.index(40);
+                for id in 0..n as u64 {
+                    b.push(item(id, 1)).unwrap();
+                }
+                let depths = b.depths();
+                assert_eq!(depths.len(), shards);
+                assert_eq!(depths.iter().sum::<usize>(), n);
+                assert_eq!(b.depth(), n);
+                // Round-robin keeps shard depths within one of each other.
+                let (min, max) =
+                    (depths.iter().min().unwrap(), depths.iter().max().unwrap());
+                assert!(max - min <= 1, "round-robin imbalance: {depths:?}");
+
+                b.close();
+                let mut drained = 0usize;
+                for shard in 0..shards {
+                    while let Some(batch) = b.next_batch(shard) {
+                        drained += batch.len();
+                        assert_eq!(
+                            b.depth(),
+                            n - drained,
+                            "total depth tracks the drain step by step"
+                        );
+                    }
+                }
+                assert_eq!(drained, n);
+                assert_eq!(b.depth(), 0);
+                assert_eq!(b.depths(), vec![0; shards]);
+            },
+        );
+    }
+}
+
+#[test]
+fn least_depth_router_keeps_undrained_shards_balanced() {
+    property("least-depth imbalance ≤ 1 without drain", 10, |rng| {
+        let shards = 2 + rng.index(6);
+        let b = ShardedBatcher::new(shards, 8, Duration::from_millis(1), RouterKind::LeastDepth);
+        let n = 1 + rng.index(50);
+        for id in 0..n as u64 {
+            b.push(item(id, 1)).unwrap();
+        }
+        let depths = b.depths();
+        let (min, max) = (depths.iter().min().unwrap(), depths.iter().max().unwrap());
+        assert!(max - min <= 1, "least-depth imbalance: {depths:?}");
+    });
+}
+
+#[test]
+fn close_then_push_rejects_on_every_shard_count() {
+    for &shards in &SHARD_GRID {
+        let b = ShardedBatcher::new(shards, 4, Duration::from_millis(1), RouterKind::RoundRobin);
+        b.push(item(1, 1)).unwrap();
+        b.close();
+        assert!(b.is_closed());
+        // The fix under test: a closed batcher must hand items back, not
+        // silently accept them into a queue nothing will ever drain.
+        for id in 10..13u64 {
+            let back = b.push(item(id, 1)).expect_err("push after close must reject");
+            assert_eq!(back.id, id);
+        }
+        let mut drained = 0usize;
+        for shard in 0..shards {
+            while let Some(batch) = b.next_batch(shard) {
+                drained += batch.len();
+            }
+        }
+        assert_eq!(drained, 1, "only the pre-close item drains");
+    }
+}

@@ -1,0 +1,393 @@
+//! End-to-end loopback tests for the sharded serving coordinator: real
+//! `Server` on an ephemeral port, real TCP `Client`s, a small MLP trained
+//! in-test.
+//!
+//! What is pinned here and nowhere else:
+//!
+//! - per-request outputs are **bit-identical** between a 1-shard server and
+//!   N-shard servers (both routers), in both Exact (control) and
+//!   Conditional modes, through the wire — the serving-level counterpart of
+//!   the kernels' thread-count invariance;
+//! - `shutdown` drains in-flight requests: every request accepted before
+//!   the shutdown op gets its response (no dropped replies), and requests
+//!   arriving after close get an explicit rejection, not silence;
+//! - a synthetic-cost-model `PolicyTable` installs identical per-layer
+//!   dispatch thresholds on every shard (regression guard against
+//!   per-shard policy drift).
+
+use condcomp::autotune::{
+    model_fingerprint, Autotuner, CostModel, MachineProfile, PROFILE_SCHEMA_VERSION,
+};
+use condcomp::config::{EstimatorConfig, ExperimentProfile, NetConfig};
+use condcomp::coordinator::protocol::{Mode, Request, Response};
+use condcomp::coordinator::server::Client;
+use condcomp::coordinator::{
+    Backend, NativeBackend, RouterKind, ScratchArena, Server, ServerConfig,
+};
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::linalg::Mat;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::{Mlp, Trainer};
+use condcomp::util::Pcg32;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Train a small MLP in-test (1 epoch over a shrunken synthetic corpus) and
+/// fit its estimators. Deterministic: every call returns bit-identical
+/// weights and factors, so two servers built from two calls serve the same
+/// function.
+fn trained_backend() -> NativeBackend {
+    let mut profile = ExperimentProfile::mnist_tiny();
+    profile.net.layers = vec![784, 32, 24, 10];
+    profile.train.epochs = 1;
+    profile.n_train = 200;
+    profile.n_valid = 50;
+    profile.n_test = 50;
+    let mut data = build_dataset(&profile, 42);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    let mut trainer = Trainer::new(profile.train.clone());
+    trainer.options.quiet = true;
+    trainer.train(&mut net, &mut data, &mut NoGater);
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 7);
+    NativeBackend::new(net, est, 32)
+}
+
+fn start_trained(shards: usize, router: RouterKind) -> Server {
+    Server::start(
+        Arc::new(trained_backend()),
+        ServerConfig { shards, router, ..ServerConfig::default() },
+    )
+    .expect("server start")
+}
+
+fn logits_bits(resp: &Response) -> Vec<u32> {
+    resp.logits
+        .as_ref()
+        .expect("predict response carries logits")
+        .as_slice()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// The acceptance criterion: outputs bit-identical between `--shards 1` and
+/// `--shards N`, both modes, both routers, through the wire.
+#[test]
+fn sharded_outputs_bit_identical_to_single_shard() {
+    let single = start_trained(1, RouterKind::RoundRobin);
+    let rr3 = start_trained(3, RouterKind::RoundRobin);
+    let ld2 = start_trained(2, RouterKind::LeastDepth);
+    assert_eq!(single.num_shards(), 1);
+    assert_eq!(rr3.num_shards(), 3);
+    assert_eq!(ld2.num_shards(), 2);
+
+    let mut c_single = Client::connect(&single.local_addr).unwrap();
+    let mut c_rr3 = Client::connect(&rr3.local_addr).unwrap();
+    let mut c_ld2 = Client::connect(&ld2.local_addr).unwrap();
+
+    let mut rng = Pcg32::seeded(0xE2E);
+    for mode in [Mode::Control, Mode::ConditionalAe] {
+        // 8 sequential requests: round-robin walks every shard of the
+        // 3-shard server at least twice; each request is its own batch on
+        // every server (lockstep client), so batch composition is equal.
+        for req in 0..8 {
+            let rows = 1 + (req % 2);
+            let x = Mat::randn(rows, 784, 0.5, &mut rng);
+            let a = c_single.predict(x.clone(), mode).unwrap();
+            let b = c_rr3.predict(x.clone(), mode).unwrap();
+            let c = c_ld2.predict(x, mode).unwrap();
+            assert!(a.ok && b.ok && c.ok, "{:?} / {:?} / {:?}", a.error, b.error, c.error);
+            assert_eq!(a.classes, b.classes, "mode {mode:?} req {req}: classes drifted");
+            assert_eq!(a.classes, c.classes);
+            assert_eq!(a.classes.len(), rows);
+            let bits = logits_bits(&a);
+            assert_eq!(
+                bits,
+                logits_bits(&b),
+                "mode {mode:?} req {req}: 3-shard logits differ from single-shard"
+            );
+            assert_eq!(
+                bits,
+                logits_bits(&c),
+                "mode {mode:?} req {req}: least-depth logits differ from single-shard"
+            );
+        }
+    }
+
+    // Every shard of the 3-shard server actually executed work.
+    for shard in 0..3 {
+        assert!(
+            rr3.metrics.shard_counter(shard, "batches") > 0,
+            "shard {shard} never drained a batch"
+        );
+    }
+    single.shutdown();
+    rr3.shutdown();
+    ld2.shutdown();
+}
+
+#[test]
+fn ping_stats_and_concurrent_predicts_across_shards() {
+    let server = start_trained(3, RouterKind::RoundRobin);
+    let addr = server.local_addr;
+
+    let mut client = Client::connect(&addr).unwrap();
+    let pong = client.ping().unwrap();
+    assert!(pong.ok);
+
+    // Concurrent clients in both modes: everything answered, nothing
+    // miscounted.
+    let handles: Vec<_> = (0..6)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let mut rng = Pcg32::new(c as u64, 5);
+                for i in 0..5 {
+                    let mode = if i % 2 == 0 { Mode::ConditionalAe } else { Mode::Control };
+                    let x = Mat::randn(1, 784, 0.5, &mut rng);
+                    let resp = client.predict(x, mode).unwrap();
+                    assert!(resp.ok, "{:?}", resp.error);
+                    assert_eq!(resp.classes.len(), 1);
+                    assert!(resp.classes[0] < 10);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.metrics.counter("predictions"), 30);
+
+    // Stats over the wire expose the shard topology and per-shard activity.
+    let stats = client.stats().unwrap();
+    assert!(stats.ok);
+    let payload = stats.payload.unwrap();
+    let gauges = payload.get("gauges").expect("gauges in snapshot");
+    assert_eq!(gauges.get("shards").and_then(|v| v.as_f64()), Some(3.0));
+    for shard in 0..3 {
+        assert!(
+            gauges.get(&format!("shard{shard}_pool_threads")).is_some(),
+            "missing shard {shard} pool gauge"
+        );
+    }
+    let shard_batches: u64 = (0..3).map(|s| server.metrics.shard_counter(s, "batches")).sum();
+    assert_eq!(shard_batches, server.metrics.counter("batches"));
+    server.shutdown();
+}
+
+/// Pipelined predicts followed by a shutdown op on the same connection:
+/// every request accepted before the shutdown must be answered (the drain
+/// guarantee), and a request pushed after close gets an explicit rejection.
+#[test]
+fn shutdown_drains_in_flight_requests_without_dropping_responses() {
+    let mut rng = Pcg32::seeded(0xD12A);
+    let net = Mlp::init(
+        &NetConfig { layers: vec![24, 32, 24, 8], weight_sigma: 0.3, bias_init: 0.1 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 3);
+    let server = Server::start(
+        Arc::new(NativeBackend::new(net, est, 32)),
+        ServerConfig {
+            // A long window so pipelined items are still queued when the
+            // shutdown op lands — the drain path, not the fast path.
+            max_wait: Duration::from_millis(250),
+            shards: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let metrics = server.metrics.clone();
+    let addr = server.local_addr;
+
+    // A second connection, opened before shutdown, to probe post-close
+    // rejection afterwards.
+    let mut late_client = Client::connect(&addr).unwrap();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    const IN_FLIGHT: u64 = 8;
+    let mut lines = String::new();
+    for id in 1..=IN_FLIGHT {
+        let x = Mat::randn(1, 24, 0.5, &mut rng);
+        lines.push_str(&Request::Predict { id, mode: Mode::ConditionalAe, x }.to_json_line());
+        lines.push('\n');
+    }
+    lines.push_str(&Request::Shutdown { id: 99 }.to_json_line());
+    lines.push('\n');
+    // One write: all 8 predicts are queued before the handler reaches the
+    // shutdown op (lines are processed in order on the connection).
+    writer.write_all(lines.as_bytes()).unwrap();
+    writer.flush().unwrap();
+
+    let mut got_ids = Vec::new();
+    for _ in 0..=IN_FLIGHT {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.trim().is_empty(), "connection closed before all responses arrived");
+        let resp = Response::parse(&line).unwrap();
+        assert!(resp.ok, "id {}: {:?}", resp.id, resp.error);
+        if resp.id != 99 {
+            assert_eq!(resp.classes.len(), 1, "predict response fanned back out");
+        }
+        got_ids.push(resp.id);
+    }
+    got_ids.sort_unstable();
+    let mut want: Vec<u64> = (1..=IN_FLIGHT).collect();
+    want.push(99);
+    assert_eq!(got_ids, want, "every in-flight request answered exactly once");
+
+    // Join the server: executors drained, acceptor stopped.
+    server.shutdown();
+    assert_eq!(metrics.counter("predictions"), IN_FLIGHT);
+    assert_eq!(metrics.counter("errors"), 0);
+
+    // The batcher is now definitively closed; a straggler on a still-open
+    // connection gets a rejection response, not silence.
+    let x = Mat::randn(1, 24, 0.5, &mut rng);
+    let resp = late_client.predict(x, Mode::ConditionalAe).unwrap();
+    assert!(!resp.ok, "post-shutdown predict must be rejected");
+    assert!(
+        resp.error.as_deref().unwrap_or("").contains("shutting down"),
+        "unexpected rejection: {:?}",
+        resp.error
+    );
+    assert_eq!(metrics.counter("rejected"), 1);
+}
+
+// ---------------------------------------------------------------------------
+// PolicyTable × sharding: dispatch thresholds identical on every shard
+// ---------------------------------------------------------------------------
+
+/// Synthetic cost surface, exactly linear in α: wide-input layers pay 8×
+/// per masked FLOP (α* = 0.125), others 2× (α* = 0.5).
+struct SyntheticCost;
+
+fn synthetic_ratio(d: usize, h: usize) -> f64 {
+    if d > h {
+        8.0
+    } else {
+        2.0
+    }
+}
+
+impl CostModel for SyntheticCost {
+    fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64 {
+        2.0 * (n * d * h) as f64 * 1e-10
+    }
+
+    fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+        alpha * synthetic_ratio(d, h) * 2.0 * (n * d * h) as f64 * 1e-10
+    }
+}
+
+fn synthetic_backend() -> (NativeBackend, [f64; 2]) {
+    let layer_sizes = [16usize, 32, 16, 6];
+    let mut rng = Pcg32::seeded(0x90CA);
+    let net = Mlp::init(
+        &NetConfig { layers: layer_sizes.to_vec(), weight_sigma: 0.4, bias_init: 0.1 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[6, 5]), 3);
+    let backend = NativeBackend::new(net, est, 32);
+
+    // Fit the per-layer table from the synthetic surface and install it the
+    // same way `serve` installs a persisted machine profile.
+    let shapes = Autotuner::hidden_shapes(&layer_sizes);
+    let fitted = Autotuner::default().fit_shapes(&shapes, &mut SyntheticCost, None);
+    let profile = MachineProfile {
+        version: PROFILE_SCHEMA_VERSION,
+        fingerprint: model_fingerprint(&layer_sizes),
+        hardware: "unknown".into(),
+        threads: 0,
+        budget_ms: 0,
+        layers: fitted,
+    };
+    backend.apply_profile(&profile, "<synthetic>").expect("profile installs");
+    (backend, [0.5, 0.125])
+}
+
+/// Backend-level drift guard: with the synthetic table installed, the
+/// shard-executor entry point must make the same per-layer dispatch
+/// decisions on any pool slice. Logit bits AND the reported FLOP speedup
+/// must match — the speedup counts computed dot products, so it flips if
+/// any shard picks the other kernel.
+#[test]
+fn synthetic_policy_table_dispatches_identically_on_every_pool_slice() {
+    let (backend, want_alpha) = synthetic_backend();
+    let thresholds = backend.dispatch_thresholds().expect("table installed");
+    assert!((thresholds[0] - want_alpha[0]).abs() < 1e-9, "{thresholds:?}");
+    assert!((thresholds[1] - want_alpha[1]).abs() < 1e-9, "{thresholds:?}");
+
+    let mut rng = Pcg32::seeded(0x51AB);
+    let x = Mat::randn(6, 16, 1.0, &mut rng);
+    let (want_logits, want_speedup) = backend.predict(&x, Mode::ConditionalAe).unwrap();
+    let want_speedup = want_speedup.unwrap();
+    for threads in [1usize, 2, 5] {
+        let pool = condcomp::parallel::ThreadPool::new(threads);
+        let mut arena = ScratchArena::new();
+        for round in 0..2 {
+            let (logits, speedup) =
+                backend.predict_on(&x, Mode::ConditionalAe, &pool, &mut arena).unwrap();
+            assert_eq!(
+                logits.as_slice(),
+                want_logits.as_slice(),
+                "threads {threads} round {round}: logits drifted"
+            );
+            assert_eq!(
+                speedup.unwrap().to_bits(),
+                want_speedup.to_bits(),
+                "threads {threads} round {round}: speedup (≡ kernel choice) drifted"
+            );
+        }
+    }
+}
+
+/// Server-level drift guard: a 3-shard server built on the synthetic table
+/// exports the fitted α* gauges once (not per shard), and identical inputs
+/// produce bit-identical responses whichever shard executes them.
+#[test]
+fn synthetic_policy_table_is_shared_by_every_shard() {
+    let (backend, want_alpha) = synthetic_backend();
+    let server = Server::start(
+        Arc::new(backend),
+        ServerConfig { shards: 3, ..ServerConfig::default() },
+    )
+    .unwrap();
+    assert_eq!(server.metrics.gauge("dispatch_layers"), Some(2.0));
+    let l0 = server.metrics.gauge("dispatch_alpha_star_l0").unwrap();
+    let l1 = server.metrics.gauge("dispatch_alpha_star_l1").unwrap();
+    assert!((l0 - want_alpha[0]).abs() < 1e-9);
+    assert!((l1 - want_alpha[1]).abs() < 1e-9);
+
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Pcg32::seeded(0x3A2D);
+    let x = Mat::randn(2, 16, 1.0, &mut rng);
+    // Six sequential sends of the same input: round-robin lands the request
+    // on every shard twice; identical table ⇒ identical kernel choice ⇒
+    // identical bits.
+    let mut first: Option<Vec<u32>> = None;
+    for send in 0..6 {
+        let resp = client.predict(x.clone(), Mode::ConditionalAe).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        let bits = logits_bits(&resp);
+        match &first {
+            None => first = Some(bits),
+            Some(want) => assert_eq!(&bits, want, "send {send} diverged across shards"),
+        }
+    }
+    for shard in 0..3 {
+        assert!(
+            server.metrics.shard_counter(shard, "batches") > 0,
+            "shard {shard} saw no traffic"
+        );
+    }
+    server.shutdown();
+}
