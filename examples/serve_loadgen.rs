@@ -83,10 +83,31 @@ fn main() {
         );
     }
 
-    // Server-side metrics.
+    // Server-side metrics, with the thread-accounting gauges pulled out:
+    // `threads_total` is the shared pool's size and `threads_leased` how
+    // much of it the shard executors hold — with pool slicing the two are
+    // equal, i.e. the server runs on exactly the configured budget with no
+    // private pools and no parked threads.
     let mut client = Client::connect(&addr).unwrap();
     let stats = client.stats().unwrap();
-    println!("\nserver metrics: {}", stats.payload.unwrap().to_string());
+    let payload = stats.payload.unwrap();
+    if let Some(gauges) = payload.get("gauges") {
+        let total = gauges.get("threads_total").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let leased = gauges.get("threads_leased").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!("\nthreads: total {total:.0}, leased by shard executors {leased:.0}");
+        for shard in 0..server.num_shards() {
+            let width = gauges
+                .get(&format!("shard{shard}_pool_threads"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0);
+            let lease = gauges
+                .get(&format!("shard{shard}_lease_threads"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0);
+            println!("  shard {shard}: lease {lease:.0} (width {width:.0})");
+        }
+    }
+    println!("\nserver metrics: {}", payload.to_string());
     let _ = client.shutdown();
     server.shutdown();
 }

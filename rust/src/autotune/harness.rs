@@ -14,14 +14,18 @@
 //! Timing lives behind the [`CostModel`] trait so tests (and the
 //! acceptance criterion's "two shapes → two thresholds" assertion) can
 //! inject a synthetic cost surface and exercise the fitting math
-//! deterministically; [`MeasuredCost`] is the real-kernel implementation.
+//! deterministically; [`MeasuredCost`] is the real-kernel implementation,
+//! and it measures through an [`ExecCtx`] (full-pool lease by default) so
+//! calibration exercises exactly the leased code path the serving
+//! executors run — what gets tuned is what gets served.
 
 use super::profile::{
     hardware_descriptor, model_fingerprint, LayerThreshold, MachineProfile,
     PROFILE_SCHEMA_VERSION,
 };
 use crate::condcomp::{DispatchPolicy, MaskedLayer};
-use crate::linalg::{matmul_into_par, Mat};
+use crate::exec::ExecCtx;
+use crate::linalg::{matmul_into_ctx, Mat};
 use crate::parallel::ThreadPool;
 use crate::util::{Pcg32, Timer};
 
@@ -34,9 +38,13 @@ pub trait CostModel {
     fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64;
 }
 
-/// Runs the real kernels on a pool, best-of-reps within a per-point budget.
+/// Runs the real kernels through an [`ExecCtx`], best-of-reps within a
+/// per-point budget. Measuring through the ctx — not a raw pool — means
+/// calibration exercises exactly the code path dispatch will later take on
+/// the serving executors (same lease-width chunking, same kernel entry
+/// points).
 pub struct MeasuredCost<'a> {
-    pool: &'a ThreadPool,
+    ctx: ExecCtx<'a>,
     /// Wall-clock allowance per measurement point (seconds).
     point_budget_s: f64,
     /// Repetitions guaranteed even when the budget is tiny.
@@ -48,28 +56,33 @@ pub struct MeasuredCost<'a> {
 /// the backstop against sub-microsecond kernels spinning thousands of reps.
 const MAX_REPS: usize = 64;
 
+/// Best-of timing: repeat `f` until the point budget is spent (but at
+/// least `min_reps` and at most [`MAX_REPS`] times), return the minimum.
+fn best_of(point_budget_s: f64, min_reps: usize, mut f: impl FnMut()) -> f64 {
+    let window = Timer::start();
+    let mut best = f64::INFINITY;
+    let mut reps = 0usize;
+    loop {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_s());
+        reps += 1;
+        if reps >= MAX_REPS || (reps >= min_reps && window.elapsed_s() >= point_budget_s) {
+            return best;
+        }
+    }
+}
+
 impl<'a> MeasuredCost<'a> {
+    /// Measure over a full-pool lease on `pool` (the `condcomp calibrate` /
+    /// serve-startup warm-up path).
     pub fn new(pool: &'a ThreadPool, point_budget_s: f64, min_reps: usize, seed: u64) -> Self {
-        MeasuredCost { pool, point_budget_s, min_reps: min_reps.max(1), seed }
+        MeasuredCost::over(ExecCtx::full(pool), point_budget_s, min_reps, seed)
     }
 
-    /// Best-of timing: repeat `f` until the point budget is spent (but at
-    /// least `min_reps` and at most [`MAX_REPS`] times), return the minimum.
-    fn best_of(&self, mut f: impl FnMut()) -> f64 {
-        let window = Timer::start();
-        let mut best = f64::INFINITY;
-        let mut reps = 0usize;
-        loop {
-            let t = Timer::start();
-            f();
-            best = best.min(t.elapsed_s());
-            reps += 1;
-            if reps >= MAX_REPS
-                || (reps >= self.min_reps && window.elapsed_s() >= self.point_budget_s)
-            {
-                return best;
-            }
-        }
+    /// Measure through a caller-supplied ctx (e.g. a specific lease width).
+    pub fn over(ctx: ExecCtx<'a>, point_budget_s: f64, min_reps: usize, seed: u64) -> Self {
+        MeasuredCost { ctx, point_budget_s, min_reps: min_reps.max(1), seed }
     }
 
     fn rng_for(&self, n: usize, d: usize, h: usize) -> Pcg32 {
@@ -85,8 +98,9 @@ impl CostModel for MeasuredCost<'_> {
         let a = Mat::randn(n, d, 0.5, &mut rng);
         let w = Mat::randn(d, h, 0.05, &mut rng);
         let mut out = Mat::zeros(n, h);
-        let pool = self.pool;
-        self.best_of(|| matmul_into_par(&a, &w, &mut out, pool))
+        let (budget, reps) = (self.point_budget_s, self.min_reps);
+        let ctx = &mut self.ctx;
+        best_of(budget, reps, || matmul_into_ctx(&a, &w, &mut out, &mut *ctx))
     }
 
     fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
@@ -99,9 +113,10 @@ impl CostModel for MeasuredCost<'_> {
             if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 }
         });
         let mut out = Mat::zeros(n, h);
-        let pool = self.pool;
-        self.best_of(|| {
-            let _ = layer.forward_masked_par(&a, &mask, &mut out, pool);
+        let (budget, reps) = (self.point_budget_s, self.min_reps);
+        let ctx = &mut self.ctx;
+        best_of(budget, reps, || {
+            let _ = layer.forward_masked_ctx(&a, &mask, &mut out, &mut *ctx);
         })
     }
 }
@@ -156,7 +171,7 @@ impl Autotuner {
     ) -> f64 {
         let flops = 2.0 * (n as f64) * (d as f64) * (h as f64);
         let t_dense = model.dense_seconds(n, d, h);
-        if !(t_dense > 0.0) || !t_dense.is_finite() || flops <= 0.0 {
+        if !t_dense.is_finite() || t_dense <= 0.0 || flops <= 0.0 {
             return DispatchPolicy::DEFAULT_COST_RATIO;
         }
         let dense_per_flop = t_dense / flops;
@@ -168,7 +183,7 @@ impl Autotuner {
                 den += alpha * alpha;
             }
         }
-        if !(num > 0.0) || !(den > 0.0) {
+        if num <= 0.0 || den <= 0.0 {
             return DispatchPolicy::DEFAULT_COST_RATIO;
         }
         let masked_per_flop = num / (den * flops);

@@ -17,7 +17,7 @@ use crate::autotune::{Autotuner, LayerThreshold};
 use crate::condcomp::{DispatchPolicy, MaskedLayer};
 use crate::config::{EstimatorConfig, NetConfig};
 use crate::coordinator::server::Client;
-use crate::coordinator::{NativeBackend, Server, ServerConfig};
+use crate::coordinator::{NativeBackend, PoolMode, Server, ServerConfig};
 use crate::estimator::SignEstimatorSet;
 use crate::io::json::Json;
 use crate::linalg::{matmul_into, matmul_into_par, Mat};
@@ -95,6 +95,36 @@ impl ShardRow {
     }
 }
 
+/// Leased executors vs the PR-3 private-pool baseline at one shard count:
+/// the column that shows pool slicing costs no throughput while halving
+/// the spawned thread count.
+#[derive(Clone, Debug)]
+pub struct LeaseVsPrivateRow {
+    pub shards: usize,
+    pub clients: usize,
+    /// Requests/s with shard executors leasing slices of the shared pool.
+    pub rps_lease: f64,
+    /// Requests/s with a private `ThreadPool` per shard (baseline).
+    pub rps_private: f64,
+}
+
+impl LeaseVsPrivateRow {
+    /// Throughput ratio leased / private (1.0 = parity, > 1 = lease wins).
+    pub fn lease_over_private(&self) -> f64 {
+        self.rps_lease / self.rps_private.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("rps_lease", Json::Num(self.rps_lease)),
+            ("rps_private", Json::Num(self.rps_private)),
+            ("lease_over_private", Json::Num(self.lease_over_private())),
+        ])
+    }
+}
+
 /// The complete sweep result.
 #[derive(Clone, Debug)]
 pub struct ParallelSweep {
@@ -113,8 +143,11 @@ pub struct ParallelSweep {
     /// shapes (the autotune harness's quick fit — `condcomp calibrate`
     /// runs the same fit under a configurable budget and persists it).
     pub per_layer: Vec<LayerThreshold>,
-    /// Serving throughput at each measured batcher shard count.
+    /// Serving throughput at each measured batcher shard count (leased
+    /// executors — the production configuration).
     pub shard_sweep: Vec<ShardRow>,
+    /// Leased vs private-pool executor throughput at each shard count.
+    pub lease_vs_private: Vec<LeaseVsPrivateRow>,
 }
 
 /// Densities the sweep measures (the issue's α grid).
@@ -245,15 +278,33 @@ pub fn run_parallel_sweep(
     // Loopback arm: a real Server + concurrent TCP clients per shard count,
     // so the JSON records whether sharding the batcher moves end-to-end
     // request throughput (it should, on a multi-core runner; on one core
-    // the column documents the overhead instead).
+    // the column documents the overhead instead). Each shard count is
+    // measured twice — leased executors (production) and the PR-3
+    // private-pool baseline — so `serve_lease_vs_private` pins that pool
+    // slicing does not regress throughput while spawning half the threads.
     let mut shard_counts = vec![1usize, 2, threads_max];
     shard_counts.sort_unstable();
     shard_counts.dedup();
     let requests_per_client = if cfg.measure_s < 0.2 { 5 } else { 25 };
-    let shard_sweep = shard_counts
-        .into_iter()
-        .map(|shards| measure_shard_throughput(shards, 4, requests_per_client))
-        .collect();
+    let mut shard_sweep = Vec::new();
+    let mut lease_vs_private = Vec::new();
+    for shards in shard_counts {
+        let leased =
+            measure_shard_throughput(shards, 4, requests_per_client, PoolMode::Lease);
+        // At shards = 1 the PR-3 baseline also ran on the shared pool (it
+        // never spawned a private pool for a single shard), so the two arms
+        // are identical by construction and the ratio documents parity
+        // noise; the informative rows are shards > 1.
+        let private =
+            measure_shard_throughput(shards, 4, requests_per_client, PoolMode::PrivatePools);
+        lease_vs_private.push(LeaseVsPrivateRow {
+            shards,
+            clients: leased.clients,
+            rps_lease: leased.rps,
+            rps_private: private.rps,
+        });
+        shard_sweep.push(leased);
+    }
 
     ParallelSweep {
         dim,
@@ -265,6 +316,7 @@ pub fn run_parallel_sweep(
         density_threshold: policy.density_threshold(),
         per_layer,
         shard_sweep,
+        lease_vs_private,
     }
 }
 
@@ -272,7 +324,12 @@ pub fn run_parallel_sweep(
 /// `clients` concurrent connections issuing single-row conditional predicts.
 /// The model is a fixed small MLP — the point is coordinator scaling, not
 /// kernel time, so layer work is kept light relative to queueing.
-fn measure_shard_throughput(shards: usize, clients: usize, per_client: usize) -> ShardRow {
+fn measure_shard_throughput(
+    shards: usize,
+    clients: usize,
+    per_client: usize,
+    pool_mode: PoolMode,
+) -> ShardRow {
     let mut rng = Pcg32::seeded(0x5AD5);
     let net = Mlp::init(
         &NetConfig { layers: vec![24, 32, 24, 8], weight_sigma: 0.3, bias_init: 0.1 },
@@ -286,6 +343,7 @@ fn measure_shard_throughput(shards: usize, clients: usize, per_client: usize) ->
             addr: "127.0.0.1:0".into(),
             max_wait: std::time::Duration::from_millis(1),
             shards,
+            pool_mode,
             ..ServerConfig::default()
         },
     )
@@ -370,6 +428,15 @@ impl ParallelSweep {
                 row.shards, row.clients, row.rps, row.requests, row.elapsed_s
             ));
         }
+        for row in &self.lease_vs_private {
+            lines.push(format!(
+                "serve lease-vs-private: shards={} → leased {:.0} req/s vs private {:.0} req/s ({:.2}×)",
+                row.shards,
+                row.rps_lease,
+                row.rps_private,
+                row.lease_over_private()
+            ));
+        }
         lines
     }
 
@@ -396,6 +463,10 @@ impl ParallelSweep {
             (
                 "serve_shard_sweep",
                 Json::Arr(self.shard_sweep.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "serve_lease_vs_private",
+                Json::Arr(self.lease_vs_private.iter().map(|r| r.to_json()).collect()),
             ),
             (
                 "rows",
@@ -438,6 +509,16 @@ mod tests {
             assert_eq!(row.requests, row.clients * 5, "quick run: 5 requests per client");
             assert!(row.rps > 0.0 && row.rps.is_finite());
         }
+        // Lease-vs-private column: both arms measured at every shard count.
+        assert_eq!(
+            sweep.lease_vs_private.iter().map(|r| r.shards).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        for row in &sweep.lease_vs_private {
+            assert!(row.rps_lease > 0.0 && row.rps_lease.is_finite());
+            assert!(row.rps_private > 0.0 && row.rps_private.is_finite());
+            assert!(row.lease_over_private() > 0.0);
+        }
 
         let json = sweep.to_json();
         let parsed = Json::parse(&json.to_string()).expect("self-parse");
@@ -448,6 +529,14 @@ mod tests {
             .expect("serve_shard_sweep");
         assert_eq!(shard_rows.len(), 2);
         assert!(shard_rows.iter().all(|r| r.get("shards").is_some() && r.get("rps").is_some()));
+        let lvp_rows = parsed
+            .get("serve_lease_vs_private")
+            .and_then(|v| v.as_arr())
+            .expect("serve_lease_vs_private");
+        assert_eq!(lvp_rows.len(), 2);
+        assert!(lvp_rows
+            .iter()
+            .all(|r| r.get("rps_lease").is_some() && r.get("rps_private").is_some()));
         let per_layer = parsed
             .get("per_layer_thresholds")
             .and_then(|v| v.as_arr())

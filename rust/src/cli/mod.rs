@@ -48,7 +48,11 @@
 //! run the same kernels in the same accumulation order wherever they land);
 //! the knob trades queueing contention against per-shard batching
 //! opportunity. Per-shard queue depth, batch counts and predict latency are
-//! exported through the `stats` op as `shard<i>_*` metrics.
+//! exported through the `stats` op as `shard<i>_*` metrics. Shard
+//! executors *lease* their slices from the shared worker pool, so the
+//! server's worker threads equal the `--threads` budget for any shard
+//! count; `stats` reports the accounting as `threads_total`,
+//! `threads_leased` and `shard<i>_lease_threads`.
 
 use std::collections::BTreeMap;
 

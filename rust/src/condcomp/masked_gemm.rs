@@ -11,12 +11,14 @@
 //!
 //! Entry points, hot path first:
 //!
-//! - [`MaskedLayer::forward_masked_par`] — batch rows sharded across the
-//!   worker pool, writing into a caller-owned output buffer (the serving
-//!   path allocates nothing per batch). Per-row work is exactly the serial
+//! - [`MaskedLayer::forward_masked_ctx`] — the serving path: batch rows
+//!   sharded across the caller's [`ExecCtx`] lease, writing into a
+//!   caller-owned output buffer (nothing allocated per batch).
+//! - [`MaskedLayer::forward_masked_par`] — the same kernel on an explicit
+//!   execution target (pool or lease). Per-row work is exactly the serial
 //!   code, and the per-shard `computed` counts are reduced in shard order,
 //!   so the result — output *and* count — is bit-identical to the serial
-//!   kernel for any thread count.
+//!   kernel for any thread count or lease width.
 //! - [`MaskedLayer::forward_masked_into`] — serial, buffer-reusing.
 //! - [`MaskedLayer::forward_masked`] — serial, allocating (tests, one-off
 //!   callers); the correctness oracle.
@@ -25,9 +27,10 @@
 //!   comparisons (the bench sweep; [`super::DispatchPolicy`] ratios are
 //!   fitted by the `crate::autotune` harness).
 
+use crate::exec::ExecCtx;
 use crate::linalg::gemm::dot;
 use crate::linalg::Mat;
-use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
+use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
 
 /// A layer prepared for conditional execution: transposed weights + bias.
 #[derive(Clone, Debug)]
@@ -101,25 +104,26 @@ impl MaskedLayer {
         computed
     }
 
-    /// Pool-parallel [`Self::forward_masked_into`]: batch rows are sharded
-    /// across workers; the per-shard counts are summed in shard order.
-    /// Output and count are bit-identical to the serial kernel for any
-    /// thread count.
-    pub fn forward_masked_par(
+    /// Parallel [`Self::forward_masked_into`] on an execution target (pool
+    /// or lease slice): batch rows are sharded across workers; the
+    /// per-shard counts are summed in shard order. Output and count are
+    /// bit-identical to the serial kernel for any thread count or lease
+    /// width.
+    pub fn forward_masked_par<P: Parallelism>(
         &self,
         a: &Mat,
         mask: &Mat,
         out: &mut Mat,
-        pool: &ThreadPool,
+        par: &P,
     ) -> usize {
         self.check_shapes(a, mask, out);
         let n = a.rows();
         let h = self.out_dim();
-        if pool.threads() == 1 || n < 2 || h == 0 {
+        if par.width() == 1 || n < 2 || h == 0 {
             return self.forward_masked_into(a, mask, out);
         }
-        let rows_per = chunk_rows(n, pool.threads(), 1);
-        let counts = par_row_chunks(pool, out, rows_per, |row0, band| {
+        let rows_per = chunk_rows(n, par.width(), 1);
+        let counts = par_row_chunks(par, out, rows_per, |row0, band| {
             let rows = band.len() / h;
             let mut computed = 0usize;
             for i in 0..rows {
@@ -132,6 +136,18 @@ impl MaskedLayer {
             computed
         });
         counts.iter().sum()
+    }
+
+    /// [`Self::forward_masked_par`] through an execution context: chunked
+    /// by the ctx's lease width — the serving backend's hot path.
+    pub fn forward_masked_ctx(
+        &self,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        ctx: &mut ExecCtx<'_>,
+    ) -> usize {
+        self.forward_masked_par(a, mask, out, ctx.lease())
     }
 
     /// `σ(a·W + b) ⊙ S`, computing only where `S = 1`. Allocating wrapper
@@ -162,19 +178,20 @@ impl MaskedLayer {
         }
     }
 
-    /// Pool-parallel dense path (row-sharded; bit-identical to
-    /// [`Self::forward_dense_into`] for any thread count).
-    pub fn forward_dense_par(&self, a: &Mat, out: &mut Mat, pool: &ThreadPool) {
+    /// Parallel dense path on an execution target (row-sharded;
+    /// bit-identical to [`Self::forward_dense_into`] for any thread count
+    /// or lease width).
+    pub fn forward_dense_par<P: Parallelism>(&self, a: &Mat, out: &mut Mat, par: &P) {
         let (n, d) = a.shape();
         assert_eq!(d, self.in_dim());
         let h = self.out_dim();
         assert_eq!(out.shape(), (n, h), "output shape mismatch");
-        if pool.threads() == 1 || n < 2 || h == 0 {
+        if par.width() == 1 || n < 2 || h == 0 {
             self.forward_dense_into(a, out);
             return;
         }
-        let rows_per = chunk_rows(n, pool.threads(), 1);
-        par_row_chunks(pool, out, rows_per, |row0, band| {
+        let rows_per = chunk_rows(n, par.width(), 1);
+        par_row_chunks(par, out, rows_per, |row0, band| {
             let rows = band.len() / h;
             for i in 0..rows {
                 self.dense_row(a.row(row0 + i), &mut band[i * h..(i + 1) * h]);
@@ -188,6 +205,7 @@ mod tests {
     use super::*;
     use crate::linalg::matmul;
     use crate::nn::mlp::add_bias;
+    use crate::parallel::ThreadPool;
     use crate::util::proptest::property;
     use crate::util::Pcg32;
 
@@ -293,6 +311,37 @@ mod tests {
                 assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
             });
         }
+    }
+
+    /// Lease widths are covered by the same determinism contract: any
+    /// slice of a pool — including a zero-grant inline lease and the ctx
+    /// entry point — reproduces the serial output and count bitwise.
+    #[test]
+    fn leased_masked_kernel_is_bit_identical_to_serial() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(53);
+        let (n, d, h) = (37, 22, 19);
+        let a = Mat::randn(n, d, 1.0, &mut rng);
+        let w = Mat::randn(d, h, 1.0, &mut rng);
+        let b: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let mask = Mat::from_fn(n, h, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+        let layer = MaskedLayer::new(&w, &b);
+        let (want, want_count) = layer.forward_masked(&a, &mask);
+        let pool = ThreadPool::new(4);
+        for k in [0usize, 1, 3, 4] {
+            let lease = pool.lease(k);
+            let mut got = Mat::full(n, h, f32::NAN);
+            let count = layer.forward_masked_par(&a, &mask, &mut got, &lease);
+            assert_eq!(count, want_count, "lease {k}");
+            assert_eq!(got.as_slice(), want.as_slice(), "lease {k}");
+            drop(lease);
+            let mut ctx = ExecCtx::over(pool.lease(k));
+            let mut via_ctx = Mat::full(n, h, f32::NAN);
+            let count = layer.forward_masked_ctx(&a, &mask, &mut via_ctx, &mut ctx);
+            assert_eq!(count, want_count, "ctx lease {k}");
+            assert_eq!(via_ctx.as_slice(), want.as_slice(), "ctx lease {k}");
+        }
+        assert_eq!(pool.leased(), 0);
     }
 
     #[test]

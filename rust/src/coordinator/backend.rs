@@ -5,8 +5,8 @@ use super::protocol::Mode;
 use crate::autotune::{Autotuner, MachineProfile};
 use crate::condcomp::{DispatchPolicy, FlopBreakdown, Kernel, MaskedLayer, PolicyTable};
 use crate::estimator::SignEstimatorSet;
-use crate::linalg::{matmul_into_par, Mat};
-use crate::nn::activations::relu_inplace;
+use crate::exec::ExecCtx;
+use crate::linalg::{matmul_into_ctx, Mat};
 use crate::nn::mlp::add_bias;
 use crate::nn::Mlp;
 use crate::parallel::ThreadPool;
@@ -14,70 +14,9 @@ use crate::runtime::ModelRuntime;
 use anyhow::Result;
 use std::sync::{Mutex, RwLock};
 
-/// A pool of recycled activation buffers: the serving hot path allocates
-/// nothing per batch after warmup. Each shard executor owns one arena
-/// outright (no lock on the per-batch path); the backend keeps a shared,
-/// mutex-guarded arena for callers that predict without an executor context.
-pub struct ScratchArena {
-    bufs: Vec<Vec<f32>>,
-    cap: usize,
-}
-
-impl ScratchArena {
-    /// Cap on recycled buffers (bounds idle memory; beyond this they are
-    /// simply dropped).
-    pub const DEFAULT_CAP: usize = 8;
-
-    pub fn new() -> ScratchArena {
-        ScratchArena::with_capacity(ScratchArena::DEFAULT_CAP)
-    }
-
-    pub fn with_capacity(cap: usize) -> ScratchArena {
-        ScratchArena { bufs: Vec::new(), cap: cap.max(1) }
-    }
-
-    /// A buffer of exactly `len` elements. Resize only (no clear): every
-    /// consumer overwrites the whole buffer, so re-zeroing a recycled prefix
-    /// would be pure memset tax.
-    pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut buf = self.bufs.pop().unwrap_or_default();
-        buf.resize(len, 0.0);
-        buf
-    }
-
-    /// Hand a buffer back for reuse (dropped once the arena is full).
-    pub fn put(&mut self, buf: Vec<f32>) {
-        if self.bufs.len() < self.cap {
-            self.bufs.push(buf);
-        }
-    }
-
-    /// Number of buffers currently parked.
-    pub fn len(&self) -> usize {
-        self.bufs.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.bufs.is_empty()
-    }
-
-    /// Merge another arena's buffers into this one, respecting the cap
-    /// (shared-arena callers return their borrowed buffers this way).
-    pub fn absorb(&mut self, mut other: ScratchArena) {
-        while self.bufs.len() < self.cap {
-            match other.bufs.pop() {
-                Some(buf) => self.bufs.push(buf),
-                None => break,
-            }
-        }
-    }
-}
-
-impl Default for ScratchArena {
-    fn default() -> ScratchArena {
-        ScratchArena::new()
-    }
-}
+// The arena moved to `exec` (it was never serving-specific); re-exported
+// here so `coordinator::ScratchArena` keeps working.
+pub use crate::exec::ScratchArena;
 
 /// Which implementation serves the request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,21 +36,20 @@ pub trait Backend: Send + Sync {
     /// Forward `x` in the given mode; returns logits and, for the
     /// conditional mode, the achieved FLOP speedup vs dense (Eq. 11).
     fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)>;
-    /// Forward `x` on a caller-owned compute pool with a caller-owned
-    /// scratch arena — the shard-executor entry point: each shard worker
-    /// brings its partitioned slice of the thread budget and its private
-    /// buffer arena, so concurrent shards share neither locks nor buffers.
-    /// Results must be identical to [`Backend::predict`] (the kernels are
-    /// thread-count-invariant); the default ignores the context for
-    /// backends without pool-aware kernels.
-    fn predict_on(
+    /// Forward `x` through a caller-owned [`ExecCtx`] — the shard-executor
+    /// entry point: each shard worker brings a leased slice of the shared
+    /// thread budget, its recycled buffer arena, and its metrics scope in
+    /// one handle, so concurrent shards share neither locks nor buffers.
+    /// Results must be bit-identical to [`Backend::predict`] for any lease
+    /// width (the kernels are thread-count-invariant); the default ignores
+    /// the context for backends without ctx-aware kernels.
+    fn predict_ctx(
         &self,
         x: &Mat,
         mode: Mode,
-        pool: &ThreadPool,
-        arena: &mut ScratchArena,
+        ctx: &mut ExecCtx<'_>,
     ) -> Result<(Mat, Option<f64>)> {
-        let (_, _) = (pool, arena);
+        let _ = ctx;
         self.predict(x, mode)
     }
     /// Recompute estimator factors from the current weights.
@@ -139,7 +77,8 @@ pub struct NativeBackend {
     dispatch: RwLock<PolicyTable>,
     /// Recycled activation buffers for pool-less callers
     /// ([`Backend::predict`]); shard executors bypass this entirely by
-    /// bringing their own arena to [`Backend::predict_on`].
+    /// bringing their own arena inside the [`ExecCtx`] they hand to
+    /// [`Backend::predict_ctx`].
     scratch: Mutex<ScratchArena>,
 }
 
@@ -214,7 +153,9 @@ impl NativeBackend {
     /// (online calibration — the fallback when no machine profile is on
     /// disk) and install the resulting table; returns it so `serve` can log
     /// the per-layer thresholds at startup. Wall-clock bounded by
-    /// `budget_ms`.
+    /// `budget_ms`. The harness measures through an [`ExecCtx`] over a
+    /// full-pool lease, so warm-up exercises exactly the leased code path
+    /// the shard executors will run — one warm-up path, not two.
     pub fn calibrate_dispatch(&self, budget_ms: u64) -> PolicyTable {
         let mut tuner = Autotuner::with_budget_ms(budget_ms.max(1));
         tuner.batch = self.max_batch.clamp(8, 64);
@@ -234,43 +175,42 @@ impl NativeBackend {
     }
 
     /// Conditional forward with flop accounting (shared with experiments),
-    /// on a caller-chosen pool with caller-owned scratch.
+    /// through a caller-owned execution context.
     ///
-    /// Per hidden layer: predict the mask (row shards in parallel), read its
-    /// density α, and let the dispatch policy pick the kernel — masked
-    /// dot-products below the measured threshold, dense axpy GEMM (with the
-    /// mask applied afterwards) above it. The two kernels compute the same
-    /// function (same sums, different float accumulation order); the policy
-    /// only changes which one is faster.
-    fn forward_cond(
-        &self,
-        x: &Mat,
-        pool: &ThreadPool,
-        arena: &mut ScratchArena,
-    ) -> (Mat, FlopBreakdown) {
+    /// Per hidden layer: predict the mask (row shards on the ctx's lease),
+    /// read its density α, and let the dispatch policy pick the kernel —
+    /// masked dot-products below the measured threshold, dense axpy GEMM
+    /// (with the mask applied afterwards) above it. The two kernels compute
+    /// the same function (same sums, different float accumulation order);
+    /// the policy only changes which one is faster.
+    fn forward_cond(&self, x: &Mat, ctx: &mut ExecCtx<'_>) -> (Mat, FlopBreakdown) {
         let est = self.estimators.read().unwrap();
-        // Snapshot the (small) table instead of holding the read guard
-        // across the whole forward — a concurrent recalibration writer
-        // would otherwise stall every in-flight batch behind it.
-        let table = self.policy_table();
+        // The ctx's pinned table wins (tests/calibration force a kernel);
+        // otherwise snapshot the (small) live table instead of holding the
+        // read guard across the whole forward — a concurrent recalibration
+        // writer would otherwise stall every in-flight batch behind it.
+        let table = match ctx.policy() {
+            Some(t) => t.clone(),
+            None => self.policy_table(),
+        };
         let mut flops = FlopBreakdown::default();
         let depth = self.masked.len();
         let mut a = x.clone();
         for l in 0..depth - 1 {
-            let mask = est.layers[l].mask_par(&a, pool);
+            let mask = est.layers[l].mask_ctx(&a, ctx);
             let layer = &self.masked[l];
             let (n, h) = (a.rows(), layer.out_dim());
             let alpha = mask.density() as f64;
-            let mut out = Mat::from_vec(n, h, arena.take(n * h));
+            let mut out = Mat::from_vec(n, h, ctx.take_buf(n * h));
             // Per-layer threshold: each layer's shape has its own fitted α*.
             let computed = match table.policy_for(l).decide(n, layer.in_dim(), h, alpha) {
-                Kernel::MaskedParallel => layer.forward_masked_par(&a, &mask, &mut out, pool),
+                Kernel::MaskedParallel => layer.forward_masked_ctx(&a, &mask, &mut out, ctx),
                 Kernel::DenseParallel => {
                     // Dense axpy GEMM on the untransposed weights, then
                     // bias + ReLU + the estimator's gate — numerically
                     // equivalent to the masked kernel (same sums, different
                     // float accumulation order), every dot product computed.
-                    matmul_into_par(&a, &self.net.weights[l], &mut out, pool);
+                    matmul_into_ctx(&a, &self.net.weights[l], &mut out, ctx);
                     add_bias(&mut out, &self.net.biases[l]);
                     for (o, &m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
                         *o = if *o > 0.0 && m != 0.0 { *o } else { 0.0 };
@@ -288,16 +228,16 @@ impl NativeBackend {
             let prev = std::mem::replace(&mut a, out);
             if l > 0 {
                 // `prev` owns a scratch buffer (layer-0 input is the request).
-                arena.put(prev.into_vec());
+                ctx.put_buf(prev.into_vec());
             }
         }
         let last = &self.masked[depth - 1];
         let mut logits = Mat::from_vec(
             a.rows(),
             last.out_dim(),
-            arena.take(a.rows() * last.out_dim()),
+            ctx.take_buf(a.rows() * last.out_dim()),
         );
-        matmul_into_par(&a, &self.net.weights[depth - 1], &mut logits, pool);
+        matmul_into_ctx(&a, &self.net.weights[depth - 1], &mut logits, ctx);
         add_bias(&mut logits, &last.bias);
         flops.push(crate::condcomp::LayerFlops::from_counts(
             a.rows(),
@@ -307,32 +247,9 @@ impl NativeBackend {
             a.rows() * last.out_dim(),
         ));
         if depth > 1 {
-            arena.put(a.into_vec());
+            ctx.put_buf(a.into_vec());
         }
         (logits, flops)
-    }
-
-    /// Dense control forward on a caller-chosen pool with caller-owned
-    /// scratch. Bit-identical to `Mlp::logits(x, &NoGater)`: same GEMM
-    /// accumulation order (`matmul_into_par` ≡ the serial oracle for any
-    /// thread count), same bias-then-ReLU per hidden layer.
-    fn forward_dense(&self, x: &Mat, pool: &ThreadPool, arena: &mut ScratchArena) -> Mat {
-        let depth = self.net.depth();
-        let mut a = x.clone();
-        for l in 0..depth {
-            let (n, h) = (a.rows(), self.net.weights[l].cols());
-            let mut out = Mat::from_vec(n, h, arena.take(n * h));
-            matmul_into_par(&a, &self.net.weights[l], &mut out, pool);
-            add_bias(&mut out, &self.net.biases[l]);
-            if l < depth - 1 {
-                relu_inplace(&mut out);
-            }
-            let prev = std::mem::replace(&mut a, out);
-            if l > 0 {
-                arena.put(prev.into_vec());
-            }
-        }
-        a
     }
 }
 
@@ -350,26 +267,28 @@ impl Backend for NativeBackend {
     }
 
     fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)> {
-        // Borrow the shared arena by value (brief lock), run on the global
-        // pool, then hand the buffers back — concurrent pool-less callers
-        // simply start from an empty arena and allocate.
-        let mut arena = std::mem::take(&mut *self.scratch.lock().unwrap());
-        let out = self.predict_on(x, mode, crate::parallel::global(), &mut arena);
-        self.scratch.lock().unwrap().absorb(arena);
+        // Borrow the shared arena by value (brief lock) and run through a
+        // *shared* (non-reserving) ctx over the global pool: full machine
+        // width without starving a concurrent server's shard leases, then
+        // hand the buffers back — concurrent pool-less callers simply start
+        // from an empty arena and allocate.
+        let arena = std::mem::take(&mut *self.scratch.lock().unwrap());
+        let mut ctx = ExecCtx::shared(crate::parallel::global()).with_arena(arena);
+        let out = self.predict_ctx(x, mode, &mut ctx);
+        self.scratch.lock().unwrap().absorb(ctx.into_arena());
         out
     }
 
-    fn predict_on(
+    fn predict_ctx(
         &self,
         x: &Mat,
         mode: Mode,
-        pool: &ThreadPool,
-        arena: &mut ScratchArena,
+        ctx: &mut ExecCtx<'_>,
     ) -> Result<(Mat, Option<f64>)> {
         match mode {
-            Mode::Control => Ok((self.forward_dense(x, pool, arena), None)),
+            Mode::Control => Ok((self.net.logits_ctx(x, ctx), None)),
             Mode::ConditionalAe => {
-                let (logits, flops) = self.forward_cond(x, pool, arena);
+                let (logits, flops) = self.forward_cond(x, ctx);
                 Ok((logits, Some(flops.speedup())))
             }
         }
@@ -528,11 +447,11 @@ mod tests {
     }
 
     /// The shard-executor entry point must compute exactly what the
-    /// pool-less path computes, for any pool size and a fresh arena — this
-    /// is the kernel-level half of the "outputs are bit-identical across
-    /// shard counts" serving invariant.
+    /// pool-less path computes, for any pool size, any lease width, and a
+    /// fresh or warm arena — this is the kernel-level half of the "outputs
+    /// are bit-identical across shard counts" serving invariant.
     #[test]
-    fn predict_on_is_bit_identical_for_any_pool_and_arena() {
+    fn predict_ctx_is_bit_identical_for_any_pool_lease_and_arena() {
         let be = native();
         let mut rng = Pcg32::seeded(31);
         let x = Mat::randn(5, 8, 1.0, &mut rng);
@@ -540,37 +459,48 @@ mod tests {
             let (want, _) = be.predict(&x, mode).unwrap();
             for threads in [1usize, 2, 7] {
                 let pool = crate::parallel::ThreadPool::new(threads);
-                let mut arena = ScratchArena::new();
-                // Twice per pool: a cold arena and a warm (recycled) one.
-                for _ in 0..2 {
-                    let (got, _) = be.predict_on(&x, mode, &pool, &mut arena).unwrap();
-                    assert_eq!(
-                        got.as_slice(),
-                        want.as_slice(),
-                        "mode {:?} threads {threads} diverged",
-                        mode
-                    );
+                for grant in [0usize, 1, 2, 7] {
+                    let mut ctx = ExecCtx::over(pool.lease(grant));
+                    // Twice per ctx: a cold arena and a warm (recycled) one.
+                    for _ in 0..2 {
+                        let (got, _) = be.predict_ctx(&x, mode, &mut ctx).unwrap();
+                        assert_eq!(
+                            got.as_slice(),
+                            want.as_slice(),
+                            "mode {:?} threads {threads} lease {grant} diverged",
+                            mode
+                        );
+                        ctx.put_buf(got.into_vec());
+                    }
                 }
+                assert_eq!(pool.leased(), 0, "ctx drop returns the lease");
             }
         }
     }
 
+    /// A ctx-pinned policy table overrides the backend's live table — the
+    /// read-view half of the ExecCtx contract (forcing either extreme must
+    /// not change what is computed, only which kernel computes it).
     #[test]
-    fn scratch_arena_recycles_and_caps() {
-        let mut arena = ScratchArena::with_capacity(2);
-        let a = arena.take(8);
-        assert_eq!(a.len(), 8);
-        arena.put(a);
-        arena.put(vec![0.0; 4]);
-        arena.put(vec![0.0; 16]); // over cap → dropped
-        assert_eq!(arena.len(), 2);
-        // Recycled buffer is resized to the requested length.
-        let b = arena.take(3);
-        assert_eq!(b.len(), 3);
-        let mut other = ScratchArena::new();
-        other.put(vec![0.0; 1]);
-        arena.absorb(other);
-        assert_eq!(arena.len(), 2, "absorb respects the cap");
+    fn ctx_pinned_policy_overrides_the_live_table() {
+        let be = native();
+        let mut rng = Pcg32::seeded(37);
+        let x = Mat::randn(6, 8, 1.0, &mut rng);
+        let pool = crate::parallel::ThreadPool::new(2);
+        // Live table says "always masked"; the ctx pins "always dense".
+        be.set_dispatch(DispatchPolicy::with_cost_ratio(1e-9));
+        let (want_logits, masked_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        let pinned = PolicyTable::uniform(DispatchPolicy::with_cost_ratio(1e9), 2);
+        let mut ctx = ExecCtx::over(pool.lease(2)).with_policy(pinned);
+        let (logits, dense_speedup) = be.predict_ctx(&x, Mode::ConditionalAe, &mut ctx).unwrap();
+        assert!(
+            logits.max_abs_diff(&want_logits) < 1e-4,
+            "pinned policy changed the function, not just the kernel"
+        );
+        // The dense fallback accounts every dot product computed, so the
+        // pinned-dense run must report a lower (or equal) FLOP speedup —
+        // proof the pin actually flipped the kernel choice.
+        assert!(dense_speedup.unwrap() <= masked_speedup.unwrap() + 1e-9);
     }
 
     #[test]

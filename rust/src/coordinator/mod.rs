@@ -22,11 +22,13 @@
 //!
 //! The batching front-end is **sharded** ([`ShardedBatcher`]): requests are
 //! routed (round-robin or least-depth) to one of `server.shards`
-//! independent queues, each drained by a dedicated executor that owns a
-//! recycled scratch arena and a partitioned slice of the compute-thread
-//! budget — so heavy concurrent traffic stops serializing through a single
-//! queue lock while per-request results stay bit-identical to the
-//! single-queue path.
+//! independent queues, each drained by a dedicated executor that owns an
+//! execution context ([`crate::exec::ExecCtx`]) — a leased slice of the
+//! shared compute pool, a recycled scratch arena, and a per-shard metrics
+//! scope — so heavy concurrent traffic stops serializing through a single
+//! queue lock, an N-shard server occupies exactly the configured thread
+//! budget, and per-request results stay bit-identical to the single-queue
+//! path.
 
 pub mod protocol;
 pub mod metrics;
@@ -40,6 +42,6 @@ pub use backend::{Backend, BackendKind, NativeBackend, ScratchArena};
 pub use batcher::{BatchItem, DynamicBatcher};
 pub use metrics::MetricsRegistry;
 pub use protocol::{Request, Response};
-pub use server::{Server, ServerConfig};
+pub use server::{PoolMode, Server, ServerConfig};
 pub use sharded::{RouterKind, ShardRouter, ShardedBatcher};
 pub use scheduler::TrainingScheduler;

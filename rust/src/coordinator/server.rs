@@ -4,19 +4,25 @@
 //! Execution model: the acceptor hands each connection to a reader thread;
 //! predict requests are routed by the [`ShardedBatcher`] onto one of N
 //! independent queues; each queue is drained by a dedicated executor that
-//! owns a recycled [`ScratchArena`] and a [`ThreadPool`] sized from its
-//! partition of the compute-thread budget
-//! ([`crate::parallel::partition_threads`]). Per-request outputs are
-//! bit-identical for any shard count: batches run the same kernels in the
+//! owns an [`ExecCtx`] — a [`crate::parallel::PoolLease`] carving its
+//! [`crate::parallel::partition_threads`] slice out of the **shared** pool,
+//! a recycled [`crate::exec::ScratchArena`], and a per-shard
+//! [`MetricsScope`]. The
+//! leases together hold exactly the configured thread budget: an N-shard
+//! server no longer spawns private pools beside a parked global one
+//! (`threads_total` / `threads_leased` in the `stats` op make this
+//! checkable from the wire). Per-request outputs are bit-identical for any
+//! shard count and any lease width: batches run the same kernels in the
 //! same serial accumulation order wherever they land.
 
-use super::backend::{Backend, ScratchArena};
+use super::backend::Backend;
 use super::batcher::BatchItem;
 use super::metrics::MetricsRegistry;
 use super::protocol::{Mode, Request, Response};
 use super::sharded::{RouterKind, ShardedBatcher};
+use crate::exec::{ExecCtx, MetricsScope};
 use crate::linalg::Mat;
-use crate::parallel::ThreadPool;
+use crate::parallel::{PoolLease, ThreadPool};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,6 +30,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// How shard executors get their compute slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Lease each shard's slice from the shared pool (the default): total
+    /// worker threads == the configured budget.
+    Lease,
+    /// Spawn a private [`ThreadPool`] per shard (the PR-3 baseline, kept so
+    /// the bench sweep can record `serve_lease_vs_private`): budget threads
+    /// in private pools *plus* the parked shared pool.
+    PrivatePools,
+}
 
 /// Server knobs.
 #[derive(Clone, Debug)]
@@ -43,9 +61,12 @@ pub struct ServerConfig {
     /// Compute-thread budget (0 = auto: available parallelism). Sizes the
     /// process-wide pool via `parallel::configure_global` (a no-op if the
     /// pool already exists — the `condcomp serve` CLI sizes it earlier,
-    /// before dispatch calibration) and is then partitioned across the
-    /// shard executors' private pools.
+    /// before dispatch calibration); the shard executors lease their
+    /// slices from that pool.
     pub threads: usize,
+    /// Leased slices of the shared pool (default) vs private per-shard
+    /// pools (bench baseline).
+    pub pool_mode: PoolMode,
 }
 
 impl Default for ServerConfig {
@@ -56,6 +77,7 @@ impl Default for ServerConfig {
             shards: 0,
             router: RouterKind::RoundRobin,
             threads: 0,
+            pool_mode: PoolMode::Lease,
         }
     }
 }
@@ -76,17 +98,31 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start accepting connections; returns once the listener is bound.
+    /// Start accepting connections on the process-wide shared pool; returns
+    /// once the listener is bound.
     pub fn start(backend: Arc<dyn Backend>, cfg: ServerConfig) -> Result<Server> {
         if cfg.threads > 0 {
             crate::parallel::configure_global(cfg.threads);
         }
+        Server::start_on(backend, cfg, crate::parallel::global())
+    }
+
+    /// [`Server::start`] on an explicit compute pool (tests lease-account
+    /// against a pool they own; embedders can isolate servers the same
+    /// way). The pool must be `'static` because executor threads hold
+    /// leases on it for the server's lifetime.
+    pub fn start_on(
+        backend: Arc<dyn Backend>,
+        cfg: ServerConfig,
+        pool: &'static ThreadPool,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(MetricsRegistry::new());
-        let budget = crate::parallel::global().threads();
+        let budget = pool.threads();
         metrics.set_gauge("pool_threads", budget as f64);
+        metrics.set_gauge("threads_total", budget as f64);
         // Export the backend's per-layer dispatch thresholds so operators
         // can see which α* table a deployment is actually running.
         if let Some(thresholds) = backend.dispatch_thresholds() {
@@ -107,39 +143,53 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // One executor per shard: drain the shard's queue, run batches on
-        // this shard's slice of the thread budget with this shard's private
-        // scratch arena, fan results back out.
+        // One executor per shard: drain the shard's queue, run batches
+        // through this shard's ExecCtx — its leased slice of the shared
+        // thread budget, its recycled scratch arena, its metrics scope —
+        // and fan results back out. Leases are taken here, before the
+        // executors spawn, so the gauges are deterministic by the time
+        // `start` returns and the slices cover the budget exactly
+        // (`partition_threads` grants never race each other).
         for (shard, &slice) in slices.iter().enumerate() {
+            // In the default Lease mode each executor carves its slice out
+            // of the shared pool: no new threads. PrivatePools is the PR-3
+            // baseline (private pool per shard, shared pool parked), kept
+            // only so the bench sweep can measure lease-vs-private; a
+            // single-shard "private" server always used the shared pool.
+            let leased: Option<PoolLease<'static>> =
+                if cfg.pool_mode == PoolMode::Lease || num_shards == 1 {
+                    Some(pool.lease(slice))
+                } else {
+                    None
+                };
+            let (width, granted) = match &leased {
+                Some(l) => (l.threads(), l.granted()),
+                None => (slice, 0),
+            };
+            metrics.set_shard_gauge(shard, "pool_threads", width as f64);
+            metrics.set_shard_gauge(shard, "lease_threads", granted as f64);
             let batcher = batcher.clone();
             let backend = backend.clone();
             let metrics = metrics.clone();
-            metrics.set_shard_gauge(shard, "pool_threads", slice as f64);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("condcomp-shard-{shard}"))
                     .spawn(move || {
-                        // A single shard owns the whole budget: reuse the
-                        // process pool instead of doubling the thread count.
-                        // With N > 1 shards each executor gets a private
-                        // pool for its slice; the global pool's threads sit
-                        // parked (condvar) while serving — see ROADMAP for
-                        // the pool-slicing direction that removes this.
-                        let private =
-                            if num_shards == 1 { None } else { Some(ThreadPool::new(slice)) };
-                        let pool: &ThreadPool = private
-                            .as_ref()
-                            .unwrap_or_else(|| crate::parallel::global());
-                        let mut arena = ScratchArena::new();
+                        let private = if leased.is_none() {
+                            Some(ThreadPool::new(slice))
+                        } else {
+                            None
+                        };
+                        let lease = match leased {
+                            Some(l) => l,
+                            // Private-pool baseline: a full lease on the
+                            // executor's own pool.
+                            None => private.as_ref().expect("private pool").lease(slice),
+                        };
+                        let mut ctx = ExecCtx::over(lease)
+                            .with_metrics(MetricsScope::for_shard(metrics.clone(), shard));
                         while let Some(batch) = batcher.next_batch(shard) {
-                            execute_batch(
-                                shard,
-                                batch,
-                                backend.as_ref(),
-                                pool,
-                                &mut arena,
-                                &metrics,
-                            );
+                            execute_batch(shard, batch, backend.as_ref(), &mut ctx, &metrics);
                             metrics
                                 .set_shard_gauge(shard, "depth", batcher.shard(shard).depth() as f64);
                         }
@@ -147,6 +197,7 @@ impl Server {
                     .expect("spawn shard executor"),
             );
         }
+        metrics.set_gauge("threads_leased", pool.leased() as f64);
 
         // Acceptor: non-blocking poll so shutdown is prompt.
         {
@@ -169,6 +220,7 @@ impl Server {
                                     std::thread::spawn(move || {
                                         let _ = handle_connection(
                                             stream, &batcher, backend.as_ref(), &metrics, &stop3,
+                                            pool,
                                         );
                                     });
                                 }
@@ -220,21 +272,21 @@ impl Drop for Server {
     }
 }
 
-/// Run one drained batch on a shard's pool slice + arena and fan the
-/// responses back out. One request increments `predictions` exactly once,
-/// whichever shard executed it.
+/// Run one drained batch through a shard's [`ExecCtx`] (leased pool slice +
+/// recycled arena + per-shard metrics scope) and fan the responses back
+/// out. One request increments `predictions` exactly once, whichever shard
+/// executed it.
 fn execute_batch(
     shard: usize,
     batch: Vec<BatchItem>,
     backend: &dyn Backend,
-    pool: &ThreadPool,
-    arena: &mut ScratchArena,
+    ctx: &mut ExecCtx<'_>,
     metrics: &MetricsRegistry,
 ) {
     let mode = batch[0].mode;
     let total_rows: usize = batch.iter().map(|i| i.x.rows()).sum();
-    metrics.incr("batches");
-    metrics.incr_shard(shard, "batches");
+    // Shard-scoped writes mirror under `shard<i>_*` automatically.
+    ctx.metrics().incr("batches");
     metrics.add("batched_rows", total_rows as u64);
     metrics.set_gauge("last_batch_rows", total_rows as f64);
 
@@ -263,7 +315,7 @@ fn execute_batch(
     }
 
     let t0 = Instant::now();
-    let result = backend.predict_on(&x, mode, pool, arena);
+    let result = backend.predict_ctx(&x, mode, ctx);
     let dt = t0.elapsed().as_secs_f64();
     metrics.observe_latency(&format!("predict_{}", mode.as_str()), dt);
     metrics.observe_shard_latency(shard, "predict", dt);
@@ -271,7 +323,8 @@ fn execute_batch(
     match result {
         Ok((logits, speedup)) => {
             if let Some(s) = speedup {
-                metrics.set_gauge("flop_speedup", s);
+                // Global gauge + this shard's view of it, from one write.
+                ctx.metrics().set_gauge("flop_speedup", s);
             }
             let n_items = batch.len() as u64;
             let mut row = 0usize;
@@ -288,9 +341,9 @@ fn execute_batch(
             // One counter update per batch, not per item: the metrics mutex
             // is shared across shard executors.
             metrics.add("predictions", n_items);
-            // The logits buffer came from the arena; park it for the next
-            // batch on this shard.
-            arena.put(logits.into_vec());
+            // The logits buffer came from the ctx's arena; park it for the
+            // next batch on this shard.
+            ctx.put_buf(logits.into_vec());
         }
         Err(e) => {
             metrics.incr("errors");
@@ -307,6 +360,7 @@ fn handle_connection(
     backend: &dyn Backend,
     metrics: &MetricsRegistry,
     stop: &AtomicBool,
+    pool: &'static ThreadPool,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     let reader = BufReader::new(stream.try_clone()?);
@@ -347,6 +401,11 @@ fn handle_connection(
                 let _ = tx.send(r);
             }
             Ok(Request::Stats { id }) => {
+                // Refresh the thread-accounting gauges right before the
+                // snapshot so the wire always reports live lease state —
+                // the idle-pool claim is checkable from a `stats` call.
+                metrics.set_gauge("threads_total", pool.threads() as f64);
+                metrics.set_gauge("threads_leased", pool.leased() as f64);
                 let mut r = Response::ok(id);
                 r.payload = Some(metrics.snapshot());
                 let _ = tx.send(r);
@@ -580,20 +639,30 @@ mod tests {
         );
         let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[5, 4]), 3);
         let backend = Arc::new(NativeBackend::new(net, est, 16));
-        let server = Server::start(
+        // A pool this test owns: lease accounting is deterministic (the
+        // process-global pool is shared with concurrently running tests).
+        let pool: &'static ThreadPool = Box::leak(Box::new(ThreadPool::new(7)));
+        let server = Server::start_on(
             backend,
             ServerConfig { shards: 3, ..ServerConfig::default() },
+            pool,
         )
         .unwrap();
         assert_eq!(server.num_shards(), 3);
         assert_eq!(server.metrics.gauge("shards"), Some(3.0));
-        // Every shard advertises its pool-slice size; the slices cover the
-        // whole budget.
-        let budget = server.metrics.gauge("pool_threads").unwrap() as usize;
-        let total: f64 = (0..3)
-            .map(|s| server.metrics.shard_gauge(s, "pool_threads").expect("slice gauge"))
+        // Every shard advertises its leased slice; together the leases
+        // cover the whole budget — no private pools, no parked threads.
+        assert_eq!(server.metrics.gauge("threads_total"), Some(7.0));
+        assert_eq!(server.metrics.gauge("threads_leased"), Some(7.0));
+        let widths: Vec<usize> = (0..3)
+            .map(|s| server.metrics.shard_gauge(s, "pool_threads").expect("slice gauge") as usize)
+            .collect();
+        assert_eq!(widths, vec![3, 2, 2], "partition_threads(7, 3)");
+        let granted: f64 = (0..3)
+            .map(|s| server.metrics.shard_gauge(s, "lease_threads").expect("lease gauge"))
             .sum();
-        assert_eq!(total as usize, budget.max(3));
+        assert_eq!(granted as usize, 7, "leases cover the budget exactly");
+        assert_eq!(pool.leased(), 7);
 
         // Requests flow and are answered with shards > 1.
         let mut client = Client::connect(&server.local_addr).unwrap();
@@ -603,6 +672,7 @@ mod tests {
         }
         assert_eq!(server.metrics.counter("predictions"), 6);
         server.shutdown();
+        assert_eq!(pool.leased(), 0, "shutdown returns every shard lease");
     }
 
     #[test]

@@ -3,9 +3,10 @@
 use super::refresh::RefreshPolicy;
 use crate::config::EstimatorConfig;
 use crate::linalg::{LowRank, Mat, Svd};
+use crate::exec::ExecCtx;
 use crate::nn::mlp::{ActivationGater, Mlp};
 use crate::nn::trainer::TrainGater;
-use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
+use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
 use crate::util::Pcg32;
 
 /// A single layer's activation-sign estimator: `S = [a·U·V + b_layer − bias > 0]`.
@@ -67,27 +68,27 @@ impl SignEstimator {
     }
 
     /// [`Self::mask`] with the low-rank prediction computed for row shards
-    /// in parallel on `pool`. Each shard *borrows* its row range from the
-    /// input ([`Mat::view_rows`] — no copy on the serving hot path) and runs
-    /// the low-rank product through `LowRank::apply_view_into`, writing the
-    /// `a·U·V` result straight into the shard's output band, which is then
-    /// thresholded in place; the only per-shard allocation is the small
-    /// `rows × rank` intermediate. The view GEMM keeps the serial kernel's
-    /// accumulation order and every output row is independent of its
-    /// neighbours, so the mask is bit-identical to the serial one for any
-    /// thread count.
-    pub fn mask_par(&self, input: &Mat, pool: &ThreadPool) -> Mat {
+    /// in parallel on an execution target (pool or lease slice). Each shard
+    /// *borrows* its row range from the input ([`Mat::view_rows`] — no copy
+    /// on the serving hot path) and runs the low-rank product through
+    /// `LowRank::apply_view_into`, writing the `a·U·V` result straight into
+    /// the shard's output band, which is then thresholded in place; the
+    /// only per-shard allocation is the small `rows × rank` intermediate.
+    /// The view GEMM keeps the serial kernel's accumulation order and every
+    /// output row is independent of its neighbours, so the mask is
+    /// bit-identical to the serial one for any thread count or lease width.
+    pub fn mask_par<P: Parallelism>(&self, input: &Mat, par: &P) -> Mat {
         let n = input.rows();
         let h = self.layer_bias.len();
         // Below a few thousand estimated cells, shard setup dominates.
-        if pool.threads() == 1 || n < 2 || n * h < 4096 {
+        if par.width() == 1 || n < 2 || n * h < 4096 {
             return self.mask(input);
         }
         let mut out = Mat::zeros(n, h);
-        let rows_per = chunk_rows(n, pool.threads(), 1);
+        let rows_per = chunk_rows(n, par.width(), 1);
         let b = self.bias;
         let rank = self.factors.rank();
-        par_row_chunks(pool, &mut out, rows_per, |row0, band| {
+        par_row_chunks(par, &mut out, rows_per, |row0, band| {
             let rows = band.len() / h;
             let mut tmp = vec![0.0f32; rows * rank];
             self.factors
@@ -102,6 +103,12 @@ impl SignEstimator {
             }
         });
         out
+    }
+
+    /// [`Self::mask_par`] through an execution context: sharded by the
+    /// ctx's lease width — the serving backend's estimator entry point.
+    pub fn mask_ctx(&self, input: &Mat, ctx: &mut ExecCtx<'_>) -> Mat {
+        self.mask_par(input, ctx.lease())
     }
 
     /// Fraction of units predicted live for this input (the achieved α̂).

@@ -1,0 +1,90 @@
+//! Recycled activation buffers for the serving hot path.
+
+/// A pool of recycled activation buffers: the serving hot path allocates
+/// nothing per batch after warmup. Each shard executor owns one arena
+/// outright — inside its [`super::ExecCtx`], so there is no lock on the
+/// per-batch path; the native backend keeps a shared, mutex-guarded arena
+/// for callers that predict without an executor context.
+pub struct ScratchArena {
+    bufs: Vec<Vec<f32>>,
+    cap: usize,
+}
+
+impl ScratchArena {
+    /// Cap on recycled buffers (bounds idle memory; beyond this they are
+    /// simply dropped).
+    pub const DEFAULT_CAP: usize = 8;
+
+    pub fn new() -> ScratchArena {
+        ScratchArena::with_capacity(ScratchArena::DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> ScratchArena {
+        ScratchArena { bufs: Vec::new(), cap: cap.max(1) }
+    }
+
+    /// A buffer of exactly `len` elements. Resize only (no clear): every
+    /// consumer overwrites the whole buffer, so re-zeroing a recycled prefix
+    /// would be pure memset tax.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.bufs.pop().unwrap_or_default();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Hand a buffer back for reuse (dropped once the arena is full).
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if self.bufs.len() < self.cap {
+            self.bufs.push(buf);
+        }
+    }
+
+    /// Number of buffers currently parked.
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Merge another arena's buffers into this one, respecting the cap
+    /// (shared-arena callers return their borrowed buffers this way).
+    pub fn absorb(&mut self, mut other: ScratchArena) {
+        while self.bufs.len() < self.cap {
+            match other.bufs.pop() {
+                Some(buf) => self.bufs.push(buf),
+                None => break,
+            }
+        }
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> ScratchArena {
+        ScratchArena::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_arena_recycles_and_caps() {
+        let mut arena = ScratchArena::with_capacity(2);
+        let a = arena.take(8);
+        assert_eq!(a.len(), 8);
+        arena.put(a);
+        arena.put(vec![0.0; 4]);
+        arena.put(vec![0.0; 16]); // over cap → dropped
+        assert_eq!(arena.len(), 2);
+        // Recycled buffer is resized to the requested length.
+        let b = arena.take(3);
+        assert_eq!(b.len(), 3);
+        let mut other = ScratchArena::new();
+        other.put(vec![0.0; 1]);
+        arena.absorb(other);
+        assert_eq!(arena.len(), 2, "absorb respects the cap");
+    }
+}

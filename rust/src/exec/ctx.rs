@@ -1,0 +1,246 @@
+//! The execution context: one handle for pool lease, scratch arena, policy
+//! view, and metrics scope.
+
+use super::arena::ScratchArena;
+use crate::condcomp::PolicyTable;
+use crate::coordinator::metrics::MetricsRegistry;
+use crate::parallel::{PoolLease, ThreadPool};
+use std::sync::Arc;
+
+/// Where a context's metrics land: nowhere (tests, CLI one-shots), a shared
+/// registry, or a shard-scoped view of one. Shard-scoped writes mirror each
+/// value under both the global key and the `shard<i>_` key
+/// ([`MetricsRegistry::shard_key`]), so dashboards see the fleet total and
+/// the per-shard breakdown from one write.
+#[derive(Clone, Default)]
+pub struct MetricsScope {
+    registry: Option<Arc<MetricsRegistry>>,
+    shard: Option<usize>,
+}
+
+impl MetricsScope {
+    /// No-op scope: every write is dropped.
+    pub fn none() -> MetricsScope {
+        MetricsScope::default()
+    }
+
+    /// Global scope: writes land under their plain keys only.
+    pub fn global(registry: Arc<MetricsRegistry>) -> MetricsScope {
+        MetricsScope { registry: Some(registry), shard: None }
+    }
+
+    /// Shard scope: writes land under the plain key *and* the shard key.
+    pub fn for_shard(registry: Arc<MetricsRegistry>, shard: usize) -> MetricsScope {
+        MetricsScope { registry: Some(registry), shard: Some(shard) }
+    }
+
+    /// The shard this scope is pinned to, if any.
+    pub fn shard(&self) -> Option<usize> {
+        self.shard
+    }
+
+    /// The backing registry, if any (for writes that must stay global-only,
+    /// e.g. cross-shard totals the caller aggregates itself).
+    pub fn registry(&self) -> Option<&MetricsRegistry> {
+        self.registry.as_deref()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        if let Some(reg) = &self.registry {
+            reg.add(name, by);
+            if let Some(shard) = self.shard {
+                reg.add(&MetricsRegistry::shard_key(shard, name), by);
+            }
+        }
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        if let Some(reg) = &self.registry {
+            reg.set_gauge(name, value);
+            if let Some(shard) = self.shard {
+                reg.set_shard_gauge(shard, name, value);
+            }
+        }
+    }
+
+    pub fn observe_latency(&self, name: &str, seconds: f64) {
+        if let Some(reg) = &self.registry {
+            reg.observe_latency(name, seconds);
+            if let Some(shard) = self.shard {
+                reg.observe_shard_latency(shard, name, seconds);
+            }
+        }
+    }
+}
+
+/// One borrowed handle for everything a forward pass executes with:
+///
+/// - a [`PoolLease`] — which slice of the shared worker pool this caller
+///   may occupy (the kernels' ctx entry points chunk by its width);
+/// - a [`ScratchArena`] — recycled activation buffers, owned by the ctx so
+///   the per-batch path takes no lock;
+/// - an optional pinned [`PolicyTable`] — a read view of the dispatch
+///   policy; when unset, backends snapshot their own live table per batch,
+///   and tests/calibration pin one to force a kernel choice;
+/// - a [`MetricsScope`] — where execution metrics land (per-shard on the
+///   serving path, nowhere for CLI one-shots).
+///
+/// The ctx is long-lived: a shard executor builds one at startup and
+/// threads `&mut ExecCtx` through every batch, so arena buffers recycle
+/// across batches and the lease is held for the executor's lifetime.
+/// Results never depend on the ctx (lease width, arena state, metrics) —
+/// only the pinned policy can change *which* of the two numerically
+/// equivalent kernels runs.
+pub struct ExecCtx<'p> {
+    lease: PoolLease<'p>,
+    arena: ScratchArena,
+    policy: Option<PolicyTable>,
+    metrics: MetricsScope,
+}
+
+impl<'p> ExecCtx<'p> {
+    /// Ctx over an explicit lease, with a fresh arena and no metrics.
+    pub fn over(lease: PoolLease<'p>) -> ExecCtx<'p> {
+        ExecCtx {
+            lease,
+            arena: ScratchArena::new(),
+            policy: None,
+            metrics: MetricsScope::none(),
+        }
+    }
+
+    /// Ctx over a *reserving* full-pool lease (granted whatever capacity is
+    /// free). The startup-calibration path uses this so warm-up exercises
+    /// exactly the leased code path serving will run.
+    pub fn full(pool: &'p ThreadPool) -> ExecCtx<'p> {
+        ExecCtx::over(pool.lease(pool.threads()))
+    }
+
+    /// Ctx over a non-reserving shared view of the pool: full width, no
+    /// slots subtracted from the leasable capacity. The compatibility path
+    /// for pool-less callers ([`crate::coordinator::Backend::predict`]).
+    pub fn shared(pool: &'p ThreadPool) -> ExecCtx<'p> {
+        ExecCtx::over(pool.share())
+    }
+
+    /// Replace the arena (e.g. with recycled buffers from a shared pool).
+    pub fn with_arena(mut self, arena: ScratchArena) -> ExecCtx<'p> {
+        self.arena = arena;
+        self
+    }
+
+    /// Pin a dispatch-policy table: backends use it instead of their own
+    /// live table, so the caller controls the kernel choice.
+    pub fn with_policy(mut self, table: PolicyTable) -> ExecCtx<'p> {
+        self.policy = Some(table);
+        self
+    }
+
+    /// Attach a metrics scope.
+    pub fn with_metrics(mut self, metrics: MetricsScope) -> ExecCtx<'p> {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The pool slice this ctx executes on.
+    pub fn lease(&self) -> &PoolLease<'p> {
+        &self.lease
+    }
+
+    /// Effective worker count (the lease width; `1` = inline).
+    pub fn threads(&self) -> usize {
+        self.lease.threads()
+    }
+
+    /// The recycled-buffer arena.
+    pub fn arena(&mut self) -> &mut ScratchArena {
+        &mut self.arena
+    }
+
+    /// Take a buffer of exactly `len` elements from the arena.
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        self.arena.take(len)
+    }
+
+    /// Return a buffer to the arena for reuse.
+    pub fn put_buf(&mut self, buf: Vec<f32>) {
+        self.arena.put(buf);
+    }
+
+    /// The pinned policy table, if any.
+    pub fn policy(&self) -> Option<&PolicyTable> {
+        self.policy.as_ref()
+    }
+
+    /// Where this ctx's execution metrics land.
+    pub fn metrics(&self) -> &MetricsScope {
+        &self.metrics
+    }
+
+    /// Tear down, returning the arena (shared-arena callers hand their
+    /// buffers back this way). Drops the lease, releasing its reservation.
+    pub fn into_arena(self) -> ScratchArena {
+        self.arena
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::ThreadPool;
+
+    #[test]
+    fn ctx_carries_lease_width_and_recycles_buffers() {
+        let pool = ThreadPool::new(4);
+        let mut ctx = ExecCtx::over(pool.lease(2));
+        assert_eq!(ctx.threads(), 2);
+        assert_eq!(pool.leased(), 2);
+        let buf = ctx.take_buf(16);
+        assert_eq!(buf.len(), 16);
+        ctx.put_buf(buf);
+        assert_eq!(ctx.arena().len(), 1);
+        let arena = ctx.into_arena();
+        assert_eq!(arena.len(), 1);
+        assert_eq!(pool.leased(), 0, "into_arena drops the lease");
+    }
+
+    #[test]
+    fn full_reserves_and_shared_does_not() {
+        let pool = ThreadPool::new(3);
+        {
+            let ctx = ExecCtx::full(&pool);
+            assert_eq!(ctx.threads(), 3);
+            assert_eq!(pool.leased(), 3);
+        }
+        assert_eq!(pool.leased(), 0);
+        let ctx = ExecCtx::shared(&pool);
+        assert_eq!(ctx.threads(), 3);
+        assert_eq!(pool.leased(), 0);
+    }
+
+    #[test]
+    fn shard_scope_mirrors_writes_under_both_keys() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let scope = MetricsScope::for_shard(reg.clone(), 2);
+        scope.incr("batches");
+        scope.add("rows", 5);
+        scope.set_gauge("speedup", 1.5);
+        scope.observe_latency("predict", 0.25);
+        assert_eq!(reg.counter("batches"), 1);
+        assert_eq!(reg.shard_counter(2, "batches"), 1);
+        assert_eq!(reg.counter("shard2_rows"), 5);
+        assert_eq!(reg.gauge("speedup"), Some(1.5));
+        assert_eq!(reg.shard_gauge(2, "speedup"), Some(1.5));
+        assert!(reg.mean_latency("shard2_predict").is_some());
+        assert_eq!(scope.shard(), Some(2));
+        // The no-op scope drops everything.
+        let none = MetricsScope::none();
+        none.incr("never");
+        assert!(none.registry().is_none());
+        assert_eq!(reg.counter("never"), 0);
+    }
+}

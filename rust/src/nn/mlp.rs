@@ -3,7 +3,8 @@
 
 use super::activations::{argmax_rows, relu_inplace, softmax_rows};
 use crate::config::NetConfig;
-use crate::linalg::{matmul_auto, Mat};
+use crate::exec::ExecCtx;
+use crate::linalg::{matmul_auto, matmul_into_ctx, Mat};
 use crate::util::Pcg32;
 
 /// Supplies the paper's `S_l` mask (Eq. 5) for a hidden layer, given that
@@ -135,6 +136,34 @@ impl Mlp {
         self.forward(x, gater, None).logits
     }
 
+    /// Dense inference forward through an execution context — the serving
+    /// control path. Bit-identical to `logits(x, &NoGater)`: same GEMM
+    /// accumulation order (the parallel kernel ≡ the serial oracle for any
+    /// lease width), same bias-then-ReLU per hidden layer; activation
+    /// buffers come from (and return to) the ctx's arena, so nothing is
+    /// allocated per batch after warmup. The returned logits own an arena
+    /// buffer — serving callers hand it back via [`ExecCtx::put_buf`].
+    pub fn logits_ctx(&self, x: &Mat, ctx: &mut ExecCtx<'_>) -> Mat {
+        let depth = self.depth();
+        let mut a = x.clone();
+        for l in 0..depth {
+            let (n, h) = (a.rows(), self.weights[l].cols());
+            let mut out = Mat::from_vec(n, h, ctx.take_buf(n * h));
+            matmul_into_ctx(&a, &self.weights[l], &mut out, ctx);
+            add_bias(&mut out, &self.biases[l]);
+            if l < depth - 1 {
+                relu_inplace(&mut out);
+            }
+            let prev = std::mem::replace(&mut a, out);
+            if l > 0 {
+                // `prev` owns an arena buffer (the layer-0 input is the
+                // caller's batch).
+                ctx.put_buf(prev.into_vec());
+            }
+        }
+        a
+    }
+
     /// Predicted classes.
     pub fn predict(&self, x: &Mat, gater: &dyn ActivationGater) -> Vec<usize> {
         argmax_rows(&self.logits(x, gater))
@@ -249,6 +278,26 @@ mod tests {
         let a = net.logits(&x, &NoGater);
         let b = net.logits(&x, &NoGater);
         assert_eq!(a, b);
+    }
+
+    /// The ctx forward is the ungated forward: bit-identical for any lease
+    /// width, cold or warm arena.
+    #[test]
+    fn logits_ctx_is_bit_identical_to_logits() {
+        let mut rng = Pcg32::seeded(21);
+        let net = Mlp::init(&tiny_cfg(), &mut rng);
+        let x = Mat::randn(6, 5, 1.0, &mut rng);
+        let want = net.logits(&x, &NoGater);
+        let pool = crate::parallel::ThreadPool::new(3);
+        for k in [0usize, 1, 3] {
+            let mut ctx = crate::exec::ExecCtx::over(pool.lease(k));
+            for round in 0..2 {
+                let got = net.logits_ctx(&x, &mut ctx);
+                assert_eq!(got.as_slice(), want.as_slice(), "lease {k} round {round}");
+                let logits_buf = got.into_vec();
+                ctx.put_buf(logits_buf);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Pool slicing: lease `k` workers from a shared [`ThreadPool`].
+//!
+//! PR 3's sharded coordinator gave every shard executor a *private*
+//! `ThreadPool` sized by [`super::partition_threads`], which meant an
+//! N-shard server spawned `budget + global-pool` threads with the global
+//! pool parked the whole time. A [`PoolLease`] removes that cost: it is a
+//! **reservation** of `k` worker slots on the shared pool — no new threads,
+//! just an atomic counter bounding how much of the pool each holder may
+//! occupy at once.
+//!
+//! Semantics:
+//!
+//! - [`ThreadPool::lease`]`(k)` grants `min(k, threads − leased)` slots;
+//!   concurrent grants can never sum past the pool size. The grant is
+//!   returned when the lease drops (including during a panic unwind).
+//! - A lease's **width** (`granted.max(1)`) is what the partition
+//!   primitives size their chunking by; a zero-grant lease degrades to
+//!   inline execution on the caller's thread, exactly like a one-thread
+//!   pool. Nested requests (from inside a pool job) and `k == 0` degrade
+//!   the same way, so leasing is always safe to call.
+//! - [`PoolLease::scope`] mirrors [`ThreadPool::scope`]: jobs borrow from
+//!   the caller's stack and the first job panic is re-raised when the scope
+//!   closes. Jobs land on the shared queue — a lease bounds how many chunks
+//!   a *well-behaved* caller enqueues (the partition primitives spawn at
+//!   most `width` jobs per scope), it does not partition the physical
+//!   workers, so the pool stays work-conserving.
+//! - [`ThreadPool::share`] is the non-reserving variant: full pool width,
+//!   nothing subtracted from the leasable capacity. It is the
+//!   compatibility path for pool-less callers (`Backend::predict`) that
+//!   should use whatever the machine has without starving the serving
+//!   executors' reservations.
+//!
+//! Bit-identity: results never depend on the lease width (property-tested
+//! per kernel and end-to-end in `tests/serve_e2e.rs`); the width only
+//! changes wall-clock and how politely callers share the machine.
+
+use super::pool::{on_pool_thread, Parallelism, Scope, ThreadPool};
+
+/// A scoped slice of a shared [`ThreadPool`]: `granted` reserved worker
+/// slots, returned on drop.
+pub struct PoolLease<'p> {
+    pool: &'p ThreadPool,
+    /// Effective worker count for partitioning (`≥ 1`; `1` = inline).
+    width: usize,
+    /// Slots subtracted from the pool's leasable capacity (0 for shared and
+    /// degraded leases).
+    reserved: usize,
+}
+
+impl ThreadPool {
+    /// Lease up to `k` workers from this pool. The grant is
+    /// `min(k, threads − leased)` — possibly 0, in which case the lease
+    /// degrades to inline execution. Requests from inside a pool job and
+    /// `k == 0` degrade inline immediately (nested scopes must never queue
+    /// behind their own worker).
+    pub fn lease(&self, k: usize) -> PoolLease<'_> {
+        if k == 0 || on_pool_thread() {
+            return PoolLease { pool: self, width: 1, reserved: 0 };
+        }
+        let granted = self.try_reserve(k);
+        PoolLease { pool: self, width: granted.max(1), reserved: granted }
+    }
+
+    /// A non-reserving lease over the whole pool: full width, nothing
+    /// subtracted from the leasable capacity. Pool-less callers use this to
+    /// ride the shared pool without starving concurrent reservations.
+    pub fn share(&self) -> PoolLease<'_> {
+        let width = if on_pool_thread() { 1 } else { self.threads() };
+        PoolLease { pool: self, width, reserved: 0 }
+    }
+}
+
+impl<'p> PoolLease<'p> {
+    /// The pool this lease slices.
+    pub fn pool(&self) -> &'p ThreadPool {
+        self.pool
+    }
+
+    /// Worker slots actually reserved (0 for shared/degraded leases) — the
+    /// number the serving `stats` op reports per shard.
+    pub fn granted(&self) -> usize {
+        self.reserved
+    }
+
+    /// Effective worker count for partitioning (`granted.max(1)` for
+    /// reserving leases; the pool size for shared ones). `1` means work
+    /// runs inline on the caller's thread.
+    pub fn threads(&self) -> usize {
+        self.width
+    }
+
+    /// True when this lease executes inline rather than on pool workers.
+    pub fn is_inline(&self) -> bool {
+        self.width <= 1
+    }
+
+    /// Run `f` with a [`Scope`], mirroring [`ThreadPool::scope`]: returns
+    /// after every spawned job finished; the first job panic is re-raised
+    /// here. Degrades to inline execution for zero-width leases and when
+    /// called from a pool job.
+    pub fn scope<'env, F, T>(&'env self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        if self.width > 1 && !on_pool_thread() {
+            self.pool.scope(f)
+        } else {
+            self.pool.scope_inline(f)
+        }
+    }
+}
+
+impl Parallelism for PoolLease<'_> {
+    fn pool(&self) -> &ThreadPool {
+        self.pool
+    }
+
+    fn width(&self) -> usize {
+        self.width
+    }
+}
+
+impl Drop for PoolLease<'_> {
+    fn drop(&mut self) {
+        self.pool.release_reserved(self.reserved);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn grants_clamp_to_available_capacity() {
+        let pool = ThreadPool::new(4);
+        let a = pool.lease(3);
+        assert_eq!(a.granted(), 3);
+        assert_eq!(a.threads(), 3);
+        assert_eq!(pool.leased(), 3);
+        let b = pool.lease(3);
+        assert_eq!(b.granted(), 1, "only one slot left");
+        let c = pool.lease(2);
+        assert_eq!(c.granted(), 0, "exhausted pool grants nothing");
+        assert_eq!(c.threads(), 1, "zero-grant lease degrades inline");
+        assert!(c.is_inline());
+        assert_eq!(pool.leased(), 4);
+        drop(b);
+        assert_eq!(pool.leased(), 3);
+        drop(a);
+        drop(c);
+        assert_eq!(pool.leased(), 0);
+    }
+
+    #[test]
+    fn zero_request_and_shared_leases_reserve_nothing() {
+        let pool = ThreadPool::new(3);
+        let z = pool.lease(0);
+        assert_eq!((z.granted(), z.threads()), (0, 1));
+        let s = pool.share();
+        assert_eq!((s.granted(), s.threads()), (0, 3));
+        assert!(!s.is_inline());
+        assert_eq!(pool.leased(), 0, "neither touches the counter");
+        // A shared lease does not block reservations.
+        let r = pool.lease(3);
+        assert_eq!(r.granted(), 3);
+    }
+
+    #[test]
+    fn lease_scope_runs_jobs_and_releases_on_drop() {
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU64::new(0);
+        {
+            let lease = pool.lease(2);
+            lease.scope(|s| {
+                for i in 1..=10u64 {
+                    let sum = &sum;
+                    s.spawn(move || {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(pool.leased(), 2, "held across the scope");
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+        assert_eq!(pool.leased(), 0);
+    }
+
+    #[test]
+    fn lease_releases_during_panic_unwind() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let lease = pool.lease(3);
+            assert_eq!(pool.leased(), 3);
+            lease.scope(|s| {
+                s.spawn(|| panic!("boom in leased job"));
+            });
+        }));
+        let payload = result.expect_err("scope re-raises the job panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("");
+        assert!(msg.contains("boom in leased job"), "payload lost: {msg:?}");
+        assert_eq!(pool.leased(), 0, "reservation returned during unwind");
+        // And the pool still works.
+        assert_eq!(pool.lease(4).granted(), 4);
+    }
+
+    #[test]
+    fn nested_lease_requests_degrade_inline() {
+        let pool = ThreadPool::new(2);
+        let outer = std::thread::current().id();
+        let ok = std::sync::Mutex::new(false);
+        pool.scope(|s| {
+            let ok = &ok;
+            let pool = &pool;
+            s.spawn(move || {
+                let worker = std::thread::current().id();
+                assert_ne!(worker, outer, "job must be on a pool worker");
+                let lease = pool.lease(2);
+                assert_eq!(lease.granted(), 0, "nested lease grants nothing");
+                assert!(lease.is_inline());
+                let mut ran_on = None;
+                lease.scope(|s2| {
+                    let slot = &mut ran_on;
+                    s2.spawn(move || *slot = Some(std::thread::current().id()));
+                });
+                assert_eq!(ran_on, Some(worker), "nested scope ran inline");
+                *ok.lock().unwrap() = true;
+            });
+        });
+        assert!(*ok.lock().unwrap());
+        assert_eq!(pool.leased(), 0);
+    }
+
+    #[test]
+    fn inline_scope_preserves_panic_payloads() {
+        let pool = ThreadPool::new(2);
+        let lease = pool.lease(0); // inline
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            lease.scope(|s| s.spawn(|| panic!("inline boom")));
+        }));
+        let payload = result.expect_err("inline scope re-raises too");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("inline boom"), "payload lost: {msg:?}");
+    }
+}

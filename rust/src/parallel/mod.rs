@@ -13,11 +13,18 @@
 //!   the masked forward, the estimator and the serving backend all execute
 //!   on this one pool, so concurrent server workers queue compute instead of
 //!   oversubscribing cores.
+//! - [`PoolLease`] — a scoped slice of the shared pool
+//!   ([`ThreadPool::lease`]`(k)`): `k` worker slots reserved atomically
+//!   (concurrent grants never sum past the pool size), returned on drop.
+//!   The serving coordinator's shard executors each hold one, so an
+//!   N-shard server occupies exactly the configured thread budget instead
+//!   of spawning private pools beside a parked global one.
 //! - [`par_chunks_mut`] / [`par_row_chunks`] / [`chunk_rows`] — contiguous
-//!   disjoint-chunk partitioning. Work inside a chunk runs exactly the code
-//!   the serial kernel runs, so every parallel kernel in the crate is
-//!   **bit-identical to its serial oracle and invariant to the thread
-//!   count** (pinned by property tests at thread counts 1, 2 and 7).
+//!   disjoint-chunk partitioning, generic over [`Parallelism`] (a whole
+//!   pool or a lease). Work inside a chunk runs exactly the code the serial
+//!   kernel runs, so every parallel kernel in the crate is **bit-identical
+//!   to its serial oracle and invariant to the thread count and lease
+//!   width** (pinned by property tests at thread counts 1, 2 and 7).
 //!
 //! Rules of the road:
 //!
@@ -35,10 +42,12 @@
 //! and the §3.4 cost model.
 
 pub mod pool;
+pub mod lease;
 pub mod partition;
 
+pub use lease::PoolLease;
 pub use partition::{chunk_rows, par_chunks_mut, par_row_chunks, partition_threads};
 pub use pool::{
-    configure_global, configure_global_if_unset, default_threads, global, on_pool_thread, Scope,
-    ThreadPool,
+    configure_global, configure_global_if_unset, default_threads, global, on_pool_thread,
+    Parallelism, Scope, ThreadPool,
 };

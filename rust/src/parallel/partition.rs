@@ -1,4 +1,4 @@
-//! Data-parallel partitioning primitives on top of [`ThreadPool`].
+//! Data-parallel partitioning primitives on top of [`super::ThreadPool`].
 //!
 //! All primitives split work into **contiguous, disjoint chunks** and hand
 //! each chunk to one pool job. Because every chunk is computed by exactly the
@@ -8,16 +8,21 @@
 //! Per-chunk return values come back in chunk order, so reductions over them
 //! (e.g. the masked GEMM's `computed` counts) are deterministic too.
 //!
-//! Serial fallbacks: a single chunk, a one-thread pool, or being called from
-//! inside a pool job ([`on_pool_thread`], the no-nesting guard) all run the
-//! chunks inline on the caller's thread.
+//! Serial fallbacks: a single chunk, a one-wide execution target, or being
+//! called from inside a pool job ([`on_pool_thread`], the no-nesting guard)
+//! all run the chunks inline on the caller's thread.
+//!
+//! Every primitive is generic over [`Parallelism`], so the same code path
+//! serves a whole [`super::ThreadPool`] and a [`super::PoolLease`] slice of
+//! one — chunking is sized by the target's *width*, execution lands on its
+//! pool.
 
-use super::pool::{on_pool_thread, ThreadPool};
+use super::pool::{on_pool_thread, Parallelism};
 use crate::linalg::Mat;
 
 #[inline]
 fn div_up(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Rows per chunk so that `total` rows split into at most `threads` chunks,
@@ -31,10 +36,10 @@ pub fn chunk_rows(total: usize, threads: usize, quantum: usize) -> usize {
 }
 
 /// Split a compute-thread budget of `total` threads into `shards` per-shard
-/// pool sizes — the serving coordinator's "partitioned slice of the shared
-/// pool": each shard executor gets its own [`ThreadPool`] sized from this
-/// split, so the shards together use the configured budget instead of each
-/// oversubscribing the whole machine.
+/// slice sizes — the serving coordinator's "partitioned slice of the shared
+/// pool": each shard executor leases a [`super::PoolLease`] of this size
+/// from the shared pool, so the shards together use the configured budget
+/// instead of each oversubscribing the whole machine.
 ///
 /// Every shard gets at least 1 thread; when `total` does not divide evenly
 /// the remainder goes to the lowest-indexed shards, so
@@ -51,22 +56,23 @@ pub fn partition_threads(total: usize, shards: usize) -> Vec<usize> {
 
 /// Split `data` into chunks of `chunk_len` elements (last chunk may be
 /// short) and run `f(chunk_index, element_offset, chunk)` for each, on the
-/// pool when it pays and inline otherwise. Returns the per-chunk results in
-/// chunk order.
-pub fn par_chunks_mut<T, R, F>(
-    pool: &ThreadPool,
+/// target's pool when it pays and inline otherwise. Returns the per-chunk
+/// results in chunk order.
+pub fn par_chunks_mut<P, T, R, F>(
+    par: &P,
     data: &mut [T],
     chunk_len: usize,
     f: F,
 ) -> Vec<R>
 where
+    P: Parallelism,
     T: Send,
     R: Send,
     F: Fn(usize, usize, &mut [T]) -> R + Sync,
 {
     let chunk_len = chunk_len.max(1);
     let n_chunks = div_up(data.len(), chunk_len);
-    if n_chunks <= 1 || pool.threads() == 1 || on_pool_thread() {
+    if n_chunks <= 1 || par.width() == 1 || on_pool_thread() {
         return data
             .chunks_mut(chunk_len)
             .enumerate()
@@ -76,7 +82,7 @@ where
     let mut results: Vec<Option<R>> = Vec::with_capacity(n_chunks);
     results.resize_with(n_chunks, || None);
     let f = &f;
-    pool.scope(|s| {
+    par.pool().scope(|s| {
         for (i, (slot, chunk)) in results.iter_mut().zip(data.chunks_mut(chunk_len)).enumerate() {
             s.spawn(move || {
                 *slot = Some(f(i, i * chunk_len, chunk));
@@ -92,13 +98,14 @@ where
 /// Row-oriented variant over a matrix: splits `m` into bands of
 /// `rows_per_chunk` whole rows and runs `f(first_row, band)` for each, where
 /// `band` is the row-major storage of those rows. Results in band order.
-pub fn par_row_chunks<R, F>(
-    pool: &ThreadPool,
+pub fn par_row_chunks<P, R, F>(
+    par: &P,
     m: &mut Mat,
     rows_per_chunk: usize,
     f: F,
 ) -> Vec<R>
 where
+    P: Parallelism,
     R: Send,
     F: Fn(usize, &mut [f32]) -> R + Sync,
 {
@@ -107,7 +114,7 @@ where
         return Vec::new();
     }
     let rows_per_chunk = rows_per_chunk.max(1);
-    par_chunks_mut(pool, m.as_mut_slice(), rows_per_chunk * cols, move |_, offset, band| {
+    par_chunks_mut(par, m.as_mut_slice(), rows_per_chunk * cols, move |_, offset, band| {
         f(offset / cols, band)
     })
 }
@@ -115,6 +122,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::ThreadPool;
     use crate::util::proptest::property;
 
     #[test]

@@ -51,6 +51,10 @@ pub struct ThreadPool {
     queue: Arc<Queue>,
     workers: Vec<std::thread::JoinHandle<()>>,
     threads: usize,
+    /// Worker slots currently reserved by live [`super::PoolLease`]s. Grants
+    /// are bounded so the sum never exceeds `threads`; the counter is what
+    /// the serving `stats` op reports as `threads_leased`.
+    leased: AtomicUsize,
 }
 
 impl ThreadPool {
@@ -73,12 +77,51 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { queue, workers, threads }
+        ThreadPool { queue, workers, threads, leased: AtomicUsize::new(0) }
     }
 
     /// Number of worker threads.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Worker slots currently reserved by live leases (`0` when nothing is
+    /// carved out — the whole pool is up for grabs).
+    pub fn leased(&self) -> usize {
+        self.leased.load(Ordering::Acquire)
+    }
+
+    /// Reserve up to `want` worker slots; returns how many were granted
+    /// (`min(want, threads - leased)` at the moment of the reservation —
+    /// concurrent grants can never sum past the pool size). The caller must
+    /// pair every nonzero grant with one [`ThreadPool::release_reserved`];
+    /// [`super::PoolLease`] does this in its `Drop`.
+    pub(crate) fn try_reserve(&self, want: usize) -> usize {
+        let mut cur = self.leased.load(Ordering::Acquire);
+        loop {
+            let avail = self.threads.saturating_sub(cur);
+            let take = want.min(avail);
+            if take == 0 {
+                return 0;
+            }
+            match self.leased.compare_exchange_weak(
+                cur,
+                cur + take,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return take,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return `n` previously reserved slots to the pool.
+    pub(crate) fn release_reserved(&self, n: usize) {
+        if n > 0 {
+            let before = self.leased.fetch_sub(n, Ordering::AcqRel);
+            debug_assert!(before >= n, "lease release underflow: {before} - {n}");
+        }
     }
 
     fn push(&self, job: Job) {
@@ -95,8 +138,27 @@ impl ThreadPool {
     where
         F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
     {
+        self.scope_with(f, false)
+    }
+
+    /// [`ThreadPool::scope`] whose spawns run inline on the caller's thread
+    /// (same panic semantics: the first job panic is re-raised when the
+    /// scope closes). This is the degrade path [`super::PoolLease::scope`]
+    /// takes for zero-width leases and nested calls.
+    pub(crate) fn scope_inline<'env, F, T>(&'env self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        self.scope_with(f, true)
+    }
+
+    fn scope_with<'env, F, T>(&'env self, f: F, inline: bool) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
         let scope = Scope {
             pool: self,
+            inline,
             state: Arc::new(ScopeState {
                 pending: Mutex::new(0),
                 done: Condvar::new(),
@@ -172,6 +234,9 @@ struct ScopeState {
 /// duration of the scope itself, `'env` the environment it may borrow from.
 pub struct Scope<'scope, 'env: 'scope> {
     pool: &'env ThreadPool,
+    /// Inline scopes run every spawn on the caller's thread (lease degrade
+    /// path); panic bookkeeping is identical to the queued path.
+    inline: bool,
     state: Arc<ScopeState>,
     _scope: PhantomData<&'scope mut &'scope ()>,
     _env: PhantomData<&'env mut &'env ()>,
@@ -184,6 +249,15 @@ impl<'scope, 'env> Scope<'scope, 'env> {
     where
         F: FnOnce() + Send + 'scope,
     {
+        if self.inline {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = self.state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            return;
+        }
         *self.state.pending.lock().unwrap() += 1;
         let state = Arc::clone(&self.state);
         let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
@@ -213,6 +287,37 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         while *pending > 0 {
             pending = self.state.done.wait(pending).unwrap();
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution targets
+// ---------------------------------------------------------------------------
+
+/// An execution target for the data-parallel primitives: a whole
+/// [`ThreadPool`] or a [`super::PoolLease`] slice of one.
+///
+/// The partition primitives size their chunking by [`Parallelism::width`]
+/// and execute on [`Parallelism::pool`]. Because chunk boundaries never
+/// change result bits (every kernel in the crate is bit-identical to its
+/// serial oracle), running on a lease of any width computes exactly what the
+/// full pool computes — a lease only bounds how much of the shared pool one
+/// caller occupies at a time.
+pub trait Parallelism {
+    /// The pool that executes spawned jobs.
+    fn pool(&self) -> &ThreadPool;
+    /// Effective worker count used to size work partitions (`1` = run
+    /// inline on the caller's thread).
+    fn width(&self) -> usize;
+}
+
+impl Parallelism for ThreadPool {
+    fn pool(&self) -> &ThreadPool {
+        self
+    }
+
+    fn width(&self) -> usize {
+        self.threads
     }
 }
 

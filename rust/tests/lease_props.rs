@@ -1,0 +1,168 @@
+//! Property tests for the pool-slicing API (`ThreadPool::lease`).
+//!
+//! What the serving coordinator leans on, pinned under randomized
+//! concurrent schedules:
+//!
+//! - concurrent `lease(k)` grants never exceed the pool size, from any
+//!   number of racing threads;
+//! - leases release on scope exit — including when a job panics inside the
+//!   leased scope (the reservation is returned during unwind, never
+//!   leaked);
+//! - nested lease requests (from inside a pool job) degrade to inline
+//!   execution instead of deadlocking;
+//! - `partition_threads`-driven leases cover the compute budget exactly at
+//!   shard counts {1, 2, 7} — the arithmetic the N-shard server relies on
+//!   to spawn precisely the configured thread budget.
+
+use condcomp::parallel::{partition_threads, ThreadPool};
+use condcomp::util::proptest::property;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Shard counts every property runs at (mirrors the thread-count grid the
+/// parallel kernels are pinned at).
+const SHARD_GRID: [usize; 3] = [1, 2, 7];
+
+#[test]
+fn concurrent_grants_never_exceed_the_pool_size() {
+    for &pool_size in &[1usize, 2, 5, 8] {
+        let pool = ThreadPool::new(pool_size);
+        let over_granted = AtomicBool::new(false);
+        let grants_seen = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..6usize {
+                let pool = &pool;
+                let over_granted = &over_granted;
+                let grants_seen = &grants_seen;
+                s.spawn(move || {
+                    for i in 0..40usize {
+                        let want = (t + i) % (pool_size + 2);
+                        let lease = pool.lease(want);
+                        // Each grant is bounded by the request, and the
+                        // pool-wide outstanding total is bounded by the
+                        // pool size at every observable instant.
+                        if lease.granted() > want || pool.leased() > pool_size {
+                            over_granted.store(true, Ordering::Relaxed);
+                        }
+                        grants_seen.fetch_add(lease.granted(), Ordering::Relaxed);
+                        // Use the lease so the reservation is held across
+                        // real work, not just instantaneous.
+                        let mut data = vec![0u32; 64];
+                        lease.scope(|sc| {
+                            for chunk in data.chunks_mut(16) {
+                                sc.spawn(move || {
+                                    for v in chunk.iter_mut() {
+                                        *v += 1;
+                                    }
+                                });
+                            }
+                        });
+                        assert!(data.iter().all(|&v| v == 1));
+                    }
+                });
+            }
+        });
+        assert!(
+            !over_granted.load(Ordering::Relaxed),
+            "a grant exceeded the request or the pool size ({pool_size})"
+        );
+        assert!(grants_seen.load(Ordering::Relaxed) > 0, "some leases were granted");
+        assert_eq!(pool.leased(), 0, "all leases returned after the race");
+    }
+}
+
+#[test]
+fn leases_release_on_scope_exit_including_panic_in_job() {
+    let pool = ThreadPool::new(4);
+    // Normal exit.
+    {
+        let lease = pool.lease(3);
+        assert_eq!(lease.granted(), 3);
+        assert_eq!(pool.leased(), 3);
+        lease.scope(|s| s.spawn(|| {}));
+        assert_eq!(pool.leased(), 3, "still held until the lease drops");
+    }
+    assert_eq!(pool.leased(), 0);
+
+    // Panic inside a leased job: the scope re-raises, the unwind drops the
+    // lease, and the reservation is returned — not leaked.
+    for round in 0..3 {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let lease = pool.lease(2);
+            assert_eq!(lease.granted(), 2);
+            lease.scope(|s| {
+                s.spawn(|| panic!("leased job panic"));
+                s.spawn(|| { /* sibling job still runs */ });
+            });
+        }));
+        assert!(result.is_err(), "round {round}: job panic must surface");
+        assert_eq!(pool.leased(), 0, "round {round}: reservation leaked");
+    }
+    // Capacity is fully recovered.
+    assert_eq!(pool.lease(4).granted(), 4);
+}
+
+#[test]
+fn nested_lease_requests_degrade_inline_not_deadlock() {
+    let pool = ThreadPool::new(2);
+    let checked = AtomicBool::new(false);
+    pool.scope(|s| {
+        let pool = &pool;
+        let checked = &checked;
+        s.spawn(move || {
+            let worker = std::thread::current().id();
+            let lease = pool.lease(2);
+            assert_eq!(lease.granted(), 0, "nested lease must not reserve");
+            assert_eq!(lease.threads(), 1);
+            assert!(lease.is_inline());
+            // The nested scope completes inline on this worker — if it
+            // enqueued instead, this single-job spawn could deadlock the
+            // 2-worker pool under load.
+            let mut ran_on = None;
+            lease.scope(|s2| {
+                let slot = &mut ran_on;
+                s2.spawn(move || *slot = Some(std::thread::current().id()));
+            });
+            assert_eq!(ran_on, Some(worker), "nested scope escaped the worker");
+            checked.store(true, Ordering::Release);
+        });
+    });
+    assert!(checked.load(Ordering::Acquire));
+    assert_eq!(pool.leased(), 0);
+}
+
+/// The server's startup arithmetic: partition the budget, lease each slice
+/// — the grants must cover the budget exactly (no slice short-changed, no
+/// over-grant) for any budget at shard counts {1, 2, 7}.
+#[test]
+fn partition_driven_leases_cover_the_budget_exactly() {
+    for &shards in &SHARD_GRID {
+        property(&format!("partition leases cover budget at {shards} shards"), 12, |rng| {
+            let budget = rng.index(9) + 1; // 1..=9
+            let pool = ThreadPool::new(budget);
+            let slices = partition_threads(budget, shards);
+            assert_eq!(slices.len(), shards);
+            let leases: Vec<_> = slices.iter().map(|&k| pool.lease(k)).collect();
+            let granted: usize = leases.iter().map(|l| l.granted()).sum();
+            assert_eq!(
+                granted, budget,
+                "budget {budget}, shards {shards}, slices {slices:?}"
+            );
+            assert_eq!(pool.leased(), budget);
+            // Exhausted: one more request degrades inline instead of
+            // oversubscribing.
+            let extra = pool.lease(budget);
+            assert_eq!(extra.granted(), 0);
+            assert_eq!(extra.threads(), 1);
+            drop(extra);
+            // Releasing one slice frees exactly that slice; releasing the
+            // rest empties the counter.
+            let mut leases = leases;
+            let first = slices[0];
+            drop(leases.remove(0));
+            assert_eq!(pool.leased(), budget - first);
+            drop(leases);
+            assert_eq!(pool.leased(), 0);
+        });
+    }
+}

@@ -13,7 +13,10 @@
 //!   arriving after close get an explicit rejection, not silence;
 //! - a synthetic-cost-model `PolicyTable` installs identical per-layer
 //!   dispatch thresholds on every shard (regression guard against
-//!   per-shard policy drift).
+//!   per-shard policy drift);
+//! - an N-shard server's executors lease exactly the configured thread
+//!   budget from the shared pool (no private pools, no parked threads),
+//!   observable from the wire via `threads_total` / `threads_leased`.
 
 use condcomp::autotune::{
     model_fingerprint, Autotuner, CostModel, MachineProfile, PROFILE_SCHEMA_VERSION,
@@ -21,14 +24,14 @@ use condcomp::autotune::{
 use condcomp::config::{EstimatorConfig, ExperimentProfile, NetConfig};
 use condcomp::coordinator::protocol::{Mode, Request, Response};
 use condcomp::coordinator::server::Client;
-use condcomp::coordinator::{
-    Backend, NativeBackend, RouterKind, ScratchArena, Server, ServerConfig,
-};
+use condcomp::coordinator::{Backend, NativeBackend, RouterKind, Server, ServerConfig};
 use condcomp::data::synth::build_dataset;
 use condcomp::estimator::SignEstimatorSet;
+use condcomp::exec::ExecCtx;
 use condcomp::linalg::Mat;
 use condcomp::nn::mlp::NoGater;
 use condcomp::nn::{Mlp, Trainer};
+use condcomp::parallel::ThreadPool;
 use condcomp::util::Pcg32;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -316,9 +319,10 @@ fn synthetic_backend() -> (NativeBackend, [f64; 2]) {
 
 /// Backend-level drift guard: with the synthetic table installed, the
 /// shard-executor entry point must make the same per-layer dispatch
-/// decisions on any pool slice. Logit bits AND the reported FLOP speedup
-/// must match — the speedup counts computed dot products, so it flips if
-/// any shard picks the other kernel.
+/// decisions on any pool slice — any thread count, any lease width, cold
+/// or warm arena. Logit bits AND the reported FLOP speedup must match —
+/// the speedup counts computed dot products, so it flips if any shard
+/// picks the other kernel.
 #[test]
 fn synthetic_policy_table_dispatches_identically_on_every_pool_slice() {
     let (backend, want_alpha) = synthetic_backend();
@@ -331,23 +335,82 @@ fn synthetic_policy_table_dispatches_identically_on_every_pool_slice() {
     let (want_logits, want_speedup) = backend.predict(&x, Mode::ConditionalAe).unwrap();
     let want_speedup = want_speedup.unwrap();
     for threads in [1usize, 2, 5] {
-        let pool = condcomp::parallel::ThreadPool::new(threads);
-        let mut arena = ScratchArena::new();
-        for round in 0..2 {
-            let (logits, speedup) =
-                backend.predict_on(&x, Mode::ConditionalAe, &pool, &mut arena).unwrap();
-            assert_eq!(
-                logits.as_slice(),
-                want_logits.as_slice(),
-                "threads {threads} round {round}: logits drifted"
-            );
-            assert_eq!(
-                speedup.unwrap().to_bits(),
-                want_speedup.to_bits(),
-                "threads {threads} round {round}: speedup (≡ kernel choice) drifted"
-            );
+        let pool = ThreadPool::new(threads);
+        for grant in [0usize, 1, 2, 5] {
+            let mut ctx = ExecCtx::over(pool.lease(grant));
+            for round in 0..2 {
+                let (logits, speedup) =
+                    backend.predict_ctx(&x, Mode::ConditionalAe, &mut ctx).unwrap();
+                assert_eq!(
+                    logits.as_slice(),
+                    want_logits.as_slice(),
+                    "threads {threads} lease {grant} round {round}: logits drifted"
+                );
+                assert_eq!(
+                    speedup.unwrap().to_bits(),
+                    want_speedup.to_bits(),
+                    "threads {threads} lease {grant} round {round}: speedup (≡ kernel choice) drifted"
+                );
+                ctx.put_buf(logits.into_vec());
+            }
+        }
+        assert_eq!(pool.leased(), 0, "every ctx returned its lease");
+    }
+}
+
+/// The acceptance criterion for pool slicing: with `--shards N > 1`, the
+/// server's worker threads are exactly the configured budget — every shard
+/// executor holds a lease carved from the shared pool, the leases cover the
+/// budget, and nothing else spawns. Checkable from the wire through the new
+/// `threads_total` / `threads_leased` / `shard<i>_lease_threads` stats.
+#[test]
+fn leased_server_spawns_exactly_the_thread_budget() {
+    // A pool this test owns (leaked: executor threads hold leases on it for
+    // the server's lifetime), so lease accounting cannot race concurrent
+    // tests that lease from the process-global pool.
+    let pool: &'static ThreadPool = Box::leak(Box::new(ThreadPool::new(7)));
+    let server = Server::start_on(
+        Arc::new(trained_backend()),
+        ServerConfig { shards: 3, ..ServerConfig::default() },
+        pool,
+    )
+    .expect("server start");
+    assert_eq!(server.num_shards(), 3);
+    assert_eq!(server.metrics.gauge("threads_total"), Some(7.0));
+    assert_eq!(
+        server.metrics.gauge("threads_leased"),
+        Some(7.0),
+        "executor leases must cover the whole budget"
+    );
+    let per_shard: Vec<usize> = (0..3)
+        .map(|s| server.metrics.shard_gauge(s, "lease_threads").expect("lease gauge") as usize)
+        .collect();
+    assert_eq!(per_shard.iter().sum::<usize>(), 7, "leases sum to the budget: {per_shard:?}");
+    assert!(per_shard.iter().all(|&g| g >= 1), "every shard got a slice: {per_shard:?}");
+    assert_eq!(pool.leased(), 7, "pool-side accounting agrees");
+
+    // The accounting is visible over the wire, and traffic still flows.
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Pcg32::seeded(0xB4D6);
+    for mode in [Mode::Control, Mode::ConditionalAe] {
+        for _ in 0..3 {
+            let x = Mat::randn(1, 784, 0.5, &mut rng);
+            assert!(client.predict(x, mode).unwrap().ok);
         }
     }
+    let stats = client.stats().unwrap();
+    let gauges = stats.payload.unwrap();
+    let gauges = gauges.get("gauges").expect("gauges in snapshot");
+    assert_eq!(gauges.get("threads_total").and_then(|v| v.as_f64()), Some(7.0));
+    assert_eq!(gauges.get("threads_leased").and_then(|v| v.as_f64()), Some(7.0));
+    for shard in 0..3 {
+        assert!(
+            gauges.get(&format!("shard{shard}_lease_threads")).is_some(),
+            "shard {shard} lease gauge missing from the wire"
+        );
+    }
+    server.shutdown();
+    assert_eq!(pool.leased(), 0, "shutdown returns every lease to the pool");
 }
 
 /// Server-level drift guard: a 3-shard server built on the synthetic table
