@@ -91,6 +91,17 @@ fn main() {
     let mut client = Client::connect(&addr).unwrap();
     let stats = client.stats().unwrap();
     let payload = stats.payload.unwrap();
+    // Kernel routing in production: one `layer<i>_kernel_<id>_batches`
+    // counter per hidden layer per registered kernel, so the cost router's
+    // decisions are observable from the wire (not just at startup).
+    if let Some(counters) = payload.get("counters").and_then(|c| c.as_obj()) {
+        println!("\nkernel routing (batches per layer per kernel):");
+        for (name, v) in counters {
+            if name.starts_with("layer") && name.contains("_kernel_") {
+                println!("  {name}: {:.0}", v.as_f64().unwrap_or(0.0));
+            }
+        }
+    }
     if let Some(gauges) = payload.get("gauges") {
         let total = gauges.get("threads_total").and_then(|v| v.as_f64()).unwrap_or(0.0);
         let leased = gauges.get("threads_leased").and_then(|v| v.as_f64()).unwrap_or(0.0);

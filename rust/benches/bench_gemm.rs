@@ -83,7 +83,7 @@ fn main() {
     header("dense-vs-masked-vs-parallel sweep (α × threads grid, 512³ dense)");
     let quick = condcomp::bench::quick();
     let layer_sizes = condcomp::config::ExperimentProfile::mnist_small().net.layers;
-    let result = sweep::run_parallel_sweep(&quick, 512, 64, threads, &layer_sizes);
+    let result = sweep::run_parallel_sweep(&quick, 512, 64, threads, &layer_sizes, None);
     for line in result.report_lines() {
         println!("{line}");
     }

@@ -1,50 +1,57 @@
 //! The calibration microbenchmark harness.
 //!
-//! For each hidden-layer shape `d × h` of a model, the harness times the
-//! dense-parallel GEMM against the masked-parallel kernel across a density
-//! grid and up to two thread counts (the serving pool's size, plus a
-//! single-threaded diagnostic arm when `fit_serial` is on), fits the
-//! masked kernel's per-FLOP cost by least squares through the origin
-//! (masked time is linear in α: `t(α) ≈ c · α · 2ndh`), and derives the
-//! per-layer flip threshold `α* = 1/cost_ratio`. The whole run is bounded
-//! by a wall-clock budget (`autotune.budget_ms`), split evenly across
-//! measurement points; each point takes the best of as many repetitions as
-//! fit its slice (at least one).
+//! For each hidden-layer shape `d × h` of a model, the harness times **every
+//! registered compute kernel** (see [`crate::condcomp::KernelRegistry`]) and
+//! fits one per-FLOP cost column each, relative to the plain dense axpy
+//! baseline:
 //!
-//! Timing lives behind the [`CostModel`] trait so tests (and the
-//! acceptance criterion's "two shapes → two thresholds" assertion) can
-//! inject a synthetic cost surface and exercise the fitting math
-//! deterministically; [`MeasuredCost`] is the real-kernel implementation,
-//! and it measures through an [`ExecCtx`] (full-pool lease by default) so
-//! calibration exercises exactly the leased code path the serving
-//! executors run — what gets tuned is what gets served.
+//! - dense-work kernels (`dense`, `dense_packed`, …) are α-independent: one
+//!   best-of timing per shape; the column is `t_kernel / t_dense`.
+//! - α-scaled kernels (`masked`) are timed across a density grid and fitted
+//!   by least squares through the origin (masked time is linear in α:
+//!   `t(α) ≈ c · α · 2ndh`); the column is the fitted per-FLOP cost over the
+//!   dense per-FLOP cost — the classic `cost_ratio`.
+//!
+//! The whole run is bounded by a wall-clock budget (`autotune.budget_ms`),
+//! split evenly across measurement points; each point takes the best of as
+//! many repetitions as fit its slice (at least one).
+//!
+//! Timing lives behind the [`CostModel`] trait so tests inject a synthetic
+//! cost surface and exercise the fitting math deterministically;
+//! [`MeasuredCost`] is the real implementation: it runs each kernel through
+//! the **registry** and an [`ExecCtx`] (full-pool lease by default), so
+//! calibration exercises exactly the dispatch path the serving executors
+//! run — what gets tuned is what gets served.
 
 use super::profile::{
     hardware_descriptor, model_fingerprint, LayerThreshold, MachineProfile,
     PROFILE_SCHEMA_VERSION,
 };
-use crate::condcomp::{DispatchPolicy, MaskedLayer};
+use crate::condcomp::registry::LayerOperands;
+use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer, WorkModel};
 use crate::exec::ExecCtx;
-use crate::linalg::{matmul_into_ctx, Mat};
+use crate::linalg::Mat;
 use crate::parallel::ThreadPool;
 use crate::util::{Pcg32, Timer};
 
-/// Where a layer's timing numbers come from: the real kernels
-/// ([`MeasuredCost`]) or a synthetic model injected by tests.
+/// Where a kernel's timing numbers come from: the real registry kernels
+/// ([`MeasuredCost`]) or a synthetic surface injected by tests.
 pub trait CostModel {
-    /// Seconds for one dense-parallel forward of an `n × d → h` layer.
-    fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64;
-    /// Seconds for one masked-parallel forward at mask density `alpha`.
-    fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64;
+    /// Seconds for one forward of `kernel` on an `n × d → h` layer at mask
+    /// density `alpha` (dense-work kernels ignore `alpha`). Non-finite or
+    /// non-positive returns make the fit fall back to the kernel's default
+    /// cost.
+    fn seconds(&mut self, kernel: KernelId, n: usize, d: usize, h: usize, alpha: f64) -> f64;
 }
 
-/// Runs the real kernels through an [`ExecCtx`], best-of-reps within a
-/// per-point budget. Measuring through the ctx — not a raw pool — means
-/// calibration exercises exactly the code path dispatch will later take on
-/// the serving executors (same lease-width chunking, same kernel entry
-/// points).
+/// Runs the real kernels through the registry and an [`ExecCtx`],
+/// best-of-reps within a per-point budget. Measuring through the ctx — not a
+/// raw pool — means calibration exercises exactly the code path dispatch
+/// will later take on the serving executors (same lease-width chunking, same
+/// kernel entry points).
 pub struct MeasuredCost<'a> {
     ctx: ExecCtx<'a>,
+    registry: KernelRegistry,
     /// Wall-clock allowance per measurement point (seconds).
     point_budget_s: f64,
     /// Repetitions guaranteed even when the budget is tiny.
@@ -82,41 +89,65 @@ impl<'a> MeasuredCost<'a> {
 
     /// Measure through a caller-supplied ctx (e.g. a specific lease width).
     pub fn over(ctx: ExecCtx<'a>, point_budget_s: f64, min_reps: usize, seed: u64) -> Self {
-        MeasuredCost { ctx, point_budget_s, min_reps: min_reps.max(1), seed }
+        MeasuredCost {
+            ctx,
+            registry: KernelRegistry::builtin(),
+            point_budget_s,
+            min_reps: min_reps.max(1),
+            seed,
+        }
+    }
+
+    /// Replace the registry (e.g. to measure an embedder's custom kernel).
+    pub fn with_registry(mut self, registry: KernelRegistry) -> Self {
+        self.registry = registry;
+        self
     }
 
     fn rng_for(&self, n: usize, d: usize, h: usize) -> Pcg32 {
-        // Deterministic per shape, so dense and masked arms of one layer
-        // time the same operand values.
+        // Deterministic per shape, so every kernel arm of one layer times
+        // the same operand values.
         Pcg32::new(self.seed, (n as u64) << 42 ^ (d as u64) << 21 ^ h as u64)
     }
 }
 
 impl CostModel for MeasuredCost<'_> {
-    fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64 {
-        let mut rng = self.rng_for(n, d, h);
-        let a = Mat::randn(n, d, 0.5, &mut rng);
-        let w = Mat::randn(d, h, 0.05, &mut rng);
-        let mut out = Mat::zeros(n, h);
-        let (budget, reps) = (self.point_budget_s, self.min_reps);
-        let ctx = &mut self.ctx;
-        best_of(budget, reps, || matmul_into_ctx(&a, &w, &mut out, &mut *ctx))
-    }
-
-    fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+    fn seconds(&mut self, kernel: KernelId, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+        // The fit's dense baseline must stay measurable even when the
+        // configured registry is an allow-list view that excludes it
+        // (`--kernels dense_packed,masked`): fall back to the builtin set
+        // for in-tree ids. A kernel registered nowhere is unmeasurable —
+        // the fit then uses its work-model default.
+        let builtin;
+        let kernel = match self.registry.get(kernel) {
+            Some(k) => k,
+            None => {
+                builtin = KernelRegistry::builtin();
+                match builtin.get(kernel) {
+                    Some(k) => k,
+                    None => return f64::INFINITY,
+                }
+            }
+        };
         let mut rng = self.rng_for(n, d, h);
         let a = Mat::randn(n, d, 0.5, &mut rng);
         let w = Mat::randn(d, h, 0.05, &mut rng);
         let bias = vec![0.0f32; h];
         let layer = MaskedLayer::new(&w, &bias);
-        let mask = Mat::from_fn(n, h, |_, _| {
-            if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 }
-        });
+        // Dense-work kernels compute every cell regardless of the mask; the
+        // full mask keeps their gating pass honest without starving it.
+        let mask = match kernel.id().work() {
+            WorkModel::Dense => Mat::full(n, h, 1.0),
+            WorkModel::AlphaScaled => Mat::from_fn(n, h, |_, _| {
+                if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 }
+            }),
+        };
+        let ops = LayerOperands::new(&w, &layer);
         let mut out = Mat::zeros(n, h);
         let (budget, reps) = (self.point_budget_s, self.min_reps);
         let ctx = &mut self.ctx;
         best_of(budget, reps, || {
-            let _ = layer.forward_masked_ctx(&a, &mask, &mut out, &mut *ctx);
+            let _ = kernel.run(&ops, &a, &mask, &mut *ctx, &mut out);
         })
     }
 }
@@ -126,17 +157,23 @@ impl CostModel for MeasuredCost<'_> {
 pub struct Autotuner {
     /// Total wall-clock budget for one whole-model calibration (ms).
     pub budget_ms: u64,
-    /// Densities measured per layer (the fit's sample points).
+    /// Densities measured per α-scaled kernel per layer (the fit's sample
+    /// points).
     pub alpha_grid: Vec<f64>,
     /// Batch rows used by the microbenchmarks (a typical serving batch).
     pub batch: usize,
     /// Repetitions guaranteed per point even when the budget is tiny.
     pub min_reps: usize,
     /// Also fit the single-threaded arm (`cost_ratio_serial`, a persisted
-    /// diagnostic). Dispatch only consumes the pooled ratio, so callers that
-    /// discard the profile — serve's online calibration — turn this off and
-    /// spend the whole budget on the numbers that matter.
+    /// diagnostic). Dispatch only consumes the pooled numbers, so callers
+    /// that discard the profile — serve's online calibration — turn this off
+    /// and spend the whole budget on the numbers that matter.
     pub fit_serial: bool,
+    /// Kernel-id set to fit one cost column each for. Defaults to the
+    /// builtin registry; `condcomp calibrate --kernels` and the targeted
+    /// missing-column recalibration narrow it. [`KernelId::DENSE`] is always
+    /// measured — it is the baseline every column is relative to.
+    pub kernels: Vec<KernelId>,
 }
 
 impl Default for Autotuner {
@@ -147,6 +184,7 @@ impl Default for Autotuner {
             batch: 64,
             min_reps: 2,
             fit_serial: true,
+            kernels: KernelRegistry::builtin().ids(),
         }
     }
 }
@@ -157,11 +195,97 @@ impl Autotuner {
         Autotuner { budget_ms, ..Autotuner::default() }
     }
 
-    /// Fit one shape's masked-vs-dense per-FLOP cost ratio from a cost
-    /// model. Pure arithmetic over the model's numbers: the dense per-FLOP
-    /// cost comes from one α-independent timing; the masked per-FLOP cost is
-    /// the least-squares slope of `t(α) ≈ c · α · F` over the grid
-    /// (`c = Σ tᵢαᵢ / (F · Σ αᵢ²)`).
+    /// The kernel set actually fitted: the configured set with the dense
+    /// baseline forced in, canonical order.
+    fn fit_set(&self) -> Vec<KernelId> {
+        let mut set = self.kernels.clone();
+        if !set.contains(&KernelId::DENSE) {
+            set.push(KernelId::DENSE);
+        }
+        set.sort_by_key(|k| k.priority());
+        set.dedup();
+        set
+    }
+
+    /// Whether the serial diagnostic arm runs: it fits the masked-vs-dense
+    /// ratio, so it only makes sense (and only costs budget) when the
+    /// masked kernel is in the configured set.
+    fn serial_arm(&self) -> bool {
+        self.fit_serial && self.fit_set().contains(&KernelId::MASKED)
+    }
+
+    /// Measurement points one layer costs under this configuration (the
+    /// budget is split evenly across all points of all layers).
+    fn points_per_layer(&self) -> usize {
+        self.fit_set()
+            .iter()
+            .map(|k| match k.work() {
+                WorkModel::Dense => 1,
+                WorkModel::AlphaScaled => self.alpha_grid.len(),
+            })
+            .sum()
+    }
+
+    /// Fit one shape's per-kernel per-FLOP cost columns from a cost model.
+    /// Pure arithmetic over the model's numbers: dense-work kernels get
+    /// `t_kernel / t_dense`; α-scaled kernels get the least-squares slope of
+    /// `t(α) ≈ c · α · F` over the grid (`c = Σ tᵢαᵢ / (F · Σ αᵢ²)`) divided
+    /// by the dense per-FLOP cost. Degenerate timings fall back to the
+    /// kernel's work-model default.
+    pub fn fit_kernel_costs(
+        &self,
+        model: &mut dyn CostModel,
+        n: usize,
+        d: usize,
+        h: usize,
+    ) -> Vec<(KernelId, f64)> {
+        let set = self.fit_set();
+        let flops = 2.0 * (n as f64) * (d as f64) * (h as f64);
+        let t_dense = model.seconds(KernelId::DENSE, n, d, h, 1.0);
+        let dense_ok = t_dense.is_finite() && t_dense > 0.0 && flops > 0.0;
+        let dense_per_flop = if dense_ok { t_dense / flops } else { 0.0 };
+        let mut columns = Vec::with_capacity(set.len());
+        for k in set {
+            let rel = if !dense_ok {
+                k.work().default_per_flop()
+            } else {
+                match k.work() {
+                    WorkModel::Dense => {
+                        if k == KernelId::DENSE {
+                            1.0
+                        } else {
+                            let t = model.seconds(k, n, d, h, 1.0);
+                            if t.is_finite() && t > 0.0 {
+                                t / t_dense
+                            } else {
+                                k.work().default_per_flop()
+                            }
+                        }
+                    }
+                    WorkModel::AlphaScaled => {
+                        let (mut num, mut den) = (0.0f64, 0.0f64);
+                        for &alpha in &self.alpha_grid {
+                            let t = model.seconds(k, n, d, h, alpha);
+                            if t.is_finite() && t > 0.0 && alpha > 0.0 {
+                                num += t * alpha;
+                                den += alpha * alpha;
+                            }
+                        }
+                        if num <= 0.0 || den <= 0.0 {
+                            k.work().default_per_flop()
+                        } else {
+                            ((num / (den * flops)) / dense_per_flop).max(1e-6)
+                        }
+                    }
+                }
+            };
+            columns.push((k, rel));
+        }
+        columns
+    }
+
+    /// Fit one shape's masked-vs-dense per-FLOP cost ratio (the legacy
+    /// binary form — what `cost_ratio_serial` and old callers consume).
     pub fn fit_cost_ratio(
         &self,
         model: &mut dyn CostModel,
@@ -169,30 +293,21 @@ impl Autotuner {
         d: usize,
         h: usize,
     ) -> f64 {
-        let flops = 2.0 * (n as f64) * (d as f64) * (h as f64);
-        let t_dense = model.dense_seconds(n, d, h);
-        if !t_dense.is_finite() || t_dense <= 0.0 || flops <= 0.0 {
-            return DispatchPolicy::DEFAULT_COST_RATIO;
-        }
-        let dense_per_flop = t_dense / flops;
-        let (mut num, mut den) = (0.0f64, 0.0f64);
-        for &alpha in &self.alpha_grid {
-            let t = model.masked_seconds(n, d, h, alpha);
-            if t.is_finite() && alpha > 0.0 {
-                num += t * alpha;
-                den += alpha * alpha;
-            }
-        }
-        if num <= 0.0 || den <= 0.0 {
-            return DispatchPolicy::DEFAULT_COST_RATIO;
-        }
-        let masked_per_flop = num / (den * flops);
-        (masked_per_flop / dense_per_flop).max(1e-6)
+        let masked_only = Autotuner {
+            kernels: vec![KernelId::DENSE, KernelId::MASKED],
+            ..self.clone()
+        };
+        let columns = masked_only.fit_kernel_costs(model, n, d, h);
+        columns
+            .iter()
+            .find(|(k, _)| *k == KernelId::MASKED)
+            .map(|(_, c)| *c)
+            .unwrap_or(DispatchPolicy::DEFAULT_COST_RATIO)
     }
 
     /// Fit one hidden layer from injected cost models (`par` at the serving
     /// thread count, `serial` single-threaded; `None` skips the serial arm
-    /// and records the pooled ratio in its place).
+    /// and records the pooled masked ratio in its place).
     pub fn fit_layer(
         &self,
         layer: usize,
@@ -202,19 +317,23 @@ impl Autotuner {
         serial: Option<&mut dyn CostModel>,
     ) -> LayerThreshold {
         let n = self.batch.max(1);
-        let cost_ratio = self.fit_cost_ratio(par, n, d, h);
+        let columns = self.fit_kernel_costs(par, n, d, h);
+        // The serial arm diagnoses the masked ratio only — skip it (and its
+        // measurement cost) when the masked kernel is not being fitted.
         let cost_ratio_serial = match serial {
-            Some(model) => self.fit_cost_ratio(model, n, d, h),
-            None => cost_ratio,
+            Some(model) if self.serial_arm() => Some(self.fit_cost_ratio(model, n, d, h)),
+            _ => None,
         };
-        LayerThreshold {
+        LayerThreshold::from_kernel_costs(
             layer,
             d,
             h,
-            cost_ratio,
+            columns
+                .into_iter()
+                .map(|(k, c)| (k.as_str().to_string(), c))
+                .collect(),
             cost_ratio_serial,
-            alpha_star: DispatchPolicy::with_cost_ratio(cost_ratio).density_threshold(),
-        }
+        )
     }
 
     /// Fit every shape with injected cost models (tests, synthetic sweeps).
@@ -241,22 +360,42 @@ impl Autotuner {
     }
 
     /// Measure and fit every hidden layer of a model on this machine,
-    /// producing a persistable [`MachineProfile`]. The budget is split
-    /// evenly over all measurement points (per layer: one dense + one
-    /// masked-per-α timing, per thread arm — the serial arm only when
-    /// `fit_serial` is on).
+    /// producing a persistable [`MachineProfile`] with one cost column per
+    /// configured kernel. The budget is split evenly over all measurement
+    /// points (per layer: one timing per dense-work kernel, one per α per
+    /// α-scaled kernel, plus the serial arm's dense + masked-grid points
+    /// when it runs). Kernels are looked up in the builtin registry; use
+    /// [`Self::calibrate_model_on`] to measure an embedder's custom set.
     pub fn calibrate_model(&self, layer_sizes: &[usize], pool: &ThreadPool) -> MachineProfile {
+        self.calibrate_model_on(layer_sizes, pool, &KernelRegistry::builtin())
+    }
+
+    /// [`Self::calibrate_model`] measuring through an explicit registry —
+    /// what [`crate::coordinator::NativeBackend`] passes so custom
+    /// registrants get *measured* columns, not work-model defaults.
+    pub fn calibrate_model_on(
+        &self,
+        layer_sizes: &[usize],
+        pool: &ThreadPool,
+        registry: &KernelRegistry,
+    ) -> MachineProfile {
         let shapes = Autotuner::hidden_shapes(layer_sizes);
-        let arms = if self.fit_serial { 2 } else { 1 };
-        let points_per_layer = arms * (1 + self.alpha_grid.len());
-        let total_points = (shapes.len() * points_per_layer).max(1);
+        // The serial arm costs one dense + one-per-α masked timing per
+        // layer, independent of the kernel set (it fits the masked ratio),
+        // and only runs when masked is being fitted.
+        let serial_points = if self.serial_arm() { 1 + self.alpha_grid.len() } else { 0 };
+        let total_points = (shapes.len() * (self.points_per_layer() + serial_points)).max(1);
         let point_budget_s = (self.budget_ms as f64 / 1e3) / total_points as f64;
 
-        let mut par = MeasuredCost::new(pool, point_budget_s, self.min_reps, 0xA7_70_7E);
-        let serial_pool = if self.fit_serial { Some(ThreadPool::new(1)) } else { None };
+        let mut par = MeasuredCost::new(pool, point_budget_s, self.min_reps, 0xA7_70_7E)
+            .with_registry(registry.clone());
+        let serial_pool = if self.serial_arm() { Some(ThreadPool::new(1)) } else { None };
         let mut serial = serial_pool
             .as_ref()
-            .map(|p| MeasuredCost::new(p, point_budget_s, self.min_reps, 0xA7_70_7E));
+            .map(|p| {
+                MeasuredCost::new(p, point_budget_s, self.min_reps, 0xA7_70_7E)
+                    .with_registry(registry.clone())
+            });
         let layers = self.fit_shapes(
             &shapes,
             &mut par,
@@ -269,6 +408,11 @@ impl Autotuner {
             hardware: hardware_descriptor(),
             threads: pool.threads(),
             budget_ms: self.budget_ms,
+            kernels: self
+                .fit_set()
+                .iter()
+                .map(|k| k.as_str().to_string())
+                .collect(),
             layers,
         }
     }
@@ -277,11 +421,12 @@ impl Autotuner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::condcomp::Kernel;
+    use crate::condcomp::BUILTIN_KERNELS;
 
     /// A synthetic cost surface where the masked kernel's per-FLOP penalty
-    /// depends on the layer shape: wide-input layers pay 8×, square ones 2×.
-    /// Exactly linear in α, so the fit must recover the ratios precisely.
+    /// depends on the layer shape (wide-input layers pay 8×, square ones 2×)
+    /// and the packed GEMM runs 10% faster per FLOP everywhere. Exactly
+    /// linear in α, so the fit must recover the ratios precisely.
     struct SyntheticCost;
 
     fn ratio_for(d: usize, h: usize) -> f64 {
@@ -289,12 +434,15 @@ mod tests {
     }
 
     impl CostModel for SyntheticCost {
-        fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64 {
-            2.0 * (n * d * h) as f64 * 1e-10
-        }
-
-        fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
-            alpha * ratio_for(d, h) * 2.0 * (n * d * h) as f64 * 1e-10
+        fn seconds(&mut self, kernel: KernelId, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+            let dense = 2.0 * (n * d * h) as f64 * 1e-10;
+            if kernel == KernelId::MASKED {
+                alpha * ratio_for(d, h) * dense
+            } else if kernel == KernelId::DENSE_PACKED {
+                0.9 * dense
+            } else {
+                dense
+            }
         }
     }
 
@@ -307,12 +455,38 @@ mod tests {
         assert!((r - 8.0).abs() < 1e-9, "wide-input ratio {r}");
     }
 
+    /// The registry-era fit: one column per kernel, the packed column
+    /// recovered relative to dense, and the derived threshold moved by it.
+    #[test]
+    fn fit_emits_one_column_per_registered_kernel() {
+        let tuner = Autotuner::default();
+        let columns = tuner.fit_kernel_costs(&mut SyntheticCost, 64, 512, 512);
+        assert_eq!(
+            columns.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            KernelRegistry::builtin().ids()
+        );
+        assert!(columns.len() >= BUILTIN_KERNELS.len());
+        let get = |id: KernelId| columns.iter().find(|(k, _)| *k == id).unwrap().1;
+        assert!((get(KernelId::DENSE) - 1.0).abs() < 1e-9);
+        assert!((get(KernelId::DENSE_PACKED) - 0.9).abs() < 1e-9);
+        assert!((get(KernelId::MASKED) - 2.0).abs() < 1e-9);
+        let lt = tuner.fit_layer(0, 512, 512, &mut SyntheticCost, None);
+        // α* = cheapest dense per-FLOP (0.9, packed) / masked (2.0).
+        assert!((lt.alpha_star - 0.45).abs() < 1e-9, "{lt:?}");
+        assert_eq!(lt.policy().preferred_dense(), KernelId::DENSE_PACKED);
+    }
+
     /// The acceptance criterion: with an injected synthetic cost model, two
     /// layers with different shapes get different α* values, and dispatch
     /// decisions at the same density differ between them.
     #[test]
     fn two_shapes_yield_two_thresholds_and_different_decisions() {
-        let tuner = Autotuner::default();
+        // Restrict to the binary kernel pair so the classic thresholds
+        // (1/2, 1/8) come out exactly.
+        let tuner = Autotuner {
+            kernels: vec![KernelId::DENSE, KernelId::MASKED],
+            ..Autotuner::default()
+        };
         let shapes = [(256usize, 256usize), (1024, 128)]; // square vs wide
         let fitted = tuner.fit_shapes(&shapes, &mut SyntheticCost, Some(&mut SyntheticCost));
         assert_eq!(fitted.len(), 2);
@@ -325,6 +499,7 @@ mod tests {
             hardware: hardware_descriptor(),
             threads: 1,
             budget_ms: 0,
+            kernels: vec!["dense".into(), "masked".into()],
             layers: fitted,
         };
         let table = profile.policy_table(2, "synthetic");
@@ -332,12 +507,12 @@ mod tests {
         // dense — per-layer dispatch in action.
         let alpha = 0.3;
         assert_eq!(
-            table.policy_for(0).decide(64, 256, 256, alpha),
-            Kernel::MaskedParallel
+            table.policy_for(0).decide(64, 256, 256, alpha, BUILTIN_KERNELS),
+            KernelId::MASKED
         );
         assert_eq!(
-            table.policy_for(1).decide(64, 1024, 128, alpha),
-            Kernel::DenseParallel
+            table.policy_for(1).decide(64, 1024, 128, alpha, BUILTIN_KERNELS),
+            KernelId::DENSE
         );
         assert_ne!(table.thresholds()[0], table.thresholds()[1]);
     }
@@ -351,19 +526,21 @@ mod tests {
     }
 
     #[test]
-    fn degenerate_models_fall_back_to_the_default_ratio() {
+    fn degenerate_models_fall_back_to_the_default_costs() {
         struct ZeroCost;
         impl CostModel for ZeroCost {
-            fn dense_seconds(&mut self, _: usize, _: usize, _: usize) -> f64 {
-                0.0
-            }
-            fn masked_seconds(&mut self, _: usize, _: usize, _: usize, _: f64) -> f64 {
+            fn seconds(&mut self, _: KernelId, _: usize, _: usize, _: usize, _: f64) -> f64 {
                 0.0
             }
         }
         let tuner = Autotuner::default();
         let r = tuner.fit_cost_ratio(&mut ZeroCost, 8, 8, 8);
         assert_eq!(r, DispatchPolicy::DEFAULT_COST_RATIO);
+        // Every column degrades to its work model's default.
+        let columns = tuner.fit_kernel_costs(&mut ZeroCost, 8, 8, 8);
+        for (k, c) in columns {
+            assert_eq!(c, k.work().default_per_flop(), "{k}");
+        }
     }
 
     #[test]
@@ -386,6 +563,7 @@ mod tests {
             batch: 8,
             min_reps: 1,
             fit_serial: true,
+            kernels: KernelRegistry::builtin().ids(),
         };
         let pool = ThreadPool::new(2);
         let layer_sizes = [24usize, 20, 16, 6];
@@ -393,15 +571,64 @@ mod tests {
         assert_eq!(profile.fingerprint, model_fingerprint(&layer_sizes));
         assert_eq!(profile.threads, 2);
         assert_eq!(profile.layers.len(), 2);
+        // One cost column per registered kernel, per layer — the CI smoke's
+        // in-crate counterpart.
+        let want_kernels: Vec<String> = KernelRegistry::builtin()
+            .ids()
+            .iter()
+            .map(|k| k.as_str().to_string())
+            .collect();
+        assert_eq!(profile.kernels, want_kernels);
+        assert!(profile.missing_kernel_columns(&KernelRegistry::builtin().ids()).is_empty());
         for (l, lt) in profile.layers.iter().enumerate() {
             assert_eq!(lt.layer, l);
             assert_eq!((lt.d, lt.h), (layer_sizes[l], layer_sizes[l + 1]));
             assert!(lt.cost_ratio.is_finite() && lt.cost_ratio > 0.0);
             assert!(lt.cost_ratio_serial.is_finite() && lt.cost_ratio_serial > 0.0);
             assert!((0.0..=1.0).contains(&lt.alpha_star));
+            assert_eq!(lt.kernel_costs.len(), want_kernels.len());
+            for (name, cost) in &lt.kernel_costs {
+                assert!(cost.is_finite() && *cost > 0.0, "{name}: {cost}");
+            }
         }
         // And it round-trips through the persistence layer.
         let back = MachineProfile::parse(&profile.to_json().to_string()).unwrap();
         assert_eq!(back, profile);
+    }
+
+    /// Regression: with an allow-list registry that excludes `dense`
+    /// (`--kernels dense_packed,masked`), the fit's dense baseline must
+    /// still be *measured* (builtin fallback), not degrade every column to
+    /// its work-model default.
+    #[test]
+    fn measured_cost_measures_the_dense_baseline_through_a_restricted_registry() {
+        let pool = ThreadPool::new(1);
+        let restricted = KernelRegistry::builtin()
+            .restricted(&[KernelId::DENSE_PACKED, KernelId::MASKED])
+            .unwrap();
+        let mut model = MeasuredCost::new(&pool, 0.0, 1, 7).with_registry(restricted);
+        let t = model.seconds(KernelId::DENSE, 8, 8, 8, 1.0);
+        assert!(t.is_finite() && t > 0.0, "dense baseline measurable: {t}");
+        // A kernel registered nowhere stays unmeasurable (→ fit defaults).
+        let t = model.seconds(KernelId::new("quantum"), 8, 8, 8, 1.0);
+        assert!(t.is_infinite());
+    }
+
+    /// Targeted recalibration input: a subset fit measures only the named
+    /// kernels (plus the dense baseline) — what serve runs when a profile
+    /// is missing one column.
+    #[test]
+    fn subset_fit_measures_only_the_requested_kernels() {
+        let tuner = Autotuner {
+            kernels: vec![KernelId::DENSE_PACKED],
+            ..Autotuner::default()
+        };
+        let columns = tuner.fit_kernel_costs(&mut SyntheticCost, 32, 64, 64);
+        assert_eq!(
+            columns.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            vec![KernelId::DENSE, KernelId::DENSE_PACKED],
+            "dense baseline forced in, nothing else"
+        );
+        assert!((columns[1].1 - 0.9).abs() < 1e-9);
     }
 }

@@ -8,22 +8,24 @@
 //! measures the flip point per layer and persists it:
 //!
 //! - [`harness`] — the microbenchmark harness ([`Autotuner`]): times
-//!   dense-parallel vs masked-parallel per layer shape across a density
-//!   grid and thread counts under a wall-clock budget, and fits a per-layer
-//!   cost ratio (timing is abstracted behind [`CostModel`] so tests inject
+//!   **every registered compute kernel** per layer shape (dense-work kernels
+//!   once, α-scaled kernels across a density grid) under a wall-clock
+//!   budget, and fits one per-FLOP cost column each relative to the dense
+//!   baseline (timing is abstracted behind [`CostModel`] so tests inject
 //!   synthetic cost surfaces).
 //! - [`profile`] — [`MachineProfile`]: model fingerprint + hardware
-//!   descriptor + per-layer [`LayerThreshold`]s, serialized via `io::json`.
+//!   descriptor + measured kernel-id set + per-layer [`LayerThreshold`]s
+//!   (one `kernel_costs` column per kernel), serialized via `io::json`.
 //!   `condcomp calibrate` writes it; `condcomp serve` loads it at startup
-//!   (falling back to online calibration, then to the global default) and
-//!   installs it as the backend's
-//!   [`crate::condcomp::PolicyTable`].
+//!   (falling back to online calibration, then to the per-kernel defaults)
+//!   and installs it as the backend's [`crate::condcomp::PolicyTable`]. A
+//!   profile missing a column for a newly registered kernel triggers
+//!   recalibration of **just that column**.
 //!
 //! Config keys: `autotune.profile_path` (where the profile lives) and
 //! `autotune.budget_ms` (calibration wall-clock budget). The profile format
-//! tolerates unknown fields, so future backends (the multi-backend router)
-//! can contribute additional cost columns to the same file without breaking
-//! older readers.
+//! tolerates unknown fields — including cost columns for kernels this
+//! binary has never heard of — so newer writers stay readable.
 
 pub mod harness;
 pub mod profile;

@@ -6,11 +6,21 @@
 //! depends only on the per-layer `d × h` shapes, not the weight values) and
 //! annotated with a *hardware descriptor* (arch/OS/thread count) so a file
 //! copied between machines is at least visibly foreign. Loading rejects a
-//! fingerprint mismatch outright; unknown JSON fields are tolerated, so
-//! newer writers (e.g. a future multi-backend router adding another cost
-//! column) stay readable by older binaries.
+//! fingerprint mismatch outright; unknown JSON fields — including cost
+//! columns for kernels this binary has never heard of — are tolerated, so
+//! newer writers stay readable by older binaries.
+//!
+//! Since the kernel registry landed, each layer carries one **cost column
+//! per registered kernel** (`kernel_costs`: kernel id → per-FLOP cost
+//! relative to the dense baseline), and the profile records which kernel-id
+//! set it measured (`kernels`). A profile missing a column for a kernel the
+//! running binary has registered is not rejected — the loader reports the
+//! gap ([`MachineProfile::missing_kernel_columns`]) and serve recalibrates
+//! **just that column**, keeping the measured ones. The legacy
+//! `cost_ratio`/`alpha_star` fields are still written (they are the masked
+//! column in the old clothes), so pre-registry readers stay compatible.
 
-use crate::condcomp::{DispatchPolicy, PolicyTable};
+use crate::condcomp::{DispatchPolicy, KernelId, PolicyTable};
 use crate::io::json::Json;
 use anyhow::Result;
 use std::path::Path;
@@ -18,6 +28,15 @@ use std::path::Path;
 /// Schema version written into every profile; readers accept this version
 /// only (the format is young — no compatibility shims yet).
 pub const PROFILE_SCHEMA_VERSION: u64 = 1;
+
+/// Canonical ordering for persisted cost columns: known kernels in registry
+/// priority order, unknown (newer-writer) columns after them, lexicographic.
+fn column_rank(name: &str) -> (u8, String) {
+    match KernelId::parse(name) {
+        Some(k) => (k.priority().0, name.to_string()),
+        None => (u8::MAX, name.to_string()),
+    }
+}
 
 /// One hidden layer's fitted calibration result.
 #[derive(Clone, Debug, PartialEq)]
@@ -29,16 +48,50 @@ pub struct LayerThreshold {
     pub d: usize,
     /// Layer output width `h`.
     pub h: usize,
-    /// Fitted masked-vs-dense per-FLOP cost ratio on the serving pool.
+    /// Fitted masked-vs-dense per-FLOP cost ratio on the serving pool (the
+    /// masked cost column in the legacy clothes — kept for pre-registry
+    /// readers).
     pub cost_ratio: f64,
     /// The same ratio fitted single-threaded (recorded for diagnosis — the
     /// dispatch threshold uses `cost_ratio`).
     pub cost_ratio_serial: f64,
-    /// The flip point `α* = clamp(1/cost_ratio, 0, 1)`: masked wins below.
+    /// The flip point derived from the cost table: cheapest dense-work
+    /// per-FLOP cost over the masked per-FLOP cost; masked wins below.
     pub alpha_star: f64,
+    /// Per-kernel per-FLOP cost columns relative to the dense baseline,
+    /// canonical order. Unknown kernel ids (from a newer writer) are
+    /// preserved through round-trips but ignored by [`Self::policy`].
+    pub kernel_costs: Vec<(String, f64)>,
 }
 
 impl LayerThreshold {
+    /// Construct from fitted per-kernel columns (the registry-era writer);
+    /// derives the legacy `cost_ratio`/`alpha_star` fields from the table.
+    pub fn from_kernel_costs(
+        layer: usize,
+        d: usize,
+        h: usize,
+        mut kernel_costs: Vec<(String, f64)>,
+        cost_ratio_serial: Option<f64>,
+    ) -> LayerThreshold {
+        kernel_costs.sort_by_key(|(name, _)| column_rank(name));
+        kernel_costs.dedup_by(|a, b| a.0 == b.0);
+        let mut lt = LayerThreshold {
+            layer,
+            d,
+            h,
+            cost_ratio: DispatchPolicy::DEFAULT_COST_RATIO,
+            cost_ratio_serial: 0.0,
+            alpha_star: 0.0,
+            kernel_costs,
+        };
+        let policy = lt.policy();
+        lt.cost_ratio = policy.cost_ratio();
+        lt.cost_ratio_serial = cost_ratio_serial.unwrap_or(lt.cost_ratio);
+        lt.alpha_star = policy.density_threshold();
+        lt
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("layer", Json::Num(self.layer as f64)),
@@ -47,6 +100,15 @@ impl LayerThreshold {
             ("cost_ratio", Json::Num(self.cost_ratio)),
             ("cost_ratio_serial", Json::Num(self.cost_ratio_serial)),
             ("alpha_star", Json::Num(self.alpha_star)),
+            (
+                "kernel_costs",
+                Json::Obj(
+                    self.kernel_costs
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -72,22 +134,71 @@ impl LayerThreshold {
             Some(r) => return Err(format!("layer entry has invalid cost_ratio_serial {r}")),
             None => cost_ratio,
         };
-        Ok(LayerThreshold {
-            layer: need_usize("layer")?,
-            d: need_usize("d")?,
-            h: need_usize("h")?,
-            cost_ratio,
-            cost_ratio_serial,
-            // α* is derivable state: recompute from the ratio so a
-            // hand-edited file cannot make the displayed threshold disagree
-            // with the one dispatch actually uses.
-            alpha_star: DispatchPolicy::with_cost_ratio(cost_ratio).density_threshold(),
-        })
+        // Per-kernel columns: unknown kernel ids are *tolerated* (kept for
+        // round-trips, skipped by `policy()`); invalid numbers are errors.
+        // A pre-registry profile without the field derives the binary table.
+        let kernel_costs = match v.get("kernel_costs").and_then(Json::as_obj) {
+            Some(map) => {
+                let mut costs = Vec::with_capacity(map.len());
+                for (name, val) in map {
+                    let c = val
+                        .as_f64()
+                        .ok_or_else(|| format!("kernel_costs['{name}'] is not a number"))?;
+                    if !c.is_finite() || c <= 0.0 {
+                        return Err(format!("kernel_costs['{name}'] has invalid cost {c}"));
+                    }
+                    costs.push((name.clone(), c));
+                }
+                costs
+            }
+            None => vec![
+                (KernelId::DENSE.as_str().to_string(), 1.0),
+                (KernelId::MASKED.as_str().to_string(), cost_ratio),
+            ],
+        };
+        // α* (and the reported ratio) are derivable state: recompute from
+        // the columns so a hand-edited file cannot make the displayed
+        // threshold disagree with the one dispatch actually uses.
+        let mut lt = LayerThreshold::from_kernel_costs(
+            need_usize("layer")?,
+            need_usize("d")?,
+            need_usize("h")?,
+            kernel_costs,
+            Some(cost_ratio_serial),
+        );
+        // When the columns lack a masked entry (partial newer-writer file),
+        // keep the explicit legacy ratio rather than the default, and
+        // re-derive the threshold from it.
+        if !lt.has_column(KernelId::MASKED) {
+            lt.cost_ratio = cost_ratio;
+            lt.alpha_star = lt.policy().density_threshold();
+        }
+        Ok(lt)
     }
 
-    /// The dispatch policy this fit implies.
+    /// Whether this layer has a measured cost column for `kernel`.
+    pub fn has_column(&self, kernel: KernelId) -> bool {
+        self.kernel_costs.iter().any(|(name, _)| name == kernel.as_str())
+    }
+
+    /// The dispatch policy this fit implies: one cost column per known
+    /// kernel id (unknown columns are tolerated and skipped), with the
+    /// legacy `cost_ratio` standing in for a missing masked column.
     pub fn policy(&self) -> DispatchPolicy {
-        DispatchPolicy::with_cost_ratio(self.cost_ratio)
+        let mut columns = Vec::with_capacity(self.kernel_costs.len());
+        for (name, cost) in &self.kernel_costs {
+            if let Some(id) = KernelId::parse(name) {
+                columns.push((id, *cost));
+            }
+        }
+        let mut policy = DispatchPolicy::from_columns(columns);
+        if policy.per_flop(KernelId::DENSE).is_none() {
+            policy.set_column(KernelId::DENSE, 1.0);
+        }
+        if policy.per_flop(KernelId::MASKED).is_none() {
+            policy.set_column(KernelId::MASKED, self.cost_ratio);
+        }
+        policy
     }
 }
 
@@ -104,6 +215,12 @@ pub struct MachineProfile {
     pub threads: usize,
     /// Wall-clock budget the calibration ran under (ms).
     pub budget_ms: u64,
+    /// The kernel-id set this profile carries cost columns for — the
+    /// registry fingerprint. A running binary whose registry has more
+    /// kernels recalibrates just the missing columns
+    /// ([`Self::missing_kernel_columns`]); extra columns for kernels the
+    /// binary lacks are tolerated.
+    pub kernels: Vec<String>,
     pub layers: Vec<LayerThreshold>,
 }
 
@@ -127,6 +244,10 @@ impl MachineProfile {
             ("hardware", Json::Str(self.hardware.clone())),
             ("threads", Json::Num(self.threads as f64)),
             ("budget_ms", Json::Num(self.budget_ms as f64)),
+            (
+                "kernels",
+                Json::Arr(self.kernels.iter().map(|k| Json::Str(k.clone())).collect()),
+            ),
             (
                 "layers",
                 Json::Arr(self.layers.iter().map(LayerThreshold::to_json).collect()),
@@ -166,7 +287,28 @@ impl MachineProfile {
             .iter()
             .map(LayerThreshold::from_json)
             .collect::<Result<Vec<_>, String>>()?;
-        Ok(MachineProfile { version, fingerprint, hardware, threads, budget_ms, layers })
+        // The measured kernel-id set: explicit when the writer recorded it;
+        // a pre-registry profile derives it from the columns actually
+        // present (the layers' derived dense+masked pair).
+        let kernels = match v.get("kernels").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .filter_map(|k| k.as_str().map(str::to_string))
+                .collect(),
+            None => {
+                let mut union: Vec<String> = Vec::new();
+                for lt in &layers {
+                    for (name, _) in &lt.kernel_costs {
+                        if !union.contains(name) {
+                            union.push(name.clone());
+                        }
+                    }
+                }
+                union.sort_by_key(|name| column_rank(name));
+                union
+            }
+        };
+        Ok(MachineProfile { version, fingerprint, hardware, threads, budget_ms, kernels, layers })
     }
 
     /// Load from a file.
@@ -214,6 +356,18 @@ impl MachineProfile {
         self.fingerprint == model_fingerprint(layer_sizes)
     }
 
+    /// Registered kernels this profile has no cost column for, in at least
+    /// one layer. A non-empty result does not reject the profile — serve
+    /// keeps the measured columns and recalibrates only these (the columns
+    /// are independent measurements, so partial reuse is sound).
+    pub fn missing_kernel_columns(&self, required: &[KernelId]) -> Vec<KernelId> {
+        required
+            .iter()
+            .copied()
+            .filter(|k| self.layers.iter().any(|lt| !lt.has_column(*k)))
+            .collect()
+    }
+
     /// Build the runtime [`PolicyTable`] for a model with `num_layers`
     /// hidden layers; `source` is remembered for the fallback warning.
     pub fn policy_table(&self, num_layers: usize, source: &str) -> PolicyTable {
@@ -228,22 +382,32 @@ impl MachineProfile {
     pub fn summary_lines(&self) -> Vec<String> {
         let mut lines = vec![
             format!(
-                "machine profile: {} on {} ({} threads, budget {} ms)",
-                self.fingerprint, self.hardware, self.threads, self.budget_ms
+                "machine profile: {} on {} ({} threads, budget {} ms, kernels [{}])",
+                self.fingerprint,
+                self.hardware,
+                self.threads,
+                self.budget_ms,
+                self.kernels.join(", ")
             ),
             format!(
-                "{:<7} {:>11} {:>12} {:>14} {:>10}",
-                "layer", "shape", "cost-ratio", "ratio-serial", "α*"
+                "{:<7} {:>11} {:>12} {:>14} {:>10}  {}",
+                "layer", "shape", "cost-ratio", "ratio-serial", "α*", "kernel per-FLOP costs"
             ),
         ];
         for lt in &self.layers {
+            let cols: Vec<String> = lt
+                .kernel_costs
+                .iter()
+                .map(|(k, v)| format!("{k}:{v:.3}"))
+                .collect();
             lines.push(format!(
-                "{:<7} {:>11} {:>12.3} {:>14.3} {:>10.4}",
+                "{:<7} {:>11} {:>12.3} {:>14.3} {:>10.4}  {}",
                 lt.layer,
                 format!("{}×{}", lt.d, lt.h),
                 lt.cost_ratio,
                 lt.cost_ratio_serial,
-                lt.alpha_star
+                lt.alpha_star,
+                cols.join(" ")
             ));
         }
         lines
@@ -253,7 +417,7 @@ impl MachineProfile {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::condcomp::Kernel;
+    use crate::condcomp::{KernelId, BUILTIN_KERNELS};
 
     fn sample() -> MachineProfile {
         MachineProfile {
@@ -262,23 +426,30 @@ mod tests {
             hardware: hardware_descriptor(),
             threads: 4,
             budget_ms: 500,
+            kernels: vec!["dense".into(), "dense_packed".into(), "masked".into()],
             layers: vec![
-                LayerThreshold {
-                    layer: 0,
-                    d: 784,
-                    h: 256,
-                    cost_ratio: 2.5,
-                    cost_ratio_serial: 3.25,
-                    alpha_star: 0.4,
-                },
-                LayerThreshold {
-                    layer: 1,
-                    d: 256,
-                    h: 128,
-                    cost_ratio: 5.0,
-                    cost_ratio_serial: 4.0,
-                    alpha_star: 0.2,
-                },
+                LayerThreshold::from_kernel_costs(
+                    0,
+                    784,
+                    256,
+                    vec![
+                        ("dense".into(), 1.0),
+                        ("dense_packed".into(), 0.9),
+                        ("masked".into(), 2.5),
+                    ],
+                    Some(3.25),
+                ),
+                LayerThreshold::from_kernel_costs(
+                    1,
+                    256,
+                    128,
+                    vec![
+                        ("dense".into(), 1.0),
+                        ("dense_packed".into(), 1.1),
+                        ("masked".into(), 5.0),
+                    ],
+                    Some(4.0),
+                ),
             ],
         }
     }
@@ -289,6 +460,23 @@ mod tests {
         let text = p.to_json().to_string();
         let back = MachineProfile::parse(&text).unwrap();
         assert_eq!(back, p);
+        // The registry-era fields survived.
+        assert_eq!(back.kernels.len(), 3);
+        assert!(back.layers[0].has_column(KernelId::DENSE_PACKED));
+    }
+
+    #[test]
+    fn derived_fields_come_from_the_cost_table() {
+        let p = sample();
+        // Layer 0: masked 2.5 over dense 1.0 → legacy ratio 2.5; the packed
+        // column at 0.9 moves the threshold to 0.9/2.5 = 0.36.
+        assert!((p.layers[0].cost_ratio - 2.5).abs() < 1e-12);
+        assert!((p.layers[0].alpha_star - 0.36).abs() < 1e-12);
+        assert_eq!(p.layers[0].policy().preferred_dense(), KernelId::DENSE_PACKED);
+        // Layer 1: packed slower than dense → plain dense keeps the GEMM,
+        // threshold is the classic 1/5.
+        assert!((p.layers[1].alpha_star - 0.2).abs() < 1e-12);
+        assert_eq!(p.layers[1].policy().preferred_dense(), KernelId::DENSE);
     }
 
     #[test]
@@ -312,6 +500,89 @@ mod tests {
         assert_eq!(p.fingerprint, "mlp:8-4-2");
         assert_eq!(p.layers.len(), 1);
         assert_eq!(p.layers[0].cost_ratio, 3.0);
+        // Pre-registry file: the binary dense+masked table is derived.
+        assert_eq!(p.kernels, vec!["dense".to_string(), "masked".to_string()]);
+        assert!(p.layers[0].has_column(KernelId::MASKED));
+    }
+
+    /// Satellite: a cost column for a kernel this binary has never heard of
+    /// is tolerated — preserved through a round-trip, skipped by `policy()`.
+    #[test]
+    fn unknown_kernel_column_is_tolerated_and_round_trips() {
+        let text = r#"{
+            "version": 1,
+            "fingerprint": "mlp:8-4-2",
+            "hardware": "x86_64-linux",
+            "threads": 2,
+            "budget_ms": 100,
+            "kernels": ["dense", "masked", "quantized_int8"],
+            "layers": [
+                {"layer": 0, "d": 8, "h": 4,
+                 "cost_ratio": 3.0, "cost_ratio_serial": 3.5, "alpha_star": 0.3333,
+                 "kernel_costs": {"dense": 1.0, "masked": 3.0, "quantized_int8": 0.4}}
+            ]
+        }"#;
+        let p = MachineProfile::parse(text).unwrap();
+        assert!(p.kernels.contains(&"quantized_int8".to_string()));
+        let lt = &p.layers[0];
+        assert!(lt.kernel_costs.iter().any(|(k, v)| k == "quantized_int8" && *v == 0.4));
+        // The unknown column cannot influence routing in this binary…
+        let policy = lt.policy();
+        assert_eq!(policy.columns().len(), 2, "{:?}", policy.columns());
+        assert!((policy.cost_ratio() - 3.0).abs() < 1e-12);
+        // …but survives the round-trip for the newer binary that wrote it.
+        let back = MachineProfile::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(back, p);
+        // And this binary's registry flags nothing missing for its own set
+        // minus what the file lacks.
+        assert_eq!(
+            p.missing_kernel_columns(&[KernelId::DENSE, KernelId::MASKED]),
+            Vec::<KernelId>::new()
+        );
+    }
+
+    /// Satellite: a profile missing a registered kernel's column is *not*
+    /// rejected — the gap is reported so serve recalibrates just that
+    /// column.
+    #[test]
+    fn missing_kernel_column_is_reported_for_recalibration() {
+        // A pre-registry profile: no kernel_costs at all → dense+masked
+        // derived, dense_packed missing.
+        let text = r#"{
+            "version": 1,
+            "fingerprint": "mlp:8-4-2",
+            "hardware": "x86_64-linux",
+            "threads": 2,
+            "budget_ms": 100,
+            "layers": [
+                {"layer": 0, "d": 8, "h": 4, "cost_ratio": 3.0}
+            ]
+        }"#;
+        let p = MachineProfile::parse(text).unwrap();
+        assert_eq!(
+            p.missing_kernel_columns(BUILTIN_KERNELS),
+            vec![KernelId::DENSE_PACKED]
+        );
+        // A partially-columned registry profile: one layer lacks masked.
+        let text = r#"{
+            "version": 1,
+            "fingerprint": "mlp:8-4-2",
+            "hardware": "x86_64-linux",
+            "threads": 2,
+            "budget_ms": 100,
+            "layers": [
+                {"layer": 0, "d": 8, "h": 4, "cost_ratio": 3.0,
+                 "kernel_costs": {"dense": 1.0, "dense_packed": 0.95}}
+            ]
+        }"#;
+        let p = MachineProfile::parse(text).unwrap();
+        assert_eq!(p.missing_kernel_columns(BUILTIN_KERNELS), vec![KernelId::MASKED]);
+        // The legacy ratio still anchors the masked fallback column.
+        assert!((p.layers[0].cost_ratio - 3.0).abs() < 1e-12);
+        assert_eq!(p.layers[0].policy().per_flop(KernelId::MASKED), Some(3.0));
+        // An empty profile has nothing missing (nothing to serve either).
+        let empty = MachineProfile { layers: vec![], ..p };
+        assert!(empty.missing_kernel_columns(BUILTIN_KERNELS).is_empty());
     }
 
     #[test]
@@ -349,11 +620,22 @@ mod tests {
         let table = p.policy_table(2, "profile.json");
         assert_eq!(table.calibrated_layers(), 2);
         let t = table.thresholds();
-        assert!((t[0] - 0.4).abs() < 1e-12, "α*₀ {t:?}");
+        assert!((t[0] - 0.36).abs() < 1e-12, "α*₀ {t:?}");
         assert!((t[1] - 0.2).abs() < 1e-12, "α*₁ {t:?}");
-        // At α = 0.3 the two layers disagree — the whole point of the table.
-        assert_eq!(table.policy_for(0).decide(64, 784, 256, 0.3), Kernel::MaskedParallel);
-        assert_eq!(table.policy_for(1).decide(64, 256, 128, 0.3), Kernel::DenseParallel);
+        // At α = 0.3 the two layers disagree — the whole point of the table
+        // (and layer 0's dense regime routes to the cheaper packed kernel).
+        assert_eq!(
+            table.policy_for(0).decide(64, 784, 256, 0.3, BUILTIN_KERNELS),
+            KernelId::MASKED
+        );
+        assert_eq!(
+            table.policy_for(1).decide(64, 256, 128, 0.3, BUILTIN_KERNELS),
+            KernelId::DENSE
+        );
+        assert_eq!(
+            table.policy_for(0).decide(64, 784, 256, 0.9, BUILTIN_KERNELS),
+            KernelId::DENSE_PACKED
+        );
     }
 
     #[test]

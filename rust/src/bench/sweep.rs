@@ -14,8 +14,10 @@
 
 use super::{bench_with_units, BenchConfig, BenchResult};
 use crate::autotune::{Autotuner, LayerThreshold};
-use crate::condcomp::{DispatchPolicy, MaskedLayer};
+use crate::condcomp::registry::LayerOperands;
+use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer, WorkModel};
 use crate::config::{EstimatorConfig, NetConfig};
+use crate::exec::ExecCtx;
 use crate::coordinator::server::Client;
 use crate::coordinator::{NativeBackend, PoolMode, Server, ServerConfig};
 use crate::estimator::SignEstimatorSet;
@@ -63,6 +65,34 @@ impl SweepRow {
             pairs.push(("alpha", Json::Num(a)));
         }
         Json::obj(pairs)
+    }
+}
+
+/// One registry-kernel measurement at a fixed mask density: the
+/// `kernel_sweep` column — dense vs dense_packed vs masked throughput at
+/// each α, all through the same registry entry points dispatch routes to.
+#[derive(Clone, Debug)]
+pub struct KernelSweepRow {
+    /// Registry kernel id (`dense`, `dense_packed`, `masked`, …).
+    pub kernel: String,
+    /// Mask density the kernel ran at.
+    pub alpha: f64,
+    /// Median seconds per forward.
+    pub median_s: f64,
+    /// §3.4 FLOPs the kernel executes per forward at this α (dense-work
+    /// kernels compute every cell regardless of α).
+    pub flops: f64,
+}
+
+impl KernelSweepRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("alpha", Json::Num(self.alpha)),
+            ("median_s", Json::Num(self.median_s)),
+            ("flops", Json::Num(self.flops)),
+            ("gflops_per_s", Json::Num(self.flops / self.median_s.max(1e-12) / 1e9)),
+        ])
     }
 }
 
@@ -143,6 +173,9 @@ pub struct ParallelSweep {
     /// shapes (the autotune harness's quick fit — `condcomp calibrate`
     /// runs the same fit under a configurable budget and persists it).
     pub per_layer: Vec<LayerThreshold>,
+    /// Registry-kernel throughput at each grid density (dense vs
+    /// dense_packed vs masked through the registry entry points).
+    pub kernel_sweep: Vec<KernelSweepRow>,
     /// Serving throughput at each measured batcher shard count (leased
     /// executors — the production configuration).
     pub shard_sweep: Vec<ShardRow>,
@@ -156,14 +189,23 @@ pub const ALPHA_GRID: [f64; 4] = [0.05, 0.25, 0.5, 1.0];
 /// Run the full sweep. `dim` is the square GEMM dimension (512 for the
 /// acceptance target), `batch` the masked layer's batch rows, `threads_max`
 /// the parallel arm's pool size, `layer_sizes` the model layer widths whose
-/// hidden shapes get individually fitted thresholds.
+/// hidden shapes get individually fitted thresholds, `kernels` an optional
+/// registry allow-list (`--kernels`) restricting the kernel sweep and the
+/// per-layer fit.
 pub fn run_parallel_sweep(
     cfg: &BenchConfig,
     dim: usize,
     batch: usize,
     threads_max: usize,
     layer_sizes: &[usize],
+    kernels: Option<&[KernelId]>,
 ) -> ParallelSweep {
+    let registry = match kernels {
+        Some(allow) => KernelRegistry::builtin()
+            .restricted(allow)
+            .expect("validated allow-list"),
+        None => KernelRegistry::builtin(),
+    };
     let threads_max = threads_max.max(1);
     let mut rng = Pcg32::seeded(0xBE9C);
     let mut rows = Vec::new();
@@ -257,19 +299,56 @@ pub fn run_parallel_sweep(
     let measured_cost_ratio = (masked_full_par / dense_ref.max(1e-12)).max(1e-6);
     let policy = DispatchPolicy::with_cost_ratio(measured_cost_ratio);
 
+    // --- registry kernels head-to-head across the α grid ----------------
+    // The kernel_sweep column: every registered (and allowed) kernel at the
+    // layer shape, through the exact registry entry points the cost router
+    // dispatches to — dense vs dense_packed race bitwise-identical outputs,
+    // masked races its α-proportional work against them.
+    let mut kernel_sweep = Vec::new();
+    {
+        let pool = ThreadPool::new(threads_max);
+        let mut ctx = ExecCtx::full(&pool);
+        let layer = MaskedLayer::new(&b, &bias);
+        let ops = LayerOperands::new(&b, &layer);
+        for &(alpha, ref mask) in &masks {
+            for kernel in registry.iter() {
+                let work = match kernel.id().work() {
+                    WorkModel::Dense => layer_flops,
+                    WorkModel::AlphaScaled => layer_flops * alpha,
+                };
+                let r = bench_with_units(
+                    &format!("kernel_{} α={alpha} threads={threads_max}", kernel.id()),
+                    cfg,
+                    work,
+                    || {
+                        let _ = kernel.run(&ops, &x, mask, &mut ctx, &mut out);
+                    },
+                );
+                kernel_sweep.push(KernelSweepRow {
+                    kernel: kernel.id().as_str().to_string(),
+                    alpha,
+                    median_s: r.time.median,
+                    flops: work,
+                });
+            }
+        }
+    }
+
     // Per-layer thresholds: the global ratio above is for *one* shape; each
     // hidden layer's d×h gets its own fit through the autotune harness
-    // (quick budget — `condcomp calibrate` is the configurable-budget run).
+    // (quick budget — `condcomp calibrate` is the configurable-budget run),
+    // one cost column per allowed kernel.
     let tuner = Autotuner {
         budget_ms: ((cfg.measure_s * 1000.0) as u64).clamp(40, 1000),
         alpha_grid: ALPHA_GRID.to_vec(),
         batch,
         min_reps: 1,
         fit_serial: true,
+        kernels: registry.ids(),
     };
     let per_layer = if layer_sizes.len() >= 3 {
         let pool = ThreadPool::new(threads_max);
-        tuner.calibrate_model(layer_sizes, &pool).layers
+        tuner.calibrate_model_on(layer_sizes, &pool, &registry).layers
     } else {
         Vec::new()
     };
@@ -315,6 +394,7 @@ pub fn run_parallel_sweep(
         measured_cost_ratio,
         density_threshold: policy.density_threshold(),
         per_layer,
+        kernel_sweep,
         shard_sweep,
         lease_vs_private,
     }
@@ -417,9 +497,28 @@ impl ParallelSweep {
             self.measured_cost_ratio, self.density_threshold
         ));
         for lt in &self.per_layer {
+            let cols: Vec<String> = lt
+                .kernel_costs
+                .iter()
+                .map(|(k, v)| format!("{k}:{v:.2}"))
+                .collect();
             lines.push(format!(
-                "layer {} ({}×{}): cost ratio {:.2} → α* = {:.3}",
-                lt.layer, lt.d, lt.h, lt.cost_ratio, lt.alpha_star
+                "layer {} ({}×{}): cost ratio {:.2} → α* = {:.3}  [{}]",
+                lt.layer,
+                lt.d,
+                lt.h,
+                lt.cost_ratio,
+                lt.alpha_star,
+                cols.join(" ")
+            ));
+        }
+        for row in &self.kernel_sweep {
+            lines.push(format!(
+                "kernel sweep: {:<14} α={:.2} → {:>9.3}ms  {:>8.2} GF/s",
+                row.kernel,
+                row.alpha,
+                row.median_s * 1e3,
+                row.flops / row.median_s.max(1e-12) / 1e9
             ));
         }
         for row in &self.shard_sweep {
@@ -461,6 +560,10 @@ impl ParallelSweep {
                 Json::Arr(self.per_layer.iter().map(LayerThreshold::to_json).collect()),
             ),
             (
+                "kernel_sweep",
+                Json::Arr(self.kernel_sweep.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
                 "serve_shard_sweep",
                 Json::Arr(self.shard_sweep.iter().map(|r| r.to_json()).collect()),
             ),
@@ -486,17 +589,26 @@ mod tests {
     fn sweep_produces_complete_machine_readable_output() {
         let cfg = BenchConfig { warmup_s: 0.0, measure_s: 0.0, min_iters: 1, max_iters: 1 };
         let layer_sizes = [24usize, 20, 16, 6];
-        let sweep = run_parallel_sweep(&cfg, 32, 8, 2, &layer_sizes);
+        let sweep = run_parallel_sweep(&cfg, 32, 8, 2, &layer_sizes, None);
         // 2 dense_gemm + 2×(dense_gemm_batch + dense_forward + 4 masked) rows.
         assert_eq!(sweep.rows.len(), 2 + 2 * (2 + ALPHA_GRID.len()));
         assert!(sweep.measured_cost_ratio > 0.0 && sweep.measured_cost_ratio.is_finite());
         assert!((0.0..=1.0).contains(&sweep.density_threshold));
         assert!(!sweep.report_lines().is_empty());
-        // Per-layer fits: one per hidden layer, each with a sane α*.
+        // Per-layer fits: one per hidden layer, each with a sane α* and one
+        // cost column per registered kernel.
         assert_eq!(sweep.per_layer.len(), 2);
+        let registry_ids = KernelRegistry::builtin().ids();
         for (l, lt) in sweep.per_layer.iter().enumerate() {
             assert_eq!((lt.layer, lt.d, lt.h), (l, layer_sizes[l], layer_sizes[l + 1]));
             assert!((0.0..=1.0).contains(&lt.alpha_star));
+            assert_eq!(lt.kernel_costs.len(), registry_ids.len(), "{:?}", lt.kernel_costs);
+        }
+        // Kernel sweep: every registered kernel at every grid density.
+        assert_eq!(sweep.kernel_sweep.len(), ALPHA_GRID.len() * registry_ids.len());
+        for row in &sweep.kernel_sweep {
+            assert!(row.median_s >= 0.0 && row.flops > 0.0, "{row:?}");
+            assert!(registry_ids.iter().any(|k| k.as_str() == row.kernel));
         }
 
         // Shard column: {1, 2, threads_max=2} dedups to {1, 2}; every row
@@ -523,6 +635,22 @@ mod tests {
         let json = sweep.to_json();
         let parsed = Json::parse(&json.to_string()).expect("self-parse");
         assert!(parsed.get("density_threshold").and_then(|v| v.as_f64()).is_some());
+        let kernel_rows = parsed
+            .get("kernel_sweep")
+            .and_then(|v| v.as_arr())
+            .expect("kernel_sweep column");
+        assert_eq!(kernel_rows.len(), sweep.kernel_sweep.len());
+        for id in &registry_ids {
+            assert!(
+                kernel_rows
+                    .iter()
+                    .any(|r| r.get("kernel").and_then(|k| k.as_str()) == Some(id.as_str())),
+                "kernel {id} missing from kernel_sweep JSON"
+            );
+        }
+        assert!(kernel_rows
+            .iter()
+            .all(|r| r.get("alpha").is_some() && r.get("gflops_per_s").is_some()));
         let shard_rows = parsed
             .get("serve_shard_sweep")
             .and_then(|v| v.as_arr())

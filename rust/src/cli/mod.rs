@@ -53,6 +53,27 @@
 //! server's worker threads equal the `--threads` budget for any shard
 //! count; `stats` reports the accounting as `threads_total`,
 //! `threads_leased` and `shard<i>_lease_threads`.
+//!
+//! # Kernel allow-lists (`--kernels`)
+//!
+//! `serve`, `bench` and `calibrate` accept `--kernels` (config key
+//! `dispatch.kernels`): a comma-separated allow-list of registered compute
+//! kernel ids the cost router may pick from — `dense`, `dense_packed`,
+//! `masked` (and `pjrt` once the real bindings land):
+//!
+//! ```text
+//! # Route only between the packed GEMM and the masked kernel:
+//! condcomp serve --kernels dense_packed,masked
+//!
+//! # Calibrate cost columns for a restricted set (dense is always measured
+//! # as the baseline), or bench the kernels against each other:
+//! condcomp calibrate --kernels dense_packed,masked
+//! condcomp bench --kernels dense,dense_packed
+//! ```
+//!
+//! Every routing decision is observable in production: the `stats` op
+//! exports one `layer<i>_kernel_<id>_batches` counter per hidden layer per
+//! kernel, and `serve` logs the per-layer kernel-choice table at startup.
 
 use std::collections::BTreeMap;
 

@@ -1,110 +1,334 @@
-//! Density-adaptive kernel dispatch: dense-parallel vs masked-parallel, per
-//! layer per batch.
+//! Cost-routed kernel dispatch: pick the cheapest registered compute kernel
+//! per layer per batch from its estimated activation density α.
 //!
-//! The masked kernel does `α·N·h` contiguous dot products; the dense axpy
-//! GEMM does `N·h` output cells' worth of packed FMAs at a much higher
-//! per-FLOP rate (dot accumulation chains defeat the vectorizer in a way
-//! row-axpy does not — see the `linalg::gemm` module docs). So the masked
-//! path wins only below a density threshold
+//! The original dispatch was a binary choice — masked dot products below a
+//! density threshold, dense axpy GEMM above it (`α* = 1/cost_ratio`, §3.4).
+//! That binary form is now a special case: a [`DispatchPolicy`] is a small
+//! *cost table* with one column per kernel (see
+//! [`crate::condcomp::registry::KernelRegistry`]), each column holding the
+//! kernel's measured per-FLOP cost relative to the dense axpy baseline. The
+//! routed cost of a kernel is
 //!
 //! ```text
-//! α* = (dense seconds) / (masked seconds at α = 1)
-//!    = (dense per-FLOP cost) / (masked per-FLOP cost) = 1 / cost_ratio
+//! cost(kernel, n, d, h, α) = per_flop(kernel) · work(kernel, n, d, h, α)
 //! ```
 //!
-//! The §3.4 cost model ([`LayerFlops`]) supplies the FLOP counts; the
-//! per-FLOP cost ratio is **measured**, and it is *shape-dependent* — per-
-//! layer `d × h` shapes have different cache behaviour, so each hidden
-//! layer gets its own ratio. [`PolicyTable`] holds the per-layer policies;
-//! they come from a persisted machine profile (`condcomp calibrate`, loaded
-//! at `serve` startup), from online calibration via
-//! [`crate::autotune::Autotuner`], or — per layer, as a last resort — from
-//! [`DispatchPolicy::DEFAULT_COST_RATIO`], with a one-time warning naming
-//! the profile path that was searched. The bench sweep records the fitted
-//! per-layer thresholds in `BENCH_parallel.json`.
+//! where `work` is the §3.4 FLOP count the kernel actually executes — the
+//! full `N·(2d−1)·h` for dense-work kernels ([`WorkModel::Dense`]), the
+//! density-proportional `α·N·(2d−1)·h` for masked ones
+//! ([`WorkModel::AlphaScaled`]) — and the argmin over the allowed kernel set
+//! picks the winner. The old threshold form is derived from the table
+//! ([`DispatchPolicy::density_threshold`] = cheapest dense per-FLOP cost /
+//! masked per-FLOP cost), so existing machine profiles keep loading; a
+//! kernel without a measured column falls back to its work model's default
+//! cost ([`DispatchPolicy::DEFAULT_COST_RATIO`] for masked work, parity with
+//! dense for dense work) with the existing one-time warning — now latched
+//! **once per process**, not once per table, so an N-shard server warns once.
+//!
+//! Per-FLOP costs are *shape-dependent* (cache behaviour differs per `d × h`),
+//! so [`PolicyTable`] holds one policy per hidden layer, fitted by
+//! [`crate::autotune`] and persisted in a machine profile with one cost
+//! column per registered kernel.
 
 use super::flops::LayerFlops;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 
-/// Which kernel executes a layer's forward for one batch.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Kernel {
-    /// Masked dot-product kernel, sharded over batch rows.
-    MaskedParallel,
-    /// Dense axpy GEMM, sharded over row panels (mask applied afterwards).
-    DenseParallel,
+/// Stable identifier of a compute kernel — the registry key, the profile
+/// cost-column name, and the `--kernels` allow-list token.
+///
+/// The id set is open: a new backend defines its own
+/// `KernelId::new("my_backend")`-style constant and registers under it; only
+/// the ids below ship in-tree.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct KernelId(&'static str);
+
+impl KernelId {
+    /// Dense axpy GEMM over row panels (mask applied afterwards).
+    pub const DENSE: KernelId = KernelId("dense");
+    /// Dense GEMM with A's row panels packed into a contiguous scratch slab
+    /// per KC block — bit-identical to [`KernelId::DENSE`].
+    pub const DENSE_PACKED: KernelId = KernelId("dense_packed");
+    /// Masked dot-product kernel: computes only the `α·N·h` live entries.
+    pub const MASKED: KernelId = KernelId("masked");
+    /// Device execution through PJRT. The slot registers only when the real
+    /// xla bindings replace `vendor/xla-stub` (`--features pjrt`).
+    pub const PJRT: KernelId = KernelId("pjrt");
+
+    /// Wrap a static id string (for out-of-tree registrants).
+    pub const fn new(id: &'static str) -> KernelId {
+        KernelId(id)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        self.0
+    }
+
+    /// Parse a known id (config allow-lists, profile columns). Unknown ids
+    /// return `None` — callers tolerate them (a newer writer's column) or
+    /// reject them (a typo in `--kernels`), per context.
+    pub fn parse(s: &str) -> Option<KernelId> {
+        [Self::DENSE, Self::DENSE_PACKED, Self::MASKED, Self::PJRT]
+            .into_iter()
+            .find(|k| k.as_str() == s)
+    }
+
+    /// How this kernel's work scales with the mask density α.
+    pub fn work(self) -> WorkModel {
+        if self == Self::MASKED {
+            WorkModel::AlphaScaled
+        } else {
+            WorkModel::Dense
+        }
+    }
+
+    /// Canonical ordering for deterministic argmin tie-breaks: the plain
+    /// dense kernel wins ties against everything, packed against masked,
+    /// in-tree ids against foreign ones.
+    pub(crate) fn priority(self) -> (u8, &'static str) {
+        let rank = if self == Self::DENSE {
+            0
+        } else if self == Self::DENSE_PACKED {
+            1
+        } else if self == Self::MASKED {
+            2
+        } else if self == Self::PJRT {
+            3
+        } else {
+            4
+        };
+        (rank, self.0)
+    }
 }
 
-/// Chooses the kernel from the batch's predicted mask density α and the
-/// measured per-FLOP cost ratio of the two kernels.
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+/// The in-tree kernel candidate set, canonical order (what
+/// `KernelRegistry::builtin()` registers; the PJRT slot joins only behind
+/// the `pjrt` feature).
+pub const BUILTIN_KERNELS: &[KernelId] =
+    &[KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED];
+
+/// How a kernel's executed FLOPs depend on the predicted mask density.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkModel {
+    /// Computes every output cell: `N·(2d−1)·h + N·h` (Eq. 8) regardless
+    /// of α.
+    Dense,
+    /// Computes only the predicted-live cells: `α·N·h` dot products (Eq. 9's
+    /// conditional term).
+    AlphaScaled,
+}
+
+impl WorkModel {
+    /// The §3.4 FLOP count a kernel with this work model executes for one
+    /// `n × d → h` batch at density `alpha`.
+    pub fn flops(self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+        let computed = (alpha.clamp(0.0, 1.0) * (n * h) as f64).round() as usize;
+        let lf = LayerFlops::from_counts(n, d, h, 0, computed);
+        match self {
+            WorkModel::Dense => lf.dense as f64,
+            WorkModel::AlphaScaled => lf.conditional as f64,
+        }
+    }
+
+    /// Fallback per-FLOP cost (relative to the dense baseline) for a kernel
+    /// nothing has calibrated: dense-work kernels assume parity (and lose
+    /// argmin ties to the plain dense kernel), masked work assumes the
+    /// conservative [`DispatchPolicy::DEFAULT_COST_RATIO`].
+    pub fn default_per_flop(self) -> f64 {
+        match self {
+            WorkModel::Dense => 1.0,
+            WorkModel::AlphaScaled => DispatchPolicy::DEFAULT_COST_RATIO,
+        }
+    }
+}
+
+/// One kernel's measured per-FLOP cost relative to the dense axpy baseline
+/// (`> 1`: this kernel's FLOP is slower than a dense FLOP).
 #[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostColumn {
+    pub kernel: KernelId,
+    pub per_flop: f64,
+}
+
+/// Per-layer cost table: one column per calibrated kernel; the argmin over
+/// `cost(kernel, n, d, h, α)` picks the kernel for a batch.
+#[derive(Clone, Debug, PartialEq)]
 pub struct DispatchPolicy {
-    /// Masked-kernel seconds-per-FLOP divided by dense-kernel
-    /// seconds-per-FLOP (> 1: a masked FLOP is slower than a dense FLOP).
-    pub cost_ratio: f64,
+    /// Columns in canonical (priority) order, unique per kernel.
+    columns: Vec<CostColumn>,
+}
+
+/// Process-wide latch for the uncalibrated-dispatch warning: under the
+/// sharded server every shard executor snapshots its own table, so a
+/// per-table latch fired once per shard. One process, one warning.
+static FALLBACK_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Claim the right to print the fallback warning. Returns `true` exactly
+/// once per process.
+fn claim_fallback_warning() -> bool {
+    !FALLBACK_WARNED.swap(true, Ordering::Relaxed)
 }
 
 impl DispatchPolicy {
-    /// Fallback cost ratio for uncalibrated policies, from the rejected
-    /// packed-dot experiment in the `linalg::gemm` docs (dot kernels ran a
-    /// few× slower per FLOP than the axpy GEMM on the 1-core testbed). Run
-    /// `condcomp calibrate` (the [`crate::autotune::Autotuner`] harness) or
-    /// the bench sweep for per-layer measured values on the serving
-    /// hardware.
+    /// Fallback masked-vs-dense cost ratio for uncalibrated policies, from
+    /// the rejected packed-dot experiment in the `linalg::gemm` docs (dot
+    /// kernels ran a few× slower per FLOP than the axpy GEMM on the 1-core
+    /// testbed). Run `condcomp calibrate` (the [`crate::autotune::Autotuner`]
+    /// harness) for per-layer per-kernel measured values.
     pub const DEFAULT_COST_RATIO: f64 = 3.0;
 
-    /// Policy with an explicit (e.g. previously recorded) cost ratio.
+    /// The binary legacy form: dense at parity, masked at `cost_ratio` — the
+    /// shape every pre-registry machine profile loads into.
     pub fn with_cost_ratio(cost_ratio: f64) -> DispatchPolicy {
-        DispatchPolicy { cost_ratio: cost_ratio.max(1e-6) }
+        DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::MASKED, cost_ratio),
+        ])
     }
 
-    /// The α above which the dense kernel wins.
-    pub fn density_threshold(&self) -> f64 {
-        (1.0 / self.cost_ratio).clamp(0.0, 1.0)
-    }
-
-    /// Pick the kernel for one `n × d → h` layer at predicted density
-    /// `alpha`, by comparing the §3.4 FLOP counts weighted by the measured
-    /// per-FLOP costs.
-    pub fn decide(&self, n: usize, d: usize, h: usize, alpha: f64) -> Kernel {
-        let computed = (alpha.clamp(0.0, 1.0) * (n * h) as f64).round() as usize;
-        let lf = LayerFlops::from_counts(n, d, h, 0, computed);
-        if (lf.conditional as f64) * self.cost_ratio < lf.dense as f64 {
-            Kernel::MaskedParallel
-        } else {
-            Kernel::DenseParallel
+    /// Build from explicit per-kernel columns (later duplicates win);
+    /// per-FLOP costs are clamped positive.
+    pub fn from_columns(columns: Vec<(KernelId, f64)>) -> DispatchPolicy {
+        let mut policy = DispatchPolicy { columns: Vec::new() };
+        for (kernel, per_flop) in columns {
+            policy.set_column(kernel, per_flop);
         }
+        policy
+    }
+
+    /// Insert or replace one kernel's cost column.
+    pub fn set_column(&mut self, kernel: KernelId, per_flop: f64) {
+        let per_flop = per_flop.max(1e-6);
+        match self.columns.iter_mut().find(|c| c.kernel == kernel) {
+            Some(c) => c.per_flop = per_flop,
+            None => {
+                self.columns.push(CostColumn { kernel, per_flop });
+                self.columns.sort_by_key(|c| c.kernel.priority());
+            }
+        }
+    }
+
+    /// The calibrated columns, canonical order.
+    pub fn columns(&self) -> &[CostColumn] {
+        &self.columns
+    }
+
+    /// A kernel's measured per-FLOP cost, if calibrated.
+    pub fn per_flop(&self, kernel: KernelId) -> Option<f64> {
+        self.columns.iter().find(|c| c.kernel == kernel).map(|c| c.per_flop)
+    }
+
+    /// A kernel's per-FLOP cost, falling back to its work model's default.
+    fn per_flop_or_default(&self, kernel: KernelId) -> f64 {
+        self.per_flop(kernel).unwrap_or_else(|| kernel.work().default_per_flop())
+    }
+
+    /// The masked-vs-dense ratio the legacy threshold form exposes (what
+    /// machine profiles persist as `cost_ratio`).
+    pub fn cost_ratio(&self) -> f64 {
+        self.per_flop_or_default(KernelId::MASKED)
+            / self.per_flop_or_default(KernelId::DENSE)
+    }
+
+    /// Estimated cost (arbitrary units: relative-per-FLOP × FLOPs) of running
+    /// `kernel` on one `n × d → h` batch at density `alpha`.
+    pub fn cost(&self, kernel: KernelId, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+        self.per_flop_or_default(kernel) * kernel.work().flops(n, d, h, alpha)
+    }
+
+    /// The α above which every dense-work kernel beats the masked kernel —
+    /// the legacy threshold, derived from the table (cheapest dense-work
+    /// per-FLOP cost over the masked per-FLOP cost).
+    pub fn density_threshold(&self) -> f64 {
+        let dense = self
+            .columns
+            .iter()
+            .filter(|c| c.kernel.work() == WorkModel::Dense)
+            .map(|c| c.per_flop)
+            .fold(f64::INFINITY, f64::min);
+        let dense = if dense.is_finite() { dense } else { 1.0 };
+        (dense / self.per_flop_or_default(KernelId::MASKED)).clamp(0.0, 1.0)
+    }
+
+    /// Drop cost columns for kernels outside `allowed` — the allow-list
+    /// view a backend pins for the control path, so
+    /// [`Self::preferred_dense`] can never pick an excluded kernel. (Plain
+    /// dense remains the implicit baseline: the control path's GEMM is not
+    /// conditional dispatch and always has the non-packed kernel to fall
+    /// back on, like the output layer.)
+    pub fn retain_kernels(&mut self, allowed: &[KernelId]) {
+        self.columns.retain(|c| allowed.contains(&c.kernel));
+    }
+
+    /// The cheapest dense-work kernel in the table (plain dense when nothing
+    /// is calibrated or tied) — what the control path's GEMM should run,
+    /// since all dense-work kernels are bit-identical.
+    pub fn preferred_dense(&self) -> KernelId {
+        let mut best = (KernelId::DENSE, self.per_flop_or_default(KernelId::DENSE));
+        for c in &self.columns {
+            if c.kernel.work() == WorkModel::Dense && c.per_flop < best.1 {
+                best = (c.kernel, c.per_flop);
+            }
+        }
+        best.0
+    }
+
+    /// Pick the cheapest kernel among `allowed` for one `n × d → h` batch at
+    /// predicted density `alpha`. Ties break toward the canonical order
+    /// (dense first) regardless of the slice's order, and an empty
+    /// allow-list degrades to plain dense. Allocation-free — this runs per
+    /// layer per batch on the serving hot path.
+    pub fn decide(
+        &self,
+        n: usize,
+        d: usize,
+        h: usize,
+        alpha: f64,
+        allowed: &[KernelId],
+    ) -> KernelId {
+        let mut best: Option<(f64, (u8, &'static str), KernelId)> = None;
+        for &k in allowed {
+            let c = self.cost(k, n, d, h, alpha);
+            let key = (c, k.priority());
+            if best.map_or(true, |(bc, bp, _)| key < (bc, bp)) {
+                best = Some((c, k.priority(), k));
+            }
+        }
+        best.map(|(_, _, k)| k).unwrap_or(KernelId::DENSE)
     }
 }
 
 impl Default for DispatchPolicy {
     fn default() -> DispatchPolicy {
-        DispatchPolicy { cost_ratio: DispatchPolicy::DEFAULT_COST_RATIO }
+        DispatchPolicy::with_cost_ratio(DispatchPolicy::DEFAULT_COST_RATIO)
     }
 }
 
 /// Per-layer dispatch policies with a shared uncalibrated fallback.
 ///
-/// A single global cost ratio ignores that different `d × h` layer shapes
-/// have different cache behaviour, so their masked-vs-dense flip points
-/// differ. The autotune subsystem ([`crate::autotune`]) measures each layer
-/// shape separately and persists the result in a machine profile;
-/// `PolicyTable` is the runtime form — one optional calibrated policy per
-/// hidden layer, plus the fallback ([`DispatchPolicy::DEFAULT_COST_RATIO`])
-/// for layers nothing has calibrated. The first fallback hit logs a
-/// one-time warning naming the profile path that was searched, so a
-/// silently-defaulting deployment is visible in the serve log.
+/// A single global cost table ignores that different `d × h` layer shapes
+/// have different cache behaviour, so their kernel flip points differ. The
+/// autotune subsystem ([`crate::autotune`]) measures each layer shape ×
+/// registered kernel separately and persists the result in a machine
+/// profile; `PolicyTable` is the runtime form — one optional calibrated
+/// policy per hidden layer, plus the fallback (default columns) for layers
+/// nothing has calibrated. The first fallback hit logs a one-time (per
+/// *process*) warning naming the profile path that was searched, so a
+/// silently-defaulting deployment is visible in the serve log exactly once,
+/// regardless of how many shard executors snapshot the table.
 #[derive(Clone, Debug)]
 pub struct PolicyTable {
     /// `layers[l]` is hidden layer `l`'s calibrated policy; `None` falls
-    /// back (and warns once).
+    /// back (and warns once per process).
     layers: Vec<Option<DispatchPolicy>>,
     fallback: DispatchPolicy,
     /// Where a machine profile was looked for — named by the warning.
     profile_path: Option<String>,
-    /// One-time warning latch, shared across clones of this table.
-    warned: Arc<AtomicBool>,
 }
 
 impl PolicyTable {
@@ -114,18 +338,16 @@ impl PolicyTable {
             layers: vec![None; num_layers],
             fallback: DispatchPolicy::default(),
             profile_path: None,
-            warned: Arc::new(AtomicBool::new(false)),
         }
     }
 
     /// Every layer pinned to one explicit policy (tests; embedders with a
-    /// single recorded global ratio). Counts as calibrated — no warning.
+    /// single recorded global table). Counts as calibrated — no warning.
     pub fn uniform(policy: DispatchPolicy, num_layers: usize) -> PolicyTable {
         PolicyTable {
-            layers: vec![Some(policy); num_layers],
+            layers: vec![Some(policy.clone()); num_layers],
             fallback: policy,
             profile_path: None,
-            warned: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -149,6 +371,31 @@ impl PolicyTable {
         }
     }
 
+    /// Insert or replace one kernel's cost column for one layer, preserving
+    /// the layer's other columns (the targeted-recalibration path: a profile
+    /// missing a kernel column gets just that column re-measured). An
+    /// uncalibrated layer is promoted to calibrated with default columns
+    /// plus the new one.
+    pub fn set_layer_column(&mut self, layer: usize, kernel: KernelId, per_flop: f64) {
+        if layer >= self.layers.len() {
+            return;
+        }
+        let mut policy = self.layers[layer].clone().unwrap_or_else(|| self.fallback.clone());
+        policy.set_column(kernel, per_flop);
+        self.layers[layer] = Some(policy);
+    }
+
+    /// Drop every layer's cost columns for kernels outside `allowed`
+    /// ([`DispatchPolicy::retain_kernels`] per layer + fallback) — applied
+    /// to the snapshot a backend pins for the control path, so an
+    /// allow-list-excluded kernel can never be preferred there either.
+    pub fn retain_kernels(&mut self, allowed: &[KernelId]) {
+        for slot in self.layers.iter_mut().flatten() {
+            slot.retain_kernels(allowed);
+        }
+        self.fallback.retain_kernels(allowed);
+    }
+
     /// Whether hidden layer `layer` has a calibrated (non-fallback) policy.
     pub fn is_calibrated(&self, layer: usize) -> bool {
         matches!(self.layers.get(layer), Some(Some(_)))
@@ -160,19 +407,36 @@ impl PolicyTable {
     }
 
     /// The policy for hidden layer `layer`. Uncalibrated layers use the
-    /// fallback and trigger the one-time warning.
+    /// fallback and trigger the once-per-process warning.
     pub fn policy_for(&self, layer: usize) -> DispatchPolicy {
-        match self.layers.get(layer).copied().flatten() {
+        match self.layers.get(layer).cloned().flatten() {
             Some(p) => p,
             None => {
                 self.warn_once(layer);
-                self.fallback
+                self.fallback.clone()
             }
         }
     }
 
+    /// The policy for hidden layer `layer` without the fallback warning —
+    /// the reporting path (summaries, kernel-choice logs), not a decision.
+    pub fn policy_snapshot(&self, layer: usize) -> DispatchPolicy {
+        self.layers
+            .get(layer)
+            .cloned()
+            .flatten()
+            .unwrap_or_else(|| self.fallback.clone())
+    }
+
+    /// The cheapest dense-work kernel for hidden layer `layer` (all
+    /// dense-work kernels are bit-identical, so this choice can never change
+    /// results). Does not trigger the fallback warning.
+    pub fn dense_kernel_for(&self, layer: usize) -> KernelId {
+        self.policy_snapshot(layer).preferred_dense()
+    }
+
     fn warn_once(&self, layer: usize) {
-        if !self.warned.swap(true, Ordering::Relaxed) {
+        if claim_fallback_warning() {
             let looked = self
                 .profile_path
                 .as_deref()
@@ -180,7 +444,7 @@ impl PolicyTable {
             eprintln!(
                 "warning: dispatch for layer {layer} is uncalibrated — no machine profile \
                  loaded (looked for {looked}); using DEFAULT_COST_RATIO = {}. \
-                 Run `condcomp calibrate` to fit per-layer thresholds for this machine.",
+                 Run `condcomp calibrate` to fit per-layer kernel costs for this machine.",
                 DispatchPolicy::DEFAULT_COST_RATIO
             );
         }
@@ -191,35 +455,41 @@ impl PolicyTable {
     pub fn thresholds(&self) -> Vec<f64> {
         self.layers
             .iter()
-            .map(|l| l.unwrap_or(self.fallback).density_threshold())
+            .map(|l| l.as_ref().unwrap_or(&self.fallback).density_threshold())
             .collect()
     }
 
     /// Human-readable per-layer table — the `serve` startup log.
     pub fn summary_lines(&self) -> Vec<String> {
         let mut lines = vec![format!(
-            "{:<7} {:>12} {:>10} {:>12}",
-            "layer", "cost-ratio", "α*", "source"
+            "{:<7} {:>12} {:>10} {:>12}  {}",
+            "layer", "cost-ratio", "α*", "source", "kernel per-FLOP costs"
         )];
         for (l, slot) in self.layers.iter().enumerate() {
             let (p, source) = match slot {
-                Some(p) => (*p, "calibrated"),
-                None => (self.fallback, "fallback"),
+                Some(p) => (p, "calibrated"),
+                None => (&self.fallback, "fallback"),
             };
+            let cols: Vec<String> = p
+                .columns()
+                .iter()
+                .map(|c| format!("{}:{:.3}", c.kernel, c.per_flop))
+                .collect();
             lines.push(format!(
-                "{:<7} {:>12.3} {:>10.4} {:>12}",
+                "{:<7} {:>12.3} {:>10.4} {:>12}  {}",
                 l,
-                p.cost_ratio,
+                p.cost_ratio(),
                 p.density_threshold(),
-                source
+                source,
+                cols.join(" ")
             ));
         }
         lines
     }
 }
 
-/// Equality over the dispatch-relevant state (the warning latch and the
-/// remembered profile path are diagnostics, not policy).
+/// Equality over the dispatch-relevant state (the remembered profile path is
+/// a diagnostic, not policy).
 impl PartialEq for PolicyTable {
     fn eq(&self, other: &PolicyTable) -> bool {
         self.layers == other.layers && self.fallback == other.fallback
@@ -230,10 +500,24 @@ impl PartialEq for PolicyTable {
 mod tests {
     use super::*;
 
+    const DM: &[KernelId] = &[KernelId::DENSE, KernelId::MASKED];
+
+    #[test]
+    fn kernel_ids_parse_and_display() {
+        for k in [KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED, KernelId::PJRT] {
+            assert_eq!(KernelId::parse(k.as_str()), Some(k));
+            assert_eq!(format!("{k}"), k.as_str());
+        }
+        assert_eq!(KernelId::parse("quantum"), None);
+        assert_eq!(KernelId::MASKED.work(), WorkModel::AlphaScaled);
+        assert_eq!(KernelId::DENSE_PACKED.work(), WorkModel::Dense);
+    }
+
     #[test]
     fn threshold_is_inverse_cost_ratio() {
         let p = DispatchPolicy::with_cost_ratio(4.0);
         assert!((p.density_threshold() - 0.25).abs() < 1e-12);
+        assert!((p.cost_ratio() - 4.0).abs() < 1e-12);
         // A faster-than-dense masked kernel would always win.
         let p = DispatchPolicy::with_cost_ratio(0.5);
         assert_eq!(p.density_threshold(), 1.0);
@@ -243,24 +527,75 @@ mod tests {
     fn decide_flips_at_the_threshold() {
         let p = DispatchPolicy::with_cost_ratio(4.0); // α* = 0.25
         let (n, d, h) = (64, 512, 512);
-        assert_eq!(p.decide(n, d, h, 0.05), Kernel::MaskedParallel);
-        assert_eq!(p.decide(n, d, h, 0.20), Kernel::MaskedParallel);
-        assert_eq!(p.decide(n, d, h, 0.30), Kernel::DenseParallel);
-        assert_eq!(p.decide(n, d, h, 1.00), Kernel::DenseParallel);
+        assert_eq!(p.decide(n, d, h, 0.05, DM), KernelId::MASKED);
+        assert_eq!(p.decide(n, d, h, 0.20, DM), KernelId::MASKED);
+        assert_eq!(p.decide(n, d, h, 0.30, DM), KernelId::DENSE);
+        assert_eq!(p.decide(n, d, h, 1.00, DM), KernelId::DENSE);
     }
 
     #[test]
     fn extreme_densities_are_stable() {
         let p = DispatchPolicy::default();
-        assert_eq!(p.decide(8, 100, 100, 0.0), Kernel::MaskedParallel);
-        assert_eq!(p.decide(8, 100, 100, 1.0), Kernel::DenseParallel);
+        assert_eq!(p.decide(8, 100, 100, 0.0, DM), KernelId::MASKED);
+        assert_eq!(p.decide(8, 100, 100, 1.0, DM), KernelId::DENSE);
         // Out-of-range α is clamped, not UB.
-        assert_eq!(p.decide(8, 100, 100, -3.0), Kernel::MaskedParallel);
-        assert_eq!(p.decide(8, 100, 100, 7.0), Kernel::DenseParallel);
+        assert_eq!(p.decide(8, 100, 100, -3.0, DM), KernelId::MASKED);
+        assert_eq!(p.decide(8, 100, 100, 7.0, DM), KernelId::DENSE);
+    }
+
+    /// The registry's open set in action: a cheaper packed column wins the
+    /// dense regime, the masked column keeps the sparse regime, and the
+    /// derived threshold moves with the cheapest dense kernel.
+    #[test]
+    fn packed_column_shifts_the_argmin_and_the_threshold() {
+        let p = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::DENSE_PACKED, 0.8),
+            (KernelId::MASKED, 4.0),
+        ]);
+        let (n, d, h) = (64, 512, 512);
+        // α* moved from 0.25 to 0.8/4 = 0.2.
+        assert!((p.density_threshold() - 0.2).abs() < 1e-12);
+        assert_eq!(p.preferred_dense(), KernelId::DENSE_PACKED);
+        assert_eq!(p.decide(n, d, h, 0.1, BUILTIN_KERNELS), KernelId::MASKED);
+        assert_eq!(p.decide(n, d, h, 0.5, BUILTIN_KERNELS), KernelId::DENSE_PACKED);
+        // Restricting the allow-list removes the packed option.
+        assert_eq!(p.decide(n, d, h, 0.5, DM), KernelId::DENSE);
+        // A masked-only allow-list always routes masked.
+        assert_eq!(p.decide(n, d, h, 1.0, &[KernelId::MASKED]), KernelId::MASKED);
+        // An empty allow-list degrades to plain dense.
+        assert_eq!(p.decide(n, d, h, 0.5, &[]), KernelId::DENSE);
+    }
+
+    /// Ties break toward the canonical order: an uncalibrated packed column
+    /// defaults to parity and must lose to plain dense, deterministically.
+    #[test]
+    fn ties_prefer_the_canonical_order() {
+        let p = DispatchPolicy::with_cost_ratio(4.0); // no packed column
+        assert_eq!(p.decide(64, 512, 512, 1.0, BUILTIN_KERNELS), KernelId::DENSE);
+        assert_eq!(p.preferred_dense(), KernelId::DENSE);
+        let mut q = p.clone();
+        q.set_column(KernelId::DENSE_PACKED, 1.0); // explicit parity
+        assert_eq!(q.decide(64, 512, 512, 1.0, BUILTIN_KERNELS), KernelId::DENSE);
+    }
+
+    #[test]
+    fn cost_is_per_flop_times_work() {
+        let p = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::MASKED, 3.0),
+        ]);
+        let (n, d, h) = (4, 10, 10);
+        let dense_flops = WorkModel::Dense.flops(n, d, h, 1.0);
+        assert_eq!(p.cost(KernelId::DENSE, n, d, h, 0.3), dense_flops);
+        let cond_flops = WorkModel::AlphaScaled.flops(n, d, h, 0.3);
+        assert!((p.cost(KernelId::MASKED, n, d, h, 0.3) - 3.0 * cond_flops).abs() < 1e-9);
+        // Uncalibrated kernels cost their work model's default.
+        assert_eq!(p.cost(KernelId::DENSE_PACKED, n, d, h, 0.5), dense_flops);
     }
 
     /// The point of the per-layer table: at the same batch density, two
-    /// layers with different fitted ratios pick different kernels, each
+    /// layers with different fitted tables pick different kernels, each
     /// flipping just below/above its own α*.
     #[test]
     fn per_layer_policies_flip_at_their_own_thresholds() {
@@ -269,13 +604,13 @@ mod tests {
         table.set_layer(1, DispatchPolicy::with_cost_ratio(10.0)); // α* = 0.1
         let (n, d, h) = (64, 512, 512);
         // Just below / above each layer's own threshold.
-        assert_eq!(table.policy_for(0).decide(n, d, h, 0.45), Kernel::MaskedParallel);
-        assert_eq!(table.policy_for(0).decide(n, d, h, 0.55), Kernel::DenseParallel);
-        assert_eq!(table.policy_for(1).decide(n, d, h, 0.05), Kernel::MaskedParallel);
-        assert_eq!(table.policy_for(1).decide(n, d, h, 0.15), Kernel::DenseParallel);
+        assert_eq!(table.policy_for(0).decide(n, d, h, 0.45, DM), KernelId::MASKED);
+        assert_eq!(table.policy_for(0).decide(n, d, h, 0.55, DM), KernelId::DENSE);
+        assert_eq!(table.policy_for(1).decide(n, d, h, 0.05, DM), KernelId::MASKED);
+        assert_eq!(table.policy_for(1).decide(n, d, h, 0.15, DM), KernelId::DENSE);
         // Same α, different layers → different kernels.
-        assert_eq!(table.policy_for(0).decide(n, d, h, 0.3), Kernel::MaskedParallel);
-        assert_eq!(table.policy_for(1).decide(n, d, h, 0.3), Kernel::DenseParallel);
+        assert_eq!(table.policy_for(0).decide(n, d, h, 0.3, DM), KernelId::MASKED);
+        assert_eq!(table.policy_for(1).decide(n, d, h, 0.3, DM), KernelId::DENSE);
         let t = table.thresholds();
         assert!((t[0] - 0.5).abs() < 1e-12 && (t[1] - 0.1).abs() < 1e-12);
     }
@@ -286,8 +621,6 @@ mod tests {
         assert_eq!(table.num_layers(), 3);
         assert_eq!(table.calibrated_layers(), 0);
         assert!(!table.is_calibrated(1));
-        // Fallback policy is the global default; repeated lookups warn once
-        // (the latch is per-table — asserted via the shared AtomicBool).
         assert_eq!(table.policy_for(0), DispatchPolicy::default());
         assert_eq!(table.policy_for(2), DispatchPolicy::default());
         // Out-of-range layers also fall back instead of panicking.
@@ -295,17 +628,86 @@ mod tests {
         assert_eq!(table.summary_lines().len(), 4); // header + 3 layers
     }
 
+    /// Regression (satellite): the fallback warning is latched once per
+    /// *process*, not once per table — under the sharded server every shard
+    /// executor snapshots its own table, and each snapshot used to re-warn.
+    #[test]
+    fn fallback_warning_is_once_per_process() {
+        // Two tables standing in for two shard executors' snapshots.
+        let shard0 = PolicyTable::uncalibrated(1).with_profile_path("shard0.json");
+        let shard1 = PolicyTable::uncalibrated(1).with_profile_path("shard1.json");
+        let _ = shard0.policy_for(0);
+        // After any fallback lookup, the process-wide latch is set…
+        assert!(FALLBACK_WARNED.load(Ordering::Relaxed));
+        // …so no later table can claim the warning again.
+        let _ = shard1.policy_for(0);
+        assert!(!claim_fallback_warning(), "second shard's snapshot must not re-warn");
+        // Reporting paths never touch the latch semantics either way.
+        let _ = shard1.policy_snapshot(0);
+        let _ = shard1.thresholds();
+    }
+
     #[test]
     fn uniform_table_is_fully_calibrated() {
         let p = DispatchPolicy::with_cost_ratio(4.0);
-        let table = PolicyTable::uniform(p, 2);
+        let table = PolicyTable::uniform(p.clone(), 2);
         assert_eq!(table.calibrated_layers(), 2);
         assert_eq!(table.policy_for(0), p);
         assert_eq!(table.policy_for(1), p);
         let mut expect = PolicyTable::uncalibrated(2);
-        expect.set_layer(0, p);
+        expect.set_layer(0, p.clone());
         expect.set_layer(1, p);
         // PartialEq compares layers + fallback only; fallbacks differ here.
         assert_eq!(expect.thresholds(), table.thresholds());
+    }
+
+    /// The allow-list view the control path pins: retaining only allowed
+    /// kernels removes an excluded packed column from the preference, for
+    /// every layer and the fallback alike.
+    #[test]
+    fn retain_kernels_strips_excluded_columns_from_the_preference() {
+        let mut p = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::DENSE_PACKED, 0.5),
+            (KernelId::MASKED, 4.0),
+        ]);
+        assert_eq!(p.preferred_dense(), KernelId::DENSE_PACKED);
+        p.retain_kernels(&[KernelId::DENSE, KernelId::MASKED]);
+        assert_eq!(p.preferred_dense(), KernelId::DENSE, "excluded kernel never preferred");
+        assert_eq!(p.per_flop(KernelId::DENSE_PACKED), None);
+        assert_eq!(p.per_flop(KernelId::MASKED), Some(4.0), "allowed columns kept");
+
+        let mut table = PolicyTable::uncalibrated(2);
+        table.set_layer(
+            0,
+            DispatchPolicy::from_columns(vec![
+                (KernelId::DENSE, 1.0),
+                (KernelId::DENSE_PACKED, 0.5),
+            ]),
+        );
+        table.retain_kernels(&[KernelId::DENSE, KernelId::MASKED]);
+        assert_eq!(table.dense_kernel_for(0), KernelId::DENSE);
+        assert_eq!(table.dense_kernel_for(1), KernelId::DENSE, "fallback stripped too");
+    }
+
+    /// Targeted recalibration: inserting one kernel's column preserves the
+    /// layer's other columns, and promotes an uncalibrated layer.
+    #[test]
+    fn set_layer_column_merges_into_existing_policies() {
+        let mut table = PolicyTable::uncalibrated(2);
+        table.set_layer(0, DispatchPolicy::with_cost_ratio(5.0));
+        table.set_layer_column(0, KernelId::DENSE_PACKED, 0.9);
+        let p0 = table.policy_snapshot(0);
+        assert_eq!(p0.per_flop(KernelId::MASKED), Some(5.0), "existing column preserved");
+        assert_eq!(p0.per_flop(KernelId::DENSE_PACKED), Some(0.9));
+        assert_eq!(p0.preferred_dense(), KernelId::DENSE_PACKED);
+        // Layer 1 was uncalibrated: the column promotes it with defaults.
+        table.set_layer_column(1, KernelId::DENSE_PACKED, 0.8);
+        assert!(table.is_calibrated(1));
+        let p1 = table.policy_snapshot(1);
+        assert_eq!(p1.per_flop(KernelId::DENSE_PACKED), Some(0.8));
+        assert!((p1.cost_ratio() - DispatchPolicy::DEFAULT_COST_RATIO).abs() < 1e-12);
+        // Out of range is a no-op, not a panic.
+        table.set_layer_column(99, KernelId::DENSE, 1.0);
     }
 }

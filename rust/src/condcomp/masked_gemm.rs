@@ -32,6 +32,18 @@ use crate::linalg::gemm::dot;
 use crate::linalg::Mat;
 use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
 
+/// Fuse ReLU with the estimator's gate over a dense pre-activation:
+/// `out[i,j] = out[i,j]` where it is positive *and* the mask is live, else 0.
+/// This is the post-pass every dense-work registry kernel applies so its
+/// output matches the masked kernel's function (`σ(a·W + b) ⊙ S`) — the
+/// dense kernels compute every dot product and zero the gated ones here.
+pub fn relu_gate(out: &mut Mat, mask: &Mat) {
+    debug_assert_eq!(out.shape(), mask.shape());
+    for (o, &m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
+        *o = if *o > 0.0 && m != 0.0 { *o } else { 0.0 };
+    }
+}
+
 /// A layer prepared for conditional execution: transposed weights + bias.
 #[derive(Clone, Debug)]
 pub struct MaskedLayer {

@@ -6,11 +6,16 @@
 //!   prediction", §3.1). Works off a transposed weight copy so each computed
 //!   dot product reads two contiguous strips; hot-path variants run batch
 //!   rows on the shared worker pool and write into caller-owned buffers.
-//! - [`dispatch`] — the density-adaptive kernel choice: masked dot products
-//!   beat the dense axpy GEMM only below a *measured*, *shape-dependent*
-//!   density threshold; [`DispatchPolicy`] combines one measurement with
-//!   the §3.4 cost model, and [`PolicyTable`] holds one per hidden layer
-//!   (fitted by [`crate::autotune`], persisted in a machine profile).
+//! - [`dispatch`] — the density-adaptive kernel choice as an open cost
+//!   table: [`DispatchPolicy`] holds one measured per-FLOP cost column per
+//!   registered kernel and routes each batch to the argmin;
+//!   [`PolicyTable`] holds one policy per hidden layer (fitted by
+//!   [`crate::autotune`], persisted in a machine profile).
+//! - [`registry`] — the open kernel set behind dispatch:
+//!   [`KernelRegistry`] maps stable [`KernelId`]s (`dense`,
+//!   `dense_packed`, `masked`, feature-gated `pjrt`) to object-safe
+//!   [`ComputeKernel`] implementations running through an
+//!   [`crate::exec::ExecCtx`].
 //! - [`cond_mlp`] — an estimator-augmented network forward built on the
 //!   masked GEMM, with exact FLOP accounting per layer.
 //! - [`flops`] — operation counters shared by the engine and the benches.
@@ -19,8 +24,12 @@ pub mod masked_gemm;
 pub mod cond_mlp;
 pub mod dispatch;
 pub mod flops;
+pub mod registry;
 
 pub use cond_mlp::CondMlp;
-pub use dispatch::{DispatchPolicy, Kernel, PolicyTable};
+pub use dispatch::{
+    CostColumn, DispatchPolicy, KernelId, PolicyTable, WorkModel, BUILTIN_KERNELS,
+};
 pub use flops::{FlopBreakdown, LayerFlops};
-pub use masked_gemm::MaskedLayer;
+pub use masked_gemm::{relu_gate, MaskedLayer};
+pub use registry::{ComputeKernel, KernelRegistry, LayerOperands};

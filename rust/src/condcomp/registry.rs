@@ -1,0 +1,448 @@
+//! The kernel registry: an open set of compute kernels behind stable ids,
+//! routed per layer per batch by the cost table in [`super::dispatch`].
+//!
+//! Before this module, the dispatch choice was a hard-coded binary — masked
+//! vs dense — and every new compute path (packed GEMM, PJRT, quantized)
+//! would have needed its own if-ladder in the backend. Now a kernel is an
+//! object-safe [`ComputeKernel`]: it computes one hidden layer's
+//! `σ(x·W + b) ⊙ S` through a caller-owned [`ExecCtx`] and reports how many
+//! dot products it evaluated (the §3.4 FLOP accounting input). The
+//! [`KernelRegistry`] maps [`KernelId`]s to implementations; the
+//! [`crate::autotune::Autotuner`] measures every registered kernel per layer
+//! shape and emits one machine-profile cost column each; the
+//! [`super::DispatchPolicy`] argmin routes each batch to the cheapest
+//! registered-and-allowed kernel.
+//!
+//! In-tree registrants ([`KernelRegistry::builtin`]):
+//!
+//! - `dense` — the axpy GEMM ([`crate::linalg::matmul_into_ctx`]), mask
+//!   applied afterwards; every dot product computed.
+//! - `dense_packed` — the A-panel-packing GEMM
+//!   ([`crate::linalg::matmul_into_packed_ctx`]): same accumulation order,
+//!   **bit-identical** to `dense`, different memory behaviour (faster on
+//!   wide-input layers).
+//! - `masked` — the dot-product kernel
+//!   ([`MaskedLayer::forward_masked_ctx`]): computes only predicted-live
+//!   entries.
+//! - `pjrt` — a feature-gated slot (`--features pjrt`) that registers only
+//!   when the real xla bindings replace `vendor/xla-stub`; until device
+//!   execution lands it delegates to the dense path so the column is
+//!   measurable end to end.
+//!
+//! Numeric contract: `dense` and `dense_packed` are bit-identical to each
+//! other (and to the serial [`crate::linalg::matmul_into`] oracle) for any
+//! thread count or lease width; `masked` is bit-identical to its own serial
+//! oracle [`MaskedLayer::forward_masked_into`]. Dense-work and masked-work
+//! kernels compute the same function with different float accumulation
+//! orders, so routing changes wall-clock, never correctness.
+
+use super::dispatch::KernelId;
+use super::masked_gemm::{relu_gate, MaskedLayer};
+use crate::exec::ExecCtx;
+use crate::linalg::{matmul_into_ctx, matmul_into_packed_ctx, Mat};
+use crate::nn::mlp::add_bias;
+use std::sync::Arc;
+
+/// Everything a kernel may read about one hidden layer: the untransposed
+/// `d × h` weights (dense GEMM operand) and the prepared [`MaskedLayer`]
+/// (transposed weights + bias, the dot-product operand). Both views describe
+/// the same parameters.
+pub struct LayerOperands<'a> {
+    pub weights: &'a Mat,
+    pub masked: &'a MaskedLayer,
+}
+
+impl<'a> LayerOperands<'a> {
+    pub fn new(weights: &'a Mat, masked: &'a MaskedLayer) -> LayerOperands<'a> {
+        debug_assert_eq!(weights.shape(), (masked.in_dim(), masked.out_dim()));
+        LayerOperands { weights, masked }
+    }
+}
+
+/// An object-safe compute kernel: one way to evaluate a hidden layer's
+/// `σ(x·W + b) ⊙ mask` for one batch.
+pub trait ComputeKernel: Send + Sync {
+    /// The stable id this kernel registers (and is costed) under.
+    fn id(&self) -> KernelId;
+
+    /// Compute `σ(x·W + b) ⊙ mask` into `out` (overwritten — dirty reused
+    /// buffers are fine), executing on the ctx's lease. Returns the number
+    /// of dot products actually evaluated (the conditional-FLOP count).
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize;
+}
+
+/// `dense`: axpy GEMM over row panels, then bias + ReLU + mask gate.
+#[derive(Default)]
+pub struct DenseKernel;
+
+impl ComputeKernel for DenseKernel {
+    fn id(&self) -> KernelId {
+        KernelId::DENSE
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        matmul_into_ctx(x, layer.weights, out, ctx);
+        add_bias(out, &layer.masked.bias);
+        relu_gate(out, mask);
+        x.rows() * layer.masked.out_dim()
+    }
+}
+
+/// `dense_packed`: the A-panel-packing GEMM — bit-identical to
+/// [`DenseKernel`], different memory behaviour.
+#[derive(Default)]
+pub struct DensePackedKernel;
+
+impl ComputeKernel for DensePackedKernel {
+    fn id(&self) -> KernelId {
+        KernelId::DENSE_PACKED
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        matmul_into_packed_ctx(x, layer.weights, out, ctx);
+        add_bias(out, &layer.masked.bias);
+        relu_gate(out, mask);
+        x.rows() * layer.masked.out_dim()
+    }
+}
+
+/// `masked`: contiguous dot products for predicted-live entries only.
+#[derive(Default)]
+pub struct MaskedKernel;
+
+impl ComputeKernel for MaskedKernel {
+    fn id(&self) -> KernelId {
+        KernelId::MASKED
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        layer.masked.forward_masked_ctx(x, mask, out, ctx)
+    }
+}
+
+/// `pjrt`: the feature-gated device slot. Until the real xla bindings
+/// replace `vendor/xla-stub`, device execution is unavailable, so this
+/// registrant delegates to the dense path — the registry seam, the config
+/// allow-list, and the autotune cost column are all exercised end to end,
+/// and swapping in device execution is a one-function change here.
+#[cfg(feature = "pjrt")]
+#[derive(Default)]
+pub struct PjrtKernel {
+    inner: DenseKernel,
+}
+
+#[cfg(feature = "pjrt")]
+impl ComputeKernel for PjrtKernel {
+    fn id(&self) -> KernelId {
+        KernelId::PJRT
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        self.inner.run(layer, x, mask, ctx, out)
+    }
+}
+
+/// The kernel registry: stable ids → implementations, kept in the canonical
+/// priority order so every iteration (routing candidates, calibration
+/// columns, logs) is deterministic.
+#[derive(Clone)]
+pub struct KernelRegistry {
+    kernels: Vec<Arc<dyn ComputeKernel>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry (embedders composing their own set).
+    pub fn empty() -> KernelRegistry {
+        KernelRegistry { kernels: Vec::new() }
+    }
+
+    /// The in-tree set: `dense`, `dense_packed`, `masked` — plus the `pjrt`
+    /// slot when the feature is on.
+    pub fn builtin() -> KernelRegistry {
+        let mut reg = KernelRegistry::empty();
+        reg.register(Arc::new(DenseKernel));
+        reg.register(Arc::new(DensePackedKernel));
+        reg.register(Arc::new(MaskedKernel));
+        #[cfg(feature = "pjrt")]
+        reg.register(Arc::new(PjrtKernel::default()));
+        reg
+    }
+
+    /// Register a kernel (replacing any existing registrant with the same
+    /// id). This is the extension point a new backend calls.
+    pub fn register(&mut self, kernel: Arc<dyn ComputeKernel>) {
+        let id = kernel.id();
+        self.kernels.retain(|k| k.id() != id);
+        self.kernels.push(kernel);
+        self.kernels.sort_by_key(|k| k.id().priority());
+    }
+
+    pub fn get(&self, id: KernelId) -> Option<&dyn ComputeKernel> {
+        self.kernels.iter().find(|k| k.id() == id).map(|k| k.as_ref())
+    }
+
+    pub fn contains(&self, id: KernelId) -> bool {
+        self.get(id).is_some()
+    }
+
+    /// Registered ids, canonical order — the dispatch allow-list default and
+    /// the calibration column set.
+    pub fn ids(&self) -> Vec<KernelId> {
+        self.kernels.iter().map(|k| k.id()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn ComputeKernel>> {
+        self.kernels.iter()
+    }
+
+    /// A registry restricted to `allow` (the `dispatch.kernels` config key /
+    /// `--kernels` flag). Rejects unknown or unregistered ids and an empty
+    /// result — a typo'd allow-list should fail loudly at startup, not route
+    /// every batch to a silent default.
+    pub fn restricted(&self, allow: &[KernelId]) -> Result<KernelRegistry, String> {
+        for id in allow {
+            if !self.contains(*id) {
+                return Err(format!(
+                    "kernel '{id}' is not registered (registered: {})",
+                    self.ids().iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        let kernels: Vec<Arc<dyn ComputeKernel>> = self
+            .kernels
+            .iter()
+            .filter(|k| allow.contains(&k.id()))
+            .cloned()
+            .collect();
+        if kernels.is_empty() {
+            return Err("kernel allow-list is empty".into());
+        }
+        Ok(KernelRegistry { kernels })
+    }
+
+    /// Parse already-tokenized allow-list names (the `dispatch.kernels`
+    /// config key's `Vec<String>`) into kernel ids. Unknown tokens are an
+    /// error naming the known set; duplicates collapse; empty is an error.
+    pub fn parse_ids(names: &[String]) -> Result<Vec<KernelId>, String> {
+        let mut ids = Vec::new();
+        for tok in names.iter().map(|s| s.trim()).filter(|t| !t.is_empty()) {
+            let id = KernelId::parse(tok).ok_or_else(|| {
+                format!(
+                    "unknown kernel '{tok}' (known: dense, dense_packed, masked, pjrt)"
+                )
+            })?;
+            if !ids.contains(&id) {
+                ids.push(id);
+            }
+        }
+        if ids.is_empty() {
+            return Err("empty kernel allow-list".into());
+        }
+        Ok(ids)
+    }
+
+    /// Parse a comma-separated allow-list (`"dense_packed,masked"`, the
+    /// `--kernels` flag) into kernel ids — one tokenization shared with
+    /// [`Self::parse_ids`].
+    pub fn parse_allowlist(s: &str) -> Result<Vec<KernelId>, String> {
+        let names: Vec<String> = s.split(',').map(str::to_string).collect();
+        KernelRegistry::parse_ids(&names)
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> KernelRegistry {
+        KernelRegistry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::ThreadPool;
+    use crate::util::proptest::property;
+    use crate::util::Pcg32;
+
+    fn operands(rng: &mut Pcg32, d: usize, h: usize) -> (Mat, Vec<f32>, MaskedLayer) {
+        let w = Mat::randn(d, h, 0.4, rng);
+        let bias: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.3, 0.3)).collect();
+        let layer = MaskedLayer::new(&w, &bias);
+        (w, bias, layer)
+    }
+
+    /// The serial oracle every registry kernel must agree with: blocked
+    /// serial GEMM + bias + ReLU + mask gate for dense-work kernels, which
+    /// equals the masked kernel's own serial oracle on the masked entries.
+    fn dense_oracle(x: &Mat, w: &Mat, bias: &[f32], mask: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows(), w.cols());
+        crate::linalg::matmul_into(x, w, &mut out);
+        add_bias(&mut out, bias);
+        relu_gate(&mut out, mask);
+        out
+    }
+
+    #[test]
+    fn builtin_registry_has_the_canonical_set() {
+        let reg = KernelRegistry::builtin();
+        let mut want = vec![KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED];
+        if cfg!(feature = "pjrt") {
+            want.push(KernelId::PJRT);
+        }
+        assert_eq!(reg.ids(), want);
+        assert!(reg.contains(KernelId::DENSE));
+        assert!(reg.get(KernelId::MASKED).is_some());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(
+            !reg.contains(KernelId::PJRT),
+            "the pjrt slot registers only behind the feature gate"
+        );
+    }
+
+    #[test]
+    fn restricted_filters_and_rejects_unknown_or_empty() {
+        let reg = KernelRegistry::builtin();
+        let only = reg.restricted(&[KernelId::MASKED]).unwrap();
+        assert_eq!(only.ids(), vec![KernelId::MASKED]);
+        let two = reg
+            .restricted(&[KernelId::MASKED, KernelId::DENSE_PACKED])
+            .unwrap();
+        assert_eq!(two.ids(), vec![KernelId::DENSE_PACKED, KernelId::MASKED]);
+        assert!(reg.restricted(&[]).is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(reg.restricted(&[KernelId::PJRT]).is_err(), "unregistered id rejected");
+    }
+
+    #[test]
+    fn allowlist_parsing() {
+        assert_eq!(
+            KernelRegistry::parse_allowlist("dense, masked").unwrap(),
+            vec![KernelId::DENSE, KernelId::MASKED]
+        );
+        assert_eq!(
+            KernelRegistry::parse_allowlist("dense_packed").unwrap(),
+            vec![KernelId::DENSE_PACKED]
+        );
+        // Duplicates collapse; unknown ids and empty lists are errors.
+        assert_eq!(
+            KernelRegistry::parse_allowlist("dense,dense").unwrap().len(),
+            1
+        );
+        assert!(KernelRegistry::parse_allowlist("quantum").is_err());
+        assert!(KernelRegistry::parse_allowlist("").is_err());
+        assert!(KernelRegistry::parse_allowlist(" , ").is_err());
+    }
+
+    #[test]
+    fn register_replaces_by_id() {
+        struct LoudDense;
+        impl ComputeKernel for LoudDense {
+            fn id(&self) -> KernelId {
+                KernelId::DENSE
+            }
+            fn run(
+                &self,
+                layer: &LayerOperands<'_>,
+                x: &Mat,
+                mask: &Mat,
+                ctx: &mut ExecCtx<'_>,
+                out: &mut Mat,
+            ) -> usize {
+                DenseKernel.run(layer, x, mask, ctx, out)
+            }
+        }
+        let mut reg = KernelRegistry::builtin();
+        let before = reg.len();
+        reg.register(Arc::new(LoudDense));
+        assert_eq!(reg.len(), before, "same id replaces, never duplicates");
+    }
+
+    /// The satellite property test: every registered kernel is bit-identical
+    /// to its serial oracle at thread counts {1, 2, 7} and lease widths
+    /// {1, N} — and the two dense-work kernels are bit-identical to *each
+    /// other* (that equivalence is what makes `--kernels` allow-list swaps
+    /// output-preserving for the dense regime).
+    #[test]
+    fn every_registered_kernel_is_bit_identical_to_its_serial_oracle() {
+        let reg = KernelRegistry::builtin();
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            property("registry kernels == serial oracles", 8, |rng| {
+                let n = rng.index(40) + 1;
+                let d = rng.index(200) + 1;
+                let h = rng.index(30) + 1;
+                let x = Mat::randn(n, d, 0.6, rng);
+                let (w, bias, layer) = operands(rng, d, h);
+                let alpha = rng.uniform();
+                let mask =
+                    Mat::from_fn(n, h, |_, _| if rng.bernoulli(alpha) { 1.0 } else { 0.0 });
+                let ops = LayerOperands::new(&w, &layer);
+                let dense_want = dense_oracle(&x, &w, &bias, &mask);
+                let (masked_want, masked_count) = layer.forward_masked(&x, &mask);
+                for lease_width in [1usize, threads] {
+                    for kernel in reg.iter() {
+                        let mut ctx = ExecCtx::over(pool.lease(lease_width));
+                        let mut out = Mat::full(n, h, f32::NAN); // dirty buffer
+                        let computed = kernel.run(&ops, &x, &mask, &mut ctx, &mut out);
+                        let (want, want_count) = match kernel.id().work() {
+                            crate::condcomp::WorkModel::Dense => (&dense_want, n * h),
+                            crate::condcomp::WorkModel::AlphaScaled => {
+                                (&masked_want, masked_count)
+                            }
+                        };
+                        assert_eq!(
+                            out.as_slice(),
+                            want.as_slice(),
+                            "kernel {} threads {threads} lease {lease_width} ({n}x{d}x{h})",
+                            kernel.id()
+                        );
+                        assert_eq!(computed, want_count, "kernel {}", kernel.id());
+                    }
+                }
+            });
+            assert_eq!(pool.leased(), 0);
+        }
+    }
+}

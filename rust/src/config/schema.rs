@@ -112,6 +112,18 @@ impl Default for AutotuneConfig {
     }
 }
 
+/// Kernel-dispatch knobs (the `[dispatch]` config section).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct DispatchSettings {
+    /// Kernel allow-list (`dispatch.kernels`, comma-separated, e.g.
+    /// `"dense_packed,masked"` / CLI `--kernels`): which registered compute
+    /// kernels the cost router may pick from. Empty = every registered
+    /// kernel. Kept as strings here so the config layer stays independent of
+    /// the condcomp registry; `serve`/`bench`/`calibrate` validate the ids
+    /// via `KernelRegistry::parse_allowlist`.
+    pub kernels: Vec<String>,
+}
+
 /// Serving-coordinator knobs (the `[server]` config section).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerSettings {
@@ -197,6 +209,8 @@ pub struct ExperimentProfile {
     pub autotune: AutotuneConfig,
     /// Serving-coordinator knobs (batcher shards, shard router).
     pub server: ServerSettings,
+    /// Kernel-dispatch knobs (registry allow-list).
+    pub dispatch: DispatchSettings,
     /// Training/validation/test example counts for the synthetic corpus.
     pub n_train: usize,
     pub n_valid: usize,
@@ -231,6 +245,7 @@ impl ExperimentProfile {
             },
             autotune: AutotuneConfig::default(),
             server: ServerSettings::default(),
+            dispatch: DispatchSettings::default(),
             n_train: 50_000,
             n_valid: 10_000,
             n_test: 10_000,
@@ -264,6 +279,7 @@ impl ExperimentProfile {
             },
             autotune: AutotuneConfig::default(),
             server: ServerSettings::default(),
+            dispatch: DispatchSettings::default(),
             n_train: 590_000,
             n_valid: 14_388,
             n_test: 26_032,
@@ -424,6 +440,14 @@ impl ExperimentProfile {
         if let Some(s) = doc.get_str("server.router") {
             self.server.router = s.to_string();
         }
+        if let Some(s) = doc.get_str("dispatch.kernels") {
+            self.dispatch.kernels = s
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(str::to_string)
+                .collect();
+        }
         if let Some(x) = doc.get_usize("data.n_train") {
             self.n_train = x;
         }
@@ -523,6 +547,16 @@ mod tests {
         p.apply_overrides(&doc);
         assert_eq!(p.server.shards, 4);
         assert_eq!(p.server.router, "least-depth");
+    }
+
+    #[test]
+    fn dispatch_defaults_and_overrides() {
+        let mut p = ExperimentProfile::mnist_tiny();
+        assert_eq!(p.dispatch, DispatchSettings::default());
+        assert!(p.dispatch.kernels.is_empty(), "empty = every registered kernel");
+        let doc = TomlDoc::parse("[dispatch]\nkernels = \"dense_packed, masked\"").unwrap();
+        p.apply_overrides(&doc);
+        assert_eq!(p.dispatch.kernels, vec!["dense_packed".to_string(), "masked".to_string()]);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 
 use super::protocol::Mode;
 use crate::autotune::{Autotuner, MachineProfile};
-use crate::condcomp::{DispatchPolicy, FlopBreakdown, Kernel, MaskedLayer, PolicyTable};
+use crate::condcomp::registry::LayerOperands;
+use crate::condcomp::{
+    DispatchPolicy, FlopBreakdown, KernelId, KernelRegistry, MaskedLayer, PolicyTable,
+};
 use crate::estimator::SignEstimatorSet;
 use crate::exec::ExecCtx;
 use crate::linalg::{matmul_into_ctx, Mat};
@@ -12,7 +15,7 @@ use crate::nn::Mlp;
 use crate::parallel::ThreadPool;
 use crate::runtime::ModelRuntime;
 use anyhow::Result;
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 // The arena moved to `exec` (it was never serving-specific); re-exported
 // here so `coordinator::ScratchArena` keeps working.
@@ -59,6 +62,12 @@ pub trait Backend: Send + Sync {
     fn dispatch_thresholds(&self) -> Option<Vec<f64>> {
         None
     }
+    /// Human-readable per-layer kernel-choice table (which registered
+    /// kernel the cost router picks at each grid density), if this backend
+    /// routes through a kernel registry. `serve` logs it at startup.
+    fn kernel_choice_lines(&self) -> Option<Vec<String>> {
+        None
+    }
 }
 
 /// Pure-Rust backend: the control path uses the dense layer kernels, the
@@ -70,11 +79,18 @@ pub struct NativeBackend {
     masked: Vec<MaskedLayer>,
     estimators: RwLock<SignEstimatorSet>,
     max_batch: usize,
-    /// Per-layer dense-vs-masked flip thresholds — loaded from a machine
-    /// profile ([`NativeBackend::apply_profile`]) or measured at startup
+    /// Per-layer per-kernel cost tables — loaded from a machine profile
+    /// ([`NativeBackend::apply_profile`]) or measured at startup
     /// ([`NativeBackend::calibrate_dispatch`]); uncalibrated layers fall
-    /// back to the conservative default with a one-time warning.
+    /// back to the per-kernel defaults with a once-per-process warning.
     dispatch: RwLock<PolicyTable>,
+    /// The compute kernels the cost router may pick from: `base` is the full
+    /// registered set (builtin unless an embedder replaced it), `active` is
+    /// the routing view after the `dispatch.kernels` allow-list
+    /// ([`NativeBackend::set_allowed_kernels`] always restricts from
+    /// `base`, so allow-lists replace rather than compound). A ctx-pinned
+    /// registry view overrides `active` per call.
+    kernels: RwLock<(Arc<KernelRegistry>, Arc<KernelRegistry>)>,
     /// Recycled activation buffers for pool-less callers
     /// ([`Backend::predict`]); shard executors bypass this entirely by
     /// bringing their own arena inside the [`ExecCtx`] they hand to
@@ -94,6 +110,10 @@ impl NativeBackend {
             estimators: RwLock::new(estimators),
             max_batch,
             dispatch: RwLock::new(PolicyTable::uncalibrated(hidden)),
+            kernels: RwLock::new({
+                let base = Arc::new(KernelRegistry::builtin());
+                (base.clone(), base)
+            }),
             scratch: Mutex::new(ScratchArena::new()),
         }
     }
@@ -117,6 +137,84 @@ impl NativeBackend {
     /// Install a full per-layer policy table.
     pub fn set_policy_table(&self, table: PolicyTable) {
         *self.dispatch.write().unwrap() = table;
+    }
+
+    /// The kernel registry view the cost router currently picks from.
+    pub fn registry(&self) -> Arc<KernelRegistry> {
+        self.kernels.read().unwrap().1.clone()
+    }
+
+    /// Replace the registry outright (embedders composing their own kernel
+    /// set; they register before serving starts). Clears any allow-list.
+    /// Rejects an empty registry — the router must always have a kernel to
+    /// pick (the same invariant `restricted` enforces for allow-lists).
+    pub fn set_registry(&self, registry: KernelRegistry) -> Result<()> {
+        if registry.is_empty() {
+            return Err(anyhow::anyhow!("kernel registry must not be empty"));
+        }
+        let base = Arc::new(registry);
+        *self.kernels.write().unwrap() = (base.clone(), base);
+        Ok(())
+    }
+
+    /// Restrict routing to an allow-list of kernel ids (`dispatch.kernels` /
+    /// `--kernels`), always relative to the full registered set. Rejects
+    /// unknown or unregistered ids and an empty list.
+    pub fn set_allowed_kernels(&self, allow: &[KernelId]) -> Result<()> {
+        let mut guard = self.kernels.write().unwrap();
+        let restricted = guard.0.restricted(allow).map_err(|e| anyhow::anyhow!("{e}"))?;
+        guard.1 = Arc::new(restricted);
+        Ok(())
+    }
+
+    /// Measure cost columns for just `kernels` (plus the dense baseline) on
+    /// this machine and merge them into the live policy table, preserving
+    /// every already-calibrated column — the targeted-recalibration path for
+    /// a machine profile that predates a newly registered kernel. Returns
+    /// the updated table.
+    pub fn calibrate_kernel_columns(&self, kernels: &[KernelId], budget_ms: u64) -> PolicyTable {
+        let mut tuner = Autotuner::with_budget_ms(budget_ms.max(1));
+        tuner.batch = self.max_batch.clamp(8, 64);
+        tuner.fit_serial = false;
+        tuner.kernels = kernels.to_vec();
+        let profile =
+            tuner.calibrate_model_on(&self.net.layer_sizes(), self.pool(), &self.registry());
+        let mut table = self.policy_table();
+        for lt in &profile.layers {
+            for (name, cost) in &lt.kernel_costs {
+                if let Some(id) = KernelId::parse(name) {
+                    if kernels.contains(&id) {
+                        table.set_layer_column(lt.layer, id, *cost);
+                    }
+                }
+            }
+        }
+        self.set_policy_table(table.clone());
+        table
+    }
+
+    /// Which kernel the cost router would pick per hidden layer across the
+    /// calibration α grid — the `serve` startup log's routing table.
+    fn choice_lines(&self) -> Vec<String> {
+        const GRID: [f64; 4] = [0.05, 0.25, 0.5, 1.0];
+        let table = self.policy_table();
+        let registry = self.registry();
+        let allowed = registry.ids();
+        let n = self.max_batch.max(1);
+        let mut lines = vec![format!(
+            "kernel routing (batch {n}, kernels [{}]):",
+            allowed.iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
+        )];
+        for l in 0..self.num_hidden() {
+            let (d, h) = (self.masked[l].in_dim(), self.masked[l].out_dim());
+            let policy = table.policy_snapshot(l);
+            let choices: Vec<String> = GRID
+                .iter()
+                .map(|&alpha| format!("α={alpha:.2}→{}", policy.decide(n, d, h, alpha, &allowed)))
+                .collect();
+            lines.push(format!("layer {l} ({d}×{h}): {}", choices.join("  ")));
+        }
+        lines
     }
 
     /// Install the per-layer thresholds from a persisted machine profile.
@@ -163,7 +261,12 @@ impl NativeBackend {
         // diagnostic arm and spend the whole budget on the pooled numbers
         // dispatch actually consumes.
         tuner.fit_serial = false;
-        let profile = tuner.calibrate_model(&self.net.layer_sizes(), self.pool());
+        // One cost column per kernel this backend may actually route to —
+        // measured through this backend's registry, so custom registrants
+        // get real columns, not work-model defaults.
+        let registry = self.registry();
+        tuner.kernels = registry.ids();
+        let profile = tuner.calibrate_model_on(&self.net.layer_sizes(), self.pool(), &registry);
         let table = profile.policy_table(self.num_hidden(), "<online calibration>");
         self.set_policy_table(table.clone());
         table
@@ -178,46 +281,51 @@ impl NativeBackend {
     /// through a caller-owned execution context.
     ///
     /// Per hidden layer: predict the mask (row shards on the ctx's lease),
-    /// read its density α, and let the dispatch policy pick the kernel —
-    /// masked dot-products below the measured threshold, dense axpy GEMM
-    /// (with the mask applied afterwards) above it. The two kernels compute
-    /// the same function (same sums, different float accumulation order);
-    /// the policy only changes which one is faster.
+    /// read its density α, and let the cost table route the batch to the
+    /// cheapest registered-and-allowed kernel — masked dot products in the
+    /// sparse regime, a dense GEMM (plain or packed, with the mask applied
+    /// afterwards) in the dense one. All kernels compute the same function
+    /// (the two dense-work kernels are even bit-identical); routing only
+    /// changes which one is faster. Every routing decision lands in the
+    /// ctx's metrics as a `layer<l>_kernel_<id>_batches` counter.
     fn forward_cond(&self, x: &Mat, ctx: &mut ExecCtx<'_>) -> (Mat, FlopBreakdown) {
         let est = self.estimators.read().unwrap();
-        // The ctx's pinned table wins (tests/calibration force a kernel);
-        // otherwise snapshot the (small) live table instead of holding the
-        // read guard across the whole forward — a concurrent recalibration
-        // writer would otherwise stall every in-flight batch behind it.
+        // The ctx's pinned table/registry win (tests/calibration force a
+        // kernel); otherwise snapshot the (small) live table instead of
+        // holding the read guard across the whole forward — a concurrent
+        // recalibration writer would otherwise stall every in-flight batch
+        // behind it.
         let table = match ctx.policy() {
             Some(t) => t.clone(),
             None => self.policy_table(),
         };
+        let registry = match ctx.registry() {
+            Some(r) => r.clone(),
+            None => self.registry(),
+        };
+        let allowed = registry.ids();
         let mut flops = FlopBreakdown::default();
         let depth = self.masked.len();
         let mut a = x.clone();
         for l in 0..depth - 1 {
-            let mask = est.layers[l].mask_ctx(&a, ctx);
             let layer = &self.masked[l];
             let (n, h) = (a.rows(), layer.out_dim());
+            // The mask buffer recycles through the arena like every other
+            // per-batch activation (nothing allocated after warmup).
+            let mut mask = Mat::from_vec(n, h, ctx.take_buf(n * h));
+            est.layers[l].mask_into_ctx(&a, &mut mask, ctx);
             let alpha = mask.density() as f64;
             let mut out = Mat::from_vec(n, h, ctx.take_buf(n * h));
-            // Per-layer threshold: each layer's shape has its own fitted α*.
-            let computed = match table.policy_for(l).decide(n, layer.in_dim(), h, alpha) {
-                Kernel::MaskedParallel => layer.forward_masked_ctx(&a, &mask, &mut out, ctx),
-                Kernel::DenseParallel => {
-                    // Dense axpy GEMM on the untransposed weights, then
-                    // bias + ReLU + the estimator's gate — numerically
-                    // equivalent to the masked kernel (same sums, different
-                    // float accumulation order), every dot product computed.
-                    matmul_into_ctx(&a, &self.net.weights[l], &mut out, ctx);
-                    add_bias(&mut out, &self.net.biases[l]);
-                    for (o, &m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
-                        *o = if *o > 0.0 && m != 0.0 { *o } else { 0.0 };
-                    }
-                    n * h
-                }
-            };
+            // Per-layer cost table: each layer's shape has its own fitted
+            // per-kernel columns; the argmin picks the kernel.
+            let kid = table.policy_for(l).decide(n, layer.in_dim(), h, alpha, &allowed);
+            let kernel = registry
+                .get(kid)
+                .expect("decide() only returns registered kernels");
+            let ops = LayerOperands::new(&self.net.weights[l], layer);
+            let computed = kernel.run(&ops, &a, &mask, ctx, &mut out);
+            ctx.metrics().incr(&format!("layer{l}_kernel_{kid}_batches"));
+            ctx.metrics().set_gauge(&format!("layer{l}_alpha"), alpha);
             flops.push(crate::condcomp::LayerFlops::from_counts(
                 n,
                 layer.in_dim(),
@@ -225,6 +333,7 @@ impl NativeBackend {
                 est.layers[l].rank(),
                 computed,
             ));
+            ctx.put_buf(mask.into_vec());
             let prev = std::mem::replace(&mut a, out);
             if l > 0 {
                 // `prev` owns a scratch buffer (layer-0 input is the request).
@@ -286,7 +395,27 @@ impl Backend for NativeBackend {
         ctx: &mut ExecCtx<'_>,
     ) -> Result<(Mat, Option<f64>)> {
         match mode {
-            Mode::Control => Ok((self.net.logits_ctx(x, ctx), None)),
+            Mode::Control => {
+                // The dense forward also benefits from the cost table: when
+                // a layer's `dense_packed` column beats `dense`, the packed
+                // GEMM runs instead — bit-identical, just faster. Pin a
+                // snapshot for the duration of the forward (unless the
+                // caller pinned one), restricted to the allow-list so an
+                // excluded kernel can never be preferred here either, then
+                // restore so a long-lived shard ctx never freezes out
+                // recalibration.
+                let pinned = ctx.policy().is_some();
+                if !pinned {
+                    let mut table = self.policy_table();
+                    table.retain_kernels(&self.registry().ids());
+                    ctx.set_policy(Some(table));
+                }
+                let logits = self.net.logits_ctx(x, ctx);
+                if !pinned {
+                    ctx.set_policy(None);
+                }
+                Ok((logits, None))
+            }
             Mode::ConditionalAe => {
                 let (logits, flops) = self.forward_cond(x, ctx);
                 Ok((logits, Some(flops.speedup())))
@@ -302,6 +431,10 @@ impl Backend for NativeBackend {
 
     fn dispatch_thresholds(&self) -> Option<Vec<f64>> {
         Some(self.dispatch.read().unwrap().thresholds())
+    }
+
+    fn kernel_choice_lines(&self) -> Option<Vec<String>> {
+        Some(self.choice_lines())
     }
 }
 
@@ -527,23 +660,22 @@ mod tests {
             hardware: "test".into(),
             threads: 1,
             budget_ms: 0,
+            kernels: vec!["dense".into(), "masked".into()],
             layers: vec![
-                LayerThreshold {
-                    layer: 0,
-                    d: 8,
-                    h: 12,
-                    cost_ratio: 2.0,
-                    cost_ratio_serial: 2.0,
-                    alpha_star: 0.5,
-                },
-                LayerThreshold {
-                    layer: 1,
-                    d: 12,
-                    h: 10,
-                    cost_ratio: 8.0,
-                    cost_ratio_serial: 8.0,
-                    alpha_star: 0.125,
-                },
+                LayerThreshold::from_kernel_costs(
+                    0,
+                    8,
+                    12,
+                    vec![("dense".into(), 1.0), ("masked".into(), 2.0)],
+                    Some(2.0),
+                ),
+                LayerThreshold::from_kernel_costs(
+                    1,
+                    12,
+                    10,
+                    vec![("dense".into(), 1.0), ("masked".into(), 8.0)],
+                    Some(8.0),
+                ),
             ],
         };
         let table = be.apply_profile(&profile, "test-profile.json").unwrap();
@@ -551,9 +683,15 @@ mod tests {
         assert!((t[0] - 0.5).abs() < 1e-12 && (t[1] - 0.125).abs() < 1e-12, "{t:?}");
         assert_eq!(be.dispatch_thresholds().unwrap(), t);
         // The two layers now dispatch differently at the same density.
-        use crate::condcomp::Kernel;
-        assert_eq!(table.policy_for(0).decide(4, 8, 12, 0.3), Kernel::MaskedParallel);
-        assert_eq!(table.policy_for(1).decide(4, 12, 10, 0.3), Kernel::DenseParallel);
+        use crate::condcomp::{KernelId, BUILTIN_KERNELS};
+        assert_eq!(
+            table.policy_for(0).decide(4, 8, 12, 0.3, BUILTIN_KERNELS),
+            KernelId::MASKED
+        );
+        assert_eq!(
+            table.policy_for(1).decide(4, 12, 10, 0.3, BUILTIN_KERNELS),
+            KernelId::DENSE
+        );
     }
 
     #[test]
@@ -566,11 +704,143 @@ mod tests {
             hardware: "test".into(),
             threads: 1,
             budget_ms: 0,
+            kernels: vec![],
             layers: vec![],
         };
         let err = be.apply_profile(&profile, "wrong.json").unwrap_err();
         assert!(err.to_string().contains("fingerprint"), "{err}");
         // The uncalibrated table is untouched.
         assert_eq!(be.policy_table().calibrated_layers(), 0);
+    }
+
+    /// Satellite: every routing decision is observable — the conditional
+    /// forward increments one `layer<l>_kernel_<id>_batches` counter per
+    /// hidden layer per batch, under both the global and the shard key.
+    #[test]
+    fn kernel_hit_counters_record_routing_decisions() {
+        use crate::coordinator::metrics::MetricsRegistry;
+        use crate::exec::MetricsScope;
+        let be = native();
+        let mut rng = Pcg32::seeded(71);
+        let x = Mat::randn(4, 8, 1.0, &mut rng);
+        let pool = crate::parallel::ThreadPool::new(2);
+        let reg = std::sync::Arc::new(MetricsRegistry::new());
+
+        // Force the masked kernel everywhere.
+        be.set_dispatch(DispatchPolicy::with_cost_ratio(1e-9));
+        let mut ctx = ExecCtx::over(pool.lease(2))
+            .with_metrics(MetricsScope::for_shard(reg.clone(), 1));
+        be.predict_ctx(&x, Mode::ConditionalAe, &mut ctx).unwrap();
+        assert_eq!(reg.counter("layer0_kernel_masked_batches"), 1);
+        assert_eq!(reg.counter("layer1_kernel_masked_batches"), 1);
+        assert_eq!(reg.shard_counter(1, "layer0_kernel_masked_batches"), 1);
+        assert_eq!(reg.counter("layer0_kernel_dense_batches"), 0);
+        assert!(reg.gauge("layer0_alpha").is_some(), "α gauge exported per layer");
+
+        // Force the dense kernel via the allow-list (deterministic for any
+        // α, unlike a cost-ratio pin — at α = 0 the masked column costs
+        // exactly zero): the counters move to the dense kernel.
+        be.set_allowed_kernels(&[crate::condcomp::KernelId::DENSE]).unwrap();
+        be.predict_ctx(&x, Mode::ConditionalAe, &mut ctx).unwrap();
+        assert_eq!(reg.counter("layer0_kernel_dense_batches"), 1);
+        assert_eq!(reg.counter("layer1_kernel_dense_batches"), 1);
+        assert_eq!(reg.counter("layer0_kernel_masked_batches"), 1, "unchanged");
+    }
+
+    /// The allow-list restricts routing without changing the function: a
+    /// masked-only backend and a packed-only backend still agree with the
+    /// unrestricted one (numerically for masked-vs-dense, bitwise for
+    /// packed-vs-dense).
+    #[test]
+    fn kernel_allow_list_restricts_routing_not_results() {
+        use crate::condcomp::KernelId;
+        let be = native();
+        let mut rng = Pcg32::seeded(73);
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        // Dense baseline, forced by allow-list (deterministic for any α).
+        be.set_allowed_kernels(&[KernelId::DENSE]).unwrap();
+        let (dense_logits, dense_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+
+        // dense_packed-only: bit-identical to dense (packing is layout-only),
+        // and the speedup accounting agrees exactly (same computed counts).
+        be.set_allowed_kernels(&[KernelId::DENSE_PACKED]).unwrap();
+        let (packed_logits, packed_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        assert_eq!(packed_logits.as_slice(), dense_logits.as_slice());
+        assert_eq!(packed_speedup.unwrap().to_bits(), dense_speedup.unwrap().to_bits());
+
+        // masked-only: same function, different accumulation order — and the
+        // dense-regime policy cannot override the allow-list.
+        be.set_allowed_kernels(&[KernelId::MASKED]).unwrap();
+        let (masked_logits, masked_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        assert!(masked_logits.max_abs_diff(&dense_logits) < 1e-4);
+        // Masked computes fewer dot products → strictly better accounted
+        // speedup (proof the allow-list actually flipped the kernel).
+        assert!(masked_speedup.unwrap() >= dense_speedup.unwrap() - 1e-9);
+
+        // Unknown/unregistered ids and empty lists are rejected loudly.
+        assert!(be.set_allowed_kernels(&[]).is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(be.set_allowed_kernels(&[KernelId::PJRT]).is_err());
+    }
+
+    /// Targeted recalibration: a backend whose table came from a profile
+    /// without a `dense_packed` column gains just that column — measured —
+    /// while the profile's masked columns survive untouched.
+    #[test]
+    fn calibrate_kernel_columns_fills_only_the_missing_column() {
+        use crate::autotune::{model_fingerprint, LayerThreshold, MachineProfile};
+        use crate::condcomp::{KernelId, BUILTIN_KERNELS};
+        let be = native();
+        let profile = MachineProfile {
+            version: crate::autotune::PROFILE_SCHEMA_VERSION,
+            fingerprint: model_fingerprint(&[8, 12, 10, 4]),
+            hardware: "test".into(),
+            threads: 1,
+            budget_ms: 0,
+            kernels: vec!["dense".into(), "masked".into()],
+            layers: vec![
+                LayerThreshold::from_kernel_costs(
+                    0,
+                    8,
+                    12,
+                    vec![("dense".into(), 1.0), ("masked".into(), 2.0)],
+                    None,
+                ),
+                LayerThreshold::from_kernel_costs(
+                    1,
+                    12,
+                    10,
+                    vec![("dense".into(), 1.0), ("masked".into(), 8.0)],
+                    None,
+                ),
+            ],
+        };
+        let missing = profile.missing_kernel_columns(BUILTIN_KERNELS);
+        assert_eq!(missing, vec![KernelId::DENSE_PACKED]);
+        be.apply_profile(&profile, "partial.json").unwrap();
+        let table = be.calibrate_kernel_columns(&missing, 40);
+        for l in 0..2 {
+            let p = table.policy_snapshot(l);
+            assert!(
+                p.per_flop(KernelId::DENSE_PACKED).is_some(),
+                "layer {l} gained the packed column"
+            );
+        }
+        // The profile's masked columns were preserved, not re-measured.
+        assert_eq!(table.policy_snapshot(0).per_flop(KernelId::MASKED), Some(2.0));
+        assert_eq!(table.policy_snapshot(1).per_flop(KernelId::MASKED), Some(8.0));
+        assert_eq!(be.policy_table(), table, "merged table installed");
+    }
+
+    #[test]
+    fn kernel_choice_lines_cover_every_hidden_layer() {
+        let be = native();
+        let lines = be.kernel_choice_lines().expect("native backend routes via registry");
+        assert_eq!(lines.len(), 3, "header + 2 hidden layers: {lines:?}");
+        assert!(lines[0].contains("dense_packed"), "{}", lines[0]);
+        assert!(lines[1].starts_with("layer 0") && lines[2].starts_with("layer 1"));
+        for line in &lines[1..] {
+            assert!(line.contains("α=0.05→") && line.contains("α=1.00→"), "{line}");
+        }
     }
 }

@@ -131,6 +131,14 @@ impl Server {
                 metrics.set_gauge(&format!("dispatch_alpha_star_l{l}"), *t);
             }
         }
+        // Log the per-layer kernel-choice table: which registered kernel the
+        // cost router picks at each grid density — the deployment's routing
+        // decisions, visible before the first request lands.
+        if let Some(lines) = backend.kernel_choice_lines() {
+            for line in &lines {
+                eprintln!("dispatch: {line}");
+            }
+        }
         let num_shards = if cfg.shards == 0 { derive_shards(budget) } else { cfg.shards };
         let slices = crate::parallel::partition_threads(budget, num_shards);
         let batcher = Arc::new(ShardedBatcher::new(

@@ -67,6 +67,67 @@ impl SignEstimator {
         z
     }
 
+    /// [`Self::mask`] into a caller-owned buffer (overwritten, not
+    /// accumulated — dirty reused buffers need no clearing). Runs the
+    /// low-rank product through the view GEMM, which keeps the serial
+    /// kernel's accumulation order, so the result is bit-identical to
+    /// [`Self::mask`]. This is the buffer-reusing serial oracle behind
+    /// [`Self::mask_into_ctx`]: the serving backend recycles one mask buffer
+    /// per layer per batch instead of allocating a fresh `Mat` each time.
+    pub fn mask_into(&self, input: &Mat, out: &mut Mat) {
+        let n = input.rows();
+        let h = self.layer_bias.len();
+        assert_eq!(out.shape(), (n, h), "mask output shape mismatch");
+        let rank = self.factors.rank();
+        let mut tmp = vec![0.0f32; n * rank];
+        self.factors.apply_view_into(input.view(), &mut tmp, out.as_mut_slice());
+        let b = self.bias;
+        for i in 0..n {
+            let zrow = out.row_mut(i);
+            for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
+                // Same expression as the serial path: add_bias then
+                // `v - b > 0` — i.e. `(z + lb) - b`.
+                *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+    }
+
+    /// [`Self::mask_into`] on an execution target: row shards in parallel,
+    /// bit-identical to the serial form for any thread count or lease width
+    /// (same argument as [`Self::mask_par`]).
+    pub fn mask_into_par<P: Parallelism>(&self, input: &Mat, out: &mut Mat, par: &P) {
+        let n = input.rows();
+        let h = self.layer_bias.len();
+        assert_eq!(out.shape(), (n, h), "mask output shape mismatch");
+        // Below a few thousand estimated cells, shard setup dominates.
+        if par.width() == 1 || n < 2 || n * h < 4096 {
+            self.mask_into(input, out);
+            return;
+        }
+        let rows_per = chunk_rows(n, par.width(), 1);
+        let b = self.bias;
+        let rank = self.factors.rank();
+        par_row_chunks(par, out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            let mut tmp = vec![0.0f32; rows * rank];
+            self.factors
+                .apply_view_into(input.view_rows(row0, rows), &mut tmp, band);
+            for i in 0..rows {
+                let zrow = &mut band[i * h..(i + 1) * h];
+                for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
+                    *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
+                }
+            }
+        });
+    }
+
+    /// [`Self::mask_into_par`] through an execution context — the serving
+    /// backend's estimator entry point (the mask buffer comes from, and
+    /// returns to, the ctx's arena).
+    pub fn mask_into_ctx(&self, input: &Mat, out: &mut Mat, ctx: &mut ExecCtx<'_>) {
+        self.mask_into_par(input, out, ctx.lease());
+    }
+
     /// [`Self::mask`] with the low-rank prediction computed for row shards
     /// in parallel on an execution target (pool or lease slice). Each shard
     /// *borrows* its row range from the input ([`Mat::view_rows`] — no copy
@@ -78,30 +139,8 @@ impl SignEstimator {
     /// output row is independent of its neighbours, so the mask is
     /// bit-identical to the serial one for any thread count or lease width.
     pub fn mask_par<P: Parallelism>(&self, input: &Mat, par: &P) -> Mat {
-        let n = input.rows();
-        let h = self.layer_bias.len();
-        // Below a few thousand estimated cells, shard setup dominates.
-        if par.width() == 1 || n < 2 || n * h < 4096 {
-            return self.mask(input);
-        }
-        let mut out = Mat::zeros(n, h);
-        let rows_per = chunk_rows(n, par.width(), 1);
-        let b = self.bias;
-        let rank = self.factors.rank();
-        par_row_chunks(par, &mut out, rows_per, |row0, band| {
-            let rows = band.len() / h;
-            let mut tmp = vec![0.0f32; rows * rank];
-            self.factors
-                .apply_view_into(input.view_rows(row0, rows), &mut tmp, band);
-            for i in 0..rows {
-                let zrow = &mut band[i * h..(i + 1) * h];
-                for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
-                    // Same expression as the serial path: add_bias then
-                    // `v - b > 0` — i.e. `(z + lb) - b`.
-                    *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
-                }
-            }
-        });
+        let mut out = Mat::zeros(input.rows(), self.layer_bias.len());
+        self.mask_into_par(input, &mut out, par);
         out
     }
 
@@ -299,6 +338,37 @@ mod tests {
             let pool = crate::parallel::ThreadPool::new(threads);
             let got = est.mask_par(&x, &pool);
             assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
+        }
+    }
+
+    /// The buffer-reusing mask path (what the serving backend recycles
+    /// through its arena) must be bit-identical to the allocating oracle —
+    /// dirty buffers, any thread count, any lease width.
+    #[test]
+    fn mask_into_is_bit_identical_and_overwrites_dirty_buffers() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(83);
+        let w = Mat::randn(30, 80, 0.3, &mut rng);
+        let bias: Vec<f32> = (0..80).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let est = SignEstimator::fit(&w, &bias, 6, 0.05);
+        let x = Mat::randn(90, 30, 1.0, &mut rng);
+        let want = est.mask(&x);
+        let mut out = Mat::full(90, 80, f32::NAN); // simulate a recycled buffer
+        est.mask_into(&x, &mut out);
+        assert_eq!(out.as_slice(), want.as_slice(), "serial mask_into");
+        for threads in [1usize, 2, 7] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            for grant in [1usize, threads] {
+                let mut out = Mat::full(90, 80, f32::NAN);
+                let mut ctx = ExecCtx::over(pool.lease(grant));
+                est.mask_into_ctx(&x, &mut out, &mut ctx);
+                assert_eq!(
+                    out.as_slice(),
+                    want.as_slice(),
+                    "threads={threads} lease={grant}"
+                );
+            }
+            assert_eq!(pool.leased(), 0);
         }
     }
 

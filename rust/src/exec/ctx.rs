@@ -2,7 +2,7 @@
 //! view, and metrics scope.
 
 use super::arena::ScratchArena;
-use crate::condcomp::PolicyTable;
+use crate::condcomp::{KernelRegistry, PolicyTable};
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::parallel::{PoolLease, ThreadPool};
 use std::sync::Arc;
@@ -86,6 +86,10 @@ impl MetricsScope {
 /// - an optional pinned [`PolicyTable`] — a read view of the dispatch
 ///   policy; when unset, backends snapshot their own live table per batch,
 ///   and tests/calibration pin one to force a kernel choice;
+/// - an optional pinned [`KernelRegistry`] view — which compute kernels the
+///   cost router may pick from; when unset, backends use their own
+///   (possibly allow-list-restricted) registry, and tests/calibration pin
+///   one to measure a specific kernel;
 /// - a [`MetricsScope`] — where execution metrics land (per-shard on the
 ///   serving path, nowhere for CLI one-shots).
 ///
@@ -93,12 +97,13 @@ impl MetricsScope {
 /// threads `&mut ExecCtx` through every batch, so arena buffers recycle
 /// across batches and the lease is held for the executor's lifetime.
 /// Results never depend on the ctx (lease width, arena state, metrics) —
-/// only the pinned policy can change *which* of the two numerically
+/// only the pinned policy/registry can change *which* of the numerically
 /// equivalent kernels runs.
 pub struct ExecCtx<'p> {
     lease: PoolLease<'p>,
     arena: ScratchArena,
     policy: Option<PolicyTable>,
+    registry: Option<Arc<KernelRegistry>>,
     metrics: MetricsScope,
 }
 
@@ -109,6 +114,7 @@ impl<'p> ExecCtx<'p> {
             lease,
             arena: ScratchArena::new(),
             policy: None,
+            registry: None,
             metrics: MetricsScope::none(),
         }
     }
@@ -138,6 +144,31 @@ impl<'p> ExecCtx<'p> {
     pub fn with_policy(mut self, table: PolicyTable) -> ExecCtx<'p> {
         self.policy = Some(table);
         self
+    }
+
+    /// Pin or clear the dispatch-policy table in place (backends pin a
+    /// snapshot around a forward and restore afterwards, so a long-lived
+    /// shard ctx never freezes out recalibration).
+    pub fn set_policy(&mut self, table: Option<PolicyTable>) {
+        self.policy = table;
+    }
+
+    /// Pin a kernel-registry view: the cost router picks only from these
+    /// kernels (tests and calibration measure one kernel by pinning a
+    /// singleton registry).
+    pub fn with_registry(mut self, registry: Arc<KernelRegistry>) -> ExecCtx<'p> {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Pin or clear the registry view in place.
+    pub fn set_registry(&mut self, registry: Option<Arc<KernelRegistry>>) {
+        self.registry = registry;
+    }
+
+    /// The pinned kernel-registry view, if any.
+    pub fn registry(&self) -> Option<&Arc<KernelRegistry>> {
+        self.registry.as_ref()
     }
 
     /// Attach a metrics scope.

@@ -16,6 +16,9 @@
 //! - an optional pinned read view of the
 //!   [`crate::condcomp::PolicyTable`] — tests and calibration force a
 //!   kernel choice; backends otherwise snapshot their live table;
+//! - an optional pinned [`crate::condcomp::KernelRegistry`] view — which
+//!   compute kernels the cost router may pick from (the multi-kernel
+//!   counterpart of the policy view);
 //! - a [`MetricsScope`] — per-shard metrics without threading a registry
 //!   and shard index separately.
 //!

@@ -13,6 +13,11 @@
 //!   Each output row accumulates its K-contributions in exactly the serial
 //!   order, so the result is bit-identical to [`matmul_into`] for any
 //!   thread count or lease width.
+//! - [`matmul_into_packed`] / [`matmul_into_packed_par`] /
+//!   [`matmul_into_packed_ctx`] — the same kernel with each active A-block
+//!   packed into a contiguous scratch slab (the `dense_packed` registry
+//!   kernel). Packing is a memory-layout change only: bit-identical to
+//!   [`matmul_into`] everywhere the unpacked kernel is.
 //!
 //! [`matmul_auto`] / [`matmul_into_auto`] pick serial vs pool-parallel from
 //! the problem size; the `nn` forward/backward paths route through them.
@@ -167,6 +172,116 @@ pub fn matmul_into_par<P: Parallelism>(a: &Mat, b: &Mat, c: &mut Mat, par: &P) {
 /// lease width, executed on its pool.
 pub fn matmul_into_ctx(a: &Mat, b: &Mat, c: &mut Mat, ctx: &mut ExecCtx<'_>) {
     matmul_into_par(a, b, c, ctx.lease());
+}
+
+/// `C = A · B` with A's row panels **packed** into a contiguous scratch
+/// slab — the `dense_packed` registry kernel's serial form.
+///
+/// The plain blocked kernel re-reads each row panel's `rows × KC` slice of A
+/// once per NC sub-block, striding `a.cols()` floats between rows; for wide
+/// inputs (`k` ≫ KC) those strides span many pages and the slice competes
+/// with B's slab for cache. Packing copies the active `≤ MC × KC` A-block
+/// into a contiguous slab first, so the re-reads walk one dense 64 KiB
+/// region. Copying `f32`s preserves their bits and the accumulation order
+/// over K is untouched (KC panels ascending, `pp` ascending inside), so the
+/// result is **bit-identical** to [`matmul_into`] — packing is a memory
+/// layout change, never a numeric one.
+pub fn matmul_into_packed(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
+    let mut slab = Vec::new();
+    gemm_row_panel_packed(a, b, 0, c.as_mut_slice(), &mut slab);
+}
+
+/// [`matmul_into_packed`] on an execution target: the same MC-quantized row
+/// sharding as [`matmul_into_par`], with each pool job packing its own A
+/// blocks. Bit-identical to [`matmul_into`] for any thread count or lease
+/// width, by the same argument as the unpacked kernel.
+pub fn matmul_into_packed_par<P: Parallelism>(a: &Mat, b: &Mat, c: &mut Mat, par: &P) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let width = par.width();
+    if width == 1 || m < 2 || n == 0 || k == 0 {
+        matmul_into_packed(a, b, c);
+        return;
+    }
+    let quantum = if m >= width * MC { MC } else { (MC / 8).max(1) };
+    let rows_per = chunk_rows(m, width, quantum);
+    par_row_chunks(par, c, rows_per, |row0, band| {
+        // Per-job slab: pool jobs run concurrently, so the pack buffer
+        // cannot be shared; its ≤ MC × KC size amortizes over the panel.
+        let mut slab = Vec::new();
+        gemm_row_panel_packed(a, b, row0, band, &mut slab);
+    });
+}
+
+/// [`matmul_into_packed_par`] through an execution context: chunked by the
+/// ctx's lease width. The serial fall-through draws its pack slab from the
+/// ctx's [`crate::exec::ScratchArena`] so repeated batches reuse one buffer.
+pub fn matmul_into_packed_ctx(a: &Mat, b: &Mat, c: &mut Mat, ctx: &mut ExecCtx<'_>) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.cols();
+    if ctx.threads() == 1 || m < 2 || n == 0 || k == 0 {
+        let mut slab = ctx.take_buf(MC.min(m) * KC.min(k.max(1)));
+        gemm_row_panel_packed(a, b, 0, c.as_mut_slice(), &mut slab);
+        ctx.put_buf(slab);
+        return;
+    }
+    matmul_into_packed_par(a, b, c, ctx.lease());
+}
+
+/// Compute one row panel of `C = A · B` into `band`, packing each active
+/// `≤ MC × kc` block of A into `slab` before streaming B over it. Iterates
+/// MC-row sub-panels internally so the slab stays L2-resident however large
+/// the caller's panel is. Per-element accumulation order over K is exactly
+/// [`gemm_row_panel`]'s (p0 outer ascending, `pp` inner ascending), so the
+/// result bits match the unpacked kernel's.
+fn gemm_row_panel_packed(a: &Mat, b: &Mat, row0: usize, band: &mut [f32], slab: &mut Vec<f32>) {
+    let k = a.cols();
+    let n = b.cols();
+    if n == 0 {
+        return;
+    }
+    let rows = band.len() / n;
+    band.fill(0.0);
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        let mut i0 = 0;
+        while i0 < rows {
+            let mc = MC.min(rows - i0);
+            // Pack the mc × kc A-block: row i of the slab is
+            // A[row0+i0+i, p0..p0+kc], bit-for-bit.
+            slab.resize(mc * kc, 0.0);
+            for i in 0..mc {
+                slab[i * kc..(i + 1) * kc]
+                    .copy_from_slice(&a.row(row0 + i0 + i)[p0..p0 + kc]);
+            }
+            let mut j0 = 0;
+            while j0 < n {
+                let nc = NC.min(n - j0);
+                for i in 0..mc {
+                    let arow = &slab[i * kc..(i + 1) * kc];
+                    let ci = i0 + i;
+                    let crow = &mut band[ci * n + j0..ci * n + j0 + nc];
+                    for (pp, &aip) in arow.iter().enumerate() {
+                        if aip == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.row(p0 + pp)[j0..j0 + nc];
+                        axpy_row(crow, aip, brow);
+                    }
+                }
+                j0 += nc;
+            }
+            i0 += mc;
+        }
+        p0 += kc;
+    }
 }
 
 /// Compute one row panel of `C = A · B` into `band` (row-major rows of C
@@ -494,6 +609,66 @@ mod tests {
             assert_eq!(via_ctx.as_slice(), serial.as_slice(), "ctx lease {want}");
         }
         assert_eq!(pool.leased(), 0);
+    }
+
+    /// The packed kernel's contract: packing A panels is a memory-layout
+    /// change only — bit-identical to [`matmul_into`] for random shapes,
+    /// panel-boundary shapes, any thread count, and any lease width.
+    #[test]
+    fn packed_kernel_is_bit_identical_to_unpacked_serial() {
+        property("packed == serial, bitwise", 24, |rng| {
+            let m = rng.index(80) + 1;
+            let k = rng.index(300) + 1;
+            let n = rng.index(60) + 1;
+            let a = Mat::randn(m, k, 1.0, rng);
+            let b = Mat::randn(k, n, 1.0, rng);
+            let mut serial = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut serial);
+            let mut packed = Mat::full(m, n, f32::NAN); // dirty output buffer
+            matmul_into_packed(&a, &b, &mut packed);
+            assert_eq!(packed.as_slice(), serial.as_slice(), "shape ({m},{k},{n})");
+        });
+    }
+
+    #[test]
+    fn packed_parallel_is_bit_identical_for_any_thread_count_and_lease() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(61);
+        // Shapes straddling the MC/NC/KC boundaries, incl. k > KC so the
+        // packing loop runs more than one block.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (64, 256, 128),
+            (65, 257, 129),
+            (130, 300, 60),
+            (200, 17, 3),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let mut serial = Mat::zeros(m, n);
+            matmul_into(&a, &b, &mut serial);
+            for threads in [1usize, 2, 7] {
+                let pool = ThreadPool::new(threads);
+                let mut par = Mat::full(m, n, f32::NAN);
+                matmul_into_packed_par(&a, &b, &mut par, &pool);
+                assert_eq!(
+                    par.as_slice(),
+                    serial.as_slice(),
+                    "threads={threads} shape=({m},{k},{n})"
+                );
+                for grant in [1usize, threads] {
+                    let mut ctx = ExecCtx::over(pool.lease(grant));
+                    let mut via_ctx = Mat::full(m, n, f32::NAN);
+                    matmul_into_packed_ctx(&a, &b, &mut via_ctx, &mut ctx);
+                    assert_eq!(
+                        via_ctx.as_slice(),
+                        serial.as_slice(),
+                        "ctx lease {grant} shape=({m},{k},{n})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,8 @@ pub mod lowrank;
 
 pub use gemm::{
     matmul, matmul_auto, matmul_auto_ctx, matmul_into, matmul_into_auto, matmul_into_auto_ctx,
-    matmul_into_ctx, matmul_into_par, matmul_par, matmul_view_into,
+    matmul_into_ctx, matmul_into_packed, matmul_into_packed_ctx, matmul_into_packed_par,
+    matmul_into_par, matmul_par, matmul_view_into,
 };
 pub use lowrank::LowRank;
 pub use matrix::{Mat, MatView};

@@ -6,17 +6,22 @@
 //!   train-pjrt  train through the AOT train_step artifact (three-layer path)
 //!   serve       start the serving coordinator (native or PJRT backend);
 //!               loads the machine profile named by `autotune.profile_path`
-//!               (or `--autotune-profile`) and logs the per-layer dispatch
-//!               threshold table, falling back to online calibration.
-//!               The batching front-end is sharded (`--shards`, 0 = derived
-//!               from the thread budget; `--router` round-robin|least-depth);
-//!               per-request outputs are bit-identical for any shard count
-//!   calibrate   measure per-layer dense-vs-masked dispatch thresholds for a
+//!               (or `--autotune-profile`), recalibrates any cost column the
+//!               profile lacks for a newly registered kernel, and logs the
+//!               per-layer dispatch threshold + kernel-choice tables,
+//!               falling back to online calibration. `--kernels` restricts
+//!               the registry allow-list. The batching front-end is sharded
+//!               (`--shards`, 0 = derived from the thread budget; `--router`
+//!               round-robin|least-depth); per-request outputs are
+//!               bit-identical for any shard count, lease width, and
+//!               kernel allow-list
+//!   calibrate   measure per-layer per-kernel dispatch cost columns for a
 //!               profile's architecture on this machine and persist them as
 //!               a machine-profile JSON (`autotune.profile_path`); `serve`
 //!               loads the file at startup so the measurement happens once
 //!               per machine, not once per process. Budget via
-//!               `--budget-ms` / `autotune.budget_ms`.
+//!               `--budget-ms` / `autotune.budget_ms`; kernel set via
+//!               `--kernels`.
 //!   experiment  regenerate a paper table/figure (fig2…fig6, table2, table3,
 //!               speedup, all)
 //!   bench       measured dense-vs-masked-vs-parallel sweep; writes
@@ -35,6 +40,7 @@
 
 use condcomp::autotune::{Autotuner, MachineProfile};
 use condcomp::cli::{Command, OptSpec, Parsed};
+use condcomp::condcomp::{KernelId, KernelRegistry};
 use condcomp::config::{EstimatorConfig, ExperimentProfile};
 use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
 use condcomp::cost::LayerCost;
@@ -84,6 +90,23 @@ fn apply_threads(parsed: &Parsed, config_threads: usize) -> anyhow::Result<usize
     } else {
         requested
     })
+}
+
+/// Resolve the kernel allow-list: CLI `--kernels` wins, then the profile's
+/// `dispatch.kernels` config key; `None` = every registered kernel. Unknown
+/// ids fail loudly here, before anything starts serving.
+fn kernel_allowlist(
+    parsed: &Parsed,
+    profile: &ExperimentProfile,
+) -> anyhow::Result<Option<Vec<KernelId>>> {
+    let parsed_ids = match parsed.get("kernels") {
+        Some(s) => KernelRegistry::parse_allowlist(s).map(Some),
+        None if !profile.dispatch.kernels.is_empty() => {
+            KernelRegistry::parse_ids(&profile.dispatch.kernels).map(Some)
+        }
+        None => Ok(None),
+    };
+    parsed_ids.map_err(|e| anyhow::anyhow!("--kernels / dispatch.kernels: {e}"))
 }
 
 fn profile_from(parsed: &Parsed) -> Result<ExperimentProfile, anyhow::Error> {
@@ -235,6 +258,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "autotune-profile",
             "machine profile from `condcomp calibrate` (default: autotune.profile_path)",
         ))
+        .opt(OptSpec::value(
+            "kernels",
+            "kernel allow-list, comma-separated (dense,dense_packed,masked; default: all registered)",
+        ))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
     if parsed.flag("help") {
@@ -263,9 +290,22 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     };
     let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
     let backend = Arc::new(NativeBackend::new(net, est, 64));
-    // Per-layer dispatch thresholds: persisted machine profile first, then
-    // online calibration, then (per layer, inside the table) the global
-    // default with a one-time warning.
+    // Kernel allow-list (`--kernels` / `dispatch.kernels`): restrict the
+    // cost router before any calibration, so the columns measured are the
+    // columns routed.
+    if let Some(ids) = kernel_allowlist(&parsed, &profile)? {
+        backend
+            .set_allowed_kernels(&ids)
+            .map_err(|e| anyhow::anyhow!("--kernels: {e}"))?;
+        eprintln!(
+            "dispatch: kernel allow-list [{}]",
+            ids.iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
+        );
+    }
+    // Per-layer dispatch cost tables: persisted machine profile first
+    // (recalibrating just the columns it lacks for newly registered
+    // kernels), then online calibration, then (per layer, inside the table)
+    // the per-kernel defaults with a once-per-process warning.
     let profile_path = parsed
         .get("autotune-profile")
         .map(str::to_string)
@@ -273,11 +313,24 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let budget_ms = profile.autotune.budget_ms;
     let table = match &profile_path {
         Some(p) if Path::new(p).exists() => match MachineProfile::load(Path::new(p))
-            .and_then(|mp| backend.apply_profile(&mp, p))
+            .and_then(|mp| backend.apply_profile(&mp, p).map(|table| (mp, table)))
         {
-            Ok(table) => {
+            Ok((mp, table)) => {
                 eprintln!("dispatch: per-layer thresholds loaded from {p}");
-                table
+                let missing = mp.missing_kernel_columns(&backend.registry().ids());
+                if missing.is_empty() {
+                    table
+                } else {
+                    // The measured columns stay; only the gaps are filled.
+                    let names: Vec<&str> = missing.iter().map(|k| k.as_str()).collect();
+                    eprintln!(
+                        "dispatch: profile {p} has no cost column for [{}]; \
+                         recalibrating just those ({budget_ms} ms) — re-run \
+                         `condcomp calibrate` to persist them",
+                        names.join(", ")
+                    );
+                    backend.calibrate_kernel_columns(&missing, budget_ms)
+                }
             }
             Err(e) => {
                 eprintln!(
@@ -362,6 +415,10 @@ fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
         "total calibration wall-clock budget (default: autotune.budget_ms)",
     ))
     .opt(OptSpec::value("batch", "microbenchmark batch rows").with_default("64"))
+    .opt(OptSpec::value(
+        "kernels",
+        "kernel set to fit cost columns for, comma-separated (default: all registered)",
+    ))
     .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
     if parsed.flag("help") {
@@ -382,11 +439,24 @@ fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
 
     let mut tuner = Autotuner::with_budget_ms(budget_ms.max(1));
     tuner.batch = parsed.get_usize("batch")?.unwrap_or(64).max(1);
+    if let Some(ids) = kernel_allowlist(&parsed, &profile)? {
+        // A known-but-unregistered id (e.g. `pjrt` without the feature)
+        // would otherwise persist a fabricated default column that later
+        // suppresses the missing-column recalibration in a binary that
+        // *can* measure it — reject it before anything is written.
+        KernelRegistry::builtin()
+            .restricted(&ids)
+            .map_err(|e| anyhow::anyhow!("--kernels: {e} — cannot calibrate a kernel this \
+                 binary has not registered"))?;
+        tuner.kernels = ids;
+    }
     eprintln!(
-        "calibrating {} ({:?}): {} hidden layers on {threads} threads, budget {budget_ms} ms",
+        "calibrating {} ({:?}): {} hidden layers on {threads} threads, budget {budget_ms} ms, \
+         kernels [{}]",
         profile.name,
         profile.net.layers,
-        Autotuner::hidden_shapes(&profile.net.layers).len()
+        Autotuner::hidden_shapes(&profile.net.layers).len(),
+        tuner.kernels.iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
     );
     let machine = tuner.calibrate_model(&profile.net.layers, condcomp::parallel::global());
     for line in machine.summary_lines() {
@@ -437,6 +507,10 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         .opt(OptSpec::value("batch", "masked-layer batch rows").with_default("64"))
         .opt(OptSpec::value("threads", "compute-pool threads for the parallel arm (0 = auto)").with_default("0"))
         .opt(OptSpec::value("profile", "profile whose layer shapes get per-layer thresholds").with_default("mnist-small"))
+        .opt(OptSpec::value(
+            "kernels",
+            "kernel allow-list for the kernel sweep, comma-separated (default: all registered)",
+        ))
         .opt(OptSpec::flag("quick", "shorter measurement budget"))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
@@ -460,8 +534,27 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown profile '{prof_name}'"))?
         .net
         .layers;
-    let sweep =
-        condcomp::bench::sweep::run_parallel_sweep(&cfg, dim, batch, threads, &layer_sizes);
+    let kernels = match parsed.get("kernels") {
+        Some(s) => {
+            let ids =
+                KernelRegistry::parse_allowlist(s).map_err(|e| anyhow::anyhow!("--kernels: {e}"))?;
+            // Known-but-unregistered ids (e.g. `pjrt` without the feature)
+            // must fail cleanly here, not panic inside the sweep.
+            KernelRegistry::builtin()
+                .restricted(&ids)
+                .map_err(|e| anyhow::anyhow!("--kernels: {e}"))?;
+            Some(ids)
+        }
+        None => None,
+    };
+    let sweep = condcomp::bench::sweep::run_parallel_sweep(
+        &cfg,
+        dim,
+        batch,
+        threads,
+        &layer_sizes,
+        kernels.as_deref(),
+    );
     for line in sweep.report_lines() {
         println!("{line}");
     }

@@ -2,9 +2,10 @@
 //! gating and dropout), and backpropagation.
 
 use super::activations::{argmax_rows, relu_inplace, softmax_rows};
+use crate::condcomp::KernelId;
 use crate::config::NetConfig;
 use crate::exec::ExecCtx;
-use crate::linalg::{matmul_auto, matmul_into_ctx, Mat};
+use crate::linalg::{matmul_auto, matmul_into_ctx, matmul_into_packed_ctx, Mat};
 use crate::util::Pcg32;
 
 /// Supplies the paper's `S_l` mask (Eq. 5) for a hidden layer, given that
@@ -139,17 +140,30 @@ impl Mlp {
     /// Dense inference forward through an execution context — the serving
     /// control path. Bit-identical to `logits(x, &NoGater)`: same GEMM
     /// accumulation order (the parallel kernel ≡ the serial oracle for any
-    /// lease width), same bias-then-ReLU per hidden layer; activation
-    /// buffers come from (and return to) the ctx's arena, so nothing is
-    /// allocated per batch after warmup. The returned logits own an arena
-    /// buffer — serving callers hand it back via [`ExecCtx::put_buf`].
+    /// lease width, and the packed kernel ≡ the plain one bitwise), same
+    /// bias-then-ReLU per hidden layer; activation buffers come from (and
+    /// return to) the ctx's arena, so nothing is allocated per batch after
+    /// warmup. The returned logits own an arena buffer — serving callers
+    /// hand it back via [`ExecCtx::put_buf`].
+    ///
+    /// When the ctx pins a dispatch [`crate::condcomp::PolicyTable`] whose
+    /// `dense_packed` column beats `dense` for a layer, that layer's GEMM
+    /// runs the A-panel-packing variant — a routing decision that can never
+    /// change the output bits, only the wall-clock.
     pub fn logits_ctx(&self, x: &Mat, ctx: &mut ExecCtx<'_>) -> Mat {
         let depth = self.depth();
         let mut a = x.clone();
         for l in 0..depth {
             let (n, h) = (a.rows(), self.weights[l].cols());
             let mut out = Mat::from_vec(n, h, ctx.take_buf(n * h));
-            matmul_into_ctx(&a, &self.weights[l], &mut out, ctx);
+            let packed = ctx
+                .policy()
+                .map_or(false, |t| t.dense_kernel_for(l) == KernelId::DENSE_PACKED);
+            if packed {
+                matmul_into_packed_ctx(&a, &self.weights[l], &mut out, ctx);
+            } else {
+                matmul_into_ctx(&a, &self.weights[l], &mut out, ctx);
+            }
             add_bias(&mut out, &self.biases[l]);
             if l < depth - 1 {
                 relu_inplace(&mut out);
@@ -298,6 +312,18 @@ mod tests {
                 ctx.put_buf(logits_buf);
             }
         }
+        // A pinned policy preferring the packed GEMM routes every layer
+        // through it — and cannot change a single output bit.
+        use crate::condcomp::{DispatchPolicy, KernelId, PolicyTable};
+        let packed_policy = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::DENSE_PACKED, 0.5),
+        ]);
+        assert_eq!(packed_policy.preferred_dense(), KernelId::DENSE_PACKED);
+        let table = PolicyTable::uniform(packed_policy, net.depth() - 1);
+        let mut ctx = crate::exec::ExecCtx::over(pool.lease(3)).with_policy(table);
+        let got = net.logits_ctx(&x, &mut ctx);
+        assert_eq!(got.as_slice(), want.as_slice(), "packed routing changed bits");
     }
 
     #[test]

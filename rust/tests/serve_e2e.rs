@@ -21,6 +21,7 @@
 use condcomp::autotune::{
     model_fingerprint, Autotuner, CostModel, MachineProfile, PROFILE_SCHEMA_VERSION,
 };
+use condcomp::condcomp::KernelId;
 use condcomp::config::{EstimatorConfig, ExperimentProfile, NetConfig};
 use condcomp::coordinator::protocol::{Mode, Request, Response};
 use condcomp::coordinator::server::Client;
@@ -282,12 +283,15 @@ fn synthetic_ratio(d: usize, h: usize) -> f64 {
 }
 
 impl CostModel for SyntheticCost {
-    fn dense_seconds(&mut self, n: usize, d: usize, h: usize) -> f64 {
-        2.0 * (n * d * h) as f64 * 1e-10
-    }
-
-    fn masked_seconds(&mut self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
-        alpha * synthetic_ratio(d, h) * 2.0 * (n * d * h) as f64 * 1e-10
+    fn seconds(&mut self, kernel: KernelId, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
+        let dense = 2.0 * (n * d * h) as f64 * 1e-10;
+        if kernel == KernelId::MASKED {
+            alpha * synthetic_ratio(d, h) * dense
+        } else {
+            // dense and dense_packed at parity: ties route to plain dense,
+            // so the classic α* values (1/2, 1/8) hold exactly.
+            dense
+        }
     }
 }
 
@@ -311,6 +315,7 @@ fn synthetic_backend() -> (NativeBackend, [f64; 2]) {
         hardware: "unknown".into(),
         threads: 0,
         budget_ms: 0,
+        kernels: vec!["dense".into(), "dense_packed".into(), "masked".into()],
         layers: fitted,
     };
     backend.apply_profile(&profile, "<synthetic>").expect("profile installs");
@@ -411,6 +416,109 @@ fn leased_server_spawns_exactly_the_thread_budget() {
     }
     server.shutdown();
     assert_eq!(pool.leased(), 0, "shutdown returns every lease to the pool");
+}
+
+/// The kernel-registry acceptance criterion, end to end through the wire:
+/// serve outputs are bit-identical for any `--kernels` allow-list, any
+/// shard count, and any lease width. Two halves:
+///
+/// - allow-lists that swap `dense` ↔ `dense_packed` are bit-identical
+///   *unconditionally* (packing is a memory-layout change);
+/// - for any fixed allow-list, outputs are bit-identical across shard
+///   counts (each server pins the same policy table, so routing is
+///   deterministic wherever a batch lands).
+#[test]
+fn kernel_allowlists_preserve_bit_identity_end_to_end() {
+    use condcomp::condcomp::DispatchPolicy;
+
+    // Pin a dense-regime policy so the cost router deterministically picks
+    // the (only) dense-work kernel in each server's allow-list.
+    let dense_regime = DispatchPolicy::with_cost_ratio(1e9);
+    let make = |allow: &[KernelId], shards: usize| {
+        let backend = trained_backend();
+        backend.set_allowed_kernels(allow).expect("allow-list installs");
+        backend.set_policy_table(condcomp::condcomp::PolicyTable::uniform(
+            dense_regime.clone(),
+            2,
+        ));
+        Server::start(
+            Arc::new(backend),
+            ServerConfig { shards, ..ServerConfig::default() },
+        )
+        .expect("server start")
+    };
+
+    // dense-only vs packed-only vs both, at different shard counts. All
+    // five must agree bitwise in both modes: the dense-work kernels are
+    // bit-identical, and the masked kernel never wins under the pinned
+    // dense-regime table.
+    let servers = vec![
+        make(&[KernelId::DENSE, KernelId::MASKED], 1),
+        make(&[KernelId::DENSE], 2),
+        make(&[KernelId::DENSE_PACKED], 1),
+        make(&[KernelId::DENSE_PACKED, KernelId::MASKED], 3),
+        make(&[KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED], 2),
+    ];
+    let mut clients: Vec<Client> =
+        servers.iter().map(|s| Client::connect(&s.local_addr).unwrap()).collect();
+    let mut rng = Pcg32::seeded(0xA110);
+    for mode in [Mode::Control, Mode::ConditionalAe] {
+        for req in 0..4 {
+            let x = Mat::randn(1 + (req % 2), 784, 0.5, &mut rng);
+            let mut first: Option<Vec<u32>> = None;
+            for (i, client) in clients.iter_mut().enumerate() {
+                let resp = client.predict(x.clone(), mode).unwrap();
+                assert!(resp.ok, "server {i}: {:?}", resp.error);
+                let bits = logits_bits(&resp);
+                match &first {
+                    None => first = Some(bits),
+                    Some(want) => assert_eq!(
+                        &bits, want,
+                        "mode {mode:?} req {req}: allow-list variant {i} diverged"
+                    ),
+                }
+            }
+        }
+    }
+
+    // The masked regime is its own equivalence class: masked-only equals a
+    // full allow-list pinned to always-masked, across shard counts.
+    let masked_regime = DispatchPolicy::with_cost_ratio(1e-9);
+    let make_masked = |allow: &[KernelId], shards: usize| {
+        let backend = trained_backend();
+        backend.set_allowed_kernels(allow).expect("allow-list installs");
+        backend.set_policy_table(condcomp::condcomp::PolicyTable::uniform(
+            masked_regime.clone(),
+            2,
+        ));
+        Server::start(
+            Arc::new(backend),
+            ServerConfig { shards, ..ServerConfig::default() },
+        )
+        .expect("server start")
+    };
+    let masked_servers = vec![
+        make_masked(&[KernelId::MASKED], 1),
+        make_masked(&[KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED], 3),
+    ];
+    let mut masked_clients: Vec<Client> = masked_servers
+        .iter()
+        .map(|s| Client::connect(&s.local_addr).unwrap())
+        .collect();
+    for req in 0..4 {
+        let x = Mat::randn(1, 784, 0.5, &mut rng);
+        let a = masked_clients[0].predict(x.clone(), Mode::ConditionalAe).unwrap();
+        let b = masked_clients[1].predict(x, Mode::ConditionalAe).unwrap();
+        assert!(a.ok && b.ok);
+        assert_eq!(logits_bits(&a), logits_bits(&b), "masked regime req {req} diverged");
+    }
+
+    for s in servers {
+        s.shutdown();
+    }
+    for s in masked_servers {
+        s.shutdown();
+    }
 }
 
 /// Server-level drift guard: a 3-shard server built on the synthetic table
