@@ -176,6 +176,11 @@ pub struct ParallelSweep {
     /// Registry-kernel throughput at each grid density (dense vs
     /// dense_packed vs masked through the registry entry points).
     pub kernel_sweep: Vec<KernelSweepRow>,
+    /// Scalar-vs-SIMD head-to-head at each grid density: the fixed five-way
+    /// dense / dense_packed / dense_simd / masked / masked_simd race,
+    /// always over the full builtin registry (a `--kernels` restriction
+    /// narrows routing, not this comparison column).
+    pub simd_sweep: Vec<KernelSweepRow>,
     /// Serving throughput at each measured batcher shard count (leased
     /// executors — the production configuration).
     pub shard_sweep: Vec<ShardRow>,
@@ -334,6 +339,49 @@ pub fn run_parallel_sweep(
         }
     }
 
+    // --- scalar vs SIMD kernels across the α grid ------------------------
+    // The simd_sweep column: the five in-tree kernels raced at the layer
+    // shape regardless of any `--kernels` restriction, so the JSON always
+    // answers "does dense_simd beat dense on this machine?" (the perf
+    // acceptance criterion) even for a restricted bench run.
+    let mut simd_sweep = Vec::new();
+    {
+        let builtin = KernelRegistry::builtin();
+        let pool = ThreadPool::new(threads_max);
+        let mut ctx = ExecCtx::full(&pool);
+        let layer = MaskedLayer::new(&b, &bias);
+        let ops = LayerOperands::new(&b, &layer);
+        for &(alpha, ref mask) in &masks {
+            for id in [
+                KernelId::DENSE,
+                KernelId::DENSE_PACKED,
+                KernelId::DENSE_SIMD,
+                KernelId::MASKED,
+                KernelId::MASKED_SIMD,
+            ] {
+                let kernel = builtin.get(id).expect("builtin kernel");
+                let work = match id.work() {
+                    WorkModel::Dense => layer_flops,
+                    WorkModel::AlphaScaled => layer_flops * alpha,
+                };
+                let r = bench_with_units(
+                    &format!("simd_{id} α={alpha} threads={threads_max}"),
+                    cfg,
+                    work,
+                    || {
+                        let _ = kernel.run(&ops, &x, mask, &mut ctx, &mut out);
+                    },
+                );
+                simd_sweep.push(KernelSweepRow {
+                    kernel: id.as_str().to_string(),
+                    alpha,
+                    median_s: r.time.median,
+                    flops: work,
+                });
+            }
+        }
+    }
+
     // Per-layer thresholds: the global ratio above is for *one* shape; each
     // hidden layer's d×h gets its own fit through the autotune harness
     // (quick budget — `condcomp calibrate` is the configurable-budget run),
@@ -395,6 +443,7 @@ pub fn run_parallel_sweep(
         density_threshold: policy.density_threshold(),
         per_layer,
         kernel_sweep,
+        simd_sweep,
         shard_sweep,
         lease_vs_private,
     }
@@ -521,6 +570,15 @@ impl ParallelSweep {
                 row.flops / row.median_s.max(1e-12) / 1e9
             ));
         }
+        for row in &self.simd_sweep {
+            lines.push(format!(
+                "simd sweep:   {:<14} α={:.2} → {:>9.3}ms  {:>8.2} GF/s",
+                row.kernel,
+                row.alpha,
+                row.median_s * 1e3,
+                row.flops / row.median_s.max(1e-12) / 1e9
+            ));
+        }
         for row in &self.shard_sweep {
             lines.push(format!(
                 "serve loopback: shards={} clients={} → {:.0} req/s ({} requests in {:.3}s)",
@@ -562,6 +620,10 @@ impl ParallelSweep {
             (
                 "kernel_sweep",
                 Json::Arr(self.kernel_sweep.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "simd_sweep",
+                Json::Arr(self.simd_sweep.iter().map(|r| r.to_json()).collect()),
             ),
             (
                 "serve_shard_sweep",
@@ -610,6 +672,16 @@ mod tests {
             assert!(row.median_s >= 0.0 && row.flops > 0.0, "{row:?}");
             assert!(registry_ids.iter().any(|k| k.as_str() == row.kernel));
         }
+        // SIMD sweep: the fixed five-way race at every grid density.
+        let simd_ids = ["dense", "dense_packed", "dense_simd", "masked", "masked_simd"];
+        assert_eq!(sweep.simd_sweep.len(), ALPHA_GRID.len() * simd_ids.len());
+        for id in simd_ids {
+            assert_eq!(
+                sweep.simd_sweep.iter().filter(|r| r.kernel == id).count(),
+                ALPHA_GRID.len(),
+                "{id} measured once per α"
+            );
+        }
 
         // Shard column: {1, 2, threads_max=2} dedups to {1, 2}; every row
         // completed all of its requests.
@@ -651,6 +723,19 @@ mod tests {
         assert!(kernel_rows
             .iter()
             .all(|r| r.get("alpha").is_some() && r.get("gflops_per_s").is_some()));
+        let simd_rows = parsed
+            .get("simd_sweep")
+            .and_then(|v| v.as_arr())
+            .expect("simd_sweep column");
+        assert_eq!(simd_rows.len(), sweep.simd_sweep.len());
+        for id in simd_ids {
+            assert!(
+                simd_rows
+                    .iter()
+                    .any(|r| r.get("kernel").and_then(|k| k.as_str()) == Some(id)),
+                "kernel {id} missing from simd_sweep JSON"
+            );
+        }
         let shard_rows = parsed
             .get("serve_shard_sweep")
             .and_then(|v| v.as_arr())

@@ -48,8 +48,14 @@ impl KernelId {
     /// Dense GEMM with A's row panels packed into a contiguous scratch slab
     /// per KC block — bit-identical to [`KernelId::DENSE`].
     pub const DENSE_PACKED: KernelId = KernelId("dense_packed");
+    /// Dense GEMM with explicitly vectorized (AVX2/NEON, runtime-detected)
+    /// fused axpy rows — tolerance-tier against [`KernelId::DENSE`].
+    pub const DENSE_SIMD: KernelId = KernelId("dense_simd");
     /// Masked dot-product kernel: computes only the `α·N·h` live entries.
     pub const MASKED: KernelId = KernelId("masked");
+    /// Masked kernel with explicitly vectorized dot products —
+    /// tolerance-tier against [`KernelId::MASKED`].
+    pub const MASKED_SIMD: KernelId = KernelId("masked_simd");
     /// Device execution through PJRT. The slot registers only when the real
     /// xla bindings replace `vendor/xla-stub` (`--features pjrt`).
     pub const PJRT: KernelId = KernelId("pjrt");
@@ -67,14 +73,26 @@ impl KernelId {
     /// return `None` — callers tolerate them (a newer writer's column) or
     /// reject them (a typo in `--kernels`), per context.
     pub fn parse(s: &str) -> Option<KernelId> {
-        [Self::DENSE, Self::DENSE_PACKED, Self::MASKED, Self::PJRT]
-            .into_iter()
-            .find(|k| k.as_str() == s)
+        Self::known().iter().copied().find(|k| k.as_str() == s)
+    }
+
+    /// Every id defined in-tree, canonical order — the parse set, and what
+    /// roster-style error messages enumerate (feature-gated slots included,
+    /// marked unavailable by the registry when not compiled in).
+    pub fn known() -> &'static [KernelId] {
+        &[
+            Self::DENSE,
+            Self::DENSE_PACKED,
+            Self::DENSE_SIMD,
+            Self::MASKED,
+            Self::MASKED_SIMD,
+            Self::PJRT,
+        ]
     }
 
     /// How this kernel's work scales with the mask density α.
     pub fn work(self) -> WorkModel {
-        if self == Self::MASKED {
+        if self == Self::MASKED || self == Self::MASKED_SIMD {
             WorkModel::AlphaScaled
         } else {
             WorkModel::Dense
@@ -82,19 +100,23 @@ impl KernelId {
     }
 
     /// Canonical ordering for deterministic argmin tie-breaks: the plain
-    /// dense kernel wins ties against everything, packed against masked,
-    /// in-tree ids against foreign ones.
+    /// dense kernel wins ties against everything, bit-exact kernels against
+    /// tolerance-tier SIMD ones, in-tree ids against foreign ones.
     pub(crate) fn priority(self) -> (u8, &'static str) {
         let rank = if self == Self::DENSE {
             0
         } else if self == Self::DENSE_PACKED {
             1
-        } else if self == Self::MASKED {
+        } else if self == Self::DENSE_SIMD {
             2
-        } else if self == Self::PJRT {
+        } else if self == Self::MASKED {
             3
-        } else {
+        } else if self == Self::MASKED_SIMD {
             4
+        } else if self == Self::PJRT {
+            5
+        } else {
+            6
         };
         (rank, self.0)
     }
@@ -109,8 +131,13 @@ impl std::fmt::Display for KernelId {
 /// The in-tree kernel candidate set, canonical order (what
 /// `KernelRegistry::builtin()` registers; the PJRT slot joins only behind
 /// the `pjrt` feature).
-pub const BUILTIN_KERNELS: &[KernelId] =
-    &[KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED];
+pub const BUILTIN_KERNELS: &[KernelId] = &[
+    KernelId::DENSE,
+    KernelId::DENSE_PACKED,
+    KernelId::DENSE_SIMD,
+    KernelId::MASKED,
+    KernelId::MASKED_SIMD,
+];
 
 /// How a kernel's executed FLOPs depend on the predicted mask density.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -223,9 +250,26 @@ impl DispatchPolicy {
         self.columns.iter().find(|c| c.kernel == kernel).map(|c| c.per_flop)
     }
 
-    /// A kernel's per-FLOP cost, falling back to its work model's default.
+    /// A kernel's per-FLOP cost, falling back for uncalibrated kernels to
+    /// the *larger* of its work model's default and the most expensive
+    /// calibrated column with the same work model. The floor matters once a
+    /// table mixes calibrated and uncalibrated columns of one work model
+    /// (e.g. a pre-SIMD profile measured `masked` at 8× but never saw
+    /// `masked_simd`): an unmeasured kernel must never be assumed *cheaper*
+    /// than a measured sibling, or a stale profile would route real traffic
+    /// onto a kernel nothing has timed. Calibration replaces the guess.
     fn per_flop_or_default(&self, kernel: KernelId) -> f64 {
-        self.per_flop(kernel).unwrap_or_else(|| kernel.work().default_per_flop())
+        if let Some(c) = self.per_flop(kernel) {
+            return c;
+        }
+        let work = kernel.work();
+        let floor = self
+            .columns
+            .iter()
+            .filter(|c| c.kernel.work() == work)
+            .map(|c| c.per_flop)
+            .fold(f64::NEG_INFINITY, f64::max);
+        work.default_per_flop().max(floor)
     }
 
     /// The masked-vs-dense ratio the legacy threshold form exposes (what
@@ -504,13 +548,18 @@ mod tests {
 
     #[test]
     fn kernel_ids_parse_and_display() {
-        for k in [KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED, KernelId::PJRT] {
+        for &k in KernelId::known() {
             assert_eq!(KernelId::parse(k.as_str()), Some(k));
             assert_eq!(format!("{k}"), k.as_str());
         }
         assert_eq!(KernelId::parse("quantum"), None);
         assert_eq!(KernelId::MASKED.work(), WorkModel::AlphaScaled);
+        assert_eq!(KernelId::MASKED_SIMD.work(), WorkModel::AlphaScaled);
         assert_eq!(KernelId::DENSE_PACKED.work(), WorkModel::Dense);
+        assert_eq!(KernelId::DENSE_SIMD.work(), WorkModel::Dense);
+        // Priorities are strictly ordered in the known() canonical order.
+        let ranks: Vec<u8> = KernelId::known().iter().map(|k| k.priority().0).collect();
+        assert!(ranks.windows(2).all(|w| w[0] < w[1]), "ranks {ranks:?}");
     }
 
     #[test]
@@ -577,6 +626,41 @@ mod tests {
         let mut q = p.clone();
         q.set_column(KernelId::DENSE_PACKED, 1.0); // explicit parity
         assert_eq!(q.decide(64, 512, 512, 1.0, BUILTIN_KERNELS), KernelId::DENSE);
+    }
+
+    /// The uncalibrated floor: a kernel with no measured column is assumed
+    /// no cheaper than any *measured* column of the same work model, so a
+    /// pre-SIMD profile (which never timed `masked_simd`) cannot route
+    /// traffic onto it just because the generic default (3×) undercuts the
+    /// measured `masked` column.
+    #[test]
+    fn uncalibrated_kernels_never_undercut_calibrated_siblings() {
+        let p = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::MASKED, 8.0), // slower than the 3.0 default guess
+        ]);
+        let (n, d, h) = (64, 512, 512);
+        let masked = p.cost(KernelId::MASKED, n, d, h, 0.3);
+        let simd = p.cost(KernelId::MASKED_SIMD, n, d, h, 0.3);
+        assert!(
+            simd >= masked,
+            "uncalibrated masked_simd ({simd}) undercut calibrated masked ({masked})"
+        );
+        // …so the argmin can pick it only via the canonical tie-break, which
+        // masked wins — routing is unchanged until calibration says otherwise.
+        assert_ne!(p.decide(n, d, h, 0.05, BUILTIN_KERNELS), KernelId::MASKED_SIMD);
+        // Dense-work floor likewise: an expensive calibrated packed column
+        // lifts the uncalibrated dense_simd guess up to it.
+        let q = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::DENSE_PACKED, 2.5),
+        ]);
+        let packed = q.cost(KernelId::DENSE_PACKED, n, d, h, 1.0);
+        assert_eq!(q.cost(KernelId::DENSE_SIMD, n, d, h, 1.0), packed);
+        // A *measured* SIMD column beats the floor as usual.
+        let mut r = p.clone();
+        r.set_column(KernelId::MASKED_SIMD, 2.0);
+        assert_eq!(r.decide(n, d, h, 0.05, BUILTIN_KERNELS), KernelId::MASKED_SIMD);
     }
 
     #[test]

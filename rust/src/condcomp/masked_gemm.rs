@@ -19,6 +19,10 @@
 //!   code, and the per-shard `computed` counts are reduced in shard order,
 //!   so the result — output *and* count — is bit-identical to the serial
 //!   kernel for any thread count or lease width.
+//! - [`MaskedLayer::forward_masked_simd_ctx`] (and its `_into`/`_par`
+//!   forms) — the same kernel with explicitly vectorized dot products
+//!   ([`crate::linalg::simd`]); identical mask selection and counts,
+//!   tolerance-tier values (the `masked_simd` registry kernel).
 //! - [`MaskedLayer::forward_masked_into`] — serial, buffer-reusing.
 //! - [`MaskedLayer::forward_masked`] — serial, allocating (tests, one-off
 //!   callers); the correctness oracle.
@@ -29,6 +33,7 @@
 
 use crate::exec::ExecCtx;
 use crate::linalg::gemm::dot;
+use crate::linalg::simd::{dot_simd, SimdCaps};
 use crate::linalg::Mat;
 use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
 
@@ -76,6 +81,30 @@ impl MaskedLayer {
         for (j, out) in orow.iter_mut().enumerate() {
             if mrow[j] != 0.0 {
                 let z = dot(arow, self.wt.row(j)) + self.bias[j];
+                *out = if z > 0.0 { z } else { 0.0 };
+                computed += 1;
+            } else {
+                *out = 0.0;
+            }
+        }
+        computed
+    }
+
+    /// [`Self::masked_row`] with the vectorized dot ([`dot_simd`]): same
+    /// masked-entry selection and counting; only the dot's accumulation
+    /// order differs — the `masked_simd` kernel's tolerance-tier delta.
+    #[inline]
+    fn masked_row_simd(
+        &self,
+        caps: SimdCaps,
+        arow: &[f32],
+        mrow: &[f32],
+        orow: &mut [f32],
+    ) -> usize {
+        let mut computed = 0usize;
+        for (j, out) in orow.iter_mut().enumerate() {
+            if mrow[j] != 0.0 {
+                let z = dot_simd(caps, arow, self.wt.row(j)) + self.bias[j];
                 *out = if z > 0.0 { z } else { 0.0 };
                 computed += 1;
             } else {
@@ -160,6 +189,75 @@ impl MaskedLayer {
         ctx: &mut ExecCtx<'_>,
     ) -> usize {
         self.forward_masked_par(a, mask, out, ctx.lease())
+    }
+
+    /// Serial [`Self::forward_masked_into`] with vectorized dot products —
+    /// the `masked_simd` kernel's oracle. Same mask selection and count;
+    /// each computed entry is within the kernel's declared ULP tolerance of
+    /// the scalar kernel's (all of `caps`' ISA paths are bit-identical to
+    /// each other, so `CONDCOMP_FORCE_SCALAR` never changes results).
+    pub fn forward_masked_simd_into(
+        &self,
+        caps: SimdCaps,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+    ) -> usize {
+        self.check_shapes(a, mask, out);
+        let n = a.rows();
+        let mut computed = 0usize;
+        for i in 0..n {
+            computed += self.masked_row_simd(caps, a.row(i), mask.row(i), out.row_mut(i));
+        }
+        computed
+    }
+
+    /// Parallel [`Self::forward_masked_simd_into`] on an execution target —
+    /// same sharding and shard-order count reduction as
+    /// [`Self::forward_masked_par`], so output and count are bit-identical
+    /// to the serial SIMD kernel for any thread count or lease width.
+    pub fn forward_masked_simd_par<P: Parallelism>(
+        &self,
+        caps: SimdCaps,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        par: &P,
+    ) -> usize {
+        self.check_shapes(a, mask, out);
+        let n = a.rows();
+        let h = self.out_dim();
+        if par.width() == 1 || n < 2 || h == 0 {
+            return self.forward_masked_simd_into(caps, a, mask, out);
+        }
+        let rows_per = chunk_rows(n, par.width(), 1);
+        let counts = par_row_chunks(par, out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            let mut computed = 0usize;
+            for i in 0..rows {
+                computed += self.masked_row_simd(
+                    caps,
+                    a.row(row0 + i),
+                    mask.row(row0 + i),
+                    &mut band[i * h..(i + 1) * h],
+                );
+            }
+            computed
+        });
+        counts.iter().sum()
+    }
+
+    /// [`Self::forward_masked_simd_par`] through an execution context —
+    /// the `masked_simd` registry kernel's entry point.
+    pub fn forward_masked_simd_ctx(
+        &self,
+        caps: SimdCaps,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        ctx: &mut ExecCtx<'_>,
+    ) -> usize {
+        self.forward_masked_simd_par(caps, a, mask, out, ctx.lease())
     }
 
     /// `σ(a·W + b) ⊙ S`, computing only where `S = 1`. Allocating wrapper
@@ -369,6 +467,75 @@ mod tests {
             let mut got = Mat::full(33, 15, f32::NAN);
             layer.forward_dense_par(&a, &mut got, &pool);
             assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
+        }
+    }
+
+    /// The SIMD masked kernel against the scalar oracle: identical mask
+    /// selection (exact count, exact zeros) and tolerance-tier values on
+    /// the computed entries — under both the native and forced-scalar caps.
+    #[test]
+    fn simd_masked_matches_scalar_oracle_within_tolerance() {
+        use crate::util::ulp::within_tolerance;
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            property("forward_masked_simd ≈ forward_masked", 12, |rng| {
+                let n = rng.index(20) + 1;
+                let d = rng.index(60) + 1;
+                let h = rng.index(20) + 1;
+                let a = Mat::randn(n, d, 1.0, rng);
+                let w = Mat::randn(d, h, 1.0, rng);
+                let b: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+                let mask = Mat::from_fn(n, h, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+                let layer = MaskedLayer::new(&w, &b);
+                let (want, want_count) = layer.forward_masked(&a, &mask);
+                let mut got = Mat::full(n, h, f32::NAN);
+                let count = layer.forward_masked_simd_into(caps, &a, &mask, &mut got);
+                assert_eq!(count, want_count, "SIMD mask selection must match exactly");
+                for (i, (&g, &o)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+                    if mask.as_slice()[i] == 0.0 {
+                        assert_eq!(g, 0.0, "dead entries stay exactly zero");
+                    } else {
+                        assert!(within_tolerance(g, o, 4096), "[{i}] got={g} want={o}");
+                    }
+                }
+            });
+        }
+    }
+
+    /// The SIMD kernel's own determinism contract: parallel and ctx runs
+    /// (threads {1,2,7} × lease widths incl. zero-grant) are bit-identical
+    /// to its serial form, and native vs forced-scalar caps agree bitwise.
+    #[test]
+    fn simd_masked_parallel_is_bit_identical_to_simd_serial() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(77);
+        let (n, d, h) = (37, 45, 19);
+        let a = Mat::randn(n, d, 1.0, &mut rng);
+        let w = Mat::randn(d, h, 1.0, &mut rng);
+        let b: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let mask = Mat::from_fn(n, h, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+        let layer = MaskedLayer::new(&w, &b);
+        let native = SimdCaps::get();
+        let mut want = Mat::full(n, h, f32::NAN);
+        let want_count = layer.forward_masked_simd_into(native, &a, &mask, &mut want);
+        // Cross-ISA: the forced-scalar path reproduces the native path bitwise.
+        let mut scalar = Mat::full(n, h, f32::NAN);
+        let scalar_count = layer.forward_masked_simd_into(SimdCaps::scalar(), &a, &mask, &mut scalar);
+        assert_eq!(scalar_count, want_count);
+        assert_eq!(scalar.as_slice(), want.as_slice(), "ISA paths must agree bitwise");
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            let mut got = Mat::full(n, h, f32::NAN);
+            let count = layer.forward_masked_simd_par(native, &a, &mask, &mut got, &pool);
+            assert_eq!(count, want_count, "threads={threads}");
+            assert_eq!(got.as_slice(), want.as_slice(), "threads={threads}");
+            for k in [0usize, 1, threads] {
+                let mut ctx = ExecCtx::over(pool.lease(k));
+                let mut via_ctx = Mat::full(n, h, f32::NAN);
+                let count = layer.forward_masked_simd_ctx(native, &a, &mask, &mut via_ctx, &mut ctx);
+                assert_eq!(count, want_count, "ctx lease {k}");
+                assert_eq!(via_ctx.as_slice(), want.as_slice(), "ctx lease {k}");
+            }
+            assert_eq!(pool.leased(), 0);
         }
     }
 

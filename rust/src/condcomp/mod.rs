@@ -13,9 +13,11 @@
 //!   [`crate::autotune`], persisted in a machine profile).
 //! - [`registry`] — the open kernel set behind dispatch:
 //!   [`KernelRegistry`] maps stable [`KernelId`]s (`dense`,
-//!   `dense_packed`, `masked`, feature-gated `pjrt`) to object-safe
-//!   [`ComputeKernel`] implementations running through an
-//!   [`crate::exec::ExecCtx`].
+//!   `dense_packed`, `dense_simd`, `masked`, `masked_simd`, feature-gated
+//!   `pjrt`) to object-safe [`ComputeKernel`] implementations running
+//!   through an [`crate::exec::ExecCtx`]; each declares an
+//!   [`EquivalenceTier`] (bit-exact vs ULP-bounded) scoping how closely it
+//!   matches its serial oracle.
 //! - [`cond_mlp`] — an estimator-augmented network forward built on the
 //!   masked GEMM, with exact FLOP accounting per layer.
 //! - [`flops`] — operation counters shared by the engine and the benches.
@@ -32,4 +34,4 @@ pub use dispatch::{
 };
 pub use flops::{FlopBreakdown, LayerFlops};
 pub use masked_gemm::{relu_gate, MaskedLayer};
-pub use registry::{ComputeKernel, KernelRegistry, LayerOperands};
+pub use registry::{ComputeKernel, EquivalenceTier, KernelRegistry, LayerOperands};

@@ -21,27 +21,79 @@
 //!   ([`crate::linalg::matmul_into_packed_ctx`]): same accumulation order,
 //!   **bit-identical** to `dense`, different memory behaviour (faster on
 //!   wide-input layers).
+//! - `dense_simd` — the explicitly vectorized (AVX2/NEON, runtime-detected)
+//!   fused-axpy GEMM ([`crate::linalg::matmul_into_simd_ctx`]):
+//!   **tolerance-tier** against `dense` (fused accumulation), bit-identical
+//!   across its own ISA paths and thread counts.
 //! - `masked` — the dot-product kernel
 //!   ([`MaskedLayer::forward_masked_ctx`]): computes only predicted-live
 //!   entries.
+//! - `masked_simd` — the masked kernel with vectorized dot products
+//!   ([`MaskedLayer::forward_masked_simd_ctx`]): identical mask selection
+//!   and counts, **tolerance-tier** values against `masked`.
 //! - `pjrt` — a feature-gated slot (`--features pjrt`) that registers only
 //!   when the real xla bindings replace `vendor/xla-stub`; until device
 //!   execution lands it delegates to the dense path so the column is
 //!   measurable end to end.
 //!
-//! Numeric contract: `dense` and `dense_packed` are bit-identical to each
-//! other (and to the serial [`crate::linalg::matmul_into`] oracle) for any
-//! thread count or lease width; `masked` is bit-identical to its own serial
-//! oracle [`MaskedLayer::forward_masked_into`]. Dense-work and masked-work
-//! kernels compute the same function with different float accumulation
-//! orders, so routing changes wall-clock, never correctness.
+//! Numeric contract — scoped by each kernel's declared [`EquivalenceTier`]:
+//! a [`EquivalenceTier::BitExact`] kernel reproduces its serial oracle
+//! bitwise (`dense`/`dense_packed` vs [`crate::linalg::matmul_into`],
+//! `masked` vs [`MaskedLayer::forward_masked_into`]) for any thread count or
+//! lease width; a [`EquivalenceTier::Tolerance`] kernel (the SIMD pair)
+//! matches its oracle within the declared ULP bound, while remaining
+//! bit-identical to *itself* across thread counts, lease widths and ISA
+//! paths. All kernels compute the same function, so routing changes
+//! wall-clock — and at most tolerance-tier last bits — never correctness.
 
 use super::dispatch::KernelId;
 use super::masked_gemm::{relu_gate, MaskedLayer};
 use crate::exec::ExecCtx;
-use crate::linalg::{matmul_into_ctx, matmul_into_packed_ctx, Mat};
+use crate::linalg::{
+    matmul_into_ctx, matmul_into_packed_ctx, matmul_into_simd_ctx, Mat, SimdCaps,
+};
 use crate::nn::mlp::add_bias;
+use crate::util::ulp::{ulp_diff, within_tolerance};
 use std::sync::Arc;
+
+/// How closely a kernel's output is guaranteed to match its serial oracle —
+/// the contract the equivalence test suites enforce per kernel, and the
+/// scope of the serve e2e bit-identity invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EquivalenceTier {
+    /// Bit-for-bit identical to the serial oracle at any thread count or
+    /// lease width (same accumulation order).
+    BitExact,
+    /// Within the given ULP bound of the serial oracle (different
+    /// accumulation order — e.g. fused multiply-adds or wider accumulator
+    /// banks), with an absolute floor of `ulps · ε` near zero for
+    /// ReLU-boundary sign flips. Still bit-identical to *itself* across
+    /// thread counts, lease widths and ISA paths.
+    Tolerance(u32),
+}
+
+impl EquivalenceTier {
+    /// Verify `got` against the oracle `want` under this tier. `Ok(())` or
+    /// a message pinpointing the first violation.
+    pub fn check(&self, got: &[f32], want: &[f32]) -> Result<(), String> {
+        if got.len() != want.len() {
+            return Err(format!("length mismatch: {} vs {}", got.len(), want.len()));
+        }
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            let ok = match self {
+                EquivalenceTier::BitExact => g.to_bits() == w.to_bits(),
+                EquivalenceTier::Tolerance(ulps) => within_tolerance(g, w, *ulps),
+            };
+            if !ok {
+                return Err(format!(
+                    "{self:?} violated at [{i}]: got {g} want {w} ({} ULPs apart)",
+                    ulp_diff(g, w)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Everything a kernel may read about one hidden layer: the untransposed
 /// `d × h` weights (dense GEMM operand) and the prepared [`MaskedLayer`]
@@ -64,6 +116,13 @@ impl<'a> LayerOperands<'a> {
 pub trait ComputeKernel: Send + Sync {
     /// The stable id this kernel registers (and is costed) under.
     fn id(&self) -> KernelId;
+
+    /// How closely this kernel's output matches its serial oracle. Defaults
+    /// to [`EquivalenceTier::BitExact`] — a kernel with a different
+    /// accumulation order must override this and declare its ULP bound.
+    fn tier(&self) -> EquivalenceTier {
+        EquivalenceTier::BitExact
+    }
 
     /// Compute `σ(x·W + b) ⊙ mask` into `out` (overwritten — dirty reused
     /// buffers are fine), executing on the ctx's lease. Returns the number
@@ -127,6 +186,59 @@ impl ComputeKernel for DensePackedKernel {
     }
 }
 
+/// The ULP bound both SIMD kernels declare: generous headroom over the
+/// worst observed drift for the layer depths in play (each fused-vs-unfused
+/// accumulation contributes at most ~1 ULP of divergence per term, so the
+/// envelope scales with `d`; 4096 ULPs ≈ 2.4e-4 relative, with the
+/// tolerance check's matching absolute floor near zero covering
+/// ReLU-boundary sign flips).
+pub const SIMD_TIER_ULPS: u32 = 4096;
+
+/// `dense_simd`: the explicitly vectorized fused-axpy GEMM. Tolerance-tier
+/// against [`DenseKernel`] (FMA rounds once where the oracle rounds twice);
+/// bit-identical to itself across thread counts, lease widths and ISA paths.
+pub struct DenseSimdKernel {
+    caps: SimdCaps,
+}
+
+impl DenseSimdKernel {
+    /// Pin an explicit capability set (tests exercising the scalar path
+    /// in-process). [`Default`] probes the machine once.
+    pub fn new(caps: SimdCaps) -> DenseSimdKernel {
+        DenseSimdKernel { caps }
+    }
+}
+
+impl Default for DenseSimdKernel {
+    fn default() -> DenseSimdKernel {
+        DenseSimdKernel::new(SimdCaps::get())
+    }
+}
+
+impl ComputeKernel for DenseSimdKernel {
+    fn id(&self) -> KernelId {
+        KernelId::DENSE_SIMD
+    }
+
+    fn tier(&self) -> EquivalenceTier {
+        EquivalenceTier::Tolerance(SIMD_TIER_ULPS)
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        matmul_into_simd_ctx(self.caps, x, layer.weights, out, ctx);
+        add_bias(out, &layer.masked.bias);
+        relu_gate(out, mask);
+        x.rows() * layer.masked.out_dim()
+    }
+}
+
 /// `masked`: contiguous dot products for predicted-live entries only.
 #[derive(Default)]
 pub struct MaskedKernel;
@@ -145,6 +257,48 @@ impl ComputeKernel for MaskedKernel {
         out: &mut Mat,
     ) -> usize {
         layer.masked.forward_masked_ctx(x, mask, out, ctx)
+    }
+}
+
+/// `masked_simd`: the masked kernel with vectorized dot products. Identical
+/// mask selection and count to [`MaskedKernel`]; computed values are
+/// tolerance-tier (wider accumulator banks + fused ops in the dot).
+pub struct MaskedSimdKernel {
+    caps: SimdCaps,
+}
+
+impl MaskedSimdKernel {
+    /// Pin an explicit capability set (tests exercising the scalar path
+    /// in-process). [`Default`] probes the machine once.
+    pub fn new(caps: SimdCaps) -> MaskedSimdKernel {
+        MaskedSimdKernel { caps }
+    }
+}
+
+impl Default for MaskedSimdKernel {
+    fn default() -> MaskedSimdKernel {
+        MaskedSimdKernel::new(SimdCaps::get())
+    }
+}
+
+impl ComputeKernel for MaskedSimdKernel {
+    fn id(&self) -> KernelId {
+        KernelId::MASKED_SIMD
+    }
+
+    fn tier(&self) -> EquivalenceTier {
+        EquivalenceTier::Tolerance(SIMD_TIER_ULPS)
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        layer.masked.forward_masked_simd_ctx(self.caps, x, mask, out, ctx)
     }
 }
 
@@ -191,13 +345,16 @@ impl KernelRegistry {
         KernelRegistry { kernels: Vec::new() }
     }
 
-    /// The in-tree set: `dense`, `dense_packed`, `masked` — plus the `pjrt`
-    /// slot when the feature is on.
+    /// The in-tree set: `dense`, `dense_packed`, `dense_simd`, `masked`,
+    /// `masked_simd` — plus the `pjrt` slot when the feature is on. The SIMD
+    /// kernels probe [`SimdCaps`] exactly once, here at construction.
     pub fn builtin() -> KernelRegistry {
         let mut reg = KernelRegistry::empty();
         reg.register(Arc::new(DenseKernel));
         reg.register(Arc::new(DensePackedKernel));
+        reg.register(Arc::new(DenseSimdKernel::default()));
         reg.register(Arc::new(MaskedKernel));
+        reg.register(Arc::new(MaskedSimdKernel::default()));
         #[cfg(feature = "pjrt")]
         reg.register(Arc::new(PjrtKernel::default()));
         reg
@@ -238,6 +395,32 @@ impl KernelRegistry {
         self.kernels.iter()
     }
 
+    /// Every id this registry serves plus every in-tree id it doesn't —
+    /// feature-gated or not-compiled-in slots marked `(unavailable)` — in
+    /// canonical order. What `--kernels` validation errors enumerate, so a
+    /// typo'd or gated-out id tells the operator the whole candidate set.
+    pub fn roster(&self) -> String {
+        let mut entries: Vec<(KernelId, bool)> =
+            self.ids().into_iter().map(|id| (id, true)).collect();
+        for &id in KernelId::known() {
+            if !self.contains(id) {
+                entries.push((id, false));
+            }
+        }
+        entries.sort_by_key(|(id, _)| id.priority());
+        entries
+            .iter()
+            .map(|&(id, registered)| {
+                if registered {
+                    id.as_str().to_string()
+                } else {
+                    format!("{id} (unavailable)")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
     /// A registry restricted to `allow` (the `dispatch.kernels` config key /
     /// `--kernels` flag). Rejects unknown or unregistered ids and an empty
     /// result — a typo'd allow-list should fail loudly at startup, not route
@@ -246,8 +429,8 @@ impl KernelRegistry {
         for id in allow {
             if !self.contains(*id) {
                 return Err(format!(
-                    "kernel '{id}' is not registered (registered: {})",
-                    self.ids().iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
+                    "kernel '{id}' is not registered (kernels: {})",
+                    self.roster()
                 ));
             }
         }
@@ -271,7 +454,8 @@ impl KernelRegistry {
         for tok in names.iter().map(|s| s.trim()).filter(|t| !t.is_empty()) {
             let id = KernelId::parse(tok).ok_or_else(|| {
                 format!(
-                    "unknown kernel '{tok}' (known: dense, dense_packed, masked, pjrt)"
+                    "unknown kernel '{tok}' (kernels: {})",
+                    KernelRegistry::builtin().roster()
                 )
             })?;
             if !ids.contains(&id) {
@@ -327,7 +511,13 @@ mod tests {
     #[test]
     fn builtin_registry_has_the_canonical_set() {
         let reg = KernelRegistry::builtin();
-        let mut want = vec![KernelId::DENSE, KernelId::DENSE_PACKED, KernelId::MASKED];
+        let mut want = vec![
+            KernelId::DENSE,
+            KernelId::DENSE_PACKED,
+            KernelId::DENSE_SIMD,
+            KernelId::MASKED,
+            KernelId::MASKED_SIMD,
+        ];
         if cfg!(feature = "pjrt") {
             want.push(KernelId::PJRT);
         }
@@ -339,6 +529,58 @@ mod tests {
             !reg.contains(KernelId::PJRT),
             "the pjrt slot registers only behind the feature gate"
         );
+    }
+
+    /// Every registered kernel declares an equivalence tier (an acceptance
+    /// criterion): the scalar kernels are bit-exact, the SIMD pair declares
+    /// the shared ULP bound.
+    #[test]
+    fn every_registered_kernel_declares_a_tier() {
+        for kernel in KernelRegistry::builtin().iter() {
+            let tier = kernel.tier();
+            match kernel.id() {
+                KernelId::DENSE_SIMD | KernelId::MASKED_SIMD => {
+                    assert_eq!(tier, EquivalenceTier::Tolerance(SIMD_TIER_ULPS))
+                }
+                _ => assert_eq!(tier, EquivalenceTier::BitExact, "{}", kernel.id()),
+            }
+        }
+    }
+
+    #[test]
+    fn tier_check_enforces_its_contract() {
+        let exact = EquivalenceTier::BitExact;
+        assert!(exact.check(&[1.0, -0.5], &[1.0, -0.5]).is_ok());
+        let one_up = f32::from_bits(1.0f32.to_bits() + 1);
+        assert!(exact.check(&[one_up], &[1.0]).is_err(), "1 ULP breaks bit-exactness");
+        assert!(exact.check(&[1.0, 2.0], &[1.0]).is_err(), "length mismatch");
+        let tol = EquivalenceTier::Tolerance(4);
+        assert!(tol.check(&[one_up], &[1.0]).is_ok());
+        assert!(tol.check(&[1.001], &[1.0]).is_err(), "thousands of ULPs exceed the bound");
+        let err = tol.check(&[1.001], &[1.0]).unwrap_err();
+        assert!(err.contains("[0]"), "violation pinpoints the index: {err}");
+    }
+
+    /// The roster (satellite): validation errors list the full candidate
+    /// set, with feature-gated/unregistered ids marked unavailable, instead
+    /// of only naming the rejected id.
+    #[test]
+    fn validation_errors_list_the_kernel_roster() {
+        let reg = KernelRegistry::builtin();
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let err = reg.restricted(&[KernelId::PJRT]).unwrap_err();
+            for id in ["dense", "dense_packed", "dense_simd", "masked", "masked_simd"] {
+                assert!(err.contains(id), "roster missing '{id}': {err}");
+            }
+            assert!(err.contains("pjrt (unavailable)"), "gated slot marked: {err}");
+        }
+        let err = KernelRegistry::parse_allowlist("quantum").unwrap_err();
+        assert!(err.contains("quantum") && err.contains("dense_simd"), "{err}");
+        // A restricted registry's roster still shows what it excludes.
+        let only = reg.restricted(&[KernelId::MASKED]).unwrap();
+        let err = only.restricted(&[KernelId::DENSE]).unwrap_err();
+        assert!(err.contains("dense (unavailable)") && err.contains("masked"), "{err}");
     }
 
     #[test]
@@ -399,11 +641,12 @@ mod tests {
         assert_eq!(reg.len(), before, "same id replaces, never duplicates");
     }
 
-    /// The satellite property test: every registered kernel is bit-identical
-    /// to its serial oracle at thread counts {1, 2, 7} and lease widths
-    /// {1, N} — and the two dense-work kernels are bit-identical to *each
-    /// other* (that equivalence is what makes `--kernels` allow-list swaps
-    /// output-preserving for the dense regime).
+    /// The satellite property test: every registered kernel matches its
+    /// serial oracle *within its declared equivalence tier* at thread counts
+    /// {1, 2, 7} and lease widths {1, N}. For the bit-exact kernels that is
+    /// the same bitwise contract as before (so `--kernels` allow-list swaps
+    /// stay output-preserving within a tier class); the SIMD kernels are
+    /// held to their ULP bound — and to *exact* FLOP counts either way.
     #[test]
     fn every_registered_kernel_is_bit_identical_to_its_serial_oracle() {
         let reg = KernelRegistry::builtin();
@@ -432,12 +675,13 @@ mod tests {
                                 (&masked_want, masked_count)
                             }
                         };
-                        assert_eq!(
-                            out.as_slice(),
-                            want.as_slice(),
-                            "kernel {} threads {threads} lease {lease_width} ({n}x{d}x{h})",
-                            kernel.id()
-                        );
+                        if let Err(msg) = kernel.tier().check(out.as_slice(), want.as_slice()) {
+                            panic!(
+                                "kernel {} threads {threads} lease {lease_width} \
+                                 ({n}x{d}x{h}): {msg}",
+                                kernel.id()
+                            );
+                        }
                         assert_eq!(computed, want_count, "kernel {}", kernel.id());
                     }
                 }

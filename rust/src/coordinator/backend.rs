@@ -783,9 +783,9 @@ mod tests {
         assert!(be.set_allowed_kernels(&[KernelId::PJRT]).is_err());
     }
 
-    /// Targeted recalibration: a backend whose table came from a profile
-    /// without a `dense_packed` column gains just that column — measured —
-    /// while the profile's masked columns survive untouched.
+    /// Targeted recalibration: a backend whose table came from a pre-registry
+    /// profile (dense + masked only) gains just the missing columns —
+    /// measured — while the profile's masked columns survive untouched.
     #[test]
     fn calibrate_kernel_columns_fills_only_the_missing_column() {
         use crate::autotune::{model_fingerprint, LayerThreshold, MachineProfile};
@@ -816,7 +816,10 @@ mod tests {
             ],
         };
         let missing = profile.missing_kernel_columns(BUILTIN_KERNELS);
-        assert_eq!(missing, vec![KernelId::DENSE_PACKED]);
+        assert_eq!(
+            missing,
+            vec![KernelId::DENSE_PACKED, KernelId::DENSE_SIMD, KernelId::MASKED_SIMD]
+        );
         be.apply_profile(&profile, "partial.json").unwrap();
         let table = be.calibrate_kernel_columns(&missing, 40);
         for l in 0..2 {

@@ -123,6 +123,16 @@ impl Server {
         let budget = pool.threads();
         metrics.set_gauge("pool_threads", budget as f64);
         metrics.set_gauge("threads_total", budget as f64);
+        // Which ISA path the SIMD kernels run on this machine — the cached
+        // probe the registry's kernels were constructed with, surfaced via
+        // the `stats` op so operators can see it (and spot a forced-scalar
+        // escape hatch or a missing feature) without shell access.
+        let caps = crate::linalg::SimdCaps::get();
+        metrics.set_gauge("simd_avx2", u8::from(caps.avx2).into());
+        metrics.set_gauge("simd_fma", u8::from(caps.fma).into());
+        metrics.set_gauge("simd_neon", u8::from(caps.neon).into());
+        metrics.set_gauge("simd_forced_scalar", u8::from(caps.forced_scalar).into());
+        eprintln!("serve: simd path = {}", caps.isa_label());
         // Export the backend's per-layer dispatch thresholds so operators
         // can see which α* table a deployment is actually running.
         if let Some(thresholds) = backend.dispatch_thresholds() {

@@ -97,8 +97,10 @@ impl MetricsScope {
 /// threads `&mut ExecCtx` through every batch, so arena buffers recycle
 /// across batches and the lease is held for the executor's lifetime.
 /// Results never depend on the ctx (lease width, arena state, metrics) —
-/// only the pinned policy/registry can change *which* of the numerically
-/// equivalent kernels runs.
+/// only the pinned policy/registry can change *which* kernel runs, and any
+/// two kernels sharing a work model agree within their declared
+/// [`crate::condcomp::EquivalenceTier`] (bit-exact for the scalar kernels,
+/// ULP-bounded for the SIMD ones).
 pub struct ExecCtx<'p> {
     lease: PoolLease<'p>,
     arena: ScratchArena,

@@ -5,6 +5,9 @@
 //!   serial implementation (the correctness oracle), and a row-panel
 //!   pool-parallel variant that is bit-identical to it (the "control"
 //!   network's forward pass runs through the auto-dispatching entry point).
+//! - [`simd`] — explicitly vectorized (AVX2/NEON, runtime-detected) variants
+//!   of the dense axpy GEMM and the contiguous dot; tolerance-tier against
+//!   the serial oracles, bit-identical across their own ISA paths.
 //! - [`svd`] — one-sided Jacobi SVD (full and truncated); powers the paper's
 //!   per-epoch estimator refresh (§3.2).
 //! - [`lowrank`] — truncated factorization `W ≈ U·V` with the paper's
@@ -12,6 +15,7 @@
 
 pub mod matrix;
 pub mod gemm;
+pub mod simd;
 pub mod svd;
 pub mod lowrank;
 
@@ -20,6 +24,7 @@ pub use gemm::{
     matmul_into_ctx, matmul_into_packed, matmul_into_packed_ctx, matmul_into_packed_par,
     matmul_into_par, matmul_par, matmul_view_into,
 };
+pub use simd::{dot_simd, matmul_into_simd, matmul_into_simd_ctx, matmul_into_simd_par, SimdCaps};
 pub use lowrank::LowRank;
 pub use matrix::{Mat, MatView};
 pub use svd::Svd;

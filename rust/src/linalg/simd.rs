@@ -1,0 +1,581 @@
+//! Explicitly vectorized f32 microkernels (`dense_simd` / `masked_simd`).
+//!
+//! The portable kernels in [`super::gemm`] lean on LLVM's auto-vectorizer,
+//! which on the default x86_64 target is limited to the SSE2 baseline and
+//! never emits fused multiply-adds (fusing changes results, so the compiler
+//! must not do it silently). This module opts in explicitly: 8-lane AVX2+FMA
+//! on x86_64, paired 4-lane NEON FMA on aarch64, both behind *runtime*
+//! feature detection ([`SimdCaps`]) with a scalar tail and a pure-scalar
+//! fallback path for every entry point.
+//!
+//! Numeric contract (what makes the equivalence tiers checkable):
+//!
+//! - **All ISA paths of one kernel are bit-identical to each other.** The
+//!   scalar fallback mirrors the vector code's exact accumulator structure —
+//!   same lane count, same reduction tree, same fused ops via
+//!   [`f32::mul_add`] (correctly rounded, like the hardware FMA the vector
+//!   paths use) — so AVX2, NEON and forced-scalar runs of `dense_simd` /
+//!   `masked_simd` produce the same bits. `CONDCOMP_FORCE_SCALAR=1` changes
+//!   speed, never results, and the scalar tail is exercised on every machine.
+//! - **Against the serial oracles the kernels are tolerance-tier, not
+//!   bit-exact.** The dense kernel fuses each multiply-add the oracle rounds
+//!   in two steps; the masked dot kernel accumulates in 16 lanes instead of
+//!   the oracle's 4. Both stay within a small ULP envelope — declared per
+//!   kernel as `EquivalenceTier::Tolerance(..)` in the registry and enforced
+//!   by the property suites with the [`crate::util::ulp`] comparator.
+//!
+//! The axpy-form GEMM is element-independent (each output cell accumulates
+//! its K contributions in serial order; one fused op per contribution), so —
+//! exactly like the portable kernel — row sharding, KC/NC blocking, lane
+//! boundaries and tail handling are all invisible in the result bits: any
+//! thread count, lease width or ISA path computes the same output.
+
+use super::matrix::Mat;
+use crate::exec::ExecCtx;
+use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
+use std::sync::OnceLock;
+
+/// Row-panel / column-block / depth-panel sizes, mirrored from
+/// [`super::gemm`] so the SIMD kernel shards work identically.
+const MC: usize = 64;
+const NC: usize = 128;
+const KC: usize = 256;
+
+/// Vector lane count the kernels are written for (f32x8: one AVX2 register,
+/// a pair of NEON registers, or an 8-slot scalar accumulator bank).
+pub const LANES: usize = 8;
+/// Elements consumed per dot-product loop iteration (two 8-lane accumulators).
+const DOT_STEP: usize = 2 * LANES;
+
+/// CPU SIMD capabilities, probed once (satellite: detection is cached at
+/// registry construction, not re-queried per `run` call) and honored by
+/// every kernel in this module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdCaps {
+    /// x86_64 AVX2 available.
+    pub avx2: bool,
+    /// x86_64 FMA available (the vector path requires `avx2 && fma`).
+    pub fma: bool,
+    /// aarch64 NEON available.
+    pub neon: bool,
+    /// `CONDCOMP_FORCE_SCALAR` was set: pin the scalar path regardless of
+    /// hardware (the escape hatch that makes the fallback testable anywhere).
+    pub forced_scalar: bool,
+}
+
+impl SimdCaps {
+    /// Probe the running CPU and the `CONDCOMP_FORCE_SCALAR` environment
+    /// knob. Prefer [`SimdCaps::get`] — it caches this probe process-wide.
+    pub fn probe() -> SimdCaps {
+        let forced_scalar = std::env::var("CONDCOMP_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        #[cfg(target_arch = "x86_64")]
+        {
+            SimdCaps {
+                avx2: std::arch::is_x86_feature_detected!("avx2"),
+                fma: std::arch::is_x86_feature_detected!("fma"),
+                neon: false,
+                forced_scalar,
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            SimdCaps {
+                avx2: false,
+                fma: false,
+                neon: std::arch::is_aarch64_feature_detected!("neon"),
+                forced_scalar,
+            }
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            SimdCaps { avx2: false, fma: false, neon: false, forced_scalar }
+        }
+    }
+
+    /// The process-wide cached probe (env + cpuid read exactly once).
+    pub fn get() -> SimdCaps {
+        static CAPS: OnceLock<SimdCaps> = OnceLock::new();
+        *CAPS.get_or_init(SimdCaps::probe)
+    }
+
+    /// A caps value that pins the scalar path — lets tests exercise the
+    /// fallback in-process without touching the environment.
+    pub fn scalar() -> SimdCaps {
+        SimdCaps { avx2: false, fma: false, neon: false, forced_scalar: true }
+    }
+
+    /// Whether the AVX2 vector path runs (needs FMA too — the kernels fuse).
+    #[inline]
+    pub fn use_avx2(&self) -> bool {
+        self.avx2 && self.fma && !self.forced_scalar
+    }
+
+    /// Whether the NEON vector path runs.
+    #[inline]
+    pub fn use_neon(&self) -> bool {
+        self.neon && !self.forced_scalar
+    }
+
+    /// Human-readable ISA path label (exported via the `stats` op's gauges
+    /// and the serve startup log).
+    pub fn isa_label(&self) -> &'static str {
+        if self.forced_scalar {
+            "scalar (forced)"
+        } else if self.use_avx2() {
+            "avx2+fma"
+        } else if self.use_neon() {
+            "neon"
+        } else {
+            "scalar"
+        }
+    }
+}
+
+// --- inner kernels: one per ISA path, bit-identical to each other ---------
+
+/// Scalar mirror of the vector axpy: one fused multiply-add per element.
+/// Elements are independent, so this matches the AVX2/NEON paths bitwise.
+fn axpy_row_scalar(c: &mut [f32], alpha: f32, b: &[f32]) {
+    debug_assert_eq!(c.len(), b.len());
+    for (cj, &bj) in c.iter_mut().zip(b) {
+        *cj = alpha.mul_add(bj, *cj);
+    }
+}
+
+/// `c += alpha · b` with 8-lane AVX2 FMA and a fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available on the running CPU.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_row_avx2(c: &mut [f32], alpha: f32, b: &[f32]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(c.len(), b.len());
+    let n = c.len();
+    let va = _mm256_set1_ps(alpha);
+    let mut j = 0;
+    while j + LANES <= n {
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        let vc = _mm256_loadu_ps(c.as_ptr().add(j));
+        _mm256_storeu_ps(c.as_mut_ptr().add(j), _mm256_fmadd_ps(va, vb, vc));
+        j += LANES;
+    }
+    axpy_row_scalar(&mut c[j..], alpha, &b[j..]);
+}
+
+/// `c += alpha · b` with paired 4-lane NEON FMA and a fused scalar tail.
+///
+/// # Safety
+/// Caller must ensure NEON is available on the running CPU.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_row_neon(c: &mut [f32], alpha: f32, b: &[f32]) {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(c.len(), b.len());
+    let n = c.len();
+    let va = vdupq_n_f32(alpha);
+    let mut j = 0;
+    while j + LANES <= n {
+        let b0 = vld1q_f32(b.as_ptr().add(j));
+        let b1 = vld1q_f32(b.as_ptr().add(j + 4));
+        let c0 = vld1q_f32(c.as_ptr().add(j));
+        let c1 = vld1q_f32(c.as_ptr().add(j + 4));
+        vst1q_f32(c.as_mut_ptr().add(j), vfmaq_f32(c0, va, b0));
+        vst1q_f32(c.as_mut_ptr().add(j + 4), vfmaq_f32(c1, va, b1));
+        j += LANES;
+    }
+    axpy_row_scalar(&mut c[j..], alpha, &b[j..]);
+}
+
+/// `c += alpha · b` over contiguous slices — the `dense_simd` inner kernel.
+/// Every ISA path computes the same bits (one fused op per element).
+#[inline]
+pub fn axpy_row_simd(caps: SimdCaps, c: &mut [f32], alpha: f32, b: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if caps.use_avx2() {
+        // SAFETY: use_avx2() gates on runtime AVX2+FMA detection.
+        unsafe { axpy_row_avx2(c, alpha, b) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if caps.use_neon() {
+        // SAFETY: use_neon() gates on runtime NEON detection.
+        unsafe { axpy_row_neon(c, alpha, b) };
+        return;
+    }
+    let _ = caps;
+    axpy_row_scalar(c, alpha, b);
+}
+
+/// Fixed-order reduction of the 8 accumulator lanes — identical tree on
+/// every ISA path, so the lane sum's bits never depend on the hardware.
+#[inline]
+fn reduce_lanes(v: [f32; LANES]) -> f32 {
+    ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+}
+
+/// Fused scalar tail shared by every dot path: folds the remainder into the
+/// lane sum in element order.
+#[inline]
+fn dot_tail(mut s: f32, x: &[f32], y: &[f32]) -> f32 {
+    for (&xv, &yv) in x.iter().zip(y) {
+        s = xv.mul_add(yv, s);
+    }
+    s
+}
+
+/// Scalar mirror of the vector dot: two 8-slot accumulator banks updated
+/// with fused ops in the exact lane layout the AVX2/NEON paths use.
+fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc0 = [0.0f32; LANES];
+    let mut acc1 = [0.0f32; LANES];
+    let blocks = x.len() / DOT_STEP;
+    let split = blocks * DOT_STEP;
+    for (xc, yc) in x[..split].chunks_exact(DOT_STEP).zip(y[..split].chunks_exact(DOT_STEP)) {
+        for (l, (a0, a1)) in acc0.iter_mut().zip(acc1.iter_mut()).enumerate() {
+            *a0 = xc[l].mul_add(yc[l], *a0);
+            *a1 = xc[LANES + l].mul_add(yc[LANES + l], *a1);
+        }
+    }
+    let mut v = [0.0f32; LANES];
+    for (slot, (a0, a1)) in v.iter_mut().zip(acc0.iter().zip(&acc1)) {
+        *slot = a0 + a1;
+    }
+    dot_tail(reduce_lanes(v), &x[split..], &y[split..])
+}
+
+/// Contiguous dot product with two 8-lane AVX2 FMA accumulators.
+///
+/// # Safety
+/// Caller must ensure AVX2 and FMA are available on the running CPU.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let blocks = n / DOT_STEP;
+    let split = blocks * DOT_STEP;
+    let mut i = 0;
+    while i < split {
+        let x0 = _mm256_loadu_ps(x.as_ptr().add(i));
+        let y0 = _mm256_loadu_ps(y.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(x0, y0, acc0);
+        let x1 = _mm256_loadu_ps(x.as_ptr().add(i + LANES));
+        let y1 = _mm256_loadu_ps(y.as_ptr().add(i + LANES));
+        acc1 = _mm256_fmadd_ps(x1, y1, acc1);
+        i += DOT_STEP;
+    }
+    let mut v = [0.0f32; LANES];
+    _mm256_storeu_ps(v.as_mut_ptr(), _mm256_add_ps(acc0, acc1));
+    dot_tail(reduce_lanes(v), &x[split..], &y[split..])
+}
+
+/// Contiguous dot product with two (4+4)-lane NEON FMA accumulator pairs —
+/// same 16-element step, lane layout and reduction tree as the AVX2 path.
+///
+/// # Safety
+/// Caller must ensure NEON is available on the running CPU.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(x: &[f32], y: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    // acc0 covers lanes 0..8 (as two q-registers), acc1 covers lanes 8..16.
+    let mut a0lo = vdupq_n_f32(0.0);
+    let mut a0hi = vdupq_n_f32(0.0);
+    let mut a1lo = vdupq_n_f32(0.0);
+    let mut a1hi = vdupq_n_f32(0.0);
+    let blocks = n / DOT_STEP;
+    let split = blocks * DOT_STEP;
+    let mut i = 0;
+    while i < split {
+        a0lo = vfmaq_f32(a0lo, vld1q_f32(x.as_ptr().add(i)), vld1q_f32(y.as_ptr().add(i)));
+        a0hi = vfmaq_f32(a0hi, vld1q_f32(x.as_ptr().add(i + 4)), vld1q_f32(y.as_ptr().add(i + 4)));
+        a1lo = vfmaq_f32(a1lo, vld1q_f32(x.as_ptr().add(i + 8)), vld1q_f32(y.as_ptr().add(i + 8)));
+        a1hi =
+            vfmaq_f32(a1hi, vld1q_f32(x.as_ptr().add(i + 12)), vld1q_f32(y.as_ptr().add(i + 12)));
+        i += DOT_STEP;
+    }
+    let mut v = [0.0f32; LANES];
+    vst1q_f32(v.as_mut_ptr(), vaddq_f32(a0lo, a1lo));
+    vst1q_f32(v.as_mut_ptr().add(4), vaddq_f32(a0hi, a1hi));
+    dot_tail(reduce_lanes(v), &x[split..], &y[split..])
+}
+
+/// Contiguous dot product — the `masked_simd` inner kernel. Every ISA path
+/// computes the same bits (identical lane layout and reduction order).
+#[inline]
+pub fn dot_simd(caps: SimdCaps, x: &[f32], y: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if caps.use_avx2() {
+        // SAFETY: use_avx2() gates on runtime AVX2+FMA detection.
+        return unsafe { dot_avx2(x, y) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if caps.use_neon() {
+        // SAFETY: use_neon() gates on runtime NEON detection.
+        return unsafe { dot_neon(x, y) };
+    }
+    let _ = caps;
+    dot_scalar(x, y)
+}
+
+// --- the dense_simd GEMM ---------------------------------------------------
+
+/// Compute one row panel of `C = A · B` into `band` with the vectorized
+/// axpy — the same KC/NC blocking and zero-skip as
+/// [`super::gemm::matmul_into`]'s panel, with each row update fused.
+fn simd_row_panel(caps: SimdCaps, a: &Mat, b: &Mat, row0: usize, band: &mut [f32]) {
+    let k = a.cols();
+    let n = b.cols();
+    if n == 0 {
+        return;
+    }
+    let rows = band.len() / n;
+    band.fill(0.0);
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nc = NC.min(n - j0);
+            for i in 0..rows {
+                let arow = &a.row(row0 + i)[p0..p0 + kc];
+                let crow = &mut band[i * n + j0..i * n + j0 + nc];
+                for (pp, &aip) in arow.iter().enumerate() {
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(p0 + pp)[j0..j0 + nc];
+                    axpy_row_simd(caps, crow, aip, brow);
+                }
+            }
+            j0 += nc;
+        }
+        p0 += kc;
+    }
+}
+
+/// `C = A · B` with the vectorized axpy GEMM (serial). Differs from the
+/// portable [`super::gemm::matmul_into`] only by fusing each multiply-add —
+/// the tolerance-tier delta; every structural choice (loop order, blocking,
+/// zero-skip) is mirrored.
+pub fn matmul_into_simd(caps: SimdCaps, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
+    simd_row_panel(caps, a, b, 0, c.as_mut_slice());
+}
+
+/// [`matmul_into_simd`] on an execution target: MC-quantized row panels, one
+/// pool job per panel — the same sharding as the portable parallel kernel.
+/// Bit-identical to the serial SIMD kernel for any thread count or lease
+/// width (axpy elements are independent; each accumulates in serial K order).
+pub fn matmul_into_simd_par<P: Parallelism>(
+    caps: SimdCaps,
+    a: &Mat,
+    b: &Mat,
+    c: &mut Mat,
+    par: &P,
+) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(c.shape(), (a.rows(), b.cols()), "output shape mismatch");
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let width = par.width();
+    if width == 1 || m < 2 || n == 0 || k == 0 {
+        simd_row_panel(caps, a, b, 0, c.as_mut_slice());
+        return;
+    }
+    let quantum = if m >= width * MC { MC } else { (MC / 8).max(1) };
+    let rows_per = chunk_rows(m, width, quantum);
+    par_row_chunks(par, c, rows_per, |row0, band| {
+        simd_row_panel(caps, a, b, row0, band);
+    });
+}
+
+/// [`matmul_into_simd_par`] through an execution context: chunked by the
+/// ctx's lease width — the registry kernel's entry point.
+pub fn matmul_into_simd_ctx(caps: SimdCaps, a: &Mat, b: &Mat, c: &mut Mat, ctx: &mut ExecCtx<'_>) {
+    matmul_into_simd_par(caps, a, b, c, ctx.lease());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{dot, matmul_into, matmul_naive};
+    use crate::parallel::ThreadPool;
+    use crate::util::proptest::{arb_buf, property};
+    use crate::util::ulp::within_tolerance;
+    use crate::util::Pcg32;
+
+    /// The probe never reports vector paths the architecture can't have,
+    /// and the forced-scalar constructor pins the scalar label.
+    #[test]
+    fn caps_probe_is_arch_consistent() {
+        let caps = SimdCaps::get();
+        assert_eq!(caps, SimdCaps::get(), "cached probe is stable");
+        #[cfg(target_arch = "x86_64")]
+        assert!(!caps.neon);
+        #[cfg(target_arch = "aarch64")]
+        assert!(!caps.avx2 && !caps.fma);
+        let forced = SimdCaps::scalar();
+        assert!(!forced.use_avx2() && !forced.use_neon());
+        assert_eq!(forced.isa_label(), "scalar (forced)");
+        assert!(["avx2+fma", "neon", "scalar", "scalar (forced)"].contains(&caps.isa_label()));
+    }
+
+    /// The cross-ISA identity: on hardware with a vector path, the vector
+    /// and forced-scalar paths must agree bit-for-bit — for the axpy, the
+    /// dot, and whole GEMMs. (On scalar-only hardware both sides take the
+    /// same path and the test is a tautology, which is fine: CI's
+    /// `CONDCOMP_FORCE_SCALAR=1` arm covers the other leg.)
+    #[test]
+    fn vector_and_scalar_paths_are_bit_identical() {
+        let native = SimdCaps::get();
+        let scalar = SimdCaps::scalar();
+        property("simd native path == forced-scalar path", 32, |rng| {
+            let n = rng.index(70) + 1;
+            let alpha = rng.uniform_in(-2.0, 2.0);
+            let b = arb_buf(rng, n);
+            let base = arb_buf(rng, n);
+            let mut c_native = base.clone();
+            let mut c_scalar = base;
+            axpy_row_simd(native, &mut c_native, alpha, &b);
+            axpy_row_simd(scalar, &mut c_scalar, alpha, &b);
+            assert_eq!(bits(&c_native), bits(&c_scalar), "axpy n={n}");
+
+            let x = arb_buf(rng, n);
+            let y = arb_buf(rng, n);
+            assert_eq!(
+                dot_simd(native, &x, &y).to_bits(),
+                dot_simd(scalar, &x, &y).to_bits(),
+                "dot n={n}"
+            );
+        });
+        let mut rng = Pcg32::seeded(0x51D);
+        for &(m, k, n) in &[(5usize, 33usize, 17usize), (64, 256, 128), (65, 257, 129)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let mut via_native = Mat::full(m, n, f32::NAN);
+            let mut via_scalar = Mat::full(m, n, f32::NAN);
+            matmul_into_simd(native, &a, &b, &mut via_native);
+            matmul_into_simd(scalar, &a, &b, &mut via_scalar);
+            assert_eq!(bits(via_native.as_slice()), bits(via_scalar.as_slice()), "({m},{k},{n})");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// ULP bound the SIMD kernels must satisfy against the portable serial
+    /// oracles (the registry declares the same bound for their tiers).
+    const TIER_ULPS: u32 = 4096;
+
+    #[test]
+    fn simd_dot_matches_portable_dot_within_tolerance() {
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            property("dot_simd ≈ dot", 48, |rng| {
+                let n = rng.index(300) + 1;
+                let x = arb_buf(rng, n);
+                let y = arb_buf(rng, n);
+                let got = dot_simd(caps, &x, &y);
+                let want = dot(&x, &y);
+                assert!(
+                    within_tolerance(got, want, TIER_ULPS),
+                    "n={n} got={got} want={want}"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn simd_gemm_matches_oracles_within_tolerance() {
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            property("matmul_into_simd ≈ matmul_into", 16, |rng| {
+                let m = rng.index(40) + 1;
+                let k = rng.index(120) + 1;
+                let n = rng.index(40) + 1;
+                let a = Mat::randn(m, k, 1.0, rng);
+                let b = Mat::randn(k, n, 1.0, rng);
+                let mut got = Mat::full(m, n, f32::NAN);
+                matmul_into_simd(caps, &a, &b, &mut got);
+                let mut oracle = Mat::zeros(m, n);
+                matmul_into(&a, &b, &mut oracle);
+                let naive = matmul_naive(&a, &b);
+                for (j, (&g, (&o, &nv))) in got
+                    .as_slice()
+                    .iter()
+                    .zip(oracle.as_slice().iter().zip(naive.as_slice()))
+                    .enumerate()
+                {
+                    assert!(
+                        within_tolerance(g, o, TIER_ULPS),
+                        "vs blocked oracle: ({m},{k},{n})[{j}] got={g} want={o}"
+                    );
+                    assert!(
+                        within_tolerance(g, nv, TIER_ULPS),
+                        "vs naive: ({m},{k},{n})[{j}] got={g} want={nv}"
+                    );
+                }
+            });
+        }
+    }
+
+    /// The SIMD GEMM's own determinism contract: parallel/lease/ctx runs are
+    /// bit-identical to the serial SIMD kernel (elements are independent, so
+    /// sharding cannot move a single bit) — under both ISA paths.
+    #[test]
+    fn simd_parallel_is_bit_identical_to_simd_serial() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(0x51AD);
+        let shapes = [(1usize, 1usize, 1usize), (64, 256, 128), (65, 257, 129), (200, 17, 3)];
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            for &(m, k, n) in &shapes {
+                let a = Mat::randn(m, k, 1.0, &mut rng);
+                let b = Mat::randn(k, n, 1.0, &mut rng);
+                let mut serial = Mat::full(m, n, f32::NAN);
+                matmul_into_simd(caps, &a, &b, &mut serial);
+                for threads in [1usize, 2, 7] {
+                    let pool = ThreadPool::new(threads);
+                    let mut par = Mat::full(m, n, f32::NAN);
+                    matmul_into_simd_par(caps, &a, &b, &mut par, &pool);
+                    assert_eq!(
+                        bits(par.as_slice()),
+                        bits(serial.as_slice()),
+                        "threads={threads} shape=({m},{k},{n})"
+                    );
+                    for grant in [1usize, threads] {
+                        let mut ctx = ExecCtx::over(pool.lease(grant));
+                        let mut via_ctx = Mat::full(m, n, f32::NAN);
+                        matmul_into_simd_ctx(caps, &a, &b, &mut via_ctx, &mut ctx);
+                        assert_eq!(
+                            bits(via_ctx.as_slice()),
+                            bits(serial.as_slice()),
+                            "ctx lease {grant} shape=({m},{k},{n})"
+                        );
+                    }
+                    assert_eq!(pool.leased(), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_simd_handles_tail_only_and_empty_inputs() {
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            assert_eq!(dot_simd(caps, &[], &[]), 0.0);
+            // Below one DOT_STEP the main loop never runs: pure tail.
+            let x: Vec<f32> = (1..=15).map(|i| i as f32).collect();
+            let y = vec![2.0f32; 15];
+            assert_eq!(dot_simd(caps, &x, &y), 240.0);
+        }
+    }
+}

@@ -31,12 +31,16 @@
 //!   datagen     dump a synthetic corpus to .npy (debugging/external use)
 //!
 //! Every subcommand accepts `--threads N` to size the shared compute pool
-//! (0 = auto). Each parallel kernel is bit-identical to its serial oracle,
-//! so for a fixed dispatch policy the knob changes wall-clock only, never
-//! results. The one caveat is `serve`: its startup *calibration* is a
-//! timing measurement, so across runs the dispatch policy may pick the
-//! other (numerically equivalent, last-bit-different) kernel near the
-//! threshold density.
+//! (0 = auto). Each parallel kernel matches its serial oracle within its
+//! declared equivalence tier — bit-exact for the scalar kernels, a bounded
+//! ULP tolerance for the `*_simd` kernels — and is individually
+//! deterministic, so for a fixed dispatch policy the knob changes
+//! wall-clock only, never results. (`CONDCOMP_FORCE_SCALAR=1` pins the
+//! SIMD kernels to their scalar mirrors, which is bit-identical to the
+//! vector path by construction.) The one caveat is `serve`: its startup
+//! *calibration* is a timing measurement, so across runs the dispatch
+//! policy may pick a different (tier-equivalent) kernel near the threshold
+//! density.
 
 use condcomp::autotune::{Autotuner, MachineProfile};
 use condcomp::cli::{Command, OptSpec, Parsed};
@@ -260,7 +264,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         ))
         .opt(OptSpec::value(
             "kernels",
-            "kernel allow-list, comma-separated (dense,dense_packed,masked; default: all registered)",
+            "kernel allow-list, comma-separated (dense,dense_packed,dense_simd,masked,masked_simd; default: all registered)",
         ))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;

@@ -8,6 +8,7 @@ pub mod rng;
 pub mod stats;
 pub mod timer;
 pub mod proptest;
+pub mod ulp;
 
 pub use rng::Pcg32;
 pub use stats::Summary;

@@ -1,0 +1,115 @@
+//! ULP (units-in-the-last-place) distance for `f32` — the comparator behind
+//! the kernel registry's `Tolerance(..)` equivalence tier.
+//!
+//! The trick is the standard monotone reindexing of IEEE-754 bit patterns:
+//! mapped through [`ulp_index`], the finite floats (plus ±∞) form a single
+//! ascending integer sequence in numeric order, so the ULP distance between
+//! two floats is just the difference of their indices. Both zeros map to
+//! index 0, making `-0.0` and `+0.0` zero ULPs apart.
+
+/// Map `x` onto the monotone integer line: adjacent representable floats
+/// have adjacent indices, ordering matches numeric ordering, and ±0.0 both
+/// map to 0. (NaNs land beyond the ±∞ indices; callers reject them first.)
+pub fn ulp_index(x: f32) -> i64 {
+    let i = x.to_bits() as i32;
+    if i >= 0 {
+        i64::from(i)
+    } else {
+        // Negative floats have sign-bit-set patterns that *increase* as the
+        // value decreases; flip them below zero so ordering is restored.
+        i64::from(i32::MIN) - i64::from(i)
+    }
+}
+
+/// ULP distance between `a` and `b`. Equal values (including `+0.0` vs
+/// `-0.0`, and infinities of the same sign) are 0 apart; any NaN on either
+/// side yields `u64::MAX` so it can never satisfy a tolerance.
+pub fn ulp_diff(a: f32, b: f32) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    (ulp_index(a) - ulp_index(b)).unsigned_abs()
+}
+
+/// Whether `a` and `b` are within `ulps` ULPs of each other.
+pub fn ulp_within(a: f32, b: f32, ulps: u32) -> bool {
+    ulp_diff(a, b) <= u64::from(ulps)
+}
+
+/// Tier check used for `Tolerance(ulps)` kernels: a relative ULP bound,
+/// with an absolute floor of `ulps · ε` near zero. The floor matters at
+/// ReLU boundaries — a fused and an unfused accumulation can land on
+/// opposite sides of 0.0, where the values are ULP-far apart but both tiny.
+pub fn within_tolerance(a: f32, b: f32, ulps: u32) -> bool {
+    ulp_within(a, b, ulps) || (a - b).abs() <= ulps as f32 * f32::EPSILON
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{arb_buf, property};
+
+    #[test]
+    fn identical_values_are_zero_ulps_apart() {
+        property("ulp self-distance is 0", 64, |rng| {
+            let x = rng.uniform_in(-1e6, 1e6);
+            assert_eq!(ulp_diff(x, x), 0);
+        });
+        assert_eq!(ulp_diff(0.0, -0.0), 0, "signed zeros compare equal");
+        assert_eq!(ulp_diff(f32::INFINITY, f32::INFINITY), 0);
+    }
+
+    #[test]
+    fn adjacent_floats_are_one_ulp_apart() {
+        property("next_up is 1 ULP away", 64, |rng| {
+            let x = rng.uniform_in(-1e4, 1e4);
+            let next = f32::from_bits(if x >= 0.0 { x.to_bits() + 1 } else { x.to_bits() - 1 });
+            assert_eq!(ulp_diff(x, next), 1, "x={x}");
+        });
+        // The famous boundary: smallest positive subnormal vs zero, and the
+        // two subnormals straddling zero.
+        assert_eq!(ulp_diff(0.0, f32::from_bits(1)), 1);
+        assert_eq!(ulp_diff(-f32::from_bits(1), f32::from_bits(1)), 2);
+    }
+
+    #[test]
+    fn diff_is_symmetric_and_monotone() {
+        property("symmetry + monotonicity", 64, |rng| {
+            let buf = arb_buf(rng, 3);
+            let (a, b) = (buf[0] * 100.0, buf[1] * 100.0);
+            assert_eq!(ulp_diff(a, b), ulp_diff(b, a));
+            // Monotone: the index ordering matches numeric ordering.
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(ulp_index(lo) <= ulp_index(hi), "lo={lo} hi={hi}");
+            // Triangle-ish: a midpoint is no farther than the endpoints.
+            let mid = lo + (hi - lo) * 0.5;
+            if mid.is_finite() {
+                assert!(ulp_diff(lo, mid) <= ulp_diff(lo, hi));
+            }
+        });
+    }
+
+    #[test]
+    fn nan_never_satisfies_a_tolerance() {
+        assert_eq!(ulp_diff(f32::NAN, f32::NAN), u64::MAX);
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u64::MAX);
+        assert!(!ulp_within(1.0, f32::NAN, u32::MAX));
+        assert!(!within_tolerance(f32::NAN, f32::NAN, u32::MAX));
+    }
+
+    #[test]
+    fn tolerance_has_an_absolute_floor_near_zero() {
+        // 1e-5 and -1e-5 are millions of ULPs apart but within the absolute
+        // floor at 4096 ULPs (4096 · ε ≈ 4.9e-4) — the ReLU-boundary case.
+        assert!(!ulp_within(1e-5, -1e-5, 4096));
+        assert!(within_tolerance(1e-5, -1e-5, 4096));
+        // Far from zero the relative bound governs: 1.0 vs 1.0+2ulp passes
+        // a 4-ULP tier, 1.0 vs 1.001 (≈ 8400 ULPs) fails it.
+        let two_up = f32::from_bits(1.0f32.to_bits() + 2);
+        assert!(within_tolerance(1.0, two_up, 4));
+        assert!(!within_tolerance(1.0, 1.001, 4));
+    }
+}
