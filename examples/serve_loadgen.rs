@@ -1,7 +1,8 @@
 //! Serving demo + load generator: starts the coordinator on an ephemeral
-//! port with a freshly trained model, then drives it with concurrent clients
-//! issuing single-example predict requests in both modes, and prints
-//! latency/throughput and the server's own metrics snapshot.
+//! port with a freshly trained model (span tracing on), then drives it with
+//! concurrent clients issuing single-example predict requests in both
+//! modes, and prints client-side latency percentiles, the server's own
+//! p50/p99, and the top span costs per shard from the tracing plane.
 //!
 //! Run: `cargo run --release --example serve_loadgen`
 
@@ -38,6 +39,7 @@ fn main() {
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_wait: std::time::Duration::from_millis(2),
+            trace: true, // span tracing + flight recorder for the demo
             ..ServerConfig::default() // shards: 0 → derived from the thread budget
         },
     )
@@ -100,6 +102,45 @@ fn main() {
             if name.starts_with("layer") && name.contains("_kernel_") {
                 println!("  {name}: {:.0}", v.as_f64().unwrap_or(0.0));
             }
+        }
+    }
+    // Server-side latency distribution: the batcher's own predict series,
+    // bucketed histograms with real percentiles (not just a mean).
+    if let Some(lat) = payload.get("latency") {
+        for series in ["predict", "predict_control", "predict_ae"] {
+            if let Some(s) = lat.get(series) {
+                let g = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                println!(
+                    "server {series:<16} count {:>5.0}  p50 {:>7.0}us  p99 {:>7.0}us  max {:>7.0}us",
+                    g("count"),
+                    g("p50_us"),
+                    g("p99_us"),
+                    g("max_us")
+                );
+            }
+        }
+    }
+    // Span breakdown: tracing records one `shard<i>_span_<label>` series
+    // per pipeline stage; rank each shard's spans by total time spent
+    // (count × mean) and show the top 3.
+    if let Some(lat) = payload.get("latency").and_then(|l| l.as_obj()) {
+        for shard in 0..server.num_shards() {
+            let prefix = format!("shard{shard}_span_");
+            let mut spans: Vec<(&str, f64, f64)> = lat
+                .iter()
+                .filter(|(name, _)| name.starts_with(&prefix))
+                .map(|(name, v)| {
+                    let count = v.get("count").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                    let mean = v.get("mean_us").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                    (&name[prefix.len()..], count, count * mean)
+                })
+                .collect();
+            spans.sort_by(|a, b| b.2.total_cmp(&a.2));
+            print!("shard {shard} top spans:");
+            for (label, count, total_us) in spans.iter().take(3) {
+                print!("  {label} {:.0}us×{count:.0}", total_us / count.max(1.0));
+            }
+            println!();
         }
     }
     if let Some(gauges) = payload.get("gauges") {

@@ -145,10 +145,19 @@ impl CostModel for MeasuredCost<'_> {
         let ops = LayerOperands::new(&w, &layer);
         let mut out = Mat::zeros(n, h);
         let (budget, reps) = (self.point_budget_s, self.min_reps);
+        // One span per measurement point, tagged with the kernel id — so a
+        // traced calibration shows up in the same observability plane as
+        // serving (`span_autotune_measure_<id>` series).
+        let sp = self
+            .ctx
+            .metrics()
+            .span_with("autotune_measure", Some(kernel.id().as_str()));
         let ctx = &mut self.ctx;
-        best_of(budget, reps, || {
+        let best = best_of(budget, reps, || {
             let _ = kernel.run(&ops, &a, &mask, &mut *ctx, &mut out);
-        })
+        });
+        drop(sp);
+        best
     }
 }
 

@@ -155,6 +155,38 @@ impl LeaseVsPrivateRow {
     }
 }
 
+/// Serve throughput with span tracing off vs on (same server shape, same
+/// request mix): the `trace_overhead` column. The acceptance bar is that
+/// the *off* arm stays within noise of an untraced build — tracing is a
+/// relaxed atomic load per span site when disabled — and the column also
+/// documents what turning tracing on actually costs.
+#[derive(Clone, Debug)]
+pub struct TraceOverheadRow {
+    pub shards: usize,
+    pub clients: usize,
+    /// Requests/s with tracing disabled (the production default).
+    pub rps_off: f64,
+    /// Requests/s with tracing enabled (spans + flight recorder active).
+    pub rps_on: f64,
+}
+
+impl TraceOverheadRow {
+    /// Throughput ratio traced / untraced (1.0 = tracing is free).
+    pub fn on_over_off(&self) -> f64 {
+        self.rps_on / self.rps_off.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("rps_off", Json::Num(self.rps_off)),
+            ("rps_on", Json::Num(self.rps_on)),
+            ("on_over_off", Json::Num(self.on_over_off())),
+        ])
+    }
+}
+
 /// The complete sweep result.
 #[derive(Clone, Debug)]
 pub struct ParallelSweep {
@@ -186,6 +218,8 @@ pub struct ParallelSweep {
     pub shard_sweep: Vec<ShardRow>,
     /// Leased vs private-pool executor throughput at each shard count.
     pub lease_vs_private: Vec<LeaseVsPrivateRow>,
+    /// Serve throughput with span tracing off vs on.
+    pub trace_overhead: TraceOverheadRow,
 }
 
 /// Densities the sweep measures (the issue's α grid).
@@ -433,6 +467,24 @@ pub fn run_parallel_sweep(
         shard_sweep.push(leased);
     }
 
+    // --- tracing off vs on ----------------------------------------------
+    // Same loopback harness, one shard count, with the process-wide trace
+    // flag flipped between arms (restored afterwards so a bench run never
+    // leaves tracing on behind the operator's back).
+    let trace_shards = 2.min(threads_max.max(1));
+    let was_tracing = crate::trace::enabled();
+    crate::trace::set_enabled(false);
+    let off = measure_shard_throughput(trace_shards, 4, requests_per_client, PoolMode::Lease);
+    crate::trace::set_enabled(true);
+    let on = measure_shard_throughput(trace_shards, 4, requests_per_client, PoolMode::Lease);
+    crate::trace::set_enabled(was_tracing);
+    let trace_overhead = TraceOverheadRow {
+        shards: trace_shards,
+        clients: off.clients,
+        rps_off: off.rps,
+        rps_on: on.rps,
+    };
+
     ParallelSweep {
         dim,
         batch,
@@ -446,6 +498,7 @@ pub fn run_parallel_sweep(
         simd_sweep,
         shard_sweep,
         lease_vs_private,
+        trace_overhead,
     }
 }
 
@@ -594,6 +647,13 @@ impl ParallelSweep {
                 row.lease_over_private()
             ));
         }
+        lines.push(format!(
+            "serve trace overhead: shards={} → off {:.0} req/s vs on {:.0} req/s ({:.2}×)",
+            self.trace_overhead.shards,
+            self.trace_overhead.rps_off,
+            self.trace_overhead.rps_on,
+            self.trace_overhead.on_over_off()
+        ));
         lines
     }
 
@@ -633,6 +693,7 @@ impl ParallelSweep {
                 "serve_lease_vs_private",
                 Json::Arr(self.lease_vs_private.iter().map(|r| r.to_json()).collect()),
             ),
+            ("trace_overhead", self.trace_overhead.to_json()),
             (
                 "rows",
                 Json::Arr(self.rows.iter().map(|r| r.to_json()).collect()),
@@ -649,6 +710,10 @@ mod tests {
     /// sweep's *structure* (rows, JSON schema, threshold sanity), not perf.
     #[test]
     fn sweep_produces_complete_machine_readable_output() {
+        // The sweep flips the process-wide trace flag for its overhead
+        // column; serialize with other tests that touch the same flag.
+        let _guard = crate::trace::test_lock();
+        crate::trace::set_enabled(false);
         let cfg = BenchConfig { warmup_s: 0.0, measure_s: 0.0, min_iters: 1, max_iters: 1 };
         let layer_sizes = [24usize, 20, 16, 6];
         let sweep = run_parallel_sweep(&cfg, 32, 8, 2, &layer_sizes, None);
@@ -703,6 +768,12 @@ mod tests {
             assert!(row.rps_private > 0.0 && row.rps_private.is_finite());
             assert!(row.lease_over_private() > 0.0);
         }
+        // Trace-overhead column: both arms measured, flag restored.
+        assert_eq!(sweep.trace_overhead.shards, 2);
+        assert!(sweep.trace_overhead.rps_off > 0.0 && sweep.trace_overhead.rps_off.is_finite());
+        assert!(sweep.trace_overhead.rps_on > 0.0 && sweep.trace_overhead.rps_on.is_finite());
+        assert!(sweep.trace_overhead.on_over_off() > 0.0);
+        assert!(!crate::trace::enabled(), "sweep must restore the trace flag");
 
         let json = sweep.to_json();
         let parsed = Json::parse(&json.to_string()).expect("self-parse");
@@ -750,6 +821,10 @@ mod tests {
         assert!(lvp_rows
             .iter()
             .all(|r| r.get("rps_lease").is_some() && r.get("rps_private").is_some()));
+        let trace_row = parsed.get("trace_overhead").expect("trace_overhead");
+        assert!(trace_row.get("rps_off").and_then(|v| v.as_f64()).is_some());
+        assert!(trace_row.get("rps_on").and_then(|v| v.as_f64()).is_some());
+        assert!(trace_row.get("on_over_off").and_then(|v| v.as_f64()).is_some());
         let per_layer = parsed
             .get("per_layer_thresholds")
             .and_then(|v| v.as_arr())

@@ -74,6 +74,23 @@
 //! Every routing decision is observable in production: the `stats` op
 //! exports one `layer<i>_kernel_<id>_batches` counter per hidden layer per
 //! kernel, and `serve` logs the per-layer kernel-choice table at startup.
+//!
+//! # Observability (`--trace` / `condcomp trace`)
+//!
+//! `serve --trace` (config key `server.trace`, env `CONDCOMP_TRACE=1`)
+//! enables span tracing through the request path and a fixed-size flight
+//! recorder of the last N executed batches (`--trace-ring` /
+//! `server.trace_ring`, default 64). `condcomp trace --addr host:port`
+//! fetches the ring from a running server as JSON:
+//!
+//! ```text
+//! condcomp serve --trace --trace-ring 128 &
+//! condcomp trace --addr 127.0.0.1:7878 > trace-dump.json
+//! ```
+//!
+//! The `stats` op additionally exports p50/p95/p99 for every latency
+//! series and per-layer `alpha_predicted` / `alpha_achieved` /
+//! `sign_agreement` gauges; see the README "Observability" section.
 
 use std::collections::BTreeMap;
 

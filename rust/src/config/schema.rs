@@ -137,11 +137,19 @@ pub struct ServerSettings {
     /// the config layer stays independent of the coordinator; `serve`
     /// validates it via `RouterKind::parse`.
     pub router: String,
+    /// Span tracing + flight recorder (`server.trace` / CLI `--trace`):
+    /// when true the server enables process-wide span tracing at startup.
+    /// Default false; the `CONDCOMP_TRACE` env var can also turn it on.
+    pub trace: bool,
+    /// Flight-recorder ring capacity in batch records (`server.trace_ring` /
+    /// CLI `--trace-ring`). The ring always exists (the `trace` protocol op
+    /// dumps it); only recording is gated on tracing being enabled.
+    pub trace_ring: usize,
 }
 
 impl Default for ServerSettings {
     fn default() -> ServerSettings {
-        ServerSettings { shards: 0, router: "round-robin".into() }
+        ServerSettings { shards: 0, router: "round-robin".into(), trace: false, trace_ring: 64 }
     }
 }
 
@@ -440,6 +448,12 @@ impl ExperimentProfile {
         if let Some(s) = doc.get_str("server.router") {
             self.server.router = s.to_string();
         }
+        if let Some(b) = doc.get_bool("server.trace") {
+            self.server.trace = b;
+        }
+        if let Some(x) = doc.get_usize("server.trace_ring") {
+            self.server.trace_ring = x;
+        }
         if let Some(s) = doc.get_str("dispatch.kernels") {
             self.dispatch.kernels = s
                 .split(',')
@@ -543,10 +557,17 @@ mod tests {
         assert_eq!(p.server, ServerSettings::default());
         assert_eq!(p.server.shards, 0, "0 = derive from the thread budget");
         assert_eq!(p.server.router, "round-robin");
-        let doc = TomlDoc::parse("[server]\nshards = 4\nrouter = \"least-depth\"").unwrap();
+        assert!(!p.server.trace, "tracing is opt-in");
+        assert_eq!(p.server.trace_ring, 64);
+        let doc = TomlDoc::parse(
+            "[server]\nshards = 4\nrouter = \"least-depth\"\ntrace = true\ntrace_ring = 128",
+        )
+        .unwrap();
         p.apply_overrides(&doc);
         assert_eq!(p.server.shards, 4);
         assert_eq!(p.server.router, "least-depth");
+        assert!(p.server.trace);
+        assert_eq!(p.server.trace_ring, 128);
     }
 
     #[test]

@@ -313,7 +313,9 @@ impl NativeBackend {
             // The mask buffer recycles through the arena like every other
             // per-batch activation (nothing allocated after warmup).
             let mut mask = Mat::from_vec(n, h, ctx.take_buf(n * h));
+            let sp = ctx.metrics().span("estimator");
             est.layers[l].mask_into_ctx(&a, &mut mask, ctx);
+            drop(sp);
             let alpha = mask.density() as f64;
             let mut out = Mat::from_vec(n, h, ctx.take_buf(n * h));
             // Per-layer cost table: each layer's shape has its own fitted
@@ -323,9 +325,20 @@ impl NativeBackend {
                 .get(kid)
                 .expect("decide() only returns registered kernels");
             let ops = LayerOperands::new(&self.net.weights[l], layer);
+            let sp = ctx.metrics().span_with("kernel", Some(kid.as_str()));
             let computed = kernel.run(&ops, &a, &mask, ctx, &mut out);
+            drop(sp);
+            // Kernel outputs are post-ReLU masked activations, so the output
+            // density is the *achieved* α: units the estimator predicted
+            // positive that really were. predicted/achieved/agreement are
+            // the paper's robustness observables (§3.3), exported per layer.
+            let achieved = out.density() as f64;
+            let agreement = if alpha > 0.0 { (achieved / alpha).min(1.0) } else { 1.0 };
             ctx.metrics().incr(&format!("layer{l}_kernel_{kid}_batches"));
             ctx.metrics().set_gauge(&format!("layer{l}_alpha"), alpha);
+            ctx.metrics().set_gauge(&format!("layer{l}_alpha_predicted"), alpha);
+            ctx.metrics().set_gauge(&format!("layer{l}_alpha_achieved"), achieved);
+            ctx.metrics().set_gauge(&format!("layer{l}_sign_agreement"), agreement);
             flops.push(crate::condcomp::LayerFlops::from_counts(
                 n,
                 layer.in_dim(),
@@ -418,6 +431,13 @@ impl Backend for NativeBackend {
             }
             Mode::ConditionalAe => {
                 let (logits, flops) = self.forward_cond(x, ctx);
+                let dense = flops.total_dense() as f64;
+                if dense > 0.0 {
+                    // Fraction of the dense FLOP budget the conditional path
+                    // skipped (estimator overhead already charged against it).
+                    let skipped = (1.0 - flops.total_augmented() / dense).max(0.0);
+                    ctx.metrics().set_gauge("flops_skipped_frac", skipped);
+                }
                 Ok((logits, Some(flops.speedup())))
             }
         }

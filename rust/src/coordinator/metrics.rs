@@ -1,26 +1,84 @@
-//! Serving metrics: counters, latency distributions, sparsity/FLOP gauges.
+//! Serving metrics: counters, log-bucketed latency histograms, and
+//! sparsity/FLOP gauges, striped per shard.
+//!
+//! Layout: one **global sink** (connection counters, CLI one-shots, pool
+//! gauges) plus one **[`ShardSink`] per shard executor**. Executors write
+//! their per-batch metrics to their own sink under *plain* names —
+//! uncontended lock, no key formatting on the hot path — and
+//! [`MetricsRegistry::snapshot`] materializes both views at read time: the
+//! merged fleet total under the plain key and the per-shard breakdown under
+//! the canonical `shard<i>_` key ([`MetricsRegistry::shard_key`]). Readers
+//! (tests, dashboards) keep addressing either key; accessors parse the
+//! prefix and route to the right sink.
+//!
+//! Latency series are [`LogHistogram`]s (8 buckets per octave, ≈9% relative
+//! error), so the snapshot exports tail percentiles (`p50_us`/`p95_us`/
+//! `p99_us`) alongside the exact mean/std/min/max — the queue-pressure and
+//! tail signals the ROADMAP's admission-control work reads.
 
 use crate::io::json::Json;
-use crate::util::stats::Welford;
+use crate::util::stats::LogHistogram;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-/// Thread-safe metrics registry shared by the server's workers.
+/// One striped store of counters/gauges/histograms. Writes avoid the
+/// alloc-per-call trap: the key is only cloned the first time a series
+/// appears in this sink.
 #[derive(Default)]
-pub struct MetricsRegistry {
-    inner: Mutex<Inner>,
-}
-
-#[derive(Default)]
-struct Inner {
+struct Sink {
     counters: BTreeMap<String, u64>,
-    latencies: BTreeMap<String, Welford>,
+    latencies: BTreeMap<String, LogHistogram>,
     gauges: BTreeMap<String, f64>,
 }
 
-impl MetricsRegistry {
-    pub fn new() -> MetricsRegistry {
-        MetricsRegistry::default()
+impl Sink {
+    fn add(&mut self, name: &str, by: u64) {
+        match self.counters.get_mut(name) {
+            Some(c) => *c += by,
+            None => {
+                self.counters.insert(name.to_string(), by);
+            }
+        }
+    }
+
+    fn observe(&mut self, name: &str, seconds: f64) {
+        match self.latencies.get_mut(name) {
+            Some(h) => h.push(seconds),
+            None => {
+                let mut h = LogHistogram::new();
+                h.push(seconds);
+                self.latencies.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    fn set_gauge(&mut self, name: &str, value: f64) {
+        match self.gauges.get_mut(name) {
+            Some(g) => *g = value,
+            None => {
+                self.gauges.insert(name.to_string(), value);
+            }
+        }
+    }
+}
+
+/// A shard executor's private metrics stripe. Handed out once at executor
+/// spawn ([`MetricsRegistry::shard_sink`]) and cached in the executor's
+/// `MetricsScope`, so hot-path writes take an uncontended per-shard lock
+/// and never format a `shard<i>_` key — prefixing happens at snapshot.
+pub struct ShardSink {
+    shard: usize,
+    inner: Mutex<Sink>,
+}
+
+impl ShardSink {
+    fn new(shard: usize) -> ShardSink {
+        ShardSink { shard, inner: Mutex::new(Sink::default()) }
+    }
+
+    /// The shard this stripe belongs to.
+    pub fn shard(&self) -> usize {
+        self.shard
     }
 
     pub fn incr(&self, name: &str) {
@@ -28,28 +86,90 @@ impl MetricsRegistry {
     }
 
     pub fn add(&self, name: &str, by: u64) {
-        let mut g = self.inner.lock().unwrap();
-        *g.counters.entry(name.to_string()).or_insert(0) += by;
+        self.inner.lock().unwrap().add(name, by);
+    }
+
+    pub fn observe(&self, name: &str, seconds: f64) {
+        self.inner.lock().unwrap().observe(name, seconds);
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.inner.lock().unwrap().set_gauge(name, value);
+    }
+}
+
+/// Thread-safe metrics registry shared by the server's workers: the global
+/// sink plus the per-shard stripes, merged on read.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    global: Mutex<Sink>,
+    shards: Mutex<Vec<Arc<ShardSink>>>,
+}
+
+/// `shard<i>_<name>` → `(i, name)`; `None` for plain/global keys. Strict on
+/// purpose: `shards_total` or `shard_` must not alias a stripe.
+fn parse_shard_key(name: &str) -> Option<(usize, &str)> {
+    let rest = name.strip_prefix("shard")?;
+    let digits_end = rest.find(|c: char| !c.is_ascii_digit())?;
+    if digits_end == 0 {
+        return None;
+    }
+    let (digits, tail) = rest.split_at(digits_end);
+    Some((digits.parse().ok()?, tail.strip_prefix('_')?))
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The stripe for `shard`, created on first request. Executors call
+    /// this once at spawn and keep the `Arc`.
+    pub fn shard_sink(&self, shard: usize) -> Arc<ShardSink> {
+        let mut shards = self.shards.lock().unwrap();
+        while shards.len() <= shard {
+            let next = shards.len();
+            shards.push(Arc::new(ShardSink::new(next)));
+        }
+        shards[shard].clone()
+    }
+
+    fn sinks(&self) -> Vec<Arc<ShardSink>> {
+        self.shards.lock().unwrap().clone()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        match parse_shard_key(name) {
+            Some((shard, plain)) => self.shard_sink(shard).add(plain, by),
+            None => self.global.lock().unwrap().add(name, by),
+        }
     }
 
     /// Record a latency observation in seconds.
     pub fn observe_latency(&self, name: &str, seconds: f64) {
-        let mut g = self.inner.lock().unwrap();
-        g.latencies
-            .entry(name.to_string())
-            .or_insert_with(Welford::new)
-            .push(seconds);
+        match parse_shard_key(name) {
+            Some((shard, plain)) => self.shard_sink(shard).observe(plain, seconds),
+            None => self.global.lock().unwrap().observe(name, seconds),
+        }
     }
 
     /// Set a point-in-time gauge (achieved α, current speedup estimate, …).
     pub fn set_gauge(&self, name: &str, value: f64) {
-        let mut g = self.inner.lock().unwrap();
-        g.gauges.insert(name.to_string(), value);
+        match parse_shard_key(name) {
+            Some((shard, plain)) => self.shard_sink(shard).set_gauge(plain, value),
+            None => self.global.lock().unwrap().set_gauge(name, value),
+        }
     }
 
     /// Canonical key for a per-shard metric (`shard3_depth`, …). One naming
     /// scheme shared by writers (shard executors) and readers (tests,
-    /// dashboards scraping the stats snapshot).
+    /// dashboards scraping the stats snapshot). Since the striped rework
+    /// this is a *read-side* scheme: writers record plain names into their
+    /// stripe and the snapshot emits the prefixed aliases.
     pub fn shard_key(shard: usize, name: &str) -> String {
         format!("shard{shard}_{name}")
     }
@@ -57,66 +177,150 @@ impl MetricsRegistry {
     /// Per-shard gauge (queue depth after each drained batch, last batch
     /// rows, …).
     pub fn set_shard_gauge(&self, shard: usize, name: &str, value: f64) {
-        self.set_gauge(&MetricsRegistry::shard_key(shard, name), value);
+        self.shard_sink(shard).set_gauge(name, value);
     }
 
     pub fn shard_gauge(&self, shard: usize, name: &str) -> Option<f64> {
-        self.gauge(&MetricsRegistry::shard_key(shard, name))
+        self.sinks().get(shard).and_then(|s| s.inner.lock().unwrap().gauges.get(name).copied())
     }
 
     /// Per-shard latency distribution (batch execution seconds).
     pub fn observe_shard_latency(&self, shard: usize, name: &str, seconds: f64) {
-        self.observe_latency(&MetricsRegistry::shard_key(shard, name), seconds);
+        self.shard_sink(shard).observe(name, seconds);
     }
 
     /// Per-shard counter (batches drained, rows executed, …).
     pub fn incr_shard(&self, shard: usize, name: &str) {
-        self.add(&MetricsRegistry::shard_key(shard, name), 1);
+        self.shard_sink(shard).incr(name);
     }
 
     pub fn shard_counter(&self, shard: usize, name: &str) -> u64 {
-        self.counter(&MetricsRegistry::shard_key(shard, name))
+        self.sinks()
+            .get(shard)
+            .and_then(|s| s.inner.lock().unwrap().counters.get(name).copied())
+            .unwrap_or(0)
     }
 
+    /// Merged counter: a plain name sums the global sink and every stripe;
+    /// a `shard<i>_` name reads that stripe alone.
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+        if let Some((shard, plain)) = parse_shard_key(name) {
+            return self.shard_counter(shard, plain);
+        }
+        let mut total = self.global.lock().unwrap().counters.get(name).copied().unwrap_or(0);
+        for sink in self.sinks() {
+            total += sink.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0);
+        }
+        total
     }
 
+    /// A plain name prefers the global sink, then the lowest shard that set
+    /// it; a `shard<i>_` name reads that stripe alone.
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.inner.lock().unwrap().gauges.get(name).copied()
+        if let Some((shard, plain)) = parse_shard_key(name) {
+            return self.shard_gauge(shard, plain);
+        }
+        if let Some(v) = self.global.lock().unwrap().gauges.get(name).copied() {
+            return Some(v);
+        }
+        self.sinks().iter().find_map(|s| s.inner.lock().unwrap().gauges.get(name).copied())
+    }
+
+    /// The merged histogram behind `name` (global + stripes for a plain
+    /// name, one stripe for a `shard<i>_` name), if any observation landed.
+    fn merged_latency(&self, name: &str) -> Option<LogHistogram> {
+        let mut merged = LogHistogram::new();
+        if let Some((shard, plain)) = parse_shard_key(name) {
+            if let Some(sink) = self.sinks().get(shard) {
+                if let Some(h) = sink.inner.lock().unwrap().latencies.get(plain) {
+                    merged.merge(h);
+                }
+            }
+        } else {
+            if let Some(h) = self.global.lock().unwrap().latencies.get(name) {
+                merged.merge(h);
+            }
+            for sink in self.sinks() {
+                if let Some(h) = sink.inner.lock().unwrap().latencies.get(name) {
+                    merged.merge(h);
+                }
+            }
+        }
+        (merged.count() > 0).then_some(merged)
     }
 
     /// Mean latency in seconds, if observed.
     pub fn mean_latency(&self, name: &str) -> Option<f64> {
-        let g = self.inner.lock().unwrap();
-        g.latencies.get(name).filter(|w| w.count() > 0).map(|w| w.mean())
+        self.merged_latency(name).map(|h| h.mean())
     }
 
-    /// Export everything as a JSON object.
+    /// Bucketed latency quantile in seconds (`q` in `[0, 1]`), if observed.
+    pub fn latency_quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.merged_latency(name).and_then(|h| h.quantile(q))
+    }
+
+    fn latency_json(h: &LogHistogram) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(h.count() as f64)),
+            ("mean_us", Json::Num(h.mean() * 1e6)),
+            ("std_us", Json::Num(h.std() * 1e6)),
+            ("min_us", Json::Num(h.min().unwrap_or(0.0) * 1e6)),
+            ("max_us", Json::Num(h.max().unwrap_or(0.0) * 1e6)),
+            ("p50_us", Json::Num(h.quantile(0.50).unwrap_or(0.0) * 1e6)),
+            ("p95_us", Json::Num(h.quantile(0.95).unwrap_or(0.0) * 1e6)),
+            ("p99_us", Json::Num(h.quantile(0.99).unwrap_or(0.0) * 1e6)),
+        ])
+    }
+
+    /// Export everything as a JSON object: plain keys carry the fleet-wide
+    /// merge (counters summed, histograms merged, global gauges winning
+    /// over stripe gauges), `shard<i>_` keys carry each stripe verbatim.
     pub fn snapshot(&self) -> Json {
-        let g = self.inner.lock().unwrap();
-        let counters =
-            Json::Obj(g.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect());
-        let gauges =
-            Json::Obj(g.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
-        let lat = Json::Obj(
-            g.latencies
-                .iter()
-                .map(|(k, w)| {
-                    (
-                        k.clone(),
-                        Json::obj(vec![
-                            ("count", Json::Num(w.count() as f64)),
-                            ("mean_us", Json::Num(w.mean() * 1e6)),
-                            ("std_us", Json::Num(w.std() * 1e6)),
-                            ("min_us", Json::Num(if w.count() > 0 { w.min() * 1e6 } else { 0.0 })),
-                            ("max_us", Json::Num(if w.count() > 0 { w.max() * 1e6 } else { 0.0 })),
-                        ]),
-                    )
-                })
-                .collect(),
-        );
-        Json::obj(vec![("counters", counters), ("gauges", gauges), ("latency", lat)])
+        let mut counters: BTreeMap<String, u64>;
+        let mut gauges: BTreeMap<String, f64>;
+        let mut latencies: BTreeMap<String, LogHistogram>;
+        {
+            let g = self.global.lock().unwrap();
+            counters = g.counters.clone();
+            gauges = g.gauges.clone();
+            latencies = g.latencies.clone();
+        }
+        for sink in self.sinks() {
+            let stripe = sink.inner.lock().unwrap();
+            for (k, &v) in &stripe.counters {
+                *counters.entry(k.clone()).or_insert(0) += v;
+                counters.insert(MetricsRegistry::shard_key(sink.shard, k), v);
+            }
+            for (k, &v) in &stripe.gauges {
+                // Global (and lower-shard) values win the plain key; the
+                // prefixed key is always this stripe's own.
+                gauges.entry(k.clone()).or_insert(v);
+                gauges.insert(MetricsRegistry::shard_key(sink.shard, k), v);
+            }
+            for (k, h) in &stripe.latencies {
+                latencies
+                    .entry(k.clone())
+                    .or_insert_with(LogHistogram::new)
+                    .merge(h);
+                latencies.insert(MetricsRegistry::shard_key(sink.shard, k), h.clone());
+            }
+        }
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(counters.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect()),
+            ),
+            ("gauges", Json::Obj(gauges.into_iter().map(|(k, v)| (k, Json::Num(v))).collect())),
+            (
+                "latency",
+                Json::Obj(
+                    latencies
+                        .iter()
+                        .map(|(k, h)| (k.clone(), MetricsRegistry::latency_json(h)))
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -141,6 +345,9 @@ mod tests {
         }
         assert!((m.mean_latency("predict").unwrap() - 0.002).abs() < 1e-9);
         assert!(m.mean_latency("none").is_none());
+        // Percentiles come from the log buckets: within one bucket (~9%).
+        let p50 = m.latency_quantile("predict", 0.5).unwrap();
+        assert!((p50 / 0.002 - 1.0).abs() < 0.10, "p50 {p50}");
     }
 
     #[test]
@@ -164,6 +371,26 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_latency_exports_percentiles() {
+        let m = MetricsRegistry::new();
+        for i in 1..=100 {
+            m.observe_latency("p", i as f64 * 1e-3);
+        }
+        let snap = m.snapshot();
+        let p = snap.get("latency").unwrap().get("p").unwrap();
+        for key in ["count", "mean_us", "std_us", "min_us", "max_us", "p50_us", "p95_us", "p99_us"]
+        {
+            assert!(p.get(key).is_some(), "latency entry missing {key}");
+        }
+        let p50 = p.get("p50_us").unwrap().as_f64().unwrap();
+        let p99 = p.get("p99_us").unwrap().as_f64().unwrap();
+        let max = p.get("max_us").unwrap().as_f64().unwrap();
+        assert!((p50 / 50_000.0 - 1.0).abs() < 0.10, "p50 {p50}");
+        assert!((p99 / 99_000.0 - 1.0).abs() < 0.10, "p99 {p99}");
+        assert!(p50 < p99 && p99 <= max, "ordering: {p50} {p99} {max}");
+    }
+
+    #[test]
     fn per_shard_metrics_share_one_key_scheme() {
         let m = MetricsRegistry::new();
         m.set_shard_gauge(0, "depth", 3.0);
@@ -180,6 +407,24 @@ mod tests {
         // Snapshot carries the per-shard keys.
         let s = m.snapshot().to_string();
         assert!(s.contains("shard2_depth") && s.contains("shard1_predict"), "{s}");
+        // Plain keys carry the merge: counters sum, gauges fall back to the
+        // lowest stripe, histograms merge.
+        assert_eq!(m.counter("batches"), 2);
+        assert_eq!(m.gauge("depth"), Some(3.0));
+        assert!(m.mean_latency("predict").is_some());
+    }
+
+    #[test]
+    fn shard_prefix_parsing_is_strict() {
+        let m = MetricsRegistry::new();
+        m.add("shards_total", 2);
+        m.add("shard_less", 1);
+        m.add("shard7_rows", 5);
+        // The first two are global names, the third lands in stripe 7.
+        assert_eq!(m.counter("shards_total"), 2);
+        assert_eq!(m.counter("shard_less"), 1);
+        assert_eq!(m.shard_counter(7, "rows"), 5);
+        assert_eq!(m.counter("rows"), 5, "plain read merges the stripe");
     }
 
     #[test]
@@ -199,5 +444,66 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(m.counter("n"), 400);
+    }
+
+    /// Satellite property: concurrent writers through per-shard stripes
+    /// must merge to exactly what one sequential sink would hold.
+    #[test]
+    fn striped_merge_equals_single_sink_reference() {
+        crate::util::proptest::property("striped_merge_matches_reference", 8, |rng| {
+            let threads = 2 + (rng.next_u32() as usize % 3); // 2..=4 stripes
+            let per = 50 + (rng.next_u32() as usize % 100); // 50..=149 obs each
+            let seed = rng.next_u32() as u64;
+            let m = Arc::new(MetricsRegistry::new());
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let m = m.clone();
+                    std::thread::spawn(move || {
+                        let sink = m.shard_sink(t);
+                        for i in 0..per {
+                            sink.add("rows", (t + 1) as u64);
+                            sink.observe("predict", obs(seed, t, i));
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            // Sequential reference over the identical observation stream.
+            let mut reference = LogHistogram::new();
+            let mut rows = 0u64;
+            for t in 0..threads {
+                for i in 0..per {
+                    reference.push(obs(seed, t, i));
+                    rows += (t + 1) as u64;
+                }
+            }
+            assert_eq!(m.counter("rows"), rows);
+            for t in 0..threads {
+                assert_eq!(m.shard_counter(t, "rows"), (t as u64 + 1) * per as u64);
+            }
+            let merged = m.merged_latency("predict").unwrap();
+            assert_eq!(merged.count(), reference.count());
+            assert!((merged.mean() - reference.mean()).abs() < 1e-12 * reference.mean().abs());
+            for q in [0.5, 0.95, 0.99] {
+                let a = merged.quantile(q).unwrap();
+                let b = reference.quantile(q).unwrap();
+                assert!((a - b).abs() <= 1e-12 * b.abs(), "q{q}: striped {a} vs single {b}");
+            }
+            assert_eq!(merged.min(), reference.min());
+            assert_eq!(merged.max(), reference.max());
+        });
+    }
+
+    /// Deterministic pseudo-latency stream: same (seed, shard, index) →
+    /// same value on both the striped and reference sides.
+    fn obs(seed: u64, t: usize, i: usize) -> f64 {
+        let mix = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add((t as u64) << 32)
+            .wrapping_add(i as u64)
+            .wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        1e-5 * (1.0 + (mix % 9973) as f64 / 100.0)
     }
 }

@@ -42,6 +42,6 @@ pub use backend::{Backend, BackendKind, NativeBackend, ScratchArena};
 pub use batcher::{BatchItem, DynamicBatcher};
 pub use metrics::MetricsRegistry;
 pub use protocol::{Request, Response};
-pub use server::{PoolMode, Server, ServerConfig};
+pub use server::{Client, PoolMode, Server, ServerConfig};
 pub use sharded::{RouterKind, ShardRouter, ShardedBatcher};
 pub use scheduler::TrainingScheduler;

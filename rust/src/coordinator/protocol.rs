@@ -3,7 +3,8 @@
 //! Request (one JSON object per line):
 //! `{"id": 7, "op": "predict", "mode": "ae", "x": [[...784 floats...], ...]}`
 //! `{"id": 8, "op": "stats"}` · `{"id": 9, "op": "refresh"}` ·
-//! `{"id": 0, "op": "ping"}`
+//! `{"id": 0, "op": "ping"}` · `{"id": 10, "op": "trace"}` (flight-recorder
+//! dump)
 //!
 //! Response: `{"id": 7, "ok": true, "classes": [3], "logits": [[...]],
 //!             "latency_us": 812}` or `{"id": 7, "ok": false, "error": "..."}`.
@@ -45,6 +46,8 @@ pub enum Request {
     /// Force an estimator-factor refresh from the current weights.
     Refresh { id: u64 },
     Predict { id: u64, mode: Mode, x: Mat },
+    /// Dump the flight recorder (last N batch records with span timings).
+    Trace { id: u64 },
     Shutdown { id: u64 },
 }
 
@@ -55,6 +58,7 @@ impl Request {
             | Request::Stats { id }
             | Request::Refresh { id }
             | Request::Predict { id, .. }
+            | Request::Trace { id }
             | Request::Shutdown { id } => *id,
         }
     }
@@ -71,6 +75,7 @@ impl Request {
             "ping" => Ok(Request::Ping { id }),
             "stats" => Ok(Request::Stats { id }),
             "refresh" => Ok(Request::Refresh { id }),
+            "trace" => Ok(Request::Trace { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             "predict" => {
                 let mode = v
@@ -120,6 +125,10 @@ impl Request {
             }
             Request::Refresh { id } => {
                 Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("refresh".into()))])
+                    .to_string()
+            }
+            Request::Trace { id } => {
+                Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("trace".into()))])
                     .to_string()
             }
             Request::Shutdown { id } => Json::obj(vec![
@@ -258,6 +267,7 @@ mod tests {
             (Request::Ping { id: 1 }, "ping"),
             (Request::Stats { id: 2 }, "stats"),
             (Request::Refresh { id: 3 }, "refresh"),
+            (Request::Trace { id: 5 }, "trace"),
             (Request::Shutdown { id: 4 }, "shutdown"),
         ] {
             let line = req.to_json_line();

@@ -23,6 +23,7 @@ use super::sharded::{RouterKind, ShardedBatcher};
 use crate::exec::{ExecCtx, MetricsScope};
 use crate::linalg::Mat;
 use crate::parallel::{PoolLease, ThreadPool};
+use crate::trace::{FlightRecord, FlightRecorder, SpanCollector};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -67,6 +68,13 @@ pub struct ServerConfig {
     /// Leased slices of the shared pool (default) vs private per-shard
     /// pools (bench baseline).
     pub pool_mode: PoolMode,
+    /// Enable span tracing at startup (`server.trace` / `--trace`; the
+    /// `CONDCOMP_TRACE` env knob also enables it without a config change).
+    /// Tracing changes observability only — span guards are inert when off.
+    pub trace: bool,
+    /// Flight-recorder capacity: the last N drained-batch records kept for
+    /// the `trace` op (`server.trace_ring` / `--trace-ring`).
+    pub trace_ring: usize,
 }
 
 impl Default for ServerConfig {
@@ -78,6 +86,8 @@ impl Default for ServerConfig {
             router: RouterKind::RoundRobin,
             threads: 0,
             pool_mode: PoolMode::Lease,
+            trace: false,
+            trace_ring: 64,
         }
     }
 }
@@ -92,6 +102,9 @@ pub fn derive_shards(threads: usize) -> usize {
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     pub metrics: Arc<MetricsRegistry>,
+    /// The batch flight recorder (dumped by the `trace` op; only written
+    /// while tracing is enabled).
+    pub recorder: Arc<FlightRecorder>,
     batcher: Arc<ShardedBatcher>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -120,6 +133,15 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let metrics = Arc::new(MetricsRegistry::new());
+        // `--trace` turns the process-wide flag on; it never turns it *off*,
+        // so the `CONDCOMP_TRACE` env knob (or an embedder's earlier
+        // `trace::set_enabled`) survives a config that doesn't mention it.
+        if cfg.trace {
+            crate::trace::set_enabled(true);
+        }
+        let recorder = Arc::new(FlightRecorder::new(cfg.trace_ring));
+        metrics.set_gauge("trace_enabled", u8::from(crate::trace::enabled()).into());
+        metrics.set_gauge("trace_ring", recorder.capacity() as f64);
         let budget = pool.threads();
         metrics.set_gauge("pool_threads", budget as f64);
         metrics.set_gauge("threads_total", budget as f64);
@@ -189,10 +211,22 @@ impl Server {
             let batcher = batcher.clone();
             let backend = backend.clone();
             let metrics = metrics.clone();
+            let recorder = recorder.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("condcomp-shard-{shard}"))
                     .spawn(move || {
+                        // If this executor panics, dump the flight recorder
+                        // to stderr on the way down — the last N batches are
+                        // exactly the post-mortem an operator wants.
+                        let _panic_dump =
+                            PanicFlightDump { shard, recorder: recorder.clone() };
+                        let scope = MetricsScope::for_shard(metrics.clone(), shard);
+                        // The lease span covers executor setup (private-pool
+                        // construction / lease acquisition); it is recorded
+                        // before the span collector attaches so it never
+                        // pollutes the first batch's flight record.
+                        let sp = scope.span("lease");
                         let private = if leased.is_none() {
                             Some(ThreadPool::new(slice))
                         } else {
@@ -204,12 +238,20 @@ impl Server {
                             // executor's own pool.
                             None => private.as_ref().expect("private pool").lease(slice),
                         };
-                        let mut ctx = ExecCtx::over(lease)
-                            .with_metrics(MetricsScope::for_shard(metrics.clone(), shard));
+                        drop(sp);
+                        let scope = scope.with_spans(Arc::new(SpanCollector::default()));
+                        let mut ctx = ExecCtx::over(lease).with_metrics(scope);
                         while let Some(batch) = batcher.next_batch(shard) {
-                            execute_batch(shard, batch, backend.as_ref(), &mut ctx, &metrics);
-                            metrics
-                                .set_shard_gauge(shard, "depth", batcher.shard(shard).depth() as f64);
+                            let depth = batcher.shard(shard).depth();
+                            execute_batch(
+                                shard,
+                                batch,
+                                backend.as_ref(),
+                                &mut ctx,
+                                depth,
+                                &recorder,
+                            );
+                            metrics.set_shard_gauge(shard, "depth", depth as f64);
                         }
                     })
                     .expect("spawn shard executor"),
@@ -223,6 +265,7 @@ impl Server {
             let metrics = metrics.clone();
             let stop2 = stop.clone();
             let backend = backend.clone();
+            let recorder2 = recorder.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("condcomp-acceptor".into())
@@ -235,10 +278,11 @@ impl Server {
                                     let metrics = metrics.clone();
                                     let stop3 = stop2.clone();
                                     let backend = backend.clone();
+                                    let recorder = recorder2.clone();
                                     std::thread::spawn(move || {
                                         let _ = handle_connection(
                                             stream, &batcher, backend.as_ref(), &metrics, &stop3,
-                                            pool,
+                                            pool, &recorder,
                                         );
                                     });
                                 }
@@ -253,7 +297,7 @@ impl Server {
             );
         }
 
-        Ok(Server { local_addr, metrics, batcher, stop, threads })
+        Ok(Server { local_addr, metrics, recorder, batcher, stop, threads })
     }
 
     /// Number of batcher shards actually running (after 0 = auto
@@ -290,26 +334,60 @@ impl Drop for Server {
     }
 }
 
+/// Dumps the flight recorder to stderr if the owning executor thread
+/// unwinds — the last N batch records are the post-mortem.
+struct PanicFlightDump {
+    shard: usize,
+    recorder: Arc<FlightRecorder>,
+}
+
+impl Drop for PanicFlightDump {
+    fn drop(&mut self) {
+        if std::thread::panicking() && crate::trace::enabled() {
+            let dump = self.recorder.dump().to_string();
+            eprintln!("shard {} executor panicked; flight-recorder dump: {dump}", self.shard);
+        }
+    }
+}
+
 /// Run one drained batch through a shard's [`ExecCtx`] (leased pool slice +
 /// recycled arena + per-shard metrics scope) and fan the responses back
 /// out. One request increments `predictions` exactly once, whichever shard
-/// executed it.
+/// executed it. Every metric lands in the shard's striped sink (plain
+/// names; the snapshot materializes fleet totals and `shard<i>_` views).
+/// When tracing is on, the batch additionally emits `queue`/`prep`/
+/// `predict`/`reply` spans (the backend adds `estimator`/`kernel` inside
+/// `predict`) and pushes one [`FlightRecord`] with the span breakdown.
 fn execute_batch(
     shard: usize,
     batch: Vec<BatchItem>,
     backend: &dyn Backend,
     ctx: &mut ExecCtx<'_>,
-    metrics: &MetricsRegistry,
+    queue_depth: usize,
+    recorder: &FlightRecorder,
 ) {
+    let t_batch = Instant::now();
+    let traced = crate::trace::enabled();
     let mode = batch[0].mode;
+    let n_items = batch.len();
     let total_rows: usize = batch.iter().map(|i| i.x.rows()).sum();
-    // Shard-scoped writes mirror under `shard<i>_*` automatically.
     ctx.metrics().incr("batches");
-    metrics.add("batched_rows", total_rows as u64);
-    metrics.set_gauge("last_batch_rows", total_rows as f64);
+    ctx.metrics().add("batched_rows", total_rows as u64);
+    ctx.metrics().set_gauge("last_batch_rows", total_rows as f64);
+    // Queue wait: how long the oldest item in this batch sat between enqueue
+    // and drain. Only measured when traced (it reads the clock per item).
+    let queue_wait = if traced {
+        let wait =
+            batch.iter().map(|i| i.enqueued.elapsed().as_secs_f64()).fold(0.0, f64::max);
+        ctx.metrics().observe_latency("span_queue", wait);
+        wait
+    } else {
+        0.0
+    };
 
     // Concatenate the batch.
     let d = batch[0].x.cols();
+    let sp = ctx.metrics().span("prep");
     let mut x = Mat::zeros(total_rows, d);
     let mut at = 0usize;
     let mut ok_shapes = true;
@@ -323,28 +401,32 @@ fn execute_batch(
             at += 1;
         }
     }
+    drop(sp);
     if !ok_shapes {
         for item in batch {
             let _ = item
                 .reply
                 .send(Response::err(item.id, "inconsistent input dims in batch"));
         }
+        // Discard any spans so they can't leak into the next batch's record.
+        ctx.metrics().drain_spans();
         return;
     }
 
     let t0 = Instant::now();
+    let sp = ctx.metrics().span("predict");
     let result = backend.predict_ctx(&x, mode, ctx);
+    drop(sp);
     let dt = t0.elapsed().as_secs_f64();
-    metrics.observe_latency(&format!("predict_{}", mode.as_str()), dt);
-    metrics.observe_shard_latency(shard, "predict", dt);
+    ctx.metrics().observe_latency(&format!("predict_{}", mode.as_str()), dt);
+    ctx.metrics().observe_latency("predict", dt);
 
     match result {
         Ok((logits, speedup)) => {
             if let Some(s) = speedup {
-                // Global gauge + this shard's view of it, from one write.
                 ctx.metrics().set_gauge("flop_speedup", s);
             }
-            let n_items = batch.len() as u64;
+            let sp = ctx.metrics().span("reply");
             let mut row = 0usize;
             for item in batch {
                 let n = item.x.rows();
@@ -356,19 +438,47 @@ fn execute_batch(
                 resp.latency_us = item.enqueued.elapsed().as_micros() as u64;
                 let _ = item.reply.send(resp);
             }
-            // One counter update per batch, not per item: the metrics mutex
-            // is shared across shard executors.
-            metrics.add("predictions", n_items);
+            drop(sp);
+            // One counter update per batch, not per item.
+            ctx.metrics().add("predictions", n_items as u64);
             // The logits buffer came from the ctx's arena; park it for the
             // next batch on this shard.
             ctx.put_buf(logits.into_vec());
         }
         Err(e) => {
-            metrics.incr("errors");
+            ctx.metrics().incr("errors");
             for item in batch {
                 let _ = item.reply.send(Response::err(item.id, format!("backend: {e}")));
             }
         }
+    }
+
+    if traced {
+        let spans = ctx.metrics().drain_spans();
+        // The kernels the cost router picked, in layer order (deduped: one
+        // entry per distinct kernel).
+        let mut kernels: Vec<String> = Vec::new();
+        for s in &spans {
+            if s.name == "kernel" {
+                if let Some(k) = s.detail {
+                    if !kernels.iter().any(|have| have == k) {
+                        kernels.push(k.to_string());
+                    }
+                }
+            }
+        }
+        recorder.record(FlightRecord {
+            seq: recorder.next_seq(),
+            shard,
+            rows: total_rows,
+            items: n_items,
+            mode: mode.as_str(),
+            kernels,
+            queue_depth,
+            queue_wait_us: queue_wait * 1e6,
+            total_us: t_batch.elapsed().as_secs_f64() * 1e6,
+            spans,
+        });
     }
 }
 
@@ -379,6 +489,7 @@ fn handle_connection(
     metrics: &MetricsRegistry,
     stop: &AtomicBool,
     pool: &'static ThreadPool,
+    recorder: &FlightRecorder,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     let reader = BufReader::new(stream.try_clone()?);
@@ -406,7 +517,15 @@ fn handle_connection(
             continue;
         }
         metrics.incr("requests");
-        match Request::parse(&line) {
+        // recv span: wire-line → parsed request. Connection readers have no
+        // shard scope, so traced timings go straight to the global sink —
+        // only while tracing is on, so the hot path stays stripe-only.
+        let t_recv = crate::trace::enabled().then(Instant::now);
+        let parsed = Request::parse(&line);
+        if let Some(t) = t_recv {
+            metrics.observe_latency("span_recv", t.elapsed().as_secs_f64());
+        }
+        match parsed {
             Err(e) => {
                 let _ = tx.send(Response::err(0, format!("parse: {e}")));
             }
@@ -436,6 +555,12 @@ fn handle_connection(
                 };
                 let _ = tx.send(resp);
             }
+            Ok(Request::Trace { id }) => {
+                metrics.incr("trace_dumps");
+                let mut r = Response::ok(id);
+                r.payload = Some(recorder.dump());
+                let _ = tx.send(r);
+            }
             Ok(Request::Shutdown { id }) => {
                 let _ = tx.send(Response::ok(id));
                 stop.store(true, Ordering::Relaxed);
@@ -462,8 +587,14 @@ fn handle_connection(
                 // already publishes its depth gauge after every drained
                 // batch, and touching the (global) metrics mutex per request
                 // would re-serialize the connection threads this split
-                // exists to decouple.
-                if let Err(rejected) = batcher.push(item) {
+                // exists to decouple. (The route span below only fires while
+                // tracing is on.)
+                let t_route = crate::trace::enabled().then(Instant::now);
+                let pushed = batcher.push(item);
+                if let Some(t) = t_route {
+                    metrics.observe_latency("span_route", t.elapsed().as_secs_f64());
+                }
+                if let Err(rejected) = pushed {
                     // Batcher closed (shutdown in progress): the item is
                     // handed back, so the client still gets an answer
                     // instead of a silently dropped request.
@@ -519,6 +650,13 @@ impl Client {
     pub fn refresh(&mut self) -> Result<Response> {
         let id = self.bump();
         self.roundtrip(&Request::Refresh { id })
+    }
+
+    /// Fetch the flight-recorder dump (the `trace` op); the payload is the
+    /// ring's JSON (`ring_capacity` / `recorded` / `records`).
+    pub fn trace(&mut self) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Trace { id })
     }
 
     pub fn shutdown(&mut self) -> Result<Response> {

@@ -3,19 +3,32 @@
 
 use super::arena::ScratchArena;
 use crate::condcomp::{KernelRegistry, PolicyTable};
-use crate::coordinator::metrics::MetricsRegistry;
+use crate::coordinator::metrics::{MetricsRegistry, ShardSink};
 use crate::parallel::{PoolLease, ThreadPool};
+use crate::trace::{Span, SpanCollector};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Where a context's metrics land: nowhere (tests, CLI one-shots), a shared
-/// registry, or a shard-scoped view of one. Shard-scoped writes mirror each
-/// value under both the global key and the `shard<i>_` key
-/// ([`MetricsRegistry::shard_key`]), so dashboards see the fleet total and
-/// the per-shard breakdown from one write.
+/// registry, or a shard-scoped view of one. A shard scope caches its
+/// [`ShardSink`] stripe at construction, so hot-path writes take the
+/// stripe's uncontended lock under *plain* names — the registry's snapshot
+/// materializes the fleet total and the `shard<i>_` breakdown from the same
+/// write, with no per-call key formatting.
+///
+/// The scope is also where spans come from: [`MetricsScope::span`] returns
+/// a guard that, when tracing is enabled ([`crate::trace::enabled`]), times
+/// its scope into the `span_<name>` latency series and — if a
+/// [`SpanCollector`] is attached ([`MetricsScope::with_spans`], shard
+/// executors do) — into the per-batch span list the flight recorder keeps.
+/// With tracing off the guard is inert: one relaxed atomic load, no clock
+/// reads, no allocation.
 #[derive(Clone, Default)]
 pub struct MetricsScope {
     registry: Option<Arc<MetricsRegistry>>,
     shard: Option<usize>,
+    sink: Option<Arc<ShardSink>>,
+    spans: Option<Arc<SpanCollector>>,
 }
 
 impl MetricsScope {
@@ -24,14 +37,23 @@ impl MetricsScope {
         MetricsScope::default()
     }
 
-    /// Global scope: writes land under their plain keys only.
+    /// Global scope: writes land in the registry's global sink.
     pub fn global(registry: Arc<MetricsRegistry>) -> MetricsScope {
-        MetricsScope { registry: Some(registry), shard: None }
+        MetricsScope { registry: Some(registry), shard: None, sink: None, spans: None }
     }
 
-    /// Shard scope: writes land under the plain key *and* the shard key.
+    /// Shard scope: writes land in the shard's stripe (read back under both
+    /// the plain and the `shard<i>_` key).
     pub fn for_shard(registry: Arc<MetricsRegistry>, shard: usize) -> MetricsScope {
-        MetricsScope { registry: Some(registry), shard: Some(shard) }
+        let sink = registry.shard_sink(shard);
+        MetricsScope { registry: Some(registry), shard: Some(shard), sink: Some(sink), spans: None }
+    }
+
+    /// Attach a per-batch span collector (shard executors, so the flight
+    /// recorder can keep each batch's span breakdown).
+    pub fn with_spans(mut self, spans: Arc<SpanCollector>) -> MetricsScope {
+        self.spans = Some(spans);
+        self
     }
 
     /// The shard this scope is pinned to, if any.
@@ -50,29 +72,92 @@ impl MetricsScope {
     }
 
     pub fn add(&self, name: &str, by: u64) {
-        if let Some(reg) = &self.registry {
+        if let Some(sink) = &self.sink {
+            sink.add(name, by);
+        } else if let Some(reg) = &self.registry {
             reg.add(name, by);
-            if let Some(shard) = self.shard {
-                reg.add(&MetricsRegistry::shard_key(shard, name), by);
-            }
         }
     }
 
     pub fn set_gauge(&self, name: &str, value: f64) {
-        if let Some(reg) = &self.registry {
+        if let Some(sink) = &self.sink {
+            sink.set_gauge(name, value);
+        } else if let Some(reg) = &self.registry {
             reg.set_gauge(name, value);
-            if let Some(shard) = self.shard {
-                reg.set_shard_gauge(shard, name, value);
-            }
         }
     }
 
     pub fn observe_latency(&self, name: &str, seconds: f64) {
-        if let Some(reg) = &self.registry {
+        if let Some(sink) = &self.sink {
+            sink.observe(name, seconds);
+        } else if let Some(reg) = &self.registry {
             reg.observe_latency(name, seconds);
-            if let Some(shard) = self.shard {
-                reg.observe_shard_latency(shard, name, seconds);
-            }
+        }
+    }
+
+    /// Open a timed span (`recv`, `estimator`, `reply`, …). Returns an
+    /// inert guard unless tracing is enabled and this scope has somewhere
+    /// to record.
+    pub fn span(&self, name: &'static str) -> SpanGuard {
+        self.span_with(name, None)
+    }
+
+    /// Open a timed span with a static detail suffix — the kernel spans use
+    /// the chosen [`crate::condcomp::KernelId`] (`kernel_masked_simd`).
+    pub fn span_with(&self, name: &'static str, detail: Option<&'static str>) -> SpanGuard {
+        if !crate::trace::enabled() || self.registry.is_none() {
+            return SpanGuard { inner: None };
+        }
+        SpanGuard {
+            inner: Some(SpanGuardInner {
+                name,
+                detail,
+                registry: self.registry.clone(),
+                sink: self.sink.clone(),
+                spans: self.spans.clone(),
+                start: Instant::now(),
+            }),
+        }
+    }
+
+    /// Take the spans collected since the last drain (empty when no
+    /// collector is attached). Shard executors call this once per batch to
+    /// build the flight record.
+    pub fn drain_spans(&self) -> Vec<Span> {
+        self.spans.as_ref().map(|c| c.drain()).unwrap_or_default()
+    }
+}
+
+/// RAII span: times from creation to drop, then records into the scope's
+/// `span_<label>` latency series and (if attached) the span collector. The
+/// guard owns cloned `Arc`s, so it can outlive borrows of the scope that
+/// issued it — open a span, then keep using `&mut ExecCtx` freely.
+pub struct SpanGuard {
+    inner: Option<SpanGuardInner>,
+}
+
+struct SpanGuardInner {
+    name: &'static str,
+    detail: Option<&'static str>,
+    registry: Option<Arc<MetricsRegistry>>,
+    sink: Option<Arc<ShardSink>>,
+    spans: Option<Arc<SpanCollector>>,
+    start: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(g) = self.inner.take() else { return };
+        let seconds = g.start.elapsed().as_secs_f64();
+        let span = Span { name: g.name, detail: g.detail, micros: seconds * 1e6 };
+        let series = format!("span_{}", span.label());
+        if let Some(sink) = &g.sink {
+            sink.observe(&series, seconds);
+        } else if let Some(reg) = &g.registry {
+            reg.observe_latency(&series, seconds);
+        }
+        if let Some(collector) = &g.spans {
+            collector.push(span);
         }
     }
 }
@@ -275,5 +360,38 @@ mod tests {
         none.incr("never");
         assert!(none.registry().is_none());
         assert_eq!(reg.counter("never"), 0);
+    }
+
+    #[test]
+    fn span_guards_are_inert_off_and_record_on() {
+        let _serial = crate::trace::test_lock();
+        let reg = Arc::new(MetricsRegistry::new());
+        let collector = Arc::new(crate::trace::SpanCollector::default());
+        let scope = MetricsScope::for_shard(reg.clone(), 0).with_spans(collector);
+
+        crate::trace::set_enabled(false);
+        drop(scope.span("estimator"));
+        assert!(reg.mean_latency("span_estimator").is_none(), "disabled spans record nothing");
+        assert!(scope.drain_spans().is_empty());
+
+        crate::trace::set_enabled(true);
+        drop(scope.span_with("kernel", Some("masked")));
+        drop(scope.span("reply"));
+        crate::trace::set_enabled(false);
+
+        // Series land in the shard stripe under span_<label>…
+        assert!(reg.mean_latency("shard0_span_kernel_masked").is_some());
+        assert!(reg.mean_latency("span_reply").is_some(), "plain key merges the stripe");
+        // …and the collector kept the per-batch breakdown, in order.
+        let spans = scope.drain_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].label(), "kernel_masked");
+        assert_eq!(spans[1].label(), "reply");
+        assert!(spans.iter().all(|s| s.micros >= 0.0));
+
+        // A scope with no registry issues inert guards even when enabled.
+        crate::trace::set_enabled(true);
+        drop(MetricsScope::none().span("never"));
+        crate::trace::set_enabled(false);
     }
 }

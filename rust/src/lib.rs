@@ -16,6 +16,10 @@
 //!   lease, a scratch arena, a dispatch-policy view and a metrics scope
 //!   behind one handle threaded through backends, kernels and the autotune
 //!   harness.
+//! - [`trace`] — the serving observability plane's tracing core:
+//!   zero-cost-when-disabled span guards (issued through the `ExecCtx`
+//!   metrics scope) and the batch flight recorder dumped by the `trace`
+//!   protocol op.
 //! - [`linalg`] — dense matrices, cache-blocked GEMM (serial oracle +
 //!   row-panel-parallel variant), one-sided Jacobi SVD, truncated low-rank
 //!   factorization (paper §3.2).
@@ -59,6 +63,7 @@
 pub mod util;
 pub mod parallel;
 pub mod exec;
+pub mod trace;
 pub mod linalg;
 pub mod io;
 pub mod config;

@@ -22,6 +22,10 @@
 //!               per machine, not once per process. Budget via
 //!               `--budget-ms` / `autotune.budget_ms`; kernel set via
 //!               `--kernels`.
+//!   trace       fetch the flight-recorder ring from a running server (the
+//!               `trace` protocol op): the last N batch records with
+//!               per-span timings. Recording requires the server to run
+//!               with `--trace` / `server.trace` / `CONDCOMP_TRACE=1`
 //!   experiment  regenerate a paper table/figure (fig2…fig6, table2, table3,
 //!               speedup, all)
 //!   bench       measured dense-vs-masked-vs-parallel sweep; writes
@@ -74,7 +78,7 @@ fn usage() -> String {
     format!(
         "condcomp {} — conditional feedforward computation via low-rank sign estimation\n\
          \n\
-         usage: condcomp <train|train-pjrt|serve|calibrate|experiment|bench|bench-flops|datagen> [options]\n\
+         usage: condcomp <train|train-pjrt|serve|trace|calibrate|experiment|bench|bench-flops|datagen> [options]\n\
          \n\
          run `condcomp <subcommand> --help` for options.\n",
         condcomp::VERSION
@@ -142,6 +146,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "train" => cmd_train(rest),
         "train-pjrt" => cmd_train_pjrt(rest),
         "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
         "calibrate" => cmd_calibrate(rest),
         "experiment" => cmd_experiment(rest),
         "bench" => cmd_bench(rest),
@@ -266,6 +271,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "kernels",
             "kernel allow-list, comma-separated (dense,dense_packed,dense_simd,masked,masked_simd; default: all registered)",
         ))
+        .opt(OptSpec::flag(
+            "trace",
+            "enable span tracing + flight recorder (also: server.trace / CONDCOMP_TRACE=1)",
+        ))
+        .opt(OptSpec::value("trace-ring", "flight-recorder capacity in batch records"))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
     if parsed.flag("help") {
@@ -372,6 +382,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let router = condcomp::coordinator::RouterKind::parse(&router_name).ok_or_else(|| {
         anyhow::anyhow!("unknown router '{router_name}' (expected round-robin or least-depth)")
     })?;
+    // Observability knobs: `--trace` only ever *enables* (the profile key
+    // and `CONDCOMP_TRACE` env can also turn tracing on).
+    let trace = parsed.flag("trace") || profile.server.trace;
+    let trace_ring = match parsed.get_usize("trace-ring")? {
+        Some(n) => n,
+        None => profile.server.trace_ring,
+    };
     let server = Server::start(
         backend,
         ServerConfig {
@@ -382,6 +399,8 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             shards,
             router,
             threads: parsed.get_usize("threads")?.unwrap_or(0),
+            trace,
+            trace_ring,
             ..ServerConfig::default()
         },
     )?;
@@ -397,6 +416,38 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     }
     eprintln!("shutdown requested; draining shards…");
     server.shutdown();
+    Ok(())
+}
+
+/// `condcomp trace` — dump a running server's flight recorder: the last N
+/// batch records (shard, rows, kernels chosen, queue depth at drain,
+/// per-span timings) as JSON on stdout. Recording is live only while the
+/// server has tracing enabled (`--trace` / `server.trace` /
+/// `CONDCOMP_TRACE=1`); without it the dump is an empty ring.
+fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("trace", "dump a running server's flight recorder")
+        .opt(OptSpec::value("addr", "server address").with_default("127.0.0.1:7878"))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let addr: std::net::SocketAddr = parsed
+        .get("addr")
+        .unwrap()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--addr: {e}"))?;
+    let mut client = condcomp::coordinator::Client::connect(&addr)?;
+    let resp = client.trace()?;
+    if !resp.ok {
+        return Err(anyhow::anyhow!(
+            "trace op failed: {}",
+            resp.error.unwrap_or_else(|| "unknown error".into())
+        ));
+    }
+    let payload = resp.payload.ok_or_else(|| anyhow::anyhow!("trace response has no payload"))?;
+    println!("{payload}");
     Ok(())
 }
 

@@ -1,0 +1,333 @@
+//! Span tracing + the batch flight recorder: the serving observability
+//! plane's std-only core.
+//!
+//! Three pieces:
+//!
+//! - a process-wide **enable flag** ([`enabled`] / [`set_enabled`], env
+//!   `CONDCOMP_TRACE=1`, config `server.trace` / CLI `--trace`). Every
+//!   instrumentation site guards on it with one relaxed atomic load, so a
+//!   tracing-off server pays a branch per span site and nothing else;
+//! - **span records** ([`Span`]): a static name (`recv`, `route`, `queue`,
+//!   `lease`, `estimator`, `kernel`, `reply`, `autotune_measure`, …), an
+//!   optional static detail (the [`crate::condcomp::KernelId`] for kernel
+//!   spans), and a measured duration. Spans are created through
+//!   [`crate::exec::MetricsScope::span`], which both feeds the per-series
+//!   latency histograms (`span_<label>` in the `stats` snapshot) and, on
+//!   the shard executors, collects into a per-batch [`SpanCollector`];
+//! - the **flight recorder** ([`FlightRecorder`]): a fixed-size ring of the
+//!   last N drained-batch records — shard, rows, kernels chosen, queue
+//!   depth at drain, per-span timings — dumpable over the wire via the
+//!   `trace` protocol op / `condcomp trace` subcommand, and auto-dumped to
+//!   stderr when a shard executor panics.
+//!
+//! The invariant carried over from the rest of the stack: tracing changes
+//! observability only, never results — span guards are inert when the flag
+//! is off, and the recorder is written only on traced batches.
+
+use crate::io::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Tri-state enable flag: lazily initialized from the environment on first
+/// query, overridable any time via [`set_enabled`].
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Is span tracing on? One relaxed atomic load — the whole cost of a span
+/// site on the tracing-off hot path.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let on = std::env::var("CONDCOMP_TRACE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    // Racing an explicit set_enabled: the explicit call wins.
+    let _ = STATE.compare_exchange(
+        UNINIT,
+        if on { ON } else { OFF },
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    STATE.load(Ordering::Relaxed) == ON
+}
+
+/// Turn tracing on or off process-wide (config/CLI knob; the bench harness
+/// toggles it to measure the tracing-on overhead column).
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Serializes tests (and test-driven bench runs) that flip the
+/// process-wide flag — unit tests in one binary run concurrently.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One timed span. `name` and `detail` are static so recording a span
+/// allocates nothing; the rendered label is `name` or `name_detail`
+/// (`kernel` + `masked_simd` → `kernel_masked_simd`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    pub detail: Option<&'static str>,
+    pub micros: f64,
+}
+
+impl Span {
+    pub fn label(&self) -> String {
+        match self.detail {
+            Some(d) => format!("{}_{d}", self.name),
+            None => self.name.to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.label())),
+            ("us", Json::Num(self.micros)),
+        ])
+    }
+}
+
+/// Per-executor span sink: the shard executor's [`crate::exec::MetricsScope`]
+/// carries one, span guards push into it, and the executor drains it into a
+/// [`FlightRecord`] after each batch. The mutex is effectively uncontended —
+/// only the owning executor thread writes during a batch.
+#[derive(Default)]
+pub struct SpanCollector {
+    spans: Mutex<Vec<Span>>,
+}
+
+impl SpanCollector {
+    pub fn push(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Take everything collected since the last drain.
+    pub fn drain(&self) -> Vec<Span> {
+        std::mem::take(&mut *self.spans.lock().unwrap())
+    }
+}
+
+/// One drained batch, as the flight recorder remembers it.
+#[derive(Clone, Debug)]
+pub struct FlightRecord {
+    /// Monotonic record number (global across shards), so a dump shows
+    /// interleaving order even though the ring is per-server.
+    pub seq: u64,
+    pub shard: usize,
+    /// Total rows executed in the batch.
+    pub rows: usize,
+    /// Requests coalesced into the batch.
+    pub items: usize,
+    /// Protocol mode label (`ae` / `control`).
+    pub mode: &'static str,
+    /// Kernels the cost router picked, one per conditional layer (derived
+    /// from the batch's `kernel` spans; empty for dense-mode batches).
+    pub kernels: Vec<String>,
+    /// Shard queue depth right after this batch was drained.
+    pub queue_depth: usize,
+    /// Oldest item's queue wait (enqueue → drain), µs.
+    pub queue_wait_us: f64,
+    /// Drain → replies-sent wall clock, µs. The per-span timings partition
+    /// this (minus inter-span bookkeeping).
+    pub total_us: f64,
+    pub spans: Vec<Span>,
+}
+
+impl FlightRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("shard", Json::Num(self.shard as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("items", Json::Num(self.items as f64)),
+            ("mode", Json::Str(self.mode.to_string())),
+            (
+                "kernels",
+                Json::Arr(self.kernels.iter().map(|k| Json::Str(k.clone())).collect()),
+            ),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("queue_wait_us", Json::Num(self.queue_wait_us)),
+            ("total_us", Json::Num(self.total_us)),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(Span::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Fixed-size ring of the last N [`FlightRecord`]s (`server.trace_ring` /
+/// `--trace-ring`). Writers push post-batch (one short lock per traced
+/// batch); readers dump the whole ring as JSON.
+pub struct FlightRecorder {
+    capacity: usize,
+    seq: AtomicU64,
+    ring: Mutex<VecDeque<FlightRecord>>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            capacity,
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Claim the next record number (cheap, lock-free).
+    pub fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn record(&self, rec: FlightRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the ring (oldest first) — tests and the panic dump path.
+    pub fn records(&self) -> Vec<FlightRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The wire dump: `{"ring_capacity": N, "recorded": M, "records": [...]}`
+    /// where `recorded` counts every batch ever traced (the ring keeps the
+    /// last `ring_capacity` of them).
+    pub fn dump(&self) -> Json {
+        let ring = self.ring.lock().unwrap();
+        Json::obj(vec![
+            ("ring_capacity", Json::Num(self.capacity as f64)),
+            ("recorded", Json::Num(self.seq.load(Ordering::Relaxed) as f64)),
+            (
+                "records",
+                Json::Arr(ring.iter().map(FlightRecord::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, shard: usize) -> FlightRecord {
+        FlightRecord {
+            seq,
+            shard,
+            rows: 2,
+            items: 2,
+            mode: "ae",
+            kernels: vec!["masked".into()],
+            queue_depth: 1,
+            queue_wait_us: 10.0,
+            total_us: 120.0,
+            spans: vec![
+                Span { name: "prep", detail: None, micros: 5.0 },
+                Span { name: "kernel", detail: Some("masked"), micros: 100.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn enable_flag_toggles() {
+        let _serial = test_lock();
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn span_labels_compose_name_and_detail() {
+        let s = Span { name: "kernel", detail: Some("dense_simd"), micros: 1.0 };
+        assert_eq!(s.label(), "kernel_dense_simd");
+        let s = Span { name: "estimator", detail: None, micros: 1.0 };
+        assert_eq!(s.label(), "estimator");
+    }
+
+    #[test]
+    fn collector_drains_to_empty() {
+        let c = SpanCollector::default();
+        c.push(Span { name: "a", detail: None, micros: 1.0 });
+        c.push(Span { name: "b", detail: None, micros: 2.0 });
+        let spans = c.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "a");
+        assert!(c.drain().is_empty(), "drain takes ownership");
+    }
+
+    #[test]
+    fn ring_keeps_last_n_records() {
+        let fr = FlightRecorder::new(3);
+        assert_eq!(fr.capacity(), 3);
+        assert!(fr.is_empty());
+        for shard in 0..5 {
+            let seq = fr.next_seq();
+            fr.record(rec(seq, shard));
+        }
+        assert_eq!(fr.len(), 3);
+        let records = fr.records();
+        assert_eq!(
+            records.iter().map(|r| r.seq).collect::<Vec<_>>(),
+            vec![2, 3, 4],
+            "oldest records evicted first"
+        );
+        // Zero capacity is clamped, not a panic.
+        assert_eq!(FlightRecorder::new(0).capacity(), 1);
+    }
+
+    #[test]
+    fn dump_is_valid_json_with_schema() {
+        let fr = FlightRecorder::new(8);
+        let seq = fr.next_seq();
+        fr.record(rec(seq, 1));
+        let dump = fr.dump().to_string();
+        let parsed = Json::parse(&dump).unwrap();
+        assert_eq!(parsed.get("ring_capacity").unwrap().as_f64(), Some(8.0));
+        assert_eq!(parsed.get("recorded").unwrap().as_f64(), Some(1.0));
+        let records = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        for key in [
+            "seq", "shard", "rows", "items", "mode", "kernels", "queue_depth",
+            "queue_wait_us", "total_us", "spans",
+        ] {
+            assert!(r.get(key).is_some(), "record missing {key}: {dump}");
+        }
+        let spans = r.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[1].get("name").unwrap().as_str(), Some("kernel_masked"));
+        assert_eq!(spans[1].get("us").unwrap().as_f64(), Some(100.0));
+    }
+}

@@ -83,6 +83,25 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Fold another accumulator in (Chan's parallel update), so per-shard
+    /// series can merge into one distribution at snapshot time.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -100,12 +119,121 @@ impl Welford {
         self.variance().sqrt()
     }
 
-    pub fn min(&self) -> f64 {
-        self.min
+    /// Smallest observation; `None` on an empty series (the sentinel init
+    /// values are never exposed to callers).
+    pub fn min(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.min)
     }
 
-    pub fn max(&self) -> f64 {
-        self.max
+    /// Largest observation; `None` on an empty series.
+    pub fn max(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.max)
+    }
+}
+
+/// Log-bucketed (HDR-style) histogram for non-negative samples — latency
+/// seconds in practice. Buckets are geometrically spaced at a factor of
+/// [`LogHistogram::GROWTH`] = 2^(1/8) per bucket, so any quantile estimate
+/// is within one bucket's relative error (≈ 9%) of the nearest-rank exact
+/// quantile, at a few hundred `u64`s of memory regardless of sample count.
+/// Exact mean/std/min/max ride along in an embedded [`Welford`].
+#[derive(Clone, Debug, Default)]
+pub struct LogHistogram {
+    stats: Welford,
+    /// `buckets[i]` counts samples in `[MIN_VALUE·g^i, MIN_VALUE·g^(i+1))`,
+    /// grown lazily up to [`LogHistogram::MAX_BUCKETS`].
+    buckets: Vec<u64>,
+}
+
+impl LogHistogram {
+    /// Per-bucket growth factor: 2^(1/8), i.e. 8 buckets per octave.
+    pub const GROWTH: f64 = 1.090_507_732_665_257_7;
+    /// Smallest resolvable sample (1 ns); anything below lands in bucket 0.
+    pub const MIN_VALUE: f64 = 1e-9;
+    /// Bucket-count cap; the top bucket absorbs overflow (≈ 10^10 s — no
+    /// real latency gets there).
+    pub const MAX_BUCKETS: usize = 512;
+
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_index(x: f64) -> usize {
+        if x <= Self::MIN_VALUE {
+            return 0;
+        }
+        let idx = ((x / Self::MIN_VALUE).log2() * 8.0).floor() as usize;
+        idx.min(Self::MAX_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the representative value quantile
+    /// queries report.
+    fn bucket_mid(i: usize) -> f64 {
+        Self::MIN_VALUE * Self::GROWTH.powf(i as f64 + 0.5)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let x = if x.is_finite() { x.max(0.0) } else { 0.0 };
+        self.stats.push(x);
+        let idx = Self::bucket_index(x);
+        if idx >= self.buckets.len() {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+    }
+
+    /// Fold another histogram in (bucket-wise add + Welford merge).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        self.stats.merge(&other.stats);
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (dst, &src) in self.buckets.iter_mut().zip(&other.buckets) {
+            *dst += src;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.stats.std()
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.stats.min()
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        self.stats.max()
+    }
+
+    /// Nearest-rank quantile estimate, `q` in `[0, 1]`: the midpoint of the
+    /// bucket holding the `⌈q·n⌉`-th smallest sample, clamped to the exact
+    /// observed `[min, max]`. Within a factor of √[`Self::GROWTH`] of the
+    /// true order statistic by construction. `None` on an empty series.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let n = self.stats.count();
+        if n == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let mid = Self::bucket_mid(i);
+                // min/max are exact, so clamping can only tighten the bound.
+                return Some(mid.clamp(self.stats.min, self.stats.max));
+            }
+        }
+        self.max()
     }
 }
 
@@ -142,9 +270,47 @@ mod tests {
         }
         assert!((w.mean() - s.mean).abs() < 1e-9);
         assert!((w.std() - s.std).abs() < 1e-9);
-        assert_eq!(w.min(), s.min);
-        assert_eq!(w.max(), s.max);
+        assert_eq!(w.min(), Some(s.min));
+        assert_eq!(w.max(), Some(s.max));
         assert_eq!(w.count(), 100);
+    }
+
+    #[test]
+    fn welford_empty_min_max_are_none() {
+        let w = Welford::new();
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.min(), None, "empty min must not leak the +inf sentinel");
+        assert_eq!(w.max(), None, "empty max must not leak the -inf sentinel");
+        let mut w = w;
+        w.push(3.0);
+        assert_eq!(w.min(), Some(3.0));
+        assert_eq!(w.max(), Some(3.0));
+    }
+
+    #[test]
+    fn welford_merge_matches_single_pass() {
+        let xs: Vec<f64> = (0..200).map(|i| (i as f64 * 0.7).cos() * 5.0 + 2.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (a, b) = xs.split_at(73);
+        let (mut wa, mut wb) = (Welford::new(), Welford::new());
+        a.iter().for_each(|&x| wa.push(x));
+        b.iter().for_each(|&x| wb.push(x));
+        wa.merge(&wb);
+        assert_eq!(wa.count(), whole.count());
+        assert!((wa.mean() - whole.mean()).abs() < 1e-9);
+        assert!((wa.std() - whole.std()).abs() < 1e-9);
+        assert_eq!(wa.min(), whole.min());
+        assert_eq!(wa.max(), whole.max());
+        // Merging an empty accumulator is the identity, both ways.
+        wa.merge(&Welford::new());
+        assert_eq!(wa.count(), 200);
+        let mut empty = Welford::new();
+        empty.merge(&whole);
+        assert_eq!(empty.count(), 200);
+        assert_eq!(empty.min(), whole.min());
     }
 
     #[test]
@@ -152,5 +318,80 @@ mod tests {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn histogram_basics() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.min(), None);
+        let mut h = h;
+        for x in [0.001, 0.002, 0.003] {
+            h.push(x);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 0.002).abs() < 1e-12, "mean is exact (Welford)");
+        assert_eq!(h.min(), Some(0.001));
+        assert_eq!(h.max(), Some(0.003));
+        // Single-bucket degenerate cases clamp to the exact extremes.
+        let p50 = h.quantile(0.5).unwrap();
+        assert!(p50 >= 0.001 && p50 <= 0.003, "{p50}");
+        // Zero and sub-resolution samples are representable, not panics.
+        h.push(0.0);
+        h.push(1e-12);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), Some(0.0));
+    }
+
+    #[test]
+    fn histogram_merge_equals_single_feed() {
+        let xs: Vec<f64> = (1..300).map(|i| i as f64 * 17e-6).collect();
+        let mut whole = LogHistogram::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let (a, b) = xs.split_at(101);
+        let (mut ha, mut hb) = (LogHistogram::new(), LogHistogram::new());
+        a.iter().for_each(|&x| ha.push(x));
+        b.iter().for_each(|&x| hb.push(x));
+        ha.merge(&hb);
+        assert_eq!(ha.count(), whole.count());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(ha.quantile(q), whole.quantile(q), "q={q}");
+        }
+        assert_eq!(ha.min(), whole.min());
+        assert_eq!(ha.max(), whole.max());
+        assert!((ha.mean() - whole.mean()).abs() < 1e-12);
+    }
+
+    /// The histogram's accuracy contract: p50/p95/p99 within one bucket's
+    /// relative error of the exact nearest-rank quantile, over random
+    /// workloads spanning several orders of magnitude.
+    #[test]
+    fn histogram_quantiles_within_one_bucket_of_exact() {
+        crate::util::proptest::property("log-histogram quantile error", 64, |rng| {
+            let n = rng.index(400) + 1;
+            let mut h = LogHistogram::new();
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Log-uniform over [1 µs, 10 s]: the serving-latency range.
+                let x = 1e-6 * 10f64.powf(rng.uniform() as f64 * 7.0);
+                h.push(x);
+                xs.push(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.95, 0.99] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = xs[rank - 1];
+                let est = h.quantile(q).unwrap();
+                // One bucket's relative error: the estimate and the exact
+                // order statistic share a bucket, so their ratio is bounded
+                // by the bucket growth factor.
+                let ratio = est / exact;
+                assert!(
+                    ratio >= 1.0 / LogHistogram::GROWTH && ratio <= LogHistogram::GROWTH,
+                    "q={q} n={n} exact={exact} est={est} ratio={ratio}"
+                );
+            }
+        });
     }
 }

@@ -1,0 +1,176 @@
+//! End-to-end test for the serving observability plane: a real `Server`
+//! started with tracing on, real TCP clients, then assertions over the
+//! `stats` snapshot (histogram percentiles + per-layer estimator gauges)
+//! and the `trace` op's flight-recorder dump.
+//!
+//! The acceptance criterion pinned here: every latency series exposes
+//! p50/p95/p99, the per-layer `alpha_predicted` / `alpha_achieved` /
+//! `sign_agreement` gauges are live, and each flight record's span timings
+//! sum (within slack) to the observed batch latency.
+
+use condcomp::config::{EstimatorConfig, ExperimentProfile};
+use condcomp::coordinator::protocol::Mode;
+use condcomp::coordinator::{Client, NativeBackend, RouterKind, Server, ServerConfig};
+use condcomp::data::synth::build_dataset;
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::linalg::Mat;
+use condcomp::nn::mlp::NoGater;
+use condcomp::nn::{Mlp, Trainer};
+use condcomp::util::Pcg32;
+use std::sync::Arc;
+
+fn trained_backend() -> NativeBackend {
+    let mut profile = ExperimentProfile::mnist_tiny();
+    profile.net.layers = vec![784, 32, 24, 10];
+    profile.train.epochs = 1;
+    profile.n_train = 200;
+    profile.n_valid = 50;
+    profile.n_test = 50;
+    let mut data = build_dataset(&profile, 42);
+    let mut rng = Pcg32::new(profile.train.seed, 1);
+    let mut net = Mlp::init(&profile.net, &mut rng);
+    let mut trainer = Trainer::new(profile.train.clone());
+    trainer.options.quiet = true;
+    trainer.train(&mut net, &mut data, &mut NoGater);
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 7);
+    NativeBackend::new(net, est, 32)
+}
+
+#[test]
+fn traced_server_exports_percentiles_gauges_and_flight_records() {
+    let server = Server::start(
+        Arc::new(trained_backend()),
+        ServerConfig {
+            shards: 2,
+            router: RouterKind::RoundRobin,
+            trace: true,
+            trace_ring: 32,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start");
+    assert!(condcomp::trace::enabled(), "--trace turns the flag on process-wide");
+
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut rng = Pcg32::seeded(0x7ACE);
+    for i in 0..12usize {
+        let mode = if i % 3 == 0 { Mode::Control } else { Mode::ConditionalAe };
+        let rows = 1 + (i % 2);
+        let x = Mat::randn(rows, 784, 0.5, &mut rng);
+        let resp = client.predict(x, mode).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.classes.len(), rows);
+    }
+
+    // --- stats: histogram percentiles on every latency series -----------
+    let stats = client.stats().unwrap();
+    assert!(stats.ok);
+    let payload = stats.payload.expect("stats payload");
+    let latency = payload.get("latency").and_then(|l| l.as_obj()).expect("latency map");
+    assert!(!latency.is_empty());
+    for (name, series) in latency {
+        for key in ["count", "mean_us", "min_us", "max_us", "p50_us", "p95_us", "p99_us"] {
+            assert!(series.get(key).is_some(), "series {name} missing {key}");
+        }
+        let p50 = series.get("p50_us").unwrap().as_f64().unwrap();
+        let p99 = series.get("p99_us").unwrap().as_f64().unwrap();
+        let max = series.get("max_us").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= max, "series {name}: {p50} / {p99} / {max}");
+    }
+    assert!(latency.contains_key("predict"), "batcher predict series exported");
+    assert!(
+        latency.keys().any(|k| k.starts_with("span_") || k.contains("_span_")),
+        "span series exported when tracing is on: {:?}",
+        latency.keys().collect::<Vec<_>>()
+    );
+
+    // --- stats: per-layer estimator gauges -------------------------------
+    let gauges = payload.get("gauges").and_then(|g| g.as_obj()).expect("gauges map");
+    assert_eq!(gauges.get("trace_enabled").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(gauges.get("trace_ring").and_then(|v| v.as_f64()), Some(32.0));
+    // Two conditional layers in the 784-32-24-10 net.
+    for layer in 0..2 {
+        for gauge in ["alpha_predicted", "alpha_achieved", "sign_agreement"] {
+            let key = format!("layer{layer}_{gauge}");
+            let v = gauges
+                .get(&key)
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("gauge {key} missing"));
+            assert!((0.0..=1.0).contains(&v), "{key} = {v}");
+        }
+    }
+    let skipped = gauges
+        .get("flops_skipped_frac")
+        .and_then(|v| v.as_f64())
+        .expect("flops_skipped_frac gauge");
+    assert!((0.0..=1.0).contains(&skipped), "flops_skipped_frac = {skipped}");
+
+    // --- trace op: flight-recorder dump ----------------------------------
+    let dump = client.trace().unwrap();
+    assert!(dump.ok, "{:?}", dump.error);
+    let payload = dump.payload.expect("trace payload");
+    assert_eq!(payload.get("ring_capacity").and_then(|v| v.as_f64()), Some(32.0));
+    let recorded = payload.get("recorded").and_then(|v| v.as_f64()).unwrap();
+    assert!(recorded >= 1.0, "at least one batch traced");
+    let records = payload.get("records").and_then(|r| r.as_arr()).expect("records");
+    assert!(!records.is_empty() && records.len() <= 32);
+
+    // Seq numbers are claimed just before the ring insert, so two shards
+    // can interleave; distinctness (not strict order) is the invariant.
+    let mut seqs: Vec<u64> =
+        records.iter().map(|r| r.get("seq").and_then(|v| v.as_f64()).unwrap() as u64).collect();
+    seqs.sort_unstable();
+    seqs.dedup();
+    assert_eq!(seqs.len(), records.len(), "record seq numbers are unique");
+    let mut saw_ae = false;
+    for r in records {
+        let shard = r.get("shard").and_then(|v| v.as_f64()).unwrap();
+        assert!(shard < 2.0, "shard id within --shards 2");
+        assert!(r.get("rows").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        assert!(r.get("items").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        let total_us = r.get("total_us").and_then(|v| v.as_f64()).unwrap();
+        assert!(total_us > 0.0);
+
+        let spans = r.get("spans").and_then(|s| s.as_arr()).expect("spans");
+        assert!(!spans.is_empty(), "traced batch carries spans");
+        // The top-level pipeline spans (prep → predict → reply) are
+        // disjoint sub-intervals of the batch window: their sum must not
+        // exceed the observed batch latency (small slack for clock
+        // granularity) and must account for the bulk of it (estimator and
+        // kernel spans nest *inside* predict, so they are excluded).
+        let mut top_sum = 0.0;
+        for s in spans {
+            let name = s.get("name").and_then(|v| v.as_str()).unwrap();
+            let us = s.get("us").and_then(|v| v.as_f64()).unwrap();
+            assert!(us >= 0.0);
+            if matches!(name, "prep" | "predict" | "reply") {
+                top_sum += us;
+            }
+        }
+        assert!(
+            top_sum <= total_us * 1.05 + 50.0,
+            "span sum {top_sum}us exceeds batch total {total_us}us"
+        );
+        assert!(
+            top_sum >= total_us * 0.3 - 100.0,
+            "span sum {top_sum}us does not account for batch total {total_us}us"
+        );
+
+        let mode = r.get("mode").and_then(|v| v.as_str()).unwrap();
+        if mode == "ae" {
+            saw_ae = true;
+            let names: Vec<&str> =
+                spans.iter().filter_map(|s| s.get("name").and_then(|v| v.as_str())).collect();
+            assert!(names.contains(&"estimator"), "ae batch spans {names:?}");
+            assert!(
+                names.iter().any(|n| n.starts_with("kernel_")),
+                "ae batch records its kernel spans: {names:?}"
+            );
+            let kernels = r.get("kernels").and_then(|k| k.as_arr()).unwrap();
+            assert!(!kernels.is_empty(), "ae batch records the kernels routed");
+        }
+    }
+    assert!(saw_ae, "conditional batches reached the recorder");
+
+    server.shutdown();
+}
