@@ -18,6 +18,7 @@ use crate::condcomp::registry::LayerOperands;
 use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer, WorkModel};
 use crate::config::{EstimatorConfig, NetConfig};
 use crate::exec::ExecCtx;
+use crate::coordinator::protocol::{Mode, Request, Response};
 use crate::coordinator::server::Client;
 use crate::coordinator::{NativeBackend, PoolMode, Server, ServerConfig};
 use crate::estimator::SignEstimatorSet;
@@ -187,6 +188,40 @@ impl TraceOverheadRow {
     }
 }
 
+/// One overload arm: a bounded-admission server driven at a fixed multiple
+/// of its measured saturation throughput by pipelining loopback clients.
+/// The `overload_sweep` column records how admission control degrades —
+/// accepted throughput should hold near saturation while the shed rate
+/// absorbs the excess, with and without quality-elastic dispatch.
+#[derive(Clone, Debug)]
+pub struct OverloadRow {
+    /// Offered load as a multiple of the measured saturation rps.
+    pub offered_x: f64,
+    /// Quality-elastic dispatch on for this arm.
+    pub elastic: bool,
+    /// Requests offered per second (sends actually realized).
+    pub offered_rps: f64,
+    /// Requests answered with logits per second.
+    pub accepted_rps: f64,
+    /// Fraction of offered requests shed with an overloaded reply.
+    pub shed_rate: f64,
+    /// p99 server-side latency of *accepted* requests, milliseconds.
+    pub p99_ms: f64,
+}
+
+impl OverloadRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_x", Json::Num(self.offered_x)),
+            ("elastic", Json::Bool(self.elastic)),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("accepted_rps", Json::Num(self.accepted_rps)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+        ])
+    }
+}
+
 /// The complete sweep result.
 #[derive(Clone, Debug)]
 pub struct ParallelSweep {
@@ -220,10 +255,16 @@ pub struct ParallelSweep {
     pub lease_vs_private: Vec<LeaseVsPrivateRow>,
     /// Serve throughput with span tracing off vs on.
     pub trace_overhead: TraceOverheadRow,
+    /// Bounded-admission behavior at offered loads of {0.5, 1, 2, 4}× the
+    /// measured saturation throughput, with elastic dispatch off and on.
+    pub overload_sweep: Vec<OverloadRow>,
 }
 
 /// Densities the sweep measures (the issue's α grid).
 pub const ALPHA_GRID: [f64; 4] = [0.05, 0.25, 0.5, 1.0];
+
+/// Offered-load multiples of measured saturation for the overload column.
+pub const OVERLOAD_GRID: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
 
 /// Run the full sweep. `dim` is the square GEMM dimension (512 for the
 /// acceptance target), `batch` the masked layer's batch rows, `threads_max`
@@ -485,6 +526,24 @@ pub fn run_parallel_sweep(
         rps_on: on.rps,
     };
 
+    // --- bounded admission under offered overload ------------------------
+    // Saturation is what the unthrottled loopback arm just measured at the
+    // same server shape; each overload arm then offers a fixed multiple of
+    // it against a server with a small per-shard queue bound, elastic
+    // dispatch off and on.
+    let saturation_rps = off.rps.max(1.0);
+    let mut overload_sweep = Vec::new();
+    for elastic_on in [false, true] {
+        for &mult in &OVERLOAD_GRID {
+            overload_sweep.push(measure_overload_arm(
+                mult,
+                elastic_on,
+                saturation_rps,
+                requests_per_client,
+            ));
+        }
+    }
+
     ParallelSweep {
         dim,
         batch,
@@ -499,6 +558,119 @@ pub fn run_parallel_sweep(
         shard_sweep,
         lease_vs_private,
         trace_overhead,
+        overload_sweep,
+    }
+}
+
+/// Drive a bounded-admission server at `offered_x` times the measured
+/// saturation throughput. Clients pipeline (send on a fixed interval
+/// without waiting for replies), so offered load genuinely exceeds what
+/// blocking round-trip clients could generate; every request still gets
+/// exactly one reply — logits or an explicit overloaded shed — which is
+/// what makes the accepted/shed accounting exact.
+fn measure_overload_arm(
+    offered_x: f64,
+    elastic: bool,
+    saturation_rps: f64,
+    per_client: usize,
+) -> OverloadRow {
+    use std::io::{BufRead, BufReader, Write};
+    let clients = 4usize;
+    let mut rng = Pcg32::seeded(0x0E71);
+    let net = Mlp::init(
+        &NetConfig { layers: vec![24, 32, 24, 8], weight_sigma: 0.3, bias_init: 0.1 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 3);
+    let backend = Arc::new(NativeBackend::new(net, est, 32));
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: std::time::Duration::from_millis(1),
+            shards: 2,
+            max_queue_depth: 4,
+            elastic,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("overload server");
+    let addr = server.local_addr;
+    // Per-client send interval realizing the offered rate across all clients.
+    let interval = clients as f64 / (saturation_rps * offered_x).max(1.0);
+    let t0 = crate::util::Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).expect("loopback connect");
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+                let writer = stream;
+                let sender = std::thread::spawn(move || {
+                    let mut out = writer;
+                    let mut rng = Pcg32::new(c as u64, 0x10AD);
+                    for i in 0..per_client {
+                        let req = Request::Predict {
+                            id: i as u64 + 1,
+                            mode: Mode::ConditionalAe,
+                            x: Mat::randn(1, 24, 0.5, &mut rng),
+                        };
+                        let line = req.to_json_line();
+                        out.write_all(line.as_bytes()).expect("send request");
+                        out.write_all(b"\n").expect("send request");
+                        out.flush().ok();
+                        if interval > 0.0 {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+                        }
+                    }
+                });
+                let mut accepted = 0usize;
+                let mut shed = 0usize;
+                let mut lat_us: Vec<f64> = Vec::new();
+                for _ in 0..per_client {
+                    let mut line = String::new();
+                    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                        break;
+                    }
+                    let resp = Response::parse(&line).expect("parse response");
+                    if resp.overloaded {
+                        shed += 1;
+                    } else {
+                        assert!(resp.ok, "unexpected error reply: {:?}", resp.error);
+                        accepted += 1;
+                        lat_us.push(resp.latency_us as f64);
+                    }
+                }
+                sender.join().expect("sender thread");
+                (accepted, shed, lat_us)
+            })
+        })
+        .collect();
+    let mut accepted = 0usize;
+    let mut shed = 0usize;
+    let mut lat_us: Vec<f64> = Vec::new();
+    for h in handles {
+        let (a, s, mut l) = h.join().expect("overload client");
+        accepted += a;
+        shed += s;
+        lat_us.append(&mut l);
+    }
+    let elapsed_s = t0.elapsed_s().max(1e-9);
+    server.shutdown();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let p99_ms = if lat_us.is_empty() {
+        0.0
+    } else {
+        lat_us[((lat_us.len() - 1) as f64 * 0.99) as usize] / 1e3
+    };
+    let offered = accepted + shed;
+    OverloadRow {
+        offered_x,
+        elastic,
+        offered_rps: offered as f64 / elapsed_s,
+        accepted_rps: accepted as f64 / elapsed_s,
+        shed_rate: shed as f64 / (offered as f64).max(1.0),
+        p99_ms,
     }
 }
 
@@ -654,6 +826,16 @@ impl ParallelSweep {
             self.trace_overhead.rps_on,
             self.trace_overhead.on_over_off()
         ));
+        for row in &self.overload_sweep {
+            lines.push(format!(
+                "serve overload: {:.1}× offered (elastic {}) → accepted {:.0} req/s, shed {:.0}%, p99 {:.2}ms",
+                row.offered_x,
+                if row.elastic { "on" } else { "off" },
+                row.accepted_rps,
+                row.shed_rate * 100.0,
+                row.p99_ms
+            ));
+        }
         lines
     }
 
@@ -694,6 +876,10 @@ impl ParallelSweep {
                 Json::Arr(self.lease_vs_private.iter().map(|r| r.to_json()).collect()),
             ),
             ("trace_overhead", self.trace_overhead.to_json()),
+            (
+                "overload_sweep",
+                Json::Arr(self.overload_sweep.iter().map(|r| r.to_json()).collect()),
+            ),
             (
                 "rows",
                 Json::Arr(self.rows.iter().map(|r| r.to_json()).collect()),
@@ -774,6 +960,17 @@ mod tests {
         assert!(sweep.trace_overhead.rps_on > 0.0 && sweep.trace_overhead.rps_on.is_finite());
         assert!(sweep.trace_overhead.on_over_off() > 0.0);
         assert!(!crate::trace::enabled(), "sweep must restore the trace flag");
+        // Overload column: every offered multiple × elastic arm measured;
+        // accounting is exact (accepted + shed == offered ⇒ shed_rate ≤ 1).
+        assert_eq!(sweep.overload_sweep.len(), 2 * OVERLOAD_GRID.len());
+        for (i, row) in sweep.overload_sweep.iter().enumerate() {
+            assert_eq!(row.elastic, i >= OVERLOAD_GRID.len());
+            assert_eq!(row.offered_x, OVERLOAD_GRID[i % OVERLOAD_GRID.len()]);
+            assert!(row.offered_rps > 0.0 && row.offered_rps.is_finite());
+            assert!(row.accepted_rps >= 0.0 && row.accepted_rps.is_finite());
+            assert!((0.0..=1.0).contains(&row.shed_rate), "{row:?}");
+            assert!(row.p99_ms >= 0.0 && row.p99_ms.is_finite());
+        }
 
         let json = sweep.to_json();
         let parsed = Json::parse(&json.to_string()).expect("self-parse");
@@ -825,6 +1022,18 @@ mod tests {
         assert!(trace_row.get("rps_off").and_then(|v| v.as_f64()).is_some());
         assert!(trace_row.get("rps_on").and_then(|v| v.as_f64()).is_some());
         assert!(trace_row.get("on_over_off").and_then(|v| v.as_f64()).is_some());
+        let overload_rows = parsed
+            .get("overload_sweep")
+            .and_then(|v| v.as_arr())
+            .expect("overload_sweep column");
+        assert_eq!(overload_rows.len(), sweep.overload_sweep.len());
+        assert!(overload_rows.iter().all(|r| {
+            r.get("offered_x").is_some()
+                && r.get("elastic").and_then(|e| e.as_bool()).is_some()
+                && r.get("accepted_rps").is_some()
+                && r.get("shed_rate").is_some()
+                && r.get("p99_ms").is_some()
+        }));
         let per_layer = parsed
             .get("per_layer_thresholds")
             .and_then(|v| v.as_arr())

@@ -345,11 +345,99 @@ impl DispatchPolicy {
         }
         best.map(|(_, _, k)| k).unwrap_or(KernelId::DENSE)
     }
+
+    /// [`Self::decide`] with quality-elastic degradation: when `pressure`
+    /// (the shard's queue fullness in `[0, 1]`) is at or above the
+    /// configured threshold, every non-masked-work kernel's cost is
+    /// multiplied by `elastic.dense_penalty`, biasing the argmin toward the
+    /// cheaper masked class (`masked`/`masked_simd`) — conditional
+    /// computation as a load-shedding mechanism. Below the threshold this
+    /// is exactly `decide`. Returns the pick plus whether it differs from
+    /// the unpressured choice (a *downgrade*, which callers log and meter).
+    ///
+    /// The elastic bias only reweights costs among `allowed`: it can never
+    /// select a kernel outside the allow-list, and since every kernel
+    /// computes the same function (within its declared equivalence tier),
+    /// pressure changes *which* kernel runs, never the result.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decide_elastic(
+        &self,
+        n: usize,
+        d: usize,
+        h: usize,
+        alpha: f64,
+        allowed: &[KernelId],
+        elastic: &ElasticConfig,
+        pressure: f64,
+    ) -> (KernelId, bool) {
+        let calm = self.decide(n, d, h, alpha, allowed);
+        if !elastic.engaged(pressure) {
+            return (calm, false);
+        }
+        let penalty = elastic.dense_penalty.max(1.0);
+        let mut best: Option<(f64, (u8, &'static str), KernelId)> = None;
+        for &k in allowed {
+            let mut c = self.cost(k, n, d, h, alpha);
+            if k.work() != WorkModel::AlphaScaled {
+                c *= penalty;
+            }
+            let key = (c, k.priority());
+            if best.map_or(true, |(bc, bp, _)| key < (bc, bp)) {
+                best = Some((c, k.priority(), k));
+            }
+        }
+        let pick = best.map(|(_, _, k)| k).unwrap_or(KernelId::DENSE);
+        (pick, pick != calm)
+    }
 }
 
 impl Default for DispatchPolicy {
     fn default() -> DispatchPolicy {
         DispatchPolicy::with_cost_ratio(DispatchPolicy::DEFAULT_COST_RATIO)
+    }
+}
+
+/// Quality-elastic dispatch knobs (`server.elastic` turns the mechanism
+/// on; these are the fixed degradation parameters). Under queue pressure
+/// the server degrades *compute per request* — cheaper kernel class,
+/// smaller estimator rank — never correctness or liveness: every elastic
+/// decision is logged (flight recorder) and metered
+/// (`elastic_downgrades`), and results stay within the chosen kernel's
+/// declared equivalence tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticConfig {
+    /// Queue pressure in `[0, 1]` at or above which degradation engages
+    /// (a step, not a ramp: hysteresis lives in the queue dynamics).
+    pub pressure_threshold: f64,
+    /// Multiplier applied to non-masked-work kernel costs while engaged —
+    /// how hard the argmin is biased toward the masked class.
+    pub dense_penalty: f64,
+    /// Fraction of the estimator rank kept while engaged (ceil, floor 1).
+    pub rank_frac: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> ElasticConfig {
+        ElasticConfig { pressure_threshold: 0.75, dense_penalty: 4.0, rank_frac: 0.5 }
+    }
+}
+
+impl ElasticConfig {
+    /// Whether degradation is active at this pressure.
+    pub fn engaged(&self, pressure: f64) -> bool {
+        pressure >= self.pressure_threshold
+    }
+
+    /// The estimator rank to use at this pressure: the full `rank` when
+    /// calm, `ceil(rank × rank_frac)` (clamped to `[1, rank]`) while
+    /// engaged. A smaller rank makes the sign estimate coarser — the mask
+    /// may differ — but the masked kernels still compute exact dot
+    /// products for every unit the mask keeps.
+    pub fn effective_rank(&self, rank: usize, pressure: f64) -> usize {
+        if rank == 0 || !self.engaged(pressure) {
+            return rank;
+        }
+        ((rank as f64 * self.rank_frac).ceil() as usize).clamp(1, rank)
     }
 }
 
@@ -793,5 +881,96 @@ mod tests {
         assert!((p1.cost_ratio() - DispatchPolicy::DEFAULT_COST_RATIO).abs() < 1e-12);
         // Out of range is a no-op, not a panic.
         table.set_layer_column(99, KernelId::DENSE, 1.0);
+    }
+
+    /// Quality-elastic dispatch: synthetic pressure shifts the argmin to
+    /// the masked class exactly at the configured thresholds, and reverts
+    /// when pressure clears. With cost ratio R and dense penalty P, the
+    /// masked kernel wins iff R·α < P — so the pressured flip point is
+    /// α* = P/R instead of the calm 1/R.
+    #[test]
+    fn elastic_pressure_shifts_the_argmin_at_the_configured_threshold() {
+        let (n, d, h) = (64, 512, 512);
+        let p = DispatchPolicy::with_cost_ratio(4.0); // calm flip at α = 0.25
+        let elastic = ElasticConfig {
+            pressure_threshold: 0.5,
+            dense_penalty: 2.0, // pressured flip at α = 2/4 = 0.5
+            rank_frac: 0.5,
+        };
+        // Calm (pressure below the threshold): exactly `decide`, never a
+        // downgrade.
+        for alpha in [0.05, 0.30, 0.45, 1.0] {
+            let (k, down) = p.decide_elastic(n, d, h, alpha, DM, &elastic, 0.49);
+            assert_eq!(k, p.decide(n, d, h, alpha, DM), "α = {alpha}");
+            assert!(!down, "no downgrade below the pressure threshold");
+        }
+        // Engaged (pressure at the threshold — the step is ≥): the flip
+        // point moves from 0.25 to 0.5.
+        let (k, down) = p.decide_elastic(n, d, h, 0.30, DM, &elastic, 0.5);
+        assert_eq!(k, KernelId::MASKED, "α = 0.30 downgrades under pressure");
+        assert!(down, "the pick differs from the calm argmin");
+        let (k, down) = p.decide_elastic(n, d, h, 0.45, DM, &elastic, 1.0);
+        assert_eq!(k, KernelId::MASKED);
+        assert!(down);
+        // Past the pressured flip point dense still wins — not a downgrade.
+        let (k, down) = p.decide_elastic(n, d, h, 0.55, DM, &elastic, 1.0);
+        assert_eq!(k, KernelId::DENSE);
+        assert!(!down);
+        // Already-masked regimes are not "downgrades" either.
+        let (k, down) = p.decide_elastic(n, d, h, 0.05, DM, &elastic, 1.0);
+        assert_eq!(k, KernelId::MASKED);
+        assert!(!down, "masked was already the calm pick");
+        // Pressure cleared: back to the calm argmin.
+        let (k, down) = p.decide_elastic(n, d, h, 0.30, DM, &elastic, 0.0);
+        assert_eq!(k, KernelId::DENSE);
+        assert!(!down);
+    }
+
+    /// The elastic bias can never escape the allow-list: with only
+    /// dense-work kernels allowed, any pressure and any penalty still pick
+    /// from the allowed set (and report no downgrade — the calm argmin over
+    /// the same set agrees).
+    #[test]
+    fn elastic_bias_never_selects_outside_the_allow_list() {
+        let p = DispatchPolicy::with_cost_ratio(4.0);
+        let elastic = ElasticConfig {
+            pressure_threshold: 0.0,
+            dense_penalty: 1e9,
+            rank_frac: 0.5,
+        };
+        let dense_only = &[KernelId::DENSE, KernelId::DENSE_PACKED];
+        for alpha in [0.05, 0.5, 1.0] {
+            let (k, down) = p.decide_elastic(64, 512, 512, alpha, dense_only, &elastic, 1.0);
+            assert!(dense_only.contains(&k), "picked {k} outside the allow-list");
+            assert!(!down, "uniform penalty over one work model changes nothing");
+        }
+        // Empty allow-list degrades to dense, exactly like `decide`.
+        let (k, _) = p.decide_elastic(64, 512, 512, 0.5, &[], &elastic, 1.0);
+        assert_eq!(k, KernelId::DENSE);
+        // Per-layer tables route elastic decisions through the same
+        // policies `decide` uses (the pinned-view path the backend takes).
+        let mut table = PolicyTable::uncalibrated(2);
+        table.set_layer(0, DispatchPolicy::with_cost_ratio(4.0));
+        let calm_elastic = ElasticConfig { pressure_threshold: 0.5, ..ElasticConfig::default() };
+        let (k, down) =
+            table.policy_for(0).decide_elastic(64, 512, 512, 0.30, DM, &calm_elastic, 1.0);
+        assert_eq!((k, down), (KernelId::MASKED, true));
+    }
+
+    /// The rank-shrink half of elastic degradation: full rank while calm,
+    /// `ceil(rank × frac)` clamped to `[1, rank]` while engaged.
+    #[test]
+    fn elastic_effective_rank_shrinks_only_under_pressure() {
+        let e = ElasticConfig { pressure_threshold: 0.75, dense_penalty: 4.0, rank_frac: 0.5 };
+        assert_eq!(e.effective_rank(8, 0.0), 8);
+        assert_eq!(e.effective_rank(8, 0.74), 8, "below the step");
+        assert_eq!(e.effective_rank(8, 0.75), 4, "the step is ≥");
+        assert_eq!(e.effective_rank(7, 1.0), 4, "ceil(3.5) = 4");
+        assert_eq!(e.effective_rank(1, 1.0), 1, "never below 1");
+        assert_eq!(e.effective_rank(0, 1.0), 0, "rank 0 stays 0");
+        let tiny = ElasticConfig { rank_frac: 0.01, ..e };
+        assert_eq!(tiny.effective_rank(8, 1.0), 1, "floor at 1");
+        let full = ElasticConfig { rank_frac: 1.0, ..e };
+        assert_eq!(full.effective_rank(8, 1.0), 8, "frac 1.0 keeps the full rank");
     }
 }

@@ -30,7 +30,7 @@ pub mod registry;
 
 pub use cond_mlp::CondMlp;
 pub use dispatch::{
-    CostColumn, DispatchPolicy, KernelId, PolicyTable, WorkModel, BUILTIN_KERNELS,
+    CostColumn, DispatchPolicy, ElasticConfig, KernelId, PolicyTable, WorkModel, BUILTIN_KERNELS,
 };
 pub use flops::{FlopBreakdown, LayerFlops};
 pub use masked_gemm::{relu_gate, MaskedLayer};

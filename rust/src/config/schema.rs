@@ -145,11 +145,32 @@ pub struct ServerSettings {
     /// CLI `--trace-ring`). The ring always exists (the `trace` protocol op
     /// dumps it); only recording is gated on tracing being enabled.
     pub trace_ring: usize,
+    /// Bounded admission (`server.max_queue_depth` / CLI
+    /// `--max-queue-depth`): per-shard queue depth at which new predict
+    /// requests are shed with an explicit overloaded reply. 0 = unbounded.
+    pub max_queue_depth: usize,
+    /// Per-request deadline in milliseconds (`server.deadline_ms` / CLI
+    /// `--deadline-ms`): enqueued items older than this at drain time get
+    /// an overloaded reply instead of being executed dead-on-arrival.
+    /// 0 = no deadline.
+    pub deadline_ms: u64,
+    /// Quality-elastic dispatch (`server.elastic` / CLI `--elastic`):
+    /// under queue pressure, bias kernel routing toward the cheap masked
+    /// class and truncate the estimator rank. Default false.
+    pub elastic: bool,
 }
 
 impl Default for ServerSettings {
     fn default() -> ServerSettings {
-        ServerSettings { shards: 0, router: "round-robin".into(), trace: false, trace_ring: 64 }
+        ServerSettings {
+            shards: 0,
+            router: "round-robin".into(),
+            trace: false,
+            trace_ring: 64,
+            max_queue_depth: 0,
+            deadline_ms: 0,
+            elastic: false,
+        }
     }
 }
 
@@ -454,6 +475,15 @@ impl ExperimentProfile {
         if let Some(x) = doc.get_usize("server.trace_ring") {
             self.server.trace_ring = x;
         }
+        if let Some(x) = doc.get_usize("server.max_queue_depth") {
+            self.server.max_queue_depth = x;
+        }
+        if let Some(x) = doc.get_usize("server.deadline_ms") {
+            self.server.deadline_ms = x as u64;
+        }
+        if let Some(b) = doc.get_bool("server.elastic") {
+            self.server.elastic = b;
+        }
         if let Some(s) = doc.get_str("dispatch.kernels") {
             self.dispatch.kernels = s
                 .split(',')
@@ -559,8 +589,12 @@ mod tests {
         assert_eq!(p.server.router, "round-robin");
         assert!(!p.server.trace, "tracing is opt-in");
         assert_eq!(p.server.trace_ring, 64);
+        assert_eq!(p.server.max_queue_depth, 0, "unbounded admission by default");
+        assert_eq!(p.server.deadline_ms, 0, "no deadline by default");
+        assert!(!p.server.elastic, "elastic dispatch is opt-in");
         let doc = TomlDoc::parse(
-            "[server]\nshards = 4\nrouter = \"least-depth\"\ntrace = true\ntrace_ring = 128",
+            "[server]\nshards = 4\nrouter = \"least-depth\"\ntrace = true\ntrace_ring = 128\n\
+             max_queue_depth = 256\ndeadline_ms = 50\nelastic = true",
         )
         .unwrap();
         p.apply_overrides(&doc);
@@ -568,6 +602,9 @@ mod tests {
         assert_eq!(p.server.router, "least-depth");
         assert!(p.server.trace);
         assert_eq!(p.server.trace_ring, 128);
+        assert_eq!(p.server.max_queue_depth, 256);
+        assert_eq!(p.server.deadline_ms, 50);
+        assert!(p.server.elastic);
     }
 
     #[test]

@@ -304,6 +304,13 @@ impl NativeBackend {
             None => self.registry(),
         };
         let allowed = registry.ids();
+        // Quality-elastic serving: under queue pressure the executor sets a
+        // pressure view on the ctx; when an elastic config is attached and
+        // engaged, the estimator runs at a truncated rank and the cost-table
+        // argmin is biased toward the cheap masked kernels. Pressure changes
+        // *which* registered kernel runs, never what any kernel computes.
+        let elastic = ctx.elastic().copied();
+        let pressure = ctx.pressure();
         let mut flops = FlopBreakdown::default();
         let depth = self.masked.len();
         let mut a = x.clone();
@@ -313,14 +320,45 @@ impl NativeBackend {
             // The mask buffer recycles through the arena like every other
             // per-batch activation (nothing allocated after warmup).
             let mut mask = Mat::from_vec(n, h, ctx.take_buf(n * h));
+            let full_rank = est.layers[l].rank();
+            let eff_rank = match &elastic {
+                Some(e) => e.effective_rank(full_rank, pressure),
+                None => full_rank,
+            };
             let sp = ctx.metrics().span("estimator");
-            est.layers[l].mask_into_ctx(&a, &mut mask, ctx);
+            if eff_rank < full_rank {
+                est.layers[l].mask_into_ctx_rank(&a, &mut mask, eff_rank, ctx);
+            } else {
+                est.layers[l].mask_into_ctx(&a, &mut mask, ctx);
+            }
             drop(sp);
+            if eff_rank < full_rank {
+                ctx.metrics().incr("elastic_rank_truncations");
+            }
             let alpha = mask.density() as f64;
             let mut out = Mat::from_vec(n, h, ctx.take_buf(n * h));
             // Per-layer cost table: each layer's shape has its own fitted
             // per-kernel columns; the argmin picks the kernel.
-            let kid = table.policy_for(l).decide(n, layer.in_dim(), h, alpha, &allowed);
+            let (kid, downgraded) = match &elastic {
+                Some(e) => table.policy_for(l).decide_elastic(
+                    n,
+                    layer.in_dim(),
+                    h,
+                    alpha,
+                    &allowed,
+                    e,
+                    pressure,
+                ),
+                None => (
+                    table.policy_for(l).decide(n, layer.in_dim(), h, alpha, &allowed),
+                    false,
+                ),
+            };
+            if downgraded {
+                ctx.metrics().incr("elastic_downgrades");
+                let sp = ctx.metrics().span_with("elastic", Some(kid.as_str()));
+                drop(sp);
+            }
             let kernel = registry
                 .get(kid)
                 .expect("decide() only returns registered kernels");
@@ -343,7 +381,7 @@ impl NativeBackend {
                 n,
                 layer.in_dim(),
                 h,
-                est.layers[l].rank(),
+                eff_rank,
                 computed,
             ));
             ctx.put_buf(mask.into_vec());

@@ -8,14 +8,25 @@
 //! and a closed batcher hands new items back to the caller instead of
 //! accepting them into a queue nothing will drain.
 //!
+//! Overload behavior (admission control): with a bound configured
+//! ([`DynamicBatcher::with_limits`]), a push onto a full queue is rejected
+//! as [`PushRejection::Overloaded`] — the caller owns the item and must
+//! reply (the server sends an explicit `overloaded` response, never a
+//! silent drop). With a per-request deadline configured, items that are
+//! dead on arrival at drain time (older than the deadline) are replied to
+//! with the same overloaded response *before* they cost any compute; they
+//! are never dropped without an answer. Queue fullness is also exported as
+//! a [`DynamicBatcher::pressure`] signal in `[0, 1]` that the executors
+//! feed to quality-elastic dispatch.
+//!
 //! The serving coordinator runs N of these behind a router
 //! ([`super::sharded::ShardedBatcher`]); this type stays the single-queue
 //! primitive.
 
-use super::protocol::Mode;
+use super::protocol::{Mode, Response};
 use crate::linalg::Mat;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -31,12 +42,50 @@ pub struct BatchItem {
     pub reply: Sender<super::protocol::Response>,
 }
 
+/// Why a push handed its item back. Either way the caller owns the item
+/// again and must reply to it — the batcher never strands a request.
+#[derive(Debug)]
+pub enum PushRejection {
+    /// The batcher is closed (server shutting down).
+    Closed(BatchItem),
+    /// The queue is at `max_queue_depth` (load shed — reply `overloaded`).
+    Overloaded(BatchItem),
+}
+
+impl PushRejection {
+    /// The rejected item, whichever way it bounced.
+    pub fn into_item(self) -> BatchItem {
+        match self {
+            PushRejection::Closed(it) | PushRejection::Overloaded(it) => it,
+        }
+    }
+
+    pub fn item(&self) -> &BatchItem {
+        match self {
+            PushRejection::Closed(it) | PushRejection::Overloaded(it) => it,
+        }
+    }
+
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, PushRejection::Overloaded(_))
+    }
+}
+
 /// Thread-safe batching queue.
 pub struct DynamicBatcher {
     queue: Mutex<VecDeque<BatchItem>>,
     available: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound: pushes beyond this depth are shed (0 = unbounded).
+    max_queue_depth: usize,
+    /// Per-request deadline: items older than this at drain time are
+    /// replied to as overloaded instead of executed (`None` = no deadline).
+    deadline: Option<Duration>,
+    /// Pushes shed at admission (queue full). Monotonic.
+    shed: AtomicU64,
+    /// Items replied to as dead-on-arrival at drain time. Monotonic.
+    expired: AtomicU64,
     /// Monotonic (false → true once). Checked under the queue lock where
     /// the push/drain invariant needs it, so a plain atomic suffices — no
     /// second mutex on the per-request hot path.
@@ -44,13 +93,29 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// Unbounded queue, no deadline — the pre-overload-control behavior.
     pub fn new(max_batch: usize, max_wait: Duration) -> DynamicBatcher {
+        DynamicBatcher::with_limits(max_batch, max_wait, 0, None)
+    }
+
+    /// Bounded queue (`max_queue_depth` items, 0 = unbounded) with an
+    /// optional per-request drain deadline.
+    pub fn with_limits(
+        max_batch: usize,
+        max_wait: Duration,
+        max_queue_depth: usize,
+        deadline: Option<Duration>,
+    ) -> DynamicBatcher {
         assert!(max_batch > 0);
         DynamicBatcher {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             max_batch,
             max_wait,
+            max_queue_depth,
+            deadline,
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
             closed: AtomicBool::new(false),
         }
     }
@@ -58,19 +123,27 @@ impl DynamicBatcher {
     /// Enqueue a request. After [`DynamicBatcher::close`] the item is handed
     /// back instead of being queued — a closed batcher's queue is only ever
     /// drained (shutdown ships what is already in flight), so silently
-    /// accepting the item would strand it with no worker to answer it. The
-    /// caller owns the rejected item and must reply to it.
-    pub fn push(&self, item: BatchItem) -> Result<(), BatchItem> {
+    /// accepting the item would strand it with no worker to answer it. A
+    /// push onto a full bounded queue is handed back as
+    /// [`PushRejection::Overloaded`]. Either way the caller owns the
+    /// rejected item and must reply to it.
+    pub fn push(&self, item: BatchItem) -> Result<(), PushRejection> {
         // The closed check happens under the queue lock so it serializes
         // against the drain's final empty-and-closed check (also under the
         // queue lock): either this item is enqueued before the drain's last
         // look at the queue (and ships), or the drain already saw
         // closed=true — in which case queue-lock ordering plus the flag's
         // monotonicity guarantees this load sees true too and the item is
-        // rejected. Never queued-after-drain and lost.
+        // rejected. Never queued-after-drain and lost. The depth bound is
+        // checked under the same lock, so depth can never exceed
+        // `max_queue_depth` even under racing pushers.
         let mut q = self.queue.lock().unwrap();
         if self.closed.load(Ordering::Relaxed) {
-            return Err(item);
+            return Err(PushRejection::Closed(item));
+        }
+        if self.max_queue_depth > 0 && q.len() >= self.max_queue_depth {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(PushRejection::Overloaded(item));
         }
         q.push_back(item);
         drop(q);
@@ -83,6 +156,31 @@ impl DynamicBatcher {
         self.queue.lock().unwrap().len()
     }
 
+    /// Queue fullness in `[0, 1]`: depth over `max_queue_depth`, or `0.0`
+    /// when unbounded. This is the per-shard `queue_pressure` signal the
+    /// executors export and quality-elastic dispatch keys off.
+    pub fn pressure(&self) -> f64 {
+        if self.max_queue_depth == 0 {
+            return 0.0;
+        }
+        (self.depth() as f64 / self.max_queue_depth as f64).clamp(0.0, 1.0)
+    }
+
+    /// The configured admission bound (0 = unbounded).
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_queue_depth
+    }
+
+    /// Pushes shed at admission so far (monotonic).
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Items replied to as deadline-expired at drain time so far (monotonic).
+    pub fn expired_count(&self) -> u64 {
+        self.expired.load(Ordering::Relaxed)
+    }
+
     /// Mark the batcher closed and wake all waiters (server shutdown).
     pub fn close(&self) {
         self.closed.store(true, Ordering::Relaxed);
@@ -93,30 +191,54 @@ impl DynamicBatcher {
         self.closed.load(Ordering::Relaxed)
     }
 
+    /// Reply `overloaded` to front items that outlived the deadline — work
+    /// that is dead on arrival must get an answer, not a silent drop, and
+    /// must not cost a forward pass. FIFO order plus a uniform deadline
+    /// means expiry is monotone from the front, so popping from the head
+    /// catches every expired item.
+    fn reply_expired(&self, q: &mut VecDeque<BatchItem>) {
+        let Some(deadline) = self.deadline else { return };
+        while let Some(front) = q.front() {
+            if front.enqueued.elapsed() <= deadline {
+                break;
+            }
+            let it = q.pop_front().expect("front was Some under the same lock");
+            self.expired.fetch_add(1, Ordering::Relaxed);
+            // A gone client (hung-up receiver) is fine; the reply is dropped
+            // exactly like any other response to a closed connection.
+            let _ = it.reply.send(Response::overloaded(it.id));
+        }
+    }
+
     /// Blocking: wait for the next batch. Returns `None` on shutdown.
     ///
     /// The batch contains consecutive items of one mode (the head's), with
-    /// total row count ≤ `max_batch`.
+    /// total row count ≤ `max_batch`. Deadline-expired items are replied to
+    /// (and skipped) here, at drain time.
     pub fn next_batch(&self) -> Option<Vec<BatchItem>> {
         let mut q = self.queue.lock().unwrap();
-        // Wait for a first item.
         loop {
-            if !q.is_empty() {
-                break;
-            }
-            if self.is_closed() {
-                return None;
-            }
-            let (guard, _timeout) = self
-                .available
-                .wait_timeout(q, Duration::from_millis(50))
-                .unwrap();
-            q = guard;
-        }
-        // Give latecomers a window to fill the batch.
-        let deadline = q.front().map(|i| i.enqueued + self.max_wait).unwrap();
-        loop {
-            let mode = q.front().unwrap().mode;
+            // Answer dead-on-arrival work first: it must not ride into a
+            // batch, and expiring the head may empty the queue entirely —
+            // which is why everything below re-checks `front` instead of
+            // assuming the queue it woke up to is still non-empty.
+            self.reply_expired(&mut q);
+            let Some(front) = q.front() else {
+                if self.is_closed() {
+                    return None;
+                }
+                let (guard, _timeout) = self
+                    .available
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+                continue;
+            };
+            // Give latecomers a window to fill the batch, anchored at the
+            // current head (recomputed every wakeup: another consumer or an
+            // expiry may have changed which item is at the front).
+            let mode = front.mode;
+            let batch_deadline = front.enqueued + self.max_wait;
             let rows: usize = q
                 .iter()
                 .take_while(|i| i.mode == mode)
@@ -136,12 +258,12 @@ impl DynamicBatcher {
                 filled >= self.max_batch
             };
             let now = Instant::now();
-            if full || now >= deadline || self.is_closed() {
+            if full || now >= batch_deadline || self.is_closed() {
                 let take = rows.max(1).min(q.len()); // an oversized head still ships
                 let batch: Vec<BatchItem> = q.drain(..take).collect();
                 return Some(batch);
             }
-            let wait = deadline.saturating_duration_since(now);
+            let wait = batch_deadline.saturating_duration_since(now);
             let (guard, _timeout) = self.available.wait_timeout(q, wait).unwrap();
             q = guard;
         }
@@ -233,7 +355,8 @@ mod tests {
         // Queued-before-close item still ships (shutdown drains)…
         let (after, _r2) = item(2, Mode::Control, 1);
         let rejected = b.push(after).expect_err("push after close must reject");
-        assert_eq!(rejected.id, 2, "rejected item handed back to the caller");
+        assert!(!rejected.is_overloaded(), "close rejection, not a shed");
+        assert_eq!(rejected.into_item().id, 2, "rejected item handed back to the caller");
         let batch = b.next_batch().expect("pre-close item drains");
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 1);
@@ -265,5 +388,100 @@ mod tests {
         // expires or immediately if full. 3 rows < 4 → waits, then ships 1.
         assert_eq!(batch.len(), 1);
         let _ = t0;
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_the_depth_limit() {
+        let b = DynamicBatcher::with_limits(4, Duration::from_millis(200), 3, None);
+        assert_eq!(b.pressure(), 0.0);
+        for i in 0..3 {
+            let (it, _rx) = item(i, Mode::Control, 1);
+            b.push(it).unwrap();
+        }
+        assert_eq!(b.depth(), 3);
+        assert_eq!(b.pressure(), 1.0);
+        let (it, _rx) = item(9, Mode::Control, 1);
+        let back = b.push(it).expect_err("4th push must shed");
+        assert!(back.is_overloaded());
+        assert_eq!(back.into_item().id, 9);
+        assert_eq!(b.shed_count(), 1);
+        assert_eq!(b.depth(), 3, "shed pushes never enter the queue");
+        // Draining frees capacity again.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pressure(), 0.0);
+        let (it, _rx) = item(10, Mode::Control, 1);
+        b.push(it).expect("capacity freed by the drain");
+    }
+
+    #[test]
+    fn unbounded_queue_reports_zero_pressure() {
+        let b = DynamicBatcher::new(2, Duration::from_millis(1));
+        for i in 0..50 {
+            let (it, _rx) = item(i, Mode::Control, 1);
+            b.push(it).unwrap();
+        }
+        assert_eq!(b.pressure(), 0.0, "no bound → no pressure signal");
+        assert_eq!(b.max_queue_depth(), 0);
+        assert_eq!(b.shed_count(), 0);
+    }
+
+    #[test]
+    fn deadline_expired_items_are_replied_to_not_dropped() {
+        let b = DynamicBatcher::with_limits(
+            8,
+            Duration::from_millis(1),
+            0,
+            Some(Duration::from_millis(20)),
+        );
+        let (dead, dead_rx) = item(1, Mode::Control, 1);
+        let (dead2, dead2_rx) = item(2, Mode::Control, 1);
+        b.push(dead).unwrap();
+        b.push(dead2).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        let (live, _live_rx) = item(3, Mode::Control, 1);
+        b.push(live).unwrap();
+        let batch = b.next_batch().expect("live item still ships");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 3, "only the non-expired item drains");
+        assert_eq!(b.expired_count(), 2);
+        // Both expired items got an explicit overloaded reply.
+        for rx in [dead_rx, dead2_rx] {
+            let resp = rx.try_recv().expect("expired item was replied to");
+            assert!(resp.overloaded, "{resp:?}");
+            assert!(!resp.ok);
+        }
+    }
+
+    /// Regression: a wakeup that observes an emptied queue must not panic.
+    /// With two consumers on one batcher, `close` wakes both; the first
+    /// drains the only item and the second re-evaluates on an empty queue —
+    /// the old code computed its wait deadline from `q.front().unwrap()`
+    /// once and then dereferenced the front again inside the loop, so the
+    /// second consumer (or any spurious wakeup after a concurrent drain)
+    /// panicked instead of returning.
+    #[test]
+    fn concurrent_consumers_survive_wakeups_on_an_emptied_queue() {
+        let b = Arc::new(DynamicBatcher::new(4, Duration::from_millis(200)));
+        let (it, _rx) = item(1, Mode::Control, 1);
+        b.push(it).unwrap();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || b.next_batch().map(|batch| batch.len()))
+            })
+            .collect();
+        // Let both consumers reach their waits (one holds the item and is
+        // inside the batching window; the other waits for a first item),
+        // then close: both wake, exactly one gets the batch.
+        std::thread::sleep(Duration::from_millis(50));
+        b.close();
+        let results: Vec<_> = consumers
+            .into_iter()
+            .map(|h| h.join().expect("consumer must not panic"))
+            .collect();
+        let mut got: Vec<_> = results.into_iter().flatten().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1], "exactly one consumer drained the single item");
     }
 }

@@ -39,7 +39,7 @@ pub mod server;
 pub mod scheduler;
 
 pub use backend::{Backend, BackendKind, NativeBackend, ScratchArena};
-pub use batcher::{BatchItem, DynamicBatcher};
+pub use batcher::{BatchItem, DynamicBatcher, PushRejection};
 pub use metrics::MetricsRegistry;
 pub use protocol::{Request, Response};
 pub use server::{Client, PoolMode, Server, ServerConfig};

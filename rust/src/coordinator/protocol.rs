@@ -8,6 +8,10 @@
 //!
 //! Response: `{"id": 7, "ok": true, "classes": [3], "logits": [[...]],
 //!             "latency_us": 812}` or `{"id": 7, "ok": false, "error": "..."}`.
+//! Load-shed responses carry an explicit marker so clients can tell a shed
+//! from a failure: `{"id": 7, "ok": false, "overloaded": true, "error":
+//! "server overloaded: request shed"}` — retry later, nothing is wrong with
+//! the request.
 
 use crate::io::json::Json;
 use crate::linalg::Mat;
@@ -161,15 +165,38 @@ pub struct Response {
     pub latency_us: u64,
     /// Arbitrary payload for stats responses.
     pub payload: Option<Json>,
+    /// Load-shed marker: the server rejected this request under overload
+    /// (queue full or deadline expired). Always paired with `ok: false`;
+    /// distinguishes "retry later" from a genuinely failed request.
+    pub overloaded: bool,
 }
 
 impl Response {
     pub fn ok(id: u64) -> Response {
-        Response { id, ok: true, error: None, classes: Vec::new(), logits: None, latency_us: 0, payload: None }
+        Response {
+            id,
+            ok: true,
+            error: None,
+            classes: Vec::new(),
+            logits: None,
+            latency_us: 0,
+            payload: None,
+            overloaded: false,
+        }
     }
 
     pub fn err(id: u64, msg: impl Into<String>) -> Response {
         Response { id, ok: false, error: Some(msg.into()), ..Response::ok(id) }
+    }
+
+    /// Explicit load-shed reply: the request was not executed because the
+    /// server is saturated (bounded queue full, or the item outlived its
+    /// deadline before a worker reached it).
+    pub fn overloaded(id: u64) -> Response {
+        Response {
+            overloaded: true,
+            ..Response::err(id, "server overloaded: request shed")
+        }
     }
 
     pub fn to_json_line(&self) -> String {
@@ -178,6 +205,9 @@ impl Response {
             ("ok", Json::Bool(self.ok)),
             ("latency_us", Json::Num(self.latency_us as f64)),
         ];
+        if self.overloaded {
+            fields.push(("overloaded", Json::Bool(true)));
+        }
         if let Some(e) = &self.error {
             fields.push(("error", Json::Str(e.clone())));
         }
@@ -220,6 +250,7 @@ impl Response {
             logits,
             latency_us: v.get("latency_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             payload: v.get("stats").cloned(),
+            overloaded: v.get("overloaded").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -311,6 +342,25 @@ mod tests {
         let back = Response::parse(&e.to_json_line()).unwrap();
         assert!(!back.ok);
         assert_eq!(back.error.as_deref(), Some("boom"));
+        assert!(!back.overloaded, "plain errors are not sheds");
+    }
+
+    /// The load-shed marker survives the wire in both directions, so
+    /// clients can tell "retry later" from a failed request.
+    #[test]
+    fn overloaded_marker_roundtrips() {
+        let shed = Response::overloaded(7);
+        assert!(!shed.ok && shed.overloaded);
+        let line = shed.to_json_line();
+        assert!(line.contains("\"overloaded\":true"), "{line}");
+        let back = Response::parse(&line).unwrap();
+        assert!(back.overloaded && !back.ok);
+        assert_eq!(back.id, 7);
+        assert!(back.error.as_deref().unwrap_or("").contains("overloaded"));
+        // Non-shed responses never carry the marker.
+        let ok_line = Response::ok(8).to_json_line();
+        assert!(!ok_line.contains("overloaded"), "{ok_line}");
+        assert!(!Response::parse(&ok_line).unwrap().overloaded);
     }
 
     /// Logits must survive the wire bit-exactly — awkward f32s included —

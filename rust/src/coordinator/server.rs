@@ -16,10 +16,11 @@
 //! same serial accumulation order wherever they land.
 
 use super::backend::Backend;
-use super::batcher::BatchItem;
+use super::batcher::{BatchItem, PushRejection};
 use super::metrics::MetricsRegistry;
 use super::protocol::{Mode, Request, Response};
 use super::sharded::{RouterKind, ShardedBatcher};
+use crate::condcomp::ElasticConfig;
 use crate::exec::{ExecCtx, MetricsScope};
 use crate::linalg::Mat;
 use crate::parallel::{PoolLease, ThreadPool};
@@ -27,7 +28,7 @@ use crate::trace::{FlightRecord, FlightRecorder, SpanCollector};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -75,6 +76,27 @@ pub struct ServerConfig {
     /// Flight-recorder capacity: the last N drained-batch records kept for
     /// the `trace` op (`server.trace_ring` / `--trace-ring`).
     pub trace_ring: usize,
+    /// Bounded admission: per-shard queue depth at which new predict
+    /// requests are shed with an explicit `overloaded` reply instead of
+    /// being enqueued (`server.max_queue_depth` / `--max-queue-depth`;
+    /// 0 = unbounded, the historical behavior).
+    pub max_queue_depth: usize,
+    /// Per-request deadline: enqueued items older than this at drain time
+    /// are replied to as `overloaded` instead of being executed
+    /// dead-on-arrival (`server.deadline_ms` / `--deadline-ms`; `None` =
+    /// no deadline).
+    pub deadline: Option<Duration>,
+    /// Quality-elastic dispatch: when a shard's queue pressure crosses the
+    /// elastic threshold, bias the kernel cost argmin toward the cheap
+    /// masked class and truncate the estimator rank
+    /// (`server.elastic` / `--elastic`). Off by default — pressure then
+    /// affects admission only, never kernel choice.
+    pub elastic: bool,
+    /// Ceiling on the connection-acceptor pool: acceptors are spawned on
+    /// demand (one more whenever every live acceptor is busy inside a
+    /// connection) up to this many. Not CLI-exposed; the default is far
+    /// above any realistic concurrent-connection count for this server.
+    pub max_acceptors: usize,
 }
 
 impl Default for ServerConfig {
@@ -88,6 +110,10 @@ impl Default for ServerConfig {
             pool_mode: PoolMode::Lease,
             trace: false,
             trace_ring: 64,
+            max_queue_depth: 0,
+            deadline: None,
+            elastic: false,
+            max_acceptors: 64,
         }
     }
 }
@@ -173,14 +199,19 @@ impl Server {
         }
         let num_shards = if cfg.shards == 0 { derive_shards(budget) } else { cfg.shards };
         let slices = crate::parallel::partition_threads(budget, num_shards);
-        let batcher = Arc::new(ShardedBatcher::new(
+        let batcher = Arc::new(ShardedBatcher::with_limits(
             num_shards,
             backend.max_batch(),
             cfg.max_wait,
+            cfg.max_queue_depth,
+            cfg.deadline,
             cfg.router,
         ));
         metrics.set_gauge("shards", num_shards as f64);
+        metrics.set_gauge("max_queue_depth", cfg.max_queue_depth as f64);
+        metrics.set_gauge("elastic_enabled", u8::from(cfg.elastic).into());
         let stop = Arc::new(AtomicBool::new(false));
+        let elastic = cfg.elastic;
         let mut threads = Vec::new();
 
         // One executor per shard: drain the shard's queue, run batches
@@ -241,17 +272,37 @@ impl Server {
                         drop(sp);
                         let scope = scope.with_spans(Arc::new(SpanCollector::default()));
                         let mut ctx = ExecCtx::over(lease).with_metrics(scope);
+                        if elastic {
+                            ctx = ctx.with_elastic(ElasticConfig::default());
+                        }
+                        // Deadline sheds happen inside the batcher (it owns
+                        // the reply channels); the executor exports them as
+                        // per-shard counter deltas after each drain.
+                        let mut seen_expired = 0u64;
                         while let Some(batch) = batcher.next_batch(shard) {
-                            let depth = batcher.shard(shard).depth();
+                            let queue = batcher.shard(shard);
+                            let depth = queue.depth();
+                            let pressure = queue.pressure();
+                            ctx.set_pressure(pressure);
                             execute_batch(
                                 shard,
                                 batch,
                                 backend.as_ref(),
                                 &mut ctx,
                                 depth,
+                                pressure,
                                 &recorder,
                             );
                             metrics.set_shard_gauge(shard, "depth", depth as f64);
+                            metrics.set_shard_gauge(shard, "queue_pressure", pressure);
+                            let expired = queue.expired_count();
+                            if expired > seen_expired {
+                                let delta = expired - seen_expired;
+                                seen_expired = expired;
+                                let sink = metrics.shard_sink(shard);
+                                sink.add("deadline_expired", delta);
+                                sink.add("shed_total", delta);
+                            }
                         }
                     })
                     .expect("spawn shard executor"),
@@ -259,42 +310,27 @@ impl Server {
         }
         metrics.set_gauge("threads_leased", pool.leased() as f64);
 
-        // Acceptor: non-blocking poll so shutdown is prompt.
+        // Acceptor pool: connection readers used to be spawned as one
+        // detached thread per connection — unbounded and unaccounted. Now a
+        // pool of acceptor threads shares the non-blocking listener; each
+        // acceptor serves the accepted connection *inline* and another
+        // acceptor is spawned on demand when the last free one goes busy,
+        // up to `max_acceptors`. Live/free counts are exported as gauges so
+        // saturation of the front door is visible from the `stats` op.
         {
-            let batcher = batcher.clone();
-            let metrics = metrics.clone();
-            let stop2 = stop.clone();
-            let backend = backend.clone();
-            let recorder2 = recorder.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("condcomp-acceptor".into())
-                    .spawn(move || {
-                        while !stop2.load(Ordering::Relaxed) {
-                            match listener.accept() {
-                                Ok((stream, _peer)) => {
-                                    metrics.incr("connections");
-                                    let batcher = batcher.clone();
-                                    let metrics = metrics.clone();
-                                    let stop3 = stop2.clone();
-                                    let backend = backend.clone();
-                                    let recorder = recorder2.clone();
-                                    std::thread::spawn(move || {
-                                        let _ = handle_connection(
-                                            stream, &batcher, backend.as_ref(), &metrics, &stop3,
-                                            pool, &recorder,
-                                        );
-                                    });
-                                }
-                                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                    std::thread::sleep(Duration::from_millis(5));
-                                }
-                                Err(_) => break,
-                            }
-                        }
-                    })
-                    .expect("spawn acceptor"),
-            );
+            let acceptors = Arc::new(AcceptorPool {
+                listener,
+                max: cfg.max_acceptors.max(1),
+                live: AtomicUsize::new(0),
+                free: AtomicUsize::new(0),
+                batcher: batcher.clone(),
+                backend,
+                metrics: metrics.clone(),
+                stop: stop.clone(),
+                pool,
+                recorder: recorder.clone(),
+            });
+            AcceptorPool::spawn_acceptor(&acceptors);
         }
 
         Ok(Server { local_addr, metrics, recorder, batcher, stop, threads })
@@ -334,6 +370,91 @@ impl Drop for Server {
     }
 }
 
+/// The connection front door: a pool of acceptor threads sharing one
+/// non-blocking listener. Each acceptor serves its accepted connection
+/// inline (reader loop + per-connection writer thread); when the last free
+/// acceptor goes busy another one is spawned, up to `max` — so concurrent
+/// connections are bounded and accounted (`acceptors_live` /
+/// `acceptors_free` gauges) instead of each connection spawning an
+/// untracked thread. Acceptors are detached: they observe the stop flag
+/// between polls and exit on their own, so shutdown never blocks behind a
+/// client that is still connected.
+struct AcceptorPool {
+    listener: TcpListener,
+    max: usize,
+    /// Acceptor threads currently running.
+    live: AtomicUsize,
+    /// Acceptors currently polling the listener (not serving a connection).
+    free: AtomicUsize,
+    batcher: Arc<ShardedBatcher>,
+    backend: Arc<dyn Backend>,
+    metrics: Arc<MetricsRegistry>,
+    stop: Arc<AtomicBool>,
+    pool: &'static ThreadPool,
+    recorder: Arc<FlightRecorder>,
+}
+
+impl AcceptorPool {
+    /// Spawn one more acceptor if the ceiling allows; a no-op at `max`.
+    fn spawn_acceptor(this: &Arc<AcceptorPool>) {
+        if this.live.fetch_add(1, Ordering::AcqRel) >= this.max {
+            this.live.fetch_sub(1, Ordering::AcqRel);
+            return;
+        }
+        this.free.fetch_add(1, Ordering::AcqRel);
+        this.export_gauges();
+        let me = this.clone();
+        let n = this.live.load(Ordering::Relaxed);
+        let _ = std::thread::Builder::new()
+            .name(format!("condcomp-acceptor-{n}"))
+            .spawn(move || me.run())
+            .expect("spawn acceptor");
+    }
+
+    fn run(self: Arc<AcceptorPool>) {
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // Going busy: if that empties the free set and there is
+                    // headroom, add an acceptor so the next connection does
+                    // not wait behind this one.
+                    if self.free.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        AcceptorPool::spawn_acceptor(&self);
+                    }
+                    self.export_gauges();
+                    self.metrics.incr("connections");
+                    let _ = handle_connection(
+                        stream,
+                        &self.batcher,
+                        self.backend.as_ref(),
+                        &self.metrics,
+                        &self.stop,
+                        self.pool,
+                        &self.recorder,
+                    );
+                    self.free.fetch_add(1, Ordering::AcqRel);
+                    self.export_gauges();
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        // Exiting from the polling state: leave both counts consistent.
+        self.live.fetch_sub(1, Ordering::AcqRel);
+        self.free.fetch_sub(1, Ordering::AcqRel);
+        self.export_gauges();
+    }
+
+    fn export_gauges(&self) {
+        self.metrics
+            .set_gauge("acceptors_live", self.live.load(Ordering::Relaxed) as f64);
+        self.metrics
+            .set_gauge("acceptors_free", self.free.load(Ordering::Relaxed) as f64);
+    }
+}
+
 /// Dumps the flight recorder to stderr if the owning executor thread
 /// unwinds — the last N batch records are the post-mortem.
 struct PanicFlightDump {
@@ -364,6 +485,7 @@ fn execute_batch(
     backend: &dyn Backend,
     ctx: &mut ExecCtx<'_>,
     queue_depth: usize,
+    pressure: f64,
     recorder: &FlightRecorder,
 ) {
     let t_batch = Instant::now();
@@ -475,6 +597,7 @@ fn execute_batch(
             mode: mode.as_str(),
             kernels,
             queue_depth,
+            pressure,
             queue_wait_us: queue_wait * 1e6,
             total_us: t_batch.elapsed().as_secs_f64() * 1e6,
             spans,
@@ -594,15 +717,26 @@ fn handle_connection(
                 if let Some(t) = t_route {
                     metrics.observe_latency("span_route", t.elapsed().as_secs_f64());
                 }
-                if let Err(rejected) = pushed {
+                match pushed {
+                    Ok(_shard) => {}
+                    // Bounded admission: the shard's queue is at its depth
+                    // limit — shed with an explicit overloaded reply (the
+                    // client can back off and retry) instead of queueing
+                    // work that would miss its deadline anyway.
+                    Err(PushRejection::Overloaded(it)) => {
+                        metrics.incr("shed_total");
+                        let _ = tx.send(Response::overloaded(it.id));
+                    }
                     // Batcher closed (shutdown in progress): the item is
                     // handed back, so the client still gets an answer
                     // instead of a silently dropped request.
-                    metrics.incr("rejected");
-                    let _ = tx.send(Response::err(
-                        rejected.id,
-                        "server shutting down: request rejected",
-                    ));
+                    Err(PushRejection::Closed(it)) => {
+                        metrics.incr("rejected");
+                        let _ = tx.send(Response::err(
+                            it.id,
+                            "server shutting down: request rejected",
+                        ));
+                    }
                 }
             }
         }

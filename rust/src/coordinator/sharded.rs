@@ -23,7 +23,7 @@
 //!   per-request outputs are bit-identical between 1 and N shards (asserted
 //!   end-to-end in `tests/serve_e2e.rs`).
 
-use super::batcher::{BatchItem, DynamicBatcher};
+use super::batcher::{BatchItem, DynamicBatcher, PushRejection};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
@@ -142,14 +142,14 @@ pub struct ShardedBatcher {
 
 impl ShardedBatcher {
     /// `num_shards` queues (clamped to ≥ 1), each with the given
-    /// `max_batch`/`max_wait`, routed by `kind`.
+    /// `max_batch`/`max_wait`, routed by `kind`. Unbounded, no deadline.
     pub fn new(
         num_shards: usize,
         max_batch: usize,
         max_wait: Duration,
         kind: RouterKind,
     ) -> ShardedBatcher {
-        ShardedBatcher::with_router(num_shards, max_batch, max_wait, router_for(kind))
+        ShardedBatcher::with_limits(num_shards, max_batch, max_wait, 0, None, kind)
     }
 
     /// As [`ShardedBatcher::new`] with a caller-supplied routing policy.
@@ -159,10 +159,45 @@ impl ShardedBatcher {
         max_wait: Duration,
         router: Box<dyn ShardRouter>,
     ) -> ShardedBatcher {
+        ShardedBatcher::with_limits_router(num_shards, max_batch, max_wait, 0, None, router)
+    }
+
+    /// Fully-specified constructor: per-shard admission bound
+    /// (`max_queue_depth` items per shard, 0 = unbounded) and optional
+    /// per-request drain deadline, threaded to every shard's
+    /// [`DynamicBatcher::with_limits`].
+    pub fn with_limits(
+        num_shards: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        max_queue_depth: usize,
+        deadline: Option<Duration>,
+        kind: RouterKind,
+    ) -> ShardedBatcher {
+        ShardedBatcher::with_limits_router(
+            num_shards,
+            max_batch,
+            max_wait,
+            max_queue_depth,
+            deadline,
+            router_for(kind),
+        )
+    }
+
+    /// As [`ShardedBatcher::with_limits`] with a caller-supplied routing
+    /// policy.
+    pub fn with_limits_router(
+        num_shards: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        max_queue_depth: usize,
+        deadline: Option<Duration>,
+        router: Box<dyn ShardRouter>,
+    ) -> ShardedBatcher {
         let num_shards = num_shards.max(1);
         ShardedBatcher {
             shards: (0..num_shards)
-                .map(|_| DynamicBatcher::new(max_batch, max_wait))
+                .map(|_| DynamicBatcher::with_limits(max_batch, max_wait, max_queue_depth, deadline))
                 .collect(),
             router,
         }
@@ -182,14 +217,16 @@ impl ShardedBatcher {
     }
 
     /// Route and enqueue one item. On success returns the shard index the
-    /// item landed on; after [`ShardedBatcher::close`] the item is handed
-    /// back (same contract as [`DynamicBatcher::push`]).
+    /// item landed on; after [`ShardedBatcher::close`] (or when the target
+    /// shard's bounded queue is full) the item is handed back inside a
+    /// [`PushRejection`] (same contract as [`DynamicBatcher::push`]).
     ///
     /// The routing decision uses a snapshot of queue depths; depths may move
     /// between the snapshot and the enqueue, which can cost least-depth
     /// optimality but never correctness — the target shard accepts the item
-    /// or (if the batcher closed in between) rejects it back to the caller.
-    pub fn push(&self, item: BatchItem) -> Result<usize, BatchItem> {
+    /// or (if the batcher closed or filled in between) rejects it back to
+    /// the caller.
+    pub fn push(&self, item: BatchItem) -> Result<usize, PushRejection> {
         let depths = if self.router.needs_depths() { self.depths() } else { Vec::new() };
         let shard = self
             .router
@@ -201,6 +238,16 @@ impl ShardedBatcher {
     /// Queue depth per shard (router input; exported as gauges).
     pub fn depths(&self) -> Vec<usize> {
         self.shards.iter().map(|s| s.depth()).collect()
+    }
+
+    /// Total pushes shed at admission across shards (monotonic).
+    pub fn shed_count(&self) -> u64 {
+        self.shards.iter().map(|s| s.shed_count()).sum()
+    }
+
+    /// Total deadline-expired replies across shards (monotonic).
+    pub fn expired_count(&self) -> u64 {
+        self.shards.iter().map(|s| s.expired_count()).sum()
     }
 
     /// Total queued items across shards.
@@ -298,7 +345,8 @@ mod tests {
         assert!(b.is_closed());
         let (d, _r3) = item(3);
         let back = b.push(d).expect_err("closed batcher must hand the item back");
-        assert_eq!(back.id, 3);
+        assert!(!back.is_overloaded(), "close rejection, not a shed");
+        assert_eq!(back.into_item().id, 3);
         // Both shards drain their pre-close item, then report done.
         let drained: usize = (0..2)
             .map(|i| {
@@ -308,6 +356,32 @@ mod tests {
             })
             .sum();
         assert_eq!(drained, 2);
+    }
+
+    #[test]
+    fn bounded_shards_shed_independently() {
+        let b = ShardedBatcher::with_limits(
+            2,
+            8,
+            Duration::from_millis(5),
+            2,
+            None,
+            RouterKind::RoundRobin,
+        );
+        // Fill both shards (round-robin: 2 per shard).
+        for i in 0..4u64 {
+            let (it, _rx) = item(i);
+            b.push(it).unwrap();
+        }
+        assert_eq!(b.depths(), vec![2, 2]);
+        let (it, _rx) = item(9);
+        let back = b.push(it).expect_err("full shard must shed");
+        assert!(back.is_overloaded());
+        assert_eq!(back.into_item().id, 9);
+        assert_eq!(b.shed_count(), 1);
+        assert_eq!(b.shard(0).pressure(), 1.0);
+        // Shed pushes never changed any queue.
+        assert_eq!(b.depth(), 4);
     }
 
     #[test]

@@ -128,6 +128,56 @@ impl SignEstimator {
         self.mask_into_par(input, out, ctx.lease());
     }
 
+    /// [`Self::mask_into_ctx`] with an explicit estimator rank override —
+    /// the quality-elastic serving path. At `rank >= self.rank()` this is
+    /// the unmodified (bit-identical) full-rank path; below it the low-rank
+    /// product uses only the leading `rank` SVD factors, trading sign
+    /// accuracy for proportionally fewer estimator FLOPs while the server
+    /// rides out an overload spike.
+    pub fn mask_into_ctx_rank(
+        &self,
+        input: &Mat,
+        out: &mut Mat,
+        rank: usize,
+        ctx: &mut ExecCtx<'_>,
+    ) {
+        if rank >= self.factors.rank() {
+            self.mask_into_ctx(input, out, ctx);
+            return;
+        }
+        let n = input.rows();
+        let h = self.layer_bias.len();
+        assert_eq!(out.shape(), (n, h), "mask output shape mismatch");
+        let r = rank.max(1);
+        let b = self.bias;
+        let par = ctx.lease();
+        if par.width() == 1 || n < 2 || n * h < 4096 {
+            let mut tmp = vec![0.0f32; n * r];
+            self.factors
+                .apply_view_rank_into(input.view(), r, &mut tmp, out.as_mut_slice());
+            for i in 0..n {
+                let zrow = out.row_mut(i);
+                for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
+                    *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
+                }
+            }
+            return;
+        }
+        let rows_per = chunk_rows(n, par.width(), 1);
+        par_row_chunks(par, out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            let mut tmp = vec![0.0f32; rows * r];
+            self.factors
+                .apply_view_rank_into(input.view_rows(row0, rows), r, &mut tmp, band);
+            for i in 0..rows {
+                let zrow = &mut band[i * h..(i + 1) * h];
+                for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
+                    *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
+                }
+            }
+        });
+    }
+
     /// [`Self::mask`] with the low-rank prediction computed for row shards
     /// in parallel on an execution target (pool or lease slice). Each shard
     /// *borrows* its row range from the input ([`Mat::view_rows`] — no copy
@@ -370,6 +420,56 @@ mod tests {
             }
             assert_eq!(pool.leased(), 0);
         }
+    }
+
+    /// The elastic rank-override entry point: at (or above) the fitted rank
+    /// it must stay bit-identical to the normal path; below it the mask is
+    /// the leading-factor truncation — still a valid 0/1 mask, typically a
+    /// worse sign predictor — for any thread count or lease width.
+    #[test]
+    fn mask_into_ctx_rank_full_rank_is_bit_identical_and_truncation_is_deterministic() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(101);
+        let w = Mat::randn(30, 80, 0.3, &mut rng);
+        let bias: Vec<f32> = (0..80).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let est = SignEstimator::fit(&w, &bias, 6, 0.05);
+        let x = Mat::randn(90, 30, 1.0, &mut rng);
+        let want = est.mask(&x);
+        // rank >= fitted rank → the unmodified path, bit-identical.
+        for r in [6usize, 100] {
+            let pool = crate::parallel::ThreadPool::new(2);
+            let mut ctx = ExecCtx::over(pool.lease(2));
+            let mut out = Mat::full(90, 80, f32::NAN);
+            est.mask_into_ctx_rank(&x, &mut out, r, &mut ctx);
+            assert_eq!(out.as_slice(), want.as_slice(), "rank={r}");
+        }
+        // Truncated rank: deterministic across thread counts and lease
+        // widths, all entries 0/1, and distinct from full rank here.
+        let mut reference: Option<Mat> = None;
+        for threads in [1usize, 2, 7] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            for grant in [1usize, threads] {
+                let mut ctx = ExecCtx::over(pool.lease(grant));
+                let mut out = Mat::full(90, 80, f32::NAN);
+                est.mask_into_ctx_rank(&x, &mut out, 2, &mut ctx);
+                assert!(out.as_slice().iter().all(|&v| v == 0.0 || v == 1.0));
+                match &reference {
+                    None => reference = Some(out),
+                    Some(want) => assert_eq!(
+                        out.as_slice(),
+                        want.as_slice(),
+                        "threads={threads} lease={grant}"
+                    ),
+                }
+            }
+            assert_eq!(pool.leased(), 0);
+        }
+        let truncated = reference.unwrap();
+        assert_ne!(
+            truncated.as_slice(),
+            want.as_slice(),
+            "rank-2 truncation should change at least one decision here"
+        );
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! view, and metrics scope.
 
 use super::arena::ScratchArena;
-use crate::condcomp::{KernelRegistry, PolicyTable};
+use crate::condcomp::{ElasticConfig, KernelRegistry, PolicyTable};
 use crate::coordinator::metrics::{MetricsRegistry, ShardSink};
 use crate::parallel::{PoolLease, ThreadPool};
 use crate::trace::{Span, SpanCollector};
@@ -192,6 +192,13 @@ pub struct ExecCtx<'p> {
     policy: Option<PolicyTable>,
     registry: Option<Arc<KernelRegistry>>,
     metrics: MetricsScope,
+    /// The owning shard's queue pressure in `[0, 1]` (0.0 = calm /
+    /// unbounded). Executors refresh it per batch; backends read it for
+    /// quality-elastic dispatch.
+    pressure: f64,
+    /// Elastic-degradation knobs; `None` = elastic dispatch off (the
+    /// default — pressure is then observational only).
+    elastic: Option<ElasticConfig>,
 }
 
 impl<'p> ExecCtx<'p> {
@@ -203,6 +210,8 @@ impl<'p> ExecCtx<'p> {
             policy: None,
             registry: None,
             metrics: MetricsScope::none(),
+            pressure: 0.0,
+            elastic: None,
         }
     }
 
@@ -262,6 +271,29 @@ impl<'p> ExecCtx<'p> {
     pub fn with_metrics(mut self, metrics: MetricsScope) -> ExecCtx<'p> {
         self.metrics = metrics;
         self
+    }
+
+    /// Enable quality-elastic dispatch with these degradation knobs (shard
+    /// executors, when `server.elastic` is on).
+    pub fn with_elastic(mut self, elastic: ElasticConfig) -> ExecCtx<'p> {
+        self.elastic = Some(elastic);
+        self
+    }
+
+    /// The elastic knobs, if elastic dispatch is enabled on this ctx.
+    pub fn elastic(&self) -> Option<&ElasticConfig> {
+        self.elastic.as_ref()
+    }
+
+    /// Refresh the queue-pressure view (clamped to `[0, 1]`; NaN → 0).
+    /// Executors call this once per batch before `predict_ctx`.
+    pub fn set_pressure(&mut self, pressure: f64) {
+        self.pressure = if pressure.is_finite() { pressure.clamp(0.0, 1.0) } else { 0.0 };
+    }
+
+    /// The owning shard's queue pressure in `[0, 1]`.
+    pub fn pressure(&self) -> f64 {
+        self.pressure
     }
 
     /// The pool slice this ctx executes on.
@@ -324,6 +356,25 @@ mod tests {
         let arena = ctx.into_arena();
         assert_eq!(arena.len(), 1);
         assert_eq!(pool.leased(), 0, "into_arena drops the lease");
+    }
+
+    #[test]
+    fn pressure_and_elastic_views_default_off_and_clamp() {
+        let pool = ThreadPool::new(2);
+        let mut ctx = ExecCtx::over(pool.lease(1));
+        assert_eq!(ctx.pressure(), 0.0);
+        assert!(ctx.elastic().is_none(), "elastic dispatch is opt-in");
+        ctx.set_pressure(0.6);
+        assert_eq!(ctx.pressure(), 0.6);
+        ctx.set_pressure(7.0);
+        assert_eq!(ctx.pressure(), 1.0, "clamped to [0, 1]");
+        ctx.set_pressure(-1.0);
+        assert_eq!(ctx.pressure(), 0.0);
+        ctx.set_pressure(f64::NAN);
+        assert_eq!(ctx.pressure(), 0.0, "NaN is treated as calm");
+        let ctx = ctx.with_elastic(crate::condcomp::ElasticConfig::default());
+        let e = ctx.elastic().expect("elastic knobs attached");
+        assert_eq!(e.pressure_threshold, 0.75);
     }
 
     #[test]

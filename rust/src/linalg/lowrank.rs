@@ -102,6 +102,57 @@ impl LowRank {
         matmul_view_into(MatView::new(a.rows(), self.rank(), tmp), &self.v, out);
     }
 
+    /// [`Self::apply_view_into`] restricted to the leading `r` factor
+    /// columns/rows: computes `a · U[:, :r] · V[:r, :]` — the best rank-`r`
+    /// truncation of the stored factorization. At `r == rank()` this
+    /// delegates to [`Self::apply_view_into`] and is bit-identical to it;
+    /// below full rank it trades approximation quality for an `r/rank`
+    /// reduction in estimator FLOPs (the quality-elastic serving path).
+    /// `tmp` must hold `a.rows × r`, `out` must hold `a.rows × h`.
+    pub fn apply_view_rank_into(&self, a: MatView<'_>, r: usize, tmp: &mut [f32], out: &mut [f32]) {
+        let full = self.rank();
+        let r = r.clamp(1, full);
+        if r == full {
+            self.apply_view_into(a, tmp, out);
+            return;
+        }
+        let (rows, k) = (a.rows(), a.cols());
+        let h = self.v.cols();
+        assert_eq!(k, self.u.rows());
+        assert!(tmp.len() >= rows * r && out.len() >= rows * h);
+        // Stage 1: tmp = a · U[:, :r]. U's leading r columns are strided in
+        // the row-major factor, so walk rows of U and accumulate.
+        tmp[..rows * r].fill(0.0);
+        for i in 0..rows {
+            let arow = a.row(i);
+            let trow = &mut tmp[i * r..(i + 1) * r];
+            for (p, &aip) in arow.iter().enumerate() {
+                if aip == 0.0 {
+                    continue;
+                }
+                let urow = &self.u.row(p)[..r];
+                for (t, &u) in trow.iter_mut().zip(urow) {
+                    *t += aip * u;
+                }
+            }
+        }
+        // Stage 2: out = tmp · V[:r, :].
+        out[..rows * h].fill(0.0);
+        for i in 0..rows {
+            let trow = &tmp[i * r..(i + 1) * r];
+            let orow = &mut out[i * h..(i + 1) * h];
+            for (p, &tip) in trow.iter().enumerate() {
+                if tip == 0.0 {
+                    continue;
+                }
+                let vrow = self.v.row(p);
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o += tip * v;
+                }
+            }
+        }
+    }
+
     /// Approximation error `‖W − U·V‖_F / ‖W‖_F`.
     pub fn rel_error(&self, w: &Mat) -> f32 {
         let diff = w.zip(&self.to_dense(), |a, b| a - b);
@@ -250,6 +301,53 @@ mod tests {
             let mut out = vec![f32::NAN; rows * 9];
             lr.apply_view_into(a.view_rows(start, rows), &mut tmp, &mut out);
             assert_eq!(&out[..], &full.as_slice()[start * 9..(start + rows) * 9]);
+        }
+    }
+
+    #[test]
+    fn apply_view_rank_into_full_rank_is_bit_identical() {
+        let mut rng = Pcg32::seeded(23);
+        let w = Mat::randn(12, 9, 1.0, &mut rng);
+        let a = Mat::randn(6, 12, 1.0, &mut rng);
+        let lr = LowRank::truncate(&w, 5);
+        let mut tmp = vec![f32::NAN; 6 * 5];
+        let mut want = vec![f32::NAN; 6 * 9];
+        lr.apply_view_into(a.view_rows(0, 6), &mut tmp, &mut want);
+        let mut tmp2 = vec![f32::NAN; 6 * 5];
+        let mut got = vec![f32::NAN; 6 * 9];
+        lr.apply_view_rank_into(a.view_rows(0, 6), lr.rank(), &mut tmp2, &mut got);
+        assert_eq!(got, want, "full-rank truncation must stay bit-identical");
+        // Over-asking clamps to full rank and stays on the exact path.
+        got.fill(f32::NAN);
+        lr.apply_view_rank_into(a.view_rows(0, 6), 100, &mut tmp2, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn apply_view_rank_into_truncates_to_leading_factors() {
+        let mut rng = Pcg32::seeded(29);
+        let w = decaying_matrix(16, 10, 0.6, &mut rng);
+        let a = Mat::randn(4, 16, 1.0, &mut rng);
+        let lr = LowRank::truncate(&w, 8);
+        for r in [1usize, 3, 6] {
+            // Reference: materialize U[:, :r] · V[:r, :] and multiply densely.
+            let mut ur = Mat::zeros(16, r);
+            let mut vr = Mat::zeros(r, 10);
+            for i in 0..16 {
+                ur.row_mut(i).copy_from_slice(&lr.u.row(i)[..r]);
+            }
+            for p in 0..r {
+                vr.row_mut(p).copy_from_slice(lr.v.row(p));
+            }
+            let want = matmul_naive(&a, &matmul_naive(&ur, &vr));
+            let mut tmp = vec![f32::NAN; 4 * r];
+            let mut got = vec![0.0f32; 4 * 10];
+            lr.apply_view_rank_into(a.view_rows(0, 4), r, &mut tmp, &mut got);
+            let mut max = 0.0f32;
+            for (g, w) in got.iter().zip(want.as_slice()) {
+                max = max.max((g - w).abs());
+            }
+            assert!(max < 1e-4, "rank {r}: max diff {max}");
         }
     }
 

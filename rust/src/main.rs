@@ -276,6 +276,18 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             "enable span tracing + flight recorder (also: server.trace / CONDCOMP_TRACE=1)",
         ))
         .opt(OptSpec::value("trace-ring", "flight-recorder capacity in batch records"))
+        .opt(OptSpec::value(
+            "max-queue-depth",
+            "per-shard queue bound; beyond it requests are shed with an overloaded reply (0 = unbounded)",
+        ))
+        .opt(OptSpec::value(
+            "deadline-ms",
+            "per-request deadline; items older than this at drain time get an overloaded reply (0 = none)",
+        ))
+        .opt(OptSpec::flag(
+            "elastic",
+            "quality-elastic dispatch: under queue pressure, prefer cheap masked kernels and truncate estimator rank",
+        ))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;
     if parsed.flag("help") {
@@ -389,6 +401,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         Some(n) => n,
         None => profile.server.trace_ring,
     };
+    // Overload knobs: CLI wins, then the profile's `server.*` keys.
+    let max_queue_depth = match parsed.get_usize("max-queue-depth")? {
+        Some(n) => n,
+        None => profile.server.max_queue_depth,
+    };
+    let deadline_ms = match parsed.get_usize("deadline-ms")? {
+        Some(n) => n as u64,
+        None => profile.server.deadline_ms,
+    };
+    let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    let elastic = parsed.flag("elastic") || profile.server.elastic;
     let server = Server::start(
         backend,
         ServerConfig {
@@ -401,6 +424,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             threads: parsed.get_usize("threads")?.unwrap_or(0),
             trace,
             trace_ring,
+            max_queue_depth,
+            deadline,
+            elastic,
             ..ServerConfig::default()
         },
     )?;

@@ -140,6 +140,9 @@ pub struct FlightRecord {
     pub kernels: Vec<String>,
     /// Shard queue depth right after this batch was drained.
     pub queue_depth: usize,
+    /// Shard queue pressure (depth / max_queue_depth, 0 when unbounded) at
+    /// drain time — the signal the quality-elastic dispatch keys off.
+    pub pressure: f64,
     /// Oldest item's queue wait (enqueue → drain), µs.
     pub queue_wait_us: f64,
     /// Drain → replies-sent wall clock, µs. The per-span timings partition
@@ -161,6 +164,7 @@ impl FlightRecord {
                 Json::Arr(self.kernels.iter().map(|k| Json::Str(k.clone())).collect()),
             ),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("pressure", Json::Num(self.pressure)),
             ("queue_wait_us", Json::Num(self.queue_wait_us)),
             ("total_us", Json::Num(self.total_us)),
             (
@@ -249,6 +253,7 @@ mod tests {
             mode: "ae",
             kernels: vec!["masked".into()],
             queue_depth: 1,
+            pressure: 0.25,
             queue_wait_us: 10.0,
             total_us: 120.0,
             spans: vec![
@@ -322,7 +327,7 @@ mod tests {
         let r = &records[0];
         for key in [
             "seq", "shard", "rows", "items", "mode", "kernels", "queue_depth",
-            "queue_wait_us", "total_us", "spans",
+            "pressure", "queue_wait_us", "total_us", "spans",
         ] {
             assert!(r.get(key).is_some(), "record missing {key}: {dump}");
         }

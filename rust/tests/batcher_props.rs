@@ -11,11 +11,11 @@
 
 use condcomp::coordinator::protocol::{Mode, Response};
 use condcomp::coordinator::sharded::{RouterKind, ShardedBatcher};
-use condcomp::coordinator::BatchItem;
+use condcomp::coordinator::{BatchItem, PushRejection};
 use condcomp::linalg::Mat;
 use condcomp::util::proptest::property;
 use std::collections::BTreeSet;
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -35,6 +35,22 @@ fn item(id: u64, rows: usize) -> BatchItem {
         enqueued: Instant::now(),
         reply: tx,
     }
+}
+
+/// Like [`item`] but keeping the reply receiver — for properties that
+/// assert the batcher *answers* (deadline sheds), not just queues.
+fn item_with_rx(id: u64, rows: usize) -> (BatchItem, Receiver<Response>) {
+    let (tx, rx) = channel::<Response>();
+    (
+        BatchItem {
+            id,
+            mode: Mode::Control,
+            x: Mat::zeros(rows, 2),
+            enqueued: Instant::now(),
+            reply: tx,
+        },
+        rx,
+    )
 }
 
 /// Drain every shard until it reports done, collecting item ids. Must be
@@ -89,7 +105,11 @@ fn no_request_lost_or_duplicated_under_concurrent_push_and_close() {
                             for i in 0..25u64 {
                                 let id = p * 1000 + i;
                                 if let Err(back) = b.push(item(id, 1)) {
-                                    assert_eq!(back.id, id, "rejection returns the same item");
+                                    assert_eq!(
+                                        back.item().id,
+                                        id,
+                                        "rejection returns the same item"
+                                    );
                                     rejected.lock().unwrap().push(id);
                                 }
                             }
@@ -279,7 +299,8 @@ fn close_then_push_rejects_on_every_shard_count() {
         // silently accept them into a queue nothing will ever drain.
         for id in 10..13u64 {
             let back = b.push(item(id, 1)).expect_err("push after close must reject");
-            assert_eq!(back.id, id);
+            assert!(!back.is_overloaded(), "close rejection, not a shed");
+            assert_eq!(back.into_item().id, id);
         }
         let mut drained = 0usize;
         for shard in 0..shards {
@@ -289,4 +310,187 @@ fn close_then_push_rejects_on_every_shard_count() {
         }
         assert_eq!(drained, 1, "only the pre-close item drains");
     }
+}
+
+#[test]
+fn bounded_depth_never_exceeded_and_every_push_accounted_for() {
+    for &shards in &SHARD_GRID {
+        property(
+            &format!("depth ≤ cap, shed+served+closed == pushes at {shards} shards"),
+            6,
+            |rng| {
+                let cap = 1 + rng.index(4); // 1..=4 items per shard
+                let b = Arc::new(ShardedBatcher::with_limits(
+                    shards,
+                    2,
+                    Duration::from_millis(1),
+                    cap,
+                    None,
+                    RouterKind::RoundRobin,
+                ));
+                let drained = Arc::new(Mutex::new(Vec::new()));
+                let accepted = Arc::new(Mutex::new(Vec::new()));
+                let shed = Arc::new(Mutex::new(Vec::new()));
+                let closed = Arc::new(Mutex::new(Vec::new()));
+                let drainers = spawn_drainers(&b, &drained);
+
+                let pushers: Vec<_> = (0..3u64)
+                    .map(|p| {
+                        let b = b.clone();
+                        let accepted = accepted.clone();
+                        let shed = shed.clone();
+                        let closed = closed.clone();
+                        std::thread::spawn(move || {
+                            for i in 0..30u64 {
+                                let id = p * 1000 + i;
+                                match b.push(item(id, 1)) {
+                                    Ok(_shard) => accepted.lock().unwrap().push(id),
+                                    Err(PushRejection::Overloaded(it)) => {
+                                        assert_eq!(it.id, id, "shed hands the same item back");
+                                        shed.lock().unwrap().push(id);
+                                    }
+                                    Err(PushRejection::Closed(it)) => {
+                                        assert_eq!(it.id, id, "close hands the same item back");
+                                        closed.lock().unwrap().push(id);
+                                    }
+                                }
+                                // The admission bound is checked under the
+                                // queue lock, so no sample — however racy —
+                                // may ever see a shard above its cap.
+                                for d in b.depths() {
+                                    assert!(d <= cap, "shard depth {d} exceeds cap {cap}");
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+
+                std::thread::sleep(Duration::from_millis(rng.index(4) as u64));
+                b.close();
+                for h in pushers {
+                    h.join().unwrap();
+                }
+                for h in drainers {
+                    h.join().unwrap();
+                }
+
+                let drained: BTreeSet<u64> = drained.lock().unwrap().iter().copied().collect();
+                let accepted: BTreeSet<u64> = accepted.lock().unwrap().iter().copied().collect();
+                let shed = shed.lock().unwrap();
+                let closed = closed.lock().unwrap();
+                assert_eq!(drained, accepted, "exactly the accepted items drain");
+                assert_eq!(
+                    accepted.len() + shed.len() + closed.len(),
+                    90,
+                    "every push resolves to served, shed, or rejected-after-close"
+                );
+                assert_eq!(b.shed_count(), shed.len() as u64, "shed counter matches rejections");
+            },
+        );
+    }
+}
+
+#[test]
+fn deadline_expired_items_are_replied_to_not_dropped() {
+    for &shards in &SHARD_GRID {
+        property(
+            &format!("expired items get an overloaded reply at {shards} shards"),
+            6,
+            |rng| {
+                let deadline = Duration::from_millis(5);
+                let b = ShardedBatcher::with_limits(
+                    shards,
+                    64,
+                    Duration::from_millis(1),
+                    0,
+                    Some(deadline),
+                    RouterKind::RoundRobin,
+                );
+                let n = 1 + rng.index(20);
+                let mut receivers = Vec::new();
+                for id in 0..n as u64 {
+                    let (it, rx) = item_with_rx(id, 1);
+                    b.push(it).unwrap();
+                    receivers.push((id, rx));
+                }
+                // Let every queued item blow past its deadline before any
+                // executor reaches it.
+                std::thread::sleep(deadline + Duration::from_millis(20));
+                b.close();
+                let mut drained = BTreeSet::new();
+                for shard in 0..shards {
+                    while let Some(batch) = b.next_batch(shard) {
+                        for it in batch {
+                            drained.insert(it.id);
+                        }
+                    }
+                }
+                let mut replied = 0usize;
+                for (id, rx) in receivers {
+                    match rx.try_recv() {
+                        Ok(resp) => {
+                            assert!(
+                                resp.overloaded && !resp.ok,
+                                "expiry must reply with the overload marker"
+                            );
+                            assert_eq!(resp.id, id);
+                            assert!(
+                                !drained.contains(&id),
+                                "item {id} both expired and served"
+                            );
+                            replied += 1;
+                        }
+                        Err(_) => assert!(
+                            drained.contains(&id),
+                            "item {id} neither answered nor served — dropped"
+                        ),
+                    }
+                }
+                assert_eq!(
+                    replied + drained.len(),
+                    n,
+                    "every request answered or served exactly once"
+                );
+                assert_eq!(b.expired_count(), replied as u64);
+            },
+        );
+    }
+}
+
+#[test]
+fn pressure_tracks_depth_over_cap_and_full_queues_shed() {
+    let b = ShardedBatcher::with_limits(
+        2,
+        8,
+        Duration::from_millis(1),
+        4,
+        None,
+        RouterKind::RoundRobin,
+    );
+    assert_eq!(b.shard(0).pressure(), 0.0, "empty bounded queue is unpressured");
+    for id in 0..8u64 {
+        b.push(item(id, 1)).unwrap();
+    }
+    for s in 0..2 {
+        assert_eq!(b.shard(s).depth(), 4);
+        assert_eq!(b.shard(s).pressure(), 1.0, "full queue reports unit pressure");
+    }
+    // The next push finds its shard full: admission sheds, handing the
+    // item back tagged as an overload (not a close).
+    let rej = b.push(item(99, 1)).expect_err("full queues shed");
+    assert!(rej.is_overloaded());
+    assert_eq!(rej.into_item().id, 99);
+    assert_eq!(b.shed_count(), 1);
+    b.close();
+    let mut drained = 0usize;
+    for shard in 0..2 {
+        while let Some(batch) = b.next_batch(shard) {
+            drained += batch.len();
+        }
+    }
+    assert_eq!(drained, 8, "shed item never entered a queue");
+    // Unbounded queues always report zero pressure regardless of depth.
+    let ub = ShardedBatcher::new(1, 8, Duration::from_millis(1), RouterKind::RoundRobin);
+    ub.push(item(1, 1)).unwrap();
+    assert_eq!(ub.shard(0).pressure(), 0.0);
 }

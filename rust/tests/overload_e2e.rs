@@ -1,0 +1,316 @@
+//! Saturation end-to-end tests: a pipelining loadgen drives a live server
+//! well past its measured saturation point and pins the overload contract,
+//! at shard counts {1, 2, 7} × elastic {on, off}:
+//!
+//! - **exactly one reply per request** — every pipelined request comes back
+//!   as either logits or an explicit `overloaded` shed; nothing is lost,
+//!   nothing is answered twice;
+//! - **bounded latency for accepted work** — the admission cap keeps queue
+//!   wait finite, so accepted p99 stays bounded even while the offered rate
+//!   is a multiple of what the server can serve;
+//! - **bit-identity of accepted outputs** vs an unloaded reference server
+//!   under a bit-exact kernel allow-list ({dense, dense_packed}): overload
+//!   may change *when* a request runs and *whether* it runs, never what an
+//!   accepted request computes. Control-mode identity is asserted with
+//!   elastic dispatch both off and on (pressure never touches the exact
+//!   path); ConditionalAe identity is asserted with elastic off (elastic
+//!   rank truncation deliberately trades mask fidelity for throughput, so
+//!   no cross-load identity is claimed there — the elastic-on conditional
+//!   arm still pins liveness and the exactly-one-reply accounting).
+//!
+//! Saturation is measured, not assumed: a calibration pass blasts the same
+//! pipelined load at an uncapped server and takes its accepted throughput
+//! as the saturation rate; overload arms then pace the loadgen at 3× that.
+
+use condcomp::condcomp::KernelId;
+use condcomp::config::{EstimatorConfig, NetConfig};
+use condcomp::coordinator::protocol::{Mode, Request, Response};
+use condcomp::coordinator::server::Client;
+use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
+use condcomp::estimator::SignEstimatorSet;
+use condcomp::linalg::Mat;
+use condcomp::nn::Mlp;
+use condcomp::util::Pcg32;
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CLIENTS: u64 = 4;
+const PER_CLIENT: u64 = 30;
+const TOTAL: u64 = CLIENTS * PER_CLIENT;
+
+/// Compute-heavy deterministic backend: big enough that serving a request
+/// costs far more than parsing one, so a pipelined burst genuinely outruns
+/// the executors. No training needed — seeded init weights serve a fixed
+/// function, and two calls build bit-identical backends. The allow-list is
+/// pinned to the bit-exact dense class so kernel choice can never move
+/// accepted outputs off the reference bits, whatever batch shapes or
+/// pressure the overload produces.
+fn overload_backend() -> NativeBackend {
+    let mut rng = Pcg32::seeded(0x0E71);
+    let net = Mlp::init(
+        &NetConfig { layers: vec![128, 256, 192, 16], weight_sigma: 0.3, bias_init: 0.1 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 3);
+    let backend = NativeBackend::new(net, est, 32);
+    backend
+        .set_allowed_kernels(&[KernelId::DENSE, KernelId::DENSE_PACKED])
+        .expect("bit-exact allow-list installs");
+    backend
+}
+
+/// The request payload for a given id — its own seeded stream, so loadgen
+/// threads and the reference pass reproduce identical inputs independently.
+fn input_for(id: u64) -> Mat {
+    let mut rng = Pcg32::new(id, 0x10AD);
+    Mat::randn(1, 128, 0.5, &mut rng)
+}
+
+fn logits_bits(resp: &Response) -> Vec<u32> {
+    resp.logits
+        .as_ref()
+        .expect("accepted response carries logits")
+        .as_slice()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+/// Ground truth through the wire: an unloaded single-shard server answers
+/// every request id sequentially. Going over TCP (rather than calling the
+/// backend directly) keeps the reference on the same serialization path as
+/// the loadgen, so the comparison is bits-in-equals-bits-out end to end.
+fn reference_bits(mode: Mode) -> BTreeMap<u64, Vec<u32>> {
+    let server = Server::start(
+        Arc::new(overload_backend()),
+        ServerConfig {
+            shards: 1,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("reference server start");
+    let mut client = Client::connect(&server.local_addr).unwrap();
+    let mut map = BTreeMap::new();
+    for id in 0..TOTAL {
+        let resp = client.predict(input_for(id), mode).unwrap();
+        assert!(resp.ok, "reference id {id}: {:?}", resp.error);
+        map.insert(id, logits_bits(&resp));
+    }
+    server.shutdown();
+    map
+}
+
+struct LoadgenResult {
+    /// (id, logit bits, latency µs) for every non-shed reply.
+    accepted: Vec<(u64, Vec<u32>, u64)>,
+    /// ids that came back with the explicit overload marker.
+    shed: Vec<u64>,
+}
+
+/// Drive `addr` with `CLIENTS` pipelining connections, each sending
+/// `PER_CLIENT` requests paced at `interval` (zero = blast). Requests are
+/// written by a dedicated sender thread per connection while the reader
+/// collects replies, so a full socket never deadlocks the loadgen. Pacing
+/// uses absolute target times, so oversleep on a loaded runner self-corrects
+/// instead of silently lowering the offered rate.
+fn run_loadgen(addr: std::net::SocketAddr, mode: Mode, interval: Duration) -> LoadgenResult {
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                // A lost reply must fail loudly, not hang the suite.
+                stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let sender = std::thread::spawn(move || {
+                    let start = Instant::now();
+                    for i in 0..PER_CLIENT {
+                        let due = start + interval * i as u32;
+                        let wait = due.saturating_duration_since(Instant::now());
+                        if !wait.is_zero() {
+                            std::thread::sleep(wait);
+                        }
+                        let id = c * PER_CLIENT + i;
+                        let mut line =
+                            Request::Predict { id, mode, x: input_for(id) }.to_json_line();
+                        line.push('\n');
+                        writer.write_all(line.as_bytes()).unwrap();
+                    }
+                    writer.flush().unwrap();
+                    writer
+                });
+                let mut accepted = Vec::new();
+                let mut shed = Vec::new();
+                for k in 0..PER_CLIENT {
+                    let mut line = String::new();
+                    reader
+                        .read_line(&mut line)
+                        .unwrap_or_else(|e| panic!("client {c}: reply {k} never arrived: {e}"));
+                    assert!(
+                        !line.trim().is_empty(),
+                        "client {c}: connection closed after {k} replies"
+                    );
+                    let resp = Response::parse(&line).unwrap();
+                    if resp.overloaded {
+                        assert!(!resp.ok, "id {}: shed reply claims success", resp.id);
+                        shed.push(resp.id);
+                    } else {
+                        assert!(resp.ok, "id {}: {:?}", resp.id, resp.error);
+                        accepted.push((resp.id, logits_bits(&resp), resp.latency_us));
+                    }
+                }
+                drop(sender.join().unwrap());
+                (accepted, shed)
+            })
+        })
+        .collect();
+    let mut accepted = Vec::new();
+    let mut shed = Vec::new();
+    for h in handles {
+        let (a, s) = h.join().unwrap();
+        accepted.extend(a);
+        shed.extend(s);
+    }
+    LoadgenResult { accepted, shed }
+}
+
+/// Measure the saturation rate: blast an uncapped server and take its
+/// accepted throughput. Everything is admitted (no queue bound), so the
+/// elapsed wall clock is service-bound — req/s out of this run is what the
+/// serving stack can actually sustain on this machine.
+fn measured_saturation_rps() -> f64 {
+    let server = Server::start(
+        Arc::new(overload_backend()),
+        ServerConfig {
+            shards: 2,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("calibration server start");
+    let t0 = Instant::now();
+    let got = run_loadgen(server.local_addr, Mode::Control, Duration::ZERO);
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-6);
+    assert_eq!(got.accepted.len() as u64, TOTAL, "uncapped server accepts everything");
+    assert!(got.shed.is_empty(), "uncapped server must not shed");
+    server.shutdown();
+    TOTAL as f64 / elapsed
+}
+
+/// Every-reply-exactly-once accounting plus the bounded-p99 check, shared
+/// by all arms.
+fn check_conservation(got: &LoadgenResult, arm: &str) {
+    let mut ids: BTreeSet<u64> = got.accepted.iter().map(|(id, _, _)| *id).collect();
+    assert_eq!(ids.len(), got.accepted.len(), "{arm}: duplicate accepted ids");
+    for id in &got.shed {
+        assert!(ids.insert(*id), "{arm}: id {id} both served and shed");
+    }
+    assert_eq!(
+        ids.len() as u64,
+        TOTAL,
+        "{arm}: {} accepted + {} shed != {TOTAL} sent",
+        got.accepted.len(),
+        got.shed.len()
+    );
+    assert_eq!(ids, (0..TOTAL).collect::<BTreeSet<u64>>(), "{arm}: reply ids drifted");
+
+    let mut lat: Vec<u64> = got.accepted.iter().map(|(_, _, us)| *us).collect();
+    lat.sort_unstable();
+    if !lat.is_empty() {
+        let p99 = lat[(lat.len() - 1) * 99 / 100];
+        // Generous but finite: the admission cap bounds queue wait, so even
+        // a slow CI runner stays far under this. An unbounded queue under
+        // 3× overload would blow through it.
+        assert!(p99 < 10_000_000, "{arm}: accepted p99 {p99}µs is unbounded");
+    }
+}
+
+#[test]
+fn overload_sheds_explicitly_and_preserves_accepted_bits() {
+    let control_ref = reference_bits(Mode::Control);
+    let ae_ref = reference_bits(Mode::ConditionalAe);
+    let sat_rps = measured_saturation_rps();
+    // 3× past measured saturation, spread over the client pool.
+    let interval = Duration::from_secs_f64(CLIENTS as f64 / (3.0 * sat_rps).max(1.0));
+
+    for shards in [1usize, 2, 7] {
+        for elastic in [false, true] {
+            let arm = format!("shards={shards} elastic={elastic}");
+            let server = Server::start(
+                Arc::new(overload_backend()),
+                ServerConfig {
+                    shards,
+                    max_wait: Duration::from_millis(1),
+                    max_queue_depth: 4,
+                    elastic,
+                    ..ServerConfig::default()
+                },
+            )
+            .unwrap_or_else(|e| panic!("{arm}: server start: {e}"));
+            assert_eq!(
+                server.metrics.gauge("max_queue_depth"),
+                Some(4.0),
+                "{arm}: admission bound not exported"
+            );
+            assert_eq!(
+                server.metrics.gauge("elastic_enabled"),
+                Some(if elastic { 1.0 } else { 0.0 }),
+                "{arm}: elastic flag not exported"
+            );
+
+            // Control pass: exact path, so accepted bits must match the
+            // unloaded reference whether or not elastic dispatch is on.
+            let control = run_loadgen(server.local_addr, Mode::Control, interval);
+            check_conservation(&control, &arm);
+            assert!(
+                !control.shed.is_empty(),
+                "{arm}: 3× overload produced no sheds — not saturated"
+            );
+            for (id, bits, _) in &control.accepted {
+                assert_eq!(
+                    bits, &control_ref[id],
+                    "{arm}: accepted control id {id} drifted from unloaded reference"
+                );
+            }
+
+            // Conditional pass: same conservation contract; bit-identity is
+            // additionally pinned when elastic is off (with it on, rank
+            // truncation under pressure is allowed to move conditional
+            // outputs — that is the feature, not a corruption).
+            let cond = run_loadgen(server.local_addr, Mode::ConditionalAe, interval);
+            check_conservation(&cond, &arm);
+            if !elastic {
+                for (id, bits, _) in &cond.accepted {
+                    assert_eq!(
+                        bits, &ae_ref[id],
+                        "{arm}: accepted conditional id {id} drifted from unloaded reference"
+                    );
+                }
+            }
+
+            // Shed accounting: every overloaded reply the clients saw was
+            // counted (admission sheds increment before the reply is sent,
+            // and no deadline is configured, so the counter is exact).
+            let total_shed = (control.shed.len() + cond.shed.len()) as u64;
+            assert_eq!(
+                server.metrics.counter("shed_total"),
+                total_shed,
+                "{arm}: shed_total disagrees with observed overloaded replies"
+            );
+            // The pressure signal reached the exporter on every shard.
+            for s in 0..shards {
+                let p = server
+                    .metrics
+                    .shard_gauge(s, "queue_pressure")
+                    .unwrap_or_else(|| panic!("{arm}: shard {s} exported no queue_pressure"));
+                assert!((0.0..=1.0).contains(&p), "{arm}: shard {s} pressure {p} out of range");
+            }
+            server.shutdown();
+        }
+    }
+}
