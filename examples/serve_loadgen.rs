@@ -9,7 +9,7 @@
 use condcomp::config::{EstimatorConfig, ExperimentProfile};
 use condcomp::coordinator::protocol::Mode;
 use condcomp::coordinator::server::Client;
-use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
+use condcomp::coordinator::{Backend, NativeBackend, RemoteBackend, RemoteOpts, Server, ServerConfig};
 use condcomp::data::synth::build_dataset;
 use condcomp::estimator::SignEstimatorSet;
 use condcomp::nn::mlp::NoGater;
@@ -35,7 +35,7 @@ fn main() {
     let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
     let backend = Arc::new(NativeBackend::new(net, est, 64));
     let server = Server::start(
-        backend,
+        backend.clone(),
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_wait: std::time::Duration::from_millis(2),
@@ -162,4 +162,95 @@ fn main() {
     println!("\nserver metrics: {}", payload.to_string());
     let _ = client.shutdown();
     server.shutdown();
+
+    // --- multi-process phase: coordinator over two worker replicas --------
+    // The same deterministic backend serves behind two single-shard worker
+    // servers; a coordinator verifies each through the `hello` handshake
+    // (protocol version + model fingerprint) and routes batches by queue
+    // depth × per-replica cost. The `replica<i>_` metric stripe mirrors the
+    // `shard<i>_` scheme on the coordinator's registry.
+    let workers: Vec<Server> = (0..2)
+        .map(|_| {
+            Server::start(
+                backend.clone(),
+                ServerConfig {
+                    addr: "127.0.0.1:0".into(),
+                    max_wait: std::time::Duration::from_millis(2),
+                    shards: 1,
+                    ..ServerConfig::default()
+                },
+            )
+            .expect("worker start")
+        })
+        .collect();
+    let addrs: Vec<String> = workers.iter().map(|w| w.local_addr.to_string()).collect();
+    let expected = backend.model_fingerprint().unwrap_or_default();
+    let remote = Arc::new(
+        RemoteBackend::connect(&addrs, &expected, RemoteOpts::default())
+            .expect("coordinator connect"),
+    );
+    let coord = Server::start(
+        remote.clone() as Arc<dyn Backend>,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: std::time::Duration::from_millis(2),
+            shards: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("coordinator start");
+    remote.attach_metrics(coord.metrics.clone());
+    let caddr = coord.local_addr;
+    println!(
+        "\ncoordinator on {caddr} over {} worker replica(s) (model {expected})",
+        remote.num_replicas()
+    );
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&caddr).expect("connect");
+                let mut rng = Pcg32::new(c as u64, 11);
+                for i in 0..REQUESTS_PER_CLIENT {
+                    let mode = if i % 2 == 0 { Mode::ConditionalAe } else { Mode::Control };
+                    let x = condcomp::linalg::Mat::randn(1, 784, 0.5, &mut rng);
+                    let resp = client.predict(x, mode).expect("predict");
+                    assert!(resp.ok, "{:?}", resp.error);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // One health interval so the exported replica gauges are fresh.
+    std::thread::sleep(std::time::Duration::from_millis(600));
+    let mut client = Client::connect(&caddr).unwrap();
+    let stats = client.stats().unwrap();
+    let payload = stats.payload.unwrap();
+    if let Some(gauges) = payload.get("gauges").and_then(|g| g.as_obj()) {
+        let g = |k: &str| gauges.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!("replicas: {:.0} total, {:.0} healthy", g("replicas"), g("replicas_healthy"));
+        for i in 0..remote.num_replicas() {
+            println!(
+                "  replica {i}: healthy {:.0}  depth {:.0}  cost {:.3}",
+                g(&format!("replica{i}_healthy")),
+                g(&format!("replica{i}_depth")),
+                g(&format!("replica{i}_cost")),
+            );
+        }
+    }
+    if let Some(counters) = payload.get("counters").and_then(|c| c.as_obj()) {
+        println!("replica routing (batches per replica):");
+        for (name, v) in counters {
+            if name.starts_with("replica") {
+                println!("  {name}: {:.0}", v.as_f64().unwrap_or(0.0));
+            }
+        }
+    }
+    let _ = client.shutdown();
+    coord.shutdown();
+    drop(remote);
+    for w in workers {
+        w.shutdown();
+    }
 }

@@ -126,6 +126,36 @@ impl ShardRow {
     }
 }
 
+/// One serving-throughput measurement at a fixed worker-replica count: a
+/// coordinator (`RemoteBackend`) fronting N in-process worker servers over
+/// loopback TCP, so `BENCH_parallel.json` records what multi-process
+/// serving costs/buys against the same model.
+#[derive(Clone, Debug)]
+pub struct ReplicaRow {
+    /// Worker replicas behind the coordinator.
+    pub workers: usize,
+    /// Concurrent loopback clients.
+    pub clients: usize,
+    /// Total predict requests completed (all clients).
+    pub requests: usize,
+    /// Wall-clock for the whole run.
+    pub elapsed_s: f64,
+    /// Requests per second.
+    pub rps: f64,
+}
+
+impl ReplicaRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("rps", Json::Num(self.rps)),
+        ])
+    }
+}
+
 /// Leased executors vs the PR-3 private-pool baseline at one shard count:
 /// the column that shows pool slicing costs no throughput while halving
 /// the spawned thread count.
@@ -251,6 +281,9 @@ pub struct ParallelSweep {
     /// Serving throughput at each measured batcher shard count (leased
     /// executors — the production configuration).
     pub shard_sweep: Vec<ShardRow>,
+    /// Serving throughput with a coordinator over {1, 2} worker replicas
+    /// (in-process workers, loopback TCP between coordinator and workers).
+    pub replica_sweep: Vec<ReplicaRow>,
     /// Leased vs private-pool executor throughput at each shard count.
     pub lease_vs_private: Vec<LeaseVsPrivateRow>,
     /// Serve throughput with span tracing off vs on.
@@ -508,6 +541,16 @@ pub fn run_parallel_sweep(
         shard_sweep.push(leased);
     }
 
+    // --- multi-process serving arm ---------------------------------------
+    // Workers are in-process single-shard Servers sharing one deterministic
+    // backend; a coordinator fronts them through a fingerprint-verified
+    // RemoteBackend, so the column measures the wire + replica-routing
+    // overhead of N-process serving against the same model.
+    let mut replica_sweep = Vec::new();
+    for workers in [1usize, 2] {
+        replica_sweep.push(measure_replica_throughput(workers, 4, requests_per_client));
+    }
+
     // --- tracing off vs on ----------------------------------------------
     // Same loopback harness, one shard count, with the process-wide trace
     // flag flipped between arms (restored afterwards so a bench run never
@@ -556,6 +599,7 @@ pub fn run_parallel_sweep(
         kernel_sweep,
         simd_sweep,
         shard_sweep,
+        replica_sweep,
         lease_vs_private,
         trace_overhead,
         overload_sweep,
@@ -735,6 +779,95 @@ fn measure_shard_throughput(
     }
 }
 
+/// Start `workers` in-process single-shard worker servers over one shared
+/// deterministic backend, front them with a coordinator server whose
+/// backend is a [`RemoteBackend`], and drive the coordinator with `clients`
+/// concurrent loopback connections. The model is the same fixed small MLP
+/// as [`measure_shard_throughput`] — the point is coordinator/wire scaling,
+/// not kernel time.
+fn measure_replica_throughput(workers: usize, clients: usize, per_client: usize) -> ReplicaRow {
+    use crate::coordinator::{Backend, RemoteBackend, RemoteOpts};
+    let mut rng = Pcg32::seeded(0x5AD5);
+    let net = Mlp::init(
+        &NetConfig { layers: vec![24, 32, 24, 8], weight_sigma: 0.3, bias_init: 0.1 },
+        &mut rng,
+    );
+    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[8, 6]), 3);
+    let backend = Arc::new(NativeBackend::new(net, est, 32));
+    let worker_servers: Vec<Server> = (0..workers)
+        .map(|_| {
+            Server::start(
+                backend.clone(),
+                ServerConfig {
+                    addr: "127.0.0.1:0".into(),
+                    max_wait: std::time::Duration::from_millis(1),
+                    shards: 1,
+                    ..ServerConfig::default()
+                },
+            )
+            .expect("replica worker server")
+        })
+        .collect();
+    let addrs: Vec<String> = worker_servers.iter().map(|s| s.local_addr.to_string()).collect();
+    let expected = backend.model_fingerprint().unwrap_or_default();
+    let remote = Arc::new(
+        RemoteBackend::connect(
+            &addrs,
+            &expected,
+            RemoteOpts {
+                health_interval: std::time::Duration::from_millis(50),
+                ..RemoteOpts::default()
+            },
+        )
+        .expect("replica coordinator connects"),
+    );
+    let server = Server::start(
+        remote.clone() as Arc<dyn Backend>,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_wait: std::time::Duration::from_millis(1),
+            shards: 2,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("replica coordinator server");
+    let addr = server.local_addr;
+
+    let t0 = crate::util::Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("loopback connect");
+                let mut rng = Pcg32::new(c as u64, 0xBE);
+                let mut done = 0usize;
+                for _ in 0..per_client {
+                    let x = Mat::randn(1, 24, 0.5, &mut rng);
+                    let resp = client
+                        .predict(x, crate::coordinator::protocol::Mode::ConditionalAe)
+                        .expect("loopback predict");
+                    assert!(resp.ok, "{:?}", resp.error);
+                    done += 1;
+                }
+                done
+            })
+        })
+        .collect();
+    let requests: usize = handles.into_iter().map(|h| h.join().expect("client thread")).sum();
+    let elapsed_s = t0.elapsed_s();
+    server.shutdown();
+    drop(remote);
+    for w in worker_servers {
+        w.shutdown();
+    }
+    ReplicaRow {
+        workers,
+        clients,
+        requests,
+        elapsed_s,
+        rps: requests as f64 / elapsed_s.max(1e-9),
+    }
+}
+
 impl ParallelSweep {
     /// Human-readable report lines (the CLI prints these).
     pub fn report_lines(&self) -> Vec<String> {
@@ -810,6 +943,12 @@ impl ParallelSweep {
                 row.shards, row.clients, row.rps, row.requests, row.elapsed_s
             ));
         }
+        for row in &self.replica_sweep {
+            lines.push(format!(
+                "serve replicas: workers={} clients={} → {:.0} req/s ({} requests in {:.3}s)",
+                row.workers, row.clients, row.rps, row.requests, row.elapsed_s
+            ));
+        }
         for row in &self.lease_vs_private {
             lines.push(format!(
                 "serve lease-vs-private: shards={} → leased {:.0} req/s vs private {:.0} req/s ({:.2}×)",
@@ -870,6 +1009,10 @@ impl ParallelSweep {
             (
                 "serve_shard_sweep",
                 Json::Arr(self.shard_sweep.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "serve_replica_sweep",
+                Json::Arr(self.replica_sweep.iter().map(|r| r.to_json()).collect()),
             ),
             (
                 "serve_lease_vs_private",
@@ -944,6 +1087,16 @@ mod tests {
             assert_eq!(row.requests, row.clients * 5, "quick run: 5 requests per client");
             assert!(row.rps > 0.0 && row.rps.is_finite());
         }
+        // Replica column: coordinator over {1, 2} in-process worker
+        // servers; every row completed all of its requests.
+        assert_eq!(
+            sweep.replica_sweep.iter().map(|r| r.workers).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        for row in &sweep.replica_sweep {
+            assert_eq!(row.requests, row.clients * 5, "quick run: 5 requests per client");
+            assert!(row.rps > 0.0 && row.rps.is_finite());
+        }
         // Lease-vs-private column: both arms measured at every shard count.
         assert_eq!(
             sweep.lease_vs_private.iter().map(|r| r.shards).collect::<Vec<_>>(),
@@ -1010,6 +1163,14 @@ mod tests {
             .expect("serve_shard_sweep");
         assert_eq!(shard_rows.len(), 2);
         assert!(shard_rows.iter().all(|r| r.get("shards").is_some() && r.get("rps").is_some()));
+        let replica_rows = parsed
+            .get("serve_replica_sweep")
+            .and_then(|v| v.as_arr())
+            .expect("serve_replica_sweep");
+        assert_eq!(replica_rows.len(), 2);
+        assert!(replica_rows
+            .iter()
+            .all(|r| r.get("workers").is_some() && r.get("rps").is_some()));
         let lvp_rows = parsed
             .get("serve_lease_vs_private")
             .and_then(|v| v.as_arr())

@@ -158,6 +158,27 @@ pub struct ServerSettings {
     /// under queue pressure, bias kernel routing toward the cheap masked
     /// class and truncate the estimator rank. Default false.
     pub elastic: bool,
+    /// Worker replica addresses (`server.worker_addrs` / CLI
+    /// `--worker-addrs`, CSV): when non-empty, `serve` runs as a
+    /// coordinator forwarding batches to these `condcomp worker` processes
+    /// over the TCP protocol instead of executing kernels in-process.
+    pub worker_addrs: Vec<String>,
+    /// Minimum workers that must complete the `hello` handshake at
+    /// coordinator startup (`server.replicas` / CLI `--replicas`).
+    /// 0 = at least one.
+    pub replicas: usize,
+    /// Per-attempt TCP connect timeout toward workers, milliseconds
+    /// (`server.connect_timeout_ms`).
+    pub connect_timeout_ms: u64,
+    /// Connect retries after the first attempt (`server.retry_max`), with
+    /// exponential backoff starting at `retry_backoff_ms`.
+    pub retry_max: usize,
+    /// Initial connect-retry backoff, milliseconds
+    /// (`server.retry_backoff_ms`); doubles per attempt.
+    pub retry_backoff_ms: u64,
+    /// Replica health-check / reconnect cadence, milliseconds
+    /// (`server.health_interval_ms`).
+    pub health_interval_ms: u64,
 }
 
 impl Default for ServerSettings {
@@ -170,6 +191,12 @@ impl Default for ServerSettings {
             max_queue_depth: 0,
             deadline_ms: 0,
             elastic: false,
+            worker_addrs: Vec::new(),
+            replicas: 0,
+            connect_timeout_ms: 1000,
+            retry_max: 5,
+            retry_backoff_ms: 50,
+            health_interval_ms: 500,
         }
     }
 }
@@ -484,6 +511,29 @@ impl ExperimentProfile {
         if let Some(b) = doc.get_bool("server.elastic") {
             self.server.elastic = b;
         }
+        if let Some(s) = doc.get_str("server.worker_addrs") {
+            self.server.worker_addrs = s
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(str::to_string)
+                .collect();
+        }
+        if let Some(x) = doc.get_usize("server.replicas") {
+            self.server.replicas = x;
+        }
+        if let Some(x) = doc.get_usize("server.connect_timeout_ms") {
+            self.server.connect_timeout_ms = x as u64;
+        }
+        if let Some(x) = doc.get_usize("server.retry_max") {
+            self.server.retry_max = x;
+        }
+        if let Some(x) = doc.get_usize("server.retry_backoff_ms") {
+            self.server.retry_backoff_ms = x as u64;
+        }
+        if let Some(x) = doc.get_usize("server.health_interval_ms") {
+            self.server.health_interval_ms = x as u64;
+        }
         if let Some(s) = doc.get_str("dispatch.kernels") {
             self.dispatch.kernels = s
                 .split(',')
@@ -592,9 +642,18 @@ mod tests {
         assert_eq!(p.server.max_queue_depth, 0, "unbounded admission by default");
         assert_eq!(p.server.deadline_ms, 0, "no deadline by default");
         assert!(!p.server.elastic, "elastic dispatch is opt-in");
+        assert!(p.server.worker_addrs.is_empty(), "in-process serving by default");
+        assert_eq!(p.server.replicas, 0, "0 = at least one worker must handshake");
+        assert_eq!(p.server.connect_timeout_ms, 1000);
+        assert_eq!(p.server.retry_max, 5);
+        assert_eq!(p.server.retry_backoff_ms, 50);
+        assert_eq!(p.server.health_interval_ms, 500);
         let doc = TomlDoc::parse(
             "[server]\nshards = 4\nrouter = \"least-depth\"\ntrace = true\ntrace_ring = 128\n\
-             max_queue_depth = 256\ndeadline_ms = 50\nelastic = true",
+             max_queue_depth = 256\ndeadline_ms = 50\nelastic = true\n\
+             worker_addrs = \"127.0.0.1:7001, 127.0.0.1:7002\"\nreplicas = 2\n\
+             connect_timeout_ms = 250\nretry_max = 7\nretry_backoff_ms = 20\n\
+             health_interval_ms = 100",
         )
         .unwrap();
         p.apply_overrides(&doc);
@@ -605,6 +664,16 @@ mod tests {
         assert_eq!(p.server.max_queue_depth, 256);
         assert_eq!(p.server.deadline_ms, 50);
         assert!(p.server.elastic);
+        assert_eq!(
+            p.server.worker_addrs,
+            vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7002".to_string()],
+            "CSV worker list, whitespace-tolerant"
+        );
+        assert_eq!(p.server.replicas, 2);
+        assert_eq!(p.server.connect_timeout_ms, 250);
+        assert_eq!(p.server.retry_max, 7);
+        assert_eq!(p.server.retry_backoff_ms, 20);
+        assert_eq!(p.server.health_interval_ms, 100);
     }
 
     #[test]

@@ -28,6 +28,8 @@ pub enum BackendKind {
     Native,
     /// PJRT-compiled artifacts (Pallas kernels inside the HLO).
     Pjrt,
+    /// Remote worker replicas over the TCP protocol (coordinator side).
+    Remote,
 }
 
 /// A serving backend: maps a batch of inputs to logits.
@@ -68,6 +70,19 @@ pub trait Backend: Send + Sync {
     fn kernel_choice_lines(&self) -> Option<Vec<String>> {
         None
     }
+    /// Fingerprint of the model this backend serves (layer shapes), if
+    /// known. The `hello` handshake publishes it so a coordinator can
+    /// refuse a worker serving a different model.
+    fn model_fingerprint(&self) -> Option<String> {
+        None
+    }
+    /// The machine profile this backend calibrated (or loaded), if any.
+    /// Workers publish it through `hello` so the coordinator holds
+    /// per-replica cost columns and can route batches where they run
+    /// cheapest.
+    fn machine_profile(&self) -> Option<MachineProfile> {
+        None
+    }
 }
 
 /// Pure-Rust backend: the control path uses the dense layer kernels, the
@@ -96,6 +111,10 @@ pub struct NativeBackend {
     /// bringing their own arena inside the [`ExecCtx`] they hand to
     /// [`Backend::predict_ctx`].
     scratch: Mutex<ScratchArena>,
+    /// The machine profile this backend last calibrated or loaded —
+    /// published by the worker `hello` handshake so a coordinator can route
+    /// to cheap replicas. `None` until calibration/apply_profile runs.
+    profile: RwLock<Option<MachineProfile>>,
 }
 
 impl NativeBackend {
@@ -115,6 +134,7 @@ impl NativeBackend {
                 (base.clone(), base)
             }),
             scratch: Mutex::new(ScratchArena::new()),
+            profile: RwLock::new(None),
         }
     }
 
@@ -244,6 +264,7 @@ impl NativeBackend {
         }
         let table = profile.policy_table(self.num_hidden(), source);
         self.set_policy_table(table.clone());
+        *self.profile.write().unwrap() = Some(profile.clone());
         Ok(table)
     }
 
@@ -269,6 +290,7 @@ impl NativeBackend {
         let profile = tuner.calibrate_model_on(&self.net.layer_sizes(), self.pool(), &registry);
         let table = profile.policy_table(self.num_hidden(), "<online calibration>");
         self.set_policy_table(table.clone());
+        *self.profile.write().unwrap() = Some(profile);
         table
     }
 
@@ -493,6 +515,14 @@ impl Backend for NativeBackend {
 
     fn kernel_choice_lines(&self) -> Option<Vec<String>> {
         Some(self.choice_lines())
+    }
+
+    fn model_fingerprint(&self) -> Option<String> {
+        Some(crate::autotune::model_fingerprint(&self.net.layer_sizes()))
+    }
+
+    fn machine_profile(&self) -> Option<MachineProfile> {
+        self.profile.read().unwrap().clone()
     }
 }
 

@@ -104,18 +104,34 @@ impl ShardSink {
 pub struct MetricsRegistry {
     global: Mutex<Sink>,
     shards: Mutex<Vec<Arc<ShardSink>>>,
+    /// Per-replica stripes (the coordinator's remote-worker view): same
+    /// machinery as the shard stripes under a `replica<i>_` key scheme. The
+    /// two prefixes can never alias — each strict parser rejects the other's
+    /// keys at the first character.
+    replicas: Mutex<Vec<Arc<ShardSink>>>,
 }
 
-/// `shard<i>_<name>` → `(i, name)`; `None` for plain/global keys. Strict on
-/// purpose: `shards_total` or `shard_` must not alias a stripe.
-fn parse_shard_key(name: &str) -> Option<(usize, &str)> {
-    let rest = name.strip_prefix("shard")?;
+/// `<prefix><i>_<name>` → `(i, name)`; `None` for plain/global keys. Strict
+/// on purpose: `shards_total` / `shard_` / `replicas` must not alias a
+/// stripe.
+fn parse_prefixed_key<'a>(prefix: &str, name: &'a str) -> Option<(usize, &'a str)> {
+    let rest = name.strip_prefix(prefix)?;
     let digits_end = rest.find(|c: char| !c.is_ascii_digit())?;
     if digits_end == 0 {
         return None;
     }
     let (digits, tail) = rest.split_at(digits_end);
     Some((digits.parse().ok()?, tail.strip_prefix('_')?))
+}
+
+/// `shard<i>_<name>` → `(i, name)`; `None` for plain/global keys.
+fn parse_shard_key(name: &str) -> Option<(usize, &str)> {
+    parse_prefixed_key("shard", name)
+}
+
+/// `replica<i>_<name>` → `(i, name)`; `None` for plain/global keys.
+fn parse_replica_key(name: &str) -> Option<(usize, &str)> {
+    parse_prefixed_key("replica", name)
 }
 
 impl MetricsRegistry {
@@ -138,6 +154,21 @@ impl MetricsRegistry {
         self.shards.lock().unwrap().clone()
     }
 
+    /// The stripe for `replica`, created on first request. The coordinator's
+    /// remote backend calls this once per worker and keeps the `Arc`.
+    pub fn replica_sink(&self, replica: usize) -> Arc<ShardSink> {
+        let mut replicas = self.replicas.lock().unwrap();
+        while replicas.len() <= replica {
+            let next = replicas.len();
+            replicas.push(Arc::new(ShardSink::new(next)));
+        }
+        replicas[replica].clone()
+    }
+
+    fn replica_sinks(&self) -> Vec<Arc<ShardSink>> {
+        self.replicas.lock().unwrap().clone()
+    }
+
     pub fn incr(&self, name: &str) {
         self.add(name, 1);
     }
@@ -145,7 +176,10 @@ impl MetricsRegistry {
     pub fn add(&self, name: &str, by: u64) {
         match parse_shard_key(name) {
             Some((shard, plain)) => self.shard_sink(shard).add(plain, by),
-            None => self.global.lock().unwrap().add(name, by),
+            None => match parse_replica_key(name) {
+                Some((replica, plain)) => self.replica_sink(replica).add(plain, by),
+                None => self.global.lock().unwrap().add(name, by),
+            },
         }
     }
 
@@ -153,7 +187,10 @@ impl MetricsRegistry {
     pub fn observe_latency(&self, name: &str, seconds: f64) {
         match parse_shard_key(name) {
             Some((shard, plain)) => self.shard_sink(shard).observe(plain, seconds),
-            None => self.global.lock().unwrap().observe(name, seconds),
+            None => match parse_replica_key(name) {
+                Some((replica, plain)) => self.replica_sink(replica).observe(plain, seconds),
+                None => self.global.lock().unwrap().observe(name, seconds),
+            },
         }
     }
 
@@ -161,7 +198,10 @@ impl MetricsRegistry {
     pub fn set_gauge(&self, name: &str, value: f64) {
         match parse_shard_key(name) {
             Some((shard, plain)) => self.shard_sink(shard).set_gauge(plain, value),
-            None => self.global.lock().unwrap().set_gauge(name, value),
+            None => match parse_replica_key(name) {
+                Some((replica, plain)) => self.replica_sink(replica).set_gauge(plain, value),
+                None => self.global.lock().unwrap().set_gauge(name, value),
+            },
         }
     }
 
@@ -201,29 +241,72 @@ impl MetricsRegistry {
             .unwrap_or(0)
     }
 
-    /// Merged counter: a plain name sums the global sink and every stripe;
-    /// a `shard<i>_` name reads that stripe alone.
+    /// Canonical key for a per-replica metric (`replica2_depth`, …) —
+    /// the read-side scheme mirroring [`MetricsRegistry::shard_key`].
+    pub fn replica_key(replica: usize, name: &str) -> String {
+        format!("replica{replica}_{name}")
+    }
+
+    /// Per-replica gauge (health, reported queue depth, routing cost, …).
+    pub fn set_replica_gauge(&self, replica: usize, name: &str, value: f64) {
+        self.replica_sink(replica).set_gauge(name, value);
+    }
+
+    pub fn replica_gauge(&self, replica: usize, name: &str) -> Option<f64> {
+        self.replica_sinks()
+            .get(replica)
+            .and_then(|s| s.inner.lock().unwrap().gauges.get(name).copied())
+    }
+
+    /// Per-replica counter (batches routed, failures, reconnects, …).
+    pub fn incr_replica(&self, replica: usize, name: &str) {
+        self.replica_sink(replica).incr(name);
+    }
+
+    pub fn add_replica(&self, replica: usize, name: &str, by: u64) {
+        self.replica_sink(replica).add(name, by);
+    }
+
+    pub fn replica_counter(&self, replica: usize, name: &str) -> u64 {
+        self.replica_sinks()
+            .get(replica)
+            .and_then(|s| s.inner.lock().unwrap().counters.get(name).copied())
+            .unwrap_or(0)
+    }
+
+    /// Merged counter: a plain name sums the global sink and every stripe
+    /// (shard and replica); a `shard<i>_`/`replica<i>_` name reads that
+    /// stripe alone.
     pub fn counter(&self, name: &str) -> u64 {
         if let Some((shard, plain)) = parse_shard_key(name) {
             return self.shard_counter(shard, plain);
         }
+        if let Some((replica, plain)) = parse_replica_key(name) {
+            return self.replica_counter(replica, plain);
+        }
         let mut total = self.global.lock().unwrap().counters.get(name).copied().unwrap_or(0);
-        for sink in self.sinks() {
+        for sink in self.sinks().iter().chain(self.replica_sinks().iter()) {
             total += sink.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0);
         }
         total
     }
 
-    /// A plain name prefers the global sink, then the lowest shard that set
-    /// it; a `shard<i>_` name reads that stripe alone.
+    /// A plain name prefers the global sink, then the lowest shard (then
+    /// replica) that set it; a prefixed name reads that stripe alone.
     pub fn gauge(&self, name: &str) -> Option<f64> {
         if let Some((shard, plain)) = parse_shard_key(name) {
             return self.shard_gauge(shard, plain);
         }
+        if let Some((replica, plain)) = parse_replica_key(name) {
+            return self.replica_gauge(replica, plain);
+        }
         if let Some(v) = self.global.lock().unwrap().gauges.get(name).copied() {
             return Some(v);
         }
-        self.sinks().iter().find_map(|s| s.inner.lock().unwrap().gauges.get(name).copied())
+        self.sinks()
+            .iter()
+            .chain(self.replica_sinks().iter())
+            .find_map(|s| s.inner.lock().unwrap().gauges.get(name).copied())
     }
 
     /// The merged histogram behind `name` (global + stripes for a plain
@@ -236,11 +319,17 @@ impl MetricsRegistry {
                     merged.merge(h);
                 }
             }
+        } else if let Some((replica, plain)) = parse_replica_key(name) {
+            if let Some(sink) = self.replica_sinks().get(replica) {
+                if let Some(h) = sink.inner.lock().unwrap().latencies.get(plain) {
+                    merged.merge(h);
+                }
+            }
         } else {
             if let Some(h) = self.global.lock().unwrap().latencies.get(name) {
                 merged.merge(h);
             }
-            for sink in self.sinks() {
+            for sink in self.sinks().iter().chain(self.replica_sinks().iter()) {
                 if let Some(h) = sink.inner.lock().unwrap().latencies.get(name) {
                     merged.merge(h);
                 }
@@ -285,24 +374,31 @@ impl MetricsRegistry {
             gauges = g.gauges.clone();
             latencies = g.latencies.clone();
         }
-        for sink in self.sinks() {
-            let stripe = sink.inner.lock().unwrap();
-            for (k, &v) in &stripe.counters {
-                *counters.entry(k.clone()).or_insert(0) += v;
-                counters.insert(MetricsRegistry::shard_key(sink.shard, k), v);
-            }
-            for (k, &v) in &stripe.gauges {
-                // Global (and lower-shard) values win the plain key; the
-                // prefixed key is always this stripe's own.
-                gauges.entry(k.clone()).or_insert(v);
-                gauges.insert(MetricsRegistry::shard_key(sink.shard, k), v);
-            }
-            for (k, h) in &stripe.latencies {
-                latencies
-                    .entry(k.clone())
-                    .or_insert_with(LogHistogram::new)
-                    .merge(h);
-                latencies.insert(MetricsRegistry::shard_key(sink.shard, k), h.clone());
+        // Shard stripes first, then replica stripes — same merge semantics,
+        // different read-side key prefix.
+        for (sinks, key_for) in [
+            (self.sinks(), MetricsRegistry::shard_key as fn(usize, &str) -> String),
+            (self.replica_sinks(), MetricsRegistry::replica_key as fn(usize, &str) -> String),
+        ] {
+            for sink in sinks {
+                let stripe = sink.inner.lock().unwrap();
+                for (k, &v) in &stripe.counters {
+                    *counters.entry(k.clone()).or_insert(0) += v;
+                    counters.insert(key_for(sink.shard, k), v);
+                }
+                for (k, &v) in &stripe.gauges {
+                    // Global (and lower-stripe) values win the plain key; the
+                    // prefixed key is always this stripe's own.
+                    gauges.entry(k.clone()).or_insert(v);
+                    gauges.insert(key_for(sink.shard, k), v);
+                }
+                for (k, h) in &stripe.latencies {
+                    latencies
+                        .entry(k.clone())
+                        .or_insert_with(LogHistogram::new)
+                        .merge(h);
+                    latencies.insert(key_for(sink.shard, k), h.clone());
+                }
             }
         }
         Json::obj(vec![
@@ -425,6 +521,51 @@ mod tests {
         assert_eq!(m.counter("shard_less"), 1);
         assert_eq!(m.shard_counter(7, "rows"), 5);
         assert_eq!(m.counter("rows"), 5, "plain read merges the stripe");
+    }
+
+    /// The `replica<i>_` key scheme mirrors `shard<i>_` exactly: strict
+    /// prefix parsing, stripe-verbatim prefixed keys, merged plain keys —
+    /// and the two namespaces can never collide.
+    #[test]
+    fn per_replica_metrics_mirror_the_shard_key_scheme() {
+        let m = MetricsRegistry::new();
+        m.set_replica_gauge(0, "depth", 2.0);
+        m.set_replica_gauge(1, "healthy", 1.0);
+        m.incr_replica(1, "batches_routed");
+        m.add("replica1_batches_routed", 2);
+        m.observe_latency("replica0_predict", 0.003);
+        assert_eq!(m.replica_gauge(0, "depth"), Some(2.0));
+        assert_eq!(m.gauge("replica1_healthy"), Some(1.0));
+        assert_eq!(m.replica_counter(1, "batches_routed"), 3);
+        assert_eq!(m.counter("replica1_batches_routed"), 3);
+        assert!((m.mean_latency("replica0_predict").unwrap() - 0.003).abs() < 1e-12);
+        // Plain keys merge across replica stripes too.
+        assert_eq!(m.counter("batches_routed"), 3);
+        assert_eq!(m.gauge("depth"), Some(2.0));
+        let s = m.snapshot().to_string();
+        assert!(s.contains("replica0_depth") && s.contains("replica1_healthy"), "{s}");
+        assert!(s.contains("replica0_predict"), "{s}");
+        // A replica stripe never aliases a shard stripe of the same index.
+        m.set_shard_gauge(0, "depth", 9.0);
+        assert_eq!(m.gauge("replica0_depth"), Some(2.0));
+        assert_eq!(m.gauge("shard0_depth"), Some(9.0));
+    }
+
+    #[test]
+    fn replica_prefix_parsing_is_strict() {
+        let m = MetricsRegistry::new();
+        m.add("replicas", 3);
+        m.add("replica_less", 1);
+        m.add("replica4_routed", 5);
+        assert_eq!(m.counter("replicas"), 3);
+        assert_eq!(m.counter("replica_less"), 1);
+        assert_eq!(m.replica_counter(4, "routed"), 5);
+        assert_eq!(m.counter("routed"), 5, "plain read merges the stripe");
+        // Neither parser claims the other's keys.
+        assert_eq!(m.shard_counter(4, "routed"), 0);
+        m.add("shard2_routed", 7);
+        assert_eq!(m.replica_counter(2, "routed"), 0);
+        assert_eq!(m.counter("routed"), 12, "plain read merges both families");
     }
 
     #[test]

@@ -36,12 +36,14 @@ pub mod batcher;
 pub mod sharded;
 pub mod backend;
 pub mod server;
+pub mod remote;
 pub mod scheduler;
 
 pub use backend::{Backend, BackendKind, NativeBackend, ScratchArena};
 pub use batcher::{BatchItem, DynamicBatcher, PushRejection};
 pub use metrics::MetricsRegistry;
 pub use protocol::{Request, Response};
-pub use server::{Client, PoolMode, Server, ServerConfig};
-pub use sharded::{RouterKind, ShardRouter, ShardedBatcher};
+pub use remote::{RemoteBackend, RemoteOpts};
+pub use server::{Client, ConnectOpts, PoolMode, Server, ServerConfig};
+pub use sharded::{RouterKind, ShardRouter, ShardedBatcher, WeightedDepthRouter};
 pub use scheduler::TrainingScheduler;

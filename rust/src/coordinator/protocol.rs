@@ -16,6 +16,11 @@
 use crate::io::json::Json;
 use crate::linalg::Mat;
 
+/// Wire protocol version, carried in the `hello` handshake. Bump on any
+/// incompatible change to the request/response shapes; the coordinator
+/// refuses workers that answer with a different version.
+pub const PROTOCOL_VERSION: u64 = 1;
+
 /// Which forward path a predict request wants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -46,6 +51,10 @@ impl Mode {
 #[derive(Clone, Debug)]
 pub enum Request {
     Ping { id: u64 },
+    /// Handshake: the reply payload carries the protocol version, the
+    /// backend's model fingerprint, and (for workers) the calibrated
+    /// `MachineProfile` — the coordinator verifies both before routing.
+    Hello { id: u64 },
     Stats { id: u64 },
     /// Force an estimator-factor refresh from the current weights.
     Refresh { id: u64 },
@@ -59,6 +68,7 @@ impl Request {
     pub fn id(&self) -> u64 {
         match self {
             Request::Ping { id }
+            | Request::Hello { id }
             | Request::Stats { id }
             | Request::Refresh { id }
             | Request::Predict { id, .. }
@@ -77,6 +87,7 @@ impl Request {
             .ok_or_else(|| "missing 'op'".to_string())?;
         match op {
             "ping" => Ok(Request::Ping { id }),
+            "hello" => Ok(Request::Hello { id }),
             "stats" => Ok(Request::Stats { id }),
             "refresh" => Ok(Request::Refresh { id }),
             "trace" => Ok(Request::Trace { id }),
@@ -121,6 +132,10 @@ impl Request {
         match self {
             Request::Ping { id } => {
                 Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("ping".into()))])
+                    .to_string()
+            }
+            Request::Hello { id } => {
+                Json::obj(vec![("id", Json::Num(*id as f64)), ("op", Json::Str("hello".into()))])
                     .to_string()
             }
             Request::Stats { id } => {
@@ -296,6 +311,7 @@ mod tests {
     fn control_ops_roundtrip() {
         for (req, want) in [
             (Request::Ping { id: 1 }, "ping"),
+            (Request::Hello { id: 6 }, "hello"),
             (Request::Stats { id: 2 }, "stats"),
             (Request::Refresh { id: 3 }, "refresh"),
             (Request::Trace { id: 5 }, "trace"),

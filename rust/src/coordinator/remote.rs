@@ -1,0 +1,905 @@
+//! Remote worker replicas behind the coordinator: a [`RemoteBackend`] that
+//! implements the [`Backend`] trait by speaking the line-oriented TCP JSON
+//! protocol to `condcomp worker` processes.
+//!
+//! Topology: the coordinator runs the usual sharded server front door
+//! (acceptors, dynamic batching, metrics), but its backend forwards each
+//! drained batch to one of N worker processes over the wire instead of
+//! running kernels locally. Logits round-trip bit-exactly through the
+//! protocol, so 1-process and N-worker serving are bit-identical for the
+//! bit-exact kernel tiers (pinned end-to-end in `tests/replica_e2e.rs`).
+//!
+//! Replica lifecycle:
+//!
+//! - **Handshake.** Every connection starts with the `hello` op. The worker
+//!   answers with its protocol version, model fingerprint, batch limits,
+//!   and its calibrated [`MachineProfile`]; the coordinator refuses a
+//!   mismatched worker with a clear error instead of silently serving
+//!   wrong-model logits.
+//! - **Cost-aware routing.** Each replica's profile yields a relative cost
+//!   scalar (mean best per-FLOP kernel cost across layers); a
+//!   [`WeightedDepthRouter`] picks the replica minimizing
+//!   `(inflight + reported depth + 1) × cost`, so heterogeneous workers
+//!   absorb load in proportion to their speed.
+//! - **Health.** A background thread polls healthy replicas' `stats` for
+//!   queue depth, reconnects unhealthy ones with bounded retry + backoff
+//!   (re-running the handshake each time), and exports `replica<i>_`
+//!   metrics through the coordinator's registry.
+//! - **Failure.** An IO error marks the replica unhealthy and the same
+//!   batch retries on the next healthy replica; when every candidate is
+//!   dead or overloaded the predict fails with a "request shed" error that
+//!   the server maps to the explicit `overloaded` reply — exactly-one-reply
+//!   conservation survives a worker death.
+
+use super::backend::{Backend, BackendKind};
+use super::metrics::MetricsRegistry;
+use super::protocol::{Mode, Response, PROTOCOL_VERSION};
+use super::server::{Client, ConnectOpts};
+use super::sharded::WeightedDepthRouter;
+use crate::autotune::MachineProfile;
+use crate::linalg::Mat;
+use anyhow::Result;
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Connection/health knobs for the coordinator's worker links (fed from
+/// `server.connect_timeout_ms` / `server.retry_max` / `server.retry_backoff_ms`
+/// / `server.health_interval_ms` / `server.replicas`).
+#[derive(Clone, Debug)]
+pub struct RemoteOpts {
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Read timeout on worker connections — a hung worker turns into a
+    /// bounded failure instead of a wedged executor.
+    pub read_timeout: Duration,
+    /// Connect retries (after the first attempt) at startup.
+    pub retries: usize,
+    /// Initial retry backoff (doubles per attempt).
+    pub backoff: Duration,
+    /// Health-check / reconnect cadence.
+    pub health_interval: Duration,
+    /// Minimum workers that must complete the handshake at startup
+    /// (0 = at least one).
+    pub min_replicas: usize,
+}
+
+impl Default for RemoteOpts {
+    fn default() -> Self {
+        RemoteOpts {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: Duration::from_secs(30),
+            retries: 5,
+            backoff: Duration::from_millis(50),
+            health_interval: Duration::from_millis(500),
+            min_replicas: 0,
+        }
+    }
+}
+
+impl RemoteOpts {
+    fn connect_opts(&self, retries: usize) -> ConnectOpts {
+        ConnectOpts {
+            connect_timeout: self.connect_timeout,
+            read_timeout: Some(self.read_timeout),
+            retries,
+            backoff: self.backoff,
+        }
+    }
+}
+
+/// A worker's parsed `hello` payload.
+#[derive(Clone, Debug)]
+pub struct HelloInfo {
+    pub proto: u64,
+    pub version: String,
+    pub fingerprint: String,
+    pub input_dim: usize,
+    pub max_batch: usize,
+    pub profile: Option<MachineProfile>,
+}
+
+/// Parse a `hello` response into a [`HelloInfo`]. A worker that rejects the
+/// op (an old binary answering "unknown op") or answers without the
+/// handshake fields is a handshake failure, reported loudly.
+pub fn parse_hello(resp: &Response) -> Result<HelloInfo, String> {
+    if !resp.ok {
+        return Err(format!(
+            "worker rejected hello: {}",
+            resp.error.as_deref().unwrap_or("no error reported")
+        ));
+    }
+    let payload = resp.payload.as_ref().ok_or("hello reply carried no payload")?;
+    let proto = payload
+        .get("proto")
+        .and_then(|v| v.as_f64())
+        .ok_or("hello payload missing 'proto'")? as u64;
+    let fingerprint = payload
+        .get("fingerprint")
+        .and_then(|v| v.as_str())
+        .ok_or("hello payload missing 'fingerprint'")?
+        .to_string();
+    let input_dim = payload
+        .get("input_dim")
+        .and_then(|v| v.as_usize())
+        .ok_or("hello payload missing 'input_dim'")?;
+    let max_batch = payload
+        .get("max_batch")
+        .and_then(|v| v.as_usize())
+        .ok_or("hello payload missing 'max_batch'")?;
+    let version =
+        payload.get("version").and_then(|v| v.as_str()).unwrap_or("unknown").to_string();
+    // The profile is optional (a worker may serve uncalibrated); a present
+    // but unparseable profile is an error — silently dropping it would turn
+    // cost-aware routing off without anyone noticing.
+    let profile = match payload.get("profile") {
+        Some(p) => Some(
+            MachineProfile::parse(&p.to_string())
+                .map_err(|e| format!("hello payload carried a bad profile: {e}"))?,
+        ),
+        None => None,
+    };
+    Ok(HelloInfo { proto, version, fingerprint, input_dim, max_batch, profile })
+}
+
+/// Verify a worker's handshake against this coordinator: protocol version
+/// must match exactly, and (when the coordinator knows its model) the
+/// fingerprint must match — a worker serving a different model would return
+/// wrong-model logits.
+pub fn verify_hello(info: &HelloInfo, expected_fingerprint: &str) -> Result<(), String> {
+    if info.proto != PROTOCOL_VERSION {
+        return Err(format!(
+            "protocol version mismatch: worker speaks v{}, coordinator v{PROTOCOL_VERSION}",
+            info.proto
+        ));
+    }
+    if !expected_fingerprint.is_empty() && info.fingerprint != expected_fingerprint {
+        return Err(format!(
+            "model fingerprint mismatch: worker serves '{}', coordinator expects \
+             '{expected_fingerprint}' — refusing to route (wrong-model logits)",
+            info.fingerprint
+        ));
+    }
+    Ok(())
+}
+
+/// Relative cost scalar for a replica from its machine profile: the mean
+/// over layers of the best (lowest) per-FLOP kernel cost — "how fast this
+/// machine runs its cheapest kernel". Lower is faster; 1.0 when the profile
+/// carries no usable columns (uniform routing).
+pub fn replica_cost(profile: &MachineProfile) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for layer in &profile.layers {
+        let best = layer
+            .kernel_costs
+            .iter()
+            .map(|(_, c)| *c)
+            .filter(|c| c.is_finite() && *c > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if best.is_finite() {
+            sum += best;
+            n += 1;
+        }
+    }
+    if n > 0 {
+        sum / n as f64
+    } else {
+        1.0
+    }
+}
+
+/// One worker link: address, current connection, health flag, and the load/
+/// cost state the router reads.
+struct Replica {
+    addr: SocketAddr,
+    conn: Mutex<Option<Client>>,
+    healthy: AtomicBool,
+    /// Batches this coordinator currently has in flight on this worker.
+    inflight: AtomicUsize,
+    /// The worker's own queue depth, from its last `stats` poll.
+    depth: AtomicUsize,
+    /// Relative cost scalar (bits of an f64; lower = faster).
+    cost_bits: AtomicU64,
+    routed: AtomicU64,
+    failures: AtomicU64,
+    reconnects: AtomicU64,
+    overloaded_replies: AtomicU64,
+    profile: Mutex<Option<MachineProfile>>,
+}
+
+impl Replica {
+    fn new(addr: SocketAddr) -> Replica {
+        Replica {
+            addr,
+            conn: Mutex::new(None),
+            healthy: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            depth: AtomicUsize::new(0),
+            cost_bits: AtomicU64::new(1.0f64.to_bits()),
+            routed: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            overloaded_replies: AtomicU64::new(0),
+            profile: Mutex::new(None),
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        f64::from_bits(self.cost_bits.load(Ordering::Relaxed))
+    }
+
+    /// Install a verified handshake: connection, profile, cost.
+    fn install(&self, client: Client, info: &HelloInfo) {
+        self.cost_bits.store(
+            info.profile.as_ref().map(replica_cost).unwrap_or(1.0).to_bits(),
+            Ordering::Relaxed,
+        );
+        *self.profile.lock().unwrap() = info.profile.clone();
+        *self.conn.lock().unwrap() = Some(client);
+        self.depth.store(0, Ordering::Relaxed);
+        self.healthy.store(true, Ordering::Relaxed);
+    }
+
+    /// Drop the connection and mark unhealthy (the health thread retries).
+    fn mark_down(&self) {
+        self.healthy.store(false, Ordering::Relaxed);
+        *self.conn.lock().unwrap() = None;
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// State shared between the backend handle and the health thread.
+struct RemoteShared {
+    replicas: Vec<Arc<Replica>>,
+    router: WeightedDepthRouter,
+    expected_fingerprint: String,
+    input_dim: usize,
+    max_batch: usize,
+    opts: RemoteOpts,
+    metrics: Mutex<Option<Arc<MetricsRegistry>>>,
+    stop: AtomicBool,
+}
+
+/// Outcome of one predict attempt against one replica.
+enum Attempt {
+    Ok(Mat),
+    /// The worker shed the batch; try the next replica.
+    Overloaded,
+    /// IO failure; the replica was marked down — retry elsewhere.
+    Failed,
+    /// The worker answered with a real (non-shed) error; do not retry.
+    Hard(String),
+}
+
+impl RemoteShared {
+    /// Connect + handshake one address. `retries` bounds connect attempts;
+    /// a completed-but-unacceptable handshake (protocol/fingerprint
+    /// mismatch, bad payload) is a hard error that no retry can fix.
+    fn handshake(&self, addr: &SocketAddr, retries: usize) -> Result<(Client, HelloInfo)> {
+        let mut client = Client::connect_with(addr, &self.opts.connect_opts(retries))?;
+        let resp = client.hello()?;
+        let info = parse_hello(&resp).map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?;
+        verify_hello(&info, &self.expected_fingerprint)
+            .map_err(|e| anyhow::anyhow!("worker {addr}: {e}"))?;
+        Ok((client, info))
+    }
+
+    fn publish<F: FnOnce(&MetricsRegistry)>(&self, f: F) {
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            f(m);
+        }
+    }
+
+    /// One predict attempt on replica `i`. Holds the replica's connection
+    /// lock for the round-trip (one outstanding batch per worker link; the
+    /// health poller uses `try_lock` so it never queues behind us).
+    fn try_replica(&self, i: usize, x: &Mat, mode: Mode) -> Attempt {
+        let replica = &self.replicas[i];
+        replica.inflight.fetch_add(1, Ordering::Relaxed);
+        let out = {
+            let mut conn = replica.conn.lock().unwrap();
+            match conn.as_mut() {
+                None => Attempt::Failed,
+                Some(client) => match client.predict(x.clone(), mode) {
+                    Err(_) => Attempt::Failed,
+                    Ok(resp) if resp.overloaded => Attempt::Overloaded,
+                    Ok(resp) if !resp.ok => Attempt::Hard(
+                        resp.error.unwrap_or_else(|| "worker error".into()),
+                    ),
+                    Ok(resp) => match resp.logits {
+                        Some(logits) => Attempt::Ok(logits),
+                        None => Attempt::Hard("worker reply carried no logits".into()),
+                    },
+                },
+            }
+        };
+        replica.inflight.fetch_sub(1, Ordering::Relaxed);
+        match &out {
+            Attempt::Ok(_) => {
+                replica.routed.fetch_add(1, Ordering::Relaxed);
+                self.publish(|m| m.incr_replica(i, "batches_routed"));
+            }
+            Attempt::Overloaded => {
+                replica.overloaded_replies.fetch_add(1, Ordering::Relaxed);
+                self.publish(|m| m.incr_replica(i, "overloaded_replies"));
+            }
+            Attempt::Failed => {
+                replica.mark_down();
+                self.publish(|m| {
+                    m.incr_replica(i, "failures");
+                    m.set_replica_gauge(i, "healthy", 0.0);
+                });
+                eprintln!(
+                    "remote: worker {} failed mid-request; re-routing the batch",
+                    replica.addr
+                );
+            }
+            Attempt::Hard(_) => {}
+        }
+        out
+    }
+
+    /// Current router costs, replica-indexed.
+    fn costs(&self) -> Vec<f64> {
+        self.replicas.iter().map(|r| r.cost()).collect()
+    }
+
+    /// One health tick: reconnect unhealthy replicas (single bounded
+    /// attempt — the loop cadence is the retry schedule), poll healthy ones
+    /// for queue depth, refresh router costs, export metrics.
+    fn health_tick(&self) {
+        for (i, replica) in self.replicas.iter().enumerate() {
+            if !replica.healthy.load(Ordering::Relaxed) {
+                match self.handshake(&replica.addr, 0) {
+                    Ok((client, info)) => {
+                        // Re-verify serving limits too: a worker that came
+                        // back smaller than the coordinator's batch contract
+                        // would reject batches we already promised to accept.
+                        if info.input_dim != self.input_dim || info.max_batch < self.max_batch {
+                            eprintln!(
+                                "remote: worker {} rejoined with incompatible limits \
+                                 (input_dim {} vs {}, max_batch {} < {}); keeping it out",
+                                replica.addr,
+                                info.input_dim,
+                                self.input_dim,
+                                info.max_batch,
+                                self.max_batch
+                            );
+                        } else {
+                            replica.install(client, &info);
+                            replica.reconnects.fetch_add(1, Ordering::Relaxed);
+                            self.publish(|m| m.incr_replica(i, "reconnects"));
+                            eprintln!("remote: worker {} reconnected", replica.addr);
+                        }
+                    }
+                    Err(_) => {} // still down; next tick retries
+                }
+            } else {
+                // Depth poll: skip rather than queue behind an in-flight
+                // batch (the connection is serial; depth is advisory).
+                if let Ok(mut conn) = replica.conn.try_lock() {
+                    let poll = conn.as_mut().map(|c| c.stats());
+                    match poll {
+                        Some(Ok(resp)) if resp.ok => {
+                            replica
+                                .depth
+                                .store(reported_depth(&resp), Ordering::Relaxed);
+                        }
+                        Some(Err(_)) => {
+                            drop(conn);
+                            replica.mark_down();
+                            self.publish(|m| m.incr_replica(i, "failures"));
+                            eprintln!(
+                                "remote: worker {} failed a health check",
+                                replica.addr
+                            );
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        self.router.set_costs(self.costs());
+        self.export_metrics();
+    }
+
+    fn export_metrics(&self) {
+        self.publish(|m| {
+            let mut healthy = 0usize;
+            for (i, r) in self.replicas.iter().enumerate() {
+                let up = r.healthy.load(Ordering::Relaxed);
+                healthy += usize::from(up);
+                m.set_replica_gauge(i, "healthy", if up { 1.0 } else { 0.0 });
+                m.set_replica_gauge(i, "depth", r.depth.load(Ordering::Relaxed) as f64);
+                m.set_replica_gauge(i, "cost", r.cost());
+            }
+            m.set_gauge("replicas", self.replicas.len() as f64);
+            m.set_gauge("replicas_healthy", healthy as f64);
+        });
+    }
+}
+
+/// Sum of the worker's per-shard `shard<i>_depth` gauges from a `stats`
+/// payload (the worker's own queue pressure plane, read over the wire).
+fn reported_depth(resp: &Response) -> usize {
+    let Some(gauges) = resp.payload.as_ref().and_then(|p| p.get("gauges")).and_then(|g| g.as_obj())
+    else {
+        return 0;
+    };
+    let mut total = 0.0f64;
+    for (key, value) in gauges {
+        let Some(rest) = key.strip_prefix("shard") else { continue };
+        let Some(idx) = rest.strip_suffix("_depth") else { continue };
+        if !idx.is_empty() && idx.bytes().all(|b| b.is_ascii_digit()) {
+            total += value.as_f64().unwrap_or(0.0).max(0.0);
+        }
+    }
+    total as usize
+}
+
+/// Sentinel depth for replicas the router must not pick this round.
+const UNAVAILABLE: usize = usize::MAX / 4;
+
+/// A [`Backend`] that forwards batches to remote worker replicas over the
+/// serving protocol. See the module docs for the lifecycle.
+pub struct RemoteBackend {
+    shared: Arc<RemoteShared>,
+    health: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl RemoteBackend {
+    /// Connect to `addrs`, handshake each worker, and start the health
+    /// thread. A worker that completes the handshake with the wrong
+    /// protocol version or model fingerprint fails the whole startup (the
+    /// operator pointed the coordinator at the wrong fleet); a worker that
+    /// is merely unreachable starts unhealthy and is retried in the
+    /// background. Requires at least `max(1, min_replicas)` verified
+    /// workers.
+    pub fn connect(
+        addrs: &[String],
+        expected_fingerprint: &str,
+        opts: RemoteOpts,
+    ) -> Result<RemoteBackend> {
+        if addrs.is_empty() {
+            return Err(anyhow::anyhow!("no worker addresses given"));
+        }
+        let mut replicas = Vec::with_capacity(addrs.len());
+        for a in addrs {
+            let addr = a
+                .to_socket_addrs()
+                .map_err(|e| anyhow::anyhow!("bad worker address '{a}': {e}"))?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("worker address '{a}' resolved to nothing"))?;
+            replicas.push(Arc::new(Replica::new(addr)));
+        }
+        let mut shared = RemoteShared {
+            replicas,
+            router: WeightedDepthRouter::new(),
+            expected_fingerprint: expected_fingerprint.to_string(),
+            input_dim: 0,
+            max_batch: 0,
+            opts,
+            metrics: Mutex::new(None),
+            stop: AtomicBool::new(false),
+        };
+
+        // Handshake every address; collect verified links. Mismatches are
+        // hard errors, connect failures are retried by the health thread.
+        let mut infos: Vec<Option<HelloInfo>> = Vec::new();
+        let mut down: Vec<String> = Vec::new();
+        for replica in &shared.replicas {
+            match shared.handshake(&replica.addr, shared.opts.retries) {
+                Ok((client, info)) => {
+                    replica.install(client, &info);
+                    infos.push(Some(info));
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    // A completed-but-rejected handshake is fatal; a socket
+                    // that never answered is just "not up yet".
+                    if msg.contains("mismatch") || msg.contains("hello") {
+                        return Err(e);
+                    }
+                    eprintln!("remote: worker {} unreachable at startup: {msg}", replica.addr);
+                    down.push(replica.addr.to_string());
+                    infos.push(None);
+                }
+            }
+        }
+        let up: Vec<&HelloInfo> = infos.iter().flatten().collect();
+        let need = shared.opts.min_replicas.max(1);
+        if up.len() < need {
+            return Err(anyhow::anyhow!(
+                "only {}/{} workers completed the handshake (need {need}; unreachable: [{}])",
+                up.len(),
+                shared.replicas.len(),
+                down.join(", ")
+            ));
+        }
+        let input_dim = up[0].input_dim;
+        if up.iter().any(|i| i.input_dim != input_dim) {
+            return Err(anyhow::anyhow!(
+                "workers disagree on input_dim: {:?}",
+                up.iter().map(|i| i.input_dim).collect::<Vec<_>>()
+            ));
+        }
+        // The fleet's batch contract is the smallest worker's.
+        let max_batch = up.iter().map(|i| i.max_batch).min().unwrap_or(1).max(1);
+        shared.input_dim = input_dim;
+        shared.max_batch = max_batch;
+        shared.router.set_costs(shared.costs());
+        let shared = Arc::new(shared);
+
+        let health = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("condcomp-replica-health".into())
+                .spawn(move || {
+                    let step = Duration::from_millis(20);
+                    let mut since_tick = Duration::ZERO;
+                    while !shared.stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(step);
+                        since_tick += step;
+                        if since_tick >= shared.opts.health_interval {
+                            since_tick = Duration::ZERO;
+                            shared.health_tick();
+                        }
+                    }
+                })
+                .expect("spawn replica health thread")
+        };
+        Ok(RemoteBackend { shared, health: Mutex::new(Some(health)) })
+    }
+
+    /// Wire the coordinator's metrics registry in (after `Server::start`,
+    /// which owns the registry): per-replica gauges and counters flow to
+    /// `replica<i>_` stripes from here on.
+    pub fn attach_metrics(&self, metrics: Arc<MetricsRegistry>) {
+        *self.shared.metrics.lock().unwrap() = Some(metrics);
+        self.shared.export_metrics();
+    }
+
+    /// Replica health snapshot (tests; diagnostics).
+    pub fn healthy_replicas(&self) -> Vec<bool> {
+        self.shared
+            .replicas
+            .iter()
+            .map(|r| r.healthy.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.shared.replicas.len()
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.health.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Remote
+    }
+
+    fn input_dim(&self) -> usize {
+        self.shared.input_dim
+    }
+
+    fn max_batch(&self) -> usize {
+        self.shared.max_batch
+    }
+
+    fn predict(&self, x: &Mat, mode: Mode) -> Result<(Mat, Option<f64>)> {
+        let shared = &self.shared;
+        let n = shared.replicas.len();
+        let mut tried = vec![false; n];
+        let mut saw_overload = false;
+        for _ in 0..n {
+            // Router input: the synthetic depth of each *available* replica
+            // is our in-flight count plus its self-reported queue depth;
+            // tried/unhealthy replicas get a sentinel the argmin can only
+            // pick when nothing real is left.
+            let depths: Vec<usize> = shared
+                .replicas
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    if tried[i] || !r.healthy.load(Ordering::Relaxed) {
+                        UNAVAILABLE
+                    } else {
+                        r.inflight.load(Ordering::Relaxed) + r.depth.load(Ordering::Relaxed)
+                    }
+                })
+                .collect();
+            let pick = shared.router.pick(&depths);
+            if depths.get(pick).copied().unwrap_or(UNAVAILABLE) >= UNAVAILABLE {
+                break; // no healthy untried replica left
+            }
+            tried[pick] = true;
+            match shared.try_replica(pick, x, mode) {
+                Attempt::Ok(logits) => return Ok((logits, None)),
+                Attempt::Hard(e) => {
+                    return Err(anyhow::anyhow!(
+                        "worker {}: {e}",
+                        shared.replicas[pick].addr
+                    ))
+                }
+                Attempt::Overloaded => saw_overload = true,
+                Attempt::Failed => {}
+            }
+        }
+        // Every candidate was down or shedding: report the batch as shed so
+        // the server answers with the explicit `overloaded` reply (clients
+        // retry later) instead of a hard error.
+        if saw_overload {
+            Err(anyhow::anyhow!("all worker replicas overloaded: request shed"))
+        } else {
+            Err(anyhow::anyhow!("no healthy worker replica: request shed"))
+        }
+    }
+
+    fn refresh(&self) -> Result<()> {
+        let mut ok = 0usize;
+        let mut last_err: Option<String> = None;
+        for (i, replica) in self.shared.replicas.iter().enumerate() {
+            if !replica.healthy.load(Ordering::Relaxed) {
+                continue;
+            }
+            let mut conn = replica.conn.lock().unwrap();
+            match conn.as_mut().map(|c| c.refresh()) {
+                Some(Ok(resp)) if resp.ok => ok += 1,
+                Some(Ok(resp)) => {
+                    last_err = resp.error.clone().or(Some("refresh rejected".into()))
+                }
+                Some(Err(e)) => {
+                    drop(conn);
+                    replica.mark_down();
+                    self.shared.publish(|m| m.incr_replica(i, "failures"));
+                    last_err = Some(e.to_string());
+                }
+                None => {}
+            }
+        }
+        if ok > 0 {
+            Ok(())
+        } else {
+            Err(anyhow::anyhow!(
+                "refresh reached no worker: {}",
+                last_err.unwrap_or_else(|| "no healthy replicas".into())
+            ))
+        }
+    }
+
+    fn model_fingerprint(&self) -> Option<String> {
+        (!self.shared.expected_fingerprint.is_empty())
+            .then(|| self.shared.expected_fingerprint.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{model_fingerprint, LayerThreshold, PROFILE_SCHEMA_VERSION};
+    use crate::config::{EstimatorConfig, NetConfig};
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::server::{Server, ServerConfig};
+    use crate::estimator::SignEstimatorSet;
+    use crate::nn::Mlp;
+    use crate::util::Pcg32;
+
+    fn hello_resp(proto: u64, fingerprint: &str) -> Response {
+        use crate::io::json::Json;
+        let mut r = Response::ok(1);
+        r.payload = Some(Json::obj(vec![
+            ("proto", Json::Num(proto as f64)),
+            ("version", Json::Str("t".into())),
+            ("fingerprint", Json::Str(fingerprint.into())),
+            ("input_dim", Json::Num(6.0)),
+            ("max_batch", Json::Num(16.0)),
+        ]));
+        r
+    }
+
+    /// Satellite: the handshake verifies both directions — a good hello is
+    /// accepted, version and fingerprint mismatches are refused with errors
+    /// naming the mismatch.
+    #[test]
+    fn hello_verification_accepts_matches_and_rejects_mismatches() {
+        let good = parse_hello(&hello_resp(PROTOCOL_VERSION, "mlp:6-10-3")).unwrap();
+        assert_eq!(good.input_dim, 6);
+        assert_eq!(good.max_batch, 16);
+        assert!(good.profile.is_none());
+        verify_hello(&good, "mlp:6-10-3").unwrap();
+        verify_hello(&good, "").unwrap(); // no expectation → accept
+
+        let old = parse_hello(&hello_resp(PROTOCOL_VERSION + 1, "mlp:6-10-3")).unwrap();
+        let err = verify_hello(&old, "mlp:6-10-3").unwrap_err();
+        assert!(err.contains("protocol version"), "{err}");
+
+        let wrong = parse_hello(&hello_resp(PROTOCOL_VERSION, "mlp:9-9-9")).unwrap();
+        let err = verify_hello(&wrong, "mlp:6-10-3").unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+        assert!(err.contains("mlp:9-9-9") && err.contains("mlp:6-10-3"), "{err}");
+    }
+
+    #[test]
+    fn hello_parse_rejects_malformed_replies() {
+        // An old worker that does not know the op answers with an error.
+        let rejected = Response::err(1, "parse: unknown op 'hello'");
+        let err = parse_hello(&rejected).unwrap_err();
+        assert!(err.contains("unknown op"), "{err}");
+        // A reply with no payload is not a handshake.
+        let empty = Response::ok(1);
+        assert!(parse_hello(&empty).is_err());
+        // Missing fields are named.
+        let mut partial = Response::ok(1);
+        partial.payload = Some(crate::io::json::Json::obj(vec![(
+            "proto",
+            crate::io::json::Json::Num(1.0),
+        )]));
+        let err = parse_hello(&partial).unwrap_err();
+        assert!(err.contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn replica_cost_averages_best_kernel_columns() {
+        let profile = MachineProfile {
+            version: PROFILE_SCHEMA_VERSION,
+            fingerprint: model_fingerprint(&[6, 10, 3]),
+            hardware: "test".into(),
+            threads: 1,
+            budget_ms: 0,
+            kernels: vec!["dense".into(), "masked".into()],
+            layers: vec![
+                LayerThreshold::from_kernel_costs(
+                    0,
+                    6,
+                    10,
+                    vec![("dense".into(), 2.0), ("masked".into(), 4.0)],
+                    None,
+                ),
+                LayerThreshold::from_kernel_costs(
+                    1,
+                    10,
+                    3,
+                    vec![("dense".into(), 6.0), ("masked".into(), 4.0)],
+                    None,
+                ),
+            ],
+        };
+        // Best per layer: 2.0 and 4.0 → mean 3.0.
+        assert!((replica_cost(&profile) - 3.0).abs() < 1e-12);
+        // No usable columns → uniform cost.
+        let empty = MachineProfile { layers: vec![], ..profile };
+        assert_eq!(replica_cost(&empty), 1.0);
+    }
+
+    fn worker(layers: Vec<usize>, ranks: &[usize]) -> (Server, String, String) {
+        let mut rng = Pcg32::seeded(7);
+        let net = Mlp::init(
+            &NetConfig { layers, weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng,
+        );
+        let fp = model_fingerprint(&net.layer_sizes());
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(ranks), 3);
+        let backend = Arc::new(NativeBackend::new(net, est, 16));
+        let server = Server::start(backend, ServerConfig::default()).unwrap();
+        let addr = server.local_addr.to_string();
+        (server, addr, fp)
+    }
+
+    fn fast_opts() -> RemoteOpts {
+        RemoteOpts {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Duration::from_secs(10),
+            retries: 1,
+            backoff: Duration::from_millis(10),
+            health_interval: Duration::from_millis(50),
+            min_replicas: 0,
+        }
+    }
+
+    /// Satellite, over real TCP: the hello op round-trips the version and
+    /// fingerprint, and a coordinator expecting a different model refuses
+    /// the worker instead of serving its logits.
+    #[test]
+    fn coordinator_rejects_a_wrong_model_worker_over_tcp() {
+        let (server, addr, fp) = worker(vec![6, 10, 8, 3], &[5, 4]);
+        // Direct hello sees the protocol version and fingerprint.
+        let mut client = Client::connect(&server.local_addr).unwrap();
+        let info = parse_hello(&client.hello().unwrap()).unwrap();
+        assert_eq!(info.proto, PROTOCOL_VERSION);
+        assert_eq!(info.fingerprint, fp);
+        assert_eq!(info.input_dim, 6);
+
+        // Wrong expectation → hard startup error naming the fingerprints.
+        let err = RemoteBackend::connect(
+            &[addr.clone()],
+            "mlp:784-1000-10",
+            fast_opts(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+
+        // Right expectation → verified link, bit-identical logits to a
+        // direct client predict (lossless wire round-trip, same worker).
+        let remote = RemoteBackend::connect(&[addr], &fp, fast_opts()).unwrap();
+        assert_eq!(remote.kind(), BackendKind::Remote);
+        assert_eq!(remote.input_dim(), 6);
+        assert_eq!(remote.max_batch(), 16);
+        assert_eq!(remote.healthy_replicas(), vec![true]);
+        let mut rng = Pcg32::seeded(11);
+        let x = Mat::randn(3, 6, 1.0, &mut rng);
+        let direct = client.predict(x.clone(), Mode::ConditionalAe).unwrap();
+        let (logits, _) = remote.predict(&x, Mode::ConditionalAe).unwrap();
+        let want = direct.logits.unwrap();
+        assert_eq!(logits.shape(), want.shape());
+        for (a, b) in logits.as_slice().iter().zip(want.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        drop(remote);
+        server.shutdown();
+    }
+
+    /// Every replica dead → predicts fail as "request shed" (the server
+    /// turns that into explicit overloaded replies), and a worker that
+    /// comes back is re-admitted by the health thread after a fresh
+    /// handshake.
+    #[test]
+    fn dead_fleet_sheds_and_recovers() {
+        let (server, addr, fp) = worker(vec![6, 10, 8, 3], &[5, 4]);
+        let remote = RemoteBackend::connect(&[addr.clone()], &fp, fast_opts()).unwrap();
+        server.shutdown();
+        // The TCP connection is gone; the first predict fails over to
+        // nothing and reports a shed.
+        let mut rng = Pcg32::seeded(13);
+        let x = Mat::randn(1, 6, 1.0, &mut rng);
+        let mut last = None;
+        for _ in 0..10 {
+            match remote.predict(&x, Mode::ConditionalAe) {
+                Err(e) => {
+                    last = Some(e.to_string());
+                    if last.as_deref().unwrap_or("").contains("request shed") {
+                        break;
+                    }
+                }
+                Ok(_) => std::thread::sleep(Duration::from_millis(20)),
+            }
+        }
+        assert!(
+            last.as_deref().unwrap_or("").contains("request shed"),
+            "expected shed, got {last:?}"
+        );
+        assert_eq!(remote.healthy_replicas(), vec![false]);
+
+        // Restart a compatible worker on the same port; the health thread
+        // re-handshakes and the fleet serves again.
+        let port: u16 = addr.rsplit(':').next().unwrap().parse().unwrap();
+        let mut rng2 = Pcg32::seeded(7);
+        let net = Mlp::init(
+            &NetConfig { layers: vec![6, 10, 8, 3], weight_sigma: 0.4, bias_init: 0.1 },
+            &mut rng2,
+        );
+        let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&[5, 4]), 3);
+        let backend = Arc::new(NativeBackend::new(net, est, 16));
+        let cfg = ServerConfig { addr: format!("127.0.0.1:{port}"), ..ServerConfig::default() };
+        let revived = Server::start(backend, cfg).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !remote.healthy_replicas()[0] {
+            assert!(std::time::Instant::now() < deadline, "worker never re-admitted");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let (logits, _) = remote.predict(&x, Mode::ConditionalAe).unwrap();
+        assert_eq!(logits.rows(), 1);
+        drop(remote);
+        revived.shutdown();
+    }
+}

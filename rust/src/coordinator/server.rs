@@ -568,9 +568,21 @@ fn execute_batch(
             ctx.put_buf(logits.into_vec());
         }
         Err(e) => {
-            ctx.metrics().incr("errors");
-            for item in batch {
-                let _ = item.reply.send(Response::err(item.id, format!("backend: {e}")));
+            // A remote backend that tried every replica and got shed (or
+            // found none healthy) reports a "request shed" error — forward
+            // it as the explicit overloaded reply so clients see "retry
+            // later", and exactly-one-reply conservation survives a worker
+            // death behind the coordinator. Anything else is a real error.
+            if e.to_string().contains("request shed") {
+                ctx.metrics().add("shed_total", n_items as u64);
+                for item in batch {
+                    let _ = item.reply.send(Response::overloaded(item.id));
+                }
+            } else {
+                ctx.metrics().incr("errors");
+                for item in batch {
+                    let _ = item.reply.send(Response::err(item.id, format!("backend: {e}")));
+                }
             }
         }
     }
@@ -658,6 +670,30 @@ fn handle_connection(
                     "version",
                     crate::io::json::Json::Str(crate::VERSION.into()),
                 )]));
+                let _ = tx.send(r);
+            }
+            Ok(Request::Hello { id }) => {
+                // Handshake: protocol version + model fingerprint (+ the
+                // calibrated machine profile, when the backend has one) so a
+                // coordinator can verify this worker serves the same model
+                // before routing any traffic, and hold its cost columns.
+                use crate::io::json::Json;
+                metrics.incr("hellos");
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("proto", Json::Num(super::protocol::PROTOCOL_VERSION as f64)),
+                    ("version", Json::Str(crate::VERSION.into())),
+                    (
+                        "fingerprint",
+                        Json::Str(backend.model_fingerprint().unwrap_or_default()),
+                    ),
+                    ("input_dim", Json::Num(backend.input_dim() as f64)),
+                    ("max_batch", Json::Num(backend.max_batch() as f64)),
+                ];
+                if let Some(profile) = backend.machine_profile() {
+                    fields.push(("profile", profile.to_json()));
+                }
+                let mut r = Response::ok(id);
+                r.payload = Some(Json::obj(fields));
                 let _ = tx.send(r);
             }
             Ok(Request::Stats { id }) => {
@@ -754,11 +790,67 @@ pub struct Client {
     next_id: u64,
 }
 
+/// Bounded connection behavior for [`Client::connect_with`]: connect
+/// timeout, optional read timeout, and retry-with-backoff — so a client
+/// never blocks forever on a dead or still-starting address. Reused by the
+/// coordinator's worker (re)connection path.
+#[derive(Clone, Debug)]
+pub struct ConnectOpts {
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Read timeout installed on the connected stream (`None` = block).
+    pub read_timeout: Option<Duration>,
+    /// Additional attempts after the first failed connect.
+    pub retries: usize,
+    /// Initial backoff between attempts (doubles each retry).
+    pub backoff: Duration,
+}
+
+impl Default for ConnectOpts {
+    fn default() -> Self {
+        ConnectOpts {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: None,
+            retries: 3,
+            backoff: Duration::from_millis(100),
+        }
+    }
+}
+
 impl Client {
     pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream, next_id: 1 })
+        Client::connect_with(addr, &ConnectOpts::default())
+    }
+
+    /// Connect with bounded timeouts and retry-with-backoff (see
+    /// [`ConnectOpts`]). Each failed attempt sleeps the current backoff and
+    /// doubles it; the last error is returned once attempts are exhausted.
+    pub fn connect_with(addr: &std::net::SocketAddr, opts: &ConnectOpts) -> Result<Client> {
+        let mut backoff = opts.backoff;
+        let mut last_err = None;
+        for attempt in 0..=opts.retries {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2);
+            }
+            match TcpStream::connect_timeout(addr, opts.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(opts.read_timeout)?;
+                    return Ok(Client {
+                        reader: BufReader::new(stream.try_clone()?),
+                        writer: stream,
+                        next_id: 1,
+                    });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(anyhow::anyhow!(
+            "connect to {addr} failed after {} attempts: {}",
+            opts.retries + 1,
+            last_err.expect("at least one attempt")
+        ))
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
@@ -774,6 +866,14 @@ impl Client {
     pub fn ping(&mut self) -> Result<Response> {
         let id = self.bump();
         self.roundtrip(&Request::Ping { id })
+    }
+
+    /// Handshake: the payload carries the server's protocol version, model
+    /// fingerprint, input/batch limits, and (for calibrated workers) the
+    /// machine profile.
+    pub fn hello(&mut self) -> Result<Response> {
+        let id = self.bump();
+        self.roundtrip(&Request::Hello { id })
     }
 
     pub fn stats(&mut self) -> Result<Response> {

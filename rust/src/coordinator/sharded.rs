@@ -127,6 +127,74 @@ impl ShardRouter for LeastDepthRouter {
     }
 }
 
+/// Cost-weighted least-depth: pick the target minimizing
+/// `(depth + 1) × cost`, where `cost[i]` is a per-target relative cost
+/// scalar (lower = faster). With uniform costs this is exactly
+/// [`LeastDepthRouter`]; with heterogeneous costs a fast target absorbs
+/// proportionally more work before a slow one is preferred. Built for the
+/// replica-aware coordinator ([`crate::coordinator::remote::RemoteBackend`]
+/// routes batches across worker replicas with per-replica costs from their
+/// published machine profiles), but works as a shard router too.
+pub struct WeightedDepthRouter {
+    costs: std::sync::RwLock<Vec<f64>>,
+}
+
+impl WeightedDepthRouter {
+    /// Uniform costs (pure least-depth) until [`Self::set_costs`] is called.
+    pub fn new() -> WeightedDepthRouter {
+        WeightedDepthRouter { costs: std::sync::RwLock::new(Vec::new()) }
+    }
+
+    pub fn with_costs(costs: Vec<f64>) -> WeightedDepthRouter {
+        let r = WeightedDepthRouter::new();
+        r.set_costs(costs);
+        r
+    }
+
+    /// Install per-target relative costs; non-finite or non-positive entries
+    /// fall back to 1.0. Targets beyond the vector also cost 1.0.
+    pub fn set_costs(&self, costs: Vec<f64>) {
+        let sane: Vec<f64> = costs
+            .into_iter()
+            .map(|c| if c.is_finite() && c > 0.0 { c } else { 1.0 })
+            .collect();
+        *self.costs.write().unwrap() = sane;
+    }
+
+    /// Argmin of `(depth + 1) × cost` over the depth snapshot; ties break to
+    /// the lowest index so the choice is deterministic under equal load.
+    pub fn pick(&self, depths: &[usize]) -> usize {
+        let costs = self.costs.read().unwrap();
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, &d) in depths.iter().enumerate() {
+            let cost = costs.get(i).copied().unwrap_or(1.0);
+            let score = (d as f64 + 1.0) * cost;
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl Default for WeightedDepthRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardRouter for WeightedDepthRouter {
+    fn route(&self, _item: &BatchItem, _num_shards: usize, depths: &[usize]) -> usize {
+        self.pick(depths)
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted-depth"
+    }
+}
+
 fn router_for(kind: RouterKind) -> Box<dyn ShardRouter> {
     match kind {
         RouterKind::RoundRobin => Box::new(RoundRobinRouter::new()),
@@ -382,6 +450,42 @@ mod tests {
         assert_eq!(b.shard(0).pressure(), 1.0);
         // Shed pushes never changed any queue.
         assert_eq!(b.depth(), 4);
+    }
+
+    #[test]
+    fn weighted_depth_defaults_to_least_depth() {
+        let r = WeightedDepthRouter::new();
+        assert_eq!(r.pick(&[2, 0, 1]), 1);
+        assert_eq!(r.pick(&[1, 1, 1]), 0, "ties break to the lowest index");
+        assert_eq!(r.pick(&[]), 0, "empty snapshot clamps to 0");
+    }
+
+    #[test]
+    fn weighted_depth_prefers_cheap_targets_under_load() {
+        // Target 0 is 4x faster: at equal depth it wins, and it keeps
+        // winning until its queue is ~4x deeper than target 1's.
+        let r = WeightedDepthRouter::with_costs(vec![0.25, 1.0]);
+        assert_eq!(r.pick(&[0, 0]), 0);
+        assert_eq!(r.pick(&[2, 0]), 0, "(2+1)*0.25 < (0+1)*1.0");
+        assert_eq!(r.pick(&[4, 0]), 0, "(4+1)*0.25 still ahead");
+        assert_eq!(r.pick(&[7, 1]), 0, "2.0 == 2.0 ties to lower index");
+        assert_eq!(r.pick(&[8, 1]), 1, "finally saturated");
+        // Bad costs degrade to 1.0 instead of poisoning the argmin; targets
+        // beyond the cost vector also default to 1.0.
+        r.set_costs(vec![f64::NAN, -3.0]);
+        assert_eq!(r.pick(&[1, 0, 0]), 1);
+        // And it routes through the ShardRouter trait like any other policy.
+        let b = ShardedBatcher::with_limits_router(
+            2,
+            8,
+            Duration::from_millis(5),
+            0,
+            None,
+            Box::new(WeightedDepthRouter::with_costs(vec![1.0, 0.1])),
+        );
+        let (it, _rx) = item(1);
+        assert_eq!(b.push(it).unwrap(), 1, "cheap shard wins the empty tie");
+        assert_eq!(b.router_name(), "weighted-depth");
     }
 
     #[test]

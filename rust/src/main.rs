@@ -15,6 +15,12 @@
 //!               round-robin|least-depth); per-request outputs are
 //!               bit-identical for any shard count, lease width, and
 //!               kernel allow-list
+//!   worker      headless single-shard replica of `serve`: trains the same
+//!               deterministic model (same profile/seed ⇒ bit-identical
+//!               weights across processes) and serves the TCP protocol; a
+//!               coordinator (`serve --worker-addrs …`) verifies it via the
+//!               `hello` handshake (protocol version + model fingerprint +
+//!               machine profile) and routes batches to it
 //!   calibrate   measure per-layer per-kernel dispatch cost columns for a
 //!               profile's architecture on this machine and persist them as
 //!               a machine-profile JSON (`autotune.profile_path`); `serve`
@@ -50,7 +56,7 @@ use condcomp::autotune::{Autotuner, MachineProfile};
 use condcomp::cli::{Command, OptSpec, Parsed};
 use condcomp::condcomp::{KernelId, KernelRegistry};
 use condcomp::config::{EstimatorConfig, ExperimentProfile};
-use condcomp::coordinator::{NativeBackend, Server, ServerConfig};
+use condcomp::coordinator::{Backend, NativeBackend, RemoteBackend, RemoteOpts, Server, ServerConfig};
 use condcomp::cost::LayerCost;
 use condcomp::data::synth::build_dataset;
 use condcomp::estimator::SignEstimatorSet;
@@ -78,7 +84,7 @@ fn usage() -> String {
     format!(
         "condcomp {} — conditional feedforward computation via low-rank sign estimation\n\
          \n\
-         usage: condcomp <train|train-pjrt|serve|trace|calibrate|experiment|bench|bench-flops|datagen> [options]\n\
+         usage: condcomp <train|train-pjrt|serve|worker|trace|calibrate|experiment|bench|bench-flops|datagen> [options]\n\
          \n\
          run `condcomp <subcommand> --help` for options.\n",
         condcomp::VERSION
@@ -146,6 +152,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "train" => cmd_train(rest),
         "train-pjrt" => cmd_train_pjrt(rest),
         "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
         "trace" => cmd_trace(rest),
         "calibrate" => cmd_calibrate(rest),
         "experiment" => cmd_experiment(rest),
@@ -252,54 +259,19 @@ fn cmd_train_pjrt(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
-    let cmd = common_opts(Command::new("serve", "start the serving coordinator"))
-        .opt(OptSpec::value("addr", "bind address").with_default("127.0.0.1:7878"))
-        .opt(OptSpec::value("ranks", "estimator ranks (default: scaled 50-35-25…)"))
-        .opt(OptSpec::value("train-epochs", "epochs to train before serving").with_default("2"))
-        .opt(OptSpec::value("max-wait-ms", "dynamic batching window, per shard").with_default("2"))
-        .opt(OptSpec::value(
-            "shards",
-            "batcher shards, each with its own queue + executor (0 = derive from threads)",
-        ))
-        .opt(OptSpec::value("router", "shard router: round-robin (default) or least-depth"))
-        .opt(OptSpec::value(
-            "autotune-profile",
-            "machine profile from `condcomp calibrate` (default: autotune.profile_path)",
-        ))
-        .opt(OptSpec::value(
-            "kernels",
-            "kernel allow-list, comma-separated (dense,dense_packed,dense_simd,masked,masked_simd; default: all registered)",
-        ))
-        .opt(OptSpec::flag(
-            "trace",
-            "enable span tracing + flight recorder (also: server.trace / CONDCOMP_TRACE=1)",
-        ))
-        .opt(OptSpec::value("trace-ring", "flight-recorder capacity in batch records"))
-        .opt(OptSpec::value(
-            "max-queue-depth",
-            "per-shard queue bound; beyond it requests are shed with an overloaded reply (0 = unbounded)",
-        ))
-        .opt(OptSpec::value(
-            "deadline-ms",
-            "per-request deadline; items older than this at drain time get an overloaded reply (0 = none)",
-        ))
-        .opt(OptSpec::flag(
-            "elastic",
-            "quality-elastic dispatch: under queue pressure, prefer cheap masked kernels and truncate estimator rank",
-        ))
-        .opt(OptSpec::flag("help", "show help"));
-    let parsed = cmd.parse(args)?;
-    if parsed.flag("help") {
-        print!("{}", cmd.help());
-        return Ok(());
-    }
-    let mut profile = profile_from(&parsed)?;
-    profile.train.epochs = parsed.get_usize("train-epochs")?.unwrap_or(2);
-    let threads = apply_threads(&parsed, profile.train.threads)?;
-
+/// Deterministic model prep shared by `serve` (in-process backend) and
+/// `worker` (headless replica): train, fit the estimator, apply the kernel
+/// allow-list, load/calibrate the dispatch table. The whole flow is seeded,
+/// so every process given the same profile/ranks/epochs builds bit-identical
+/// weights and serves the same function — which is what makes N-worker
+/// serving bit-identical to 1-process serving.
+fn prepare_native_backend(
+    parsed: &Parsed,
+    profile: &ExperimentProfile,
+    threads: usize,
+) -> anyhow::Result<(Arc<NativeBackend>, Vec<usize>)> {
     eprintln!("preparing model ({})… pool-threads={threads}", profile.name);
-    let mut data = build_dataset(&profile, profile.train.seed ^ 0xDA7A);
+    let mut data = build_dataset(profile, profile.train.seed ^ 0xDA7A);
     let mut rng = Pcg32::new(profile.train.seed, 1);
     let mut net = Mlp::init(&profile.net, &mut rng);
     let trainer = Trainer::new(profile.train.clone());
@@ -319,7 +291,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     // Kernel allow-list (`--kernels` / `dispatch.kernels`): restrict the
     // cost router before any calibration, so the columns measured are the
     // columns routed.
-    if let Some(ids) = kernel_allowlist(&parsed, &profile)? {
+    if let Some(ids) = kernel_allowlist(parsed, profile)? {
         backend
             .set_allowed_kernels(&ids)
             .map_err(|e| anyhow::anyhow!("--kernels: {e}"))?;
@@ -383,6 +355,112 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     for line in table.summary_lines() {
         eprintln!("dispatch: {line}");
     }
+    Ok((backend, ranks))
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("serve", "start the serving coordinator"))
+        .opt(OptSpec::value("addr", "bind address").with_default("127.0.0.1:7878"))
+        .opt(OptSpec::value("ranks", "estimator ranks (default: scaled 50-35-25…)"))
+        .opt(OptSpec::value("train-epochs", "epochs to train before serving").with_default("2"))
+        .opt(OptSpec::value("max-wait-ms", "dynamic batching window, per shard").with_default("2"))
+        .opt(OptSpec::value(
+            "worker-addrs",
+            "comma-separated worker replica addresses; non-empty = run as a coordinator \
+             forwarding batches to `condcomp worker` processes (also: server.worker_addrs)",
+        ))
+        .opt(OptSpec::value(
+            "replicas",
+            "minimum workers that must complete the hello handshake at startup (0 = at least one)",
+        ))
+        .opt(OptSpec::value(
+            "shards",
+            "batcher shards, each with its own queue + executor (0 = derive from threads)",
+        ))
+        .opt(OptSpec::value("router", "shard router: round-robin (default) or least-depth"))
+        .opt(OptSpec::value(
+            "autotune-profile",
+            "machine profile from `condcomp calibrate` (default: autotune.profile_path)",
+        ))
+        .opt(OptSpec::value(
+            "kernels",
+            "kernel allow-list, comma-separated (dense,dense_packed,dense_simd,masked,masked_simd; default: all registered)",
+        ))
+        .opt(OptSpec::flag(
+            "trace",
+            "enable span tracing + flight recorder (also: server.trace / CONDCOMP_TRACE=1)",
+        ))
+        .opt(OptSpec::value("trace-ring", "flight-recorder capacity in batch records"))
+        .opt(OptSpec::value(
+            "max-queue-depth",
+            "per-shard queue bound; beyond it requests are shed with an overloaded reply (0 = unbounded)",
+        ))
+        .opt(OptSpec::value(
+            "deadline-ms",
+            "per-request deadline; items older than this at drain time get an overloaded reply (0 = none)",
+        ))
+        .opt(OptSpec::flag(
+            "elastic",
+            "quality-elastic dispatch: under queue pressure, prefer cheap masked kernels and truncate estimator rank",
+        ))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let mut profile = profile_from(&parsed)?;
+    profile.train.epochs = parsed.get_usize("train-epochs")?.unwrap_or(2);
+    let threads = apply_threads(&parsed, profile.train.threads)?;
+
+    // Worker fleet: CLI `--worker-addrs` wins, then `server.worker_addrs`.
+    // Non-empty = run as a coordinator: no local kernels, every batch is
+    // forwarded to a fingerprint-verified `condcomp worker` over the wire.
+    let worker_addrs: Vec<String> = match parsed.get("worker-addrs") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(str::to_string)
+            .collect(),
+        None => profile.server.worker_addrs.clone(),
+    };
+    let (backend, remote, banner): (Arc<dyn Backend>, Option<Arc<RemoteBackend>>, String) =
+        if worker_addrs.is_empty() {
+            let (backend, ranks) = prepare_native_backend(&parsed, &profile, threads)?;
+            (backend, None, format!("estimator ranks {ranks:?}"))
+        } else {
+            // The coordinator holds no weights; the expected fingerprint
+            // comes from the profile's architecture, and every worker must
+            // prove through the hello handshake that it serves that model.
+            let expected = condcomp::autotune::model_fingerprint(&profile.net.layers);
+            let min_replicas = match parsed.get_usize("replicas")? {
+                Some(n) => n,
+                None => profile.server.replicas,
+            };
+            let opts = RemoteOpts {
+                connect_timeout: std::time::Duration::from_millis(
+                    profile.server.connect_timeout_ms.max(1),
+                ),
+                retries: profile.server.retry_max,
+                backoff: std::time::Duration::from_millis(profile.server.retry_backoff_ms.max(1)),
+                health_interval: std::time::Duration::from_millis(
+                    profile.server.health_interval_ms.max(1),
+                ),
+                min_replicas,
+                ..RemoteOpts::default()
+            };
+            eprintln!(
+                "coordinator: connecting to {} worker(s) (model {expected})…",
+                worker_addrs.len()
+            );
+            let remote = Arc::new(RemoteBackend::connect(&worker_addrs, &expected, opts)?);
+            let banner = format!(
+                "coordinator over {} worker replica(s), model {expected}",
+                remote.num_replicas()
+            );
+            (remote.clone() as Arc<dyn Backend>, Some(remote), banner)
+        };
     // Sharding knobs: CLI wins, then the profile's `server.*` keys
     // (`--shards 0` / `server.shards = 0` both mean "derive from threads").
     let shards = match parsed.get_usize("shards")? {
@@ -430,8 +508,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             ..ServerConfig::default()
         },
     )?;
+    // Per-replica metrics flow through the server's registry; the wiring
+    // can only happen after start (the server owns the registry).
+    if let Some(r) = &remote {
+        r.attach_metrics(server.metrics.clone());
+    }
     println!(
-        "serving on {} (estimator ranks {ranks:?}; {} shard(s), {router} router); Ctrl-C to stop",
+        "serving on {} ({banner}; {} shard(s), {router} router); Ctrl-C to stop",
         server.local_addr,
         server.num_shards()
     );
@@ -441,6 +524,63 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(200));
     }
     eprintln!("shutdown requested; draining shards…");
+    server.shutdown();
+    Ok(())
+}
+
+/// `condcomp worker` — a headless single-shard replica: the same
+/// deterministic model prep as `serve` (same profile/seed ⇒ bit-identical
+/// weights in every process), served over the TCP protocol for a
+/// coordinator to route batches to. Prints the bound address and model
+/// fingerprint on stdout so scripts can scrape ephemeral ports.
+fn cmd_worker(args: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("worker", "run a headless serving replica"))
+        .opt(OptSpec::value("addr", "bind address (use 127.0.0.1:0 for an ephemeral port)").with_default("127.0.0.1:0"))
+        .opt(OptSpec::value("ranks", "estimator ranks (default: scaled 50-35-25…)"))
+        .opt(OptSpec::value("train-epochs", "epochs to train before serving").with_default("2"))
+        .opt(OptSpec::value("max-wait-ms", "dynamic batching window").with_default("2"))
+        .opt(OptSpec::value(
+            "autotune-profile",
+            "machine profile from `condcomp calibrate` (default: autotune.profile_path)",
+        ))
+        .opt(OptSpec::value(
+            "kernels",
+            "kernel allow-list, comma-separated (default: all registered)",
+        ))
+        .opt(OptSpec::flag("help", "show help"));
+    let parsed = cmd.parse(args)?;
+    if parsed.flag("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let mut profile = profile_from(&parsed)?;
+    profile.train.epochs = parsed.get_usize("train-epochs")?.unwrap_or(2);
+    let threads = apply_threads(&parsed, profile.train.threads)?;
+    let (backend, ranks) = prepare_native_backend(&parsed, &profile, threads)?;
+    let fingerprint = backend.model_fingerprint().unwrap_or_default();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            addr: parsed.get("addr").unwrap().to_string(),
+            max_wait: std::time::Duration::from_millis(
+                parsed.get_usize("max-wait-ms")?.unwrap_or(2) as u64,
+            ),
+            // One shard: the coordinator owns the fleet-level fan-out; the
+            // worker's own queue depth is its `queue_pressure` signal.
+            shards: 1,
+            threads: parsed.get_usize("threads")?.unwrap_or(0),
+            ..ServerConfig::default()
+        },
+    )?;
+    // The scrape line: tests and launch scripts parse the port and
+    // fingerprint from this exact format.
+    println!("worker listening on {} (model {fingerprint}, ranks {ranks:?})", server.local_addr);
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    while !server.is_stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    eprintln!("worker shutdown requested; draining…");
     server.shutdown();
     Ok(())
 }

@@ -1,0 +1,331 @@
+//! End-to-end tests for multi-process serving: real `condcomp worker`
+//! processes (spawned from the built binary), a coordinator routing batches
+//! to them over the TCP protocol, real clients on the front door.
+//!
+//! What is pinned here and nowhere else:
+//!
+//! - **bit-identity across process counts**: a coordinator over three
+//!   worker processes answers bit-identically to a direct client of one
+//!   worker, in both modes — under the bit-exact kernel allow-list
+//!   (`dense,dense_packed`), since each worker calibrates its own dispatch
+//!   table and only that class guarantees identical bits whichever kernel
+//!   the table picks;
+//! - **exactly-one-reply conservation under worker death**: killing one of
+//!   three workers mid-load loses no request — every predict gets exactly
+//!   one reply (ok or explicit overloaded), zero hard errors, because the
+//!   coordinator re-routes the in-flight batch to a surviving replica;
+//! - **recovery**: a worker restarted on the same port is re-admitted by
+//!   the health thread after a fresh `hello` handshake, and the
+//!   `replica<i>_healthy` gauge reflects it.
+
+use condcomp::coordinator::protocol::Mode;
+use condcomp::coordinator::{
+    Backend, Client, ConnectOpts, RemoteBackend, RemoteOpts, Server, ServerConfig,
+};
+use condcomp::linalg::Mat;
+use condcomp::util::Pcg32;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A spawned worker process plus the address/fingerprint scraped from its
+/// startup line.
+struct Worker {
+    child: Child,
+    addr: String,
+    fingerprint: String,
+}
+
+impl Worker {
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `condcomp worker` bound to `addr` (use 127.0.0.1:0 for an
+/// ephemeral port) and scrape the bound address + model fingerprint from
+/// its stdout line. The model prep is deterministic, so every worker from
+/// this helper serves bit-identical weights; the kernel allow-list is
+/// pinned to the bit-exact class so per-worker calibration cannot introduce
+/// tier drift.
+fn spawn_worker(addr: &str) -> Worker {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_condcomp"))
+        .args([
+            "worker",
+            "--profile",
+            "mnist-tiny",
+            "--train-epochs",
+            "1",
+            "--addr",
+            addr,
+            "--kernels",
+            "dense,dense_packed",
+            "--set",
+            "data.n_train=200",
+            "--set",
+            "data.n_valid=50",
+            "--set",
+            "data.n_test=50",
+            "--set",
+            "autotune.budget_ms=200",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn condcomp worker");
+    let stdout = child.stdout.take().expect("worker stdout piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("read worker startup line");
+    // "worker listening on 127.0.0.1:PORT (model mlp:…, ranks […])"
+    let bound = line
+        .split_whitespace()
+        .nth(3)
+        .unwrap_or_else(|| panic!("worker exited before binding (stdout: {line:?})"))
+        .to_string();
+    let fingerprint = line
+        .split("(model ")
+        .nth(1)
+        .and_then(|s| s.split(',').next())
+        .unwrap_or_else(|| panic!("no fingerprint in startup line {line:?}"))
+        .to_string();
+    Worker { child, addr: bound, fingerprint }
+}
+
+/// Spawn a worker on a *fixed* port, retrying briefly: right after a kill
+/// the old socket may still be tearing down (SO_REUSEADDR makes this rare,
+/// but the retry keeps the test unflaky).
+fn spawn_worker_at_port(addr: &str) -> Worker {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_condcomp"))
+            .args([
+                "worker",
+                "--profile",
+                "mnist-tiny",
+                "--train-epochs",
+                "1",
+                "--addr",
+                addr,
+                "--kernels",
+                "dense,dense_packed",
+                "--set",
+                "data.n_train=200",
+                "--set",
+                "data.n_valid=50",
+                "--set",
+                "data.n_test=50",
+                "--set",
+                "autotune.budget_ms=200",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn condcomp worker");
+        let stdout = child.stdout.take().expect("worker stdout piped");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read worker startup line");
+        if line.contains("worker listening on") {
+            let fingerprint = line
+                .split("(model ")
+                .nth(1)
+                .and_then(|s| s.split(',').next())
+                .unwrap_or("")
+                .to_string();
+            return Worker { child, addr: addr.to_string(), fingerprint };
+        }
+        // Bind failed (the process printed nothing and exited): reap, wait,
+        // retry on the same port.
+        let _ = child.kill();
+        let _ = child.wait();
+        assert!(Instant::now() < deadline, "could not rebind worker on {addr}");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+}
+
+fn fast_opts() -> RemoteOpts {
+    RemoteOpts {
+        connect_timeout: Duration::from_secs(1),
+        read_timeout: Duration::from_secs(30),
+        retries: 3,
+        backoff: Duration::from_millis(25),
+        health_interval: Duration::from_millis(50),
+        min_replicas: 0,
+    }
+}
+
+fn logits_bits(m: &Mat) -> Vec<u32> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+/// The whole lifecycle in one fleet (workers are expensive to train, so the
+/// phases share them): handshake + bit-identity, kill-one-mid-load
+/// conservation, restart + re-admission.
+#[test]
+fn coordinator_over_worker_processes_serves_identically_and_survives_a_kill() {
+    // --- Fleet up: three real worker processes, ephemeral ports. ---
+    let w0 = spawn_worker("127.0.0.1:0");
+    let w1 = spawn_worker("127.0.0.1:0");
+    let w2 = spawn_worker("127.0.0.1:0");
+    assert_eq!(w0.fingerprint, w1.fingerprint);
+    assert_eq!(w0.fingerprint, w2.fingerprint);
+    assert_eq!(w0.fingerprint, "mlp:784-64-48-32-10");
+    let w1_addr = w1.addr.clone();
+
+    let remote = Arc::new(
+        RemoteBackend::connect(
+            &[w0.addr.clone(), w1.addr.clone(), w2.addr.clone()],
+            &w0.fingerprint,
+            fast_opts(),
+        )
+        .expect("all three workers handshake"),
+    );
+    assert_eq!(remote.healthy_replicas(), vec![true, true, true]);
+    assert_eq!(remote.input_dim(), 784);
+
+    let server = Server::start(
+        remote.clone() as Arc<dyn Backend>,
+        ServerConfig { shards: 2, ..ServerConfig::default() },
+    )
+    .expect("coordinator start");
+    remote.attach_metrics(server.metrics.clone());
+    let addr = server.local_addr;
+
+    // --- Phase 1: bit-identity, 1 process vs 3 processes over TCP. ---
+    // The direct client talks to worker 0 alone; the coordinator fans the
+    // same inputs across all three. Same deterministic model + bit-exact
+    // kernel class ⇒ identical bits wherever a batch lands.
+    let w0_sock: std::net::SocketAddr = w0.addr.parse().unwrap();
+    let mut direct = Client::connect(&w0_sock).unwrap();
+    let mut coord = Client::connect(&addr).unwrap();
+    let mut rng = Pcg32::seeded(0x9E91);
+    for mode in [Mode::Control, Mode::ConditionalAe] {
+        for req in 0..6 {
+            let x = Mat::randn(1 + (req % 2), 784, 0.5, &mut rng);
+            let a = direct.predict(x.clone(), mode).unwrap();
+            let b = coord.predict(x, mode).unwrap();
+            assert!(a.ok && b.ok, "{:?} / {:?}", a.error, b.error);
+            assert_eq!(a.classes, b.classes, "mode {mode:?} req {req}: classes drifted");
+            let wa = a.logits.as_ref().expect("direct logits");
+            let wb = b.logits.as_ref().expect("coordinator logits");
+            assert_eq!(
+                logits_bits(wa),
+                logits_bits(wb),
+                "mode {mode:?} req {req}: N-process logits differ from 1-process"
+            );
+        }
+    }
+
+    // --- Phase 2: kill worker 1 mid-load; conservation must hold. ---
+    let ok = Arc::new(AtomicU64::new(0));
+    let overloaded = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    const CLIENTS: usize = 4;
+    const REQS: usize = 40;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let (ok, overloaded, failed) = (ok.clone(), overloaded.clone(), failed.clone());
+            std::thread::spawn(move || {
+                // A bounded read timeout turns a dropped reply (the bug this
+                // guards against) into a counted failure, not a hung test.
+                let opts = ConnectOpts {
+                    read_timeout: Some(Duration::from_secs(60)),
+                    ..ConnectOpts::default()
+                };
+                let mut client = Client::connect_with(&addr, &opts).unwrap();
+                let mut rng = Pcg32::new(0xC11E ^ c as u64, 3);
+                for i in 0..REQS {
+                    let mode = if i % 2 == 0 { Mode::ConditionalAe } else { Mode::Control };
+                    let x = Mat::randn(1, 784, 0.5, &mut rng);
+                    match client.predict(x, mode) {
+                        Ok(resp) if resp.ok => ok.fetch_add(1, Ordering::Relaxed),
+                        Ok(resp) if resp.overloaded => {
+                            overloaded.fetch_add(1, Ordering::Relaxed)
+                        }
+                        _ => failed.fetch_add(1, Ordering::Relaxed),
+                    };
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        })
+        .collect();
+    // Let traffic flow, then take worker 1 down hard.
+    std::thread::sleep(Duration::from_millis(60));
+    w1.kill();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (ok, overloaded, failed) = (
+        ok.load(Ordering::Relaxed),
+        overloaded.load(Ordering::Relaxed),
+        failed.load(Ordering::Relaxed),
+    );
+    assert_eq!(failed, 0, "requests lost or errored around the worker death");
+    assert_eq!(
+        ok + overloaded,
+        (CLIENTS * REQS) as u64,
+        "exactly one reply per request (ok {ok} + overloaded {overloaded})"
+    );
+    // With two healthy survivors, failover should serve everything.
+    assert!(ok > 0, "no request succeeded after the kill");
+    assert_eq!(server.metrics.counter("errors"), 0, "worker death surfaced as hard errors");
+
+    // The health thread notices the death (if the predict path has not
+    // already marked it down).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while remote.healthy_replicas()[1] {
+        assert!(Instant::now() < deadline, "dead worker never marked unhealthy");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.replica_gauge(1, "healthy") != Some(0.0) {
+        assert!(Instant::now() < deadline, "replica1_healthy gauge never dropped to 0");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // --- Phase 3: restart on the same port; health thread re-admits. ---
+    let revived = spawn_worker_at_port(&w1_addr);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !remote.healthy_replicas()[1] {
+        assert!(Instant::now() < deadline, "restarted worker never re-admitted");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.replica_gauge(1, "healthy") != Some(1.0) {
+        assert!(Instant::now() < deadline, "replica1_healthy gauge never recovered");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // The recovered fleet still answers bit-identically to worker 0.
+    for req in 0..4 {
+        let x = Mat::randn(1, 784, 0.5, &mut rng);
+        let a = direct.predict(x.clone(), Mode::ConditionalAe).unwrap();
+        let b = coord.predict(x, Mode::ConditionalAe).unwrap();
+        assert!(a.ok && b.ok);
+        assert_eq!(
+            logits_bits(a.logits.as_ref().unwrap()),
+            logits_bits(b.logits.as_ref().unwrap()),
+            "req {req}: post-recovery logits drifted"
+        );
+    }
+
+    // Per-replica counters flowed through the coordinator's registry.
+    let routed: u64 = (0..3).map(|i| server.metrics.replica_counter(i, "batches_routed")).sum();
+    assert!(routed > 0, "no batch was accounted to any replica");
+    assert_eq!(server.metrics.gauge("replicas"), Some(3.0));
+    assert_eq!(server.metrics.gauge("replicas_healthy"), Some(3.0));
+
+    server.shutdown();
+    drop(remote);
+    revived.kill();
+    w0.kill();
+    w2.kill();
+}
