@@ -28,9 +28,9 @@ use super::profile::{
     PROFILE_SCHEMA_VERSION,
 };
 use crate::condcomp::registry::LayerOperands;
-use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer, WorkModel};
+use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer};
 use crate::exec::ExecCtx;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, QuantizedLayer};
 use crate::parallel::ThreadPool;
 use crate::util::{Pcg32, Timer};
 
@@ -134,15 +134,18 @@ impl CostModel for MeasuredCost<'_> {
         let w = Mat::randn(d, h, 0.05, &mut rng);
         let bias = vec![0.0f32; h];
         let layer = MaskedLayer::new(&w, &bias);
+        // Quantize once, outside the timed region — mirroring serving, where
+        // the backend prepares the int8 form at model load, so the i8
+        // columns measure the forward, not the (amortized-away) quantize.
+        let quant = QuantizedLayer::new(&layer.wt, &layer.bias);
         // Dense-work kernels compute every cell regardless of the mask; the
         // full mask keeps their gating pass honest without starving it.
-        let mask = match kernel.id().work() {
-            WorkModel::Dense => Mat::full(n, h, 1.0),
-            WorkModel::AlphaScaled => Mat::from_fn(n, h, |_, _| {
-                if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 }
-            }),
+        let mask = if kernel.id().work().scales_with_alpha() {
+            Mat::from_fn(n, h, |_, _| if rng.bernoulli(alpha as f32) { 1.0 } else { 0.0 })
+        } else {
+            Mat::full(n, h, 1.0)
         };
-        let ops = LayerOperands::new(&w, &layer);
+        let ops = LayerOperands::new(&w, &layer).with_quant(&quant);
         let mut out = Mat::zeros(n, h);
         let (budget, reps) = (self.point_budget_s, self.min_reps);
         // One span per measurement point, tagged with the kernel id — so a
@@ -228,9 +231,12 @@ impl Autotuner {
     fn points_per_layer(&self) -> usize {
         self.fit_set()
             .iter()
-            .map(|k| match k.work() {
-                WorkModel::Dense => 1,
-                WorkModel::AlphaScaled => self.alpha_grid.len(),
+            .map(|k| {
+                if k.work().scales_with_alpha() {
+                    self.alpha_grid.len()
+                } else {
+                    1
+                }
             })
             .sum()
     }
@@ -257,35 +263,34 @@ impl Autotuner {
         for k in set {
             let rel = if !dense_ok {
                 k.work().default_per_flop()
+            } else if !k.work().scales_with_alpha() {
+                // α-independent kernels (float and int8 dense classes): one
+                // best-of timing, column = t_kernel / t_dense.
+                if k == KernelId::DENSE {
+                    1.0
+                } else {
+                    let t = model.seconds(k, n, d, h, 1.0);
+                    if t.is_finite() && t > 0.0 {
+                        t / t_dense
+                    } else {
+                        k.work().default_per_flop()
+                    }
+                }
             } else {
-                match k.work() {
-                    WorkModel::Dense => {
-                        if k == KernelId::DENSE {
-                            1.0
-                        } else {
-                            let t = model.seconds(k, n, d, h, 1.0);
-                            if t.is_finite() && t > 0.0 {
-                                t / t_dense
-                            } else {
-                                k.work().default_per_flop()
-                            }
-                        }
+                // α-scaled kernels (float and int8 masked classes):
+                // least-squares slope over the density grid.
+                let (mut num, mut den) = (0.0f64, 0.0f64);
+                for &alpha in &self.alpha_grid {
+                    let t = model.seconds(k, n, d, h, alpha);
+                    if t.is_finite() && t > 0.0 && alpha > 0.0 {
+                        num += t * alpha;
+                        den += alpha * alpha;
                     }
-                    WorkModel::AlphaScaled => {
-                        let (mut num, mut den) = (0.0f64, 0.0f64);
-                        for &alpha in &self.alpha_grid {
-                            let t = model.seconds(k, n, d, h, alpha);
-                            if t.is_finite() && t > 0.0 && alpha > 0.0 {
-                                num += t * alpha;
-                                den += alpha * alpha;
-                            }
-                        }
-                        if num <= 0.0 || den <= 0.0 {
-                            k.work().default_per_flop()
-                        } else {
-                            ((num / (den * flops)) / dense_per_flop).max(1e-6)
-                        }
-                    }
+                }
+                if num <= 0.0 || den <= 0.0 {
+                    k.work().default_per_flop()
+                } else {
+                    ((num / (den * flops)) / dense_per_flop).max(1e-6)
                 }
             };
             columns.push((k, rel));
@@ -514,13 +519,17 @@ mod tests {
         let table = profile.policy_table(2, "synthetic");
         // α between the two thresholds: layer 0 stays masked, layer 1 goes
         // dense — per-layer dispatch in action.
+        // Allow-list only the calibrated pair: the uncalibrated int8 class
+        // runs on optimistic defaults and would (by design — it is opt-in)
+        // undercut these measured columns if allowed in.
+        let allowed = [KernelId::DENSE, KernelId::MASKED];
         let alpha = 0.3;
         assert_eq!(
-            table.policy_for(0).decide(64, 256, 256, alpha, BUILTIN_KERNELS),
+            table.policy_for(0).decide(64, 256, 256, alpha, &allowed),
             KernelId::MASKED
         );
         assert_eq!(
-            table.policy_for(1).decide(64, 1024, 128, alpha, BUILTIN_KERNELS),
+            table.policy_for(1).decide(64, 1024, 128, alpha, &allowed),
             KernelId::DENSE
         );
         assert_ne!(table.thresholds()[0], table.thresholds()[1]);

@@ -547,7 +547,7 @@ mod tests {
     #[test]
     fn missing_kernel_column_is_reported_for_recalibration() {
         // A pre-registry profile: no kernel_costs at all → dense+masked
-        // derived, dense_packed missing.
+        // derived, every later kernel (packed, SIMD, int8) missing.
         let text = r#"{
             "version": 1,
             "fingerprint": "mlp:8-4-2",
@@ -561,7 +561,13 @@ mod tests {
         let p = MachineProfile::parse(text).unwrap();
         assert_eq!(
             p.missing_kernel_columns(BUILTIN_KERNELS),
-            vec![KernelId::DENSE_PACKED]
+            vec![
+                KernelId::DENSE_PACKED,
+                KernelId::DENSE_SIMD,
+                KernelId::DENSE_I8,
+                KernelId::MASKED_SIMD,
+                KernelId::MASKED_I8,
+            ]
         );
         // A partially-columned registry profile: one layer lacks masked.
         let text = r#"{
@@ -576,7 +582,16 @@ mod tests {
             ]
         }"#;
         let p = MachineProfile::parse(text).unwrap();
-        assert_eq!(p.missing_kernel_columns(BUILTIN_KERNELS), vec![KernelId::MASKED]);
+        assert_eq!(
+            p.missing_kernel_columns(BUILTIN_KERNELS),
+            vec![
+                KernelId::DENSE_SIMD,
+                KernelId::DENSE_I8,
+                KernelId::MASKED,
+                KernelId::MASKED_SIMD,
+                KernelId::MASKED_I8,
+            ]
+        );
         // The legacy ratio still anchors the masked fallback column.
         assert!((p.layers[0].cost_ratio - 3.0).abs() < 1e-12);
         assert_eq!(p.layers[0].policy().per_flop(KernelId::MASKED), Some(3.0));
@@ -624,16 +639,25 @@ mod tests {
         assert!((t[1] - 0.2).abs() < 1e-12, "α*₁ {t:?}");
         // At α = 0.3 the two layers disagree — the whole point of the table
         // (and layer 0's dense regime routes to the cheaper packed kernel).
+        // Float-class allow-list: the int8 ids are opt-in and their
+        // optimistic uncalibrated defaults would otherwise win the argmin.
+        let float_kernels = [
+            KernelId::DENSE,
+            KernelId::DENSE_PACKED,
+            KernelId::DENSE_SIMD,
+            KernelId::MASKED,
+            KernelId::MASKED_SIMD,
+        ];
         assert_eq!(
-            table.policy_for(0).decide(64, 784, 256, 0.3, BUILTIN_KERNELS),
+            table.policy_for(0).decide(64, 784, 256, 0.3, &float_kernels),
             KernelId::MASKED
         );
         assert_eq!(
-            table.policy_for(1).decide(64, 256, 128, 0.3, BUILTIN_KERNELS),
+            table.policy_for(1).decide(64, 256, 128, 0.3, &float_kernels),
             KernelId::DENSE
         );
         assert_eq!(
-            table.policy_for(0).decide(64, 784, 256, 0.9, BUILTIN_KERNELS),
+            table.policy_for(0).decide(64, 784, 256, 0.9, &float_kernels),
             KernelId::DENSE_PACKED
         );
     }

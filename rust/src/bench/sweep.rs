@@ -15,17 +15,18 @@
 use super::{bench_with_units, BenchConfig, BenchResult};
 use crate::autotune::{Autotuner, LayerThreshold};
 use crate::condcomp::registry::LayerOperands;
-use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer, WorkModel};
+use crate::condcomp::{DispatchPolicy, KernelId, KernelRegistry, MaskedLayer, QUANT_SIGN_BAND_REL};
 use crate::config::{EstimatorConfig, NetConfig};
 use crate::exec::ExecCtx;
 use crate::coordinator::protocol::{Mode, Request, Response};
 use crate::coordinator::server::Client;
 use crate::coordinator::{NativeBackend, PoolMode, Server, ServerConfig};
-use crate::estimator::SignEstimatorSet;
+use crate::estimator::{SignEstimator, SignEstimatorSet};
 use crate::io::json::Json;
-use crate::linalg::{matmul_into, matmul_into_par, Mat};
+use crate::linalg::{matmul_into, matmul_into_par, Mat, QuantizedLayer};
 use crate::nn::Mlp;
 use crate::parallel::ThreadPool;
+use crate::util::ulp::ulp_diff;
 use crate::util::Pcg32;
 use std::sync::Arc;
 
@@ -95,6 +96,64 @@ impl KernelSweepRow {
             ("gflops_per_s", Json::Num(self.flops / self.median_s.max(1e-12) / 1e9)),
         ])
     }
+}
+
+/// One accuracy-vs-throughput frontier measurement: the `quant_sweep`
+/// column — dense/masked raced against their int8 counterparts at a grid
+/// density, annotated with what the int8 speed costs (estimator mask
+/// agreement and worst-case logit ULP drift vs the same-work float kernel)
+/// and with the cell's measured-cost argmin winner.
+#[derive(Clone, Debug)]
+pub struct QuantSweepRow {
+    /// Registry kernel id (`dense`, `dense_i8`, `masked`, `masked_i8`).
+    pub kernel: String,
+    /// Mask density the kernel ran at.
+    pub alpha: f64,
+    /// Median seconds per forward.
+    pub median_s: f64,
+    /// §3.4 op count per forward at this α (the int8 kernels execute the
+    /// same counts in ~4× narrower arithmetic).
+    pub flops: f64,
+    /// Fraction of mask entries on which the full-rank quantized estimator
+    /// agrees with the float estimator (1.0 by definition for float rows).
+    pub mask_agreement: f64,
+    /// Worst-case logit ULP distance vs the same-work-model float kernel,
+    /// outside the sign-agreement near-zero band (0 for the float rows —
+    /// they *are* their own reference).
+    pub ulp_drift: f64,
+    /// This kernel wins the measured-cost argmin among the four at this α.
+    pub argmin_winner: bool,
+}
+
+impl QuantSweepRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("alpha", Json::Num(self.alpha)),
+            ("median_s", Json::Num(self.median_s)),
+            ("flops", Json::Num(self.flops)),
+            ("gflops_per_s", Json::Num(self.flops / self.median_s.max(1e-12) / 1e9)),
+            ("mask_agreement", Json::Num(self.mask_agreement)),
+            ("ulp_drift", Json::Num(self.ulp_drift)),
+            ("argmin_winner", Json::Bool(self.argmin_winner)),
+        ])
+    }
+}
+
+/// Worst-case ULP distance between `got` and its float reference, excluding
+/// cells where the reference sits inside the sign-agreement near-zero band
+/// (ULP distance diverges toward 0.0 while the absolute quantization error
+/// stays tiny — the same band [`crate::condcomp::EquivalenceTier::SignAgree`]
+/// excludes).
+fn drift_ulps_outside_band(got: &Mat, want: &Mat) -> f64 {
+    let band = want.as_slice().iter().fold(0.0f32, |m, v| m.max(v.abs())) * QUANT_SIGN_BAND_REL;
+    got.as_slice()
+        .iter()
+        .zip(want.as_slice())
+        .filter(|(_, w)| w.abs() > band)
+        .map(|(g, w)| ulp_diff(*g, *w))
+        .max()
+        .unwrap_or(0) as f64
 }
 
 /// One serving-throughput measurement at a fixed batcher shard count: the
@@ -278,6 +337,11 @@ pub struct ParallelSweep {
     /// always over the full builtin registry (a `--kernels` restriction
     /// narrows routing, not this comparison column).
     pub simd_sweep: Vec<KernelSweepRow>,
+    /// The accuracy-vs-throughput frontier: float vs int8 kernels at each
+    /// grid density, with mask agreement, logit ULP drift, and the
+    /// measured-cost argmin winner per cell. Like `simd_sweep`, always the
+    /// fixed four-way race over the full builtin registry.
+    pub quant_sweep: Vec<QuantSweepRow>,
     /// Serving throughput at each measured batcher shard count (leased
     /// executors — the production configuration).
     pub shard_sweep: Vec<ShardRow>,
@@ -422,12 +486,14 @@ pub fn run_parallel_sweep(
         let pool = ThreadPool::new(threads_max);
         let mut ctx = ExecCtx::full(&pool);
         let layer = MaskedLayer::new(&b, &bias);
-        let ops = LayerOperands::new(&b, &layer);
+        let quant = QuantizedLayer::new(&layer.wt, &layer.bias);
+        let ops = LayerOperands::new(&b, &layer).with_quant(&quant);
         for &(alpha, ref mask) in &masks {
             for kernel in registry.iter() {
-                let work = match kernel.id().work() {
-                    WorkModel::Dense => layer_flops,
-                    WorkModel::AlphaScaled => layer_flops * alpha,
+                let work = if kernel.id().work().scales_with_alpha() {
+                    layer_flops * alpha
+                } else {
+                    layer_flops
                 };
                 let r = bench_with_units(
                     &format!("kernel_{} α={alpha} threads={threads_max}", kernel.id()),
@@ -468,9 +534,10 @@ pub fn run_parallel_sweep(
                 KernelId::MASKED_SIMD,
             ] {
                 let kernel = builtin.get(id).expect("builtin kernel");
-                let work = match id.work() {
-                    WorkModel::Dense => layer_flops,
-                    WorkModel::AlphaScaled => layer_flops * alpha,
+                let work = if id.work().scales_with_alpha() {
+                    layer_flops * alpha
+                } else {
+                    layer_flops
                 };
                 let r = bench_with_units(
                     &format!("simd_{id} α={alpha} threads={threads_max}"),
@@ -487,6 +554,102 @@ pub fn run_parallel_sweep(
                     flops: work,
                 });
             }
+        }
+    }
+
+    // --- float vs int8 kernels: the accuracy-vs-throughput frontier ------
+    // The quant_sweep column: dense/masked raced against their int8
+    // counterparts at the layer shape, always over the full builtin
+    // registry (like simd_sweep, a `--kernels` restriction narrows routing,
+    // not this comparison). Each row records what the int8 speed costs —
+    // the full-rank quantized estimator's mask agreement against the float
+    // estimator, and the worst-case logit ULP drift vs the same-work float
+    // kernel — and the `argmin_winner` flag marks the cell's measured-cost
+    // winner: the frontier the int8 kernels must actually appear on before
+    // an operator has any reason to allow-list them.
+    let mut quant_sweep = Vec::new();
+    {
+        let builtin = KernelRegistry::builtin();
+        let pool = ThreadPool::new(threads_max);
+        let mut ctx = ExecCtx::full(&pool);
+        let layer = MaskedLayer::new(&b, &bias);
+        let quant = QuantizedLayer::new(&layer.wt, &layer.bias);
+        let ops = LayerOperands::new(&b, &layer).with_quant(&quant);
+        // Full-rank estimator over the layer weights: quantizing the
+        // factors must leave the predicted mask (the frontier's accuracy
+        // axis) essentially unmoved.
+        let mut est = SignEstimator::fit(&b, &bias, dim, 0.0);
+        let mut float_mask = Mat::zeros(batch, dim);
+        est.mask_into(&x, &mut float_mask);
+        est.quantize_factors();
+        let mut quant_mask = Mat::zeros(batch, dim);
+        est.mask_into(&x, &mut quant_mask);
+        let agree = float_mask
+            .as_slice()
+            .iter()
+            .zip(quant_mask.as_slice())
+            .filter(|(f, q)| f == q)
+            .count();
+        let mask_agreement = agree as f64 / float_mask.as_slice().len().max(1) as f64;
+
+        let quant_ids =
+            [KernelId::DENSE, KernelId::DENSE_I8, KernelId::MASKED, KernelId::MASKED_I8];
+        let mut dense_want = Mat::zeros(batch, dim);
+        let mut masked_want = Mat::zeros(batch, dim);
+        for &(alpha, ref mask) in &masks {
+            // Same-work float references for the drift axis at this mask.
+            let _ = builtin
+                .get(KernelId::DENSE)
+                .expect("builtin dense")
+                .run(&ops, &x, mask, &mut ctx, &mut dense_want);
+            let _ = builtin
+                .get(KernelId::MASKED)
+                .expect("builtin masked")
+                .run(&ops, &x, mask, &mut ctx, &mut masked_want);
+            let mut cell = Vec::with_capacity(quant_ids.len());
+            for id in quant_ids {
+                let kernel = builtin.get(id).expect("builtin kernel");
+                let work = if id.work().scales_with_alpha() {
+                    layer_flops * alpha
+                } else {
+                    layer_flops
+                };
+                let r = bench_with_units(
+                    &format!("quant_{id} α={alpha} threads={threads_max}"),
+                    cfg,
+                    work,
+                    || {
+                        let _ = kernel.run(&ops, &x, mask, &mut ctx, &mut out);
+                    },
+                );
+                // `out` holds the kernel's last forward; drift is measured
+                // against the same-work float reference (identically zero
+                // for the float rows — deterministic kernels reproduce
+                // their own reference bitwise).
+                let want =
+                    if id.work().scales_with_alpha() { &masked_want } else { &dense_want };
+                let is_i8 = id == KernelId::DENSE_I8 || id == KernelId::MASKED_I8;
+                cell.push(QuantSweepRow {
+                    kernel: id.as_str().to_string(),
+                    alpha,
+                    median_s: r.time.median,
+                    flops: work,
+                    mask_agreement: if is_i8 { mask_agreement } else { 1.0 },
+                    ulp_drift: drift_ulps_outside_band(&out, want),
+                    argmin_winner: false,
+                });
+            }
+            // The frontier verdict: measured-wall-clock argmin over the
+            // four; strict `<` keeps the earlier (canonical-priority) row
+            // on exact ties, matching dispatch's tie-break direction.
+            let mut best = 0usize;
+            for i in 1..cell.len() {
+                if cell[i].median_s < cell[best].median_s {
+                    best = i;
+                }
+            }
+            cell[best].argmin_winner = true;
+            quant_sweep.extend(cell);
         }
     }
 
@@ -598,6 +761,7 @@ pub fn run_parallel_sweep(
         per_layer,
         kernel_sweep,
         simd_sweep,
+        quant_sweep,
         shard_sweep,
         replica_sweep,
         lease_vs_private,
@@ -937,6 +1101,18 @@ impl ParallelSweep {
                 row.flops / row.median_s.max(1e-12) / 1e9
             ));
         }
+        for row in &self.quant_sweep {
+            lines.push(format!(
+                "quant sweep:  {:<14} α={:.2} → {:>9.3}ms  {:>8.2} GF/s  agree={:.4} drift={:.0}ulp{}",
+                row.kernel,
+                row.alpha,
+                row.median_s * 1e3,
+                row.flops / row.median_s.max(1e-12) / 1e9,
+                row.mask_agreement,
+                row.ulp_drift,
+                if row.argmin_winner { "  ← argmin" } else { "" }
+            ));
+        }
         for row in &self.shard_sweep {
             lines.push(format!(
                 "serve loopback: shards={} clients={} → {:.0} req/s ({} requests in {:.3}s)",
@@ -1005,6 +1181,10 @@ impl ParallelSweep {
             (
                 "simd_sweep",
                 Json::Arr(self.simd_sweep.iter().map(|r| r.to_json()).collect()),
+            ),
+            (
+                "quant_sweep",
+                Json::Arr(self.quant_sweep.iter().map(|r| r.to_json()).collect()),
             ),
             (
                 "serve_shard_sweep",
@@ -1076,6 +1256,42 @@ mod tests {
                 "{id} measured once per α"
             );
         }
+        // Quant sweep: the fixed four-way frontier at every grid density —
+        // exactly one argmin winner per cell, float rows bit-exact against
+        // themselves (zero drift, full agreement), int8 rows carrying the
+        // full-rank estimator agreement and a finite drift.
+        let quant_ids = ["dense", "dense_i8", "masked", "masked_i8"];
+        assert_eq!(sweep.quant_sweep.len(), ALPHA_GRID.len() * quant_ids.len());
+        for &alpha in &ALPHA_GRID {
+            let cell: Vec<_> =
+                sweep.quant_sweep.iter().filter(|r| r.alpha == alpha).collect();
+            assert_eq!(cell.len(), quant_ids.len());
+            assert_eq!(
+                cell.iter().filter(|r| r.argmin_winner).count(),
+                1,
+                "one argmin winner at α={alpha}"
+            );
+            for row in cell {
+                assert!(row.median_s >= 0.0 && row.flops > 0.0, "{row:?}");
+                assert!((0.0..=1.0).contains(&row.mask_agreement), "{row:?}");
+                assert!(row.ulp_drift >= 0.0 && row.ulp_drift.is_finite(), "{row:?}");
+                if row.kernel == "dense" || row.kernel == "masked" {
+                    assert_eq!(row.mask_agreement, 1.0, "{row:?}");
+                    assert_eq!(row.ulp_drift, 0.0, "float rows are their own reference");
+                }
+            }
+        }
+        // The full-rank quantized estimator's *raw* agreement (every entry,
+        // including the near-zero band where sign flips are cheap) stays
+        // high even at this tiny shape. The ≥ 0.99 tier floor is a
+        // band-excluded contract, enforced by the estimator property tests.
+        let i8_agreement = sweep
+            .quant_sweep
+            .iter()
+            .find(|r| r.kernel == "dense_i8")
+            .expect("dense_i8 row")
+            .mask_agreement;
+        assert!(i8_agreement >= 0.9, "full-rank quantized mask agreement {i8_agreement}");
 
         // Shard column: {1, 2, threads_max=2} dedups to {1, 2}; every row
         // completed all of its requests.
@@ -1157,6 +1373,26 @@ mod tests {
                 "kernel {id} missing from simd_sweep JSON"
             );
         }
+        let quant_rows = parsed
+            .get("quant_sweep")
+            .and_then(|v| v.as_arr())
+            .expect("quant_sweep column");
+        assert_eq!(quant_rows.len(), sweep.quant_sweep.len());
+        for id in quant_ids {
+            assert!(
+                quant_rows
+                    .iter()
+                    .any(|r| r.get("kernel").and_then(|k| k.as_str()) == Some(id)),
+                "kernel {id} missing from quant_sweep JSON"
+            );
+        }
+        assert!(quant_rows.iter().all(|r| {
+            r.get("alpha").is_some()
+                && r.get("gflops_per_s").is_some()
+                && r.get("mask_agreement").and_then(|v| v.as_f64()).is_some()
+                && r.get("ulp_drift").and_then(|v| v.as_f64()).is_some()
+                && r.get("argmin_winner").and_then(|v| v.as_bool()).is_some()
+        }));
         let shard_rows = parsed
             .get("serve_shard_sweep")
             .and_then(|v| v.as_arr())

@@ -51,11 +51,19 @@ impl KernelId {
     /// Dense GEMM with explicitly vectorized (AVX2/NEON, runtime-detected)
     /// fused axpy rows — tolerance-tier against [`KernelId::DENSE`].
     pub const DENSE_SIMD: KernelId = KernelId("dense_simd");
+    /// Dense-shaped kernel over int8-quantized weights and activations
+    /// (per-row scales, exact integer dots) — sign-agreement tier against
+    /// [`KernelId::DENSE`]; ~4× narrower arithmetic ([`WorkModel::DenseI8`]).
+    pub const DENSE_I8: KernelId = KernelId("dense_i8");
     /// Masked dot-product kernel: computes only the `α·N·h` live entries.
     pub const MASKED: KernelId = KernelId("masked");
     /// Masked kernel with explicitly vectorized dot products —
     /// tolerance-tier against [`KernelId::MASKED`].
     pub const MASKED_SIMD: KernelId = KernelId("masked_simd");
+    /// Masked kernel over int8-quantized weights and activations —
+    /// sign-agreement tier against [`KernelId::MASKED`]
+    /// ([`WorkModel::AlphaScaledI8`]).
+    pub const MASKED_I8: KernelId = KernelId("masked_i8");
     /// Device execution through PJRT. The slot registers only when the real
     /// xla bindings replace `vendor/xla-stub` (`--features pjrt`).
     pub const PJRT: KernelId = KernelId("pjrt");
@@ -84,16 +92,24 @@ impl KernelId {
             Self::DENSE,
             Self::DENSE_PACKED,
             Self::DENSE_SIMD,
+            Self::DENSE_I8,
             Self::MASKED,
             Self::MASKED_SIMD,
+            Self::MASKED_I8,
             Self::PJRT,
         ]
     }
 
-    /// How this kernel's work scales with the mask density α.
+    /// How this kernel's work scales with the mask density α (and which
+    /// arithmetic class its per-FLOP costs live in: float and int8 columns
+    /// are separate classes — an int8 "FLOP" is ~4× narrower).
     pub fn work(self) -> WorkModel {
         if self == Self::MASKED || self == Self::MASKED_SIMD {
             WorkModel::AlphaScaled
+        } else if self == Self::DENSE_I8 {
+            WorkModel::DenseI8
+        } else if self == Self::MASKED_I8 {
+            WorkModel::AlphaScaledI8
         } else {
             WorkModel::Dense
         }
@@ -101,7 +117,8 @@ impl KernelId {
 
     /// Canonical ordering for deterministic argmin tie-breaks: the plain
     /// dense kernel wins ties against everything, bit-exact kernels against
-    /// tolerance-tier SIMD ones, in-tree ids against foreign ones.
+    /// tolerance-tier SIMD ones, those against sign-agreement int8 ones,
+    /// in-tree ids against foreign ones.
     pub(crate) fn priority(self) -> (u8, &'static str) {
         let rank = if self == Self::DENSE {
             0
@@ -109,14 +126,18 @@ impl KernelId {
             1
         } else if self == Self::DENSE_SIMD {
             2
-        } else if self == Self::MASKED {
+        } else if self == Self::DENSE_I8 {
             3
-        } else if self == Self::MASKED_SIMD {
+        } else if self == Self::MASKED {
             4
-        } else if self == Self::PJRT {
+        } else if self == Self::MASKED_SIMD {
             5
-        } else {
+        } else if self == Self::MASKED_I8 {
             6
+        } else if self == Self::PJRT {
+            7
+        } else {
+            8
         };
         (rank, self.0)
     }
@@ -135,11 +156,18 @@ pub const BUILTIN_KERNELS: &[KernelId] = &[
     KernelId::DENSE,
     KernelId::DENSE_PACKED,
     KernelId::DENSE_SIMD,
+    KernelId::DENSE_I8,
     KernelId::MASKED,
     KernelId::MASKED_SIMD,
+    KernelId::MASKED_I8,
 ];
 
-/// How a kernel's executed FLOPs depend on the predicted mask density.
+/// How a kernel's executed FLOPs depend on the predicted mask density, and
+/// which *arithmetic class* its per-FLOP costs belong to. The int8 variants
+/// execute the same §3.4 op counts as their float counterparts, but each op
+/// is ~4× narrower — so they form their own cost classes: an uncalibrated
+/// int8 kernel must never inherit (or be floored by) a float column, and
+/// vice versa.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WorkModel {
     /// Computes every output cell: `N·(2d−1)·h + N·h` (Eq. 8) regardless
@@ -148,28 +176,50 @@ pub enum WorkModel {
     /// Computes only the predicted-live cells: `α·N·h` dot products (Eq. 9's
     /// conditional term).
     AlphaScaled,
+    /// [`WorkModel::Dense`] op counts in int8 arithmetic (per-row-scale
+    /// quantized weights and activations).
+    DenseI8,
+    /// [`WorkModel::AlphaScaled`] op counts in int8 arithmetic.
+    AlphaScaledI8,
 }
 
 impl WorkModel {
-    /// The §3.4 FLOP count a kernel with this work model executes for one
-    /// `n × d → h` batch at density `alpha`.
+    /// The §3.4 op count a kernel with this work model executes for one
+    /// `n × d → h` batch at density `alpha` (int8 classes count the same
+    /// ops — the narrower cost per op lives in `default_per_flop` and the
+    /// calibrated columns).
     pub fn flops(self, n: usize, d: usize, h: usize, alpha: f64) -> f64 {
         let computed = (alpha.clamp(0.0, 1.0) * (n * h) as f64).round() as usize;
         let lf = LayerFlops::from_counts(n, d, h, 0, computed);
         match self {
-            WorkModel::Dense => lf.dense as f64,
-            WorkModel::AlphaScaled => lf.conditional as f64,
+            WorkModel::Dense | WorkModel::DenseI8 => lf.dense as f64,
+            WorkModel::AlphaScaled | WorkModel::AlphaScaledI8 => lf.conditional as f64,
         }
+    }
+
+    /// Whether this work model's executed ops shrink with the mask density
+    /// (the masked kernel class, float or int8) — what elastic dispatch
+    /// biases toward and what the autotune harness drives with partial
+    /// masks.
+    pub fn scales_with_alpha(self) -> bool {
+        matches!(self, WorkModel::AlphaScaled | WorkModel::AlphaScaledI8)
     }
 
     /// Fallback per-FLOP cost (relative to the dense baseline) for a kernel
     /// nothing has calibrated: dense-work kernels assume parity (and lose
     /// argmin ties to the plain dense kernel), masked work assumes the
-    /// conservative [`DispatchPolicy::DEFAULT_COST_RATIO`].
+    /// conservative [`DispatchPolicy::DEFAULT_COST_RATIO`]. The int8
+    /// classes reflect ~4× narrower arithmetic: dense-i8 ops default to a
+    /// fraction of a dense FLOP, masked-i8 ops to a fraction of the masked
+    /// default — optimistic on purpose, since int8 kernels are only
+    /// routable when an operator allow-lists them explicitly (they are not
+    /// bit-exact), and calibration replaces the guess at first serve.
     pub fn default_per_flop(self) -> f64 {
         match self {
             WorkModel::Dense => 1.0,
             WorkModel::AlphaScaled => DispatchPolicy::DEFAULT_COST_RATIO,
+            WorkModel::DenseI8 => 0.3,
+            WorkModel::AlphaScaledI8 => 1.0,
         }
     }
 }
@@ -350,7 +400,7 @@ impl DispatchPolicy {
     /// (the shard's queue fullness in `[0, 1]`) is at or above the
     /// configured threshold, every non-masked-work kernel's cost is
     /// multiplied by `elastic.dense_penalty`, biasing the argmin toward the
-    /// cheaper masked class (`masked`/`masked_simd`) — conditional
+    /// cheaper masked class (`masked`/`masked_simd`/`masked_i8`) — conditional
     /// computation as a load-shedding mechanism. Below the threshold this
     /// is exactly `decide`. Returns the pick plus whether it differs from
     /// the unpressured choice (a *downgrade*, which callers log and meter).
@@ -378,7 +428,7 @@ impl DispatchPolicy {
         let mut best: Option<(f64, (u8, &'static str), KernelId)> = None;
         for &k in allowed {
             let mut c = self.cost(k, n, d, h, alpha);
-            if k.work() != WorkModel::AlphaScaled {
+            if !k.work().scales_with_alpha() {
                 c *= penalty;
             }
             let key = (c, k.priority());
@@ -633,6 +683,17 @@ mod tests {
     use super::*;
 
     const DM: &[KernelId] = &[KernelId::DENSE, KernelId::MASKED];
+    /// The float-arithmetic builtin set — what routing tests that predate
+    /// the int8 class exercise (the int8 kernels' optimistic defaults are
+    /// *supposed* to undercut float columns when allow-listed; see
+    /// `int8_work_models_are_their_own_cost_class` for that contract).
+    const FLOAT_KERNELS: &[KernelId] = &[
+        KernelId::DENSE,
+        KernelId::DENSE_PACKED,
+        KernelId::DENSE_SIMD,
+        KernelId::MASKED,
+        KernelId::MASKED_SIMD,
+    ];
 
     #[test]
     fn kernel_ids_parse_and_display() {
@@ -645,6 +706,10 @@ mod tests {
         assert_eq!(KernelId::MASKED_SIMD.work(), WorkModel::AlphaScaled);
         assert_eq!(KernelId::DENSE_PACKED.work(), WorkModel::Dense);
         assert_eq!(KernelId::DENSE_SIMD.work(), WorkModel::Dense);
+        assert_eq!(KernelId::DENSE_I8.work(), WorkModel::DenseI8);
+        assert_eq!(KernelId::MASKED_I8.work(), WorkModel::AlphaScaledI8);
+        assert!(KernelId::MASKED_I8.work().scales_with_alpha());
+        assert!(!KernelId::DENSE_I8.work().scales_with_alpha());
         // Priorities are strictly ordered in the known() canonical order.
         let ranks: Vec<u8> = KernelId::known().iter().map(|k| k.priority().0).collect();
         assert!(ranks.windows(2).all(|w| w[0] < w[1]), "ranks {ranks:?}");
@@ -694,8 +759,8 @@ mod tests {
         // α* moved from 0.25 to 0.8/4 = 0.2.
         assert!((p.density_threshold() - 0.2).abs() < 1e-12);
         assert_eq!(p.preferred_dense(), KernelId::DENSE_PACKED);
-        assert_eq!(p.decide(n, d, h, 0.1, BUILTIN_KERNELS), KernelId::MASKED);
-        assert_eq!(p.decide(n, d, h, 0.5, BUILTIN_KERNELS), KernelId::DENSE_PACKED);
+        assert_eq!(p.decide(n, d, h, 0.1, FLOAT_KERNELS), KernelId::MASKED);
+        assert_eq!(p.decide(n, d, h, 0.5, FLOAT_KERNELS), KernelId::DENSE_PACKED);
         // Restricting the allow-list removes the packed option.
         assert_eq!(p.decide(n, d, h, 0.5, DM), KernelId::DENSE);
         // A masked-only allow-list always routes masked.
@@ -709,11 +774,11 @@ mod tests {
     #[test]
     fn ties_prefer_the_canonical_order() {
         let p = DispatchPolicy::with_cost_ratio(4.0); // no packed column
-        assert_eq!(p.decide(64, 512, 512, 1.0, BUILTIN_KERNELS), KernelId::DENSE);
+        assert_eq!(p.decide(64, 512, 512, 1.0, FLOAT_KERNELS), KernelId::DENSE);
         assert_eq!(p.preferred_dense(), KernelId::DENSE);
         let mut q = p.clone();
         q.set_column(KernelId::DENSE_PACKED, 1.0); // explicit parity
-        assert_eq!(q.decide(64, 512, 512, 1.0, BUILTIN_KERNELS), KernelId::DENSE);
+        assert_eq!(q.decide(64, 512, 512, 1.0, FLOAT_KERNELS), KernelId::DENSE);
     }
 
     /// The uncalibrated floor: a kernel with no measured column is assumed
@@ -736,7 +801,7 @@ mod tests {
         );
         // …so the argmin can pick it only via the canonical tie-break, which
         // masked wins — routing is unchanged until calibration says otherwise.
-        assert_ne!(p.decide(n, d, h, 0.05, BUILTIN_KERNELS), KernelId::MASKED_SIMD);
+        assert_ne!(p.decide(n, d, h, 0.05, FLOAT_KERNELS), KernelId::MASKED_SIMD);
         // Dense-work floor likewise: an expensive calibrated packed column
         // lifts the uncalibrated dense_simd guess up to it.
         let q = DispatchPolicy::from_columns(vec![
@@ -748,7 +813,41 @@ mod tests {
         // A *measured* SIMD column beats the floor as usual.
         let mut r = p.clone();
         r.set_column(KernelId::MASKED_SIMD, 2.0);
-        assert_eq!(r.decide(n, d, h, 0.05, BUILTIN_KERNELS), KernelId::MASKED_SIMD);
+        assert_eq!(r.decide(n, d, h, 0.05, FLOAT_KERNELS), KernelId::MASKED_SIMD);
+    }
+
+    /// Regression (satellite): the uncalibrated floor is *per arithmetic
+    /// class*, not per α-scaling shape — a fresh `dense_i8` column must
+    /// never inherit a float-class cost. With dense measured at 1.0 and
+    /// packed at 2.5, the dense-work float floor is 2.5, but `dense_i8`
+    /// keeps its own 0.3 default; likewise `masked_i8` ignores a measured
+    /// 8.0 `masked` column. Once an i8 column *is* measured, the same-class
+    /// floor applies within the i8 class.
+    #[test]
+    fn int8_work_models_are_their_own_cost_class() {
+        let (n, d, h) = (64, 512, 512);
+        let p = DispatchPolicy::from_columns(vec![
+            (KernelId::DENSE, 1.0),
+            (KernelId::DENSE_PACKED, 2.5),
+            (KernelId::MASKED, 8.0),
+        ]);
+        let dense_flops = WorkModel::Dense.flops(n, d, h, 1.0);
+        let cond_flops = WorkModel::AlphaScaled.flops(n, d, h, 0.3);
+        // The float floors do not leak into the i8 classes…
+        assert!((p.cost(KernelId::DENSE_I8, n, d, h, 1.0) - 0.3 * dense_flops).abs() < 1e-9);
+        assert!((p.cost(KernelId::MASKED_I8, n, d, h, 0.3) - cond_flops).abs() < 1e-9);
+        // …and the i8 defaults undercut the calibrated float columns, so an
+        // operator who allow-lists the int8 class gets routed onto it.
+        assert_eq!(p.decide(n, d, h, 1.0, BUILTIN_KERNELS), KernelId::DENSE_I8);
+        assert_eq!(p.decide(n, d, h, 0.05, BUILTIN_KERNELS), KernelId::MASKED_I8);
+        // A float-only allow-list is untouched by the i8 defaults.
+        assert_eq!(p.decide(n, d, h, 1.0, FLOAT_KERNELS), KernelId::DENSE);
+        // Measuring an i8 column replaces its default within its own class.
+        let mut q = p.clone();
+        q.set_column(KernelId::MASKED_I8, 5.0);
+        assert!((q.cost(KernelId::MASKED_I8, n, d, h, 0.3) - 5.0 * cond_flops).abs() < 1e-9);
+        // And the float masked column is still what cost_ratio reports.
+        assert!((q.cost_ratio() - 8.0).abs() < 1e-12);
     }
 
     #[test]

@@ -13,11 +13,13 @@
 //!   [`crate::autotune`], persisted in a machine profile).
 //! - [`registry`] — the open kernel set behind dispatch:
 //!   [`KernelRegistry`] maps stable [`KernelId`]s (`dense`,
-//!   `dense_packed`, `dense_simd`, `masked`, `masked_simd`, feature-gated
-//!   `pjrt`) to object-safe [`ComputeKernel`] implementations running
-//!   through an [`crate::exec::ExecCtx`]; each declares an
-//!   [`EquivalenceTier`] (bit-exact vs ULP-bounded) scoping how closely it
-//!   matches its serial oracle.
+//!   `dense_packed`, `dense_simd`, `dense_i8`, `masked`, `masked_simd`,
+//!   `masked_i8`, feature-gated `pjrt`) to object-safe [`ComputeKernel`]
+//!   implementations running through an [`crate::exec::ExecCtx`]; each
+//!   declares an [`EquivalenceTier`] (bit-exact vs ULP-bounded vs
+//!   sign-agreement) scoping how closely it matches its serial oracle; the
+//!   sign-agreement (int8) class is excluded from default routing and
+//!   enters only via an explicit allow-list.
 //! - [`cond_mlp`] — an estimator-augmented network forward built on the
 //!   masked GEMM, with exact FLOP accounting per layer.
 //! - [`flops`] — operation counters shared by the engine and the benches.
@@ -34,4 +36,7 @@ pub use dispatch::{
 };
 pub use flops::{FlopBreakdown, LayerFlops};
 pub use masked_gemm::{relu_gate, MaskedLayer};
-pub use registry::{ComputeKernel, EquivalenceTier, KernelRegistry, LayerOperands};
+pub use registry::{
+    ComputeKernel, EquivalenceTier, KernelRegistry, LayerOperands, QUANT_SIGN_BAND_REL,
+    QUANT_TIER_AGREEMENT_BP,
+};

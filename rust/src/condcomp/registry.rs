@@ -31,6 +31,13 @@
 //! - `masked_simd` — the masked kernel with vectorized dot products
 //!   ([`MaskedLayer::forward_masked_simd_ctx`]): identical mask selection
 //!   and counts, **tolerance-tier** values against `masked`.
+//! - `dense_i8` / `masked_i8` — the int8 arithmetic class
+//!   ([`crate::linalg::QuantizedLayer`]): per-row-scale quantized weights
+//!   and activations, exact integer dots. **Sign-agreement tier** against
+//!   the float oracles — the quantization error is bounded but real, so
+//!   these kernels are *excluded from default routing* and selected only
+//!   when an operator allow-lists them explicitly
+//!   ([`KernelRegistry::default_routable`]).
 //! - `pjrt` — a feature-gated slot (`--features pjrt`) that registers only
 //!   when the real xla bindings replace `vendor/xla-stub`; until device
 //!   execution lands it delegates to the dense path so the column is
@@ -43,14 +50,19 @@
 //! lease width; a [`EquivalenceTier::Tolerance`] kernel (the SIMD pair)
 //! matches its oracle within the declared ULP bound, while remaining
 //! bit-identical to *itself* across thread counts, lease widths and ISA
-//! paths. All kernels compute the same function, so routing changes
-//! wall-clock — and at most tolerance-tier last bits — never correctness.
+//! paths; a [`EquivalenceTier::SignAgree`] kernel (the int8 pair) promises
+//! activation-pattern agreement with its oracle outside a near-zero band —
+//! values drift by quantization error — and is still bit-identical to
+//! itself everywhere (integer arithmetic is exact). Routing among
+//! *default-routable* kernels changes wall-clock — and at most
+//! tolerance-tier last bits — never correctness; routing onto the int8
+//! class is an explicit operator opt-in to the sign-agreement contract.
 
 use super::dispatch::KernelId;
 use super::masked_gemm::{relu_gate, MaskedLayer};
 use crate::exec::ExecCtx;
 use crate::linalg::{
-    matmul_into_ctx, matmul_into_packed_ctx, matmul_into_simd_ctx, Mat, SimdCaps,
+    matmul_into_ctx, matmul_into_packed_ctx, matmul_into_simd_ctx, Mat, QuantizedLayer, SimdCaps,
 };
 use crate::nn::mlp::add_bias;
 use crate::util::ulp::{ulp_diff, within_tolerance};
@@ -70,19 +82,73 @@ pub enum EquivalenceTier {
     /// ReLU-boundary sign flips. Still bit-identical to *itself* across
     /// thread counts, lease widths and ISA paths.
     Tolerance(u32),
+    /// Aggregate, not elementwise: among oracle entries whose magnitude
+    /// exceeds the near-zero band ([`QUANT_SIGN_BAND_REL`] × the oracle's
+    /// max magnitude), the fraction whose *activation sign* (`> 0` after
+    /// ReLU + mask) matches must be at least this many basis points (e.g.
+    /// `9900` = 99%). Values are allowed to drift by quantization error —
+    /// the int8 kernels' contract: the sign estimator only needs signs.
+    /// Still bit-identical to *itself* across thread counts, lease widths
+    /// and ISA paths (exact integer arithmetic).
+    SignAgree(u32),
+}
+
+/// The near-zero band for [`EquivalenceTier::SignAgree`], relative to the
+/// oracle output's max magnitude: entries this close to the ReLU boundary
+/// may legitimately flip under quantization and are excluded from the
+/// agreement count.
+pub const QUANT_SIGN_BAND_REL: f32 = 0.02;
+
+/// The agreement floor (basis points) the int8 kernels declare: ≥ 99% of
+/// out-of-band activation signs must match the float oracle's.
+pub const QUANT_TIER_AGREEMENT_BP: u32 = 9900;
+
+/// The [`EquivalenceTier::SignAgree`] aggregate check (see the variant doc).
+fn check_sign_agreement(floor_bp: u32, got: &[f32], want: &[f32]) -> Result<(), String> {
+    let max_abs = want.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+    let band = max_abs * QUANT_SIGN_BAND_REL;
+    let mut eligible = 0usize;
+    let mut agree = 0usize;
+    for (&g, &w) in got.iter().zip(want) {
+        if w.abs() <= band {
+            continue;
+        }
+        eligible += 1;
+        if (g > 0.0) == (w > 0.0) {
+            agree += 1;
+        }
+    }
+    if eligible == 0 {
+        return Ok(());
+    }
+    let rate = agree as f64 / eligible as f64;
+    let floor = floor_bp as f64 / 10_000.0;
+    if rate + 1e-9 >= floor {
+        Ok(())
+    } else {
+        Err(format!(
+            "SignAgree({floor_bp}) violated: {agree}/{eligible} signs agree \
+             ({rate:.4} < floor {floor:.4}) outside the ±{band:.3e} band"
+        ))
+    }
 }
 
 impl EquivalenceTier {
     /// Verify `got` against the oracle `want` under this tier. `Ok(())` or
-    /// a message pinpointing the first violation.
+    /// a message pinpointing the first violation (or, for the aggregate
+    /// sign-agreement tier, the failing rate).
     pub fn check(&self, got: &[f32], want: &[f32]) -> Result<(), String> {
         if got.len() != want.len() {
             return Err(format!("length mismatch: {} vs {}", got.len(), want.len()));
+        }
+        if let EquivalenceTier::SignAgree(floor_bp) = self {
+            return check_sign_agreement(*floor_bp, got, want);
         }
         for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
             let ok = match self {
                 EquivalenceTier::BitExact => g.to_bits() == w.to_bits(),
                 EquivalenceTier::Tolerance(ulps) => within_tolerance(g, w, *ulps),
+                EquivalenceTier::SignAgree(_) => unreachable!("handled above"),
             };
             if !ok {
                 return Err(format!(
@@ -93,21 +159,53 @@ impl EquivalenceTier {
         }
         Ok(())
     }
+
+    /// The operator-facing tier label — what `--kernels` roster output and
+    /// the serve startup log print next to each kernel id.
+    pub fn label(&self) -> String {
+        match self {
+            EquivalenceTier::BitExact => "bit-exact".to_string(),
+            EquivalenceTier::Tolerance(ulps) => format!("tolerance({ulps})"),
+            EquivalenceTier::SignAgree(_) => "sign-agree".to_string(),
+        }
+    }
+
+    /// Whether this tier preserves bit-identity with the serial oracle.
+    pub fn is_bit_exact(&self) -> bool {
+        matches!(self, EquivalenceTier::BitExact)
+    }
 }
 
 /// Everything a kernel may read about one hidden layer: the untransposed
-/// `d × h` weights (dense GEMM operand) and the prepared [`MaskedLayer`]
-/// (transposed weights + bias, the dot-product operand). Both views describe
-/// the same parameters.
+/// `d × h` weights (dense GEMM operand), the prepared [`MaskedLayer`]
+/// (transposed weights + bias, the dot-product operand), and — when the
+/// caller prepared one — the [`QuantizedLayer`] (int8 codes + per-row
+/// scales, the `dense_i8`/`masked_i8` operand). All views describe the same
+/// parameters.
 pub struct LayerOperands<'a> {
     pub weights: &'a Mat,
     pub masked: &'a MaskedLayer,
+    /// Quantized-once weights for the int8 kernels. `None` makes those
+    /// kernels quantize on the fly (correct, but pays the quantization per
+    /// batch — serving backends attach the prepared form).
+    pub quant: Option<&'a QuantizedLayer>,
 }
 
 impl<'a> LayerOperands<'a> {
     pub fn new(weights: &'a Mat, masked: &'a MaskedLayer) -> LayerOperands<'a> {
         debug_assert_eq!(weights.shape(), (masked.in_dim(), masked.out_dim()));
-        LayerOperands { weights, masked }
+        LayerOperands { weights, masked, quant: None }
+    }
+
+    /// Attach a prepared [`QuantizedLayer`] (quantize-once at model prep —
+    /// the serving path; shapes must mirror the masked layer's).
+    pub fn with_quant(mut self, quant: &'a QuantizedLayer) -> LayerOperands<'a> {
+        debug_assert_eq!(
+            (quant.in_dim(), quant.out_dim()),
+            (self.masked.in_dim(), self.masked.out_dim())
+        );
+        self.quant = Some(quant);
+        self
     }
 }
 
@@ -302,6 +400,114 @@ impl ComputeKernel for MaskedSimdKernel {
     }
 }
 
+/// Shared driver for the int8 kernels: use the caller's prepared
+/// [`QuantizedLayer`] when the operands carry one, else quantize on the fly
+/// (one-off callers, the autotune harness's first touch).
+fn run_quant(
+    caps: SimdCaps,
+    layer: &LayerOperands<'_>,
+    x: &Mat,
+    mask: &Mat,
+    ctx: &mut ExecCtx<'_>,
+    out: &mut Mat,
+    compute_all: bool,
+) -> usize {
+    let owned;
+    let quant = match layer.quant {
+        Some(q) => q,
+        None => {
+            owned = QuantizedLayer::new(&layer.masked.wt, &layer.masked.bias);
+            &owned
+        }
+    };
+    quant.forward_i8_ctx(caps, x, mask, out, compute_all, ctx)
+}
+
+/// `dense_i8`: every dot product computed in int8 (mask gates the output
+/// only). Sign-agreement tier against [`DenseKernel`]; bit-identical to
+/// itself across thread counts, lease widths and ISA paths (exact integer
+/// accumulation).
+pub struct QuantDenseKernel {
+    caps: SimdCaps,
+}
+
+impl QuantDenseKernel {
+    /// Pin an explicit capability set (tests exercising the scalar path
+    /// in-process). [`Default`] probes the machine once.
+    pub fn new(caps: SimdCaps) -> QuantDenseKernel {
+        QuantDenseKernel { caps }
+    }
+}
+
+impl Default for QuantDenseKernel {
+    fn default() -> QuantDenseKernel {
+        QuantDenseKernel::new(SimdCaps::get())
+    }
+}
+
+impl ComputeKernel for QuantDenseKernel {
+    fn id(&self) -> KernelId {
+        KernelId::DENSE_I8
+    }
+
+    fn tier(&self) -> EquivalenceTier {
+        EquivalenceTier::SignAgree(QUANT_TIER_AGREEMENT_BP)
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        run_quant(self.caps, layer, x, mask, ctx, out, true)
+    }
+}
+
+/// `masked_i8`: int8 dot products for predicted-live entries only —
+/// identical mask selection and counts to [`MaskedKernel`], sign-agreement
+/// tier values.
+pub struct QuantMaskedKernel {
+    caps: SimdCaps,
+}
+
+impl QuantMaskedKernel {
+    /// Pin an explicit capability set (tests exercising the scalar path
+    /// in-process). [`Default`] probes the machine once.
+    pub fn new(caps: SimdCaps) -> QuantMaskedKernel {
+        QuantMaskedKernel { caps }
+    }
+}
+
+impl Default for QuantMaskedKernel {
+    fn default() -> QuantMaskedKernel {
+        QuantMaskedKernel::new(SimdCaps::get())
+    }
+}
+
+impl ComputeKernel for QuantMaskedKernel {
+    fn id(&self) -> KernelId {
+        KernelId::MASKED_I8
+    }
+
+    fn tier(&self) -> EquivalenceTier {
+        EquivalenceTier::SignAgree(QUANT_TIER_AGREEMENT_BP)
+    }
+
+    fn run(
+        &self,
+        layer: &LayerOperands<'_>,
+        x: &Mat,
+        mask: &Mat,
+        ctx: &mut ExecCtx<'_>,
+        out: &mut Mat,
+    ) -> usize {
+        run_quant(self.caps, layer, x, mask, ctx, out, false)
+    }
+}
+
 /// `pjrt`: the feature-gated device slot. Until the real xla bindings
 /// replace `vendor/xla-stub`, device execution is unavailable, so this
 /// registrant delegates to the dense path — the registry seam, the config
@@ -345,16 +551,19 @@ impl KernelRegistry {
         KernelRegistry { kernels: Vec::new() }
     }
 
-    /// The in-tree set: `dense`, `dense_packed`, `dense_simd`, `masked`,
-    /// `masked_simd` — plus the `pjrt` slot when the feature is on. The SIMD
-    /// kernels probe [`SimdCaps`] exactly once, here at construction.
+    /// The in-tree set: `dense`, `dense_packed`, `dense_simd`, `dense_i8`,
+    /// `masked`, `masked_simd`, `masked_i8` — plus the `pjrt` slot when the
+    /// feature is on. The SIMD and int8 kernels probe [`SimdCaps`] exactly
+    /// once, here at construction.
     pub fn builtin() -> KernelRegistry {
         let mut reg = KernelRegistry::empty();
         reg.register(Arc::new(DenseKernel));
         reg.register(Arc::new(DensePackedKernel));
         reg.register(Arc::new(DenseSimdKernel::default()));
+        reg.register(Arc::new(QuantDenseKernel::default()));
         reg.register(Arc::new(MaskedKernel));
         reg.register(Arc::new(MaskedSimdKernel::default()));
+        reg.register(Arc::new(QuantMaskedKernel::default()));
         #[cfg(feature = "pjrt")]
         reg.register(Arc::new(PjrtKernel::default()));
         reg
@@ -397,8 +606,10 @@ impl KernelRegistry {
 
     /// Every id this registry serves plus every in-tree id it doesn't —
     /// feature-gated or not-compiled-in slots marked `(unavailable)` — in
-    /// canonical order. What `--kernels` validation errors enumerate, so a
-    /// typo'd or gated-out id tells the operator the whole candidate set.
+    /// canonical order. Registered ids carry their equivalence tier
+    /// (`[bit-exact]`, `[tolerance(N)]`, `[sign-agree]`) so the operator can
+    /// read the accuracy contract of every candidate off one line. What
+    /// `--kernels` validation errors and the serve startup log enumerate.
     pub fn roster(&self) -> String {
         let mut entries: Vec<(KernelId, bool)> =
             self.ids().into_iter().map(|id| (id, true)).collect();
@@ -410,15 +621,27 @@ impl KernelRegistry {
         entries.sort_by_key(|(id, _)| id.priority());
         entries
             .iter()
-            .map(|&(id, registered)| {
-                if registered {
-                    id.as_str().to_string()
-                } else {
-                    format!("{id} (unavailable)")
+            .map(|&(id, registered)| match self.get(id) {
+                Some(kernel) if registered => {
+                    format!("{id} [{}]", kernel.tier().label())
                 }
+                _ => format!("{id} (unavailable)"),
             })
             .collect::<Vec<_>>()
             .join(", ")
+    }
+
+    /// The ids routed by default: every registered kernel whose tier
+    /// preserves outputs (bit-exact or tolerance). Sign-agreement kernels
+    /// change serve outputs, so they never enter the candidate set unless the
+    /// operator names them in `dispatch.kernels` / `--kernels` — quantized
+    /// routing is an explicit opt-in, not a cost-model accident.
+    pub fn default_routable(&self) -> Vec<KernelId> {
+        self.kernels
+            .iter()
+            .filter(|k| !matches!(k.tier(), EquivalenceTier::SignAgree(_)))
+            .map(|k| k.id())
+            .collect()
     }
 
     /// A registry restricted to `allow` (the `dispatch.kernels` config key /
@@ -515,8 +738,10 @@ mod tests {
             KernelId::DENSE,
             KernelId::DENSE_PACKED,
             KernelId::DENSE_SIMD,
+            KernelId::DENSE_I8,
             KernelId::MASKED,
             KernelId::MASKED_SIMD,
+            KernelId::MASKED_I8,
         ];
         if cfg!(feature = "pjrt") {
             want.push(KernelId::PJRT);
@@ -533,7 +758,7 @@ mod tests {
 
     /// Every registered kernel declares an equivalence tier (an acceptance
     /// criterion): the scalar kernels are bit-exact, the SIMD pair declares
-    /// the shared ULP bound.
+    /// the shared ULP bound, the int8 pair the sign-agreement floor.
     #[test]
     fn every_registered_kernel_declares_a_tier() {
         for kernel in KernelRegistry::builtin().iter() {
@@ -542,9 +767,49 @@ mod tests {
                 KernelId::DENSE_SIMD | KernelId::MASKED_SIMD => {
                     assert_eq!(tier, EquivalenceTier::Tolerance(SIMD_TIER_ULPS))
                 }
+                KernelId::DENSE_I8 | KernelId::MASKED_I8 => {
+                    assert_eq!(tier, EquivalenceTier::SignAgree(QUANT_TIER_AGREEMENT_BP))
+                }
                 _ => assert_eq!(tier, EquivalenceTier::BitExact, "{}", kernel.id()),
             }
         }
+    }
+
+    /// Default routing excludes the sign-agreement class: quantized kernels
+    /// enter the candidate set only when the operator names them.
+    #[test]
+    fn default_routable_excludes_sign_agree_kernels() {
+        let reg = KernelRegistry::builtin();
+        let routable = reg.default_routable();
+        assert!(!routable.contains(&KernelId::DENSE_I8));
+        assert!(!routable.contains(&KernelId::MASKED_I8));
+        assert!(routable.contains(&KernelId::DENSE));
+        assert!(routable.contains(&KernelId::MASKED));
+        assert!(routable.contains(&KernelId::DENSE_SIMD));
+        // An explicit allow-list naming the int8 ids still restricts fine.
+        let quant = reg
+            .restricted(&[KernelId::DENSE, KernelId::DENSE_I8, KernelId::MASKED_I8])
+            .unwrap();
+        assert_eq!(
+            quant.ids(),
+            vec![KernelId::DENSE, KernelId::DENSE_I8, KernelId::MASKED_I8]
+        );
+    }
+
+    /// The roster names every kernel's tier so one log line carries the
+    /// accuracy contract of the full candidate set (satellite).
+    #[test]
+    fn roster_labels_each_kernel_with_its_tier() {
+        let roster = KernelRegistry::builtin().roster();
+        assert!(roster.contains("dense [bit-exact]"), "{roster}");
+        assert!(
+            roster.contains(&format!("dense_simd [tolerance({SIMD_TIER_ULPS})]")),
+            "{roster}"
+        );
+        assert!(roster.contains("dense_i8 [sign-agree]"), "{roster}");
+        assert!(roster.contains("masked_i8 [sign-agree]"), "{roster}");
+        #[cfg(not(feature = "pjrt"))]
+        assert!(roster.contains("pjrt (unavailable)"), "{roster}");
     }
 
     #[test]
@@ -559,6 +824,28 @@ mod tests {
         assert!(tol.check(&[1.001], &[1.0]).is_err(), "thousands of ULPs exceed the bound");
         let err = tol.check(&[1.001], &[1.0]).unwrap_err();
         assert!(err.contains("[0]"), "violation pinpoints the index: {err}");
+
+        // The aggregate sign-agreement tier: values may drift, signs must
+        // (mostly) hold outside the near-zero band.
+        let sign = EquivalenceTier::SignAgree(9900);
+        let want: Vec<f32> = (0..200).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let drifted: Vec<f32> = want.iter().map(|&w| w * 1.03).collect();
+        assert!(sign.check(&drifted, &want).is_ok(), "pure magnitude drift passes");
+        let mut flipped = want.clone();
+        for v in flipped.iter_mut().take(8) {
+            // 4 of the 100 out-of-band entries flip to zero: 96% < 99%.
+            *v = 0.0;
+        }
+        assert!(sign.check(&flipped, &want).is_err(), ">1% out-of-band flips fail");
+        // Flips confined to the near-zero band are ignored...
+        let near: Vec<f32> = vec![1.0, 0.01, 0.015, 1.0];
+        let near_flipped: Vec<f32> = vec![1.0, 0.0, 0.0, 1.0];
+        assert!(sign.check(&near_flipped, &near).is_ok(), "in-band flips excluded");
+        // ...and an all-in-band oracle has nothing to disagree with.
+        assert!(sign.check(&[1.0, 2.0], &[0.0, 0.0]).is_ok(), "no eligible entries");
+        assert!(sign.check(&[1.0, 2.0], &[1.0]).is_err(), "length mismatch still fails");
+        assert_eq!(sign.label(), "sign-agree");
+        assert!(!sign.is_bit_exact() && exact.is_bit_exact());
     }
 
     /// The roster (satellite): validation errors list the full candidate
@@ -661,24 +948,50 @@ mod tests {
                 let alpha = rng.uniform();
                 let mask =
                     Mat::from_fn(n, h, |_, _| if rng.bernoulli(alpha) { 1.0 } else { 0.0 });
-                let ops = LayerOperands::new(&w, &layer);
+                let quant = QuantizedLayer::new(&layer.wt, &layer.bias);
+                let ops = LayerOperands::new(&w, &layer).with_quant(&quant);
                 let dense_want = dense_oracle(&x, &w, &bias, &mask);
                 let (masked_want, masked_count) = layer.forward_masked(&x, &mask);
+                // Serial int8 references: the i8 kernels must hit their
+                // sign-agreement tier vs the float oracles AND stay bitwise
+                // identical to the serial integer kernel at every thread
+                // count / lease width (integer accumulation is exact).
+                let mut i8_dense_want = Mat::zeros(n, h);
+                let i8_dense_count =
+                    quant.forward_i8_into(SimdCaps::get(), &x, &mask, &mut i8_dense_want, true);
+                let mut i8_masked_want = Mat::zeros(n, h);
+                let i8_masked_count =
+                    quant.forward_i8_into(SimdCaps::get(), &x, &mask, &mut i8_masked_want, false);
                 for lease_width in [1usize, threads] {
                     for kernel in reg.iter() {
                         let mut ctx = ExecCtx::over(pool.lease(lease_width));
                         let mut out = Mat::full(n, h, f32::NAN); // dirty buffer
                         let computed = kernel.run(&ops, &x, &mask, &mut ctx, &mut out);
+                        use crate::condcomp::WorkModel;
                         let (want, want_count) = match kernel.id().work() {
-                            crate::condcomp::WorkModel::Dense => (&dense_want, n * h),
-                            crate::condcomp::WorkModel::AlphaScaled => {
-                                (&masked_want, masked_count)
-                            }
+                            WorkModel::Dense => (&dense_want, n * h),
+                            WorkModel::AlphaScaled => (&masked_want, masked_count),
+                            WorkModel::DenseI8 => (&dense_want, i8_dense_count),
+                            WorkModel::AlphaScaledI8 => (&masked_want, i8_masked_count),
                         };
                         if let Err(msg) = kernel.tier().check(out.as_slice(), want.as_slice()) {
                             panic!(
                                 "kernel {} threads {threads} lease {lease_width} \
                                  ({n}x{d}x{h}): {msg}",
+                                kernel.id()
+                            );
+                        }
+                        let i8_want = match kernel.id().work() {
+                            WorkModel::DenseI8 => Some(&i8_dense_want),
+                            WorkModel::AlphaScaledI8 => Some(&i8_masked_want),
+                            _ => None,
+                        };
+                        if let Some(i8_want) = i8_want {
+                            assert_eq!(
+                                i8_want.max_abs_diff(&out),
+                                0.0,
+                                "kernel {} threads {threads} lease {lease_width}: int8 \
+                                 output must be bitwise thread-invariant",
                                 kernel.id()
                             );
                         }

@@ -8,7 +8,7 @@ pub mod toml_lite;
 pub mod schema;
 
 pub use schema::{
-    AutotuneConfig, DatasetKind, DispatchSettings, EstimatorConfig, ExperimentProfile, NetConfig,
-    ServerSettings, TrainConfig,
+    AutotuneConfig, DatasetKind, DispatchSettings, EstimatorConfig, EstimatorSettings,
+    ExperimentProfile, NetConfig, ServerSettings, TrainConfig,
 };
 pub use toml_lite::TomlDoc;

@@ -201,6 +201,17 @@ impl Default for ServerSettings {
     }
 }
 
+/// Estimator knobs carried by a profile (the `[estimator]` config section).
+/// Rank lists stay CLI-side (they name an experiment arm, not a profile);
+/// this section holds the arm-independent estimator switches.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct EstimatorSettings {
+    /// Quantize estimator factors to int8 after every refresh
+    /// (`estimator.quantized` / CLI `--quantized-estimator`); see
+    /// [`EstimatorConfig::quantized`].
+    pub quantized: bool,
+}
+
 /// Per-layer activation-estimator configuration (§3.1–§3.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct EstimatorConfig {
@@ -217,6 +228,11 @@ pub struct EstimatorConfig {
     /// If set, choose each rank adaptively as the smallest rank capturing
     /// this fraction of spectral energy (§5 extension); overrides `ranks`.
     pub adaptive_energy: Option<f64>,
+    /// Quantize the low-rank factors to int8 per-row scales after every
+    /// (re)fit (`estimator.quantized`): full-rank mask production then runs
+    /// both estimator stages on exact integer dots. Sign-agreement — not
+    /// bit-identity — with the float estimator; off by default.
+    pub quantized: bool,
 }
 
 impl EstimatorConfig {
@@ -228,6 +244,7 @@ impl EstimatorConfig {
             bias: 0.0,
             randomized: false,
             adaptive_energy: None,
+            quantized: false,
         }
     }
 
@@ -267,6 +284,8 @@ pub struct ExperimentProfile {
     pub server: ServerSettings,
     /// Kernel-dispatch knobs (registry allow-list).
     pub dispatch: DispatchSettings,
+    /// Estimator knobs (int8 factor quantization).
+    pub estimator: EstimatorSettings,
     /// Training/validation/test example counts for the synthetic corpus.
     pub n_train: usize,
     pub n_valid: usize,
@@ -302,6 +321,7 @@ impl ExperimentProfile {
             autotune: AutotuneConfig::default(),
             server: ServerSettings::default(),
             dispatch: DispatchSettings::default(),
+            estimator: EstimatorSettings::default(),
             n_train: 50_000,
             n_valid: 10_000,
             n_test: 10_000,
@@ -336,6 +356,7 @@ impl ExperimentProfile {
             autotune: AutotuneConfig::default(),
             server: ServerSettings::default(),
             dispatch: DispatchSettings::default(),
+            estimator: EstimatorSettings::default(),
             n_train: 590_000,
             n_valid: 14_388,
             n_test: 26_032,
@@ -534,6 +555,9 @@ impl ExperimentProfile {
         if let Some(x) = doc.get_usize("server.health_interval_ms") {
             self.server.health_interval_ms = x as u64;
         }
+        if let Some(b) = doc.get_bool("estimator.quantized") {
+            self.estimator.quantized = b;
+        }
         if let Some(s) = doc.get_str("dispatch.kernels") {
             self.dispatch.kernels = s
                 .split(',')
@@ -684,6 +708,17 @@ mod tests {
         let doc = TomlDoc::parse("[dispatch]\nkernels = \"dense_packed, masked\"").unwrap();
         p.apply_overrides(&doc);
         assert_eq!(p.dispatch.kernels, vec!["dense_packed".to_string(), "masked".to_string()]);
+    }
+
+    #[test]
+    fn estimator_settings_default_and_override() {
+        let mut p = ExperimentProfile::mnist_tiny();
+        assert_eq!(p.estimator, EstimatorSettings::default());
+        assert!(!p.estimator.quantized, "int8 estimator factors are opt-in");
+        assert!(!EstimatorConfig::control().quantized);
+        let doc = TomlDoc::parse("[estimator]\nquantized = true").unwrap();
+        p.apply_overrides(&doc);
+        assert!(p.estimator.quantized);
     }
 
     #[test]

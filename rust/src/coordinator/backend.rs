@@ -9,7 +9,7 @@ use crate::condcomp::{
 };
 use crate::estimator::SignEstimatorSet;
 use crate::exec::ExecCtx;
-use crate::linalg::{matmul_into_ctx, Mat};
+use crate::linalg::{matmul_into_ctx, Mat, QuantizedLayer};
 use crate::nn::mlp::add_bias;
 use crate::nn::Mlp;
 use crate::parallel::ThreadPool;
@@ -92,6 +92,10 @@ pub trait Backend: Send + Sync {
 pub struct NativeBackend {
     net: Mlp,
     masked: Vec<MaskedLayer>,
+    /// Int8-quantized weights, prepared once at construction (per-row
+    /// scales) so the `dense_i8`/`masked_i8` kernels never pay quantization
+    /// on the hot path. Tiny next to the f32 copies; always built.
+    quants: Vec<QuantizedLayer>,
     estimators: RwLock<SignEstimatorSet>,
     max_batch: usize,
     /// Per-layer per-kernel cost tables — loaded from a machine profile
@@ -103,8 +107,11 @@ pub struct NativeBackend {
     /// registered set (builtin unless an embedder replaced it), `active` is
     /// the routing view after the `dispatch.kernels` allow-list
     /// ([`NativeBackend::set_allowed_kernels`] always restricts from
-    /// `base`, so allow-lists replace rather than compound). A ctx-pinned
-    /// registry view overrides `active` per call.
+    /// `base`, so allow-lists replace rather than compound). With no
+    /// allow-list, `active` is `base` minus the sign-agreement (int8)
+    /// kernels — quantized routing is opt-in; naming `dense_i8`/`masked_i8`
+    /// in the allow-list enables them. A ctx-pinned registry view overrides
+    /// `active` per call.
     kernels: RwLock<(Arc<KernelRegistry>, Arc<KernelRegistry>)>,
     /// Recycled activation buffers for pool-less callers
     /// ([`Backend::predict`]); shard executors bypass this entirely by
@@ -122,19 +129,35 @@ impl NativeBackend {
         let masked: Vec<MaskedLayer> = (0..net.depth())
             .map(|l| MaskedLayer::new(&net.weights[l], &net.biases[l]))
             .collect();
+        let quants: Vec<QuantizedLayer> = masked
+            .iter()
+            .map(|m| QuantizedLayer::new(&m.wt, &m.bias))
+            .collect();
         let hidden = net.depth().saturating_sub(1);
         NativeBackend {
             net,
             masked,
+            quants,
             estimators: RwLock::new(estimators),
             max_batch,
             dispatch: RwLock::new(PolicyTable::uncalibrated(hidden)),
             kernels: RwLock::new({
                 let base = Arc::new(KernelRegistry::builtin());
-                (base.clone(), base)
+                (base.clone(), Self::default_view(&base))
             }),
             scratch: Mutex::new(ScratchArena::new()),
             profile: RwLock::new(None),
+        }
+    }
+
+    /// The default routing view over a registered set: everything except
+    /// the sign-agreement (int8) kernels, which change outputs and so only
+    /// route when an allow-list names them. Falls back to the full set if
+    /// the filter would leave nothing (an all-quantized custom registry).
+    fn default_view(base: &Arc<KernelRegistry>) -> Arc<KernelRegistry> {
+        match base.restricted(&base.default_routable()) {
+            Ok(view) => Arc::new(view),
+            Err(_) => base.clone(),
         }
     }
 
@@ -165,21 +188,26 @@ impl NativeBackend {
     }
 
     /// Replace the registry outright (embedders composing their own kernel
-    /// set; they register before serving starts). Clears any allow-list.
-    /// Rejects an empty registry — the router must always have a kernel to
-    /// pick (the same invariant `restricted` enforces for allow-lists).
+    /// set; they register before serving starts). Clears any allow-list —
+    /// the active view resets to the default-routable subset (sign-agreement
+    /// kernels excluded until allow-listed again). Rejects an empty registry
+    /// — the router must always have a kernel to pick (the same invariant
+    /// `restricted` enforces for allow-lists).
     pub fn set_registry(&self, registry: KernelRegistry) -> Result<()> {
         if registry.is_empty() {
             return Err(anyhow::anyhow!("kernel registry must not be empty"));
         }
         let base = Arc::new(registry);
-        *self.kernels.write().unwrap() = (base.clone(), base);
+        let active = Self::default_view(&base);
+        *self.kernels.write().unwrap() = (base, active);
         Ok(())
     }
 
     /// Restrict routing to an allow-list of kernel ids (`dispatch.kernels` /
-    /// `--kernels`), always relative to the full registered set. Rejects
-    /// unknown or unregistered ids and an empty list.
+    /// `--kernels`), always relative to the full registered set — so naming
+    /// `dense_i8`/`masked_i8` here is exactly how the sign-agreement class
+    /// becomes routable. Rejects unknown or unregistered ids and an empty
+    /// list.
     pub fn set_allowed_kernels(&self, allow: &[KernelId]) -> Result<()> {
         let mut guard = self.kernels.write().unwrap();
         let restricted = guard.0.restricted(allow).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -384,7 +412,8 @@ impl NativeBackend {
             let kernel = registry
                 .get(kid)
                 .expect("decide() only returns registered kernels");
-            let ops = LayerOperands::new(&self.net.weights[l], layer);
+            let ops =
+                LayerOperands::new(&self.net.weights[l], layer).with_quant(&self.quants[l]);
             let sp = ctx.metrics().span_with("kernel", Some(kid.as_str()));
             let computed = kernel.run(&ops, &a, &mask, ctx, &mut out);
             drop(sp);
@@ -771,13 +800,22 @@ mod tests {
         assert!((t[0] - 0.5).abs() < 1e-12 && (t[1] - 0.125).abs() < 1e-12, "{t:?}");
         assert_eq!(be.dispatch_thresholds().unwrap(), t);
         // The two layers now dispatch differently at the same density.
-        use crate::condcomp::{KernelId, BUILTIN_KERNELS};
+        // Float-class allow-list: the int8 ids are opt-in and their
+        // optimistic uncalibrated defaults would otherwise win the argmin.
+        use crate::condcomp::KernelId;
+        let float_kernels = [
+            KernelId::DENSE,
+            KernelId::DENSE_PACKED,
+            KernelId::DENSE_SIMD,
+            KernelId::MASKED,
+            KernelId::MASKED_SIMD,
+        ];
         assert_eq!(
-            table.policy_for(0).decide(4, 8, 12, 0.3, BUILTIN_KERNELS),
+            table.policy_for(0).decide(4, 8, 12, 0.3, &float_kernels),
             KernelId::MASKED
         );
         assert_eq!(
-            table.policy_for(1).decide(4, 12, 10, 0.3, BUILTIN_KERNELS),
+            table.policy_for(1).decide(4, 12, 10, 0.3, &float_kernels),
             KernelId::DENSE
         );
     }
@@ -871,6 +909,56 @@ mod tests {
         assert!(be.set_allowed_kernels(&[KernelId::PJRT]).is_err());
     }
 
+    /// Int8 kernels never route by default: the backend's active view
+    /// excludes the sign-agreement class until an allow-list names it, and
+    /// when it does, the quantized forward stays close to the float one
+    /// (sign-agreement drift, not garbage).
+    #[test]
+    fn quantized_kernels_route_only_when_allow_listed() {
+        use crate::condcomp::KernelId;
+        let be = native();
+        let default_ids = be.registry().ids();
+        assert!(
+            !default_ids.contains(&KernelId::DENSE_I8)
+                && !default_ids.contains(&KernelId::MASKED_I8),
+            "int8 class must be absent from default routing: {default_ids:?}"
+        );
+        assert!(default_ids.contains(&KernelId::DENSE));
+
+        let mut rng = Pcg32::seeded(79);
+        let x = Mat::randn(5, 8, 1.0, &mut rng);
+        be.set_allowed_kernels(&[KernelId::DENSE]).unwrap();
+        let (dense_logits, _) = be.predict(&x, Mode::ConditionalAe).unwrap();
+
+        // Opt in: only the int8 pair allowed → every hidden layer runs
+        // quantized, whichever of the two the cost table picks.
+        be.set_allowed_kernels(&[KernelId::DENSE_I8, KernelId::MASKED_I8]).unwrap();
+        assert_eq!(
+            be.registry().ids(),
+            vec![KernelId::DENSE_I8, KernelId::MASKED_I8]
+        );
+        let (q_logits, q_speedup) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        assert!(q_speedup.unwrap().is_finite());
+        let scale = dense_logits
+            .as_slice()
+            .iter()
+            .fold(0.0f32, |m, &v| m.max(v.abs()))
+            .max(1e-6);
+        let drift = q_logits.max_abs_diff(&dense_logits);
+        assert!(
+            drift <= 0.25 * scale,
+            "quantized logits drifted {drift} vs float magnitude {scale}"
+        );
+        // And repeated quantized predicts are bit-stable (integer exactness).
+        let (again, _) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        assert_eq!(again.as_slice(), q_logits.as_slice());
+
+        // Clearing back to a float allow-list restores bit-identical output.
+        be.set_allowed_kernels(&[KernelId::DENSE]).unwrap();
+        let (back, _) = be.predict(&x, Mode::ConditionalAe).unwrap();
+        assert_eq!(back.as_slice(), dense_logits.as_slice());
+    }
+
     /// Targeted recalibration: a backend whose table came from a pre-registry
     /// profile (dense + masked only) gains just the missing columns —
     /// measured — while the profile's masked columns survive untouched.
@@ -906,7 +994,13 @@ mod tests {
         let missing = profile.missing_kernel_columns(BUILTIN_KERNELS);
         assert_eq!(
             missing,
-            vec![KernelId::DENSE_PACKED, KernelId::DENSE_SIMD, KernelId::MASKED_SIMD]
+            vec![
+                KernelId::DENSE_PACKED,
+                KernelId::DENSE_SIMD,
+                KernelId::DENSE_I8,
+                KernelId::MASKED_SIMD,
+                KernelId::MASKED_I8,
+            ]
         );
         be.apply_profile(&profile, "partial.json").unwrap();
         let table = be.calibrate_kernel_columns(&missing, 40);

@@ -2,7 +2,7 @@
 
 use super::refresh::RefreshPolicy;
 use crate::config::EstimatorConfig;
-use crate::linalg::{LowRank, Mat, Svd};
+use crate::linalg::{LowRank, Mat, QuantizedLowRank, SimdCaps, Svd};
 use crate::exec::ExecCtx;
 use crate::nn::mlp::{ActivationGater, Mlp};
 use crate::nn::trainer::TrainGater;
@@ -18,6 +18,12 @@ use crate::util::Pcg32;
 #[derive(Clone, Debug)]
 pub struct SignEstimator {
     pub factors: LowRank,
+    /// Int8-quantized factors ([`Self::quantize_factors`]). When present,
+    /// full-rank mask production runs both estimator stages on exact i8
+    /// dots (the quantized estimator apply path); `None` keeps the float
+    /// path. Rank-truncated elastic masks always stay float (see
+    /// [`Self::mask_into_ctx_rank`]).
+    pub qfactors: Option<QuantizedLowRank>,
     pub layer_bias: Vec<f32>,
     pub bias: f32,
 }
@@ -27,6 +33,7 @@ impl SignEstimator {
     pub fn fit(w: &Mat, layer_bias: &[f32], rank: usize, bias: f32) -> SignEstimator {
         SignEstimator {
             factors: LowRank::truncate(w, rank),
+            qfactors: None,
             layer_bias: layer_bias.to_vec(),
             bias,
         }
@@ -42,16 +49,28 @@ impl SignEstimator {
     ) -> SignEstimator {
         SignEstimator {
             factors: LowRank::randomized(w, rank, 8, rng),
+            qfactors: None,
             layer_bias: layer_bias.to_vec(),
             bias,
         }
+    }
+
+    /// Quantize the fitted factors (symmetric per-row int8). The estimator
+    /// only needs the *sign* of `a·U·V + b`, so quantization error — bounded
+    /// by the per-row step — costs almost no mask accuracy while the apply
+    /// path drops to ~4× narrower arithmetic. Call again after each
+    /// [`SignEstimatorSet::refresh`]-style refit; the set does this
+    /// automatically when `estimator.quantized` is on.
+    pub fn quantize_factors(&mut self) {
+        self.qfactors = Some(QuantizedLowRank::quantize(&self.factors));
     }
 
     pub fn rank(&self) -> usize {
         self.factors.rank()
     }
 
-    /// The estimated pre-activation `a·U·V + b_layer`.
+    /// The estimated pre-activation `a·U·V + b_layer`. Always the float
+    /// factors — the test oracle the quantized path is judged against.
     pub fn estimate_preact(&self, input: &Mat) -> Mat {
         let mut z = self.factors.apply(input);
         crate::nn::mlp::add_bias(&mut z, &self.layer_bias);
@@ -59,25 +78,58 @@ impl SignEstimator {
     }
 
     /// The paper's `S` matrix (Eq. 5): 1 where the estimated pre-activation
-    /// exceeds the decision bias, else 0.
+    /// exceeds the decision bias, else 0. Allocating wrapper over
+    /// [`Self::mask_into`], so float/quantized routing lives in one place.
     pub fn mask(&self, input: &Mat) -> Mat {
-        let mut z = self.estimate_preact(input);
-        let b = self.bias;
-        z.map_inplace(|v| if v - b > 0.0 { 1.0 } else { 0.0 });
-        z
+        let mut out = Mat::zeros(input.rows(), self.layer_bias.len());
+        self.mask_into(input, &mut out);
+        out
     }
 
-    /// [`Self::mask`] into a caller-owned buffer (overwritten, not
-    /// accumulated — dirty reused buffers need no clearing). Runs the
-    /// low-rank product through the view GEMM, which keeps the serial
-    /// kernel's accumulation order, so the result is bit-identical to
-    /// [`Self::mask`]. This is the buffer-reusing serial oracle behind
+    /// Quantized mask rows `row0..row0+rows` into `band` (a shard of the
+    /// output matrix). Scratch is per call — i.e. per shard — and every row
+    /// depends only on its own input data plus the shared quantized factors,
+    /// so sharding never changes a bit of the result.
+    fn mask_rows_quant(
+        &self,
+        q: &QuantizedLowRank,
+        caps: SimdCaps,
+        input: &Mat,
+        row0: usize,
+        band: &mut [f32],
+    ) {
+        let h = self.layer_bias.len();
+        let rows = band.len() / h;
+        let k = q.rank();
+        let mut qx = vec![0i8; q.in_dim()];
+        let mut tmp = vec![0.0f32; k];
+        let mut qt = vec![0i8; k];
+        let b = self.bias;
+        for i in 0..rows {
+            let zrow = &mut band[i * h..(i + 1) * h];
+            q.preact_row_into(caps, input.row(row0 + i), &mut qx, &mut tmp, &mut qt, zrow);
+            for (slot, &lb) in zrow.iter_mut().zip(&self.layer_bias) {
+                *slot = if *slot + lb - b > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+    }
+
+    /// The serial mask into a caller-owned buffer (overwritten, not
+    /// accumulated — dirty reused buffers need no clearing). The float path
+    /// runs the low-rank product through the view GEMM, which keeps the
+    /// serial kernel's accumulation order; when [`Self::quantize_factors`]
+    /// has run, rows route through the exact-integer quantized apply
+    /// instead. Either way this is the buffer-reusing serial oracle behind
     /// [`Self::mask_into_ctx`]: the serving backend recycles one mask buffer
     /// per layer per batch instead of allocating a fresh `Mat` each time.
     pub fn mask_into(&self, input: &Mat, out: &mut Mat) {
         let n = input.rows();
         let h = self.layer_bias.len();
         assert_eq!(out.shape(), (n, h), "mask output shape mismatch");
+        if let Some(q) = &self.qfactors {
+            self.mask_rows_quant(q, SimdCaps::get(), input, 0, out.as_mut_slice());
+            return;
+        }
         let rank = self.factors.rank();
         let mut tmp = vec![0.0f32; n * rank];
         self.factors.apply_view_into(input.view(), &mut tmp, out.as_mut_slice());
@@ -94,7 +146,8 @@ impl SignEstimator {
 
     /// [`Self::mask_into`] on an execution target: row shards in parallel,
     /// bit-identical to the serial form for any thread count or lease width
-    /// (same argument as [`Self::mask_par`]).
+    /// (same argument as [`Self::mask_par`]; the quantized path's rows are
+    /// likewise shard-independent with exact integer accumulation).
     pub fn mask_into_par<P: Parallelism>(&self, input: &Mat, out: &mut Mat, par: &P) {
         let n = input.rows();
         let h = self.layer_bias.len();
@@ -105,6 +158,13 @@ impl SignEstimator {
             return;
         }
         let rows_per = chunk_rows(n, par.width(), 1);
+        if let Some(q) = &self.qfactors {
+            let caps = SimdCaps::get();
+            par_row_chunks(par, out, rows_per, |row0, band| {
+                self.mask_rows_quant(q, caps, input, row0, band);
+            });
+            return;
+        }
         let b = self.bias;
         let rank = self.factors.rank();
         par_row_chunks(par, out, rows_per, |row0, band| {
@@ -130,10 +190,14 @@ impl SignEstimator {
 
     /// [`Self::mask_into_ctx`] with an explicit estimator rank override —
     /// the quality-elastic serving path. At `rank >= self.rank()` this is
-    /// the unmodified (bit-identical) full-rank path; below it the low-rank
+    /// the unmodified (bit-identical) full-rank path — including the
+    /// quantized route when factors are quantized; below it the low-rank
     /// product uses only the leading `rank` SVD factors, trading sign
     /// accuracy for proportionally fewer estimator FLOPs while the server
-    /// rides out an overload spike.
+    /// rides out an overload spike. Truncation always runs the *float*
+    /// factors: the quantized form stores transposed whole-factor rows, so
+    /// a leading-rank slice would need a re-quantization pass per width —
+    /// not worth it for a transient degraded mode.
     pub fn mask_into_ctx_rank(
         &self,
         input: &Mat,
@@ -267,7 +331,7 @@ impl SignEstimatorSet {
         let mut layers = Vec::with_capacity(hidden_layers);
         for l in 0..hidden_layers {
             let rank = self.rank_for(net, l);
-            let est = if self.cfg.randomized {
+            let mut est = if self.cfg.randomized {
                 SignEstimator::fit_randomized(
                     &net.weights[l],
                     &net.biases[l],
@@ -278,6 +342,11 @@ impl SignEstimatorSet {
             } else {
                 SignEstimator::fit(&net.weights[l], &net.biases[l], rank, self.cfg.bias)
             };
+            if self.cfg.quantized {
+                // Re-quantize on every refresh so the int8 factors never go
+                // stale relative to the float factors they mirror.
+                est.quantize_factors();
+            }
             layers.push(est);
         }
         self.layers = layers;
@@ -470,6 +539,70 @@ mod tests {
             want.as_slice(),
             "rank-2 truncation should change at least one decision here"
         );
+    }
+
+    /// The quantized estimator apply: bit-identical to its own serial form
+    /// at every thread count and lease width (exact integer arithmetic,
+    /// row-independent shards), and in high sign-agreement with the float
+    /// mask it mirrors.
+    #[test]
+    fn quantized_masks_are_thread_invariant_and_agree_with_float() {
+        use crate::exec::ExecCtx;
+        let mut rng = Pcg32::seeded(91);
+        let w = Mat::randn(30, 80, 0.3, &mut rng);
+        let bias: Vec<f32> = (0..80).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let mut est = SignEstimator::fit(&w, &bias, 6, 0.05);
+        let x = Mat::randn(90, 30, 1.0, &mut rng);
+        let float_mask = est.mask(&x);
+        est.quantize_factors();
+        let qmask = est.mask(&x);
+        assert!(qmask.as_slice().iter().all(|&v| v == 0.0 || v == 1.0));
+        let agree = float_mask
+            .as_slice()
+            .iter()
+            .zip(qmask.as_slice())
+            .filter(|(a, b)| a == b)
+            .count() as f32
+            / qmask.as_slice().len() as f32;
+        assert!(agree >= 0.95, "quantized mask agrees with float only {agree}");
+        for threads in [1usize, 2, 7] {
+            let pool = crate::parallel::ThreadPool::new(threads);
+            for grant in [1usize, threads] {
+                let mut out = Mat::full(90, 80, f32::NAN); // dirty buffer
+                let mut ctx = ExecCtx::over(pool.lease(grant));
+                est.mask_into_ctx(&x, &mut out, &mut ctx);
+                assert_eq!(
+                    out.as_slice(),
+                    qmask.as_slice(),
+                    "threads={threads} lease={grant}"
+                );
+            }
+            assert_eq!(pool.leased(), 0);
+        }
+        // The elastic full-rank override routes quantized too; a truncated
+        // rank falls back to the float factors by contract.
+        let pool = crate::parallel::ThreadPool::new(2);
+        let mut ctx = ExecCtx::over(pool.lease(2));
+        let mut out = Mat::full(90, 80, f32::NAN);
+        est.mask_into_ctx_rank(&x, &mut out, 6, &mut ctx);
+        assert_eq!(out.as_slice(), qmask.as_slice(), "full-rank override");
+    }
+
+    #[test]
+    fn estimator_set_quantizes_on_refresh_when_configured() {
+        let mut rng = Pcg32::seeded(92);
+        let n = net(&mut rng);
+        let cfg = EstimatorConfig { quantized: true, ..EstimatorConfig::fixed(&[5, 4]) };
+        let set = SignEstimatorSet::fit(&n, &cfg, 9);
+        assert!(
+            set.layers.iter().all(|e| e.qfactors.is_some()),
+            "estimator.quantized must quantize every layer at refresh"
+        );
+        let float_set = SignEstimatorSet::fit(&n, &EstimatorConfig::fixed(&[5, 4]), 9);
+        assert!(float_set.layers.iter().all(|e| e.qfactors.is_none()));
+        let x = Mat::randn(6, 10, 1.0, &mut rng);
+        let m = set.gate(0, &x).unwrap();
+        assert!(m.as_slice().iter().all(|&v| v == 0.0 || v == 1.0));
     }
 
     #[test]

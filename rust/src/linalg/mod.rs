@@ -12,12 +12,17 @@
 //!   per-epoch estimator refresh (§3.2).
 //! - [`lowrank`] — truncated factorization `W ≈ U·V` with the paper's
 //!   convention `U = U_r`, `V = Σ_r V_rᵀ`.
+//! - [`quant`] — symmetric per-row int8 quantization: exact i8 dot kernels
+//!   (AVX2/NEON/scalar, bit-identical by integer exactness), quantized
+//!   layers and low-rank factors; sign-agreement tier against the f32
+//!   oracles.
 
 pub mod matrix;
 pub mod gemm;
 pub mod simd;
 pub mod svd;
 pub mod lowrank;
+pub mod quant;
 
 pub use gemm::{
     matmul, matmul_auto, matmul_auto_ctx, matmul_into, matmul_into_auto, matmul_into_auto_ctx,
@@ -25,6 +30,7 @@ pub use gemm::{
     matmul_into_par, matmul_par, matmul_view_into,
 };
 pub use simd::{dot_simd, matmul_into_simd, matmul_into_simd_ctx, matmul_into_simd_par, SimdCaps};
+pub use quant::{dot_i8, quantize_row_into, QuantizedLayer, QuantizedLowRank, QuantizedMat};
 pub use lowrank::LowRank;
 pub use matrix::{Mat, MatView};
 pub use svd::Svd;

@@ -1,0 +1,615 @@
+//! Symmetric per-row int8 quantization (`dense_i8` / `masked_i8` backing).
+//!
+//! The quantization scheme is the standard symmetric per-row one: for each
+//! row, `scale = max_abs / 127` and `q = round(x / scale)` clamped to
+//! `[-127, 127]` (an all-zero row stores scale `0.0` and all-zero codes).
+//! Weights are quantized **once** at model-prep time ([`QuantizedMat`] /
+//! [`QuantizedLayer`]); activations are quantized per input row at run time,
+//! amortized over the `h` output dot products that consume the row.
+//!
+//! Numeric contract — stronger than the f32 SIMD kernels':
+//!
+//! - **Integer accumulation is exact.** `i8 × i8` products are at most
+//!   `127² = 16129`, so an `i32` accumulator is exact up to reduction
+//!   lengths of ~133 000 elements — far beyond any layer in this crate.
+//!   Exact integer addition is associative, so **every ISA path, thread
+//!   count, lease width and accumulation order produces identical bits**
+//!   with no mirrored-accumulator ceremony: `CONDCOMP_FORCE_SCALAR`,
+//!   AVX2 and NEON all agree by construction.
+//! - **Against the f32 oracles the kernels are sign-agreement tier.** The
+//!   quantization error per dot product is bounded but not zero; the
+//!   registry declares `EquivalenceTier::SignAgree` for the value contract
+//!   (see `condcomp::registry`), and the property suites pin the
+//!   round-trip error bound `|dequant(q) − x| ≤ scale / 2` per element.
+//!
+//! The AVX2 path sign-extends 16 codes to i16 (`_mm256_cvtepi8_epi16`) and
+//! uses `_mm256_madd_epi16` — pairwise i16 products summed into i32 lanes;
+//! products of sign-extended i8 can never saturate the i16 multiply. The
+//! NEON path widens with `vmull_s8` and folds with `vpadalq_s16`.
+
+use super::lowrank::LowRank;
+use super::matrix::Mat;
+use super::simd::SimdCaps;
+use crate::exec::ExecCtx;
+use crate::parallel::{chunk_rows, par_row_chunks, Parallelism};
+
+/// Codes consumed per i8-dot loop iteration (one 128-bit lane of i8s).
+const QDOT_STEP: usize = 16;
+
+/// Quantize one row: `dst[i] = round(src[i] · 127 / max_abs)` clamped to
+/// `[-127, 127]`; returns the per-row scale `max_abs / 127` (so
+/// `src[i] ≈ dst[i] · scale`). An all-zero (or empty) row stores all-zero
+/// codes and returns scale `0.0`.
+pub fn quantize_row_into(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let max_abs = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / max_abs;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    max_abs / 127.0
+}
+
+/// Scalar i8 dot product — exact, and therefore bit-identical to every
+/// vector path below regardless of accumulation order.
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+/// i8 dot with 16-code AVX2 steps: sign-extend to i16, `madd` pairs into
+/// i32 lanes, reduce, scalar tail.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available on the running CPU.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let split = (n / QDOT_STEP) * QDOT_STEP;
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < split {
+        let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        let wa = _mm256_cvtepi8_epi16(va);
+        let wb = _mm256_cvtepi8_epi16(vb);
+        // i16 products of sign-extended i8s are ≤ 127² — no saturation, and
+        // each madd lane adds at most 2·16129 to an exact i32 accumulator.
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+        i += QDOT_STEP;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut s: i32 = lanes.iter().sum();
+    for (&x, &y) in a[split..].iter().zip(&b[split..]) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+/// i8 dot with 16-code NEON steps: widen with `vmull_s8`, fold with
+/// `vpadalq_s16`, reduce, scalar tail.
+///
+/// # Safety
+/// Caller must ensure NEON is available on the running CPU.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let split = (n / QDOT_STEP) * QDOT_STEP;
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0;
+    while i < split {
+        let va = vld1q_s8(a.as_ptr().add(i));
+        let vb = vld1q_s8(b.as_ptr().add(i));
+        let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+        let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+        acc = vpadalq_s16(acc, lo);
+        acc = vpadalq_s16(acc, hi);
+        i += QDOT_STEP;
+    }
+    let mut s = vaddvq_s32(acc);
+    for (&x, &y) in a[split..].iter().zip(&b[split..]) {
+        s += x as i32 * y as i32;
+    }
+    s
+}
+
+/// Exact i8 dot product — the `dense_i8` / `masked_i8` inner kernel. Every
+/// ISA path computes the same integer (exact arithmetic is associative).
+#[inline]
+pub fn dot_i8(caps: SimdCaps, a: &[i8], b: &[i8]) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    if caps.use_avx2() {
+        // SAFETY: use_avx2() gates on runtime AVX2 detection.
+        return unsafe { dot_i8_avx2(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if caps.use_neon() {
+        // SAFETY: use_neon() gates on runtime NEON detection.
+        return unsafe { dot_i8_neon(a, b) };
+    }
+    let _ = caps;
+    dot_i8_scalar(a, b)
+}
+
+/// A row-major matrix quantized to i8 with one f32 scale per row:
+/// `original[r, c] ≈ q[r, c] · scale[r]`.
+#[derive(Clone, Debug)]
+pub struct QuantizedMat {
+    rows: usize,
+    cols: usize,
+    q: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantizedMat {
+    /// Quantize a dense matrix row by row (symmetric, per-row scales).
+    pub fn quantize(m: &Mat) -> QuantizedMat {
+        let (rows, cols) = m.shape();
+        let mut q = vec![0i8; rows * cols];
+        let mut scales = vec![0.0f32; rows];
+        if cols > 0 {
+            for ((r, dst), scale) in q.chunks_exact_mut(cols).enumerate().zip(scales.iter_mut()) {
+                *scale = quantize_row_into(m.row(r), dst);
+            }
+        }
+        QuantizedMat { rows, cols, q, scales }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow row `r`'s codes.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        debug_assert!(r < self.rows);
+        &self.q[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Row `r`'s scale (`0.0` for an all-zero row).
+    #[inline]
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    #[inline]
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Materialize `q[r, c] · scale[r]` (tests, diagnostics).
+    pub fn dequantize(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| {
+            self.q[r * self.cols + c] as f32 * self.scales[r]
+        })
+    }
+}
+
+/// A layer prepared for int8 conditional execution: quantized transposed
+/// weights (one scale per output unit) + f32 bias. The arithmetic mirror of
+/// [`crate::condcomp::MaskedLayer`], built from its already-transposed
+/// weight matrix.
+#[derive(Clone, Debug)]
+pub struct QuantizedLayer {
+    /// Quantized `Wᵀ`: `h × d`, row `j` is output unit `j`'s weights.
+    pub wt: QuantizedMat,
+    pub bias: Vec<f32>,
+}
+
+impl QuantizedLayer {
+    /// Quantize from the transposed weight matrix (`h × d`, as stored by
+    /// `MaskedLayer::wt`) and its bias.
+    pub fn new(wt: &Mat, bias: &[f32]) -> QuantizedLayer {
+        assert_eq!(wt.rows(), bias.len(), "bias length != output dim");
+        QuantizedLayer { wt: QuantizedMat::quantize(wt), bias: bias.to_vec() }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.wt.cols()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.wt.rows()
+    }
+
+    fn check_shapes(&self, a: &Mat, mask: &Mat, out: &Mat) {
+        let (n, d) = a.shape();
+        let h = self.out_dim();
+        assert_eq!(d, self.in_dim(), "input dim mismatch");
+        assert_eq!(mask.shape(), (n, h), "mask shape mismatch");
+        assert_eq!(out.shape(), (n, h), "output shape mismatch");
+    }
+
+    /// One output row of the int8 path. `qx` must hold the row's quantized
+    /// input (scale `sx`). With `compute_all` every dot product runs and the
+    /// mask only gates the output (`dense_i8`: count is `h`); without it,
+    /// dead entries skip the dot entirely (`masked_i8`: count is the live
+    /// entries). Either way the output function is `σ(a·W + b) ⊙ S` in
+    /// quantized arithmetic.
+    #[inline]
+    fn row_i8(
+        &self,
+        caps: SimdCaps,
+        qx: &[i8],
+        sx: f32,
+        mrow: &[f32],
+        orow: &mut [f32],
+        compute_all: bool,
+    ) -> usize {
+        let mut computed = 0usize;
+        for (j, out) in orow.iter_mut().enumerate() {
+            let live = mrow[j] != 0.0;
+            if compute_all || live {
+                let acc = dot_i8(caps, qx, self.wt.row(j));
+                let z = acc as f32 * (sx * self.wt.scale(j)) + self.bias[j];
+                *out = if z > 0.0 && live { z } else { 0.0 };
+                computed += 1;
+            } else {
+                *out = 0.0;
+            }
+        }
+        computed
+    }
+
+    /// Serial int8 forward into a caller-owned buffer (overwritten, not
+    /// accumulated). Each input row is quantized once, then consumed by all
+    /// its dot products. Returns the number of dot products computed.
+    pub fn forward_i8_into(
+        &self,
+        caps: SimdCaps,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        compute_all: bool,
+    ) -> usize {
+        self.check_shapes(a, mask, out);
+        let n = a.rows();
+        let mut qx = vec![0i8; self.in_dim()];
+        let mut computed = 0usize;
+        for i in 0..n {
+            let sx = quantize_row_into(a.row(i), &mut qx);
+            computed += self.row_i8(caps, &qx, sx, mask.row(i), out.row_mut(i), compute_all);
+        }
+        computed
+    }
+
+    /// Parallel [`Self::forward_i8_into`] on an execution target: batch rows
+    /// sharded across workers, per-shard counts summed in shard order. Rows
+    /// are quantized independently and integer accumulation is exact, so
+    /// output and count are bit-identical to the serial kernel for any
+    /// thread count or lease width.
+    pub fn forward_i8_par<P: Parallelism>(
+        &self,
+        caps: SimdCaps,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        compute_all: bool,
+        par: &P,
+    ) -> usize {
+        self.check_shapes(a, mask, out);
+        let n = a.rows();
+        let h = self.out_dim();
+        if par.width() == 1 || n < 2 || h == 0 {
+            return self.forward_i8_into(caps, a, mask, out, compute_all);
+        }
+        let rows_per = chunk_rows(n, par.width(), 1);
+        let counts = par_row_chunks(par, out, rows_per, |row0, band| {
+            let rows = band.len() / h;
+            let mut qx = vec![0i8; self.in_dim()];
+            let mut computed = 0usize;
+            for i in 0..rows {
+                let sx = quantize_row_into(a.row(row0 + i), &mut qx);
+                computed += self.row_i8(
+                    caps,
+                    &qx,
+                    sx,
+                    mask.row(row0 + i),
+                    &mut band[i * h..(i + 1) * h],
+                    compute_all,
+                );
+            }
+            computed
+        });
+        counts.iter().sum()
+    }
+
+    /// [`Self::forward_i8_par`] through an execution context: chunked by the
+    /// ctx's lease width — the `dense_i8` / `masked_i8` registry entry point.
+    pub fn forward_i8_ctx(
+        &self,
+        caps: SimdCaps,
+        a: &Mat,
+        mask: &Mat,
+        out: &mut Mat,
+        compute_all: bool,
+        ctx: &mut ExecCtx<'_>,
+    ) -> usize {
+        self.forward_i8_par(caps, a, mask, out, compute_all, ctx.lease())
+    }
+}
+
+/// Int8-quantized low-rank factors for the sign estimator: the estimator
+/// only needs the **sign** of `a·U·V + b`, so aggressive quantization of
+/// both stages costs almost no mask accuracy (the bet this module exists to
+/// cash). Factors are stored transposed so each stage is contiguous dots.
+#[derive(Clone, Debug)]
+pub struct QuantizedLowRank {
+    /// Quantized `Uᵀ`: `k × d`, row `p` is factor direction `p`.
+    pub ut: QuantizedMat,
+    /// Quantized `Vᵀ`: `h × k`, row `j` is output unit `j`'s mixing weights.
+    pub vt: QuantizedMat,
+}
+
+impl QuantizedLowRank {
+    /// Quantize an f32 factorization (both stages, per-row scales).
+    pub fn quantize(lr: &LowRank) -> QuantizedLowRank {
+        QuantizedLowRank {
+            ut: QuantizedMat::quantize(&lr.u.transpose()),
+            vt: QuantizedMat::quantize(&lr.v.transpose()),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.ut.rows()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.ut.cols()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.vt.rows()
+    }
+
+    /// One row of the quantized pre-activation estimate `x·U·V` (no layer
+    /// bias — the caller adds it before thresholding). Scratch: `qx` holds
+    /// `in_dim` codes, `tmp`/`qt` hold `rank` f32s/codes; `out` receives
+    /// `out_dim` values. The intermediate `x·U` is re-quantized per row
+    /// (dynamic, like the activations), so both stages run on i8 dots.
+    /// Deterministic: depends only on this row's data, never on sharding.
+    pub fn preact_row_into(
+        &self,
+        caps: SimdCaps,
+        x: &[f32],
+        qx: &mut [i8],
+        tmp: &mut [f32],
+        qt: &mut [i8],
+        out: &mut [f32],
+    ) {
+        let k = self.rank();
+        debug_assert_eq!(x.len(), self.in_dim());
+        debug_assert!(qx.len() == x.len() && tmp.len() >= k && qt.len() >= k);
+        debug_assert_eq!(out.len(), self.out_dim());
+        let sx = quantize_row_into(x, qx);
+        for (p, t) in tmp[..k].iter_mut().enumerate() {
+            *t = dot_i8(caps, qx, self.ut.row(p)) as f32 * (sx * self.ut.scale(p));
+        }
+        let st = quantize_row_into(&tmp[..k], &mut qt[..k]);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot_i8(caps, &qt[..k], self.vt.row(j)) as f32 * (st * self.vt.scale(j));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecCtx;
+    use crate::parallel::ThreadPool;
+    use crate::util::proptest::property;
+    use crate::util::Pcg32;
+
+    /// Round-trip bound: `|dequant − x| ≤ scale / 2` per element (half a
+    /// quantization step), and the scale is exactly `max_abs / 127`.
+    #[test]
+    fn quantize_round_trip_error_is_bounded_by_half_a_step() {
+        property("|dequant - x| <= scale/2", 48, |rng| {
+            let n = rng.index(200) + 1;
+            let src: Vec<f32> = (0..n).map(|_| rng.uniform_in(-3.0, 3.0)).collect();
+            let mut q = vec![0i8; n];
+            let scale = quantize_row_into(&src, &mut q);
+            let max_abs = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert_eq!(scale, max_abs / 127.0, "scale is exactly max_abs/127");
+            let bound = scale * 0.5 + 1e-6;
+            for (&code, &x) in q.iter().zip(&src) {
+                assert!((-127..=127).contains(&(code as i32)));
+                let back = code as f32 * scale;
+                assert!(
+                    (back - x).abs() <= bound,
+                    "x={x} code={code} back={back} scale={scale}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn all_zero_rows_quantize_to_zero_scale_and_codes() {
+        let mut q = vec![7i8; 5];
+        assert_eq!(quantize_row_into(&[0.0; 5], &mut q), 0.0);
+        assert!(q.iter().all(|&c| c == 0));
+        // Empty rows are fine too.
+        assert_eq!(quantize_row_into(&[], &mut []), 0.0);
+        // And a QuantizedMat with an all-zero row dequantizes to zeros.
+        let m = Mat::from_vec(2, 3, vec![0.0, 0.0, 0.0, 1.0, -2.0, 0.5]);
+        let qm = QuantizedMat::quantize(&m);
+        assert_eq!(qm.scale(0), 0.0);
+        assert!(qm.row(0).iter().all(|&c| c == 0));
+        assert!(qm.scale(1) > 0.0);
+        assert!(qm.dequantize().row(0).iter().all(|&v| v == 0.0));
+    }
+
+    /// The i8 dot is exact: it equals a wide-integer reference on every ISA
+    /// path, including tail-only and empty inputs.
+    #[test]
+    fn dot_i8_is_exact_on_every_isa_path() {
+        let native = SimdCaps::get();
+        let scalar = SimdCaps::scalar();
+        property("dot_i8 == i64 reference", 64, |rng| {
+            let n = rng.index(200);
+            let a: Vec<i8> = (0..n).map(|_| (rng.index(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.index(255) as i32 - 127) as i8).collect();
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(dot_i8(native, &a, &b) as i64, want, "native n={n}");
+            assert_eq!(dot_i8(scalar, &a, &b) as i64, want, "scalar n={n}");
+        });
+        assert_eq!(dot_i8(native, &[], &[]), 0);
+        // 15 codes: below one QDOT_STEP, pure tail.
+        let x = [3i8; 15];
+        let y = [-2i8; 15];
+        assert_eq!(dot_i8(native, &x, &y), -90);
+        assert_eq!(dot_i8(scalar, &x, &y), -90);
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Determinism contract: parallel/ctx runs of the i8 forward are
+    /// bit-identical (output and count) to the serial kernel at threads
+    /// {1, 2, 7} × lease widths, for both the dense and masked forms, under
+    /// both the native and forced-scalar caps.
+    #[test]
+    fn forward_i8_parallel_is_bit_identical_to_serial() {
+        let mut rng = Pcg32::seeded(0x18A);
+        let (n, d, h) = (37, 45, 19);
+        let a = Mat::randn(n, d, 1.0, &mut rng);
+        let w = Mat::randn(d, h, 1.0, &mut rng);
+        let wt = w.transpose();
+        let b: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let mask = Mat::from_fn(n, h, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+        let layer = QuantizedLayer::new(&wt, &b);
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            for compute_all in [true, false] {
+                let mut want = Mat::full(n, h, f32::NAN);
+                let want_count = layer.forward_i8_into(caps, &a, &mask, &mut want, compute_all);
+                if compute_all {
+                    assert_eq!(want_count, n * h);
+                } else {
+                    let live = mask.as_slice().iter().filter(|&&m| m != 0.0).count();
+                    assert_eq!(want_count, live);
+                }
+                for threads in [1usize, 2, 7] {
+                    let pool = ThreadPool::new(threads);
+                    let mut got = Mat::full(n, h, f32::NAN);
+                    let count =
+                        layer.forward_i8_par(caps, &a, &mask, &mut got, compute_all, &pool);
+                    assert_eq!(count, want_count, "threads={threads}");
+                    assert_eq!(bits(got.as_slice()), bits(want.as_slice()), "threads={threads}");
+                    for grant in [0usize, 1, threads] {
+                        let mut ctx = ExecCtx::over(pool.lease(grant));
+                        let mut via_ctx = Mat::full(n, h, f32::NAN);
+                        let count = layer
+                            .forward_i8_ctx(caps, &a, &mask, &mut via_ctx, compute_all, &mut ctx);
+                        assert_eq!(count, want_count, "ctx lease {grant}");
+                        assert_eq!(bits(via_ctx.as_slice()), bits(want.as_slice()));
+                    }
+                    assert_eq!(pool.leased(), 0);
+                }
+            }
+        }
+        // Cross-ISA: native and forced-scalar paths agree bitwise (exact
+        // integer arithmetic — no mirrored-accumulator caveats needed).
+        let mut native_out = Mat::full(n, h, f32::NAN);
+        let mut scalar_out = Mat::full(n, h, f32::NAN);
+        layer.forward_i8_into(SimdCaps::get(), &a, &mask, &mut native_out, false);
+        layer.forward_i8_into(SimdCaps::scalar(), &a, &mask, &mut scalar_out, false);
+        assert_eq!(bits(native_out.as_slice()), bits(scalar_out.as_slice()));
+    }
+
+    /// The int8 forward tracks the f32 masked forward: identical gating
+    /// pattern (dead entries exactly zero) and values within the combined
+    /// activation+weight quantization error envelope.
+    #[test]
+    fn forward_i8_tracks_the_float_forward() {
+        use crate::condcomp::MaskedLayer;
+        property("i8 forward ≈ f32 forward", 12, |rng| {
+            let n = rng.index(8) + 1;
+            let d = rng.index(40) + 4;
+            let h = rng.index(16) + 1;
+            let a = Mat::randn(n, d, 1.0, rng);
+            let w = Mat::randn(d, h, 1.0, rng);
+            let b: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+            let mask = Mat::from_fn(n, h, |_, _| if rng.bernoulli(0.6) { 1.0 } else { 0.0 });
+            let float = MaskedLayer::new(&w, &b);
+            let quant = QuantizedLayer::new(&float.wt, &b);
+            let (want, _) = float.forward_masked(&a, &mask);
+            let mut got = Mat::full(n, h, f32::NAN);
+            quant.forward_i8_into(SimdCaps::get(), &a, &mask, &mut got, false);
+            // Error envelope: each of d products carries ~scale_x·scale_w/2
+            // of rounding; use a generous multiple to keep the test stable.
+            for i in 0..n {
+                let ax = a.row(i).iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                for j in 0..h {
+                    if mask[(i, j)] == 0.0 {
+                        assert_eq!(got[(i, j)], 0.0);
+                        continue;
+                    }
+                    let wx = quant.wt.scale(j) * 127.0;
+                    let tol = (d as f32).sqrt() * ax * wx / 127.0 + 1e-3;
+                    let (g, o) = (got[(i, j)], want[(i, j)]);
+                    // ReLU can zero one side near the boundary; the preacts
+                    // still agree within the envelope then.
+                    assert!(
+                        (g - o).abs() <= tol || (g.max(o)) <= tol,
+                        "({i},{j}) got={g} want={o} tol={tol}"
+                    );
+                }
+            }
+        });
+    }
+
+    /// The quantized low-rank pre-activation is deterministic across ISA
+    /// paths and stays close to the float factorization's apply.
+    #[test]
+    fn quantized_lowrank_preact_is_deterministic_and_close() {
+        let mut rng = Pcg32::seeded(0x0051);
+        let (d, h, k) = (24, 18, 6);
+        let w = Mat::randn(d, h, 1.0, &mut rng);
+        let lr = LowRank::truncate(&w, k);
+        let q = QuantizedLowRank::quantize(&lr);
+        assert_eq!(q.rank(), lr.rank());
+        assert_eq!((q.in_dim(), q.out_dim()), (d, h));
+        let x: Vec<f32> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let xm = Mat::from_vec(1, d, x.clone());
+        let want = lr.apply(&xm);
+        let mut qx = vec![0i8; d];
+        let mut tmp = vec![0.0f32; lr.rank()];
+        let mut qt = vec![0i8; lr.rank()];
+        let mut native_out = vec![f32::NAN; h];
+        let mut scalar_out = vec![f32::NAN; h];
+        q.preact_row_into(SimdCaps::get(), &x, &mut qx, &mut tmp, &mut qt, &mut native_out);
+        q.preact_row_into(SimdCaps::scalar(), &x, &mut qx, &mut tmp, &mut qt, &mut scalar_out);
+        assert_eq!(bits(&native_out), bits(&scalar_out), "ISA paths agree bitwise");
+        let scale = want.as_slice().iter().fold(0.1f32, |m, &v| m.max(v.abs()));
+        for (j, (&g, &o)) in native_out.iter().zip(want.as_slice()).enumerate() {
+            assert!((g - o).abs() <= scale * 0.15, "[{j}] got={g} want={o}");
+        }
+    }
+}

@@ -43,11 +43,14 @@
 //! Every subcommand accepts `--threads N` to size the shared compute pool
 //! (0 = auto). Each parallel kernel matches its serial oracle within its
 //! declared equivalence tier — bit-exact for the scalar kernels, a bounded
-//! ULP tolerance for the `*_simd` kernels — and is individually
-//! deterministic, so for a fixed dispatch policy the knob changes
-//! wall-clock only, never results. (`CONDCOMP_FORCE_SCALAR=1` pins the
-//! SIMD kernels to their scalar mirrors, which is bit-identical to the
-//! vector path by construction.) The one caveat is `serve`: its startup
+//! ULP tolerance for the `*_simd` kernels, aggregate sign agreement for
+//! the int8 `*_i8` kernels (which route only when explicitly allow-listed)
+//! — and is individually deterministic, so for a fixed dispatch policy the
+//! knob changes wall-clock only, never results. (`CONDCOMP_FORCE_SCALAR=1`
+//! pins the SIMD kernels to their scalar mirrors, which is bit-identical
+//! to the vector path by construction; the int8 kernels' i32 accumulators
+//! are exact, so their ISA paths are bit-identical everywhere.) The one
+//! caveat is `serve`: its startup
 //! *calibration* is a timing measurement, so across runs the dispatch
 //! policy may pick a different (tier-equivalent) kernel near the threshold
 //! density.
@@ -286,7 +289,14 @@ fn prepare_native_backend(
             profile.scale_ranks(&base, &paper)
         }
     };
-    let est = SignEstimatorSet::fit(&net, &EstimatorConfig::fixed(&ranks), 7);
+    // `estimator.quantized` swaps the estimator's low-rank apply onto
+    // quantized int8 factors (sign-agreement accuracy, ~4× narrower math).
+    let mut est_cfg = EstimatorConfig::fixed(&ranks);
+    est_cfg.quantized = profile.estimator.quantized;
+    if est_cfg.quantized {
+        eprintln!("estimator: int8-quantized low-rank factors (estimator.quantized)");
+    }
+    let est = SignEstimatorSet::fit(&net, &est_cfg, 7);
     let backend = Arc::new(NativeBackend::new(net, est, 64));
     // Kernel allow-list (`--kernels` / `dispatch.kernels`): restrict the
     // cost router before any calibration, so the columns measured are the
@@ -300,6 +310,11 @@ fn prepare_native_backend(
             ids.iter().map(|k| k.as_str()).collect::<Vec<_>>().join(", ")
         );
     }
+    // The serving roster, each kernel marked with its equivalence tier
+    // (bit-exact / tolerance(N) / sign-agree); ids outside the active
+    // allow-list (or unregistered, like `pjrt` without the feature) show
+    // as unavailable.
+    eprintln!("dispatch: kernel roster [{}]", backend.registry().roster());
     // Per-layer dispatch cost tables: persisted machine profile first
     // (recalibrating just the columns it lacks for newly registered
     // kernels), then online calibration, then (per layer, inside the table)
@@ -384,7 +399,9 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         ))
         .opt(OptSpec::value(
             "kernels",
-            "kernel allow-list, comma-separated (dense,dense_packed,dense_simd,masked,masked_simd; default: all registered)",
+            "kernel allow-list, comma-separated (dense,dense_packed,dense_simd,dense_i8,masked,\
+             masked_simd,masked_i8; default: every bit-exact/tolerance kernel — the sign-agree \
+             int8 kernels route only when listed here explicitly)",
         ))
         .opt(OptSpec::flag(
             "trace",
@@ -545,7 +562,8 @@ fn cmd_worker(args: &[String]) -> anyhow::Result<()> {
         ))
         .opt(OptSpec::value(
             "kernels",
-            "kernel allow-list, comma-separated (default: all registered)",
+            "kernel allow-list, comma-separated (default: every bit-exact/tolerance kernel; \
+             int8 sign-agree kernels opt in by listing them)",
         ))
         .opt(OptSpec::flag("help", "show help"));
     let parsed = cmd.parse(args)?;

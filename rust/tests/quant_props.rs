@@ -1,0 +1,171 @@
+//! Property suite for the int8 kernel class (`dense_i8`, `masked_i8`) and
+//! the quantized sign estimator — the issue's test-coverage satellite:
+//!
+//! - symmetric per-row quantization round-trips within half a quantization
+//!   step everywhere (and exactly reproduces all-zero rows);
+//! - the int8 forward is bit-identical across ISA paths (native caps vs
+//!   forced scalar), thread counts {1, 2, 7}, and lease widths — the i32
+//!   accumulator is exact, so there is no tier to tolerate, only equality;
+//! - the full-rank quantized estimator's mask agrees with the float
+//!   estimator's at or above the sign-agreement floor outside the near-zero
+//!   band (the contract the `sign-agree` tier enforces at dispatch time).
+
+use condcomp::condcomp::{MaskedLayer, QUANT_SIGN_BAND_REL, QUANT_TIER_AGREEMENT_BP};
+use condcomp::estimator::SignEstimator;
+use condcomp::exec::ExecCtx;
+use condcomp::linalg::{quantize_row_into, Mat, QuantizedLayer, QuantizedMat, SimdCaps};
+use condcomp::parallel::ThreadPool;
+use condcomp::util::proptest::property;
+use condcomp::util::Pcg32;
+
+/// Quantize → dequantize lands within half a step of the original: the
+/// symmetric per-row scheme's defining bound, `|x − q·s| ≤ s/2` with
+/// `s = max_abs/127`, held by every entry of every row.
+#[test]
+fn quantize_round_trip_stays_within_half_a_step() {
+    property("per-row round-trip bound", 64, |rng| {
+        let cols = rng.index(200) + 1;
+        let scale_mag = rng.uniform_in(0.01, 10.0);
+        let src: Vec<f32> = (0..cols).map(|_| rng.uniform_in(-scale_mag, scale_mag)).collect();
+        let mut q = vec![0i8; cols];
+        let s = quantize_row_into(&src, &mut q);
+        let max_abs = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!((s - max_abs / 127.0).abs() <= max_abs * 1e-6, "scale {s} vs {max_abs}/127");
+        for (&x, &code) in src.iter().zip(&q) {
+            let err = (x - code as f32 * s).abs();
+            assert!(
+                err <= s * 0.5 + max_abs * 1e-6,
+                "round-trip error {err} exceeds half-step {s}/2 (x={x} code={code})"
+            );
+        }
+        // The row's extreme hits a full-scale code exactly.
+        assert!(q.iter().any(|&c| c == 127 || c == -127), "{q:?}");
+    });
+    // All-zero (and empty) rows round-trip exactly with scale 0.
+    let mut q = vec![7i8; 5];
+    assert_eq!(quantize_row_into(&[0.0; 5], &mut q), 0.0);
+    assert!(q.iter().all(|&c| c == 0));
+    let mut empty: [i8; 0] = [];
+    assert_eq!(quantize_row_into(&[], &mut empty), 0.0);
+}
+
+/// The matrix-level round-trip: every row of `dequantize()` is within half
+/// that row's step of the original, and all-zero rows come back exact.
+#[test]
+fn quantized_mat_dequantizes_within_per_row_bounds() {
+    property("matrix round-trip bound", 24, |rng| {
+        let rows = rng.index(12) + 1;
+        let cols = rng.index(40) + 1;
+        let zero_row = rng.index(rows);
+        let m = Mat::from_fn(rows, cols, |r, _| {
+            if r == zero_row {
+                0.0
+            } else {
+                rng.uniform_in(-2.0, 2.0)
+            }
+        });
+        let q = QuantizedMat::quantize(&m);
+        assert_eq!(q.shape(), m.shape());
+        assert_eq!(q.scale(zero_row), 0.0, "all-zero row has scale 0");
+        let back = q.dequantize();
+        for r in 0..rows {
+            let bound = q.scale(r) * 0.5 + 1e-6;
+            for c in 0..cols {
+                let err = (m.row(r)[c] - back.row(r)[c]).abs();
+                assert!(err <= bound, "[{r},{c}] err {err} > {bound}");
+            }
+        }
+    });
+}
+
+/// The int8 forward's cross-ISA / cross-parallelism contract: exact i32
+/// accumulation makes every path — native caps vs forced scalar, serial vs
+/// any thread count {1, 2, 7} × lease width — produce identical bits and
+/// identical dot-product counts, for both the dense_i8 (`compute_all`) and
+/// masked_i8 gating modes.
+#[test]
+fn i8_forward_is_bit_identical_across_isa_threads_and_leases() {
+    let mut rng = Pcg32::seeded(0x18B1);
+    let (n, d, h) = (19, 133, 23);
+    let x = Mat::randn(n, d, 0.6, &mut rng);
+    let w = Mat::randn(d, h, 0.4, &mut rng);
+    let bias: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.3, 0.3)).collect();
+    let layer = MaskedLayer::new(&w, &bias);
+    let quant = QuantizedLayer::new(&layer.wt, &layer.bias);
+    let mask = Mat::from_fn(n, h, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+    for compute_all in [true, false] {
+        // Serial native-caps run: the reference bits.
+        let mut want = Mat::full(n, h, f32::NAN);
+        let want_count = quant.forward_i8_into(SimdCaps::get(), &x, &mask, &mut want, compute_all);
+        let want_bits: Vec<u32> = want.as_slice().iter().map(|v| v.to_bits()).collect();
+        for caps in [SimdCaps::get(), SimdCaps::scalar()] {
+            for threads in [1usize, 2, 7] {
+                let pool = ThreadPool::new(threads);
+                for lease_width in [1usize, threads] {
+                    let mut ctx = ExecCtx::over(pool.lease(lease_width));
+                    let mut out = Mat::full(n, h, f32::NAN);
+                    let count =
+                        quant.forward_i8_ctx(caps, &x, &mask, &mut out, compute_all, &mut ctx);
+                    assert_eq!(count, want_count, "compute_all={compute_all}");
+                    let bits: Vec<u32> = out.as_slice().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        bits, want_bits,
+                        "int8 path diverged: caps={caps:?} threads={threads} \
+                         lease={lease_width} compute_all={compute_all}"
+                    );
+                }
+                assert_eq!(pool.leased(), 0);
+            }
+        }
+    }
+}
+
+/// The sign-agreement contract the `sign-agree` tier promises: at full
+/// estimator rank, the quantized estimator's mask agrees with the float
+/// estimator's on at least `QUANT_TIER_AGREEMENT_BP` basis points of the
+/// units whose float pre-activation clears the near-zero band (inside the
+/// band a sign flip costs a near-zero activation — exactly the error class
+/// quantization is licensed to make).
+#[test]
+fn quantized_estimator_holds_the_sign_agreement_floor_outside_the_band() {
+    let floor = QUANT_TIER_AGREEMENT_BP as f64 / 10_000.0;
+    property("quantized estimator sign agreement", 12, |rng| {
+        let n = rng.index(24) + 4;
+        let d = rng.index(60) + 8;
+        let h = rng.index(40) + 8;
+        let rank = d.min(h);
+        let x = Mat::randn(n, d, 0.8, rng);
+        let w = Mat::randn(d, h, 0.5, rng);
+        let layer_bias: Vec<f32> = (0..h).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let mut est = SignEstimator::fit(&w, &layer_bias, rank, 0.0);
+        let z_float = est.estimate_preact(&x);
+        let mask_float = est.mask(&x);
+        est.quantize_factors();
+        let mask_quant = est.mask(&x);
+        let band = z_float.as_slice().iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+            * QUANT_SIGN_BAND_REL;
+        let (mut eligible, mut agree) = (0usize, 0usize);
+        for ((&z, &mf), &mq) in z_float
+            .as_slice()
+            .iter()
+            .zip(mask_float.as_slice())
+            .zip(mask_quant.as_slice())
+        {
+            if (z - est.bias).abs() <= band {
+                continue;
+            }
+            eligible += 1;
+            if mf == mq {
+                agree += 1;
+            }
+        }
+        if eligible > 0 {
+            let fraction = agree as f64 / eligible as f64;
+            assert!(
+                fraction >= floor,
+                "sign agreement {fraction:.4} below floor {floor} \
+                 ({agree}/{eligible} outside band {band})"
+            );
+        }
+    });
+}

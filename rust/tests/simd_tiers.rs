@@ -70,11 +70,14 @@ fn simd_kernels_match_serial_oracles_within_declared_tier() {
                         let mut ctx = ExecCtx::over(pool.lease(lease_width));
                         let mut out = Mat::full(n, h, f32::NAN);
                         let computed = kernel.run(&ops, &x, &mask, &mut ctx, &mut out);
+                        // Only float-class SIMD kernels run here (the int8
+                        // kernels have their own suite in `quant_props.rs`).
                         let (want, want_count) = match kernel.id().work() {
                             condcomp::condcomp::WorkModel::Dense => (&dense_want, n * h),
                             condcomp::condcomp::WorkModel::AlphaScaled => {
                                 (&masked_want, masked_count)
                             }
+                            other => panic!("unexpected work model {other:?} in SIMD suite"),
                         };
                         assert_eq!(computed, want_count, "kernel {}", kernel.id());
                         if let Err(msg) = kernel.tier().check(out.as_slice(), want.as_slice())
